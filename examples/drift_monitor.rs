@@ -1,0 +1,72 @@
+//! Long-stream drift study (the live version of Fig. 1): run the
+//! mean-adjusted Algorithm 2 in both numerical variants — the paper's
+//! literal re-centering split and our norm-balanced + Gu–Eisenstat
+//! stabilized default — alongside the unadjusted Algorithm 1, and
+//! report reconstruction drift and eigenvector orthogonality.
+//!
+//! The paper's §5.1 observation (mean-adjusted drifts visibly more, four
+//! updates per step) reproduces with `naive_recenter_split = true`; the
+//! stabilized default removes the gap entirely (EXPERIMENTS.md §F1).
+//!
+//!     cargo run --release --example drift_monitor
+
+use inkpca::data::load;
+use inkpca::kernels::{median_heuristic, Rbf};
+use inkpca::kpca::IncrementalKpca;
+use inkpca::linalg::{orthogonality_defect, sym_norms};
+
+fn main() -> Result<(), String> {
+    let mut ds = load("magic", 240, 3)?;
+    ds.standardize();
+    let sigma = median_heuristic(&ds.x, 200);
+    let kern = Rbf { sigma };
+    let seed = ds.x.submatrix(20, ds.dim());
+
+    let mut stabilized = IncrementalKpca::from_batch(&kern, &seed, true)?;
+    let mut paper_split = IncrementalKpca::from_batch(&kern, &seed, true)?;
+    paper_split.naive_recenter_split = true;
+    let mut unadjusted = IncrementalKpca::from_batch(&kern, &seed, false)?;
+
+    println!(
+        "{:>5} | {:>12} {:>12} | {:>12} {:>12} | {:>12}",
+        "m", "adj-stab fro", "‖UUᵀ−I‖", "adj-paper fro", "‖UUᵀ−I‖", "unadj fro"
+    );
+    for i in 20..ds.n() {
+        stabilized.push(ds.x.row(i))?;
+        paper_split.push(ds.x.row(i))?;
+        unadjusted.push(ds.x.row(i))?;
+        if (i + 1) % 40 == 0 {
+            let dstab = sym_norms(&stabilized.reconstruct().sub(&stabilized.batch_reference()));
+            let dpap = sym_norms(&paper_split.reconstruct().sub(&paper_split.batch_reference()));
+            let dun = sym_norms(&unadjusted.reconstruct().sub(&unadjusted.batch_reference()));
+            println!(
+                "{:>5} | {:>12.3e} {:>12.3e} | {:>12.3e} {:>12.3e} | {:>12.3e}",
+                i + 1,
+                dstab.frobenius,
+                orthogonality_defect(&stabilized.vecs),
+                dpap.frobenius,
+                orthogonality_defect(&paper_split.vecs),
+                dun.frobenius,
+            );
+        }
+    }
+    let dstab = sym_norms(&stabilized.reconstruct().sub(&stabilized.batch_reference()));
+    let dpap = sym_norms(&paper_split.reconstruct().sub(&paper_split.batch_reference()));
+    let dun = sym_norms(&unadjusted.reconstruct().sub(&unadjusted.batch_reference()));
+    println!(
+        "\nfinal drift: stabilized {:.3e} | paper-split {:.3e} | unadjusted {:.3e}",
+        dstab.frobenius, dpap.frobenius, dun.frobenius
+    );
+    println!(
+        "excluded examples: stabilized {} paper-split {} unadjusted {}",
+        stabilized.stats.excluded, paper_split.stats.excluded, unadjusted.stats.excluded
+    );
+    // Acceptance: the paper-split reproduces the paper's §5.1 drift gap;
+    // the stabilized default keeps the adjusted drift at unadjusted
+    // levels or better.
+    assert!(dun.frobenius < 1e-9, "unadjusted drift out of range");
+    assert!(dstab.frobenius < 1e-10, "stabilized drift out of range");
+    assert!(dpap.frobenius > dstab.frobenius, "paper split should drift more");
+    println!("drift_monitor OK");
+    Ok(())
+}

@@ -1,0 +1,105 @@
+//! End-to-end system driver (EXPERIMENTS.md §E2E): stream 1000 points
+//! through the full three-layer stack — the L3 coordinator with bounded
+//! backpressure, the engine router dispatching the 2m³ back-rotations
+//! (AOT Pallas/PJRT executable above the size threshold, native GEMM
+//! below), live drift monitoring, and latency/throughput metrics — then
+//! report the incremental-Nyström error the eigensystem supports.
+//!
+//!     make artifacts && cargo run --release --example streaming_kpca
+//!     (runs with the native engine if artifacts/ is absent)
+
+use std::time::Instant;
+
+use inkpca::coordinator::{Config, Coordinator, EngineConfig, EnginePolicy, KernelConfig};
+use inkpca::data::{load, SliceSource};
+use inkpca::kernels::{gram, median_heuristic, Rbf};
+use inkpca::nystrom::IncrementalNystrom;
+
+fn main() -> Result<(), String> {
+    let n = std::env::args()
+        .skip_while(|a| a != "--n")
+        .nth(1)
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1000);
+    let mut ds = load("magic", n, 42)?;
+    ds.standardize();
+    let dim = ds.dim();
+    println!("=== streaming KPCA end-to-end: {} points, dim {dim} ===", ds.n());
+
+    let have_artifacts = std::path::Path::new("artifacts/manifest.tsv").exists();
+    // Routed: the coordinator dispatches rotations ≥ 384 to the AOT
+    // PJRT executable and the rest to the native GEMM. On this CPU-only
+    // image the interpret-lowered Pallas kernel is slower than the
+    // native f64 GEMM (EXPERIMENTS.md §Perf), so the threshold keeps the
+    // PJRT path exercised without dominating wall-clock; on a real TPU
+    // the same router would flip toward the accelerator.
+    let engine = if have_artifacts {
+        println!("engine: routed (pjrt ≥ 384, native below)");
+        EngineConfig::Pjrt { dir: "artifacts".into(), policy: EnginePolicy::Auto { pjrt_min: 384 } }
+    } else {
+        println!("engine: native (no artifacts/ — run `make artifacts` for pjrt)");
+        EngineConfig::Native
+    };
+    let cfg = Config {
+        kernel: KernelConfig::RbfMedian,
+        mean_adjust: true,
+        engine,
+        queue: 64,
+        seed_points: 20,
+        drift_every: 100,
+    };
+
+    // ── Phase 1: stream through the coordinator ──
+    let coord = Coordinator::spawn(cfg, dim);
+    let t0 = Instant::now();
+    let mut src = SliceSource::new(ds.clone());
+    let accepted = coord.ingest_stream(&mut src)?;
+    let wall = t0.elapsed();
+    let snap = coord.snapshot()?;
+    let metrics = coord.metrics()?;
+    println!("\n── ingest ──");
+    println!("accepted {accepted}/{} in {:.2}s", ds.n(), wall.as_secs_f64());
+    println!("{metrics}");
+    println!("engine dispatch (native, pjrt): {:?}", snap.engine_calls);
+    println!(
+        "eigensystem: m={} | top eigenvalues {:?}",
+        snap.m,
+        snap.top_values.iter().take(5).map(|v| (v * 10.0).round() / 10.0).collect::<Vec<_>>()
+    );
+    let d = coord.measure_drift()?;
+    println!(
+        "final drift @ m={}: fro {:.3e} spec {:.3e} trace {:.3e} | ‖UUᵀ−I‖ {:.3e}",
+        d.m, d.norms.frobenius, d.norms.spectral, d.norms.trace, d.orthogonality
+    );
+    assert!(d.norms.frobenius.is_finite());
+    let scores = coord.project(ds.x.row(0).to_vec(), 3)?;
+    println!("projection of first point on top-3 PCs: {scores:?}");
+    coord.shutdown();
+
+    // ── Phase 2: incremental Nyström on the same feed (§4) ──
+    println!("\n── incremental Nyström (subset → 128) ──");
+    let sigma = median_heuristic(&ds.x, 200);
+    let kern = Rbf { sigma };
+    let eval_n = ds.n().min(512);
+    let eval = ds.head(eval_n);
+    let k_full = gram(&kern, &eval.x);
+    let mut inys = IncrementalNystrom::new(&kern, eval.x.clone())?;
+    let t1 = Instant::now();
+    for m in 0..128.min(eval_n) {
+        inys.add_point(m)?;
+        if (m + 1) % 32 == 0 {
+            let diff = k_full.sub(&inys.approx_gram());
+            let norms = inkpca::linalg::psd_norms(&diff);
+            println!(
+                "m={:>4}  ‖K−K̃‖_F {:.4e}  ‖·‖₂ {:.4e}  ‖·‖_tr {:.4e}",
+                m + 1,
+                norms.frobenius,
+                norms.spectral,
+                norms.trace
+            );
+        }
+    }
+    println!("nyström phase: {:.2}s", t1.elapsed().as_secs_f64());
+    println!("\nstreaming_kpca OK");
+    Ok(())
+}

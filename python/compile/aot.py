@@ -1,0 +1,134 @@
+"""AOT lowering: jax (L2+L1) -> HLO text -> artifacts/ for the rust
+runtime.
+
+HLO *text* is the interchange format, not serialized protos: jax >= 0.5
+emits 64-bit instruction ids that the xla crate's xla_extension 0.5.1
+rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+
+Each function is lowered at every size of the bucket ladder; the rust
+runtime picks the smallest bucket >= the live problem size and pads
+(runtime::pad contract). A TSV manifest indexes the artifacts (the
+offline image has no JSON crate on the rust side).
+
+Usage: cd python && python -m compile.aot --out ../artifacts
+"""
+
+import argparse
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+
+# Bucket ladder for the eigensystem order m (and Gram size n). Chosen to
+# cover the paper's experiment range (m0=20 ... ~1000) with <= 2x padding
+# waste at any size.
+BUCKETS = [64, 128, 256, 512, 1024]
+# Feature dimension is padded to a single bucket: zero-padded features
+# leave RBF distances unchanged.
+DIM = 16
+DTYPE = jnp.float64
+
+
+def to_hlo_text(fn, *args):
+    lowered = jax.jit(fn).lower(*args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape):
+    return jax.ShapeDtypeStruct(shape, DTYPE)
+
+
+def artifact_set():
+    """(name, kind, m, path-suffix, fn, arg specs) for every artifact."""
+    out = []
+    for m in BUCKETS:
+        out.append(
+            (
+                f"kernel_column_{m}",
+                "kernel_column",
+                m,
+                lambda m=m: (model.kernel_column, [spec((m, DIM)), spec((DIM,)), spec(())]),
+            )
+        )
+        out.append(
+            (
+                f"eigvec_update_{m}",
+                "eigvec_update",
+                m,
+                lambda m=m: (
+                    model.eigvec_update,
+                    [spec((m, m)), spec((m,)), spec((m,)), spec((m,))],
+                ),
+            )
+        )
+        out.append(
+            (
+                f"gram_{m}",
+                "gram",
+                m,
+                lambda m=m: (model.gram, [spec((m, DIM)), spec(())]),
+            )
+        )
+        out.append(
+            (
+                f"nystrom_reconstruct_{m}",
+                "nystrom_reconstruct",
+                m,
+                # n is fixed at the largest bucket; m varies.
+                lambda m=m: (
+                    model.nystrom_reconstruct,
+                    [spec((BUCKETS[-1], m)), spec((m, m)), spec((m,))],
+                ),
+            )
+        )
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument(
+        "--buckets",
+        default=None,
+        help="comma-separated bucket override (smoke tests use e.g. 64,128)",
+    )
+    args = ap.parse_args()
+    global BUCKETS
+    if args.buckets:
+        BUCKETS = [int(b) for b in args.buckets.split(",")]
+    os.makedirs(args.out, exist_ok=True)
+    manifest_rows = []
+    for name, kind, m, build in artifact_set():
+        fn, specs = build()
+        text = to_hlo_text(fn, *specs)
+        path = f"{name}.hlo.txt"
+        with open(os.path.join(args.out, path), "w") as f:
+            f.write(text)
+        manifest_rows.append(f"{name}\t{kind}\t{m}\t{DIM}\t{path}")
+        print(f"lowered {name:<28} {len(text):>9} chars")
+    with open(os.path.join(args.out, "manifest.tsv"), "w") as f:
+        f.write("# name\tkind\tm\tdim\tpath\n")
+        f.write("\n".join(manifest_rows) + "\n")
+    # manifest.json is the Makefile's freshness stamp; keep both names.
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        rows = ",\n".join(
+            '  {"name": "%s", "kind": "%s", "m": %s, "dim": %s, "path": "%s"}'
+            % tuple(r.split("\t"))
+            for r in manifest_rows
+        )
+        f.write("[\n" + rows + "\n]\n")
+    print(f"wrote {len(manifest_rows)} artifacts to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

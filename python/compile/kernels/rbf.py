@@ -1,0 +1,91 @@
+"""L1 Pallas kernels for RBF kernel evaluation.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the pairwise term is
+expressed through the inner-product form ||x||^2 + ||y||^2 - 2<x, y> so
+the dominant work is a matmul that lands on the MXU; tiles are sized so
+one (BM, D) panel of x plus the (BM, BN) output block sit comfortably in
+VMEM. On this CPU image the kernels run under interpret=True (the CPU
+PJRT plugin cannot execute Mosaic custom-calls), so tiling here encodes
+the *schedule*, not measured wall-clock.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Row-tile height for the column kernel; multiples of the 8-lane sublane
+# work well on both the interpreter and real hardware.
+BLOCK_M = 128
+# Tile edge for the Gram kernel.
+BLOCK_G = 128
+
+
+def _rbf_column_kernel(x_ref, y_ref, sig_ref, o_ref):
+    """One (BLOCK_M, d) row-panel: squared distance to y, then exp."""
+    x = x_ref[...]
+    y = y_ref[...]
+    diff = x - y[None, :]
+    d2 = jnp.sum(diff * diff, axis=1)
+    o_ref[...] = jnp.exp(-d2 / sig_ref[0])
+
+
+@functools.partial(jax.jit, static_argnames=("block_m",))
+def rbf_column(x, y, sigma, block_m=BLOCK_M):
+    """Pallas RBF column: a[i] = exp(-||x_i - y||^2 / sigma).
+
+    `x.shape[0]` must be a multiple of `block_m` (the AOT bucket ladder
+    guarantees this; callers pad with zero rows and slice the result).
+    """
+    m, d = x.shape
+    block_m = min(block_m, m)
+    assert m % block_m == 0, f"m={m} not a multiple of block_m={block_m}"
+    sig = jnp.asarray(sigma, x.dtype).reshape((1,))
+    return pl.pallas_call(
+        _rbf_column_kernel,
+        grid=(m // block_m,),
+        in_specs=[
+            pl.BlockSpec((block_m, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_m,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m,), x.dtype),
+        interpret=True,
+    )(x, y, sig)
+
+
+def _rbf_gram_kernel(xi_ref, xj_ref, sig_ref, o_ref):
+    """One (BG, BG) Gram tile via the MXU-friendly inner-product form."""
+    xi = xi_ref[...]
+    xj = xj_ref[...]
+    sq_i = jnp.sum(xi * xi, axis=1)
+    sq_j = jnp.sum(xj * xj, axis=1)
+    cross = jnp.dot(xi, xj.T)  # the MXU matmul
+    d2 = jnp.maximum(sq_i[:, None] + sq_j[None, :] - 2.0 * cross, 0.0)
+    o_ref[...] = jnp.exp(-d2 / sig_ref[0])
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def rbf_gram(x, sigma, block=BLOCK_G):
+    """Pallas tiled RBF Gram matrix over the rows of x.
+
+    `x.shape[0]` must be a multiple of `block`.
+    """
+    n, d = x.shape
+    block = min(block, n)
+    assert n % block == 0, f"n={n} not a multiple of block={block}"
+    sig = jnp.asarray(sigma, x.dtype).reshape((1,))
+    return pl.pallas_call(
+        _rbf_gram_kernel,
+        grid=(n // block, n // block),
+        in_specs=[
+            pl.BlockSpec((block, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((block, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block, block), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, n), x.dtype),
+        interpret=True,
+    )(x, x, sig)

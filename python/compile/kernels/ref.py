@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for the Pallas kernels (L1 correctness ground truth).
+
+Every Pallas kernel in this package has a reference implementation here;
+pytest sweeps shapes/dtypes (hypothesis) asserting allclose between the
+two. The references are also what the rust test-suite numerics were
+derived from.
+"""
+
+import jax.numpy as jnp
+
+
+def rbf_column_ref(x, y, sigma):
+    """RBF kernel column a[i] = exp(-||x_i - y||^2 / sigma).
+
+    Args:
+      x: (m, d) data rows.
+      y: (d,) query point.
+      sigma: scalar bandwidth (the paper's parameterization divides the
+        squared distance by sigma directly).
+    Returns: (m,) kernel column.
+    """
+    d2 = jnp.sum((x - y[None, :]) ** 2, axis=1)
+    return jnp.exp(-d2 / sigma)
+
+
+def rbf_gram_ref(x, sigma):
+    """Full RBF Gram matrix K[i, j] = exp(-||x_i - x_j||^2 / sigma)."""
+    sq = jnp.sum(x * x, axis=1)
+    d2 = sq[:, None] + sq[None, :] - 2.0 * (x @ x.T)
+    d2 = jnp.maximum(d2, 0.0)
+    return jnp.exp(-d2 / sigma)
+
+
+def eigvec_weights_ref(z, lam, lam_new):
+    """Unnormalized BNS78 inner eigenvectors W[j, i] = z_j / (lam_j - lam_new_i)."""
+    return z[:, None] / (lam[:, None] - lam_new[None, :])
+
+
+def eigvec_update_ref(u, z, lam, lam_new, eps=1e-300):
+    """Rotated eigenvector matrix U @ (W / ||W||_cols)  (paper eq. 6).
+
+    Args:
+      u: (m, k) current eigenvectors.
+      z: (k,) projected perturbation U^T v.
+      lam: (k,) current eigenvalues (poles).
+      lam_new: (k,) updated eigenvalues (secular roots).
+    Returns: (m, k) updated eigenvectors.
+    """
+    w = eigvec_weights_ref(z, lam, lam_new)
+    norms = jnp.sqrt(jnp.sum(w * w, axis=0))
+    inv = 1.0 / jnp.maximum(norms, eps)
+    return u @ (w * inv[None, :])

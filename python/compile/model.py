@@ -1,0 +1,52 @@
+"""L2 — the JAX compute graph the rust coordinator executes via PJRT.
+
+Each public function here is AOT-lowered (aot.py) at every bucket size
+into artifacts/*.hlo.txt. The hot inner products call the L1 Pallas
+kernels; the O(k^2) scalar prep (inverse column norms) stays in jnp so
+the whole step lowers into one fused HLO module.
+
+f64 end to end: the rust native engine computes in f64, and the drift
+experiments (Fig. 1) compare engines — a precision mismatch would
+confound them. jax is switched to x64 in aot.py before lowering.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import eigvec, rbf
+from .kernels.ref import eigvec_weights_ref
+
+
+def kernel_column(x, y, sigma):
+    """RBF kernel column against the rows of x (Algorithms 1-2, line 1)."""
+    return rbf.rbf_column(x, y, sigma)
+
+
+def gram(x, sigma):
+    """Full RBF Gram matrix (batch baseline / Fig. 2 ground truth)."""
+    return rbf.rbf_gram(x, sigma)
+
+
+def eigvec_update(u, z, lam, lam_new):
+    """BNS78 back-rotation (paper eq. 6): U @ normalize_cols(W).
+
+    The O(k^2) norm pre-pass runs in plain jnp; the O(m k^2) rotation is
+    the Pallas kernel. Padded columns (z == 0 rows / sentinel lam_new)
+    produce finite garbage that callers slice away.
+    """
+    w = eigvec_weights_ref(z, lam, lam_new)
+    norms = jnp.sqrt(jnp.sum(w * w, axis=0))
+    inv = 1.0 / jnp.maximum(norms, jnp.asarray(1e-300, u.dtype))
+    return eigvec.rotate(u, z, lam, lam_new, inv)
+
+
+def nystrom_reconstruct(knm, u, lam, rcond=1e-12):
+    """Nystrom approximation K~ = (Knm U L^+) L_nys (Knm U L^+)^T scaled
+    per eq. (7); returned directly as the n x n matrix.
+
+    Simplifies to K~ = B L^+ B^T with B = Knm @ U (the n/m factors
+    cancel). Tiny eigenvalues are pseudo-inverted away.
+    """
+    lam_max = jnp.max(jnp.abs(lam))
+    inv = jnp.where(jnp.abs(lam) > rcond * lam_max, 1.0 / lam, 0.0)
+    b = knm @ u
+    return (b * inv[None, :]) @ b.T

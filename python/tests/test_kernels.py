@@ -1,0 +1,185 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (ref.py).
+
+hypothesis sweeps shapes, dtypes and seeds — the CORE correctness signal
+for the compute layer the rust runtime executes.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import eigvec, rbf
+from compile.kernels.ref import (
+    eigvec_update_ref,
+    eigvec_weights_ref,
+    rbf_column_ref,
+    rbf_gram_ref,
+)
+
+DTYPES = [np.float32, np.float64]
+
+
+def rng_arrays(seed, m, d, dtype):
+    r = np.random.RandomState(seed)
+    x = r.randn(m, d).astype(dtype)
+    y = r.randn(d).astype(dtype)
+    return x, y
+
+
+@settings(deadline=None, max_examples=24)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    mblocks=st.integers(1, 4),
+    d=st.integers(1, 24),
+    dtype=st.sampled_from(DTYPES),
+    block=st.sampled_from([8, 32, 128]),
+)
+def test_rbf_column_matches_ref(seed, mblocks, d, dtype, block):
+    m = mblocks * block
+    x, y = rng_arrays(seed, m, d, dtype)
+    sigma = 1.7
+    got = rbf.rbf_column(x, y, sigma, block_m=block)
+    want = rbf_column_ref(jnp.asarray(x), jnp.asarray(y), sigma)
+    tol = 1e-6 if dtype == np.float32 else 1e-12
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
+
+
+@settings(deadline=None, max_examples=12)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    nblocks=st.integers(1, 3),
+    d=st.integers(1, 16),
+    dtype=st.sampled_from(DTYPES),
+    block=st.sampled_from([8, 32]),
+)
+def test_rbf_gram_matches_ref(seed, nblocks, d, dtype, block):
+    n = nblocks * block
+    x, _ = rng_arrays(seed, n, d, dtype)
+    sigma = 2.3
+    got = rbf.rbf_gram(x, sigma, block=block)
+    want = rbf_gram_ref(jnp.asarray(x), sigma)
+    tol = 2e-5 if dtype == np.float32 else 1e-11
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
+
+
+def test_rbf_gram_symmetric_unit_diagonal():
+    x, _ = rng_arrays(3, 64, 5, np.float64)
+    g = np.asarray(rbf.rbf_gram(x, 1.0, block=32))
+    np.testing.assert_allclose(g, g.T, atol=1e-14)
+    np.testing.assert_allclose(np.diag(g), 1.0, atol=1e-14)
+
+
+def _interlaced_problem(seed, k, dtype):
+    """Random poles + roots satisfying strict interlacing (the regime the
+    kernel is used in: secular roots always sit between poles)."""
+    r = np.random.RandomState(seed)
+    lam = np.sort(r.rand(k) * 4.0).astype(dtype)
+    gaps = np.diff(lam, append=lam[-1] + 1.0)
+    lam_new = (lam + 0.5 * gaps).astype(dtype)
+    z = (r.randn(k) * 0.7).astype(dtype)
+    z[np.abs(z) < 1e-3] = 1e-3  # keep well-conditioned
+    return lam, lam_new, z
+
+
+@settings(deadline=None, max_examples=20)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    mblocks=st.integers(1, 3),
+    kblocks=st.integers(1, 3),
+    dtype=st.sampled_from(DTYPES),
+    block=st.sampled_from([8, 16]),
+)
+def test_eigvec_rotate_matches_ref(seed, mblocks, kblocks, dtype, block):
+    m = mblocks * block
+    k = kblocks * block
+    r = np.random.RandomState(seed)
+    u = r.randn(m, k).astype(dtype)
+    lam, lam_new, z = _interlaced_problem(seed + 1, k, dtype)
+    w = eigvec_weights_ref(jnp.asarray(z), jnp.asarray(lam), jnp.asarray(lam_new))
+    inv = 1.0 / jnp.maximum(jnp.sqrt(jnp.sum(w * w, axis=0)), 1e-300)
+    got = eigvec.rotate(u, z, lam, lam_new, np.asarray(inv, dtype), bm=block, bn=block, bk=block)
+    want = eigvec_update_ref(
+        jnp.asarray(u), jnp.asarray(z), jnp.asarray(lam), jnp.asarray(lam_new)
+    )
+    tol = 5e-4 if dtype == np.float32 else 1e-10
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
+
+
+def test_eigvec_rotate_multiblock_accumulation():
+    """K-loop accumulation across > 1 grid step must agree with one-shot."""
+    m, k = 32, 32
+    r = np.random.RandomState(0)
+    u = r.randn(m, k)
+    lam, lam_new, z = _interlaced_problem(5, k, np.float64)
+    w = eigvec_weights_ref(jnp.asarray(z), jnp.asarray(lam), jnp.asarray(lam_new))
+    inv = np.asarray(1.0 / jnp.sqrt(jnp.sum(w * w, axis=0)))
+    one = eigvec.rotate(u, z, lam, lam_new, inv, bm=32, bn=32, bk=32)
+    split = eigvec.rotate(u, z, lam, lam_new, inv, bm=16, bn=16, bk=8)
+    np.testing.assert_allclose(one, split, rtol=1e-12, atol=1e-12)
+
+
+def test_eigvec_padding_contract():
+    """Zero-padded rows/columns behave per the runtime::pad contract."""
+    m, k, pad = 16, 16, 16
+    r = np.random.RandomState(1)
+    u = r.randn(m, k)
+    lam, lam_new, z = _interlaced_problem(2, k, np.float64)
+    # Padded problem: U zero rows/cols, z zeros, sentinel eigenvalues far
+    # from the real spectrum.
+    up = np.zeros((m + pad, k + pad))
+    up[:m, :k] = u
+    zp = np.concatenate([z, np.zeros(pad)])
+    sent = 1e12 + np.arange(pad)
+    lamp = np.concatenate([lam, sent])
+    lamnp = np.concatenate([lam_new, sent + 0.5])
+    wp = eigvec_weights_ref(jnp.asarray(zp), jnp.asarray(lamp), jnp.asarray(lamnp))
+    invp = np.asarray(1.0 / jnp.maximum(jnp.sqrt(jnp.sum(wp * wp, axis=0)), 1e-300))
+    got = eigvec.rotate(up, zp, lamp, lamnp, invp, bm=16, bn=16, bk=16)
+    want = eigvec_update_ref(
+        jnp.asarray(u), jnp.asarray(z), jnp.asarray(lam), jnp.asarray(lam_new)
+    )
+    np.testing.assert_allclose(got[:m, :k], want, rtol=1e-10, atol=1e-10)
+    # Padded output rows are exactly zero (zero rows of U).
+    np.testing.assert_allclose(got[m:, :], 0.0, atol=1e-300)
+
+
+def test_rotate_orthogonality_on_real_update():
+    """End-to-end eq. 6 sanity: rotating the eigenvectors of a random
+    symmetric A by the true secular roots of A + sigma v v^T yields an
+    orthonormal basis."""
+    k = 24
+    r = np.random.RandomState(7)
+    a = r.randn(k, k)
+    a = 0.5 * (a + a.T)
+    lam, u = np.linalg.eigh(a)
+    v = r.randn(k)
+    sigma = 0.9
+    b = a + sigma * np.outer(v, v)
+    lam_new = np.linalg.eigvalsh(b)
+    z = u.T @ v
+    got = np.asarray(
+        eigvec.rotate(
+            u,
+            z,
+            lam,
+            lam_new,
+            np.asarray(
+                1.0
+                / np.sqrt(
+                    np.sum(
+                        np.square(z[:, None] / (lam[:, None] - lam_new[None, :])), axis=0
+                    )
+                )
+            ),
+            bm=8,
+            bn=8,
+            bk=8,
+        )
+    )
+    np.testing.assert_allclose(got.T @ got, np.eye(k), atol=1e-7)
+    np.testing.assert_allclose(got @ np.diag(lam_new) @ got.T, b, atol=1e-7)

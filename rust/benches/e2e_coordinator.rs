@@ -1,0 +1,78 @@
+//! End-to-end coordinator bench: streaming throughput through the L3
+//! server (channel + worker + incremental update) vs driving the
+//! algorithm directly — the coordinator overhead target in DESIGN.md
+//! §Perf is <5% at m≈256. Also compares native vs PJRT engines when
+//! artifacts are present.
+
+use inkpca::coordinator::{Config, Coordinator, EngineConfig, EnginePolicy, KernelConfig};
+use inkpca::data::load;
+use inkpca::kernels::{median_heuristic, Rbf};
+use inkpca::kpca::IncrementalKpca;
+use inkpca::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new();
+    let n = if std::env::var("INKPCA_BENCH_FAST").is_ok() { 120 } else { 240 };
+    let mut ds = load("yeast", n, 42).unwrap();
+    ds.standardize();
+    let dim = ds.dim();
+    let sigma = median_heuristic(&ds.x, 200);
+
+    // Direct drive: algorithm without the coordinator.
+    b.case(&format!("e2e/direct/n{n}"), || {
+        let kern = Rbf { sigma };
+        let seed = ds.x.submatrix(20, dim);
+        let mut inc = IncrementalKpca::from_batch(&kern, &seed, true).unwrap();
+        for i in 20..ds.n() {
+            inc.push(ds.x.row(i)).unwrap();
+        }
+        inc.len()
+    });
+
+    // Through the coordinator (native engine).
+    b.case(&format!("e2e/coordinator_native/n{n}"), || {
+        let coord = Coordinator::spawn(
+            Config {
+                kernel: KernelConfig::Rbf { sigma },
+                mean_adjust: true,
+                engine: EngineConfig::Native,
+                queue: 64,
+                seed_points: 20,
+                drift_every: 0,
+            },
+            dim,
+        );
+        for i in 0..ds.n() {
+            coord.ingest(ds.x.row(i).to_vec()).unwrap();
+        }
+        coord.shutdown().accepted
+    });
+
+    // Through the coordinator (PJRT engine), if artifacts exist. Capped
+    // at 120 points: the interpret-lowered Pallas path costs ~10-100 ms
+    // per rotation on CPU (see EXPERIMENTS.md §Perf).
+    if std::path::Path::new("artifacts/manifest.tsv").exists() {
+        let np = 120.min(ds.n());
+        b.case(&format!("e2e/coordinator_pjrt/n{np}"), || {
+            let coord = Coordinator::spawn(
+                Config {
+                    kernel: KernelConfig::Rbf { sigma },
+                    mean_adjust: true,
+                    engine: EngineConfig::Pjrt {
+                        dir: "artifacts".into(),
+                        policy: EnginePolicy::Pjrt,
+                    },
+                    queue: 64,
+                    seed_points: 20,
+                    drift_every: 0,
+                },
+                dim,
+            );
+            for i in 0..np {
+                coord.ingest(ds.x.row(i).to_vec()).unwrap();
+            }
+            coord.shutdown().accepted
+        });
+    }
+    b.finish();
+}

@@ -1,0 +1,33 @@
+//! Fig. 1 bench — the drift-experiment inner loops: per-step
+//! incremental update at growing sizes on both datasets, and the cost
+//! of one drift measurement (reconstruct + batch reference + norms).
+
+use inkpca::data::load;
+use inkpca::kernels::{median_heuristic, Rbf};
+use inkpca::kpca::IncrementalKpca;
+use inkpca::linalg::sym_norms;
+use inkpca::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new();
+    for name in ["magic", "yeast"] {
+        let mut ds = load(name, 260, 42).unwrap();
+        ds.standardize();
+        let sigma = median_heuristic(&ds.x, 200);
+        let kern = Rbf { sigma };
+        for m in [20usize, 60, 120] {
+            let seed = ds.x.submatrix(m, ds.dim());
+            let next = ds.x.row(m).to_vec();
+            let base = IncrementalKpca::from_batch(&kern, &seed, true).unwrap();
+            b.case(&format!("fig1/step/{name}/m{m}"), || {
+                let mut inc = base.clone();
+                inc.push(&next).unwrap()
+            });
+            b.case(&format!("fig1/drift_measure/{name}/m{m}"), || {
+                let diff = base.reconstruct().sub(&base.batch_reference());
+                sym_norms(&diff).frobenius
+            });
+        }
+    }
+    b.finish();
+}

@@ -1,0 +1,63 @@
+//! Fig. 2 bench — incremental Nyström inner loops: adding a subset
+//! point (rank-one eigen update + K_{n,m} column), the eq.-7 rescaling
+//! / reconstruction, and the error-norm evaluation, vs recomputing the
+//! batch Nyström from scratch at the same size (the §4 pitch: the
+//! incremental path makes per-size evaluation affordable).
+
+use inkpca::data::load;
+use inkpca::kernels::{gram, median_heuristic, Rbf};
+use inkpca::linalg::psd_norms;
+use inkpca::nystrom::{BatchNystrom, CholeskyNystrom, IncrementalNystrom};
+use inkpca::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new();
+    let n = if std::env::var("INKPCA_BENCH_FAST").is_ok() { 200 } else { 400 };
+    let mut ds = load("yeast", n, 42).unwrap();
+    ds.standardize();
+    let sigma = median_heuristic(&ds.x, 200);
+    let kern = Rbf { sigma };
+    let k_full = gram(&kern, &ds.x);
+
+    for m in [32usize, 64, 96] {
+        // Prepared incremental state with m subset points.
+        let mut inys = IncrementalNystrom::new(&kern, ds.x.clone()).unwrap();
+        for i in 0..m {
+            inys.add_point(i).unwrap();
+        }
+
+        b.case(&format!("fig2/reconstruct/n{n}/m{m}"), || inys.approx_gram().max_abs());
+
+        b.case(&format!("fig2/error_norms/n{n}/m{m}"), || {
+            let diff = k_full.sub(&inys.approx_gram());
+            psd_norms(&diff).frobenius
+        });
+
+        b.case(&format!("fig2/batch_refit/n{n}/m{m}"), || {
+            let subset: Vec<usize> = (0..m).collect();
+            BatchNystrom::fit(&kern, &ds.x, &subset).unwrap().values.len()
+        });
+
+        // Rudi-style Cholesky baseline reconstruction at the same size.
+        let mut chol = CholeskyNystrom::new(&kern, ds.x.clone());
+        for i in 0..m {
+            chol.add_point(i).unwrap();
+        }
+        b.case(&format!("fig2/cholesky_reconstruct/n{n}/m{m}"), || {
+            chol.approx_gram().max_abs()
+        });
+    }
+
+    // The add-point step itself at m=64 (clone + add).
+    let mut base = IncrementalNystrom::new(&kern, ds.x.clone()).unwrap();
+    for i in 0..64 {
+        base.add_point(i).unwrap();
+    }
+    b.case("fig2/add_point/m64", || {
+        // No Clone on IncrementalNystrom (borrows kernel); measure the
+        // underlying eigen-update via the KPCA state instead.
+        let mut inc = base.inc.clone();
+        inc.push(ds.x.row(65)).unwrap()
+    });
+    b.finish();
+}

@@ -1,0 +1,54 @@
+//! Micro-benchmarks of the substrate hot paths: blocked GEMM, the
+//! symmetric eigensolver, the secular root finder and one full rank-one
+//! update — the quantities the §Perf optimization loop tracks.
+
+use inkpca::linalg::{eigh, matmul, Mat};
+use inkpca::rankone::{rank_one_update, NativeRotate};
+use inkpca::secular::solve_all;
+use inkpca::util::bench::Bench;
+use inkpca::util::Rng;
+
+fn rand_mat(n: usize, seed: u64) -> Mat {
+    let mut rng = Rng::new(seed);
+    Mat::from_fn(n, n, |_, _| rng.range(-1.0, 1.0))
+}
+
+fn rand_sym(n: usize, seed: u64) -> Mat {
+    let mut m = rand_mat(n, seed);
+    m.symmetrize();
+    m
+}
+
+fn main() {
+    let mut b = Bench::new();
+    for n in [128usize, 256, 512] {
+        let a = rand_mat(n, 1);
+        let c = rand_mat(n, 2);
+        b.case(&format!("linalg/gemm/n{n}"), || matmul(&a, &c).max_abs());
+    }
+    for n in [64usize, 128, 256] {
+        let s = rand_sym(n, 3);
+        b.case(&format!("linalg/eigh/n{n}"), || eigh(&s).unwrap().values[0]);
+    }
+    for n in [64usize, 256, 1024] {
+        let mut rng = Rng::new(4);
+        let mut d: Vec<f64> = (0..n).map(|_| rng.range(0.0, 10.0)).collect();
+        d.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let z: Vec<f64> = (0..n).map(|_| rng.range(-1.0, 1.0)).collect();
+        b.case(&format!("secular/solve_all/n{n}"), || {
+            solve_all(&d, &z, 1.5).unwrap().len()
+        });
+    }
+    for n in [64usize, 128, 256] {
+        let s = rand_sym(n, 5);
+        let eg = eigh(&s).unwrap();
+        let mut rng = Rng::new(6);
+        let v: Vec<f64> = (0..n).map(|_| rng.range(-1.0, 1.0)).collect();
+        b.case(&format!("rankone/update/n{n}"), || {
+            let mut vals = eg.values.clone();
+            let mut vecs = eg.vectors.clone();
+            rank_one_update(&mut vals, &mut vecs, 1.0, &v, &NativeRotate).unwrap().solved
+        });
+    }
+    b.finish();
+}

@@ -1,0 +1,69 @@
+//! T1 bench — per-step update cost: ours (adjusted/unadjusted) vs
+//! Chin–Suter (faithful + lean) vs Hoegaerts vs batch re-eig, at the
+//! paper-relevant sizes. Regenerates the §3 comparison; the acceptance
+//! shape is ours-adj < chin-suter by ≳2× and all incremental methods
+//! beating batch re-decomposition. Each sample clones a prepared state
+//! (`O(m²)` memcpy) and pushes one point, so the measured cost is the
+//! `O(m³)` step itself. `INKPCA_BENCH_FAST=1` shrinks budgets.
+
+use inkpca::baselines::{ChinSuterKpca, HoegaertsTracker};
+use inkpca::data::load;
+use inkpca::kernels::{median_heuristic, Rbf};
+use inkpca::kpca::{BatchKpca, IncrementalKpca};
+use inkpca::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new();
+    let sizes: &[usize] =
+        if std::env::var("INKPCA_BENCH_FAST").is_ok() { &[64, 128] } else { &[64, 128, 256] };
+    let max_m = sizes.iter().max().unwrap() + 2;
+    let mut ds = load("magic", max_m, 42).unwrap();
+    ds.standardize();
+    let sigma = median_heuristic(&ds.x, 200);
+    let kern = Rbf { sigma };
+
+    for &m in sizes {
+        let seed = ds.x.submatrix(m, ds.dim());
+        let next = ds.x.row(m).to_vec();
+
+        let base_adj = IncrementalKpca::from_batch(&kern, &seed, true).unwrap();
+        b.case(&format!("t1/ours_adjusted/m{m}"), || {
+            let mut inc = base_adj.clone();
+            inc.push(&next).unwrap()
+        });
+
+        let base_un = IncrementalKpca::from_batch(&kern, &seed, false).unwrap();
+        b.case(&format!("t1/ours_unadjusted/m{m}"), || {
+            let mut inc = base_un.clone();
+            inc.push(&next).unwrap()
+        });
+
+        let mut base_cs = ChinSuterKpca::from_batch(&kern, &seed).unwrap();
+        base_cs.faithful_cost = true;
+        b.case(&format!("t1/chin_suter_faithful/m{m}"), || {
+            let mut cs = base_cs.clone();
+            cs.push(&next).unwrap()
+        });
+
+        base_cs.faithful_cost = false;
+        b.case(&format!("t1/chin_suter_lean/m{m}"), || {
+            let mut cs = base_cs.clone();
+            cs.push(&next).unwrap()
+        });
+
+        let base_hg = HoegaertsTracker::from_batch(&kern, &seed, m + 2).unwrap();
+        b.case(&format!("t1/hoegaerts_full/m{m}"), || {
+            let mut hg = base_hg.clone();
+            hg.push(&next).unwrap()
+        });
+
+        let grown = ds.x.submatrix(m + 1, ds.dim());
+        b.case(&format!("t1/batch_reeig/m{m}"), || {
+            BatchKpca::fit(&kern, &grown, true).unwrap().values.len()
+        });
+
+        // Clone-only floor, for subtracting the per-sample state copy.
+        b.case(&format!("t1/clone_floor/m{m}"), || base_adj.clone().len());
+    }
+    b.finish();
+}

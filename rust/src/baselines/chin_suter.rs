@@ -1,0 +1,288 @@
+//! Chin & Suter (2007) incremental kernel PCA, kernelized from the
+//! Lim et al. (2004) incremental SVD it builds on: each new example is
+//! split into its projection onto the current centered feature basis
+//! and an orthogonal residual; the mean shift contributes an extra
+//! rank-one term; a *small* augmented eigenproblem is solved and the
+//! coefficient matrix is rotated back — one `(m+1)×(r+1)` GEMM.
+//!
+//! Per the paper's §3 flop accounting this algorithm costs ≈`20m³` per
+//! step: `9m³` for the eigendecomposition of the unadjusted kernel
+//! matrix (basis re-orthonormalization in the original formulation),
+//! `9m³` for the augmented small eigenproblem and `2m³` for the
+//! rotation. Our kernelized variant only *needs* the latter two
+//! (≈`11m³`); `faithful_cost: true` (default) also performs the
+//! re-orthonormalization eigendecomposition so measured timings match
+//! the paper's accounting of the original algorithm. The T1 ablation
+//! flips it off.
+
+use crate::kernels::{kernel_column, Kernel};
+use crate::linalg::{eigh, matmul, Mat};
+
+/// Chin–Suter incremental KPCA state (mean-adjusted, exact).
+#[derive(Clone)]
+pub struct ChinSuterKpca<'k> {
+    kernel: &'k dyn Kernel,
+    /// Retained examples (`m × dim` row-major).
+    x: Vec<f64>,
+    dim: usize,
+    m: usize,
+    /// Eigenvalues of `K'` above `rank_tol`, ascending.
+    pub vals: Vec<f64>,
+    /// Matching eigenvectors (`m × r`).
+    pub vecs: Mat,
+    /// Unadjusted kernel matrix (CS07 keeps it; `O(m²)` memory).
+    k: Mat,
+    /// Running row sums and total of the unadjusted kernel matrix.
+    k1: Vec<f64>,
+    s: f64,
+    /// Eigenvalue cutoff defining the tracked rank.
+    pub rank_tol: f64,
+    /// Perform the basis re-orthonormalization eigendecomposition the
+    /// original algorithm requires (cost parity with the paper's 20m³).
+    pub faithful_cost: bool,
+}
+
+impl<'k> ChinSuterKpca<'k> {
+    /// Initialize from a batch fit over `x0` (≥ 2 rows).
+    pub fn from_batch(kernel: &'k dyn Kernel, x0: &Mat) -> Result<Self, String> {
+        let m = x0.rows();
+        if m < 2 {
+            return Err("chin-suter needs ≥ 2 seed points".into());
+        }
+        let k = crate::kernels::gram(kernel, x0);
+        let kc = crate::kpca::center_gram(&k);
+        let eg = eigh(&kc)?;
+        let rank_tol = 1e-10;
+        // Keep only the numerically nonzero part of the spectrum.
+        let scale = eg.values.iter().fold(0.0_f64, |a, &b| a.max(b.abs()));
+        let first = eg.values.iter().position(|&l| l > rank_tol * scale.max(1.0)).unwrap_or(m);
+        let r = m - first;
+        let mut vecs = Mat::zeros(m, r);
+        let mut vals = Vec::with_capacity(r);
+        for (c, j) in (first..m).enumerate() {
+            vals.push(eg.values[j]);
+            for i in 0..m {
+                vecs[(i, c)] = eg.vectors[(i, j)];
+            }
+        }
+        let k1: Vec<f64> = (0..m).map(|i| k.row(i).iter().sum()).collect();
+        let s = k1.iter().sum();
+        Ok(ChinSuterKpca {
+            kernel,
+            x: x0.as_slice().to_vec(),
+            dim: x0.cols(),
+            m,
+            vals,
+            vecs,
+            k,
+            k1,
+            s,
+            rank_tol,
+            faithful_cost: true,
+        })
+    }
+
+    pub fn len(&self) -> usize {
+        self.m
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.m == 0
+    }
+
+    /// Tracked rank.
+    pub fn rank(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Ingest one example (exact mean-adjusted update).
+    pub fn push(&mut self, xnew: &[f64]) -> Result<(), String> {
+        assert_eq!(xnew.len(), self.dim);
+        let m = self.m;
+        let mf = m as f64;
+        let r = self.rank();
+        let xmat = Mat::from_vec(m, self.dim, self.x.clone());
+        let a = kernel_column(self.kernel, &xmat, m, xnew);
+        let knew = self.kernel.eval(xnew, xnew);
+        let asum: f64 = a.iter().sum();
+
+        if self.faithful_cost {
+            // CS07's feature basis is non-orthogonal (spanned by raw
+            // feature vectors); the original algorithm re-orthonormalizes
+            // through an eigendecomposition of the unadjusted kernel
+            // matrix. Our coordinates never leave the orthonormal
+            // eigenbasis, so the result is unused — but the cost is real
+            // in the original method and is charged here for parity.
+            let _ = eigh(&self.k)?;
+        }
+
+        // Centered coordinates of the new point w.r.t. the current mean:
+        // ⟨φ(xᵢ)−μₘ, φ(x)−μₘ⟩ and ‖φ(x)−μₘ‖².
+        let atil: Vec<f64> = (0..m)
+            .map(|i| a[i] - self.k1[i] / mf - asum / mf + self.s / (mf * mf))
+            .collect();
+        let q = knew - 2.0 * asum / mf + self.s / (mf * mf);
+
+        // Projection p onto the r orthonormal basis directions
+        // (bᵢ = Φ'ᵀuᵢ/√λᵢ) and the orthogonal residual ρ.
+        let mut p = vec![0.0; r];
+        for j in 0..r {
+            let mut dot = 0.0;
+            for i in 0..m {
+                dot += self.vecs[(i, j)] * atil[i];
+            }
+            p[j] = dot / self.vals[j].sqrt();
+        }
+        let rho2 = q - p.iter().map(|v| v * v).sum::<f64>();
+        let rho = rho2.max(0.0).sqrt();
+
+        // Coordinates of the re-centered data rows in the augmented
+        // basis [b₁…b_r, e_⊥]:  C = C₀ + w hᵀ, with C₀ the block-diag
+        // scaled eigenvector matrix, w the mean-shift pattern and
+        // h = [p; ρ].
+        let mut c0 = Mat::zeros(m + 1, r + 1);
+        for i in 0..m {
+            for j in 0..r {
+                c0[(i, j)] = self.vecs[(i, j)] * self.vals[j].sqrt();
+            }
+        }
+        let mut h = p.clone();
+        h.push(rho);
+        let m1f = mf + 1.0;
+        let mut c = c0;
+        for i in 0..m {
+            for j in 0..r + 1 {
+                c[(i, j)] -= h[j] / m1f;
+            }
+        }
+        for j in 0..r + 1 {
+            c[(m, j)] += h[j] * mf / m1f;
+        }
+
+        // Augmented small problem: G = CᵀC, eigendecomposed.
+        let g = matmul(&c.transpose(), &c);
+        let eg = eigh(&g)?;
+
+        // New eigenpairs: Λ = D (above cutoff), U = C Q D^{-1/2} — the
+        // (m+1)×(r+1) rotation GEMM that dominates at ≈2m³ flops.
+        let scale = eg.values.iter().fold(0.0_f64, |acc, &b| acc.max(b.abs()));
+        let keep: Vec<usize> = (0..eg.values.len())
+            .filter(|&j| eg.values[j] > self.rank_tol * scale.max(1.0))
+            .collect();
+        let mut q_keep = Mat::zeros(r + 1, keep.len());
+        for (cj, &j) in keep.iter().enumerate() {
+            for i in 0..r + 1 {
+                q_keep[(i, cj)] = eg.vectors[(i, j)];
+            }
+        }
+        let mut u_new = matmul(&c, &q_keep);
+        let mut vals_new = Vec::with_capacity(keep.len());
+        for (cj, &j) in keep.iter().enumerate() {
+            let d = eg.values[j];
+            vals_new.push(d);
+            let inv = 1.0 / d.sqrt();
+            for i in 0..m + 1 {
+                u_new[(i, cj)] *= inv;
+            }
+        }
+
+        // Commit: eigensystem, kernel matrix, running sums, data.
+        self.vals = vals_new;
+        self.vecs = u_new;
+        let mut k_grown = Mat::zeros(m + 1, m + 1);
+        for i in 0..m {
+            for j in 0..m {
+                k_grown[(i, j)] = self.k[(i, j)];
+            }
+            k_grown[(i, m)] = a[i];
+            k_grown[(m, i)] = a[i];
+        }
+        k_grown[(m, m)] = knew;
+        self.k = k_grown;
+        for (k1i, ai) in self.k1.iter_mut().zip(&a) {
+            *k1i += ai;
+        }
+        self.k1.push(asum + knew);
+        self.s += 2.0 * asum + knew;
+        self.x.extend_from_slice(xnew);
+        self.m += 1;
+        Ok(())
+    }
+
+    /// Reconstruction `U Λ Uᵀ` of the centered kernel matrix.
+    pub fn reconstruct(&self) -> Mat {
+        let (m, r) = (self.m, self.rank());
+        let mut ul = self.vecs.clone();
+        for i in 0..m {
+            for j in 0..r {
+                ul[(i, j)] *= self.vals[j];
+            }
+        }
+        crate::linalg::matmul_nt(&ul, &self.vecs)
+    }
+
+    /// Batch ground truth of the centered kernel matrix.
+    pub fn batch_reference(&self) -> Mat {
+        let xmat = Mat::from_vec(self.m, self.dim, self.x.clone());
+        let k = crate::kernels::gram(self.kernel, &xmat);
+        crate::kpca::center_gram(&k)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::yeast_like;
+    use crate::kernels::Rbf;
+
+    #[test]
+    fn exact_against_batch() {
+        let ds = yeast_like(18, 1);
+        let kern = Rbf { sigma: 1.0 };
+        let seed = ds.x.submatrix(5, ds.dim());
+        let mut cs = ChinSuterKpca::from_batch(&kern, &seed).unwrap();
+        cs.faithful_cost = false; // speed: result identical either way
+        for i in 5..ds.n() {
+            cs.push(ds.x.row(i)).unwrap();
+        }
+        let drift = cs.reconstruct().max_abs_diff(&cs.batch_reference());
+        assert!(drift < 1e-8, "drift {drift}");
+    }
+
+    #[test]
+    fn rank_stays_below_m() {
+        // The centered Gram has rank ≤ m−1; the tracked rank must too.
+        let ds = yeast_like(12, 2);
+        let kern = Rbf { sigma: 1.0 };
+        let seed = ds.x.submatrix(4, ds.dim());
+        let mut cs = ChinSuterKpca::from_batch(&kern, &seed).unwrap();
+        cs.faithful_cost = false;
+        for i in 4..ds.n() {
+            cs.push(ds.x.row(i)).unwrap();
+            assert!(cs.rank() < cs.len(), "rank {} vs m {}", cs.rank(), cs.len());
+        }
+    }
+
+    #[test]
+    fn agrees_with_papers_incremental() {
+        let ds = yeast_like(14, 3);
+        let kern = Rbf { sigma: 1.0 };
+        let seed = ds.x.submatrix(6, ds.dim());
+        let mut cs = ChinSuterKpca::from_batch(&kern, &seed).unwrap();
+        cs.faithful_cost = false;
+        let mut ours = crate::kpca::IncrementalKpca::from_batch(&kern, &seed, true).unwrap();
+        for i in 6..ds.n() {
+            cs.push(ds.x.row(i)).unwrap();
+            ours.push(ds.x.row(i)).unwrap();
+        }
+        // Same matrix reconstructed by both exact algorithms.
+        let diff = cs.reconstruct().max_abs_diff(&ours.reconstruct());
+        assert!(diff < 1e-7, "CS vs ours diff {diff}");
+    }
+
+    #[test]
+    fn needs_two_seed_points() {
+        let kern = Rbf { sigma: 1.0 };
+        assert!(ChinSuterKpca::from_batch(&kern, &Mat::zeros(1, 4)).is_err());
+    }
+}

@@ -1,0 +1,204 @@
+//! Hoegaerts et al. (2007): "Efficiently updating and tracking the
+//! dominant kernel principal components" — maintains only the top `r`
+//! eigenpairs of the *unadjusted* kernel matrix under expansion,
+//! updating via two rank-one perturbations and truncating back to the
+//! dominant subspace each step (§2.3 of the paper).
+//!
+//! The update is exact while `r = m` and becomes a dominant-subspace
+//! approximation once truncation starts: the component of each
+//! perturbation orthogonal to the tracked subspace is discarded —
+//! exactly the trade their tracker makes.
+
+use crate::kernels::{kernel_column, Kernel};
+use crate::linalg::Mat;
+use crate::rankone::{rank_one_update, NativeRotate, Rotate};
+
+/// Dominant-subspace tracker for the unadjusted kernel matrix.
+#[derive(Clone)]
+pub struct HoegaertsTracker<'k> {
+    kernel: &'k dyn Kernel,
+    x: Vec<f64>,
+    dim: usize,
+    m: usize,
+    /// Number of dominant eigenpairs tracked.
+    pub r: usize,
+    /// Tracked eigenvalues, ascending (length ≤ r).
+    pub vals: Vec<f64>,
+    /// Tracked eigenvectors (`m × len(vals)`).
+    pub vecs: Mat,
+}
+
+impl<'k> HoegaertsTracker<'k> {
+    /// Initialize from a batch decomposition of `x0`, keeping the top
+    /// `r` eigenpairs.
+    pub fn from_batch(kernel: &'k dyn Kernel, x0: &Mat, r: usize) -> Result<Self, String> {
+        let m = x0.rows();
+        if m == 0 || r == 0 {
+            return Err("hoegaerts needs ≥1 seed point and r ≥ 1".into());
+        }
+        let k = crate::kernels::gram(kernel, x0);
+        let eg = crate::linalg::eigh(&k)?;
+        let keep = r.min(m);
+        let first = m - keep;
+        let mut vecs = Mat::zeros(m, keep);
+        let mut vals = Vec::with_capacity(keep);
+        for (c, j) in (first..m).enumerate() {
+            vals.push(eg.values[j]);
+            for i in 0..m {
+                vecs[(i, c)] = eg.vectors[(i, j)];
+            }
+        }
+        Ok(HoegaertsTracker { kernel, x: x0.as_slice().to_vec(), dim: x0.cols(), m, r, vals, vecs })
+    }
+
+    pub fn len(&self) -> usize {
+        self.m
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.m == 0
+    }
+
+    /// Ingest one example: expand, two rank-one updates, truncate.
+    pub fn push(&mut self, xnew: &[f64]) -> Result<(), String> {
+        self.push_with(xnew, &NativeRotate)
+    }
+
+    pub fn push_with(&mut self, xnew: &[f64], engine: &dyn Rotate) -> Result<(), String> {
+        assert_eq!(xnew.len(), self.dim);
+        let m = self.m;
+        let xmat = Mat::from_vec(m, self.dim, self.x.clone());
+        let a = kernel_column(self.kernel, &xmat, m, xnew);
+        let knew = self.kernel.eval(xnew, xnew);
+        if knew.abs() < 1e-14 {
+            return Err("degenerate self-similarity".into());
+        }
+
+        // Expand the tracked (rectangular) system with the decoupled
+        // eigenpair (k/4, e_{m+1}).
+        let cols = self.vals.len();
+        let mut grown = Mat::zeros(m + 1, cols + 1);
+        for i in 0..m {
+            for j in 0..cols {
+                grown[(i, j)] = self.vecs[(i, j)];
+            }
+        }
+        grown[(m, cols)] = 1.0;
+        self.vecs = grown;
+        self.vals.push(0.25 * knew);
+        crate::rankone::sort_pairs(&mut self.vals, &mut self.vecs);
+
+        // Two rank-one updates (eq. 2), projected onto the tracked
+        // subspace by the rectangular eigenvector matrix.
+        let sigma = 4.0 / knew;
+        let mut v1 = a.clone();
+        v1.push(0.5 * knew);
+        let mut v2 = a;
+        v2.push(0.25 * knew);
+        rank_one_update(&mut self.vals, &mut self.vecs, sigma, &v1, engine)?;
+        rank_one_update(&mut self.vals, &mut self.vecs, -sigma, &v2, engine)?;
+
+        // Truncate back to the r dominant pairs (largest are at the end).
+        while self.vals.len() > self.r {
+            self.vals.remove(0);
+            let (rows, cols) = (self.vecs.rows(), self.vecs.cols());
+            let trimmed = Mat::from_fn(rows, cols - 1, |i, j| self.vecs[(i, j + 1)]);
+            self.vecs = trimmed;
+        }
+
+        self.x.extend_from_slice(xnew);
+        self.m += 1;
+        Ok(())
+    }
+
+    /// Low-rank reconstruction `U_r Λ_r U_rᵀ`.
+    pub fn reconstruct(&self) -> Mat {
+        let (m, c) = (self.vecs.rows(), self.vecs.cols());
+        let mut ul = self.vecs.clone();
+        for i in 0..m {
+            for j in 0..c {
+                ul[(i, j)] *= self.vals[j];
+            }
+        }
+        crate::linalg::matmul_nt(&ul, &self.vecs)
+    }
+
+    /// Best rank-r batch approximation of the current kernel matrix —
+    /// the quality target for the tracker.
+    pub fn batch_rank_r(&self) -> Result<Mat, String> {
+        let xmat = Mat::from_vec(self.m, self.dim, self.x.clone());
+        let k = crate::kernels::gram(self.kernel, &xmat);
+        let eg = crate::linalg::eigh(&k)?;
+        let keep = self.r.min(self.m);
+        let first = self.m - keep;
+        let mut ul = Mat::zeros(self.m, keep);
+        for (c, j) in (first..self.m).enumerate() {
+            for i in 0..self.m {
+                ul[(i, c)] = eg.vectors[(i, j)] * eg.values[j];
+            }
+        }
+        let mut u = Mat::zeros(self.m, keep);
+        for (c, j) in (first..self.m).enumerate() {
+            for i in 0..self.m {
+                u[(i, c)] = eg.vectors[(i, j)];
+            }
+        }
+        Ok(crate::linalg::matmul_nt(&ul, &u))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::yeast_like;
+    use crate::kernels::Rbf;
+    use crate::linalg::frobenius;
+
+    #[test]
+    fn exact_while_untruncated() {
+        // With r ≥ m the tracker is the exact unadjusted incremental
+        // algorithm.
+        let ds = yeast_like(12, 1);
+        let kern = Rbf { sigma: 1.0 };
+        let seed = ds.x.submatrix(4, ds.dim());
+        let mut tr = HoegaertsTracker::from_batch(&kern, &seed, 64).unwrap();
+        for i in 4..ds.n() {
+            tr.push(ds.x.row(i)).unwrap();
+        }
+        let k = crate::kernels::gram(&kern, &ds.x);
+        assert!(tr.reconstruct().max_abs_diff(&k) < 1e-8);
+    }
+
+    #[test]
+    fn truncated_tracks_dominant_subspace() {
+        let ds = yeast_like(30, 2);
+        let kern = Rbf { sigma: 1.0 };
+        let seed = ds.x.submatrix(10, ds.dim());
+        let r = 6;
+        let mut tr = HoegaertsTracker::from_batch(&kern, &seed, r).unwrap();
+        for i in 10..ds.n() {
+            tr.push(ds.x.row(i)).unwrap();
+        }
+        // Tracker error should be within a modest factor of the optimal
+        // rank-r error (it cannot beat it).
+        let k = crate::kernels::gram(&kern, &ds.x);
+        let best = tr.batch_rank_r().unwrap();
+        let e_best = frobenius(&k.sub(&best));
+        let e_tr = frobenius(&k.sub(&tr.reconstruct()));
+        assert!(e_tr >= e_best - 1e-9, "tracker cannot beat optimal");
+        assert!(e_tr < 6.0 * e_best + 1e-6, "tracker off: {e_tr} vs optimal {e_best}");
+    }
+
+    #[test]
+    fn rank_capped_at_r() {
+        let ds = yeast_like(15, 3);
+        let kern = Rbf { sigma: 1.0 };
+        let seed = ds.x.submatrix(5, ds.dim());
+        let mut tr = HoegaertsTracker::from_batch(&kern, &seed, 4).unwrap();
+        for i in 5..ds.n() {
+            tr.push(ds.x.row(i)).unwrap();
+            assert!(tr.vals.len() <= 4);
+            assert_eq!(tr.vecs.rows(), tr.len());
+        }
+    }
+}

@@ -1,0 +1,11 @@
+//! Prior-work baselines the paper compares against (§2.3, §3):
+//! Chin & Suter (2007) — exact incremental KPCA with mean adjustment via
+//! incremental SVD in feature space (≈20m³ flops/step per the paper's
+//! accounting) — and Hoegaerts et al. (2007) — dominant-subspace
+//! tracking of the unadjusted kernel matrix.
+
+pub mod chin_suter;
+pub mod hoegaerts;
+
+pub use chin_suter::ChinSuterKpca;
+pub use hoegaerts::HoegaertsTracker;

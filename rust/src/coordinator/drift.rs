@@ -1,0 +1,128 @@
+//! Online drift monitor — the live version of the paper's Fig. 1
+//! measurement: every `every` accepted examples, reconstruct `UΛUᵀ`,
+//! recompute the batch (adjusted) kernel matrix, and record the three
+//! norms of the difference. `O(m³)` per measurement, so it is sampled,
+//! not per-step.
+
+use crate::kpca::IncrementalKpca;
+use crate::linalg::{sym_norms, Norms};
+
+/// One drift measurement.
+#[derive(Clone, Copy, Debug)]
+pub struct DriftPoint {
+    /// Number of points in the eigensystem at measurement time.
+    pub m: usize,
+    pub norms: Norms,
+    /// `‖UUᵀ − I‖_F` (§5.1 orthogonality diagnostic).
+    pub orthogonality: f64,
+}
+
+/// Periodic drift monitor.
+#[derive(Debug)]
+pub struct DriftMonitor {
+    /// Measure every this many accepted examples (0 disables).
+    pub every: usize,
+    accepted_since: usize,
+    history: Vec<DriftPoint>,
+}
+
+impl DriftMonitor {
+    pub fn new(every: usize) -> Self {
+        DriftMonitor { every, accepted_since: 0, history: Vec::new() }
+    }
+
+    /// Notify of an accepted example; measures when due.
+    pub fn on_accept(&mut self, state: &IncrementalKpca<'_>) -> Option<DriftPoint> {
+        if self.every == 0 {
+            return None;
+        }
+        self.accepted_since += 1;
+        if self.accepted_since < self.every {
+            return None;
+        }
+        self.accepted_since = 0;
+        Some(self.measure(state))
+    }
+
+    /// Unconditional measurement.
+    pub fn measure(&mut self, state: &IncrementalKpca<'_>) -> DriftPoint {
+        let diff = state.reconstruct().sub(&state.batch_reference());
+        let point = DriftPoint {
+            m: state.len(),
+            norms: sym_norms(&diff),
+            orthogonality: crate::linalg::orthogonality_defect(&state.vecs),
+        };
+        self.history.push(point);
+        point
+    }
+
+    pub fn history(&self) -> &[DriftPoint] {
+        &self.history
+    }
+
+    pub fn latest(&self) -> Option<&DriftPoint> {
+        self.history.last()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::yeast_like;
+    use crate::kernels::Rbf;
+
+    #[test]
+    fn measures_every_n_accepts() {
+        let ds = yeast_like(16, 1);
+        let kern = Rbf { sigma: 1.0 };
+        let seed = ds.x.submatrix(4, ds.dim());
+        let mut inc = IncrementalKpca::from_batch(&kern, &seed, true).unwrap();
+        let mut mon = DriftMonitor::new(3);
+        let mut measured = 0;
+        for i in 4..ds.n() {
+            inc.push(ds.x.row(i)).unwrap();
+            if mon.on_accept(&inc).is_some() {
+                measured += 1;
+            }
+        }
+        assert_eq!(measured, 12 / 3);
+        assert_eq!(mon.history().len(), measured);
+        // Exact algorithm: drift stays tiny.
+        for p in mon.history() {
+            assert!(p.norms.frobenius < 1e-8, "drift {:?}", p.norms);
+            assert!(p.orthogonality < 1e-9);
+        }
+    }
+
+    #[test]
+    fn disabled_monitor_never_fires() {
+        let ds = yeast_like(8, 2);
+        let kern = Rbf { sigma: 1.0 };
+        let seed = ds.x.submatrix(4, ds.dim());
+        let mut inc = IncrementalKpca::from_batch(&kern, &seed, false).unwrap();
+        let mut mon = DriftMonitor::new(0);
+        for i in 4..8 {
+            inc.push(ds.x.row(i)).unwrap();
+            assert!(mon.on_accept(&inc).is_none());
+        }
+        assert!(mon.history().is_empty());
+    }
+
+    #[test]
+    fn drift_monotone_in_m_is_not_required_but_small() {
+        // Sanity: measurements carry increasing m.
+        let ds = yeast_like(12, 3);
+        let kern = Rbf { sigma: 1.0 };
+        let seed = ds.x.submatrix(4, ds.dim());
+        let mut inc = IncrementalKpca::from_batch(&kern, &seed, true).unwrap();
+        let mut mon = DriftMonitor::new(2);
+        for i in 4..12 {
+            inc.push(ds.x.row(i)).unwrap();
+            mon.on_accept(&inc);
+        }
+        let ms: Vec<usize> = mon.history().iter().map(|p| p.m).collect();
+        for w in ms.windows(2) {
+            assert!(w[0] < w[1]);
+        }
+    }
+}

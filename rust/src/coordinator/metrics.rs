@@ -1,0 +1,185 @@
+//! Latency/throughput metrics for the streaming coordinator: a fixed
+//! log-spaced latency histogram (HDR-style, no allocation on the record
+//! path) plus counters, snapshotted into a compact report.
+
+use std::time::{Duration, Instant};
+
+/// Log-spaced histogram from 1 µs to ~17 s (2× per bucket).
+const BUCKETS: usize = 25;
+const BASE_NS: f64 = 1_000.0;
+
+#[derive(Clone, Debug)]
+pub struct LatencyHistogram {
+    counts: [u64; BUCKETS],
+    total: u64,
+    sum_ns: f64,
+    max_ns: f64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram { counts: [0; BUCKETS], total: 0, sum_ns: 0.0, max_ns: 0.0 }
+    }
+}
+
+impl LatencyHistogram {
+    fn bucket(ns: f64) -> usize {
+        if ns <= BASE_NS {
+            return 0;
+        }
+        let b = (ns / BASE_NS).log2().floor() as usize;
+        b.min(BUCKETS - 1)
+    }
+
+    pub fn record(&mut self, d: Duration) {
+        let ns = d.as_nanos() as f64;
+        self.counts[Self::bucket(ns)] += 1;
+        self.total += 1;
+        self.sum_ns += ns;
+        self.max_ns = self.max_ns.max(ns);
+    }
+
+    /// Upper-bound estimate of percentile `p` in nanoseconds.
+    pub fn percentile_ns(&self, p: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let target = (p * self.total as f64).ceil() as u64;
+        let mut seen = 0;
+        for (b, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return BASE_NS * (1u64 << (b + 1)) as f64 / 2.0 * 2.0;
+            }
+        }
+        self.max_ns
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum_ns / self.total as f64
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+}
+
+/// Aggregate coordinator metrics.
+#[derive(Debug)]
+pub struct Metrics {
+    pub ingest_latency: LatencyHistogram,
+    pub project_latency: LatencyHistogram,
+    pub accepted: u64,
+    pub excluded: u64,
+    pub errors: u64,
+    started: Instant,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Metrics {
+            ingest_latency: LatencyHistogram::default(),
+            project_latency: LatencyHistogram::default(),
+            accepted: 0,
+            excluded: 0,
+            errors: 0,
+            started: Instant::now(),
+        }
+    }
+}
+
+impl Metrics {
+    pub fn report(&self) -> MetricsReport {
+        let elapsed = self.started.elapsed().as_secs_f64().max(1e-9);
+        MetricsReport {
+            accepted: self.accepted,
+            excluded: self.excluded,
+            errors: self.errors,
+            uptime_s: elapsed,
+            throughput_per_s: self.accepted as f64 / elapsed,
+            ingest_p50_us: self.ingest_latency.percentile_ns(0.50) / 1e3,
+            ingest_p99_us: self.ingest_latency.percentile_ns(0.99) / 1e3,
+            ingest_mean_us: self.ingest_latency.mean_ns() / 1e3,
+            project_mean_us: self.project_latency.mean_ns() / 1e3,
+        }
+    }
+}
+
+/// Snapshot handed to callers (printable one-liner in examples/CLI).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MetricsReport {
+    pub accepted: u64,
+    pub excluded: u64,
+    pub errors: u64,
+    pub uptime_s: f64,
+    pub throughput_per_s: f64,
+    pub ingest_p50_us: f64,
+    pub ingest_p99_us: f64,
+    pub ingest_mean_us: f64,
+    pub project_mean_us: f64,
+}
+
+impl std::fmt::Display for MetricsReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "accepted={} excluded={} errors={} thru={:.1}/s ingest p50={:.0}µs p99={:.0}µs mean={:.0}µs",
+            self.accepted,
+            self.excluded,
+            self.errors,
+            self.throughput_per_s,
+            self.ingest_p50_us,
+            self.ingest_p99_us,
+            self.ingest_mean_us
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_counts_and_mean() {
+        let mut h = LatencyHistogram::default();
+        for us in [10u64, 20, 30] {
+            h.record(Duration::from_micros(us));
+        }
+        assert_eq!(h.count(), 3);
+        assert!((h.mean_ns() - 20_000.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn percentile_monotone() {
+        let mut h = LatencyHistogram::default();
+        for i in 1..=1000u64 {
+            h.record(Duration::from_micros(i));
+        }
+        let p50 = h.percentile_ns(0.5);
+        let p99 = h.percentile_ns(0.99);
+        assert!(p50 <= p99);
+        assert!(p99 <= h.max_ns * 2.0 + 1.0);
+    }
+
+    #[test]
+    fn empty_histogram_zero() {
+        let h = LatencyHistogram::default();
+        assert_eq!(h.percentile_ns(0.99), 0.0);
+        assert_eq!(h.mean_ns(), 0.0);
+    }
+
+    #[test]
+    fn report_throughput() {
+        let mut m = Metrics::default();
+        m.accepted = 100;
+        let r = m.report();
+        assert!(r.throughput_per_s > 0.0);
+        assert_eq!(r.accepted, 100);
+        // Display renders without panic.
+        let _ = format!("{r}");
+    }
+}

@@ -1,0 +1,13 @@
+//! Layer-3 streaming coordinator: bounded-queue ingestion with
+//! backpressure, eigenstate ownership, engine routing (native GEMM vs
+//! AOT PJRT), periodic drift measurement and latency/throughput metrics.
+
+pub mod drift;
+pub mod metrics;
+pub mod router;
+pub mod server;
+
+pub use drift::{DriftMonitor, DriftPoint};
+pub use metrics::{LatencyHistogram, Metrics, MetricsReport};
+pub use router::{EnginePolicy, RoutedEngine};
+pub use server::{Config, Coordinator, EngineConfig, IngestReply, KernelConfig, Snapshot};

@@ -1,0 +1,162 @@
+//! Engine router: picks, per rank-one update, whether the `2m³`
+//! back-rotation runs on the native blocked GEMM or the AOT PJRT
+//! executable (bucket-laddered Pallas kernel). Policy: PJRT above a
+//! size threshold when a runtime is attached, native otherwise — small
+//! problems lose more to padding/transfer than the kernel gains.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::linalg::Mat;
+use crate::rankone::{NativeRotate, Rotate};
+use crate::runtime::PjrtRotate;
+use crate::secular::SecularRoot;
+
+/// Which engine to use.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub enum EnginePolicy {
+    /// Always the native GEMM.
+    #[default]
+    Native,
+    /// Always PJRT (falls back to native only on artifact miss).
+    Pjrt,
+    /// PJRT for problems of at least this order, native below.
+    Auto {
+        pjrt_min: usize,
+    },
+}
+
+/// Routing engine with dispatch counters (surfaced in metrics).
+pub struct RoutedEngine {
+    native: NativeRotate,
+    pjrt: Option<PjrtRotate>,
+    pub policy: EnginePolicy,
+    pub native_calls: AtomicU64,
+    pub pjrt_calls: AtomicU64,
+}
+
+impl RoutedEngine {
+    pub fn native_only() -> Self {
+        RoutedEngine {
+            native: NativeRotate,
+            pjrt: None,
+            policy: EnginePolicy::Native,
+            native_calls: AtomicU64::new(0),
+            pjrt_calls: AtomicU64::new(0),
+        }
+    }
+
+    pub fn with_pjrt(pjrt: PjrtRotate, policy: EnginePolicy) -> Self {
+        RoutedEngine {
+            native: NativeRotate,
+            pjrt: Some(pjrt),
+            policy,
+            native_calls: AtomicU64::new(0),
+            pjrt_calls: AtomicU64::new(0),
+        }
+    }
+
+    fn use_pjrt(&self, size: usize) -> bool {
+        if self.pjrt.is_none() {
+            return false;
+        }
+        match self.policy {
+            EnginePolicy::Native => false,
+            EnginePolicy::Pjrt => true,
+            EnginePolicy::Auto { pjrt_min } => size >= pjrt_min,
+        }
+    }
+
+    /// (native, pjrt) dispatch counts.
+    pub fn counts(&self) -> (u64, u64) {
+        (self.native_calls.load(Ordering::Relaxed), self.pjrt_calls.load(Ordering::Relaxed))
+    }
+}
+
+impl Rotate for RoutedEngine {
+    fn rotate(&self, u: &Mat, w: &Mat) -> Mat {
+        self.native_calls.fetch_add(1, Ordering::Relaxed);
+        self.native.rotate(u, w)
+    }
+
+    fn rotate_fused(
+        &self,
+        u: &Mat,
+        z: &[f64],
+        d: &[f64],
+        roots: &[SecularRoot],
+    ) -> Option<Mat> {
+        let size = u.rows().max(u.cols());
+        if self.use_pjrt(size) {
+            if let Some(p) = &self.pjrt {
+                if let Some(out) = p.rotate_fused(u, z, d, roots) {
+                    self.pjrt_calls.fetch_add(1, Ordering::Relaxed);
+                    return Some(out);
+                }
+            }
+        }
+        None // fall through to native W-form rotate()
+    }
+
+    fn name(&self) -> &'static str {
+        "routed"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::yeast_like;
+    use crate::kernels::Rbf;
+    use crate::kpca::IncrementalKpca;
+
+    #[test]
+    fn native_only_routes_everything_native() {
+        let engine = RoutedEngine::native_only();
+        let ds = yeast_like(10, 1);
+        let kern = Rbf { sigma: 1.0 };
+        let seed = ds.x.submatrix(4, ds.dim());
+        let mut inc = IncrementalKpca::from_batch(&kern, &seed, true).unwrap();
+        for i in 4..10 {
+            inc.push_with(ds.x.row(i), &engine).unwrap();
+        }
+        let (native, pjrt) = engine.counts();
+        assert!(native > 0);
+        assert_eq!(pjrt, 0);
+    }
+
+    #[test]
+    fn auto_policy_thresholds() {
+        // Without a pjrt runtime attached, Auto always declines.
+        let engine = RoutedEngine::native_only();
+        assert!(!engine.use_pjrt(10_000));
+        let e2 = RoutedEngine {
+            policy: EnginePolicy::Auto { pjrt_min: 64 },
+            ..RoutedEngine::native_only()
+        };
+        assert!(!e2.use_pjrt(1024)); // still no pjrt runtime
+    }
+
+    #[test]
+    fn pjrt_policy_with_runtime_if_artifacts_present() {
+        let dir = std::path::Path::new("artifacts");
+        if !dir.join("manifest.tsv").exists() {
+            return;
+        }
+        let rt = std::sync::Arc::new(crate::runtime::Runtime::new(dir).unwrap());
+        let engine = RoutedEngine::with_pjrt(
+            crate::runtime::PjrtRotate::new(rt),
+            EnginePolicy::Pjrt,
+        );
+        let ds = yeast_like(10, 2);
+        let kern = Rbf { sigma: 1.0 };
+        let seed = ds.x.submatrix(4, ds.dim());
+        let mut inc = IncrementalKpca::from_batch(&kern, &seed, true).unwrap();
+        for i in 4..10 {
+            inc.push_with(ds.x.row(i), &engine).unwrap();
+        }
+        let (_, pjrt) = engine.counts();
+        assert!(pjrt > 0, "pjrt engine never dispatched");
+        let drift = inc.reconstruct().max_abs_diff(&inc.batch_reference());
+        assert!(drift < 1e-6);
+    }
+}

@@ -1,0 +1,411 @@
+//! The streaming coordinator: a worker thread owning the incremental
+//! eigensystem, fed through a *bounded* command channel (backpressure —
+//! producers block when the update loop falls behind), with rendezvous
+//! replies, periodic drift measurement and latency metrics. This is the
+//! L3 event loop; the PJRT runtime (not `Send`) is constructed inside
+//! the worker thread.
+
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::data::StreamSource;
+use crate::kernels::{median_heuristic, Kernel};
+use crate::kpca::{IncrementalKpca, KpcaStats};
+use crate::linalg::{Mat, Norms};
+
+use super::drift::{DriftMonitor, DriftPoint};
+use super::metrics::{Metrics, MetricsReport};
+use super::router::{EnginePolicy, RoutedEngine};
+
+/// Kernel selection (constructed inside the worker thread).
+#[derive(Clone, Debug)]
+pub enum KernelConfig {
+    Rbf { sigma: f64 },
+    /// RBF with the paper's median heuristic computed over the seed.
+    RbfMedian,
+    Linear,
+    Polynomial { degree: u32, offset: f64 },
+    Laplacian { sigma: f64 },
+}
+
+/// Where the hot rotation runs.
+#[derive(Clone, Debug, Default)]
+pub enum EngineConfig {
+    #[default]
+    Native,
+    /// PJRT engine from AOT artifacts at `dir`, routed per `policy`.
+    Pjrt { dir: String, policy: EnginePolicy },
+}
+
+/// Coordinator configuration.
+#[derive(Clone, Debug)]
+pub struct Config {
+    pub kernel: KernelConfig,
+    pub mean_adjust: bool,
+    pub engine: EngineConfig,
+    /// Bounded channel capacity (ingest backpressure depth).
+    pub queue: usize,
+    /// Seed examples accumulated before the batch initialization.
+    pub seed_points: usize,
+    /// Drift measurement cadence (accepted points; 0 = off).
+    pub drift_every: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            kernel: KernelConfig::RbfMedian,
+            mean_adjust: true,
+            engine: EngineConfig::Native,
+            queue: 64,
+            seed_points: 20,
+            drift_every: 0,
+        }
+    }
+}
+
+/// Reply to an ingest request.
+#[derive(Clone, Copy, Debug)]
+pub struct IngestReply {
+    pub accepted: bool,
+    /// Eigensystem size after the request.
+    pub m: usize,
+    /// True while the point was only buffered toward the seed batch.
+    pub seeding: bool,
+}
+
+/// Point-in-time view of the coordinator state.
+#[derive(Clone, Debug)]
+pub struct Snapshot {
+    pub m: usize,
+    pub dim: usize,
+    pub top_values: Vec<f64>,
+    pub stats: KpcaStats,
+    pub drift: Option<DriftPoint>,
+    /// (native, pjrt) rotation dispatch counts.
+    pub engine_calls: (u64, u64),
+}
+
+enum Command {
+    Ingest(Vec<f64>, SyncSender<Result<IngestReply, String>>),
+    Project(Vec<f64>, usize, SyncSender<Result<Vec<f64>, String>>),
+    MeasureDrift(SyncSender<Result<DriftPoint, String>>),
+    Snapshot(SyncSender<Snapshot>),
+    Metrics(SyncSender<MetricsReport>),
+    Shutdown,
+}
+
+/// Handle to a running coordinator.
+pub struct Coordinator {
+    tx: SyncSender<Command>,
+    join: Option<JoinHandle<KpcaStats>>,
+}
+
+impl Coordinator {
+    /// Spawn the worker thread.
+    pub fn spawn(cfg: Config, dim: usize) -> Coordinator {
+        let (tx, rx) = sync_channel(cfg.queue.max(1));
+        let join = std::thread::spawn(move || worker(cfg, dim, rx));
+        Coordinator { tx, join: Some(join) }
+    }
+
+    /// Ingest one example (blocks under backpressure).
+    pub fn ingest(&self, x: Vec<f64>) -> Result<IngestReply, String> {
+        let (rtx, rrx) = sync_channel(1);
+        self.tx.send(Command::Ingest(x, rtx)).map_err(|_| "coordinator down".to_string())?;
+        rrx.recv().map_err(|_| "coordinator dropped reply".to_string())?
+    }
+
+    /// Project a point onto the current top-`r` components.
+    pub fn project(&self, x: Vec<f64>, r: usize) -> Result<Vec<f64>, String> {
+        let (rtx, rrx) = sync_channel(1);
+        self.tx
+            .send(Command::Project(x, r, rtx))
+            .map_err(|_| "coordinator down".to_string())?;
+        rrx.recv().map_err(|_| "coordinator dropped reply".to_string())?
+    }
+
+    /// Force an immediate drift measurement.
+    pub fn measure_drift(&self) -> Result<DriftPoint, String> {
+        let (rtx, rrx) = sync_channel(1);
+        self.tx
+            .send(Command::MeasureDrift(rtx))
+            .map_err(|_| "coordinator down".to_string())?;
+        rrx.recv().map_err(|_| "coordinator dropped reply".to_string())?
+    }
+
+    pub fn snapshot(&self) -> Result<Snapshot, String> {
+        let (rtx, rrx) = sync_channel(1);
+        self.tx.send(Command::Snapshot(rtx)).map_err(|_| "coordinator down".to_string())?;
+        rrx.recv().map_err(|_| "coordinator dropped reply".to_string())
+    }
+
+    pub fn metrics(&self) -> Result<MetricsReport, String> {
+        let (rtx, rrx) = sync_channel(1);
+        self.tx.send(Command::Metrics(rtx)).map_err(|_| "coordinator down".to_string())?;
+        rrx.recv().map_err(|_| "coordinator dropped reply".to_string())
+    }
+
+    /// Drain a whole stream source through the coordinator, returning
+    /// the number of accepted examples.
+    pub fn ingest_stream(&self, src: &mut dyn StreamSource) -> Result<usize, String> {
+        let mut accepted = 0;
+        while let Some(x) = src.next_example() {
+            if self.ingest(x)?.accepted {
+                accepted += 1;
+            }
+        }
+        Ok(accepted)
+    }
+
+    /// Stop the worker and return final stats.
+    pub fn shutdown(mut self) -> KpcaStats {
+        let _ = self.tx.send(Command::Shutdown);
+        self.join.take().map(|j| j.join().unwrap_or_default()).unwrap_or_default()
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Command::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+fn build_kernel(cfg: &KernelConfig, seed: &Mat) -> Box<dyn Kernel> {
+    match cfg {
+        KernelConfig::Rbf { sigma } => Box::new(crate::kernels::Rbf { sigma: *sigma }),
+        KernelConfig::RbfMedian => {
+            let sigma = median_heuristic(seed, 500);
+            Box::new(crate::kernels::Rbf { sigma })
+        }
+        KernelConfig::Linear => Box::new(crate::kernels::Linear),
+        KernelConfig::Polynomial { degree, offset } => {
+            Box::new(crate::kernels::Polynomial { degree: *degree, offset: *offset })
+        }
+        KernelConfig::Laplacian { sigma } => {
+            Box::new(crate::kernels::Laplacian { sigma: *sigma })
+        }
+    }
+}
+
+fn build_engine(cfg: &EngineConfig) -> RoutedEngine {
+    match cfg {
+        EngineConfig::Native => RoutedEngine::native_only(),
+        EngineConfig::Pjrt { dir, policy } => {
+            match crate::runtime::Runtime::new(std::path::Path::new(dir)) {
+                Ok(rt) => RoutedEngine::with_pjrt(
+                    crate::runtime::PjrtRotate::new(std::sync::Arc::new(rt)),
+                    policy.clone(),
+                ),
+                Err(e) => {
+                    eprintln!("coordinator: pjrt unavailable ({e}); using native engine");
+                    RoutedEngine::native_only()
+                }
+            }
+        }
+    }
+}
+
+fn worker(cfg: Config, dim: usize, rx: Receiver<Command>) -> KpcaStats {
+    let engine = build_engine(&cfg.engine);
+    let mut metrics = Metrics::default();
+    let mut drift = DriftMonitor::new(cfg.drift_every);
+    let mut seed_buf: Vec<f64> = Vec::new();
+    let mut seeded = 0usize;
+    // The state borrows the kernel; we intentionally `Box::leak` one
+    // kernel per coordinator (long-lived singleton, a few bytes) to get
+    // the `'static` lifetime the owning thread needs.
+    let mut state: Option<IncrementalKpca<'static>> = None;
+    let min_seed = if cfg.mean_adjust { cfg.seed_points.max(2) } else { cfg.seed_points.max(1) };
+
+    while let Ok(cmd) = rx.recv() {
+        match cmd {
+            Command::Ingest(x, reply) => {
+                let t0 = Instant::now();
+                if x.len() != dim {
+                    metrics.errors += 1;
+                    let _ = reply.send(Err(format!(
+                        "dimension mismatch: got {}, want {dim}",
+                        x.len()
+                    )));
+                    continue;
+                }
+                let result = if state.is_none() {
+                    // Seeding phase: buffer until the batch init.
+                    seed_buf.extend_from_slice(&x);
+                    seeded += 1;
+                    if seeded >= min_seed {
+                        let seed = Mat::from_vec(seeded, dim, seed_buf.clone());
+                        let k: &'static dyn Kernel =
+                            Box::leak(build_kernel(&cfg.kernel, &seed));
+                        match IncrementalKpca::from_batch(k, &seed, cfg.mean_adjust) {
+                            Ok(s) => {
+                                state = Some(s);
+                                Ok(IngestReply { accepted: true, m: seeded, seeding: false })
+                            }
+                            Err(e) => {
+                                metrics.errors += 1;
+                                Err(e)
+                            }
+                        }
+                    } else {
+                        Ok(IngestReply { accepted: true, m: seeded, seeding: true })
+                    }
+                } else {
+                    let st = state.as_mut().unwrap();
+                    match st.push_with(&x, &engine) {
+                        Ok(accepted) => {
+                            if accepted {
+                                metrics.accepted += 1;
+                                drift.on_accept(st);
+                            } else {
+                                metrics.excluded += 1;
+                            }
+                            Ok(IngestReply { accepted, m: st.len(), seeding: false })
+                        }
+                        Err(e) => {
+                            metrics.errors += 1;
+                            Err(e)
+                        }
+                    }
+                };
+                metrics.ingest_latency.record(t0.elapsed());
+                let _ = reply.send(result);
+            }
+            Command::Project(x, r, reply) => {
+                let t0 = Instant::now();
+                let result = match (&state, x.len() == dim) {
+                    (Some(st), true) => {
+                        // The kernel reference lives inside the state.
+                        Ok(st.project(st_kernel(st), &x, r))
+                    }
+                    (Some(_), false) => Err("dimension mismatch".to_string()),
+                    (None, _) => Err("not initialized (still seeding)".to_string()),
+                };
+                metrics.project_latency.record(t0.elapsed());
+                let _ = reply.send(result);
+            }
+            Command::MeasureDrift(reply) => {
+                let result = match &state {
+                    Some(st) => Ok(drift.measure(st)),
+                    None => Err("not initialized".to_string()),
+                };
+                let _ = reply.send(result);
+            }
+            Command::Snapshot(reply) => {
+                let snap = match &state {
+                    Some(st) => Snapshot {
+                        m: st.len(),
+                        dim,
+                        top_values: st.vals.iter().rev().take(10).copied().collect(),
+                        stats: st.stats,
+                        drift: drift.latest().copied(),
+                        engine_calls: engine.counts(),
+                    },
+                    None => Snapshot {
+                        m: seeded,
+                        dim,
+                        top_values: Vec::new(),
+                        stats: KpcaStats::default(),
+                        drift: None,
+                        engine_calls: engine.counts(),
+                    },
+                };
+                let _ = reply.send(snap);
+            }
+            Command::Metrics(reply) => {
+                let _ = reply.send(metrics.report());
+            }
+            Command::Shutdown => break,
+        }
+    }
+    state.map(|s| s.stats).unwrap_or_default()
+}
+
+/// Fetch the kernel a state was built over (stored by reference).
+fn st_kernel<'a>(st: &'a IncrementalKpca<'_>) -> &'a dyn Kernel {
+    st.kernel_ref()
+}
+
+/// Convenience: drift norms of a snapshot, if measured.
+pub fn snapshot_drift(snap: &Snapshot) -> Option<Norms> {
+    snap.drift.map(|d| d.norms)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::yeast_like;
+    use crate::data::SliceSource;
+
+    fn config() -> Config {
+        Config { seed_points: 6, drift_every: 4, ..Config::default() }
+    }
+
+    #[test]
+    fn end_to_end_stream_session() {
+        let ds = yeast_like(30, 1);
+        let dim = ds.dim();
+        let coord = Coordinator::spawn(config(), dim);
+        let mut src = SliceSource::new(ds);
+        let accepted = coord.ingest_stream(&mut src).unwrap();
+        assert_eq!(accepted, 30);
+        let snap = coord.snapshot().unwrap();
+        assert_eq!(snap.m, 30);
+        assert!(!snap.top_values.is_empty());
+        assert!(snap.drift.is_some());
+        assert!(snap.drift.unwrap().norms.frobenius < 1e-7);
+        let report = coord.metrics().unwrap();
+        assert_eq!(report.accepted as usize, 30 - 6); // post-seed accepts
+        let stats = coord.shutdown();
+        assert_eq!(stats.accepted, 30);
+    }
+
+    #[test]
+    fn projection_after_seeding() {
+        let ds = yeast_like(20, 2);
+        let dim = ds.dim();
+        let coord = Coordinator::spawn(config(), dim);
+        // Before seeding completes, projection errors cleanly.
+        assert!(coord.project(vec![0.1; dim], 2).is_err());
+        for i in 0..20 {
+            coord.ingest(ds.x.row(i).to_vec()).unwrap();
+        }
+        let scores = coord.project(vec![0.3; dim], 3).unwrap();
+        assert_eq!(scores.len(), 3);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn dimension_mismatch_rejected() {
+        let coord = Coordinator::spawn(config(), 4);
+        assert!(coord.ingest(vec![0.0; 3]).is_err());
+        let report = coord.metrics().unwrap();
+        assert_eq!(report.errors, 1);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn explicit_drift_measurement() {
+        let ds = yeast_like(12, 3);
+        let coord = Coordinator::spawn(Config { seed_points: 6, ..Config::default() }, ds.dim());
+        assert!(coord.measure_drift().is_err()); // not seeded yet
+        for i in 0..12 {
+            coord.ingest(ds.x.row(i).to_vec()).unwrap();
+        }
+        let d = coord.measure_drift().unwrap();
+        assert_eq!(d.m, 12);
+        assert!(d.norms.frobenius < 1e-8);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn shutdown_idempotent_under_drop() {
+        let coord = Coordinator::spawn(config(), 3);
+        drop(coord); // must not hang or panic
+    }
+}

@@ -1,0 +1,120 @@
+//! Datasets and streaming sources. The paper evaluates on the UCI
+//! *Magic gamma telescope* and *Yeast* datasets (§5); those files are
+//! not available in this offline environment, so `synthetic` provides
+//! statistically faithful generators (documented in DESIGN.md §3), and
+//! `csv` loads the real files when they are dropped into `data/`.
+
+pub mod csv;
+pub mod stream;
+pub mod synthetic;
+
+pub use stream::{SliceSource, StreamSource};
+pub use synthetic::{magic_like, yeast_like};
+
+use crate::linalg::Mat;
+
+/// A named dataset: dense rows of features.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    pub x: Mat,
+}
+
+impl Dataset {
+    pub fn n(&self) -> usize {
+        self.x.rows()
+    }
+    pub fn dim(&self) -> usize {
+        self.x.cols()
+    }
+
+    /// The leading `n` rows as a new dataset (paper §5.2 uses the first
+    /// 1000 observations).
+    pub fn head(&self, n: usize) -> Dataset {
+        Dataset { name: self.name.clone(), x: self.x.submatrix(n.min(self.n()), self.dim()) }
+    }
+
+    /// Rows permuted by `perm` (used for the 50-run averages in §5).
+    pub fn permuted(&self, perm: &[usize]) -> Dataset {
+        assert_eq!(perm.len(), self.n());
+        let x = Mat::from_fn(self.n(), self.dim(), |i, j| self.x[(perm[i], j)]);
+        Dataset { name: self.name.clone(), x }
+    }
+
+    /// Standardize each column to zero mean / unit variance (in place).
+    pub fn standardize(&mut self) {
+        let (n, d) = (self.n(), self.dim());
+        if n == 0 {
+            return;
+        }
+        for j in 0..d {
+            let mean: f64 = (0..n).map(|i| self.x[(i, j)]).sum::<f64>() / n as f64;
+            let var: f64 =
+                (0..n).map(|i| (self.x[(i, j)] - mean).powi(2)).sum::<f64>() / n as f64;
+            let sd = var.sqrt().max(1e-12);
+            for i in 0..n {
+                self.x[(i, j)] = (self.x[(i, j)] - mean) / sd;
+            }
+        }
+    }
+}
+
+/// Resolve a dataset by name: `magic` / `yeast` load the real UCI CSV
+/// from `data/` when present and otherwise fall back to the synthetic
+/// generator with the given size and seed.
+pub fn load(name: &str, n: usize, seed: u64) -> Result<Dataset, String> {
+    match name {
+        "magic" => {
+            if let Ok(ds) = csv::load_csv("data/magic04.data", "magic", Some(10)) {
+                Ok(ds.head(n))
+            } else {
+                Ok(magic_like(n, seed))
+            }
+        }
+        "yeast" => {
+            if let Ok(ds) = csv::load_csv("data/yeast.data", "yeast", Some(8)) {
+                Ok(ds.head(n))
+            } else {
+                Ok(yeast_like(n, seed))
+            }
+        }
+        other => Err(format!("unknown dataset '{other}' (expected magic|yeast)")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn head_and_permuted() {
+        let ds = magic_like(20, 1);
+        let h = ds.head(5);
+        assert_eq!(h.n(), 5);
+        assert_eq!(h.x.row(3), ds.x.row(3));
+        let perm: Vec<usize> = (0..20).rev().collect();
+        let p = ds.permuted(&perm);
+        assert_eq!(p.x.row(0), ds.x.row(19));
+    }
+
+    #[test]
+    fn standardize_zero_mean_unit_var() {
+        let mut ds = magic_like(200, 2);
+        ds.standardize();
+        for j in 0..ds.dim() {
+            let mean: f64 = (0..ds.n()).map(|i| ds.x[(i, j)]).sum::<f64>() / ds.n() as f64;
+            let var: f64 =
+                (0..ds.n()).map(|i| ds.x[(i, j)].powi(2)).sum::<f64>() / ds.n() as f64;
+            assert!(mean.abs() < 1e-10);
+            assert!((var - 1.0).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn load_falls_back_to_synthetic() {
+        let ds = load("magic", 50, 3).unwrap();
+        assert_eq!(ds.n(), 50);
+        assert_eq!(ds.dim(), 10);
+        assert!(load("nope", 10, 0).is_err());
+    }
+}

@@ -1,0 +1,118 @@
+//! Streaming-source abstraction: the paper's motivating setting is data
+//! arriving "sequentially in time" (§2.3). The coordinator pulls
+//! examples from a [`StreamSource`]; implementations here wrap in-memory
+//! datasets, optionally rate-limited to emulate a live feed.
+
+use std::time::Duration;
+
+use super::Dataset;
+
+/// A (possibly unbounded) stream of feature vectors.
+pub trait StreamSource: Send {
+    /// Dimensionality of the emitted vectors.
+    fn dim(&self) -> usize;
+    /// Next example, or `None` when the stream ends.
+    fn next_example(&mut self) -> Option<Vec<f64>>;
+    /// Examples remaining, if known.
+    fn remaining(&self) -> Option<usize>;
+}
+
+/// Streams the rows of a dataset in order.
+pub struct SliceSource {
+    ds: Dataset,
+    pos: usize,
+    /// Optional inter-arrival delay emulating a live feed.
+    pub delay: Option<Duration>,
+}
+
+impl SliceSource {
+    pub fn new(ds: Dataset) -> Self {
+        SliceSource { ds, pos: 0, delay: None }
+    }
+
+    pub fn with_delay(ds: Dataset, delay: Duration) -> Self {
+        SliceSource { ds, pos: 0, delay: Some(delay) }
+    }
+}
+
+impl StreamSource for SliceSource {
+    fn dim(&self) -> usize {
+        self.ds.dim()
+    }
+
+    fn next_example(&mut self) -> Option<Vec<f64>> {
+        if self.pos >= self.ds.n() {
+            return None;
+        }
+        if let Some(d) = self.delay {
+            std::thread::sleep(d);
+        }
+        let row = self.ds.x.row(self.pos).to_vec();
+        self.pos += 1;
+        Some(row)
+    }
+
+    fn remaining(&self) -> Option<usize> {
+        Some(self.ds.n() - self.pos)
+    }
+}
+
+/// Endless synthetic stream drawing fresh examples from a generator
+/// closure — used by soak/property tests of the coordinator.
+pub struct GeneratorSource<F: FnMut() -> Vec<f64> + Send> {
+    dim: usize,
+    gen: F,
+}
+
+impl<F: FnMut() -> Vec<f64> + Send> GeneratorSource<F> {
+    pub fn new(dim: usize, gen: F) -> Self {
+        GeneratorSource { dim, gen }
+    }
+}
+
+impl<F: FnMut() -> Vec<f64> + Send> StreamSource for GeneratorSource<F> {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+    fn next_example(&mut self) -> Option<Vec<f64>> {
+        let v = (self.gen)();
+        debug_assert_eq!(v.len(), self.dim);
+        Some(v)
+    }
+    fn remaining(&self) -> Option<usize> {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::yeast_like;
+
+    #[test]
+    fn slice_source_exhausts_in_order() {
+        let ds = yeast_like(5, 1);
+        let first = ds.x.row(0).to_vec();
+        let mut src = SliceSource::new(ds);
+        assert_eq!(src.remaining(), Some(5));
+        assert_eq!(src.next_example().unwrap(), first);
+        let mut count = 1;
+        while src.next_example().is_some() {
+            count += 1;
+        }
+        assert_eq!(count, 5);
+        assert_eq!(src.remaining(), Some(0));
+    }
+
+    #[test]
+    fn generator_source_never_ends() {
+        let mut k = 0.0;
+        let mut src = GeneratorSource::new(2, move || {
+            k += 1.0;
+            vec![k, -k]
+        });
+        assert_eq!(src.remaining(), None);
+        assert_eq!(src.next_example().unwrap(), vec![1.0, -1.0]);
+        assert_eq!(src.next_example().unwrap(), vec![2.0, -2.0]);
+    }
+}

@@ -1,0 +1,228 @@
+//! Figure 1 — drift of the incremental eigendecomposition: the three
+//! norms of `K'_{m} − U_m Λ_m U_mᵀ` as the eigensystem grows from
+//! `m₀ = 20`, on both datasets, for one run and the mean of `runs`
+//! shuffled-order runs (§5.1). Also records the `‖UUᵀ − I‖_F`
+//! orthogonality diagnostic (S1) and the excluded-example count.
+
+use std::io::Write;
+
+use crate::data::{load, Dataset};
+use crate::kernels::{median_heuristic, Rbf};
+use crate::kpca::IncrementalKpca;
+use crate::linalg::{orthogonality_defect, sym_norms, Norms};
+use crate::util::{par, Rng};
+
+use super::RunMode;
+
+#[derive(Clone, Debug)]
+pub struct Fig1Config {
+    pub datasets: Vec<String>,
+    /// Seed batch size (paper: 20).
+    pub m0: usize,
+    /// Final eigensystem size.
+    pub n_max: usize,
+    /// Shuffled repetitions for the mean curve (paper: 50).
+    pub runs: usize,
+    /// Measure drift every this many accepted points.
+    pub measure_every: usize,
+    /// Mean-adjusted (Algorithm 2) vs unadjusted (Algorithm 1).
+    pub mean_adjust: bool,
+    pub seed: u64,
+}
+
+impl Fig1Config {
+    pub fn new(mode: RunMode) -> Self {
+        match mode {
+            RunMode::Quick => Fig1Config {
+                datasets: vec!["magic".into(), "yeast".into()],
+                m0: 20,
+                n_max: 120,
+                runs: 5,
+                measure_every: 5,
+                mean_adjust: true,
+                seed: 42,
+            },
+            // Paper scale is m → full dataset with per-step measurement;
+            // on this single-core image we grow to 220 and sample every
+            // 10 steps — the drift-vs-m *shape* is unchanged (EXPERIMENTS.md).
+            RunMode::Full => Fig1Config {
+                datasets: vec!["magic".into(), "yeast".into()],
+                m0: 20,
+                n_max: 220,
+                runs: 50,
+                measure_every: 10,
+                mean_adjust: true,
+                seed: 42,
+            },
+        }
+    }
+}
+
+/// One measured point on a drift curve.
+#[derive(Clone, Copy, Debug)]
+pub struct DriftSample {
+    pub m: usize,
+    pub norms: Norms,
+    pub orthogonality: f64,
+}
+
+/// Drift curve for one (dataset, run).
+pub fn drift_curve(
+    ds: &Dataset,
+    cfg: &Fig1Config,
+    order: &[usize],
+) -> Result<(Vec<DriftSample>, usize), String> {
+    let shuffled = ds.permuted(order);
+    let sigma = median_heuristic(&shuffled.x, 200);
+    let kern = Rbf { sigma };
+    let seed = shuffled.x.submatrix(cfg.m0, shuffled.dim());
+    let mut inc = IncrementalKpca::from_batch(&kern, &seed, cfg.mean_adjust)?;
+    let mut samples = Vec::new();
+    let end = cfg.n_max.min(shuffled.n());
+    for i in cfg.m0..end {
+        inc.push(shuffled.x.row(i))?;
+        let step = i + 1 - cfg.m0;
+        if step % cfg.measure_every == 0 || i + 1 == end {
+            let diff = inc.reconstruct().sub(&inc.batch_reference());
+            samples.push(DriftSample {
+                m: inc.len(),
+                norms: sym_norms(&diff),
+                orthogonality: orthogonality_defect(&inc.vecs),
+            });
+        }
+    }
+    Ok((samples, inc.stats.excluded))
+}
+
+/// Run the full Figure-1 harness; returns (dataset, mean-curve) pairs.
+pub fn run_fig1(cfg: &Fig1Config) -> Result<Vec<(String, Vec<DriftSample>)>, String> {
+    let (mut csv, path) = super::csv_writer(
+        "fig1_drift.csv",
+        "dataset,adjusted,run,m,frobenius,spectral,trace,orthogonality",
+    )
+    .map_err(|e| e.to_string())?;
+    let mut out = Vec::new();
+    for name in &cfg.datasets {
+        let ds = load(name, cfg.n_max + cfg.m0, cfg.seed)?;
+        let mut std_ds = ds.clone();
+        std_ds.standardize();
+        // Run 0 is the in-order single run; runs 1.. are shuffled.
+        let orders: Vec<Vec<usize>> = (0..=cfg.runs)
+            .map(|r| {
+                if r == 0 {
+                    (0..std_ds.n()).collect()
+                } else {
+                    Rng::new(cfg.seed ^ (r as u64) << 16).permutation(std_ds.n())
+                }
+            })
+            .collect();
+        let curves: Vec<Result<(Vec<DriftSample>, usize), String>> =
+            par::par_map(orders.len(), 1, |r| drift_curve(&std_ds, cfg, &orders[r]));
+        let mut all = Vec::new();
+        for (r, c) in curves.into_iter().enumerate() {
+            let (samples, excluded) = c?;
+            if excluded > 0 {
+                println!("fig1 {name} run {r}: {excluded} examples excluded (§5.1)");
+            }
+            for s in &samples {
+                writeln!(
+                    csv,
+                    "{name},{},{r},{},{:.6e},{:.6e},{:.6e},{:.6e}",
+                    cfg.mean_adjust, s.m, s.norms.frobenius, s.norms.spectral, s.norms.trace,
+                    s.orthogonality
+                )
+                .map_err(|e| e.to_string())?;
+            }
+            all.push(samples);
+        }
+        // Mean over the shuffled runs (1..), matching the paper's plot.
+        let mean = mean_curve(&all[1..]);
+        print_summary(name, &all[0], &mean);
+        out.push((name.clone(), mean));
+    }
+    println!("fig1: wrote {}", path.display());
+    Ok(out)
+}
+
+fn mean_curve(runs: &[Vec<DriftSample>]) -> Vec<DriftSample> {
+    if runs.is_empty() || runs[0].is_empty() {
+        return Vec::new();
+    }
+    let npts = runs.iter().map(|r| r.len()).min().unwrap();
+    (0..npts)
+        .map(|i| {
+            let k = runs.len() as f64;
+            DriftSample {
+                m: runs[0][i].m,
+                norms: Norms {
+                    frobenius: runs.iter().map(|r| r[i].norms.frobenius).sum::<f64>() / k,
+                    spectral: runs.iter().map(|r| r[i].norms.spectral).sum::<f64>() / k,
+                    trace: runs.iter().map(|r| r[i].norms.trace).sum::<f64>() / k,
+                },
+                orthogonality: runs.iter().map(|r| r[i].orthogonality).sum::<f64>() / k,
+            }
+        })
+        .collect()
+}
+
+fn print_summary(name: &str, single: &[DriftSample], mean: &[DriftSample]) {
+    println!("── Fig. 1 drift: {name} ──");
+    println!("{:>6} {:>12} {:>12} {:>12} {:>12}", "m", "frobenius", "spectral", "trace", "‖UUᵀ−I‖");
+    for s in mean {
+        println!(
+            "{:>6} {:>12.3e} {:>12.3e} {:>12.3e} {:>12.3e}",
+            s.m, s.norms.frobenius, s.norms.spectral, s.norms.trace, s.orthogonality
+        );
+    }
+    if let (Some(f), Some(l)) = (single.first(), single.last()) {
+        println!(
+            "single run: frobenius {:.3e} @ m={} → {:.3e} @ m={}",
+            f.norms.frobenius, f.m, l.norms.frobenius, l.m
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_fig1_runs_and_drift_small() {
+        let cfg = Fig1Config {
+            datasets: vec!["yeast".into()],
+            m0: 8,
+            n_max: 24,
+            runs: 2,
+            measure_every: 4,
+            mean_adjust: true,
+            seed: 7,
+        };
+        let out = run_fig1(&cfg).unwrap();
+        assert_eq!(out.len(), 1);
+        let (_, mean) = &out[0];
+        assert!(!mean.is_empty());
+        // Exact algorithm at small scale: drift ≈ machine precision.
+        for s in mean {
+            assert!(s.norms.frobenius < 1e-7, "drift {:?}", s.norms);
+        }
+        // ms increase.
+        for w in mean.windows(2) {
+            assert!(w[0].m < w[1].m);
+        }
+    }
+
+    #[test]
+    fn unadjusted_variant_runs() {
+        let cfg = Fig1Config {
+            datasets: vec!["magic".into()],
+            m0: 6,
+            n_max: 18,
+            runs: 1,
+            measure_every: 3,
+            mean_adjust: false,
+            seed: 3,
+        };
+        let out = run_fig1(&cfg).unwrap();
+        assert_eq!(out[0].1.len(), 4);
+    }
+}

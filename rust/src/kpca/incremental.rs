@@ -1,0 +1,512 @@
+//! The paper's main contribution: incremental kernel PCA through rank
+//! one updates to the eigendecomposition of the kernel matrix
+//! (Algorithm 1, §3.1.1 — zero-mean) or the mean-adjusted kernel matrix
+//! (Algorithm 2, §3.1.2 — four rank-one updates per example, with the
+//! running sums `Σₘ` and `Kₘ𝟙ₘ` maintained incrementally).
+//!
+//! Two pseudocode typos in the paper are corrected here (both confirmed
+//! against the derivation in the surrounding text and by the exactness
+//! tests below):
+//!   * Algorithm 1 line 2 / Algorithm 2 line 14 write the new
+//!     eigenvector diagonal entry as `k/4`; the expansion of eq. (2)
+//!     requires the unit entry `1` (the *eigenvalue* is `k/4`).
+//!   * Algorithm 2 line 4 writes `K1/(m(m+1))²`; the derivation defines
+//!     `u = Kₘ𝟙ₘ/(m(m+1)) − a/(m+1) + ½C𝟙ₘ`.
+
+use crate::kernels::{kernel_column, Kernel};
+use crate::linalg::Mat;
+use crate::rankone::{expand_eigensystem, rank_one_update, NativeRotate, Rotate, UpdateStats};
+
+/// Aggregated per-stream statistics (reported by §5.1 experiments and
+/// the coordinator metrics endpoint).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct KpcaStats {
+    /// Data examples accepted into the eigensystem.
+    pub accepted: usize,
+    /// Examples excluded due to near rank-deficiency (§5.1).
+    pub excluded: usize,
+    /// Total deflated eigenpairs across all rank-one updates.
+    pub deflated: usize,
+    /// Total deflation Givens rotations.
+    pub rotations: usize,
+    /// Rank-one updates performed (2 per step unadjusted, 4 adjusted).
+    pub updates: usize,
+}
+
+impl KpcaStats {
+    fn absorb(&mut self, s: UpdateStats) {
+        self.deflated += s.deflated;
+        self.rotations += s.rotations;
+        self.updates += 1;
+    }
+}
+
+/// Incremental kernel PCA state: the eigendecomposition of the
+/// (adjusted) kernel matrix over all points seen so far, plus the
+/// running sums Algorithm 2 needs. Memory is `O(m²)` — the kernel
+/// matrix itself is never stored (paper §3.1.2).
+#[derive(Clone)]
+pub struct IncrementalKpca<'k> {
+    kernel: &'k dyn Kernel,
+    /// Whether to maintain the eigensystem of `K'` (Algorithm 2) rather
+    /// than `K` (Algorithm 1).
+    pub mean_adjust: bool,
+    /// Retained data examples, row-major (`m × dim`).
+    x: Vec<f64>,
+    dim: usize,
+    m: usize,
+    /// Eigenvalues, ascending.
+    pub vals: Vec<f64>,
+    /// Eigenvectors, one column per eigenvalue.
+    pub vecs: Mat,
+    /// `Σₘ = 𝟙ᵀ Kₘ 𝟙` — running total of the *unadjusted* kernel matrix.
+    s: f64,
+    /// `K1 = Kₘ 𝟙ₘ` — running row sums of the unadjusted kernel matrix.
+    k1: Vec<f64>,
+    /// Threshold on the new centered diagonal `v₀` below which an
+    /// example is excluded as rank-deficient (§5.1).
+    pub exclude_tol: f64,
+    /// Ablation: use the paper's literal re-centering split
+    /// `½(𝟙±u)(𝟙±u)ᵀ` instead of the norm-balanced one (see
+    /// `push_adjusted`) — reproduces the paper's §5.1 drift behaviour.
+    pub naive_recenter_split: bool,
+    pub stats: KpcaStats,
+}
+
+impl<'k> IncrementalKpca<'k> {
+    /// Start from a batch eigendecomposition of the first
+    /// `x0.rows()` examples (the paper's experiments start at m₀ = 20).
+    /// `x0` may have zero rows for Algorithm 1 (cold start); Algorithm 2
+    /// requires at least 2 initial points (the 1-point centered matrix
+    /// is identically zero).
+    pub fn from_batch(
+        kernel: &'k dyn Kernel,
+        x0: &Mat,
+        mean_adjust: bool,
+    ) -> Result<Self, String> {
+        let m = x0.rows();
+        if mean_adjust && m < 2 {
+            return Err("mean-adjusted incremental KPCA needs ≥ 2 seed points".into());
+        }
+        let dim = x0.cols();
+        let mut state = IncrementalKpca {
+            kernel,
+            mean_adjust,
+            x: x0.as_slice().to_vec(),
+            dim,
+            m,
+            vals: Vec::new(),
+            vecs: Mat::zeros(0, 0),
+            s: 0.0,
+            k1: Vec::new(),
+            exclude_tol: 1e-12,
+            naive_recenter_split: false,
+            stats: KpcaStats::default(),
+        };
+        if m > 0 {
+            let k = crate::kernels::gram(kernel, x0);
+            let fit = super::batch::BatchKpca::fit_gram(k.clone(), mean_adjust)?;
+            state.vals = fit.values;
+            state.vecs = fit.vectors;
+            state.s = k.as_slice().iter().sum();
+            state.k1 = (0..m).map(|i| k.row(i).iter().sum()).collect();
+        }
+        state.stats.accepted = m;
+        Ok(state)
+    }
+
+    /// The kernel this state evaluates.
+    pub fn kernel_ref(&self) -> &'k dyn Kernel {
+        self.kernel
+    }
+
+    /// Number of examples currently in the eigensystem.
+    pub fn len(&self) -> usize {
+        self.m
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.m == 0
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// View of the retained data as a matrix.
+    pub fn data(&self) -> Mat {
+        Mat::from_vec(self.m, self.dim, self.x.clone())
+    }
+
+    /// Row `i` of the retained data.
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.x[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// Ingest one example with the default native rotation engine.
+    pub fn push(&mut self, xnew: &[f64]) -> Result<bool, String> {
+        self.push_with(xnew, &NativeRotate)
+    }
+
+    /// Ingest one example, routing the `2m³` back-rotations through
+    /// `engine`. Returns `Ok(false)` when the example was excluded as
+    /// rank-deficient rather than accepted.
+    pub fn push_with(&mut self, xnew: &[f64], engine: &dyn Rotate) -> Result<bool, String> {
+        assert_eq!(xnew.len(), self.dim, "dimension mismatch");
+        if self.m == 0 {
+            return self.bootstrap_first(xnew);
+        }
+        let xmat = Mat::from_vec(self.m, self.dim, self.x.clone());
+        let a = kernel_column(self.kernel, &xmat, self.m, xnew);
+        let knew = self.kernel.eval(xnew, xnew);
+        if self.mean_adjust {
+            self.push_adjusted(xnew, &a, knew, engine)
+        } else {
+            self.push_unadjusted(xnew, &a, knew, engine)
+        }
+    }
+
+    /// First point of a cold-started (unadjusted) stream: the 1×1
+    /// eigensystem is immediate.
+    fn bootstrap_first(&mut self, xnew: &[f64]) -> Result<bool, String> {
+        if self.mean_adjust {
+            return Err("mean-adjusted stream cannot cold-start from m=0".into());
+        }
+        let knew = self.kernel.eval(xnew, xnew);
+        self.x.extend_from_slice(xnew);
+        self.m = 1;
+        self.vals = vec![knew];
+        self.vecs = Mat::eye(1);
+        self.s = knew;
+        self.k1 = vec![knew];
+        self.stats.accepted += 1;
+        Ok(true)
+    }
+
+    /// Algorithm 1: expansion + two rank-one updates (eq. 2).
+    fn push_unadjusted(
+        &mut self,
+        xnew: &[f64],
+        a: &[f64],
+        knew: f64,
+        engine: &dyn Rotate,
+    ) -> Result<bool, String> {
+        if knew.abs() <= self.exclude_tol {
+            self.stats.excluded += 1;
+            return Ok(false);
+        }
+        // L ← [L  k/4];  U ← diag(U, 1)   [Algorithm 1, lines 1–2]
+        expand_eigensystem(&mut self.vals, &mut self.vecs, 0.25 * knew);
+        let sigma = 4.0 / knew; // line 3
+        let mut v1 = a.to_vec();
+        v1.push(0.5 * knew); // line 4
+        let mut v2 = a.to_vec();
+        v2.push(0.25 * knew); // line 5
+        let s1 = rank_one_update(&mut self.vals, &mut self.vecs, sigma, &v1, engine)?;
+        self.stats.absorb(s1); // line 6
+        let s2 = rank_one_update(&mut self.vals, &mut self.vecs, -sigma, &v2, engine)?;
+        self.stats.absorb(s2); // line 7
+
+        // Maintain running sums so a later switch to Nyström rescaling
+        // (or to the adjusted algorithm's bookkeeping) stays cheap.
+        let asum: f64 = a.iter().sum();
+        self.s += 2.0 * asum + knew;
+        for (k1i, ai) in self.k1.iter_mut().zip(a) {
+            *k1i += ai;
+        }
+        self.k1.push(asum + knew);
+        self.x.extend_from_slice(xnew);
+        self.m += 1;
+        self.stats.accepted += 1;
+        Ok(true)
+    }
+
+    /// Algorithm 2: two re-centering updates, then expansion + two more
+    /// rank-one updates (eq. 3).
+    fn push_adjusted(
+        &mut self,
+        xnew: &[f64],
+        a: &[f64],
+        knew: f64,
+        engine: &dyn Rotate,
+    ) -> Result<bool, String> {
+        let m = self.m;
+        let mf = m as f64;
+        let asum: f64 = a.iter().sum();
+
+        // Lines 2–4: running sums and the mean-shift vector u.
+        let s2 = self.s + 2.0 * asum + knew;
+        let c = -self.s / (mf * mf) + s2 / ((mf + 1.0) * (mf + 1.0));
+        let u: Vec<f64> = (0..m)
+            .map(|i| self.k1[i] / (mf * (mf + 1.0)) - a[i] / (mf + 1.0) + 0.5 * c)
+            .collect();
+
+        // Lines 7–10 (hoisted): the centered new row/column over the
+        // m+1 points, v = k − (𝟙𝟙ᵀk + K𝟙 − Σ/(m+1)·𝟙)/(m+1). Computed
+        // *before* any eigensystem mutation so the §5.1 exclusion below
+        // can reject the example without corrupting state.
+        let mut k1_next = self.k1.clone();
+        for (k1i, ai) in k1_next.iter_mut().zip(a) {
+            *k1i += ai;
+        }
+        k1_next.push(asum + knew);
+        let m1f = mf + 1.0;
+        let ksum = asum + knew; // 𝟙ᵀ[a; k]
+        let mut kvec = a.to_vec();
+        kvec.push(knew);
+        let v: Vec<f64> = (0..m + 1)
+            .map(|i| kvec[i] - (ksum + k1_next[i] - s2 / m1f) / m1f)
+            .collect();
+        let v0 = v[m];
+
+        // §5.1: a non-positive centered diagonal signals (near-)rank
+        // deficiency — the expanded matrix cannot stay SPSD. Exclude.
+        if v0 <= self.exclude_tol {
+            self.stats.excluded += 1;
+            return Ok(false);
+        }
+
+        // Lines 5–6: K'' = K' + 𝟙uᵀ + u𝟙ᵀ as two symmetric rank-one
+        // updates. The paper splits as ½(𝟙+u)(·)ᵀ − ½(𝟙−u)(·)ᵀ, whose
+        // terms have norm² ≈ m and nearly cancel — each update is only
+        // accurate relative to its own O(m) scale, so the small net
+        // change loses ~ε·m absolute accuracy per step. We use the
+        // norm-balanced equivalent (γ𝟙 ± u/γ) with γ² = ‖u‖/‖𝟙‖, which
+        // shrinks the cancelling mass to O(‖u‖√m) — same identity
+        // ((a+b)(a+b)ᵀ − (a−b)(a−b)ᵀ = 2(abᵀ+baᵀ)), ~100× less drift on
+        // fast-decaying spectra. (The paper explicitly invites swapping
+        // the rank-one update "for potentially improved accuracy".)
+        let unorm = crate::linalg::norm2(&u);
+        if unorm > 0.0 {
+            let gamma = if self.naive_recenter_split {
+                1.0 // the paper's literal (𝟙±u) split
+            } else {
+                (unorm / mf.sqrt()).sqrt()
+            };
+            let vp: Vec<f64> = u.iter().map(|ui| gamma + ui / gamma).collect();
+            let vm: Vec<f64> = u.iter().map(|ui| gamma - ui / gamma).collect();
+            let st = rank_one_update(&mut self.vals, &mut self.vecs, 0.5, &vp, engine)?;
+            self.stats.absorb(st);
+            let st = rank_one_update(&mut self.vals, &mut self.vecs, -0.5, &vm, engine)?;
+            self.stats.absorb(st);
+        }
+
+        // Lines 13–17: expansion and the two final updates (eq. 3).
+        expand_eigensystem(&mut self.vals, &mut self.vecs, 0.25 * v0);
+        let sigma = 4.0 / v0;
+        let mut v1 = v[..m].to_vec();
+        v1.push(0.5 * v0);
+        let mut v2 = v[..m].to_vec();
+        v2.push(0.25 * v0);
+        let st = rank_one_update(&mut self.vals, &mut self.vecs, sigma, &v1, engine)?;
+        self.stats.absorb(st);
+        let st = rank_one_update(&mut self.vals, &mut self.vecs, -sigma, &v2, engine)?;
+        self.stats.absorb(st);
+
+        // Commit state only after all updates succeeded.
+        self.s = s2;
+        self.k1 = k1_next;
+        self.x.extend_from_slice(xnew);
+        self.m += 1;
+        self.stats.accepted += 1;
+        Ok(true)
+    }
+
+    /// Reconstruction `U Λ Uᵀ` of the tracked (adjusted) kernel matrix —
+    /// the quantity compared against the batch matrix in Fig. 1.
+    pub fn reconstruct(&self) -> Mat {
+        let n = self.vals.len();
+        let mut vl = self.vecs.clone();
+        for i in 0..n {
+            for j in 0..n {
+                vl[(i, j)] *= self.vals[j];
+            }
+        }
+        crate::linalg::matmul_nt(&vl, &self.vecs)
+    }
+
+    /// Batch-recomputed ground truth of the tracked matrix (drift
+    /// reference; `O(m³)` — for experiments, not the hot path).
+    pub fn batch_reference(&self) -> Mat {
+        let xmat = self.data();
+        let k = crate::kernels::gram(self.kernel, &xmat);
+        if self.mean_adjust {
+            super::centering::center_gram(&k)
+        } else {
+            k
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{magic_like, yeast_like};
+    use crate::kernels::{Linear, Rbf};
+    use crate::linalg::orthogonality_defect;
+
+    #[test]
+    fn unadjusted_matches_batch_exactly() {
+        let ds = yeast_like(24, 1);
+        let kern = Rbf { sigma: 1.0 };
+        let seed = ds.x.submatrix(4, ds.dim());
+        let mut inc = IncrementalKpca::from_batch(&kern, &seed, false).unwrap();
+        for i in 4..ds.n() {
+            assert!(inc.push(ds.x.row(i)).unwrap());
+        }
+        let drift = inc.reconstruct().max_abs_diff(&inc.batch_reference());
+        assert!(drift < 1e-8, "drift {drift}");
+        assert!(orthogonality_defect(&inc.vecs) < 1e-9);
+    }
+
+    #[test]
+    fn adjusted_matches_batch_exactly() {
+        let ds = yeast_like(20, 2);
+        let kern = Rbf { sigma: 1.0 };
+        let seed = ds.x.submatrix(5, ds.dim());
+        let mut inc = IncrementalKpca::from_batch(&kern, &seed, true).unwrap();
+        for i in 5..ds.n() {
+            inc.push(ds.x.row(i)).unwrap();
+        }
+        assert_eq!(inc.len(), 20);
+        let drift = inc.reconstruct().max_abs_diff(&inc.batch_reference());
+        assert!(drift < 1e-8, "drift {drift}");
+        assert!(orthogonality_defect(&inc.vecs) < 1e-9);
+    }
+
+    #[test]
+    fn adjusted_heavy_tailed_data() {
+        let mut ds = magic_like(18, 3);
+        ds.standardize();
+        let kern = Rbf { sigma: crate::kernels::median_heuristic(&ds.x, 100) };
+        let seed = ds.x.submatrix(6, ds.dim());
+        let mut inc = IncrementalKpca::from_batch(&kern, &seed, true).unwrap();
+        for i in 6..ds.n() {
+            inc.push(ds.x.row(i)).unwrap();
+        }
+        let drift = inc.reconstruct().max_abs_diff(&inc.batch_reference());
+        assert!(drift < 1e-7, "drift {drift}");
+    }
+
+    #[test]
+    fn cold_start_unadjusted_from_zero() {
+        let ds = yeast_like(10, 4);
+        let kern = Rbf { sigma: 1.0 };
+        let empty = Mat::zeros(0, ds.dim());
+        let mut inc = IncrementalKpca::from_batch(&kern, &empty, false).unwrap();
+        for i in 0..ds.n() {
+            inc.push(ds.x.row(i)).unwrap();
+        }
+        assert_eq!(inc.len(), 10);
+        let drift = inc.reconstruct().max_abs_diff(&inc.batch_reference());
+        assert!(drift < 1e-9, "drift {drift}");
+    }
+
+    #[test]
+    fn adjusted_requires_two_seed_points() {
+        let kern = Rbf { sigma: 1.0 };
+        let one = Mat::zeros(1, 3);
+        assert!(IncrementalKpca::from_batch(&kern, &one, true).is_err());
+    }
+
+    #[test]
+    fn duplicate_point_survives_via_deflation() {
+        // A repeated example makes K' singular (two identical rows); the
+        // deflation path must absorb it without error and stay exact.
+        let ds = yeast_like(6, 5);
+        let kern = Rbf { sigma: 1.0 };
+        let seed = ds.x.submatrix(5, ds.dim());
+        let mut inc = IncrementalKpca::from_batch(&kern, &seed, true).unwrap();
+        let dup = ds.x.row(2).to_vec();
+        assert!(inc.push(&dup).unwrap());
+        assert!(inc.push(ds.x.row(5)).unwrap());
+        let drift = inc.reconstruct().max_abs_diff(&inc.batch_reference());
+        assert!(drift < 1e-7, "drift {drift}");
+    }
+
+    #[test]
+    fn mean_point_excluded_when_adjusted() {
+        // With the linear kernel the feature mean is the data mean, so a
+        // new point AT the mean has centered diagonal v₀ = 0 → the §5.1
+        // exclusion path must fire rather than dividing by v₀.
+        let ds = yeast_like(8, 9);
+        let kern = Linear;
+        let seed = ds.x.submatrix(8, ds.dim());
+        let mut inc = IncrementalKpca::from_batch(&kern, &seed, true).unwrap();
+        let mean: Vec<f64> =
+            (0..ds.dim()).map(|j| (0..8).map(|i| ds.x[(i, j)]).sum::<f64>() / 8.0).collect();
+        let accepted = inc.push(&mean).unwrap();
+        assert!(!accepted);
+        assert_eq!(inc.stats.excluded, 1);
+        assert_eq!(inc.len(), 8);
+        // State is untouched and still exact.
+        let drift = inc.reconstruct().max_abs_diff(&inc.batch_reference());
+        assert!(drift < 1e-9);
+    }
+
+    #[test]
+    fn eigenvalues_stay_sorted_and_nonnegative() {
+        let ds = yeast_like(16, 6);
+        let kern = Rbf { sigma: 2.0 };
+        let seed = ds.x.submatrix(4, ds.dim());
+        let mut inc = IncrementalKpca::from_batch(&kern, &seed, true).unwrap();
+        for i in 4..ds.n() {
+            inc.push(ds.x.row(i)).unwrap();
+            for w in inc.vals.windows(2) {
+                assert!(w[0] <= w[1] + 1e-12);
+            }
+            // Centered PSD matrix: eigenvalues ≥ −tol.
+            assert!(inc.vals[0] > -1e-8);
+        }
+    }
+
+    #[test]
+    fn linear_kernel_nonconstant_diagonal() {
+        // Exercises Algorithm 1 without the k(x,x)=1 simplification.
+        let ds = magic_like(12, 7);
+        let kern = Linear;
+        let mut dstd = ds.clone();
+        dstd.standardize();
+        let seed = dstd.x.submatrix(3, dstd.dim());
+        let mut inc = IncrementalKpca::from_batch(&kern, &seed, false).unwrap();
+        for i in 3..dstd.n() {
+            inc.push(dstd.x.row(i)).unwrap();
+        }
+        let drift = inc.reconstruct().max_abs_diff(&inc.batch_reference());
+        assert!(drift < 1e-8, "drift {drift}");
+    }
+
+    #[test]
+    fn stats_count_updates() {
+        let ds = yeast_like(8, 8);
+        let kern = Rbf { sigma: 1.0 };
+        let seed = ds.x.submatrix(4, ds.dim());
+        let mut inc = IncrementalKpca::from_batch(&kern, &seed, true).unwrap();
+        for i in 4..8 {
+            inc.push(ds.x.row(i)).unwrap();
+        }
+        // 4 rank-one updates per accepted adjusted step.
+        assert_eq!(inc.stats.updates, 16);
+        assert_eq!(inc.stats.accepted, 8);
+    }
+
+    #[test]
+    fn property_incremental_equals_batch() {
+        crate::util::prop::check("incremental-equals-batch", 8, |rng| {
+            let n = 8 + rng.below(10);
+            let seed_n = 3 + rng.below(3);
+            let ds = yeast_like(n, rng.next_u64());
+            let sigma = rng.range(0.5, 3.0);
+            let kern = Rbf { sigma };
+            let adjust = rng.uniform() < 0.5;
+            let seed = ds.x.submatrix(seed_n, ds.dim());
+            let mut inc = IncrementalKpca::from_batch(&kern, &seed, adjust)
+                .map_err(|e| e.to_string())?;
+            for i in seed_n..n {
+                inc.push(ds.x.row(i)).map_err(|e| e.to_string())?;
+            }
+            let drift = inc.reconstruct().max_abs_diff(&inc.batch_reference());
+            crate::util::prop::ensure(drift < 1e-7, || format!("drift {drift}"))
+        });
+    }
+}

@@ -1,0 +1,17 @@
+//! Kernel PCA: the batch baseline (§2.2), the feature-space centering
+//! transform (eq. 1), the paper's incremental Algorithms 1 & 2 (§3.1)
+//! and component projection for scoring new points.
+
+pub mod batch;
+pub mod centering;
+pub mod incremental;
+pub mod krr;
+pub mod projection;
+pub mod topk;
+
+pub use batch::BatchKpca;
+pub use centering::{center_column, center_gram};
+pub use incremental::{IncrementalKpca, KpcaStats};
+pub use krr::IncrementalKrr;
+pub use projection::project_point;
+pub use topk::TopKKpca;

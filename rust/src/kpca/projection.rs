@@ -1,0 +1,155 @@
+//! Projection of new points onto kernel principal components (§2.2):
+//! the feature-space eigenvector is `vᵢ = Φᵀuᵢ/√λᵢ`, so the score of a
+//! point `y` on component `i` is `⟨φ(y), vᵢ⟩ = (uᵢᵀ k_y)/√λᵢ` with
+//! `k_y[j] = k(xⱼ, y)` (centered consistently when the model is
+//! mean-adjusted).
+
+use crate::kernels::{kernel_column, Kernel};
+use crate::linalg::Mat;
+
+use super::centering::center_column;
+use super::incremental::IncrementalKpca;
+
+/// Project `y` onto the top `r` principal components of a fitted
+/// eigensystem over training data `x` with (adjusted) eigenpairs
+/// `(vals ascending, vecs)`. `k` is the *uncentered* training Gram
+/// matrix, needed for centering the new column; pass `None` when the
+/// model is unadjusted.
+pub fn project_point(
+    kernel: &dyn Kernel,
+    x: &Mat,
+    vals: &[f64],
+    vecs: &Mat,
+    k_uncentered: Option<&Mat>,
+    y: &[f64],
+    r: usize,
+) -> Vec<f64> {
+    let m = x.rows();
+    let ky = kernel_column(kernel, x, m, y);
+    let col = match k_uncentered {
+        Some(k) => center_column(k, &ky),
+        None => ky,
+    };
+    // Top components are at the END of the ascending eigenvalue order.
+    let n = vals.len();
+    let r = r.min(n);
+    let mut scores = Vec::with_capacity(r);
+    for c in 0..r {
+        let idx = n - 1 - c;
+        let lam = vals[idx];
+        if lam <= 1e-12 {
+            scores.push(0.0);
+            continue;
+        }
+        let mut dot = 0.0;
+        for j in 0..m {
+            dot += vecs[(j, idx)] * col[j];
+        }
+        scores.push(dot / lam.sqrt());
+    }
+    scores
+}
+
+impl<'k> IncrementalKpca<'k> {
+    /// Project a new point onto the current top-`r` components.
+    /// For mean-adjusted models this recomputes the uncentered Gram
+    /// (`O(m²)` kernel evaluations) — acceptable for scoring paths;
+    /// the coordinator caches it per snapshot.
+    pub fn project(&self, kernel: &dyn Kernel, y: &[f64], r: usize) -> Vec<f64> {
+        let x = self.data();
+        let k = if self.mean_adjust {
+            Some(crate::kernels::gram(kernel, &x))
+        } else {
+            None
+        };
+        project_point(kernel, &x, &self.vals, &self.vecs, k.as_ref(), y, r)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::yeast_like;
+    use crate::kernels::{gram, Rbf};
+    use crate::kpca::batch::BatchKpca;
+
+    /// Projections of training points must reproduce the eigen-scores:
+    /// projecting xⱼ on component i gives √λᵢ · uᵢⱼ.
+    #[test]
+    fn training_point_projection_consistency() {
+        let ds = yeast_like(12, 1);
+        let kern = Rbf { sigma: 1.0 };
+        let model = BatchKpca::fit(&kern, &ds.x, false).unwrap();
+        let n = ds.n();
+        let y = ds.x.row(4);
+        let scores = project_point(&kern, &ds.x, &model.values, &model.vectors, None, y, 3);
+        for c in 0..3 {
+            let idx = n - 1 - c;
+            let expect = model.values[idx].sqrt() * model.vectors[(4, idx)];
+            assert!(
+                (scores[c] - expect).abs() < 1e-9,
+                "component {c}: {} vs {expect}",
+                scores[c]
+            );
+        }
+    }
+
+    #[test]
+    fn centered_projection_consistency() {
+        let ds = yeast_like(10, 2);
+        let kern = Rbf { sigma: 1.0 };
+        let model = BatchKpca::fit(&kern, &ds.x, true).unwrap();
+        let k = gram(&kern, &ds.x);
+        let y = ds.x.row(7);
+        let scores =
+            project_point(&kern, &ds.x, &model.values, &model.vectors, Some(&k), y, 2);
+        let n = ds.n();
+        for c in 0..2 {
+            let idx = n - 1 - c;
+            let expect = model.values[idx].sqrt() * model.vectors[(7, idx)];
+            assert!((scores[c] - expect).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn incremental_projection_matches_batch() {
+        let ds = yeast_like(14, 3);
+        let kern = Rbf { sigma: 1.0 };
+        let seed = ds.x.submatrix(6, ds.dim());
+        let mut inc =
+            crate::kpca::IncrementalKpca::from_batch(&kern, &seed, true).unwrap();
+        for i in 6..ds.n() {
+            inc.push(ds.x.row(i)).unwrap();
+        }
+        let batch = BatchKpca::fit(&kern, &ds.x, true).unwrap();
+        let k = gram(&kern, &ds.x);
+        let probe = vec![0.4; ds.dim()];
+        let si = inc.project(&kern, &probe, 3);
+        let sb =
+            project_point(&kern, &ds.x, &batch.values, &batch.vectors, Some(&k), &probe, 3);
+        for (a, b) in si.iter().zip(sb.iter()) {
+            // Eigenvector sign is arbitrary — compare magnitudes.
+            assert!((a.abs() - b.abs()).abs() < 1e-7, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn zero_eigenvalue_components_score_zero() {
+        let ds = yeast_like(6, 4);
+        let kern = Rbf { sigma: 1.0 };
+        let model = BatchKpca::fit(&kern, &ds.x, true).unwrap();
+        let k = gram(&kern, &ds.x);
+        let scores = project_point(
+            &kern,
+            &ds.x,
+            &model.values,
+            &model.vectors,
+            Some(&k),
+            ds.x.row(0),
+            6,
+        );
+        // The centered Gram has rank ≤ n−1: the last component is null.
+        assert_eq!(scores.len(), 6);
+        assert_eq!(scores[5], 0.0);
+    }
+}

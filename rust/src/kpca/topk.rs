@@ -1,0 +1,236 @@
+//! The paper's §6 extension, implemented: "it could be straightforward
+//! to adapt the proposed algorithm for incremental kernel PCA to only
+//! maintain a subset of the eigenvectors and eigenvalues." This tracker
+//! runs Algorithm 2's four rank-one updates against a rectangular
+//! `m × r` eigenvector matrix — the perturbations are projected onto
+//! the tracked dominant subspace — and truncates back to `r` after each
+//! expansion. Unlike the Hoegaerts baseline it carries the *mean
+//! adjustment*, which their tracker does not support.
+
+use crate::kernels::{kernel_column, Kernel};
+use crate::linalg::Mat;
+use crate::rankone::{rank_one_update, sort_pairs, NativeRotate, Rotate};
+
+/// Top-`r` mean-adjusted incremental kernel PCA.
+#[derive(Clone)]
+pub struct TopKKpca<'k> {
+    kernel: &'k dyn Kernel,
+    x: Vec<f64>,
+    dim: usize,
+    m: usize,
+    /// Dominant eigenpairs retained.
+    pub r: usize,
+    /// Tracked eigenvalues (ascending, length ≤ r).
+    pub vals: Vec<f64>,
+    /// Tracked eigenvectors (`m × len(vals)`).
+    pub vecs: Mat,
+    /// Running sums of the *unadjusted* kernel matrix (as Algorithm 2).
+    s: f64,
+    k1: Vec<f64>,
+}
+
+impl<'k> TopKKpca<'k> {
+    /// Seed from a batch fit of the first points, keeping the top `r`.
+    pub fn from_batch(kernel: &'k dyn Kernel, x0: &Mat, r: usize) -> Result<Self, String> {
+        let m = x0.rows();
+        if m < 2 || r == 0 {
+            return Err("topk needs ≥ 2 seed points and r ≥ 1".into());
+        }
+        let k = crate::kernels::gram(kernel, x0);
+        let fit = super::batch::BatchKpca::fit_gram(k.clone(), true)?;
+        let keep = r.min(m);
+        let first = m - keep;
+        let mut vecs = Mat::zeros(m, keep);
+        let mut vals = Vec::with_capacity(keep);
+        for (c, j) in (first..m).enumerate() {
+            vals.push(fit.values[j]);
+            for i in 0..m {
+                vecs[(i, c)] = fit.vectors[(i, j)];
+            }
+        }
+        let k1: Vec<f64> = (0..m).map(|i| k.row(i).iter().sum()).collect();
+        let s = k1.iter().sum();
+        Ok(TopKKpca { kernel, x: x0.as_slice().to_vec(), dim: x0.cols(), m, r, vals, vecs, s, k1 })
+    }
+
+    pub fn len(&self) -> usize {
+        self.m
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.m == 0
+    }
+
+    /// Ingest one example (Algorithm 2 steps projected on the tracked
+    /// subspace, then truncation).
+    pub fn push(&mut self, xnew: &[f64]) -> Result<(), String> {
+        self.push_with(xnew, &NativeRotate)
+    }
+
+    pub fn push_with(&mut self, xnew: &[f64], engine: &dyn Rotate) -> Result<(), String> {
+        assert_eq!(xnew.len(), self.dim);
+        let m = self.m;
+        let mf = m as f64;
+        let xmat = Mat::from_vec(m, self.dim, self.x.clone());
+        let a = kernel_column(self.kernel, &xmat, m, xnew);
+        let knew = self.kernel.eval(xnew, xnew);
+        let asum: f64 = a.iter().sum();
+
+        // Algorithm 2 lines 2–4 (running sums, mean-shift vector).
+        let s2 = self.s + 2.0 * asum + knew;
+        let c = -self.s / (mf * mf) + s2 / ((mf + 1.0) * (mf + 1.0));
+        let u: Vec<f64> = (0..m)
+            .map(|i| self.k1[i] / (mf * (mf + 1.0)) - a[i] / (mf + 1.0) + 0.5 * c)
+            .collect();
+        let unorm = crate::linalg::norm2(&u);
+        if unorm > 0.0 {
+            let gamma = (unorm / mf.sqrt()).sqrt();
+            let vp: Vec<f64> = u.iter().map(|ui| gamma + ui / gamma).collect();
+            let vm: Vec<f64> = u.iter().map(|ui| gamma - ui / gamma).collect();
+            rank_one_update(&mut self.vals, &mut self.vecs, 0.5, &vp, engine)?;
+            rank_one_update(&mut self.vals, &mut self.vecs, -0.5, &vm, engine)?;
+        }
+
+        // Centered new row/column over m+1 points (lines 7–12).
+        let mut k1n = self.k1.clone();
+        for (k1i, ai) in k1n.iter_mut().zip(&a) {
+            *k1i += ai;
+        }
+        k1n.push(asum + knew);
+        let m1f = mf + 1.0;
+        let ksum = asum + knew;
+        let mut kvec = a.clone();
+        kvec.push(knew);
+        let v: Vec<f64> = (0..m + 1)
+            .map(|i| kvec[i] - (ksum + k1n[i] - s2 / m1f) / m1f)
+            .collect();
+        let v0 = v[m];
+        if v0 <= 1e-12 {
+            // Rank-deficient example — excluded (§5.1); running sums are
+            // not committed either.
+            return Ok(());
+        }
+
+        // Expansion on the rectangular system + the two final updates.
+        let cols = self.vals.len();
+        let mut grown = Mat::zeros(m + 1, cols + 1);
+        for i in 0..m {
+            for j in 0..cols {
+                grown[(i, j)] = self.vecs[(i, j)];
+            }
+        }
+        grown[(m, cols)] = 1.0;
+        self.vecs = grown;
+        self.vals.push(0.25 * v0);
+        sort_pairs(&mut self.vals, &mut self.vecs);
+        let sigma = 4.0 / v0;
+        let mut v1 = v[..m].to_vec();
+        v1.push(0.5 * v0);
+        let mut v2 = v[..m].to_vec();
+        v2.push(0.25 * v0);
+        rank_one_update(&mut self.vals, &mut self.vecs, sigma, &v1, engine)?;
+        rank_one_update(&mut self.vals, &mut self.vecs, -sigma, &v2, engine)?;
+
+        // Truncate to the dominant r (ascending order: drop the front).
+        while self.vals.len() > self.r {
+            self.vals.remove(0);
+            let (rows, cols) = (self.vecs.rows(), self.vecs.cols());
+            self.vecs = Mat::from_fn(rows, cols - 1, |i, j| self.vecs[(i, j + 1)]);
+        }
+
+        self.s = s2;
+        self.k1 = k1n;
+        self.x.extend_from_slice(xnew);
+        self.m += 1;
+        Ok(())
+    }
+
+    /// Low-rank reconstruction of the centered kernel matrix.
+    pub fn reconstruct(&self) -> Mat {
+        let (m, c) = (self.vecs.rows(), self.vecs.cols());
+        let mut ul = self.vecs.clone();
+        for i in 0..m {
+            for j in 0..c {
+                ul[(i, j)] *= self.vals[j];
+            }
+        }
+        crate::linalg::matmul_nt(&ul, &self.vecs)
+    }
+
+    /// Optimal rank-r approximation of the batch-centered kernel matrix
+    /// (quality reference).
+    pub fn batch_rank_r(&self) -> Result<Mat, String> {
+        let xmat = Mat::from_vec(self.m, self.dim, self.x.clone());
+        let k = crate::kernels::gram(self.kernel, &xmat);
+        let kc = super::centering::center_gram(&k);
+        let eg = crate::linalg::eigh(&kc)?;
+        let keep = self.r.min(self.m);
+        let first = self.m - keep;
+        let mut ul = Mat::zeros(self.m, keep);
+        let mut u = Mat::zeros(self.m, keep);
+        for (c, j) in (first..self.m).enumerate() {
+            for i in 0..self.m {
+                ul[(i, c)] = eg.vectors[(i, j)] * eg.values[j];
+                u[(i, c)] = eg.vectors[(i, j)];
+            }
+        }
+        Ok(crate::linalg::matmul_nt(&ul, &u))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::yeast_like;
+    use crate::kernels::Rbf;
+    use crate::linalg::frobenius;
+
+    #[test]
+    fn exact_while_untruncated() {
+        let ds = yeast_like(14, 1);
+        let kern = Rbf { sigma: 1.0 };
+        let seed = ds.x.submatrix(5, ds.dim());
+        let mut tk = TopKKpca::from_batch(&kern, &seed, 64).unwrap();
+        let mut full = crate::kpca::IncrementalKpca::from_batch(&kern, &seed, true).unwrap();
+        for i in 5..ds.n() {
+            tk.push(ds.x.row(i)).unwrap();
+            full.push(ds.x.row(i)).unwrap();
+        }
+        // With r ≥ m the tracker equals the full adjusted algorithm.
+        assert!(tk.reconstruct().max_abs_diff(&full.reconstruct()) < 1e-8);
+    }
+
+    #[test]
+    fn truncated_stays_near_optimal_rank_r() {
+        let ds = yeast_like(36, 2);
+        let kern = Rbf { sigma: 1.0 };
+        let seed = ds.x.submatrix(12, ds.dim());
+        let r = 6;
+        let mut tk = TopKKpca::from_batch(&kern, &seed, r).unwrap();
+        for i in 12..ds.n() {
+            tk.push(ds.x.row(i)).unwrap();
+        }
+        let best = tk.batch_rank_r().unwrap();
+        let kc = {
+            let k = crate::kernels::gram(&kern, &ds.x);
+            crate::kpca::center_gram(&k)
+        };
+        let e_best = frobenius(&kc.sub(&best));
+        let e_tk = frobenius(&kc.sub(&tk.reconstruct()));
+        assert!(e_tk >= e_best - 1e-9);
+        assert!(e_tk < 5.0 * e_best + 1e-6, "tracker {e_tk} vs optimal {e_best}");
+    }
+
+    #[test]
+    fn memory_is_m_by_r() {
+        let ds = yeast_like(20, 3);
+        let kern = Rbf { sigma: 1.0 };
+        let seed = ds.x.submatrix(6, ds.dim());
+        let mut tk = TopKKpca::from_batch(&kern, &seed, 4).unwrap();
+        for i in 6..ds.n() {
+            tk.push(ds.x.row(i)).unwrap();
+            assert!(tk.vals.len() <= 4);
+            assert_eq!(tk.vecs.rows(), tk.len());
+        }
+    }
+}

@@ -1,0 +1,30 @@
+//! # inkpca — Incremental kernel PCA and the Nyström method
+//!
+//! A three-layer Rust + JAX + Pallas reproduction of Hallgren &
+//! Northrop, *"Incremental kernel PCA and the Nyström method"*
+//! (stat.ML 2018).
+//!
+//! - **Layer 3** ([`coordinator`]) — streaming orchestrator in Rust:
+//!   ingestion with backpressure, eigenstate management, engine routing,
+//!   drift monitoring, metrics.
+//! - **Layer 2/1** — JAX model + Pallas kernels (build-time Python),
+//!   AOT-lowered to HLO text and executed from Rust via PJRT
+//!   ([`runtime`]).
+//! - The paper's algorithms live in [`kpca`] (Algorithms 1 & 2),
+//!   [`rankone`]/[`secular`] (the Golub-73 / Bunch–Nielsen–Sorensen-78
+//!   rank-one eigen update) and [`nystrom`] (§4 incremental Nyström),
+//!   with baselines in [`baselines`] and all dense linear algebra built
+//!   from scratch in [`linalg`].
+
+pub mod baselines;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod kernels;
+pub mod kpca;
+pub mod linalg;
+pub mod nystrom;
+pub mod rankone;
+pub mod runtime;
+pub mod secular;
+pub mod util;

@@ -1,0 +1,248 @@
+//! Cholesky factorization `A = L Lᵀ` with triangular solves and rank-one
+//! up/downdates. Substrate for the batch Nyström inverse and for the
+//! Rudi et al. (2015) incremental-Cholesky Nyström baseline (§4).
+
+use super::matrix::Mat;
+
+/// Lower-triangular Cholesky factor.
+#[derive(Clone, Debug)]
+pub struct Cholesky {
+    l: Mat,
+}
+
+impl Cholesky {
+    /// Factor symmetric positive-definite `a`. Fails (returns `Err`)
+    /// on a non-positive pivot.
+    pub fn new(a: &Mat) -> Result<Self, String> {
+        assert!(a.is_square());
+        let n = a.rows();
+        let mut l = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let mut s = a[(i, j)];
+                for k in 0..j {
+                    s -= l[(i, k)] * l[(j, k)];
+                }
+                if i == j {
+                    if s <= 0.0 {
+                        return Err(format!("cholesky: non-positive pivot {s:e} at {i}"));
+                    }
+                    l[(i, j)] = s.sqrt();
+                } else {
+                    l[(i, j)] = s / l[(j, j)];
+                }
+            }
+        }
+        Ok(Cholesky { l })
+    }
+
+    pub fn order(&self) -> usize {
+        self.l.rows()
+    }
+
+    /// The factor `L`.
+    pub fn factor(&self) -> &Mat {
+        &self.l
+    }
+
+    /// Solve `L y = b` (forward substitution).
+    pub fn solve_lower(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.order();
+        assert_eq!(b.len(), n);
+        let mut y = b.to_vec();
+        for i in 0..n {
+            for k in 0..i {
+                y[i] -= self.l[(i, k)] * y[k];
+            }
+            y[i] /= self.l[(i, i)];
+        }
+        y
+    }
+
+    /// Solve `Lᵀ x = y` (back substitution).
+    pub fn solve_upper(&self, y: &[f64]) -> Vec<f64> {
+        let n = self.order();
+        assert_eq!(y.len(), n);
+        let mut x = y.to_vec();
+        for i in (0..n).rev() {
+            for k in (i + 1)..n {
+                x[i] -= self.l[(k, i)] * x[k];
+            }
+            x[i] /= self.l[(i, i)];
+        }
+        x
+    }
+
+    /// Solve `A x = b`.
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        self.solve_upper(&self.solve_lower(b))
+    }
+
+    /// Solve `A X = B` column-wise.
+    pub fn solve_mat(&self, b: &Mat) -> Mat {
+        let mut x = Mat::zeros(self.order(), b.cols());
+        for j in 0..b.cols() {
+            let col = b.col(j);
+            x.set_col(j, &self.solve(&col));
+        }
+        x
+    }
+
+    /// Explicit inverse `A⁻¹` (used by the batch Nyström path).
+    pub fn inverse(&self) -> Mat {
+        let n = self.order();
+        let mut inv = Mat::zeros(n, n);
+        for j in 0..n {
+            let mut e = vec![0.0; n];
+            e[j] = 1.0;
+            inv.set_col(j, &self.solve(&e));
+        }
+        inv
+    }
+
+    /// Rank-one *update*: factor of `A + v vᵀ` in `O(n²)` via Givens-style
+    /// hyperbolic sweeps (Golub & Van Loan §6.5.4).
+    pub fn rank_one_update(&mut self, v: &[f64]) {
+        let n = self.order();
+        assert_eq!(v.len(), n);
+        let mut w = v.to_vec();
+        for k in 0..n {
+            let lkk = self.l[(k, k)];
+            let r = (lkk * lkk + w[k] * w[k]).sqrt();
+            let c = r / lkk;
+            let s = w[k] / lkk;
+            self.l[(k, k)] = r;
+            for i in (k + 1)..n {
+                let lik = (self.l[(i, k)] + s * w[i]) / c;
+                w[i] = c * w[i] - s * lik;
+                self.l[(i, k)] = lik;
+            }
+        }
+    }
+
+    /// Rank-one *downdate*: factor of `A − v vᵀ`. Fails if the result is
+    /// not positive definite.
+    pub fn rank_one_downdate(&mut self, v: &[f64]) -> Result<(), String> {
+        let n = self.order();
+        assert_eq!(v.len(), n);
+        let mut w = v.to_vec();
+        for k in 0..n {
+            let lkk = self.l[(k, k)];
+            let d = lkk * lkk - w[k] * w[k];
+            if d <= 0.0 {
+                return Err("cholesky downdate: loss of positive definiteness".into());
+            }
+            let r = d.sqrt();
+            let c = r / lkk;
+            let s = w[k] / lkk;
+            self.l[(k, k)] = r;
+            for i in (k + 1)..n {
+                let lik = (self.l[(i, k)] - s * w[i]) / c;
+                w[i] = c * w[i] - s * lik;
+                self.l[(i, k)] = lik;
+            }
+        }
+        Ok(())
+    }
+
+    /// Expand the factor for `A` bordered by a new row/column
+    /// `[A a; aᵀ alpha]` in `O(n²)` — the Rudi-15 incremental step.
+    pub fn expand(&mut self, a_col: &[f64], alpha: f64) -> Result<(), String> {
+        let n = self.order();
+        assert_eq!(a_col.len(), n);
+        let y = self.solve_lower(a_col);
+        let d = alpha - super::matrix::dot(&y, &y);
+        if d <= 0.0 {
+            return Err("cholesky expand: new pivot non-positive".into());
+        }
+        let mut l = Mat::zeros(n + 1, n + 1);
+        for i in 0..n {
+            for j in 0..=i {
+                l[(i, j)] = self.l[(i, j)];
+            }
+        }
+        for j in 0..n {
+            l[(n, j)] = y[j];
+        }
+        l[(n, n)] = d.sqrt();
+        self.l = l;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::{matmul_nt, syrk};
+
+    fn spd(n: usize, seed: u64) -> Mat {
+        let x = Mat::from_fn(n, n + 2, |i, j| {
+            (((i as u64 + 1) * (j as u64 + 3) * seed) % 97) as f64 / 97.0 - 0.3
+        });
+        let mut g = syrk(&x);
+        for i in 0..n {
+            g[(i, i)] += 1e-3;
+        }
+        g
+    }
+
+    #[test]
+    fn factor_reconstructs() {
+        let a = spd(8, 5);
+        let ch = Cholesky::new(&a).unwrap();
+        let rec = matmul_nt(ch.factor(), ch.factor());
+        assert!(rec.max_abs_diff(&a) < 1e-11);
+    }
+
+    #[test]
+    fn solve_matches_direct() {
+        let a = spd(6, 9);
+        let ch = Cholesky::new(&a).unwrap();
+        let b: Vec<f64> = (0..6).map(|i| (i as f64).cos()).collect();
+        let x = ch.solve(&b);
+        let ax = crate::linalg::gemm::gemv(&a, &x);
+        for (u, v) in ax.iter().zip(b.iter()) {
+            assert!((u - v).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn inverse_identity() {
+        let a = spd(5, 13);
+        let ch = Cholesky::new(&a).unwrap();
+        let ainv = ch.inverse();
+        let prod = crate::linalg::gemm::matmul(&a, &ainv);
+        assert!(prod.max_abs_diff(&Mat::eye(5)) < 1e-9);
+    }
+
+    #[test]
+    fn update_then_downdate_roundtrip() {
+        let a = spd(7, 17);
+        let mut ch = Cholesky::new(&a).unwrap();
+        let v: Vec<f64> = (0..7).map(|i| 0.2 * (i as f64 + 1.0).sin()).collect();
+        ch.rank_one_update(&v);
+        // A + vvᵀ reconstructed
+        let mut avv = a.clone();
+        avv.syr(1.0, &v);
+        assert!(matmul_nt(ch.factor(), ch.factor()).max_abs_diff(&avv) < 1e-10);
+        ch.rank_one_downdate(&v).unwrap();
+        assert!(matmul_nt(ch.factor(), ch.factor()).max_abs_diff(&a) < 1e-9);
+    }
+
+    #[test]
+    fn expand_matches_batch() {
+        let a = spd(6, 23);
+        let mut ch = Cholesky::new(&a.submatrix(5, 5)).unwrap();
+        let col: Vec<f64> = (0..5).map(|i| a[(i, 5)]).collect();
+        ch.expand(&col, a[(5, 5)]).unwrap();
+        let full = Cholesky::new(&a).unwrap();
+        assert!(ch.factor().max_abs_diff(full.factor()) < 1e-10);
+    }
+
+    #[test]
+    fn non_spd_rejected() {
+        let mut a = Mat::eye(3);
+        a[(2, 2)] = -1.0;
+        assert!(Cholesky::new(&a).is_err());
+    }
+}

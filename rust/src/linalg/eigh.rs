@@ -1,0 +1,142 @@
+//! Full symmetric eigendecomposition `A = V Λ Vᵀ` — the batch baseline
+//! the paper's incremental algorithm is measured against (§2.2), built
+//! from `householder::tridiagonalize` + `tridiag::tridiag_eig`.
+
+use super::householder::tridiagonalize;
+use super::matrix::Mat;
+use super::tridiag::{sort_eigenpairs, tridiag_eig};
+
+/// Eigendecomposition result: `values` ascending, `vectors` columns are
+/// the corresponding orthonormal eigenvectors.
+#[derive(Clone, Debug)]
+pub struct Eigh {
+    pub values: Vec<f64>,
+    pub vectors: Mat,
+}
+
+impl Eigh {
+    /// Reconstruct `V Λ Vᵀ`.
+    pub fn reconstruct(&self) -> Mat {
+        let n = self.values.len();
+        let mut vl = self.vectors.clone();
+        for i in 0..n {
+            for j in 0..n {
+                vl[(i, j)] *= self.values[j];
+            }
+        }
+        super::gemm::matmul_nt(&vl, &self.vectors)
+    }
+}
+
+/// Compute all eigenvalues and eigenvectors of symmetric `a`.
+/// Eigenvalues are returned in ascending order.
+pub fn eigh(a: &Mat) -> Result<Eigh, String> {
+    assert!(a.is_square(), "eigh needs a square matrix");
+    let mut t = tridiagonalize(a);
+    tridiag_eig(&mut t.d, &mut t.e, &mut t.q)?;
+    sort_eigenpairs(&mut t.d, &mut t.q);
+    Ok(Eigh { values: t.d, vectors: t.q })
+}
+
+/// Eigenvalues only (still O(n³) here since we reuse the same kernel,
+/// but skips the final sort-permute of a separate vector matrix).
+pub fn eigvalsh(a: &Mat) -> Result<Vec<f64>, String> {
+    let mut t = tridiagonalize(a);
+    // Accumulating into a 0-row matrix skips all eigenvector work inside
+    // the QL sweep (the rotation loop runs over z.rows() == 0).
+    let mut z = Mat::zeros(0, 0);
+    tridiag_eig(&mut t.d, &mut t.e, &mut z)?;
+    let mut vals = t.d;
+    vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Ok(vals)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::matmul;
+
+    fn rand_sym(n: usize, seed: u64) -> Mat {
+        // xorshift-based deterministic pseudo-random symmetric matrix.
+        let mut s = seed.wrapping_add(0x9E3779B97F4A7C15);
+        let mut next = move || {
+            s ^= s << 13;
+            s ^= s >> 7;
+            s ^= s << 17;
+            (s >> 11) as f64 / (1u64 << 53) as f64 - 0.5
+        };
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let v = next();
+                m[(i, j)] = v;
+                m[(j, i)] = v;
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn reconstructs_random_matrices() {
+        for (n, seed) in [(3, 1u64), (7, 2), (16, 3), (33, 4)] {
+            let a = rand_sym(n, seed);
+            let eg = eigh(&a).unwrap();
+            assert!(
+                eg.reconstruct().max_abs_diff(&a) < 1e-10,
+                "n={n} reconstruction failed"
+            );
+        }
+    }
+
+    #[test]
+    fn eigenvectors_orthonormal() {
+        let a = rand_sym(20, 7);
+        let eg = eigh(&a).unwrap();
+        let vtv = matmul(&eg.vectors.transpose(), &eg.vectors);
+        assert!(vtv.max_abs_diff(&Mat::eye(20)) < 1e-11);
+    }
+
+    #[test]
+    fn values_ascending() {
+        let a = rand_sym(15, 11);
+        let eg = eigh(&a).unwrap();
+        for w in eg.values.windows(2) {
+            assert!(w[0] <= w[1] + 1e-14);
+        }
+    }
+
+    #[test]
+    fn known_eigenvalues_projection() {
+        // Rank-one projector vvᵀ with ‖v‖=1 has eigenvalues {0,…,0,1}.
+        let n = 6;
+        let v: Vec<f64> = (0..n).map(|i| ((i + 1) as f64).sqrt()).collect();
+        let norm = crate::linalg::matrix::norm2(&v);
+        let v: Vec<f64> = v.iter().map(|x| x / norm).collect();
+        let mut a = Mat::zeros(n, n);
+        a.syr(1.0, &v);
+        let eg = eigh(&a).unwrap();
+        assert!((eg.values[n - 1] - 1.0).abs() < 1e-12);
+        for k in 0..n - 1 {
+            assert!(eg.values[k].abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn eigvalsh_matches_eigh() {
+        let a = rand_sym(12, 21);
+        let vals = eigvalsh(&a).unwrap();
+        let eg = eigh(&a).unwrap();
+        for (u, v) in vals.iter().zip(eg.values.iter()) {
+            assert!((u - v).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn gram_matrix_psd() {
+        // AAᵀ is PSD: all eigenvalues ≥ -tol.
+        let x = Mat::from_fn(9, 4, |i, j| ((i * j) as f64).sin());
+        let g = crate::linalg::gemm::syrk(&x);
+        let vals = eigvalsh(&g).unwrap();
+        assert!(vals[0] > -1e-10);
+    }
+}

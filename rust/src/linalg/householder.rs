@@ -1,0 +1,172 @@
+//! Householder reduction of a real symmetric matrix to tridiagonal form,
+//! with accumulation of the orthogonal transformation:  `A = Q T Qᵀ`.
+//!
+//! This is the classic `tred2` procedure (Householder 1958; Martin,
+//! Reinsch & Wilkinson 1968), the first phase of the batch symmetric
+//! eigensolver that `kpca::batch` and the Chin–Suter baseline rest on.
+
+use super::matrix::Mat;
+
+/// Output of the tridiagonalization.
+pub struct Tridiagonal {
+    /// Orthogonal accumulation matrix `Q` with `A = Q T Qᵀ`.
+    pub q: Mat,
+    /// Diagonal of `T`.
+    pub d: Vec<f64>,
+    /// Sub-diagonal of `T` (`e[0]` is unused / zero; `e[i]` couples
+    /// `i-1` and `i`).
+    pub e: Vec<f64>,
+}
+
+/// Reduce symmetric `a` to tridiagonal form. Only the lower triangle of
+/// `a` is referenced.
+pub fn tridiagonalize(a: &Mat) -> Tridiagonal {
+    assert!(a.is_square(), "tridiagonalize needs a square matrix");
+    let n = a.rows();
+    let mut z = a.clone();
+    let mut d = vec![0.0; n];
+    let mut e = vec![0.0; n];
+    if n == 0 {
+        return Tridiagonal { q: z, d, e };
+    }
+
+    for i in (1..n).rev() {
+        let l = i - 1;
+        let mut h = 0.0;
+        if l > 0 {
+            let scale: f64 = (0..=l).map(|k| z[(i, k)].abs()).sum();
+            if scale == 0.0 {
+                e[i] = z[(i, l)];
+            } else {
+                for k in 0..=l {
+                    z[(i, k)] /= scale;
+                    h += z[(i, k)] * z[(i, k)];
+                }
+                let f = z[(i, l)];
+                let g = if f >= 0.0 { -h.sqrt() } else { h.sqrt() };
+                e[i] = scale * g;
+                h -= f * g;
+                z[(i, l)] = f - g;
+                let mut fsum = 0.0;
+                for j in 0..=l {
+                    // Store u/H in column i for later accumulation.
+                    z[(j, i)] = z[(i, j)] / h;
+                    let mut g = 0.0;
+                    for k in 0..=j {
+                        g += z[(j, k)] * z[(i, k)];
+                    }
+                    for k in (j + 1)..=l {
+                        g += z[(k, j)] * z[(i, k)];
+                    }
+                    e[j] = g / h;
+                    fsum += e[j] * z[(i, j)];
+                }
+                let hh = fsum / (h + h);
+                for j in 0..=l {
+                    let f = z[(i, j)];
+                    let gj = e[j] - hh * f;
+                    e[j] = gj;
+                    for k in 0..=j {
+                        let delta = f * e[k] + gj * z[(i, k)];
+                        z[(j, k)] -= delta;
+                    }
+                }
+            }
+        } else {
+            e[i] = z[(i, l)];
+        }
+        d[i] = h;
+    }
+
+    // Accumulate transformation matrices.
+    d[0] = 0.0;
+    e[0] = 0.0;
+    for i in 0..n {
+        if d[i] != 0.0 {
+            for j in 0..i {
+                let mut g = 0.0;
+                for k in 0..i {
+                    g += z[(i, k)] * z[(k, j)];
+                }
+                for k in 0..i {
+                    let delta = g * z[(k, i)];
+                    z[(k, j)] -= delta;
+                }
+            }
+        }
+        d[i] = z[(i, i)];
+        z[(i, i)] = 1.0;
+        for j in 0..i {
+            z[(j, i)] = 0.0;
+            z[(i, j)] = 0.0;
+        }
+    }
+
+    Tridiagonal { q: z, d, e }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::matmul;
+
+    fn sym(n: usize, f: impl Fn(usize, usize) -> f64) -> Mat {
+        let mut m = Mat::from_fn(n, n, |i, j| f(i.min(j), i.max(j)));
+        m.symmetrize();
+        m
+    }
+
+    fn reconstruct(t: &Tridiagonal) -> Mat {
+        let n = t.d.len();
+        let mut tri = Mat::zeros(n, n);
+        for i in 0..n {
+            tri[(i, i)] = t.d[i];
+            if i > 0 {
+                tri[(i, i - 1)] = t.e[i];
+                tri[(i - 1, i)] = t.e[i];
+            }
+        }
+        matmul(&matmul(&t.q, &tri), &t.q.transpose())
+    }
+
+    #[test]
+    fn q_is_orthogonal() {
+        let a = sym(8, |i, j| 1.0 / (1.0 + i as f64 + j as f64));
+        let t = tridiagonalize(&a);
+        let qtq = matmul(&t.q.transpose(), &t.q);
+        assert!(qtq.max_abs_diff(&Mat::eye(8)) < 1e-12);
+    }
+
+    #[test]
+    fn reconstruction_matches() {
+        let a = sym(10, |i, j| ((i * 3 + j * 7) % 11) as f64 - 5.0);
+        let t = tridiagonalize(&a);
+        assert!(reconstruct(&t).max_abs_diff(&a) < 1e-10);
+    }
+
+    #[test]
+    fn already_tridiagonal_passthrough() {
+        let n = 6;
+        let mut a = Mat::zeros(n, n);
+        for i in 0..n {
+            a[(i, i)] = i as f64 + 1.0;
+            if i > 0 {
+                a[(i, i - 1)] = 0.5;
+                a[(i - 1, i)] = 0.5;
+            }
+        }
+        let t = tridiagonalize(&a);
+        assert!(reconstruct(&t).max_abs_diff(&a) < 1e-12);
+    }
+
+    #[test]
+    fn tiny_sizes() {
+        for n in 0..3 {
+            let a = sym(n, |i, j| (i + j) as f64 + 1.0);
+            let t = tridiagonalize(&a);
+            if n > 0 {
+                assert!(reconstruct(&t).max_abs_diff(&a) < 1e-12);
+            }
+        }
+    }
+}

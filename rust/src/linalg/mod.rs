@@ -1,0 +1,20 @@
+//! Dense linear-algebra substrate, built from scratch: matrix type,
+//! blocked/parallel BLAS-3, Householder tridiagonalization, implicit-QL
+//! tridiagonal eigensolver, full symmetric `eigh`, Cholesky with rank-one
+//! up/downdates, and the three norms the paper's figures report.
+
+pub mod cholesky;
+pub mod eigh;
+pub mod gemm;
+pub mod householder;
+pub mod matrix;
+pub mod norms;
+pub mod tridiag;
+
+pub use cholesky::Cholesky;
+pub use eigh::{eigh, eigvalsh, Eigh};
+pub use gemm::{gemv, gemv_t, matmul, matmul_nt, syrk};
+pub use matrix::{dot, norm2, Mat};
+pub use norms::{
+    frobenius, orthogonality_defect, psd_norms, spectral_sym, sym_norms, trace_sym, Norms,
+};

@@ -1,0 +1,197 @@
+//! The three matrix norms the paper's experiments report (§5, Figures
+//! 1–2): Frobenius, spectral (operator 2-norm) and trace (nuclear) norm.
+//! For *symmetric* arguments — which is all the experiments need, since
+//! both `K' − UΛUᵀ` and `K − K̃` are symmetric — spectral and trace
+//! norms reduce to `max|λᵢ|` and `Σ|λᵢ|`.
+
+use super::eigh::eigvalsh;
+use super::gemm::gemv;
+use super::matrix::{norm2, Mat};
+
+/// Bundle of the three norms reported in Figures 1 and 2.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Norms {
+    pub frobenius: f64,
+    pub spectral: f64,
+    pub trace: f64,
+}
+
+/// Frobenius norm of any matrix.
+pub fn frobenius(a: &Mat) -> f64 {
+    a.as_slice().iter().map(|v| v * v).sum::<f64>().sqrt()
+}
+
+/// Spectral norm of a *symmetric* matrix via power iteration with a
+/// deterministic start; falls back to the exact eigenvalue computation
+/// when convergence stalls (near-degenerate leading pair).
+pub fn spectral_sym(a: &Mat) -> f64 {
+    assert!(a.is_square());
+    let n = a.rows();
+    if n == 0 {
+        return 0.0;
+    }
+    // Power iteration on A² (so the sign of the extreme eigenvalue does
+    // not matter) is implicit: we track |λ| through consecutive applies.
+    let mut v: Vec<f64> = (0..n).map(|i| 1.0 + (i as f64 * 0.7).sin()).collect();
+    let nv = norm2(&v);
+    v.iter_mut().for_each(|x| *x /= nv);
+    let mut lambda = 0.0;
+    for it in 0..200 {
+        let w = gemv(a, &v);
+        let nw = norm2(&w);
+        if nw == 0.0 {
+            return 0.0;
+        }
+        let new_lambda = nw;
+        v = w.iter().map(|x| x / nw).collect();
+        if it > 4 && (new_lambda - lambda).abs() <= 1e-12 * new_lambda.max(1e-300) {
+            return new_lambda;
+        }
+        lambda = new_lambda;
+    }
+    // Slow convergence — do it exactly.
+    match eigvalsh(a) {
+        Ok(vals) => vals.iter().fold(0.0_f64, |m, v| m.max(v.abs())),
+        Err(_) => lambda,
+    }
+}
+
+/// Trace (nuclear) norm of a *symmetric* matrix: `Σ|λᵢ|`.
+pub fn trace_sym(a: &Mat) -> f64 {
+    match eigvalsh(a) {
+        Ok(vals) => vals.iter().map(|v| v.abs()).sum(),
+        Err(_) => f64::NAN,
+    }
+}
+
+/// All three norms of a symmetric matrix, sharing one eigenvalue sweep
+/// for spectral + trace.
+pub fn sym_norms(a: &Mat) -> Norms {
+    let fro = frobenius(a);
+    match eigvalsh(a) {
+        Ok(vals) => Norms {
+            frobenius: fro,
+            spectral: vals.iter().fold(0.0_f64, |m, v| m.max(v.abs())),
+            trace: vals.iter().map(|v| v.abs()).sum(),
+        },
+        Err(_) => Norms { frobenius: fro, spectral: f64::NAN, trace: f64::NAN },
+    }
+}
+
+/// Norms of a *positive semi-definite* symmetric matrix in `O(n²)`:
+/// trace norm = trace (all eigenvalues ≥ 0), spectral via pure power
+/// iteration (no `O(n³)` fallback — for PSD the iterate estimate is a
+/// valid lower bound that converges from below). Used for the Nyström
+/// residual `K − K̃`, which is the Schur complement of `K_{m,m}` in `K`
+/// and hence PSD.
+pub fn psd_norms(a: &Mat) -> Norms {
+    assert!(a.is_square());
+    let n = a.rows();
+    let fro = frobenius(a);
+    let trace: f64 = (0..n).map(|i| a[(i, i)]).sum();
+    // Power iteration (deterministic start), no exact fallback.
+    let mut v: Vec<f64> = (0..n).map(|i| 1.0 + (i as f64 * 0.7).sin()).collect();
+    let nv = norm2(&v);
+    v.iter_mut().for_each(|x| *x /= nv);
+    let mut lambda = 0.0;
+    for it in 0..500 {
+        let w = gemv(a, &v);
+        let nw = norm2(&w);
+        if nw == 0.0 {
+            lambda = 0.0;
+            break;
+        }
+        v = w.iter().map(|x| x / nw).collect();
+        if it > 8 && (nw - lambda).abs() <= 1e-10 * nw.max(1e-300) {
+            lambda = nw;
+            break;
+        }
+        lambda = nw;
+    }
+    Norms { frobenius: fro, spectral: lambda, trace }
+}
+
+/// `‖UUᵀ − I‖_F` — the orthogonality-loss diagnostic from §5.1.
+pub fn orthogonality_defect(u: &Mat) -> f64 {
+    let uut = super::gemm::matmul_nt(u, u);
+    let n = uut.rows();
+    let mut s = 0.0;
+    for i in 0..n {
+        for j in 0..n {
+            let d = uut[(i, j)] - if i == j { 1.0 } else { 0.0 };
+            s += d * d;
+        }
+    }
+    s.sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frobenius_known() {
+        let a = Mat::from_vec(2, 2, vec![3.0, 0.0, 4.0, 0.0]);
+        assert!((frobenius(&a) - 5.0).abs() < 1e-14);
+    }
+
+    #[test]
+    fn norms_of_diagonal() {
+        let a = Mat::from_diag(&[3.0, -4.0, 1.0]);
+        let n = sym_norms(&a);
+        assert!((n.spectral - 4.0).abs() < 1e-12);
+        assert!((n.trace - 8.0).abs() < 1e-12);
+        assert!((n.frobenius - (9.0f64 + 16.0 + 1.0).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spectral_power_matches_exact() {
+        let mut a = Mat::from_fn(8, 8, |i, j| ((i * 5 + j * 3) % 7) as f64 - 3.0);
+        a.symmetrize();
+        let exact = {
+            let vals = eigvalsh(&a).unwrap();
+            vals.iter().fold(0.0_f64, |m, v| m.max(v.abs()))
+        };
+        assert!((spectral_sym(&a) - exact).abs() < 1e-8 * exact.max(1.0));
+    }
+
+    #[test]
+    fn norm_inequalities_hold() {
+        // spectral ≤ frobenius ≤ trace for symmetric matrices.
+        let mut a = Mat::from_fn(10, 10, |i, j| ((i as f64) - (j as f64) * 0.5).sin());
+        a.symmetrize();
+        let n = sym_norms(&a);
+        assert!(n.spectral <= n.frobenius + 1e-10);
+        assert!(n.frobenius <= n.trace + 1e-10);
+    }
+
+    #[test]
+    fn orthogonality_defect_zero_for_orthogonal() {
+        assert!(orthogonality_defect(&Mat::eye(5)) < 1e-15);
+        // Rotation matrix.
+        let th = 0.3_f64;
+        let r = Mat::from_vec(2, 2, vec![th.cos(), -th.sin(), th.sin(), th.cos()]);
+        assert!(orthogonality_defect(&r) < 1e-14);
+    }
+
+    #[test]
+    fn psd_norms_match_exact_on_psd() {
+        // Gram matrix is PSD; psd_norms must agree with sym_norms.
+        let x = Mat::from_fn(12, 5, |i, j| ((i * 3 + j) as f64 * 0.7).sin());
+        let g = crate::linalg::gemm::syrk(&x);
+        let fast = psd_norms(&g);
+        let exact = sym_norms(&g);
+        assert!((fast.frobenius - exact.frobenius).abs() < 1e-10);
+        assert!((fast.trace - exact.trace).abs() < 1e-9 * exact.trace.max(1.0));
+        assert!((fast.spectral - exact.spectral).abs() < 1e-6 * exact.spectral.max(1.0));
+    }
+
+    #[test]
+    fn zero_matrix_norms() {
+        let z = Mat::zeros(4, 4);
+        let n = sym_norms(&z);
+        assert_eq!(n.frobenius, 0.0);
+        assert!(n.spectral.abs() < 1e-14);
+        assert!(n.trace.abs() < 1e-14);
+    }
+}

@@ -1,0 +1,174 @@
+//! Implicit-shift QL eigensolver for symmetric tridiagonal matrices
+//! (`tqli`; Bowdler, Martin, Reinsch & Wilkinson 1968), the second phase
+//! of the batch symmetric eigensolver. Rotations are accumulated into a
+//! caller-supplied matrix so the same routine serves both
+//! eigenvalues-only and full-decomposition uses.
+
+use super::matrix::Mat;
+
+/// Maximum QL iterations per eigenvalue before declaring failure.
+const MAX_ITER: usize = 64;
+
+/// `hypot`-style stable `sqrt(a² + b²)`.
+#[inline]
+fn pythag(a: f64, b: f64) -> f64 {
+    a.hypot(b)
+}
+
+/// Diagonalize the symmetric tridiagonal matrix with diagonal `d` and
+/// sub-diagonal `e` (`e[i]` couples rows `i-1`, `i`; `e[0]` ignored).
+///
+/// On return `d` holds the (unsorted) eigenvalues and `z`'s columns have
+/// been rotated: if `z` entered as `Q` from `tridiagonalize`, its columns
+/// exit as the eigenvectors of the original full matrix; pass
+/// `Mat::eye(n)` to get the tridiagonal's own eigenvectors.
+pub fn tridiag_eig(d: &mut [f64], e: &mut [f64], z: &mut Mat) -> Result<(), String> {
+    let n = d.len();
+    assert_eq!(e.len(), n);
+    // A 0-row `z` requests eigenvalues only (no rotation accumulation).
+    assert!(z.rows() == n || z.rows() == 0);
+    if n == 0 {
+        return Ok(());
+    }
+    // Shift the sub-diagonal down for convenient indexing: e[i] now
+    // couples i and i+1.
+    for i in 1..n {
+        e[i - 1] = e[i];
+    }
+    e[n - 1] = 0.0;
+
+    for l in 0..n {
+        let mut iter = 0;
+        loop {
+            // Look for a negligible off-diagonal to split the problem.
+            let mut m = l;
+            while m + 1 < n {
+                let dd = d[m].abs() + d[m + 1].abs();
+                if e[m].abs() <= f64::EPSILON * dd {
+                    break;
+                }
+                m += 1;
+            }
+            if m == l {
+                break;
+            }
+            iter += 1;
+            if iter > MAX_ITER {
+                return Err(format!("tridiag_eig: no convergence at index {l}"));
+            }
+            // Wilkinson-style shift from the leading 2x2.
+            let mut g = (d[l + 1] - d[l]) / (2.0 * e[l]);
+            let mut r = pythag(g, 1.0);
+            g = d[m] - d[l] + e[l] / (g + if g >= 0.0 { r.abs() } else { -r.abs() });
+            let (mut s, mut c) = (1.0, 1.0);
+            let mut p = 0.0;
+            let mut underflow = false;
+            for i in (l..m).rev() {
+                let mut f = s * e[i];
+                let b = c * e[i];
+                r = pythag(f, g);
+                e[i + 1] = r;
+                if r == 0.0 {
+                    // Recover from underflow: annihilate the small
+                    // element and restart this eigenvalue.
+                    d[i + 1] -= p;
+                    e[m] = 0.0;
+                    underflow = true;
+                    break;
+                }
+                s = f / r;
+                c = g / r;
+                g = d[i + 1] - p;
+                r = (d[i] - g) * s + 2.0 * c * b;
+                p = s * r;
+                d[i + 1] = g + p;
+                g = c * r - b;
+                // Accumulate the rotation into the eigenvector matrix.
+                for k in 0..z.rows() {
+                    f = z[(k, i + 1)];
+                    z[(k, i + 1)] = s * z[(k, i)] + c * f;
+                    z[(k, i)] = c * z[(k, i)] - s * f;
+                }
+            }
+            if underflow {
+                continue;
+            }
+            d[l] -= p;
+            e[l] = g;
+            e[m] = 0.0;
+        }
+    }
+    Ok(())
+}
+
+/// Sort eigenpairs ascending by eigenvalue, permuting columns of `z`
+/// accordingly.
+pub fn sort_eigenpairs(d: &mut [f64], z: &mut Mat) {
+    let n = d.len();
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&a, &b| d[a].partial_cmp(&d[b]).unwrap());
+    let d_old = d.to_vec();
+    let z_old = z.clone();
+    for (newj, &oldj) in idx.iter().enumerate() {
+        d[newj] = d_old[oldj];
+        for i in 0..z.rows() {
+            z[(i, newj)] = z_old[(i, oldj)];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn diagonal_matrix_is_fixed_point() {
+        let mut d = vec![3.0, 1.0, 2.0];
+        let mut e = vec![0.0; 3];
+        let mut z = Mat::eye(3);
+        tridiag_eig(&mut d, &mut e, &mut z).unwrap();
+        sort_eigenpairs(&mut d, &mut z);
+        assert!((d[0] - 1.0).abs() < 1e-14);
+        assert!((d[2] - 3.0).abs() < 1e-14);
+    }
+
+    #[test]
+    fn two_by_two_closed_form() {
+        // [[2, 1], [1, 2]] has eigenvalues 1 and 3.
+        let mut d = vec![2.0, 2.0];
+        let mut e = vec![0.0, 1.0];
+        let mut z = Mat::eye(2);
+        tridiag_eig(&mut d, &mut e, &mut z).unwrap();
+        sort_eigenpairs(&mut d, &mut z);
+        assert!((d[0] - 1.0).abs() < 1e-13);
+        assert!((d[1] - 3.0).abs() < 1e-13);
+    }
+
+    #[test]
+    fn laplacian_chain_known_spectrum() {
+        // 1-D discrete Laplacian: eigenvalues 2 - 2 cos(kπ/(n+1)).
+        let n = 12;
+        let mut d = vec![2.0; n];
+        let mut e = vec![-1.0; n];
+        e[0] = 0.0;
+        let mut z = Mat::eye(n);
+        tridiag_eig(&mut d, &mut e, &mut z).unwrap();
+        sort_eigenpairs(&mut d, &mut z);
+        for k in 1..=n {
+            let expect = 2.0 - 2.0 * (k as f64 * std::f64::consts::PI / (n as f64 + 1.0)).cos();
+            assert!((d[k - 1] - expect).abs() < 1e-12, "k={k}");
+        }
+    }
+
+    #[test]
+    fn eigenvectors_orthonormal() {
+        let n = 9;
+        let mut d: Vec<f64> = (0..n).map(|i| (i as f64).sin() + 2.0).collect();
+        let mut e: Vec<f64> = (0..n).map(|i| 0.3 * (i as f64 + 1.0).cos()).collect();
+        e[0] = 0.0;
+        let mut z = Mat::eye(n);
+        tridiag_eig(&mut d, &mut e, &mut z).unwrap();
+        let ztz = crate::linalg::gemm::matmul(&z.transpose(), &z);
+        assert!(ztz.max_abs_diff(&Mat::eye(n)) < 1e-12);
+    }
+}

@@ -1,0 +1,144 @@
+//! `inkpca` — CLI for the incremental kernel PCA / Nyström system.
+//!
+//! Subcommands:
+//!   fig1  [--full]        regenerate Figure 1 (drift curves)
+//!   fig2  [--full]        regenerate Figure 2 (Nyström error curves)
+//!   flops [--full]        regenerate the §3 cost table (T1)
+//!   serve [opts]          run the streaming coordinator on a dataset feed
+//!   quickstart            tiny end-to-end sanity run
+//!
+//! `serve` options: --dataset magic|yeast  --n <pts>  --engine native|pjrt
+//!                  --no-adjust  --drift-every <k>  --seed-points <k>
+
+use inkpca::coordinator::{Config, Coordinator, EngineConfig, EnginePolicy, KernelConfig};
+use inkpca::data::{load, SliceSource};
+use inkpca::experiments::{self, RunMode};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(|s| s.as_str()).unwrap_or("help");
+    let rest: Vec<String> = args.iter().skip(1).cloned().collect();
+    let result = match cmd {
+        "fig1" => run_fig1(&rest),
+        "fig2" => run_fig2(&rest),
+        "flops" => run_flops(&rest),
+        "serve" => serve(&rest),
+        "quickstart" => quickstart(),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => {
+            print_help();
+            Err(format!("unknown command '{other}'"))
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "inkpca — incremental kernel PCA and the Nyström method\n\
+         usage: inkpca <fig1|fig2|flops|serve|quickstart> [--full] [opts]"
+    );
+}
+
+fn run_fig1(args: &[String]) -> Result<(), String> {
+    let cfg = experiments::Fig1Config::new(RunMode::from_args(args));
+    experiments::run_fig1(&cfg)?;
+    // S1: the orthogonality column is part of the same CSV; also run the
+    // unadjusted variant for the drift comparison the paper describes.
+    let mut un = experiments::Fig1Config::new(RunMode::from_args(args));
+    un.mean_adjust = false;
+    experiments::run_fig1(&un)?;
+    Ok(())
+}
+
+fn run_fig2(args: &[String]) -> Result<(), String> {
+    let cfg = experiments::Fig2Config::new(RunMode::from_args(args));
+    experiments::run_fig2(&cfg)?;
+    Ok(())
+}
+
+fn run_flops(args: &[String]) -> Result<(), String> {
+    let cfg = experiments::FlopsConfig::new(RunMode::from_args(args));
+    experiments::run_flops(&cfg)?;
+    Ok(())
+}
+
+fn flag_value(args: &[String], name: &str) -> Option<String> {
+    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1).cloned())
+}
+
+fn serve(args: &[String]) -> Result<(), String> {
+    let dataset = flag_value(args, "--dataset").unwrap_or_else(|| "yeast".into());
+    let n: usize = flag_value(args, "--n").and_then(|v| v.parse().ok()).unwrap_or(500);
+    let engine = match flag_value(args, "--engine").as_deref() {
+        Some("pjrt") => EngineConfig::Pjrt {
+            dir: "artifacts".into(),
+            policy: EnginePolicy::Auto { pjrt_min: 64 },
+        },
+        _ => EngineConfig::Native,
+    };
+    let cfg = Config {
+        kernel: KernelConfig::RbfMedian,
+        mean_adjust: !args.iter().any(|a| a == "--no-adjust"),
+        engine,
+        queue: 64,
+        seed_points: flag_value(args, "--seed-points")
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(20),
+        drift_every: flag_value(args, "--drift-every")
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(100),
+    };
+    let mut ds = load(&dataset, n, 42)?;
+    ds.standardize();
+    let dim = ds.dim();
+    println!("serving {} points of {dataset} (dim {dim})…", ds.n());
+    let coord = Coordinator::spawn(cfg, dim);
+    let mut src = SliceSource::new(ds);
+    let accepted = coord.ingest_stream(&mut src)?;
+    let snap = coord.snapshot()?;
+    let metrics = coord.metrics()?;
+    println!("ingested: {accepted} accepted, eigensystem m={}", snap.m);
+    println!(
+        "top eigenvalues: {:?}",
+        snap.top_values.iter().map(|v| (v * 100.0).round() / 100.0).collect::<Vec<_>>()
+    );
+    if let Some(d) = snap.drift {
+        println!(
+            "last drift @ m={}: fro {:.3e} spec {:.3e} trace {:.3e} ‖UUᵀ−I‖ {:.3e}",
+            d.m, d.norms.frobenius, d.norms.spectral, d.norms.trace, d.orthogonality
+        );
+    }
+    println!("engine calls (native, pjrt): {:?}", snap.engine_calls);
+    println!("{metrics}");
+    coord.shutdown();
+    Ok(())
+}
+
+fn quickstart() -> Result<(), String> {
+    use inkpca::kernels::{median_heuristic, Rbf};
+    use inkpca::kpca::IncrementalKpca;
+    let mut ds = load("yeast", 60, 1)?;
+    ds.standardize();
+    let kern = Rbf { sigma: median_heuristic(&ds.x, 100) };
+    let seed = ds.x.submatrix(20, ds.dim());
+    let mut inc = IncrementalKpca::from_batch(&kern, &seed, true)?;
+    for i in 20..ds.n() {
+        inc.push(ds.x.row(i))?;
+    }
+    let drift = inc.reconstruct().max_abs_diff(&inc.batch_reference());
+    println!("quickstart: m={} drift={drift:.3e}", inc.len());
+    println!("top-3 eigenvalues: {:?}", inc.vals.iter().rev().take(3).collect::<Vec<_>>());
+    if drift < 1e-7 {
+        println!("OK — incremental reproduces batch");
+        Ok(())
+    } else {
+        Err(format!("drift too large: {drift}"))
+    }
+}

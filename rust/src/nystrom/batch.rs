@@ -1,0 +1,131 @@
+//! Batch Nyström approximation (§2.4):
+//! `K̃ = K_{n,m} K_{m,m}⁻¹ K_{m,n}`, equivalently the eigen-rescaled
+//! form of eq. (7) — both implemented, and tested to agree, since the
+//! incremental algorithm reproduces the latter.
+
+use crate::kernels::{cross_gram, gram, Kernel};
+use crate::linalg::{eigh, matmul, matmul_nt, Mat};
+
+/// Batch Nyström approximation from an explicit subset.
+#[derive(Clone, Debug)]
+pub struct BatchNystrom {
+    /// `n × m` cross-Gram between all points and the subset.
+    pub knm: Mat,
+    /// Eigenvalues of `K_{m,m}`, ascending.
+    pub values: Vec<f64>,
+    /// Eigenvectors of `K_{m,m}`.
+    pub vectors: Mat,
+    /// Relative eigenvalue cutoff for the pseudo-inverse.
+    pub rcond: f64,
+}
+
+impl BatchNystrom {
+    /// Build from data `x` (`n` rows) and subset row indices `subset`.
+    pub fn fit(kernel: &dyn Kernel, x: &Mat, subset: &[usize]) -> Result<Self, String> {
+        let m = subset.len();
+        let sub = Mat::from_fn(m, x.cols(), |i, j| x[(subset[i], j)]);
+        let kmm = gram(kernel, &sub);
+        let knm = cross_gram(kernel, x, &sub);
+        let eg = eigh(&kmm)?;
+        Ok(BatchNystrom { knm, values: eg.values, vectors: eg.vectors, rcond: 1e-12 })
+    }
+
+    /// Approximate eigenpairs of the full `K` per eq. (7):
+    /// `Λⁿʸˢ = (n/m) Λ`, `Uⁿʸˢ = √(m/n) K_{n,m} U Λ⁻¹`.
+    pub fn approx_eigs(&self) -> (Vec<f64>, Mat) {
+        let n = self.knm.rows();
+        let m = self.values.len();
+        let (nf, mf) = (n as f64, m as f64);
+        let lam_max = self.values.iter().fold(0.0_f64, |a, &b| a.max(b.abs()));
+        let cutoff = self.rcond * lam_max;
+        let vals_nys: Vec<f64> = self.values.iter().map(|l| l * nf / mf).collect();
+        // U Λ⁻¹ with pseudo-inverse cutoff.
+        let mut ulinv = self.vectors.clone();
+        for j in 0..m {
+            let l = self.values[j];
+            let inv = if l.abs() > cutoff { 1.0 / l } else { 0.0 };
+            for i in 0..m {
+                ulinv[(i, j)] *= inv;
+            }
+        }
+        let mut u_nys = matmul(&self.knm, &ulinv);
+        u_nys.scale((mf / nf).sqrt());
+        (vals_nys, u_nys)
+    }
+
+    /// The approximation `K̃ = Uⁿʸˢ Λⁿʸˢ Uⁿʸˢᵀ  (= K_{n,m} K⁺_{m,m} K_{m,n})`.
+    pub fn approx_gram(&self) -> Mat {
+        let (vals, u) = self.approx_eigs();
+        let n = u.rows();
+        let m = u.cols();
+        let mut ul = u.clone();
+        for i in 0..n {
+            for j in 0..m {
+                ul[(i, j)] *= vals[j];
+            }
+        }
+        matmul_nt(&ul, &u)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::yeast_like;
+    use crate::kernels::Rbf;
+    use crate::linalg::Cholesky;
+
+    #[test]
+    fn matches_direct_inverse_formula() {
+        let ds = yeast_like(30, 1);
+        let kern = Rbf { sigma: 1.0 };
+        let subset: Vec<usize> = (0..10).collect();
+        let nys = BatchNystrom::fit(&kern, &ds.x, &subset).unwrap();
+        // Direct: K_{n,m} K_{m,m}⁻¹ K_{m,n} via Cholesky.
+        let sub = ds.x.submatrix(10, ds.dim());
+        let kmm = crate::kernels::gram(&kern, &sub);
+        let mut kmm_reg = kmm.clone();
+        for i in 0..10 {
+            kmm_reg[(i, i)] += 1e-12;
+        }
+        let ch = Cholesky::new(&kmm_reg).unwrap();
+        let inv = ch.inverse();
+        let direct = matmul(&matmul(&nys.knm, &inv), &nys.knm.transpose());
+        assert!(nys.approx_gram().max_abs_diff(&direct) < 1e-6);
+    }
+
+    #[test]
+    fn full_subset_reproduces_k_exactly() {
+        let ds = yeast_like(12, 2);
+        let kern = Rbf { sigma: 1.0 };
+        let subset: Vec<usize> = (0..12).collect();
+        let nys = BatchNystrom::fit(&kern, &ds.x, &subset).unwrap();
+        let k = crate::kernels::gram(&kern, &ds.x);
+        assert!(nys.approx_gram().max_abs_diff(&k) < 1e-8);
+    }
+
+    #[test]
+    fn approximation_error_decreases_with_subset_size() {
+        let ds = yeast_like(40, 3);
+        let kern = Rbf { sigma: 1.0 };
+        let k = crate::kernels::gram(&kern, &ds.x);
+        let err = |m: usize| {
+            let subset: Vec<usize> = (0..m).collect();
+            let nys = BatchNystrom::fit(&kern, &ds.x, &subset).unwrap();
+            crate::linalg::frobenius(&k.sub(&nys.approx_gram()))
+        };
+        let (e5, e20, e35) = (err(5), err(20), err(35));
+        assert!(e20 < e5, "{e20} !< {e5}");
+        assert!(e35 < e20, "{e35} !< {e20}");
+    }
+
+    #[test]
+    fn psd_approximation() {
+        let ds = yeast_like(20, 4);
+        let kern = Rbf { sigma: 0.8 };
+        let subset: Vec<usize> = (0..7).collect();
+        let nys = BatchNystrom::fit(&kern, &ds.x, &subset).unwrap();
+        let vals = crate::linalg::eigvalsh(&nys.approx_gram()).unwrap();
+        assert!(vals[0] > -1e-9);
+    }
+}

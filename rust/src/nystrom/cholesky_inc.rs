@@ -1,0 +1,159 @@
+//! Rudi, Camoriano & Rosasco (2015)-style incremental Nyström via
+//! rank-one *Cholesky* updates — the prior work the paper generalizes
+//! (§4). Maintains `K_{m,m} = L Lᵀ` through bordered expansion and
+//! computes `K̃ = (L⁻¹K_{m,n})ᵀ(L⁻¹K_{m,n})` by triangular solves,
+//! without ever forming an eigendecomposition. Serves as the comparison
+//! baseline for the ablation bench (which decomposition to update).
+
+use crate::kernels::{kernel_column, Kernel};
+use crate::linalg::{Cholesky, Mat, Norms};
+
+/// Incrementally grown Cholesky-based Nyström approximation.
+pub struct CholeskyNystrom<'k> {
+    kernel: &'k dyn Kernel,
+    x: Mat,
+    /// Cholesky factor of the subset Gram (plus jitter).
+    chol: Option<Cholesky>,
+    /// `n × m` cross-Gram.
+    pub knm: Mat,
+    pub subset: Vec<usize>,
+    /// Diagonal jitter guaranteeing positive-definite expansion.
+    pub jitter: f64,
+    /// Points rejected because expansion lost positive definiteness.
+    pub rejected: usize,
+}
+
+impl<'k> CholeskyNystrom<'k> {
+    pub fn new(kernel: &'k dyn Kernel, x: Mat) -> Self {
+        let n = x.rows();
+        CholeskyNystrom {
+            kernel,
+            x,
+            chol: None,
+            knm: Mat::zeros(n, 0),
+            subset: Vec::new(),
+            jitter: 1e-10,
+            rejected: 0,
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.x.rows()
+    }
+
+    pub fn m(&self) -> usize {
+        self.subset.len()
+    }
+
+    /// Add evaluation point `idx` to the subset. Returns `false` when
+    /// the bordered Cholesky expansion fails (rank-degenerate point).
+    pub fn add_point(&mut self, idx: usize) -> Result<bool, String> {
+        let xi = self.x.row(idx).to_vec();
+        let m = self.m();
+        // Kernel column against the current subset + self-similarity.
+        let sub = Mat::from_fn(m, self.x.cols(), |i, j| self.x[(self.subset[i], j)]);
+        let col: Vec<f64> = (0..m).map(|i| self.kernel.eval(sub.row(i), &xi)).collect();
+        let kself = self.kernel.eval(&xi, &xi) + self.jitter;
+        match self.chol.as_mut() {
+            None => {
+                if kself <= 0.0 {
+                    self.rejected += 1;
+                    return Ok(false);
+                }
+                self.chol =
+                    Some(Cholesky::new(&Mat::from_vec(1, 1, vec![kself])).map_err(|e| e)?);
+            }
+            Some(ch) => {
+                if ch.expand(&col, kself).is_err() {
+                    self.rejected += 1;
+                    return Ok(false);
+                }
+            }
+        }
+        // Append the K_{n,m} column.
+        let full_col = kernel_column(self.kernel, &self.x, self.n(), &xi);
+        let n = self.n();
+        let mut grown = Mat::zeros(n, m + 1);
+        for i in 0..n {
+            for j in 0..m {
+                grown[(i, j)] = self.knm[(i, j)];
+            }
+            grown[(i, m)] = full_col[i];
+        }
+        self.knm = grown;
+        self.subset.push(idx);
+        Ok(true)
+    }
+
+    /// The approximation `K̃ = K_{n,m} (LLᵀ)⁻¹ K_{m,n}` via triangular
+    /// solves: `B = L⁻¹ K_{m,n}` then `K̃ = Bᵀ B`.
+    pub fn approx_gram(&self) -> Mat {
+        let m = self.m();
+        let n = self.n();
+        if m == 0 {
+            return Mat::zeros(n, n);
+        }
+        let ch = self.chol.as_ref().unwrap();
+        // Solve L b = K_{m,n} column-wise (columns of K_{m,n} are rows
+        // of knm).
+        let mut b = Mat::zeros(m, n);
+        for j in 0..n {
+            let rhs: Vec<f64> = (0..m).map(|i| self.knm[(j, i)]).collect();
+            let y = ch.solve_lower(&rhs);
+            for i in 0..m {
+                b[(i, j)] = y[i];
+            }
+        }
+        crate::linalg::matmul(&b.transpose(), &b)
+    }
+
+    /// Fig. 2-style error norms against the full Gram.
+    pub fn error_norms(&self, k_full: &Mat) -> Norms {
+        crate::linalg::sym_norms(&k_full.sub(&self.approx_gram()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::yeast_like;
+    use crate::kernels::{gram, Rbf};
+    use crate::nystrom::IncrementalNystrom;
+
+    #[test]
+    fn agrees_with_eigen_based_incremental() {
+        let ds = yeast_like(20, 1);
+        let kern = Rbf { sigma: 1.0 };
+        let mut chol = CholeskyNystrom::new(&kern, ds.x.clone());
+        let mut eig = IncrementalNystrom::new(&kern, ds.x.clone()).unwrap();
+        for m in 0..8 {
+            assert!(chol.add_point(m).unwrap());
+            assert!(eig.add_point(m).unwrap());
+        }
+        let diff = chol.approx_gram().max_abs_diff(&eig.approx_gram());
+        assert!(diff < 1e-5, "cholesky vs eigen Nyström diff {diff}");
+    }
+
+    #[test]
+    fn duplicate_point_rejected() {
+        let ds = yeast_like(10, 2);
+        let kern = Rbf { sigma: 1.0 };
+        let mut chol = CholeskyNystrom::new(&kern, ds.x.clone());
+        chol.jitter = 0.0; // make degeneracy exact
+        assert!(chol.add_point(3).unwrap());
+        assert!(!chol.add_point(3).unwrap());
+        assert_eq!(chol.rejected, 1);
+        assert_eq!(chol.m(), 1);
+    }
+
+    #[test]
+    fn empty_subset_zero_approximation() {
+        let ds = yeast_like(6, 3);
+        let kern = Rbf { sigma: 1.0 };
+        let chol = CholeskyNystrom::new(&kern, ds.x.clone());
+        assert_eq!(chol.approx_gram().max_abs(), 0.0);
+        let k = gram(&kern, &ds.x);
+        let norms = chol.error_norms(&k);
+        assert!((norms.frobenius - crate::linalg::frobenius(&k)).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,204 @@
+//! §4 — incremental calculation of the Nyström approximation: the
+//! subset eigensystem `K_{m,m} = UΛUᵀ` is maintained by the paper's
+//! incremental algorithm (rank-one updates), `K_{n,m}` gains one column
+//! per added subset point, and the rescaling of eq. (7) produces the
+//! approximate eigensystem of the full `K` at every step — *exactly*
+//! reproducing batch computation at each `m` (paper §4), which the tests
+//! assert.
+
+use crate::kernels::{kernel_column, Kernel};
+use crate::linalg::{matmul, matmul_nt, Mat, Norms};
+use crate::rankone::Rotate;
+
+use crate::kpca::IncrementalKpca;
+
+/// Incrementally grown Nyström approximation over a fixed evaluation
+/// set of `n` points.
+pub struct IncrementalNystrom<'k> {
+    kernel: &'k dyn Kernel,
+    /// All `n` data points the approximation is evaluated over.
+    x: Mat,
+    /// Incremental eigendecomposition of the (unadjusted) subset Gram.
+    pub inc: IncrementalKpca<'k>,
+    /// `n × m` cross-Gram, one column appended per subset point.
+    pub knm: Mat,
+    /// Indices (into `x`) of the current subset, in insertion order.
+    pub subset: Vec<usize>,
+    /// Relative eigenvalue cutoff for the pseudo-inverse in eq. (7).
+    pub rcond: f64,
+}
+
+impl<'k> IncrementalNystrom<'k> {
+    /// Start with an empty subset over evaluation points `x`.
+    pub fn new(kernel: &'k dyn Kernel, x: Mat) -> Result<Self, String> {
+        let dim = x.cols();
+        let empty = Mat::zeros(0, dim);
+        let inc = IncrementalKpca::from_batch(kernel, &empty, false)?;
+        let n = x.rows();
+        Ok(IncrementalNystrom {
+            kernel,
+            knm: Mat::zeros(n, 0),
+            x,
+            inc,
+            subset: Vec::new(),
+            rcond: 1e-12,
+        })
+    }
+
+    pub fn n(&self) -> usize {
+        self.x.rows()
+    }
+
+    /// Current subset size `m`.
+    pub fn m(&self) -> usize {
+        self.subset.len()
+    }
+
+    /// Add evaluation point `idx` to the subset (with the native rotate
+    /// engine).
+    pub fn add_point(&mut self, idx: usize) -> Result<bool, String> {
+        self.add_point_with(idx, &crate::rankone::NativeRotate)
+    }
+
+    /// Add evaluation point `idx` to the subset, routing the rank-one
+    /// back-rotations through `engine`. Returns `Ok(false)` if the point
+    /// was rejected as rank-degenerate.
+    pub fn add_point_with(&mut self, idx: usize, engine: &dyn Rotate) -> Result<bool, String> {
+        assert!(idx < self.n(), "subset index out of range");
+        let xi = self.x.row(idx).to_vec();
+        if !self.inc.push_with(&xi, engine)? {
+            return Ok(false);
+        }
+        // Append the new K_{n,m} column k(x_j, x_idx) for all j.
+        let col = kernel_column(self.kernel, &self.x, self.n(), &xi);
+        let n = self.n();
+        let m_new = self.m() + 1;
+        let mut grown = Mat::zeros(n, m_new);
+        for i in 0..n {
+            for j in 0..m_new - 1 {
+                grown[(i, j)] = self.knm[(i, j)];
+            }
+            grown[(i, m_new - 1)] = col[i];
+        }
+        self.knm = grown;
+        self.subset.push(idx);
+        Ok(true)
+    }
+
+    /// Approximate eigenpairs of the full `K` per eq. (7).
+    pub fn approx_eigs(&self) -> (Vec<f64>, Mat) {
+        let n = self.n();
+        let m = self.m();
+        let (nf, mf) = (n as f64, m as f64);
+        let lam_max = self.inc.vals.iter().fold(0.0_f64, |a, &b| a.max(b.abs()));
+        let cutoff = self.rcond * lam_max;
+        let vals: Vec<f64> = self.inc.vals.iter().map(|l| l * nf / mf).collect();
+        let mut ulinv = self.inc.vecs.clone();
+        for j in 0..m {
+            let l = self.inc.vals[j];
+            let inv = if l.abs() > cutoff { 1.0 / l } else { 0.0 };
+            for i in 0..m {
+                ulinv[(i, j)] *= inv;
+            }
+        }
+        let mut u = matmul(&self.knm, &ulinv);
+        u.scale((mf / nf).sqrt());
+        (vals, u)
+    }
+
+    /// The current approximation `K̃`.
+    pub fn approx_gram(&self) -> Mat {
+        let (vals, u) = self.approx_eigs();
+        let (n, m) = (u.rows(), u.cols());
+        let mut ul = u.clone();
+        for i in 0..n {
+            for j in 0..m {
+                ul[(i, j)] *= vals[j];
+            }
+        }
+        matmul_nt(&ul, &u)
+    }
+
+    /// Error norms `‖K − K̃‖` against a precomputed full Gram matrix —
+    /// the Fig. 2 measurement at the current `m`.
+    pub fn error_norms(&self, k_full: &Mat) -> Norms {
+        crate::linalg::sym_norms(&k_full.sub(&self.approx_gram()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{magic_like, yeast_like};
+    use crate::kernels::{gram, Rbf};
+    use crate::nystrom::BatchNystrom;
+
+    #[test]
+    fn incremental_equals_batch_at_every_m() {
+        // The §4 guarantee: the incremental Nyström approximation
+        // *exactly* reproduces the batch one at each subset size.
+        let ds = yeast_like(25, 1);
+        let kern = Rbf { sigma: 1.0 };
+        let mut inys = IncrementalNystrom::new(&kern, ds.x.clone()).unwrap();
+        for m in 0..10 {
+            assert!(inys.add_point(m).unwrap());
+            let batch =
+                BatchNystrom::fit(&kern, &ds.x, &(0..=m).collect::<Vec<_>>()).unwrap();
+            let diff = inys.approx_gram().max_abs_diff(&batch.approx_gram());
+            assert!(diff < 1e-7, "m={m}: diff {diff}");
+        }
+    }
+
+    #[test]
+    fn error_decreases_and_full_subset_is_exact() {
+        let ds = magic_like(20, 2);
+        let mut std = ds.clone();
+        std.standardize();
+        let kern = Rbf { sigma: crate::kernels::median_heuristic(&std.x, 50) };
+        let k_full = gram(&kern, &std.x);
+        let mut inys = IncrementalNystrom::new(&kern, std.x.clone()).unwrap();
+        let mut prev = f64::INFINITY;
+        for m in 0..20 {
+            inys.add_point(m).unwrap();
+            let e = crate::linalg::frobenius(&k_full.sub(&inys.approx_gram()));
+            if m == 4 || m == 12 {
+                assert!(e <= prev + 1e-9, "error rose at m={m}");
+                prev = e;
+            }
+        }
+        let e_final = crate::linalg::frobenius(&k_full.sub(&inys.approx_gram()));
+        assert!(e_final < 1e-6, "full subset error {e_final}");
+    }
+
+    #[test]
+    fn approx_eigs_shapes_and_scaling() {
+        let ds = yeast_like(15, 3);
+        let kern = Rbf { sigma: 1.0 };
+        let mut inys = IncrementalNystrom::new(&kern, ds.x.clone()).unwrap();
+        for m in 0..5 {
+            inys.add_point(m).unwrap();
+        }
+        let (vals, u) = inys.approx_eigs();
+        assert_eq!(vals.len(), 5);
+        assert_eq!(u.rows(), 15);
+        assert_eq!(u.cols(), 5);
+        // Eigenvalue scaling: Λⁿʸˢ = (n/m) Λ.
+        for (nys, lam) in vals.iter().zip(inys.inc.vals.iter()) {
+            assert!((nys - lam * 15.0 / 5.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn error_norms_bundle_consistent() {
+        let ds = yeast_like(12, 4);
+        let kern = Rbf { sigma: 1.0 };
+        let k_full = gram(&kern, &ds.x);
+        let mut inys = IncrementalNystrom::new(&kern, ds.x.clone()).unwrap();
+        for m in 0..4 {
+            inys.add_point(m).unwrap();
+        }
+        let norms = inys.error_norms(&k_full);
+        assert!(norms.spectral <= norms.frobenius + 1e-9);
+        assert!(norms.frobenius <= norms.trace + 1e-9);
+    }
+}

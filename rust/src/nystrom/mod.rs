@@ -1,0 +1,13 @@
+//! The Nyström method (§2.4) and the paper's §4 contribution: the first
+//! incremental algorithm for the full Nyström approximation, built on
+//! the incremental eigendecomposition of `K_{m,m}` plus the rescaling of
+//! eq. (7). Also includes a Rudi-et-al.-2015-style incremental-Cholesky
+//! variant as a comparison baseline.
+
+pub mod batch;
+pub mod cholesky_inc;
+pub mod incremental;
+
+pub use batch::BatchNystrom;
+pub use cholesky_inc::CholeskyNystrom;
+pub use incremental::IncrementalNystrom;

@@ -1,0 +1,465 @@
+//! Rank-one modification of the symmetric eigenproblem
+//! (Bunch–Nielsen–Sorensen 1978), the engine under both of the paper's
+//! incremental algorithms (§3.2):
+//!
+//! given `A = U Λ Uᵀ`, compute the eigendecomposition of `A + σ v vᵀ` as
+//! `U Ũ Λ̃ Ũᵀ Uᵀ` where `Λ̃` solves the secular equation over `z = Uᵀv`
+//! and the columns of `Ũ` are `Dᵢ⁻¹z / ‖Dᵢ⁻¹z‖`, `Dᵢ = Λ − λ̃ᵢI`
+//! (paper eq. 6).
+//!
+//! The `2n³`-flop back-rotation `U · Ũ` dominates and is delegated to a
+//! pluggable [`Rotate`] engine: the native blocked GEMM, or a PJRT
+//! executable AOT-compiled from the Pallas kernel (see `runtime`).
+
+use crate::linalg::{gemv_t, norm2, Mat};
+use crate::secular::{deflate, solve_all, SecularRoot};
+
+/// Engine for the `U_active · W` product — the hot `2n³` path.
+pub trait Rotate {
+    /// Multiply `u` (`m × k`) by `w` (`k × k`).
+    fn rotate(&self, u: &Mat, w: &Mat) -> Mat;
+
+    /// Fused path: given the raw secular quantities, build the
+    /// normalized `W` internally and return `U·W` — the shape the AOT
+    /// Pallas artifact implements (runtime::PjrtRotate). Returning
+    /// `None` (default) makes `rank_one_update` build `W` in
+    /// pole-relative precision and call [`Rotate::rotate`].
+    fn rotate_fused(
+        &self,
+        _u: &Mat,
+        _z: &[f64],
+        _d: &[f64],
+        _roots: &[SecularRoot],
+    ) -> Option<Mat> {
+        None
+    }
+
+    /// Short engine label for metrics/logs.
+    fn name(&self) -> &'static str {
+        "unnamed"
+    }
+}
+
+/// Native engine: the in-tree blocked, parallel GEMM.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NativeRotate;
+
+impl Rotate for NativeRotate {
+    fn rotate(&self, u: &Mat, w: &Mat) -> Mat {
+        crate::linalg::matmul(u, w)
+    }
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+/// Diagnostics accumulated across updates (reported by §5.1-style
+/// experiments and the coordinator's metrics endpoint).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct UpdateStats {
+    /// Eigenpairs that passed through unchanged (tiny weight).
+    pub deflated: usize,
+    /// Givens rotations applied for (near-)repeated eigenvalues.
+    pub rotations: usize,
+    /// Secular roots solved.
+    pub solved: usize,
+}
+
+/// Relative deflation tolerance (on `|z|/‖z‖` and eigenvalue gaps).
+pub const DEFAULT_DEFLATE_TOL: f64 = 1e-14;
+
+/// Update the eigendecomposition `(vals ascending, vecs columns)` of a
+/// symmetric matrix under the perturbation `+ σ v vᵀ`, in place.
+///
+/// `vecs` is `m × n` with one column per eigenpair (for full
+/// decompositions `m == n`; the Hoegaerts top-k baseline uses `n < m`).
+pub fn rank_one_update(
+    vals: &mut Vec<f64>,
+    vecs: &mut Mat,
+    sigma: f64,
+    v: &[f64],
+    engine: &dyn Rotate,
+) -> Result<UpdateStats, String> {
+    rank_one_update_tol(vals, vecs, sigma, v, engine, DEFAULT_DEFLATE_TOL)
+}
+
+/// [`rank_one_update`] with an explicit deflation tolerance.
+pub fn rank_one_update_tol(
+    vals: &mut Vec<f64>,
+    vecs: &mut Mat,
+    sigma: f64,
+    v: &[f64],
+    engine: &dyn Rotate,
+    tol: f64,
+) -> Result<UpdateStats, String> {
+    let n = vals.len();
+    assert_eq!(vecs.cols(), n, "one eigenvector column per eigenvalue");
+    assert_eq!(vecs.rows(), v.len(), "v must live in the row space of vecs");
+    if n == 0 || sigma == 0.0 {
+        return Ok(UpdateStats::default());
+    }
+    debug_assert!(
+        vals.windows(2).all(|w| w[0] <= w[1]),
+        "eigenvalues must be ascending"
+    );
+
+    // z = Uᵀ v — project the perturbation into the eigenbasis.
+    let mut z = gemv_t(vecs, v);
+
+    // Deflate tiny weights / repeated eigenvalues (rotating U with z).
+    let def = deflate(vals, &mut z, Some(vecs), tol);
+    let k = def.active.len();
+    let stats = UpdateStats { deflated: def.deflated.len(), rotations: def.rotations, solved: k };
+    if k == 0 {
+        return Ok(stats);
+    }
+
+    // Secular solve on the active sub-problem.
+    let roots = solve_all(&def.d_active, &def.z_active, sigma)?;
+
+    // Gu–Eisenstat (1994) stabilization: recompute the weight vector ẑ
+    // from the solved roots via the characteristic-polynomial identity,
+    // so the eigenvector formula below is *exactly* consistent with the
+    // computed eigenvalues. Without this, clustered poles (fast-decaying
+    // kernel spectra) lose eigenvector orthogonality — the instability
+    // the paper's §3 cites Gu & Eisenstat for.
+    let z_hat = stabilized_weights(&def.d_active, &def.z_active, sigma, &roots);
+
+    // Gather U_active (m × k). Fast path: with nothing deflated the
+    // active set is the whole basis — rotate `vecs` in place and skip
+    // both O(mk) copies (measured ~15% of the update at m=256, §Perf).
+    let m = vecs.rows();
+    let full = def.deflated.is_empty() && def.active.len() == vecs.cols();
+    let u_active = if full {
+        std::mem::replace(vecs, Mat::zeros(0, 0))
+    } else {
+        let mut u = Mat::zeros(m, k);
+        for (c, &idx) in def.active.iter().enumerate() {
+            for r in 0..m {
+                u[(r, c)] = vecs[(r, idx)];
+            }
+        }
+        u
+    };
+
+    // Back-rotation: either the engine's fused path (AOT Pallas kernel
+    // building W on-device) or the native path, which assembles W here
+    // in pole-relative precision — eigenvectors of the inner problem are
+    // Ũ[:,i] = D̃ᵢ⁻¹ z / ‖·‖ over active coordinates (paper eq. 6) —
+    // and issues one engine GEMM for the 2mk² product.
+    let rotated = match engine.rotate_fused(&u_active, &z_hat, &def.d_active, &roots) {
+        Some(r) => r,
+        None => {
+            let mut w = Mat::zeros(k, k);
+            for (i, root) in roots.iter().enumerate() {
+                let mut col = vec![0.0; k];
+                for j in 0..k {
+                    col[j] = z_hat[j] / root.diff(&def.d_active, j);
+                }
+                let nrm = norm2(&col);
+                if nrm == 0.0 || !nrm.is_finite() {
+                    return Err(format!("rank_one_update: degenerate eigenvector at root {i}"));
+                }
+                for j in 0..k {
+                    w[(j, i)] = col[j] / nrm;
+                }
+            }
+            engine.rotate(&u_active, &w)
+        }
+    };
+    if full {
+        // Roots are already ascending and cover every position.
+        for (c, root) in roots.iter().enumerate() {
+            vals[c] = root.value;
+        }
+        *vecs = rotated;
+        return Ok(stats);
+    }
+    for (c, &idx) in def.active.iter().enumerate() {
+        vals[idx] = roots[c].value;
+        for r in 0..m {
+            vecs[(r, idx)] = rotated[(r, c)];
+        }
+    }
+
+    // Restore the ascending invariant (deflated values may now be out of
+    // order relative to moved roots).
+    sort_pairs(vals, vecs);
+    Ok(stats)
+}
+
+/// Gu–Eisenstat weight recomputation: given sorted poles `d`, original
+/// weights `z` (signs only), strength `sigma` and the solved roots,
+/// return `ẑ` with `ẑⱼ² = ∏ᵢ(λ̃ᵢ − dⱼ) / (σ ∏_{i≠j}(dᵢ − dⱼ))`,
+/// evaluated in interlacing-paired form so every factor is an `O(1)`
+/// ratio (no overflow for large `n`). All differences `λ̃ᵢ − dⱼ` are
+/// formed pole-relatively through [`SecularRoot::diff`].
+fn stabilized_weights(
+    d: &[f64],
+    z: &[f64],
+    sigma: f64,
+    roots: &[crate::secular::SecularRoot],
+) -> Vec<f64> {
+    let n = d.len();
+    let mut zhat = vec![0.0; n];
+    for j in 0..n {
+        let mut prod: f64;
+        if sigma > 0.0 {
+            // Interlacing: dᵢ < λ̃ᵢ < dᵢ₊₁, λ̃ₙ₋₁ < dₙ₋₁ + σ‖z‖².
+            prod = -roots[n - 1].diff(d, j); // λ̃ₙ₋₁ − dⱼ > 0
+            for i in 0..j {
+                prod *= roots[i].diff(d, j) / (d[j] - d[i]); // (dⱼ−λ̃ᵢ)/(dⱼ−dᵢ)
+            }
+            for i in j..n - 1 {
+                prod *= -roots[i].diff(d, j) / (d[i + 1] - d[j]); // (λ̃ᵢ−dⱼ)/(dᵢ₊₁−dⱼ)
+            }
+            prod /= sigma;
+        } else {
+            // Interlacing: dᵢ₋₁ < λ̃ᵢ < dᵢ, λ̃₀ > d₀ + σ‖z‖².
+            prod = roots[0].diff(d, j); // dⱼ − λ̃₀ > 0
+            for i in 1..=j {
+                prod *= roots[i].diff(d, j) / (d[j] - d[i - 1]); // (dⱼ−λ̃ᵢ)/(dⱼ−dᵢ₋₁)
+            }
+            for i in (j + 1)..n {
+                prod *= -roots[i].diff(d, j) / (d[i] - d[j]); // (λ̃ᵢ−dⱼ)/(dᵢ−dⱼ)
+            }
+            prod /= -sigma;
+        }
+        // Rounding can push a should-be-nonnegative product slightly
+        // negative near exact deflation; clamp and fall back to the
+        // original weight magnitude when degenerate.
+        if prod.is_finite() && prod > 0.0 {
+            zhat[j] = prod.sqrt().copysign(z[j]);
+        } else {
+            zhat[j] = z[j];
+        }
+    }
+    zhat
+}
+
+/// Expand an eigensystem with a new decoupled eigenpair
+/// `(new_val, eₘ₊₁)` — the paper's expansion step before the two
+/// rank-one updates (Algorithm 1 lines 1–2 / Algorithm 2 lines 13–14),
+/// then restore ascending order as eq. (5)'s note requires.
+pub fn expand_eigensystem(vals: &mut Vec<f64>, vecs: &mut Mat, new_val: f64) {
+    let m = vecs.rows();
+    let n = vecs.cols();
+    debug_assert_eq!(vals.len(), n);
+    let mut grown = Mat::zeros(m + 1, n + 1);
+    for i in 0..m {
+        for j in 0..n {
+            grown[(i, j)] = vecs[(i, j)];
+        }
+    }
+    grown[(m, n)] = 1.0;
+    *vecs = grown;
+    vals.push(new_val);
+    sort_pairs(vals, vecs);
+}
+
+/// Sort eigenpairs ascending, permuting columns alongside values.
+pub fn sort_pairs(vals: &mut [f64], vecs: &mut Mat) {
+    let n = vals.len();
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&a, &b| vals[a].partial_cmp(&vals[b]).unwrap());
+    if idx.iter().enumerate().all(|(i, &j)| i == j) {
+        return;
+    }
+    let vals_old = vals.to_vec();
+    let vecs_old = vecs.clone();
+    for (newj, &oldj) in idx.iter().enumerate() {
+        vals[newj] = vals_old[oldj];
+        for i in 0..vecs.rows() {
+            vecs[(i, newj)] = vecs_old[(i, oldj)];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{eigh, matmul, orthogonality_defect};
+    use crate::util::Rng;
+
+    fn rand_sym(n: usize, rng: &mut Rng) -> Mat {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let v = rng.range(-1.0, 1.0);
+                m[(i, j)] = v;
+                m[(j, i)] = v;
+            }
+        }
+        m
+    }
+
+    fn check_update(n: usize, sigma: f64, seed: u64, tol: f64) {
+        let mut rng = Rng::new(seed);
+        let a = rand_sym(n, &mut rng);
+        let eg = eigh(&a).unwrap();
+        let mut vals = eg.values.clone();
+        let mut vecs = eg.vectors.clone();
+        let v: Vec<f64> = (0..n).map(|_| rng.range(-1.0, 1.0)).collect();
+        rank_one_update(&mut vals, &mut vecs, sigma, &v, &NativeRotate).unwrap();
+        // Reference: dense eigendecomposition of A + σvvᵀ.
+        let mut b = a.clone();
+        b.syr(sigma, &v);
+        let expect = eigh(&b).unwrap();
+        for (u, w) in vals.iter().zip(expect.values.iter()) {
+            assert!((u - w).abs() < tol, "n={n} sigma={sigma}: {u} vs {w}");
+        }
+        // Reconstruction check (eigenvector quality).
+        let rec = {
+            let mut vl = vecs.clone();
+            for i in 0..n {
+                for j in 0..n {
+                    vl[(i, j)] *= vals[j];
+                }
+            }
+            crate::linalg::matmul_nt(&vl, &vecs)
+        };
+        assert!(rec.max_abs_diff(&b) < tol * 10.0, "reconstruction n={n}");
+        assert!(orthogonality_defect(&vecs) < 1e-10);
+    }
+
+    #[test]
+    fn update_matches_dense_small() {
+        check_update(4, 1.0, 1, 1e-9);
+        check_update(4, -0.5, 2, 1e-9);
+    }
+
+    #[test]
+    fn update_matches_dense_medium() {
+        check_update(24, 2.0, 3, 1e-8);
+        check_update(24, -1.3, 4, 1e-8);
+    }
+
+    #[test]
+    fn repeated_updates_stay_orthogonal() {
+        let n = 16;
+        let mut rng = Rng::new(9);
+        let a = rand_sym(n, &mut rng);
+        let eg = eigh(&a).unwrap();
+        let (mut vals, mut vecs) = (eg.values, eg.vectors);
+        for _ in 0..50 {
+            let v: Vec<f64> = (0..n).map(|_| rng.range(-0.5, 0.5)).collect();
+            let sigma = rng.range(0.2, 1.0);
+            rank_one_update(&mut vals, &mut vecs, sigma, &v, &NativeRotate).unwrap();
+        }
+        assert!(orthogonality_defect(&vecs) < 1e-8);
+        for w in vals.windows(2) {
+            assert!(w[0] <= w[1] + 1e-12);
+        }
+    }
+
+    #[test]
+    fn deflation_fires_on_aligned_perturbation() {
+        // v equal to an existing eigenvector: z has one nonzero entry →
+        // n−1 deflations, eigenvalue shifts by exactly σ.
+        let n = 6;
+        let mut rng = Rng::new(5);
+        let a = rand_sym(n, &mut rng);
+        let eg = eigh(&a).unwrap();
+        let (mut vals, mut vecs) = (eg.values.clone(), eg.vectors.clone());
+        let v = eg.vectors.col(2);
+        let stats = rank_one_update(&mut vals, &mut vecs, 0.7, &v, &NativeRotate).unwrap();
+        assert_eq!(stats.deflated, n - 1);
+        let mut expect = eg.values.clone();
+        expect[2] += 0.7;
+        expect.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for (u, w) in vals.iter().zip(expect.iter()) {
+            assert!((u - w).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn expand_inserts_sorted() {
+        let mut vals = vec![1.0, 3.0];
+        let mut vecs = Mat::eye(2);
+        expand_eigensystem(&mut vals, &mut vecs, 2.0);
+        assert_eq!(vals, vec![1.0, 2.0, 3.0]);
+        assert_eq!(vecs.rows(), 3);
+        // The new eigenvector e₃ must sit at the sorted position (col 1).
+        assert_eq!(vecs[(2, 1)], 1.0);
+        assert!(orthogonality_defect(&vecs) < 1e-15);
+    }
+
+    #[test]
+    fn zero_sigma_is_noop() {
+        let mut vals = vec![1.0, 2.0];
+        let mut vecs = Mat::eye(2);
+        let before = vecs.clone();
+        rank_one_update(&mut vals, &mut vecs, 0.0, &[0.3, 0.4], &NativeRotate).unwrap();
+        assert_eq!(vals, vec![1.0, 2.0]);
+        assert_eq!(vecs.max_abs_diff(&before), 0.0);
+    }
+
+    #[test]
+    fn property_random_updates_match_dense() {
+        crate::util::prop::check("rankone-matches-dense", 16, |rng| {
+            let n = 2 + rng.below(12);
+            let a = rand_sym(n, rng);
+            let eg = eigh(&a).map_err(|e| e.to_string())?;
+            let (mut vals, mut vecs) = (eg.values, eg.vectors);
+            let v: Vec<f64> = (0..n).map(|_| rng.range(-1.0, 1.0)).collect();
+            let sigma = rng.range(-2.0, 2.0);
+            rank_one_update(&mut vals, &mut vecs, sigma, &v, &NativeRotate)
+                .map_err(|e| e.to_string())?;
+            let mut b = a.clone();
+            b.syr(sigma, &v);
+            let expect = eigh(&b).map_err(|e| e.to_string())?;
+            for (u, w) in vals.iter().zip(expect.values.iter()) {
+                crate::util::prop::close("eigenvalue", *u, *w, 1e-7)?;
+            }
+            crate::util::prop::ensure(orthogonality_defect(&vecs) < 1e-8, || {
+                format!("orthogonality defect {}", orthogonality_defect(&vecs))
+            })
+        });
+    }
+
+    #[test]
+    fn interlacing_property_after_update() {
+        crate::util::prop::check("rankone-interlacing", 12, |rng| {
+            let n = 3 + rng.below(8);
+            let a = rand_sym(n, rng);
+            let eg = eigh(&a).map_err(|e| e.to_string())?;
+            let old = eg.values.clone();
+            let (mut vals, mut vecs) = (eg.values, eg.vectors);
+            let v: Vec<f64> = (0..n).map(|_| rng.range(-1.0, 1.0)).collect();
+            let sigma = rng.range(0.1, 2.0);
+            rank_one_update(&mut vals, &mut vecs, sigma, &v, &NativeRotate)
+                .map_err(|e| e.to_string())?;
+            // λᵢ ≤ λ̃ᵢ ≤ λᵢ₊₁ for σ > 0 (paper eq. 5).
+            for i in 0..n {
+                crate::util::prop::ensure(vals[i] >= old[i] - 1e-9, || {
+                    format!("lower interlace violated at {i}")
+                })?;
+                if i + 1 < n {
+                    crate::util::prop::ensure(vals[i] <= old[i + 1] + 1e-9, || {
+                        format!("upper interlace violated at {i}")
+                    })?;
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn rotate_engine_receives_gathered_panels() {
+        struct Spy(std::sync::atomic::AtomicUsize);
+        impl Rotate for Spy {
+            fn rotate(&self, u: &Mat, w: &Mat) -> Mat {
+                self.0.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                matmul(u, w)
+            }
+        }
+        let spy = Spy(std::sync::atomic::AtomicUsize::new(0));
+        let mut rng = Rng::new(31);
+        let a = rand_sym(8, &mut rng);
+        let eg = eigh(&a).unwrap();
+        let (mut vals, mut vecs) = (eg.values, eg.vectors);
+        let v: Vec<f64> = (0..8).map(|_| rng.range(-1.0, 1.0)).collect();
+        rank_one_update(&mut vals, &mut vecs, 1.0, &v, &spy).unwrap();
+        assert_eq!(spy.0.load(std::sync::atomic::Ordering::Relaxed), 1);
+    }
+}

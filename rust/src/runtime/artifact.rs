@@ -1,0 +1,148 @@
+//! Artifact manifest and the shape-bucket ladder. `aot.py` lowers every
+//! L2 function at each bucket size; the runtime picks the smallest
+//! bucket ≥ the live problem size and pads inputs per the contract in
+//! [`crate::runtime::pad`].
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// One artifact entry from `manifest.tsv`.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub kind: String,
+    pub m: usize,
+    pub dim: usize,
+    pub path: PathBuf,
+}
+
+/// Parsed artifact manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    /// kind → bucket sizes ascending.
+    buckets: HashMap<String, Vec<usize>>,
+    /// (kind, m) → meta.
+    entries: HashMap<(String, usize), ArtifactMeta>,
+    /// Feature-dimension pad target (constant across artifacts).
+    pub dim: usize,
+}
+
+impl Manifest {
+    /// Load `manifest.tsv` from the artifacts directory.
+    pub fn load(dir: &Path) -> Result<Self, String> {
+        let path = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("read {}: {e} (run `make artifacts`)", path.display()))?;
+        let mut manifest = Manifest::default();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let f: Vec<&str> = line.split('\t').collect();
+            if f.len() != 5 {
+                return Err(format!("manifest: bad row '{line}'"));
+            }
+            let meta = ArtifactMeta {
+                name: f[0].to_string(),
+                kind: f[1].to_string(),
+                m: f[2].parse().map_err(|e| format!("manifest m: {e}"))?,
+                dim: f[3].parse().map_err(|e| format!("manifest dim: {e}"))?,
+                path: dir.join(f[4]),
+            };
+            if !meta.path.exists() {
+                return Err(format!("artifact file missing: {}", meta.path.display()));
+            }
+            manifest.dim = meta.dim;
+            manifest.buckets.entry(meta.kind.clone()).or_default().push(meta.m);
+            manifest.entries.insert((meta.kind.clone(), meta.m), meta);
+        }
+        for v in manifest.buckets.values_mut() {
+            v.sort_unstable();
+            v.dedup();
+        }
+        if manifest.entries.is_empty() {
+            return Err("manifest: no artifacts".into());
+        }
+        Ok(manifest)
+    }
+
+    /// Bucket sizes available for an artifact kind, ascending.
+    pub fn buckets(&self, kind: &str) -> &[usize] {
+        self.buckets.get(kind).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    /// Smallest bucket that fits `size`.
+    pub fn bucket_for(&self, kind: &str, size: usize) -> Option<usize> {
+        self.buckets(kind).iter().copied().find(|&b| b >= size)
+    }
+
+    /// Artifact metadata for `(kind, bucket)`.
+    pub fn entry(&self, kind: &str, bucket: usize) -> Option<&ArtifactMeta> {
+        self.entries.get(&(kind.to_string(), bucket))
+    }
+
+    pub fn kinds(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.buckets.keys().map(|s| s.as_str()).collect();
+        v.sort_unstable();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, rows: &[&str]) {
+        std::fs::create_dir_all(dir).unwrap();
+        let mut text = String::from("# header\n");
+        for r in rows {
+            text.push_str(r);
+            text.push('\n');
+            let path = r.split('\t').last().unwrap();
+            std::fs::write(dir.join(path), "HloModule stub").unwrap();
+        }
+        std::fs::write(dir.join("manifest.tsv"), text).unwrap();
+    }
+
+    #[test]
+    fn loads_and_selects_buckets() {
+        let dir = std::env::temp_dir().join("inkpca_manifest_test");
+        write_manifest(
+            &dir,
+            &[
+                "gram_64\tgram\t64\t16\tgram_64.hlo.txt",
+                "gram_256\tgram\t256\t16\tgram_256.hlo.txt",
+                "gram_128\tgram\t128\t16\tgram_128.hlo.txt",
+            ],
+        );
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.buckets("gram"), &[64, 128, 256]);
+        assert_eq!(m.bucket_for("gram", 1), Some(64));
+        assert_eq!(m.bucket_for("gram", 64), Some(64));
+        assert_eq!(m.bucket_for("gram", 65), Some(128));
+        assert_eq!(m.bucket_for("gram", 300), None);
+        assert_eq!(m.dim, 16);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_file_rejected() {
+        let dir = std::env::temp_dir().join("inkpca_manifest_missing");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.tsv"), "x\tgram\t64\t16\tnope.hlo.txt\n").unwrap();
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn real_manifest_if_present() {
+        let dir = Path::new("artifacts");
+        if dir.join("manifest.tsv").exists() {
+            let m = Manifest::load(dir).unwrap();
+            for kind in ["kernel_column", "eigvec_update", "gram", "nystrom_reconstruct"] {
+                assert!(!m.buckets(kind).is_empty(), "missing artifacts for {kind}");
+            }
+        }
+    }
+}

@@ -1,0 +1,84 @@
+//! The padding contract between the bucket-laddered AOT artifacts and
+//! live problem sizes:
+//!
+//! * **data rows** pad with zeros — RBF distances to a zero-padded
+//!   *feature* dimension are unchanged, and zero *rows* produce garbage
+//!   entries the caller slices away;
+//! * **z weights** pad with `0` — padded coordinates contribute nothing
+//!   to the rotation (kernel multiplies by `z`);
+//! * **eigenvalues** pad with ascending sentinels far above any real
+//!   spectrum (`SENTINEL + j`), keeping denominators `λⱼ − λ̃ᵢ` huge so
+//!   padded columns stay finite and bounded before being sliced away.
+
+use crate::linalg::Mat;
+
+/// Base value for sentinel eigenvalues. Real kernel eigenvalues in this
+/// system are ≤ `n·max k(x,x)` ≲ 1e6; 1e12 keeps sentinel gaps dominant.
+pub const SENTINEL: f64 = 1e12;
+
+/// Zero-pad a matrix to `rows × cols`.
+pub fn pad_mat(a: &Mat, rows: usize, cols: usize) -> Mat {
+    assert!(rows >= a.rows() && cols >= a.cols());
+    let mut p = Mat::zeros(rows, cols);
+    for i in 0..a.rows() {
+        for j in 0..a.cols() {
+            p[(i, j)] = a[(i, j)];
+        }
+    }
+    p
+}
+
+/// Zero-pad a vector to `len`.
+pub fn pad_zeros(v: &[f64], len: usize) -> Vec<f64> {
+    assert!(len >= v.len());
+    let mut p = v.to_vec();
+    p.resize(len, 0.0);
+    p
+}
+
+/// Pad eigenvalues with ascending sentinels (`offset` shifts the
+/// sentinel series so poles and roots never collide with each other).
+pub fn pad_sentinels(v: &[f64], len: usize, offset: f64) -> Vec<f64> {
+    assert!(len >= v.len());
+    let mut p = v.to_vec();
+    for j in p.len()..len {
+        p.push(SENTINEL + j as f64 + offset);
+    }
+    p
+}
+
+/// Slice the leading `rows × cols` block out of a padded result.
+pub fn unpad_mat(a: &Mat, rows: usize, cols: usize) -> Mat {
+    a.submatrix(rows, cols)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pad_roundtrip() {
+        let a = Mat::from_fn(3, 2, |i, j| (i * 2 + j) as f64);
+        let p = pad_mat(&a, 8, 8);
+        assert_eq!(p[(2, 1)], 5.0);
+        assert_eq!(p[(3, 0)], 0.0);
+        assert!(unpad_mat(&p, 3, 2).max_abs_diff(&a) < 1e-15);
+    }
+
+    #[test]
+    fn sentinels_ascend_and_dont_collide() {
+        let poles = pad_sentinels(&[1.0, 2.0], 6, 0.0);
+        let roots = pad_sentinels(&[1.5, 2.5], 6, 0.5);
+        for w in poles.windows(2) {
+            assert!(w[0] < w[1]);
+        }
+        for (p, r) in poles.iter().zip(roots.iter()).skip(2) {
+            assert!((p - r).abs() > 0.4);
+        }
+    }
+
+    #[test]
+    fn pad_zeros_length() {
+        assert_eq!(pad_zeros(&[1.0], 3), vec![1.0, 0.0, 0.0]);
+    }
+}

@@ -1,0 +1,162 @@
+//! Deflation for the rank-one updated eigenproblem (§5.1 of the paper;
+//! Bunch–Nielsen–Sorensen 1978 §4). Two situations let an eigenpair
+//! pass through the update unchanged:
+//!
+//! 1. **tiny weight** — `|zᵢ| ≈ 0`: the perturbation does not move
+//!    eigenvalue `λᵢ` and its eigenvector is untouched;
+//! 2. **repeated eigenvalues** — `λᵢ ≈ λⱼ`: a Givens rotation in the
+//!    `(i, j)` plane (applied to the eigenvector basis too) zeroes one of
+//!    the two weights, reducing to case 1.
+//!
+//! The paper handles near-rank-deficiency by *excluding* the offending
+//! data example; deflation is strictly better (nothing is dropped) and
+//! we count deflations so experiments can report them (§5.1).
+
+use crate::linalg::Mat;
+
+/// Result of deflating `(d, z)` prior to the secular solve.
+#[derive(Clone, Debug)]
+pub struct Deflation {
+    /// Indices participating in the secular solve.
+    pub active: Vec<usize>,
+    /// Indices whose eigenpairs pass through unchanged.
+    pub deflated: Vec<usize>,
+    /// Weights (possibly rotated) for the active indices.
+    pub z_active: Vec<f64>,
+    /// Poles for the active indices (ascending).
+    pub d_active: Vec<f64>,
+    /// Number of Givens rotations applied for repeated eigenvalues.
+    pub rotations: usize,
+}
+
+/// Deflate the problem `Λ + σ z zᵀ` given ascending `d` and weights `z`.
+/// `u` is the current eigenvector matrix whose columns are rotated
+/// whenever a repeated-eigenvalue Givens rotation fires (pass `None`
+/// when the caller only needs eigenvalues).
+pub fn deflate(d: &[f64], z: &mut [f64], mut u: Option<&mut Mat>, tol: f64) -> Deflation {
+    let n = d.len();
+    assert_eq!(z.len(), n);
+    let znorm = z.iter().map(|x| x * x).sum::<f64>().sqrt();
+    let dscale = d.iter().fold(0.0_f64, |m, v| m.max(v.abs())).max(1e-300);
+    let ztol = tol * znorm.max(1e-300);
+    let dtol = tol * dscale;
+
+    let mut rotations = 0;
+    // Pass 1: rotate away weights on (near-)repeated eigenvalues. Scan
+    // adjacent pairs (d sorted): for |dᵢ − dⱼ| ≤ dtol, zero zⱼ into zᵢ.
+    let mut i = 0;
+    while i + 1 < n {
+        let mut j = i + 1;
+        while j < n && (d[j] - d[i]).abs() <= dtol {
+            if z[j].abs() > 0.0 {
+                let r = (z[i] * z[i] + z[j] * z[j]).sqrt();
+                if r > 0.0 {
+                    let c = z[i] / r;
+                    let s = z[j] / r;
+                    z[i] = r;
+                    z[j] = 0.0;
+                    if let Some(uu) = u.as_deref_mut() {
+                        // Rotate columns i and j of U: the diagonal block
+                        // is (near-)scalar, so it commutes with the
+                        // rotation to within tol.
+                        for row in 0..uu.rows() {
+                            let a = uu[(row, i)];
+                            let b = uu[(row, j)];
+                            uu[(row, i)] = c * a + s * b;
+                            uu[(row, j)] = -s * a + c * b;
+                        }
+                    }
+                    rotations += 1;
+                }
+            }
+            j += 1;
+        }
+        i = j.max(i + 1);
+    }
+
+    // Pass 2: partition by weight magnitude.
+    let mut active = Vec::new();
+    let mut deflated = Vec::new();
+    for k in 0..n {
+        if z[k].abs() <= ztol {
+            deflated.push(k);
+        } else {
+            active.push(k);
+        }
+    }
+    let d_active = active.iter().map(|&k| d[k]).collect();
+    let z_active = active.iter().map(|&k| z[k]).collect();
+    Deflation { active, deflated, z_active, d_active, rotations }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_weights_deflate() {
+        let d = vec![1.0, 2.0, 3.0];
+        let mut z = vec![0.5, 1e-18, 0.5];
+        let def = deflate(&d, &mut z, None, 1e-12);
+        assert_eq!(def.deflated, vec![1]);
+        assert_eq!(def.active, vec![0, 2]);
+        assert_eq!(def.d_active, vec![1.0, 3.0]);
+    }
+
+    #[test]
+    fn repeated_eigenvalues_rotated() {
+        let d = vec![1.0, 1.0, 2.0];
+        let mut z = vec![3.0, 4.0, 1.0];
+        let mut u = Mat::eye(3);
+        let def = deflate(&d, &mut z, Some(&mut u), 1e-12);
+        assert_eq!(def.rotations, 1);
+        // Combined weight magnitude preserved: √(3²+4²) = 5.
+        assert!((z[0] - 5.0).abs() < 1e-14);
+        assert_eq!(z[1], 0.0);
+        assert_eq!(def.deflated, vec![1]);
+        // U columns stay orthonormal after the rotation.
+        assert!(crate::linalg::orthogonality_defect(&u) < 1e-14);
+    }
+
+    #[test]
+    fn rotation_preserves_matrix() {
+        // U diag(d) Uᵀ + σ zzᵀ must be unchanged by the deflation
+        // rotation (U, z rotated together).
+        let d = vec![1.0, 1.0, 2.5];
+        let sigma = 0.7;
+        let mut z = vec![0.6, -0.8, 0.3];
+        let mut u = Mat::from_fn(3, 3, |i, j| ((i * 3 + j) as f64 * 0.9).sin());
+        // Orthonormalize u via eigh trick not needed; the identity we
+        // check is algebraic and holds for any U.
+        let before = {
+            let mut m = crate::linalg::matmul(
+                &crate::linalg::matmul(&u, &Mat::from_diag(&d)),
+                &u.transpose(),
+            );
+            let uz = crate::linalg::gemv(&u, &z);
+            m.syr(sigma, &uz);
+            m
+        };
+        let _ = deflate(&d, &mut z, Some(&mut u), 1e-12);
+        let after = {
+            let mut m = crate::linalg::matmul(
+                &crate::linalg::matmul(&u, &Mat::from_diag(&d)),
+                &u.transpose(),
+            );
+            let uz = crate::linalg::gemv(&u, &z);
+            m.syr(sigma, &uz);
+            m
+        };
+        assert!(before.max_abs_diff(&after) < 1e-12);
+    }
+
+    #[test]
+    fn no_deflation_when_well_separated() {
+        let d = vec![1.0, 2.0, 3.0];
+        let mut z = vec![0.5, 0.6, 0.7];
+        let def = deflate(&d, &mut z, None, 1e-12);
+        assert!(def.deflated.is_empty());
+        assert_eq!(def.active.len(), 3);
+        assert_eq!(def.rotations, 0);
+    }
+}

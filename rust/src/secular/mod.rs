@@ -1,0 +1,333 @@
+//! The secular equation solver at the heart of the paper's §3.2:
+//! eigenvalues of `Λ + σ z zᵀ` are the roots of
+//!
+//! ```text
+//! ω(λ̃) = 1 + σ Σᵢ zᵢ² / (λᵢ − λ̃)            (paper eq. 4, Golub 1973)
+//! ```
+//!
+//! bracketed by the interlacing bounds of eq. (5). Each root is found by
+//! a safeguarded Newton iteration in a *pole-relative* coordinate
+//! `δ = λ̃ − λ_origin`, which preserves relative accuracy when the root
+//! sits very close to a pole (the same device LAPACK's `dlaed4` uses).
+
+pub mod deflate;
+
+pub use deflate::{deflate, Deflation};
+
+/// One root of the secular equation, kept in pole-relative form so that
+/// downstream difference computations `λⱼ − λ̃ᵢ` can be formed without
+/// cancellation.
+#[derive(Clone, Copy, Debug)]
+pub struct SecularRoot {
+    /// Index of the pole `λ_origin` the root is expressed against.
+    pub origin: usize,
+    /// Offset from that pole; the root is `d[origin] + delta`.
+    pub delta: f64,
+    /// The root value itself (`d[origin] + delta`, precomputed).
+    pub value: f64,
+}
+
+impl SecularRoot {
+    /// Difference `d[j] − root`, formed in pole-relative coordinates.
+    #[inline]
+    pub fn diff(&self, d: &[f64], j: usize) -> f64 {
+        (d[j] - d[self.origin]) - self.delta
+    }
+}
+
+/// Evaluate `ω` and `ω'` at `origin + delta`, pole-relatively.
+fn eval(d: &[f64], z: &[f64], sigma: f64, origin: usize, delta: f64) -> (f64, f64) {
+    let mut s = 0.0;
+    let mut sp = 0.0;
+    for j in 0..d.len() {
+        let denom = (d[j] - d[origin]) - delta;
+        let t = z[j] / denom;
+        s += z[j] * t; // z²/denom
+        sp += t * t; // z²/denom²
+    }
+    (1.0 + sigma * s, sigma * sp)
+}
+
+/// Maximum Newton/bisection iterations per root.
+const MAX_ITER: usize = 120;
+
+/// Solve for the root of `ω` lying in `(origin + lo, origin + hi)` in
+/// pole-relative coordinates, where `ω` changes sign across the bracket.
+fn solve_in(
+    d: &[f64],
+    z: &[f64],
+    sigma: f64,
+    origin: usize,
+    mut lo: f64,
+    mut hi: f64,
+) -> Result<f64, String> {
+    debug_assert!(lo < hi);
+    // Nudge brackets strictly inside: ω is ±∞ at the poles themselves.
+    let width = hi - lo;
+    let tiny = width * 1e-15;
+    lo += tiny;
+    hi -= tiny;
+    let mut x = 0.5 * (lo + hi);
+    for _ in 0..MAX_ITER {
+        let (f, fp) = eval(d, z, sigma, origin, x);
+        if !f.is_finite() {
+            // Landed on a pole — bisect.
+            x = 0.5 * (lo + hi);
+            continue;
+        }
+        // Maintain the bracket. ω is monotone increasing iff σ > 0.
+        if (f > 0.0) == (sigma > 0.0) {
+            hi = x;
+        } else {
+            lo = x;
+        }
+        // Convergence: function tiny relative to its terms, or bracket
+        // exhausted at f64 resolution.
+        let scale: f64 = 1.0
+            + sigma.abs()
+                * z.iter()
+                    .zip(d)
+                    .map(|(zj, dj)| {
+                        let denom = (dj - d[origin]) - x;
+                        (zj * zj / denom).abs()
+                    })
+                    .sum::<f64>();
+        if f.abs() <= 8.0 * f64::EPSILON * scale {
+            return Ok(x);
+        }
+        if hi - lo <= 4.0 * f64::EPSILON * (x.abs().max(d[origin].abs()).max(1e-300)) {
+            return Ok(0.5 * (lo + hi));
+        }
+        // Newton step, safeguarded into the bracket.
+        let step = f / fp;
+        let mut next = x - step;
+        if !(next > lo && next < hi) || !next.is_finite() {
+            next = 0.5 * (lo + hi);
+        }
+        if next == x {
+            return Ok(x);
+        }
+        x = next;
+    }
+    Ok(x) // best effort after MAX_ITER — still inside the bracket
+}
+
+/// Solve the full secular equation for sorted poles `d` (ascending) and
+/// weights `z`, perturbation strength `sigma != 0`. Returns one root per
+/// pole, sorted ascending, each in pole-relative form.
+///
+/// Callers should deflate tiny `z` entries first (see [`deflate`]); a
+/// zero weight makes its interval degenerate (handled by returning the
+/// pole itself).
+pub fn solve_all(d: &[f64], z: &[f64], sigma: f64) -> Result<Vec<SecularRoot>, String> {
+    let n = d.len();
+    assert_eq!(z.len(), n);
+    if n == 0 {
+        return Ok(Vec::new());
+    }
+    debug_assert!(d.windows(2).all(|w| w[0] <= w[1]), "poles must be sorted");
+    let zz: f64 = z.iter().map(|x| x * x).sum();
+    if zz == 0.0 || sigma == 0.0 {
+        return Ok((0..n)
+            .map(|i| SecularRoot { origin: i, delta: 0.0, value: d[i] })
+            .collect());
+    }
+    let mut roots = Vec::with_capacity(n);
+    if sigma > 0.0 {
+        // Roots interlace from above: root i ∈ (λᵢ, λᵢ₊₁), last in
+        // (λₙ, λₙ + σ‖z‖²).                                 (eq. 5)
+        for i in 0..n {
+            let (origin, lo, hi);
+            if i + 1 < n {
+                let gap = d[i + 1] - d[i];
+                if gap == 0.0 {
+                    // Exactly repeated pole (caller should have deflated;
+                    // be safe): the root collapses onto the pole.
+                    roots.push(SecularRoot { origin: i, delta: 0.0, value: d[i] });
+                    continue;
+                }
+                // Choose the nearer pole as origin by probing the midpoint.
+                let (fmid, _) = eval(d, z, sigma, i, 0.5 * gap);
+                if fmid >= 0.0 {
+                    origin = i;
+                    lo = 0.0;
+                    hi = 0.5 * gap;
+                } else {
+                    origin = i + 1;
+                    lo = -0.5 * gap;
+                    hi = 0.0;
+                }
+            } else {
+                origin = n - 1;
+                lo = 0.0;
+                hi = sigma * zz;
+            }
+            let delta = solve_in(d, z, sigma, origin, lo, hi)?;
+            roots.push(SecularRoot { origin, delta, value: d[origin] + delta });
+        }
+    } else {
+        // σ < 0: roots interlace from below: root i ∈ (λᵢ₋₁, λᵢ),
+        // first in (λ₁ + σ‖z‖², λ₁).                        (eq. 5)
+        for i in 0..n {
+            let (origin, lo, hi);
+            if i > 0 {
+                let gap = d[i] - d[i - 1];
+                if gap == 0.0 {
+                    roots.push(SecularRoot { origin: i, delta: 0.0, value: d[i] });
+                    continue;
+                }
+                let (fmid, _) = eval(d, z, sigma, i, -0.5 * gap);
+                // ω decreases from +∞ at λᵢ₋₁⁺ to −∞ at λᵢ⁻: a
+                // non-positive midpoint value puts the root in the left
+                // half, nearer pole i−1.
+                if fmid <= 0.0 {
+                    origin = i - 1;
+                    lo = 0.0;
+                    hi = 0.5 * gap;
+                } else {
+                    origin = i;
+                    lo = -0.5 * gap;
+                    hi = 0.0;
+                }
+            } else {
+                origin = 0;
+                lo = sigma * zz; // negative
+                hi = 0.0;
+            }
+            let delta = solve_in(d, z, sigma, origin, lo, hi)?;
+            roots.push(SecularRoot { origin, delta, value: d[origin] + delta });
+        }
+    }
+    Ok(roots)
+}
+
+/// Direct evaluation of `ω(x)` (test/diagnostic helper).
+pub fn secular_value(d: &[f64], z: &[f64], sigma: f64, x: f64) -> f64 {
+    1.0 + sigma * d.iter().zip(z).map(|(dj, zj)| zj * zj / (dj - x)).sum::<f64>()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{eigvalsh, Mat};
+
+    fn brute_force(d: &[f64], z: &[f64], sigma: f64) -> Vec<f64> {
+        let mut a = Mat::from_diag(d);
+        a.syr(sigma, z);
+        eigvalsh(&a).unwrap()
+    }
+
+    #[test]
+    fn matches_dense_eig_positive_sigma() {
+        let d = vec![0.5, 1.0, 2.0, 4.0];
+        let z = vec![0.3, -0.2, 0.5, 0.1];
+        let roots = solve_all(&d, &z, 1.5).unwrap();
+        let expect = brute_force(&d, &z, 1.5);
+        for (r, e) in roots.iter().zip(expect.iter()) {
+            assert!((r.value - e).abs() < 1e-10, "{} vs {}", r.value, e);
+        }
+    }
+
+    #[test]
+    fn matches_dense_eig_negative_sigma() {
+        let d = vec![0.5, 1.0, 2.0, 4.0];
+        let z = vec![0.3, -0.2, 0.5, 0.1];
+        let roots = solve_all(&d, &z, -0.8).unwrap();
+        let expect = brute_force(&d, &z, -0.8);
+        for (r, e) in roots.iter().zip(expect.iter()) {
+            assert!((r.value - e).abs() < 1e-10, "{} vs {}", r.value, e);
+        }
+    }
+
+    #[test]
+    fn interlacing_bounds_hold() {
+        let d = vec![-1.0, 0.0, 0.7, 1.3, 5.0];
+        let z = vec![0.4, 0.1, -0.3, 0.2, 0.6];
+        let zz: f64 = z.iter().map(|x| x * x).sum();
+        for sigma in [2.0, -2.0] {
+            let roots = solve_all(&d, &z, sigma).unwrap();
+            for (i, r) in roots.iter().enumerate() {
+                if sigma > 0.0 {
+                    assert!(r.value >= d[i] - 1e-12);
+                    let ub = if i + 1 < d.len() { d[i + 1] } else { d[i] + sigma * zz };
+                    assert!(r.value <= ub + 1e-12);
+                } else {
+                    assert!(r.value <= d[i] + 1e-12);
+                    let lb = if i > 0 { d[i - 1] } else { d[0] + sigma * zz };
+                    assert!(r.value >= lb - 1e-12);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn roots_are_actual_zeros() {
+        let d = vec![1.0, 2.0, 3.0];
+        let z = vec![0.5, 0.5, 0.5];
+        let roots = solve_all(&d, &z, 1.0).unwrap();
+        for r in &roots {
+            let f = secular_value(&d, &z, 1.0, r.value);
+            assert!(f.abs() < 1e-8, "ω({}) = {}", r.value, f);
+        }
+    }
+
+    #[test]
+    fn tight_cluster_resolved() {
+        // Poles separated by 1e-9 — pole-relative coordinates keep the
+        // roots distinct and inside their intervals.
+        let d = vec![1.0, 1.0 + 1e-9, 1.0 + 2e-9, 2.0];
+        let z = vec![1e-3, 1e-3, 1e-3, 0.5];
+        let roots = solve_all(&d, &z, 1.0).unwrap();
+        for i in 0..3 {
+            assert!(roots[i].value >= d[i] - 1e-18);
+            assert!(roots[i].value <= d[i + 1] + 1e-18);
+        }
+        let expect = brute_force(&d, &z, 1.0);
+        assert!((roots[3].value - expect[3]).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_sigma_or_zero_z_is_identity() {
+        let d = vec![1.0, 2.0];
+        let roots = solve_all(&d, &[0.0, 0.0], 3.0).unwrap();
+        assert_eq!(roots[0].value, 1.0);
+        assert_eq!(roots[1].value, 2.0);
+        let roots = solve_all(&d, &[0.5, 0.5], 0.0).unwrap();
+        assert_eq!(roots[1].value, 2.0);
+    }
+
+    #[test]
+    fn trace_is_preserved() {
+        // tr(Λ + σzzᵀ) = Σλ + σ‖z‖² must equal the sum of roots.
+        let d = vec![0.1, 0.4, 0.9, 1.6, 2.5];
+        let z = vec![0.2, -0.1, 0.3, 0.05, -0.25];
+        let sigma = 2.3;
+        let roots = solve_all(&d, &z, sigma).unwrap();
+        let zz: f64 = z.iter().map(|x| x * x).sum();
+        let lhs: f64 = roots.iter().map(|r| r.value).sum();
+        let rhs: f64 = d.iter().sum::<f64>() + sigma * zz;
+        assert!((lhs - rhs).abs() < 1e-9 * rhs.abs().max(1.0));
+    }
+
+    #[test]
+    fn empty_input() {
+        assert!(solve_all(&[], &[], 1.0).unwrap().is_empty());
+    }
+
+    #[test]
+    fn property_random_problems_match_dense() {
+        crate::util::prop::check("secular-matches-dense", 24, |rng| {
+            let n = 2 + rng.below(10);
+            let mut d: Vec<f64> = (0..n).map(|_| rng.range(-3.0, 3.0)).collect();
+            d.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let z: Vec<f64> = (0..n).map(|_| rng.range(-1.0, 1.0)).collect();
+            let sigma = if rng.uniform() < 0.5 { rng.range(0.1, 3.0) } else { rng.range(-3.0, -0.1) };
+            let roots = solve_all(&d, &z, sigma).map_err(|e| e.to_string())?;
+            let expect = brute_force(&d, &z, sigma);
+            for (r, e) in roots.iter().zip(expect.iter()) {
+                crate::util::prop::close("root", r.value, *e, 1e-8)?;
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,160 @@
+//! Criterion-style micro-bench harness (criterion itself is not
+//! available offline): warm-up, timed samples, robust summary stats, and
+//! a stable one-line report format the bench binaries and
+//! EXPERIMENTS.md share.
+
+use std::time::{Duration, Instant};
+
+/// Summary statistics over the collected samples.
+#[derive(Clone, Copy, Debug)]
+pub struct Stats {
+    pub samples: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub stddev_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+}
+
+impl Stats {
+    fn from_samples(mut ns: Vec<f64>) -> Stats {
+        ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = ns.len();
+        let mean = ns.iter().sum::<f64>() / n as f64;
+        let var = ns.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        Stats {
+            samples: n,
+            mean_ns: mean,
+            median_ns: if n % 2 == 1 {
+                ns[n / 2]
+            } else {
+                0.5 * (ns[n / 2 - 1] + ns[n / 2])
+            },
+            stddev_ns: var.sqrt(),
+            min_ns: ns[0],
+            max_ns: ns[n - 1],
+        }
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.3} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Benchmark runner for one binary; prints one line per case.
+pub struct Bench {
+    /// Minimum wall time to spend sampling each case.
+    pub min_time: Duration,
+    /// Hard cap on the number of samples.
+    pub max_samples: usize,
+    /// Warm-up invocations before timing.
+    pub warmup: usize,
+    results: Vec<(String, Stats)>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench::new()
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        // `INKPCA_BENCH_FAST=1` shrinks budgets so `cargo bench` in CI
+        // finishes quickly; full runs drop the variable.
+        let fast = std::env::var("INKPCA_BENCH_FAST").is_ok();
+        Bench {
+            min_time: if fast { Duration::from_millis(200) } else { Duration::from_secs(2) },
+            max_samples: if fast { 10 } else { 100 },
+            warmup: if fast { 1 } else { 3 },
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f` and print + record the summary under `name`.
+    pub fn case<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> Stats {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::new();
+        let start = Instant::now();
+        while samples.len() < self.max_samples
+            && (samples.len() < 5 || start.elapsed() < self.min_time)
+        {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed().as_nanos() as f64);
+        }
+        let stats = Stats::from_samples(samples);
+        println!(
+            "bench {name:<48} median {:>12}  mean {:>12}  ±{:>10}  (n={})",
+            fmt_ns(stats.median_ns),
+            fmt_ns(stats.mean_ns),
+            fmt_ns(stats.stddev_ns),
+            stats.samples
+        );
+        self.results.push((name.to_string(), stats));
+        stats
+    }
+
+    /// All recorded results.
+    pub fn results(&self) -> &[(String, Stats)] {
+        &self.results
+    }
+
+    /// Final machine-readable TSV block (consumed by EXPERIMENTS.md
+    /// tooling and by `inkpca bench-report`).
+    pub fn finish(&self) {
+        println!("== bench-tsv ==");
+        println!("name\tmedian_ns\tmean_ns\tstddev_ns\tsamples");
+        for (name, s) in &self.results {
+            println!(
+                "{name}\t{:.0}\t{:.0}\t{:.0}\t{}",
+                s.median_ns, s.mean_ns, s.stddev_ns, s.samples
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_of_constant_samples() {
+        let s = Stats::from_samples(vec![10.0; 8]);
+        assert_eq!(s.mean_ns, 10.0);
+        assert_eq!(s.median_ns, 10.0);
+        assert_eq!(s.stddev_ns, 0.0);
+        assert_eq!(s.min_ns, 10.0);
+        assert_eq!(s.max_ns, 10.0);
+    }
+
+    #[test]
+    fn stats_median_even_odd() {
+        let s = Stats::from_samples(vec![1.0, 3.0, 2.0]);
+        assert_eq!(s.median_ns, 2.0);
+        let s = Stats::from_samples(vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.median_ns, 2.5);
+    }
+
+    #[test]
+    fn case_runs_and_records() {
+        std::env::set_var("INKPCA_BENCH_FAST", "1");
+        let mut b = Bench::new();
+        b.min_time = Duration::from_millis(1);
+        b.max_samples = 6;
+        b.warmup = 0;
+        let s = b.case("noop", || 1 + 1);
+        assert!(s.samples >= 5);
+        assert_eq!(b.results().len(), 1);
+    }
+}

@@ -1,0 +1,11 @@
+//! Cross-cutting substrates built in-tree because the offline image
+//! carries no rayon/criterion/proptest/rand: a scoped-thread data
+//! parallel layer, a deterministic RNG, a micro-bench harness, and a
+//! property-test driver.
+
+pub mod bench;
+pub mod par;
+pub mod prop;
+pub mod rng;
+
+pub use rng::Rng;

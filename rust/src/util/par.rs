@@ -1,0 +1,180 @@
+//! Minimal data-parallel substrate built on `std::thread::scope` — the
+//! offline environment has no rayon, so the blocked GEMM and the
+//! experiment sweeps parallelize through this module instead.
+//!
+//! The design is deliberately simple: static chunking over an index
+//! range with one OS thread per chunk. The kernels this crate runs are
+//! regular (uniform per-index cost), so static chunking is within a few
+//! percent of work stealing while having zero dependency cost.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+thread_local! {
+    /// Set while the current thread is a par worker — nested parallel
+    /// calls run serially instead of oversubscribing the machine.
+    static IN_PAR: Cell<bool> = const { Cell::new(false) };
+}
+
+fn in_par() -> bool {
+    IN_PAR.with(|f| f.get())
+}
+
+fn enter_par<R>(f: impl FnOnce() -> R) -> R {
+    IN_PAR.with(|flag| flag.set(true));
+    let r = f();
+    IN_PAR.with(|flag| flag.set(false));
+    r
+}
+
+/// Number of worker threads to use; `INKPCA_THREADS` overrides, default
+/// is the number of available cores.
+pub fn num_threads() -> usize {
+    static N: OnceLock<usize> = OnceLock::new();
+    *N.get_or_init(|| {
+        std::env::var("INKPCA_THREADS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .filter(|&n| n > 0)
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+            })
+    })
+}
+
+/// Run `f(i)` for every `i in 0..n`, distributing indices over worker
+/// threads in contiguous chunks. Falls back to the serial loop when the
+/// range is small or only one thread is configured.
+pub fn par_for(n: usize, min_per_thread: usize, f: impl Fn(usize) + Sync) {
+    let threads = num_threads().min(n / min_per_thread.max(1)).max(1);
+    if threads <= 1 || in_par() {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let counter = AtomicUsize::new(0);
+    // Dynamic chunks of size `chunk`: cheap work stealing via an atomic
+    // cursor, which keeps tail imbalance bounded without a deque.
+    let chunk = (n / (threads * 4)).max(min_per_thread.max(1));
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| {
+                enter_par(|| loop {
+                    let start = counter.fetch_add(chunk, Ordering::Relaxed);
+                    if start >= n {
+                        break;
+                    }
+                    let end = (start + chunk).min(n);
+                    for i in start..end {
+                        f(i);
+                    }
+                })
+            });
+        }
+    });
+}
+
+/// Raw-pointer wrapper that lets disjoint-index writers share a buffer
+/// across scoped threads.
+struct SendPtr<T>(*mut T);
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+/// Parallel map over `0..n` collecting results in index order.
+pub fn par_map<T: Send>(n: usize, min_per_thread: usize, f: impl Fn(usize) -> T + Sync) -> Vec<T> {
+    let mut out: Vec<std::mem::MaybeUninit<T>> = Vec::with_capacity(n);
+    // SAFETY: set_len over MaybeUninit is fine; every slot is written
+    // exactly once below before being read.
+    unsafe { out.set_len(n) };
+    let ptr = SendPtr(out.as_mut_ptr());
+    let ptr_ref = &ptr; // capture the Sync wrapper, not the raw field
+    par_for(n, min_per_thread, |i| {
+        // SAFETY: par_for hands each index to exactly one worker, so
+        // writes are disjoint; the buffer outlives the scoped threads.
+        unsafe { (*ptr_ref.0.add(i)).write(f(i)) };
+    });
+    // SAFETY: all n slots initialized above.
+    unsafe { std::mem::transmute::<Vec<std::mem::MaybeUninit<T>>, Vec<T>>(out) }
+}
+
+/// Split a mutable slice into `chunks` of `chunk_len` and run `f(chunk
+/// index, chunk)` in parallel — the pattern the blocked GEMM needs for
+/// disjoint row-panels of the output.
+pub fn par_chunks_mut<T: Send>(
+    data: &mut [T],
+    chunk_len: usize,
+    f: impl Fn(usize, &mut [T]) + Sync,
+) {
+    assert!(chunk_len > 0);
+    let chunks: Vec<(usize, &mut [T])> = data.chunks_mut(chunk_len).enumerate().collect();
+    let n = chunks.len();
+    if n <= 1 || num_threads() <= 1 || in_par() {
+        for (i, c) in chunks {
+            f(i, c);
+        }
+        return;
+    }
+    let shared: Vec<std::sync::Mutex<Option<(usize, &mut [T])>>> =
+        chunks.into_iter().map(|c| std::sync::Mutex::new(Some(c))).collect();
+    let counter = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..num_threads().min(n) {
+            s.spawn(|| {
+                enter_par(|| loop {
+                    let idx = counter.fetch_add(1, Ordering::Relaxed);
+                    if idx >= n {
+                        break;
+                    }
+                    let (i, c) = shared[idx].lock().unwrap().take().expect("chunk taken twice");
+                    f(i, c);
+                })
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn par_for_visits_every_index_once() {
+        let n = 1000;
+        let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        par_for(n, 1, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn par_map_preserves_order() {
+        let v = par_map(257, 1, |i| i * i);
+        for (i, x) in v.iter().enumerate() {
+            assert_eq!(*x, i * i);
+        }
+    }
+
+    #[test]
+    fn par_chunks_mut_disjoint_writes() {
+        let mut data = vec![0usize; 103];
+        par_chunks_mut(&mut data, 10, |ci, chunk| {
+            for x in chunk.iter_mut() {
+                *x = ci + 1;
+            }
+        });
+        for (i, x) in data.iter().enumerate() {
+            assert_eq!(*x, i / 10 + 1);
+        }
+    }
+
+    #[test]
+    fn empty_and_tiny_ranges() {
+        par_for(0, 1, |_| panic!("should not run"));
+        let v = par_map(1, 64, |i| i + 5);
+        assert_eq!(v, vec![5]);
+    }
+}

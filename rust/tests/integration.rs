@@ -1,0 +1,203 @@
+//! Cross-layer integration tests: artifacts → PJRT runtime → engine
+//! router → coordinator → algorithms, on realistic small workloads.
+//! PJRT-dependent tests no-op gracefully when `artifacts/` is absent
+//! (run `make artifacts` first for full coverage).
+
+use inkpca::coordinator::{
+    Config, Coordinator, EngineConfig, EnginePolicy, KernelConfig,
+};
+use inkpca::data::synthetic::{magic_like, yeast_like};
+use inkpca::data::SliceSource;
+use inkpca::kernels::{gram, median_heuristic, Linear, Rbf};
+use inkpca::kpca::{BatchKpca, IncrementalKpca};
+use inkpca::linalg::{frobenius, Mat};
+use inkpca::nystrom::{BatchNystrom, IncrementalNystrom};
+
+fn have_artifacts() -> bool {
+    std::path::Path::new("artifacts/manifest.tsv").exists()
+}
+
+#[test]
+fn full_stack_native_session() {
+    let mut ds = yeast_like(60, 1);
+    ds.standardize();
+    let dim = ds.dim();
+    let coord = Coordinator::spawn(
+        Config { seed_points: 10, drift_every: 20, ..Config::default() },
+        dim,
+    );
+    let mut src = SliceSource::new(ds);
+    let accepted = coord.ingest_stream(&mut src).unwrap();
+    assert_eq!(accepted, 60);
+    let drift = coord.measure_drift().unwrap();
+    assert!(drift.norms.frobenius < 1e-6, "native session drift {:?}", drift.norms);
+    let m = coord.metrics().unwrap();
+    assert_eq!(m.accepted, 50);
+    assert_eq!(m.errors, 0);
+    coord.shutdown();
+}
+
+#[test]
+fn full_stack_pjrt_session() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts/");
+        return;
+    }
+    let mut ds = magic_like(40, 2);
+    ds.standardize();
+    let dim = ds.dim();
+    let coord = Coordinator::spawn(
+        Config {
+            engine: EngineConfig::Pjrt {
+                dir: "artifacts".into(),
+                policy: EnginePolicy::Pjrt,
+            },
+            seed_points: 10,
+            drift_every: 0,
+            ..Config::default()
+        },
+        dim,
+    );
+    for i in 0..ds.n() {
+        coord.ingest(ds.x.row(i).to_vec()).unwrap();
+    }
+    let snap = coord.snapshot().unwrap();
+    assert_eq!(snap.m, 40);
+    assert!(snap.engine_calls.1 > 0, "pjrt engine never used: {:?}", snap.engine_calls);
+    let drift = coord.measure_drift().unwrap();
+    assert!(drift.norms.frobenius < 1e-6, "pjrt session drift {:?}", drift.norms);
+    coord.shutdown();
+}
+
+#[test]
+fn engine_equivalence_native_vs_pjrt() {
+    // The same stream through both engines must produce (numerically)
+    // the same eigensystem.
+    if !have_artifacts() {
+        return;
+    }
+    let rt = std::sync::Arc::new(
+        inkpca::runtime::Runtime::new(std::path::Path::new("artifacts")).unwrap(),
+    );
+    let pjrt = inkpca::runtime::PjrtRotate::new(rt);
+    let mut ds = yeast_like(30, 3);
+    ds.standardize();
+    let kern = Rbf { sigma: median_heuristic(&ds.x, 100) };
+    let seed = ds.x.submatrix(8, ds.dim());
+    let mut a = IncrementalKpca::from_batch(&kern, &seed, true).unwrap();
+    let mut b = IncrementalKpca::from_batch(&kern, &seed, true).unwrap();
+    for i in 8..ds.n() {
+        a.push(ds.x.row(i)).unwrap();
+        b.push_with(ds.x.row(i), &pjrt).unwrap();
+    }
+    for (x, y) in a.vals.iter().zip(b.vals.iter()) {
+        assert!((x - y).abs() < 1e-8, "eigenvalue mismatch {x} vs {y}");
+    }
+    assert!(a.reconstruct().max_abs_diff(&b.reconstruct()) < 1e-7);
+}
+
+#[test]
+fn fault_injection_mean_point_excluded_by_coordinator() {
+    // The §5.1 exclusion path must surface through the whole stack
+    // without corrupting the session.
+    let ds = yeast_like(16, 4);
+    let dim = ds.dim();
+    let coord = Coordinator::spawn(
+        Config {
+            kernel: KernelConfig::Linear,
+            seed_points: 16,
+            ..Config::default()
+        },
+        dim,
+    );
+    for i in 0..16 {
+        coord.ingest(ds.x.row(i).to_vec()).unwrap();
+    }
+    let mean: Vec<f64> =
+        (0..dim).map(|j| (0..16).map(|i| ds.x[(i, j)]).sum::<f64>() / 16.0).collect();
+    let reply = coord.ingest(mean).unwrap();
+    assert!(!reply.accepted);
+    let metrics = coord.metrics().unwrap();
+    assert_eq!(metrics.excluded, 1);
+    // Session continues normally.
+    let reply = coord.ingest(vec![9.0; dim]).unwrap();
+    assert!(reply.accepted);
+    let drift = coord.measure_drift().unwrap();
+    assert!(drift.norms.frobenius < 1e-6);
+    coord.shutdown();
+}
+
+#[test]
+fn nystrom_incremental_equals_batch_larger_scale() {
+    let mut ds = magic_like(120, 5);
+    ds.standardize();
+    let kern = Rbf { sigma: median_heuristic(&ds.x, 120) };
+    let mut inys = IncrementalNystrom::new(&kern, ds.x.clone()).unwrap();
+    for m in 0..40 {
+        inys.add_point(m).unwrap();
+    }
+    let batch = BatchNystrom::fit(&kern, &ds.x, &(0..40).collect::<Vec<_>>()).unwrap();
+    let diff = inys.approx_gram().max_abs_diff(&batch.approx_gram());
+    assert!(diff < 1e-6, "incremental vs batch Nyström {diff}");
+    // And the error actually shrinks vs the trivial zero approximation.
+    let k = gram(&kern, &ds.x);
+    let err = frobenius(&k.sub(&inys.approx_gram()));
+    assert!(err < 0.5 * frobenius(&k));
+}
+
+#[test]
+fn incremental_matches_batch_multiple_kernels() {
+    let mut ds = yeast_like(26, 6);
+    ds.standardize();
+    let kernels: Vec<Box<dyn inkpca::kernels::Kernel>> = vec![
+        Box::new(Rbf { sigma: 2.0 }),
+        Box::new(Linear),
+        Box::new(inkpca::kernels::Polynomial { degree: 2, offset: 1.0 }),
+        Box::new(inkpca::kernels::Laplacian { sigma: 2.0 }),
+    ];
+    for kern in &kernels {
+        let seed = ds.x.submatrix(8, ds.dim());
+        let mut inc = IncrementalKpca::from_batch(kern.as_ref(), &seed, true).unwrap();
+        for i in 8..ds.n() {
+            inc.push(ds.x.row(i)).unwrap();
+        }
+        let batch = BatchKpca::fit(kern.as_ref(), &ds.x, true).unwrap();
+        let drift = inc.reconstruct().max_abs_diff(&batch.k_used);
+        assert!(drift < 1e-6, "{}: drift {drift}", kern.name());
+    }
+}
+
+#[test]
+fn coordinator_backpressure_bounded_queue() {
+    // A queue of 1 forces full rendezvous; the stream must still finish.
+    let ds = yeast_like(20, 7);
+    let coord = Coordinator::spawn(
+        Config { queue: 1, seed_points: 5, ..Config::default() },
+        ds.dim(),
+    );
+    for i in 0..20 {
+        coord.ingest(ds.x.row(i).to_vec()).unwrap();
+    }
+    assert_eq!(coord.snapshot().unwrap().m, 20);
+    coord.shutdown();
+}
+
+#[test]
+fn runtime_bucket_padding_invariance() {
+    // The same logical problem executed at two different bucket sizes
+    // (just below and above a bucket edge) gives the same answer.
+    if !have_artifacts() {
+        return;
+    }
+    let rt = inkpca::runtime::Runtime::new(std::path::Path::new("artifacts")).unwrap();
+    let mut rng = inkpca::util::Rng::new(8);
+    for &m in &[63usize, 64, 65] {
+        let x = Mat::from_fn(m, 10, |_, _| rng.range(-1.0, 1.0));
+        let y: Vec<f64> = (0..10).map(|_| rng.range(-1.0, 1.0)).collect();
+        let got = rt.kernel_column(&x, &y, 1.1).unwrap();
+        let want = inkpca::kernels::kernel_column(&Rbf { sigma: 1.1 }, &x, m, &y);
+        for (g, w) in got.iter().zip(want.iter()) {
+            assert!((g - w).abs() < 1e-12, "m={m}");
+        }
+    }
+}
