@@ -1,9 +1,13 @@
 //! Micro-benchmarks of the substrate hot paths: blocked GEMM, the
-//! symmetric eigensolver, the secular root finder and one full rank-one
-//! update — the quantities the §Perf optimization loop tracks.
+//! symmetric eigensolver, the secular root finder and the rank-one
+//! update in both forms — the allocating compatibility path vs the
+//! zero-allocation workspace path — at sizes up to m=512. Emits
+//! `BENCH_rankone.json` so the perf trajectory is recorded run-over-run.
 
 use inkpca::linalg::{eigh, matmul, Mat};
-use inkpca::rankone::{rank_one_update, NativeRotate};
+use inkpca::rankone::{
+    rank_one_update, rank_one_update_ws, EigenBasis, NativeRotate, UpdateWorkspace,
+};
 use inkpca::secular::solve_all;
 use inkpca::util::bench::Bench;
 use inkpca::util::Rng;
@@ -39,16 +43,81 @@ fn main() {
             solve_all(&d, &z, 1.5).unwrap().len()
         });
     }
-    for n in [64usize, 128, 256] {
+
+    // Rank-one update: allocating compatibility path vs warmed workspace
+    // path, on an *evolving* eigensystem (alternating ±σ keeps the
+    // spectrum bounded) so the steady-state allocation behaviour — not a
+    // per-sample clone — is what gets measured. The workspace rows must
+    // come out measurably faster at m ≥ 512 (acceptance criterion).
+    for n in [128usize, 256, 512] {
         let s = rand_sym(n, 5);
         let eg = eigh(&s).unwrap();
-        let mut rng = Rng::new(6);
-        let v: Vec<f64> = (0..n).map(|_| rng.range(-1.0, 1.0)).collect();
-        b.case(&format!("rankone/update/n{n}"), || {
-            let mut vals = eg.values.clone();
-            let mut vecs = eg.vectors.clone();
-            rank_one_update(&mut vals, &mut vecs, 1.0, &v, &NativeRotate).unwrap().solved
+
+        let mut vals_a = eg.values.clone();
+        let mut vecs_a = eg.vectors.clone();
+        let mut rng_a = Rng::new(6);
+        let mut v_a = vec![0.0; n];
+        let mut flip_a = false;
+        b.case(&format!("rankone/update_alloc/n{n}"), || {
+            for x in v_a.iter_mut() {
+                *x = rng_a.range(-1.0, 1.0);
+            }
+            flip_a = !flip_a;
+            let sigma = if flip_a { 1.0 } else { -1.0 };
+            rank_one_update(&mut vals_a, &mut vecs_a, sigma, &v_a, &NativeRotate)
+                .unwrap()
+                .solved
+        });
+
+        let mut vals_w = eg.values.clone();
+        let mut basis = EigenBasis::from_mat(eg.vectors.clone());
+        let mut ws = UpdateWorkspace::new();
+        ws.reserve(n, n);
+        let mut rng_w = Rng::new(6);
+        let mut v_w = vec![0.0; n];
+        let mut flip_w = false;
+        b.case(&format!("rankone/update_ws/n{n}"), || {
+            for x in v_w.iter_mut() {
+                *x = rng_w.range(-1.0, 1.0);
+            }
+            flip_w = !flip_w;
+            let sigma = if flip_w { 1.0 } else { -1.0 };
+            rank_one_update_ws(&mut vals_w, &mut basis, sigma, &v_w, &NativeRotate, &mut ws)
+                .unwrap()
+                .solved
+        });
+        assert_eq!(ws.reallocs(), 0, "warmed workspace must stay allocation-free");
+    }
+
+    // Expansion: the per-accepted-example grow step, measured on a
+    // growing system (each sample adds one eigenpair, as a stream
+    // does). The allocating path re-layouts the full matrix per call;
+    // the workspace path grows in place — amortized O(1) reallocation,
+    // O(m) writes.
+    for n in [128usize, 256, 512] {
+        let vals0: Vec<f64> = (0..n).map(|i| i as f64).collect();
+        let eye = Mat::eye(n);
+        let mut vals_a = vals0.clone();
+        let mut vecs_a = eye.clone();
+        b.case(&format!("rankone/expand_alloc/n{n}"), || {
+            let new_val = vals_a.last().unwrap() + 1.0;
+            inkpca::rankone::expand_eigensystem(&mut vals_a, &mut vecs_a, new_val);
+            vals_a.len()
+        });
+        let mut vals_w = vals0.clone();
+        let mut basis = EigenBasis::from_mat(eye.clone());
+        let mut ws = UpdateWorkspace::new();
+        b.case(&format!("rankone/expand_ws/n{n}"), || {
+            let new_val = vals_w.last().unwrap() + 1.0;
+            inkpca::rankone::expand_eigensystem_ws(&mut vals_w, &mut basis, new_val, &mut ws);
+            vals_w.len()
         });
     }
+
     b.finish();
+    if let Err(e) = b.write_json("BENCH_rankone.json") {
+        eprintln!("warning: could not write BENCH_rankone.json: {e}");
+    } else {
+        println!("wrote BENCH_rankone.json");
+    }
 }

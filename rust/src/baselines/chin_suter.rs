@@ -15,7 +15,7 @@
 //! the paper's accounting of the original algorithm. The T1 ablation
 //! flips it off.
 
-use crate::kernels::{kernel_column, Kernel};
+use crate::kernels::{kernel_column_into, Kernel};
 use crate::linalg::{eigh, matmul, Mat};
 
 /// Chin–Suter incremental KPCA state (mean-adjusted, exact).
@@ -101,8 +101,9 @@ impl<'k> ChinSuterKpca<'k> {
         let m = self.m;
         let mf = m as f64;
         let r = self.rank();
-        let xmat = Mat::from_vec(m, self.dim, self.x.clone());
-        let a = kernel_column(self.kernel, &xmat, m, xnew);
+        // Kernel column over the flat retained data — no matrix clone.
+        let mut a = Vec::with_capacity(m);
+        kernel_column_into(self.kernel, &self.x, self.dim, m, xnew, &mut a);
         let knew = self.kernel.eval(xnew, xnew);
         let asum: f64 = a.iter().sum();
 

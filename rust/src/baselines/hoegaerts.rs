@@ -7,11 +7,16 @@
 //! The update is exact while `r = m` and becomes a dominant-subspace
 //! approximation once truncation starts: the component of each
 //! perturbation orthogonal to the tracked subspace is discarded —
-//! exactly the trade their tracker makes.
+//! exactly the trade their tracker makes. Shares the
+//! workspace/eigenbasis storage for its rank-one updates (in-place
+//! expansion and truncation); per-step vectors still allocate — it is a
+//! comparison baseline, not the production hot path.
 
-use crate::kernels::{kernel_column, Kernel};
+use crate::kernels::{kernel_column_into, Kernel};
 use crate::linalg::Mat;
-use crate::rankone::{rank_one_update, NativeRotate, Rotate};
+use crate::rankone::{
+    rank_one_update_ws, sort_pairs_ws, EigenBasis, NativeRotate, Rotate, UpdateWorkspace,
+};
 
 /// Dominant-subspace tracker for the unadjusted kernel matrix.
 #[derive(Clone)]
@@ -25,7 +30,9 @@ pub struct HoegaertsTracker<'k> {
     /// Tracked eigenvalues, ascending (length ≤ r).
     pub vals: Vec<f64>,
     /// Tracked eigenvectors (`m × len(vals)`).
-    pub vecs: Mat,
+    pub vecs: EigenBasis,
+    /// Per-stream rank-one scratch.
+    ws: UpdateWorkspace,
 }
 
 impl<'k> HoegaertsTracker<'k> {
@@ -48,7 +55,16 @@ impl<'k> HoegaertsTracker<'k> {
                 vecs[(i, c)] = eg.vectors[(i, j)];
             }
         }
-        Ok(HoegaertsTracker { kernel, x: x0.as_slice().to_vec(), dim: x0.cols(), m, r, vals, vecs })
+        Ok(HoegaertsTracker {
+            kernel,
+            x: x0.as_slice().to_vec(),
+            dim: x0.cols(),
+            m,
+            r,
+            vals,
+            vecs: EigenBasis::from_mat(vecs),
+            ws: UpdateWorkspace::new(),
+        })
     }
 
     pub fn len(&self) -> usize {
@@ -67,26 +83,22 @@ impl<'k> HoegaertsTracker<'k> {
     pub fn push_with(&mut self, xnew: &[f64], engine: &dyn Rotate) -> Result<(), String> {
         assert_eq!(xnew.len(), self.dim);
         let m = self.m;
-        let xmat = Mat::from_vec(m, self.dim, self.x.clone());
-        let a = kernel_column(self.kernel, &xmat, m, xnew);
+        // Kernel column over the flat retained data — no matrix clone.
+        let mut a = Vec::with_capacity(m);
+        kernel_column_into(self.kernel, &self.x, self.dim, m, xnew, &mut a);
         let knew = self.kernel.eval(xnew, xnew);
         if knew.abs() < 1e-14 {
             return Err("degenerate self-similarity".into());
         }
 
         // Expand the tracked (rectangular) system with the decoupled
-        // eigenpair (k/4, e_{m+1}).
-        let cols = self.vals.len();
-        let mut grown = Mat::zeros(m + 1, cols + 1);
-        for i in 0..m {
-            for j in 0..cols {
-                grown[(i, j)] = self.vecs[(i, j)];
-            }
-        }
-        grown[(m, cols)] = 1.0;
-        self.vecs = grown;
+        // eigenpair (k/4, e_{m+1}) — in place on the capacity-slack
+        // storage.
+        let (rows, cols) = (self.vecs.rows(), self.vecs.cols());
+        self.vecs.expand();
+        self.vecs[(rows, cols)] = 1.0;
         self.vals.push(0.25 * knew);
-        crate::rankone::sort_pairs(&mut self.vals, &mut self.vecs);
+        sort_pairs_ws(&mut self.vals, &mut self.vecs, &mut self.ws);
 
         // Two rank-one updates (eq. 2), projected onto the tracked
         // subspace by the rectangular eigenvector matrix.
@@ -95,15 +107,14 @@ impl<'k> HoegaertsTracker<'k> {
         v1.push(0.5 * knew);
         let mut v2 = a;
         v2.push(0.25 * knew);
-        rank_one_update(&mut self.vals, &mut self.vecs, sigma, &v1, engine)?;
-        rank_one_update(&mut self.vals, &mut self.vecs, -sigma, &v2, engine)?;
+        rank_one_update_ws(&mut self.vals, &mut self.vecs, sigma, &v1, engine, &mut self.ws)?;
+        rank_one_update_ws(&mut self.vals, &mut self.vecs, -sigma, &v2, engine, &mut self.ws)?;
 
-        // Truncate back to the r dominant pairs (largest are at the end).
+        // Truncate back to the r dominant pairs (largest are at the
+        // end); an in-place column shift.
         while self.vals.len() > self.r {
             self.vals.remove(0);
-            let (rows, cols) = (self.vecs.rows(), self.vecs.cols());
-            let trimmed = Mat::from_fn(rows, cols - 1, |i, j| self.vecs[(i, j + 1)]);
-            self.vecs = trimmed;
+            self.vecs.remove_col(0);
         }
 
         self.x.extend_from_slice(xnew);
@@ -114,7 +125,7 @@ impl<'k> HoegaertsTracker<'k> {
     /// Low-rank reconstruction `U_r Λ_r U_rᵀ`.
     pub fn reconstruct(&self) -> Mat {
         let (m, c) = (self.vecs.rows(), self.vecs.cols());
-        let mut ul = self.vecs.clone();
+        let mut ul = self.vecs.to_mat();
         for i in 0..m {
             for j in 0..c {
                 ul[(i, j)] *= self.vals[j];

@@ -76,6 +76,14 @@ pub struct Metrics {
     pub accepted: u64,
     pub excluded: u64,
     pub errors: u64,
+    /// Rank-one updates performed by the stream's eigensystem.
+    pub updates: u64,
+    /// Bytes resident in the stream's hot-path buffers (update
+    /// workspace + eigenvector storage); refreshed after each ingest.
+    pub ws_bytes_resident: u64,
+    /// Cumulative buffer-growth events on the hot path — flat in steady
+    /// state, stepping only on capacity doublings as the stream grows.
+    pub ws_reallocs: u64,
     started: Instant,
 }
 
@@ -87,6 +95,9 @@ impl Default for Metrics {
             accepted: 0,
             excluded: 0,
             errors: 0,
+            updates: 0,
+            ws_bytes_resident: 0,
+            ws_reallocs: 0,
             started: Instant::now(),
         }
     }
@@ -105,6 +116,9 @@ impl Metrics {
             ingest_p99_us: self.ingest_latency.percentile_ns(0.99) / 1e3,
             ingest_mean_us: self.ingest_latency.mean_ns() / 1e3,
             project_mean_us: self.project_latency.mean_ns() / 1e3,
+            ws_bytes_resident: self.ws_bytes_resident,
+            ws_reallocs: self.ws_reallocs,
+            reallocs_per_update: self.ws_reallocs as f64 / self.updates.max(1) as f64,
         }
     }
 }
@@ -121,20 +135,29 @@ pub struct MetricsReport {
     pub ingest_p99_us: f64,
     pub ingest_mean_us: f64,
     pub project_mean_us: f64,
+    /// Hot-path buffer bytes resident (workspace + eigenbasis).
+    pub ws_bytes_resident: u64,
+    /// Hot-path buffer-growth events since stream start.
+    pub ws_reallocs: u64,
+    /// Growth events per rank-one update — ≈0 in steady state; the
+    /// allocator has left the loop when this stays pinned near zero.
+    pub reallocs_per_update: f64,
 }
 
 impl std::fmt::Display for MetricsReport {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "accepted={} excluded={} errors={} thru={:.1}/s ingest p50={:.0}µs p99={:.0}µs mean={:.0}µs",
+            "accepted={} excluded={} errors={} thru={:.1}/s ingest p50={:.0}µs p99={:.0}µs mean={:.0}µs ws={}B reallocs/update={:.4}",
             self.accepted,
             self.excluded,
             self.errors,
             self.throughput_per_s,
             self.ingest_p50_us,
             self.ingest_p99_us,
-            self.ingest_mean_us
+            self.ingest_mean_us,
+            self.ws_bytes_resident,
+            self.reallocs_per_update
         )
     }
 }

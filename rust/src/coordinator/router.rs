@@ -6,7 +6,7 @@
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
-use crate::linalg::Mat;
+use crate::linalg::{MatView, MatViewMut};
 use crate::rankone::{NativeRotate, Rotate};
 use crate::runtime::PjrtRotate;
 use crate::secular::SecularRoot;
@@ -73,28 +73,29 @@ impl RoutedEngine {
 }
 
 impl Rotate for RoutedEngine {
-    fn rotate(&self, u: &Mat, w: &Mat) -> Mat {
+    fn rotate_into(&self, u: MatView<'_>, w: MatView<'_>, out: MatViewMut<'_>) {
         self.native_calls.fetch_add(1, Ordering::Relaxed);
-        self.native.rotate(u, w)
+        self.native.rotate_into(u, w, out);
     }
 
-    fn rotate_fused(
+    fn rotate_fused_into(
         &self,
-        u: &Mat,
+        u: MatView<'_>,
         z: &[f64],
         d: &[f64],
         roots: &[SecularRoot],
-    ) -> Option<Mat> {
+        out: MatViewMut<'_>,
+    ) -> bool {
         let size = u.rows().max(u.cols());
         if self.use_pjrt(size) {
             if let Some(p) = &self.pjrt {
-                if let Some(out) = p.rotate_fused(u, z, d, roots) {
+                if p.rotate_fused_into(u, z, d, roots, out) {
                     self.pjrt_calls.fetch_add(1, Ordering::Relaxed);
-                    return Some(out);
+                    return true;
                 }
             }
         }
-        None // fall through to native W-form rotate()
+        false // fall through to the native W-form rotate_into()
     }
 
     fn name(&self) -> &'static str {

@@ -265,6 +265,11 @@ fn worker(cfg: Config, dim: usize, rx: Receiver<Command>) -> KpcaStats {
                             } else {
                                 metrics.excluded += 1;
                             }
+                            // Refresh the per-stream hot-path gauges
+                            // (workspace + eigenbasis residency/growth).
+                            metrics.updates = st.stats.updates as u64;
+                            metrics.ws_bytes_resident = st.hot_path_bytes() as u64;
+                            metrics.ws_reallocs = st.hot_path_reallocs();
                             Ok(IngestReply { accepted, m: st.len(), seeding: false })
                         }
                         Err(e) => {
@@ -361,6 +366,10 @@ mod tests {
         assert!(snap.drift.unwrap().norms.frobenius < 1e-7);
         let report = coord.metrics().unwrap();
         assert_eq!(report.accepted as usize, 30 - 6); // post-seed accepts
+        // Hot-path gauges are live: buffers resident, growth amortized
+        // (far fewer growth events than rank-one updates performed).
+        assert!(report.ws_bytes_resident > 0);
+        assert!(report.reallocs_per_update < 1.0, "report {report}");
         let stats = coord.shutdown();
         assert_eq!(stats.accepted, 30);
     }

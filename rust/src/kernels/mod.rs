@@ -138,31 +138,84 @@ pub fn median_heuristic(x: &Mat, max_points: usize) -> f64 {
     }
 }
 
-/// Full Gram matrix `K[i,j] = k(xᵢ, xⱼ)` over the rows of `x`
-/// (parallel over rows; symmetric fill).
+/// Full Gram matrix `K[i,j] = k(xᵢ, xⱼ)` over the rows of `x`: only the
+/// upper triangle is evaluated (kernel evals dominate the cold-start
+/// cost and the matrix is symmetric) and mirrored into place. The
+/// parallel split pairs row `t` with row `n−1−t`, so every task carries
+/// the same `n+1` evaluations — the bare upper-triangle row split would
+/// front-load long rows onto the first workers.
 pub fn gram(kernel: &dyn Kernel, x: &Mat) -> Mat {
     let n = x.rows();
-    let rows: Vec<Vec<f64>> = par::par_map(n, 4, |i| {
-        (i..n).map(|j| kernel.eval(x.row(i), x.row(j))).collect()
-    });
     let mut k = Mat::zeros(n, n);
-    for (i, vals) in rows.into_iter().enumerate() {
-        for (off, v) in vals.into_iter().enumerate() {
+    if n == 0 {
+        return k;
+    }
+    let half = n - n / 2; // ceil(n/2) row pairs
+    let pairs: Vec<(Vec<f64>, Vec<f64>)> = par::par_map(half, 4, |t| {
+        let i = t;
+        let j = n - 1 - t;
+        let row_i: Vec<f64> = (i..n).map(|c| kernel.eval(x.row(i), x.row(c))).collect();
+        let row_j: Vec<f64> = if j > i {
+            (j..n).map(|c| kernel.eval(x.row(j), x.row(c))).collect()
+        } else {
+            Vec::new()
+        };
+        (row_i, row_j)
+    });
+    for (t, (row_i, row_j)) in pairs.into_iter().enumerate() {
+        let i = t;
+        for (off, v) in row_i.into_iter().enumerate() {
             k[(i, i + off)] = v;
             k[(i + off, i)] = v;
+        }
+        let j = n - 1 - t;
+        for (off, v) in row_j.into_iter().enumerate() {
+            k[(j, j + off)] = v;
+            k[(j + off, j)] = v;
         }
     }
     k
 }
 
 /// Kernel column `a = [k(x₁, y) … k(xₘ, y)]ᵀ` against the first `m` rows
-/// of `x` — the per-step quantity of Algorithms 1–2.
+/// of `x` — the per-step quantity of Algorithms 1–2 (allocating form of
+/// [`kernel_column_into`]).
 pub fn kernel_column(kernel: &dyn Kernel, x: &Mat, m: usize, y: &[f64]) -> Vec<f64> {
     assert!(m <= x.rows());
+    let mut out = Vec::new();
+    kernel_column_into(kernel, x.as_slice(), x.cols(), m, y, &mut out);
+    out
+}
+
+/// [`kernel_column`] over flat row-major data into a caller-owned,
+/// capacity-retaining buffer — the zero-allocation streaming form (the
+/// incremental states keep their retained examples as a flat `Vec`, so
+/// no per-push matrix clone is needed either).
+pub fn kernel_column_into(
+    kernel: &dyn Kernel,
+    x: &[f64],
+    dim: usize,
+    m: usize,
+    y: &[f64],
+    out: &mut Vec<f64>,
+) {
+    assert!(x.len() >= m * dim, "kernel_column_into: data shorter than m rows");
+    assert_eq!(y.len(), dim, "kernel_column_into: query dimension mismatch");
+    out.clear();
+    out.resize(m, 0.0);
+    let row = |i: usize| &x[i * dim..(i + 1) * dim];
     if m >= 64 {
-        par::par_map(m, 16, |i| kernel.eval(x.row(i), y))
+        const CHUNK: usize = 16;
+        par::par_chunks_mut(out, CHUNK, |ci, chunk| {
+            let base = ci * CHUNK;
+            for (off, slot) in chunk.iter_mut().enumerate() {
+                *slot = kernel.eval(row(base + off), y);
+            }
+        });
     } else {
-        (0..m).map(|i| kernel.eval(x.row(i), y)).collect()
+        for (i, slot) in out.iter_mut().enumerate() {
+            *slot = kernel.eval(row(i), y);
+        }
     }
 }
 
@@ -251,6 +304,37 @@ mod tests {
         for i in 0..8 {
             assert!((col[i] - g[(i, 5)]).abs() < 1e-15);
         }
+    }
+
+    #[test]
+    fn gram_matches_brute_force_odd_and_even() {
+        // The paired-row upper-triangle fill must cover every entry for
+        // both parities of n (middle row is unpaired when n is odd).
+        let k = Rbf { sigma: 1.3 };
+        for n in [1usize, 2, 5, 8, 9] {
+            let x = Mat::from_fn(n, 3, |i, j| ((i * 3 + j) as f64 * 0.29).cos());
+            let g = gram(&k, &x);
+            for i in 0..n {
+                for j in 0..n {
+                    let expect = k.eval(x.row(i), x.row(j));
+                    assert!((g[(i, j)] - expect).abs() < 1e-15, "n={n} ({i},{j})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn kernel_column_into_reuses_buffer() {
+        let k = Rbf { sigma: 0.9 };
+        let x = toy_data();
+        let mut buf = Vec::new();
+        kernel_column_into(&k, x.as_slice(), x.cols(), 8, x.row(2), &mut buf);
+        assert_eq!(buf.len(), 8);
+        let cap = buf.capacity();
+        kernel_column_into(&k, x.as_slice(), x.cols(), 5, x.row(1), &mut buf);
+        assert_eq!(buf.len(), 5);
+        assert_eq!(buf.capacity(), cap, "buffer must be reused, not reallocated");
+        assert!((buf[1] - k.eval(x.row(1), x.row(1))).abs() < 1e-15);
     }
 
     #[test]

@@ -4,6 +4,13 @@
 //! (Algorithm 2, §3.1.2 — four rank-one updates per example, with the
 //! running sums `Σₘ` and `Kₘ𝟙ₘ` maintained incrementally).
 //!
+//! The streaming hot path is allocation-free once warm: the eigenvectors
+//! live in a capacity-doubling [`EigenBasis`], all rank-one scratch in a
+//! per-stream [`UpdateWorkspace`] shared by every update an example
+//! triggers (2 unadjusted / 4 adjusted), and the per-step vectors
+//! (kernel column, mean-shift, centered column, update vectors) in a
+//! private scratch block of reusable buffers.
+//!
 //! Two pseudocode typos in the paper are corrected here (both confirmed
 //! against the derivation in the surrounding text and by the exactness
 //! tests below):
@@ -13,9 +20,12 @@
 //!   * Algorithm 2 line 4 writes `K1/(m(m+1))²`; the derivation defines
 //!     `u = Kₘ𝟙ₘ/(m(m+1)) − a/(m+1) + ½C𝟙ₘ`.
 
-use crate::kernels::{kernel_column, Kernel};
+use crate::kernels::{kernel_column_into, Kernel};
 use crate::linalg::Mat;
-use crate::rankone::{expand_eigensystem, rank_one_update, NativeRotate, Rotate, UpdateStats};
+use crate::rankone::{
+    expand_eigensystem_ws, rank_one_update_ws, EigenBasis, NativeRotate, Rotate, UpdateStats,
+    UpdateWorkspace,
+};
 
 /// Aggregated per-stream statistics (reported by §5.1 experiments and
 /// the coordinator metrics endpoint).
@@ -41,6 +51,25 @@ impl KpcaStats {
     }
 }
 
+/// Reusable per-step vectors (capacities retained across pushes).
+#[derive(Clone, Debug, Default)]
+struct StepScratch {
+    /// Kernel column `a` against the retained examples.
+    a: Vec<f64>,
+    /// Mean-shift vector `u` (Algorithm 2 line 4).
+    u: Vec<f64>,
+    /// Norm-balanced re-centering vectors `γ𝟙 ± u/γ`.
+    vp: Vec<f64>,
+    vm: Vec<f64>,
+    /// Next-step running row sums `Kₘ₊₁𝟙`.
+    k1_next: Vec<f64>,
+    /// Centered new row/column `v` over the m+1 points.
+    v: Vec<f64>,
+    /// Expansion update vectors (eq. 2 / eq. 3).
+    v1: Vec<f64>,
+    v2: Vec<f64>,
+}
+
 /// Incremental kernel PCA state: the eigendecomposition of the
 /// (adjusted) kernel matrix over all points seen so far, plus the
 /// running sums Algorithm 2 needs. Memory is `O(m²)` — the kernel
@@ -57,8 +86,9 @@ pub struct IncrementalKpca<'k> {
     m: usize,
     /// Eigenvalues, ascending.
     pub vals: Vec<f64>,
-    /// Eigenvectors, one column per eigenvalue.
-    pub vecs: Mat,
+    /// Eigenvectors, one column per eigenvalue (capacity-doubling
+    /// storage; grows in place as examples arrive).
+    pub vecs: EigenBasis,
     /// `Σₘ = 𝟙ᵀ Kₘ 𝟙` — running total of the *unadjusted* kernel matrix.
     s: f64,
     /// `K1 = Kₘ 𝟙ₘ` — running row sums of the unadjusted kernel matrix.
@@ -71,6 +101,10 @@ pub struct IncrementalKpca<'k> {
     /// `push_adjusted`) — reproduces the paper's §5.1 drift behaviour.
     pub naive_recenter_split: bool,
     pub stats: KpcaStats,
+    /// Per-stream rank-one scratch, shared by all updates of a push.
+    ws: UpdateWorkspace,
+    /// Per-step vector scratch.
+    scratch: StepScratch,
 }
 
 impl<'k> IncrementalKpca<'k> {
@@ -96,20 +130,25 @@ impl<'k> IncrementalKpca<'k> {
             dim,
             m,
             vals: Vec::new(),
-            vecs: Mat::zeros(0, 0),
+            vecs: EigenBasis::new(),
             s: 0.0,
             k1: Vec::new(),
             exclude_tol: 1e-12,
             naive_recenter_split: false,
             stats: KpcaStats::default(),
+            ws: UpdateWorkspace::new(),
+            scratch: StepScratch::default(),
         };
         if m > 0 {
             let k = crate::kernels::gram(kernel, x0);
             let fit = super::batch::BatchKpca::fit_gram(k.clone(), mean_adjust)?;
             state.vals = fit.values;
-            state.vecs = fit.vectors;
+            state.vecs = EigenBasis::from_mat(fit.vectors);
             state.s = k.as_slice().iter().sum();
             state.k1 = (0..m).map(|i| k.row(i).iter().sum()).collect();
+            // Warm the workspace for the seeded size up front so the
+            // first streamed example already runs allocation-free.
+            state.ws.reserve(m, m);
         }
         state.stats.accepted = m;
         Ok(state)
@@ -133,7 +172,7 @@ impl<'k> IncrementalKpca<'k> {
         self.dim
     }
 
-    /// View of the retained data as a matrix.
+    /// Copy of the retained data as a matrix (evaluation paths).
     pub fn data(&self) -> Mat {
         Mat::from_vec(self.m, self.dim, self.x.clone())
     }
@@ -141,6 +180,23 @@ impl<'k> IncrementalKpca<'k> {
     /// Row `i` of the retained data.
     pub fn row(&self, i: usize) -> &[f64] {
         &self.x[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// Buffer-growth events on the streaming hot path (rank-one
+    /// workspace + eigenvector storage). Amortized O(1) per accepted
+    /// example; constant at fixed eigensystem size.
+    pub fn hot_path_reallocs(&self) -> u64 {
+        self.ws.reallocs() + self.vecs.reallocs()
+    }
+
+    /// Bytes resident in the hot-path buffers (workspace + basis).
+    pub fn hot_path_bytes(&self) -> usize {
+        self.ws.bytes_resident() + self.vecs.bytes_resident()
+    }
+
+    /// The per-stream update workspace (diagnostics).
+    pub fn workspace(&self) -> &UpdateWorkspace {
+        &self.ws
     }
 
     /// Ingest one example with the default native rotation engine.
@@ -156,13 +212,16 @@ impl<'k> IncrementalKpca<'k> {
         if self.m == 0 {
             return self.bootstrap_first(xnew);
         }
-        let xmat = Mat::from_vec(self.m, self.dim, self.x.clone());
-        let a = kernel_column(self.kernel, &xmat, self.m, xnew);
+        // Kernel column a = [k(x₁,x) … k(xₘ,x)]ᵀ into reusable scratch —
+        // no per-push clone of the retained data.
+        let mut a = std::mem::take(&mut self.scratch.a);
+        kernel_column_into(self.kernel, &self.x, self.dim, self.m, xnew, &mut a);
+        self.scratch.a = a;
         let knew = self.kernel.eval(xnew, xnew);
         if self.mean_adjust {
-            self.push_adjusted(xnew, &a, knew, engine)
+            self.push_adjusted(xnew, knew, engine)
         } else {
-            self.push_unadjusted(xnew, &a, knew, engine)
+            self.push_unadjusted(xnew, knew, engine)
         }
     }
 
@@ -176,18 +235,18 @@ impl<'k> IncrementalKpca<'k> {
         self.x.extend_from_slice(xnew);
         self.m = 1;
         self.vals = vec![knew];
-        self.vecs = Mat::eye(1);
+        self.vecs = EigenBasis::from_mat(Mat::eye(1));
         self.s = knew;
         self.k1 = vec![knew];
         self.stats.accepted += 1;
         Ok(true)
     }
 
-    /// Algorithm 1: expansion + two rank-one updates (eq. 2).
+    /// Algorithm 1: expansion + two rank-one updates (eq. 2). Reads the
+    /// kernel column from `self.scratch.a`.
     fn push_unadjusted(
         &mut self,
         xnew: &[f64],
-        a: &[f64],
         knew: f64,
         engine: &dyn Rotate,
     ) -> Result<bool, String> {
@@ -196,22 +255,38 @@ impl<'k> IncrementalKpca<'k> {
             return Ok(false);
         }
         // L ← [L  k/4];  U ← diag(U, 1)   [Algorithm 1, lines 1–2]
-        expand_eigensystem(&mut self.vals, &mut self.vecs, 0.25 * knew);
+        expand_eigensystem_ws(&mut self.vals, &mut self.vecs, 0.25 * knew, &mut self.ws);
         let sigma = 4.0 / knew; // line 3
-        let mut v1 = a.to_vec();
-        v1.push(0.5 * knew); // line 4
-        let mut v2 = a.to_vec();
-        v2.push(0.25 * knew); // line 5
-        let s1 = rank_one_update(&mut self.vals, &mut self.vecs, sigma, &v1, engine)?;
+        self.scratch.v1.clear();
+        self.scratch.v1.extend_from_slice(&self.scratch.a);
+        self.scratch.v1.push(0.5 * knew); // line 4
+        self.scratch.v2.clear();
+        self.scratch.v2.extend_from_slice(&self.scratch.a);
+        self.scratch.v2.push(0.25 * knew); // line 5
+        let s1 = rank_one_update_ws(
+            &mut self.vals,
+            &mut self.vecs,
+            sigma,
+            &self.scratch.v1,
+            engine,
+            &mut self.ws,
+        )?;
         self.stats.absorb(s1); // line 6
-        let s2 = rank_one_update(&mut self.vals, &mut self.vecs, -sigma, &v2, engine)?;
+        let s2 = rank_one_update_ws(
+            &mut self.vals,
+            &mut self.vecs,
+            -sigma,
+            &self.scratch.v2,
+            engine,
+            &mut self.ws,
+        )?;
         self.stats.absorb(s2); // line 7
 
         // Maintain running sums so a later switch to Nyström rescaling
         // (or to the adjusted algorithm's bookkeeping) stays cheap.
-        let asum: f64 = a.iter().sum();
+        let asum: f64 = self.scratch.a.iter().sum();
         self.s += 2.0 * asum + knew;
-        for (k1i, ai) in self.k1.iter_mut().zip(a) {
+        for (k1i, ai) in self.k1.iter_mut().zip(&self.scratch.a) {
             *k1i += ai;
         }
         self.k1.push(asum + knew);
@@ -222,42 +297,46 @@ impl<'k> IncrementalKpca<'k> {
     }
 
     /// Algorithm 2: two re-centering updates, then expansion + two more
-    /// rank-one updates (eq. 3).
+    /// rank-one updates (eq. 3). Reads the kernel column from
+    /// `self.scratch.a`.
     fn push_adjusted(
         &mut self,
         xnew: &[f64],
-        a: &[f64],
         knew: f64,
         engine: &dyn Rotate,
     ) -> Result<bool, String> {
         let m = self.m;
         let mf = m as f64;
-        let asum: f64 = a.iter().sum();
+        let asum: f64 = self.scratch.a.iter().sum();
 
         // Lines 2–4: running sums and the mean-shift vector u.
         let s2 = self.s + 2.0 * asum + knew;
         let c = -self.s / (mf * mf) + s2 / ((mf + 1.0) * (mf + 1.0));
-        let u: Vec<f64> = (0..m)
-            .map(|i| self.k1[i] / (mf * (mf + 1.0)) - a[i] / (mf + 1.0) + 0.5 * c)
-            .collect();
+        self.scratch.u.clear();
+        for i in 0..m {
+            self.scratch.u.push(
+                self.k1[i] / (mf * (mf + 1.0)) - self.scratch.a[i] / (mf + 1.0) + 0.5 * c,
+            );
+        }
 
         // Lines 7–10 (hoisted): the centered new row/column over the
         // m+1 points, v = k − (𝟙𝟙ᵀk + K𝟙 − Σ/(m+1)·𝟙)/(m+1). Computed
         // *before* any eigensystem mutation so the §5.1 exclusion below
         // can reject the example without corrupting state.
-        let mut k1_next = self.k1.clone();
-        for (k1i, ai) in k1_next.iter_mut().zip(a) {
+        self.scratch.k1_next.clear();
+        self.scratch.k1_next.extend_from_slice(&self.k1);
+        for (k1i, ai) in self.scratch.k1_next.iter_mut().zip(&self.scratch.a) {
             *k1i += ai;
         }
-        k1_next.push(asum + knew);
+        self.scratch.k1_next.push(asum + knew);
         let m1f = mf + 1.0;
         let ksum = asum + knew; // 𝟙ᵀ[a; k]
-        let mut kvec = a.to_vec();
-        kvec.push(knew);
-        let v: Vec<f64> = (0..m + 1)
-            .map(|i| kvec[i] - (ksum + k1_next[i] - s2 / m1f) / m1f)
-            .collect();
-        let v0 = v[m];
+        self.scratch.v.clear();
+        for i in 0..m + 1 {
+            let ki = if i < m { self.scratch.a[i] } else { knew };
+            self.scratch.v.push(ki - (ksum + self.scratch.k1_next[i] - s2 / m1f) / m1f);
+        }
+        let v0 = self.scratch.v[m];
 
         // §5.1: a non-positive centered diagonal signals (near-)rank
         // deficiency — the expanded matrix cannot stay SPSD. Exclude.
@@ -276,36 +355,71 @@ impl<'k> IncrementalKpca<'k> {
         // ((a+b)(a+b)ᵀ − (a−b)(a−b)ᵀ = 2(abᵀ+baᵀ)), ~100× less drift on
         // fast-decaying spectra. (The paper explicitly invites swapping
         // the rank-one update "for potentially improved accuracy".)
-        let unorm = crate::linalg::norm2(&u);
+        let unorm = crate::linalg::norm2(&self.scratch.u);
         if unorm > 0.0 {
             let gamma = if self.naive_recenter_split {
                 1.0 // the paper's literal (𝟙±u) split
             } else {
                 (unorm / mf.sqrt()).sqrt()
             };
-            let vp: Vec<f64> = u.iter().map(|ui| gamma + ui / gamma).collect();
-            let vm: Vec<f64> = u.iter().map(|ui| gamma - ui / gamma).collect();
-            let st = rank_one_update(&mut self.vals, &mut self.vecs, 0.5, &vp, engine)?;
+            self.scratch.vp.clear();
+            self.scratch.vm.clear();
+            for &ui in &self.scratch.u {
+                self.scratch.vp.push(gamma + ui / gamma);
+                self.scratch.vm.push(gamma - ui / gamma);
+            }
+            let st = rank_one_update_ws(
+                &mut self.vals,
+                &mut self.vecs,
+                0.5,
+                &self.scratch.vp,
+                engine,
+                &mut self.ws,
+            )?;
             self.stats.absorb(st);
-            let st = rank_one_update(&mut self.vals, &mut self.vecs, -0.5, &vm, engine)?;
+            let st = rank_one_update_ws(
+                &mut self.vals,
+                &mut self.vecs,
+                -0.5,
+                &self.scratch.vm,
+                engine,
+                &mut self.ws,
+            )?;
             self.stats.absorb(st);
         }
 
         // Lines 13–17: expansion and the two final updates (eq. 3).
-        expand_eigensystem(&mut self.vals, &mut self.vecs, 0.25 * v0);
+        expand_eigensystem_ws(&mut self.vals, &mut self.vecs, 0.25 * v0, &mut self.ws);
         let sigma = 4.0 / v0;
-        let mut v1 = v[..m].to_vec();
-        v1.push(0.5 * v0);
-        let mut v2 = v[..m].to_vec();
-        v2.push(0.25 * v0);
-        let st = rank_one_update(&mut self.vals, &mut self.vecs, sigma, &v1, engine)?;
+        self.scratch.v1.clear();
+        self.scratch.v1.extend_from_slice(&self.scratch.v[..m]);
+        self.scratch.v1.push(0.5 * v0);
+        self.scratch.v2.clear();
+        self.scratch.v2.extend_from_slice(&self.scratch.v[..m]);
+        self.scratch.v2.push(0.25 * v0);
+        let st = rank_one_update_ws(
+            &mut self.vals,
+            &mut self.vecs,
+            sigma,
+            &self.scratch.v1,
+            engine,
+            &mut self.ws,
+        )?;
         self.stats.absorb(st);
-        let st = rank_one_update(&mut self.vals, &mut self.vecs, -sigma, &v2, engine)?;
+        let st = rank_one_update_ws(
+            &mut self.vals,
+            &mut self.vecs,
+            -sigma,
+            &self.scratch.v2,
+            engine,
+            &mut self.ws,
+        )?;
         self.stats.absorb(st);
 
-        // Commit state only after all updates succeeded.
+        // Commit state only after all updates succeeded (k1 swaps with
+        // the scratch-built next-step sums — no allocation).
         self.s = s2;
-        self.k1 = k1_next;
+        std::mem::swap(&mut self.k1, &mut self.scratch.k1_next);
         self.x.extend_from_slice(xnew);
         self.m += 1;
         self.stats.accepted += 1;
@@ -316,8 +430,8 @@ impl<'k> IncrementalKpca<'k> {
     /// the quantity compared against the batch matrix in Fig. 1.
     pub fn reconstruct(&self) -> Mat {
         let n = self.vals.len();
-        let mut vl = self.vecs.clone();
-        for i in 0..n {
+        let mut vl = self.vecs.to_mat();
+        for i in 0..vl.rows() {
             for j in 0..n {
                 vl[(i, j)] *= self.vals[j];
             }
@@ -488,6 +602,29 @@ mod tests {
         // 4 rank-one updates per accepted adjusted step.
         assert_eq!(inc.stats.updates, 16);
         assert_eq!(inc.stats.accepted, 8);
+    }
+
+    #[test]
+    fn hot_path_reallocs_are_amortized() {
+        // Streaming growth reallocates only on capacity doublings — far
+        // fewer growth events than pushes.
+        let ds = yeast_like(40, 12);
+        let kern = Rbf { sigma: 1.0 };
+        let seed = ds.x.submatrix(4, ds.dim());
+        let mut inc = IncrementalKpca::from_batch(&kern, &seed, true).unwrap();
+        for i in 4..ds.n() {
+            inc.push(ds.x.row(i)).unwrap();
+        }
+        let pushes = (ds.n() - 4) as u64;
+        // 4 rank-one updates per push; a copy-per-step design would pay
+        // ≥ 1 fresh allocation per update. Amortized growth stays far
+        // below that.
+        assert!(
+            inc.hot_path_reallocs() < pushes,
+            "reallocs {} vs pushes {pushes}",
+            inc.hot_path_reallocs()
+        );
+        assert!(inc.hot_path_bytes() > 0);
     }
 
     #[test]

@@ -5,25 +5,28 @@
 //! mean-adjusted).
 
 use crate::kernels::{kernel_column, Kernel};
-use crate::linalg::Mat;
+use crate::linalg::{Mat, MatView};
 
 use super::centering::center_column;
 use super::incremental::IncrementalKpca;
 
 /// Project `y` onto the top `r` principal components of a fitted
 /// eigensystem over training data `x` with (adjusted) eigenpairs
-/// `(vals ascending, vecs)`. `k` is the *uncentered* training Gram
-/// matrix, needed for centering the new column; pass `None` when the
-/// model is unadjusted.
-pub fn project_point(
+/// `(vals ascending, vecs)` — `vecs` is anything viewable as a matrix
+/// (`&Mat`, a batch model's vectors, or an incremental state's
+/// `EigenBasis`). `k` is the *uncentered* training Gram matrix, needed
+/// for centering the new column; pass `None` when the model is
+/// unadjusted.
+pub fn project_point<'v>(
     kernel: &dyn Kernel,
     x: &Mat,
     vals: &[f64],
-    vecs: &Mat,
+    vecs: impl Into<MatView<'v>>,
     k_uncentered: Option<&Mat>,
     y: &[f64],
     r: usize,
 ) -> Vec<f64> {
+    let vecs = vecs.into();
     let m = x.rows();
     let ky = kernel_column(kernel, x, m, y);
     let col = match k_uncentered {

@@ -5,11 +5,18 @@
 //! `m × r` eigenvector matrix — the perturbations are projected onto
 //! the tracked dominant subspace — and truncates back to `r` after each
 //! expansion. Unlike the Hoegaerts baseline it carries the *mean
-//! adjustment*, which their tracker does not support.
+//! adjustment*, which their tracker does not support. Shares the full
+//! algorithm's workspace/eigenbasis storage for the rank-one updates
+//! (truncation is an in-place column shift, expansion an in-place
+//! capacity-slack grow); the per-step vectors here still allocate —
+//! this is a comparison tracker, not the production hot path
+//! (`kpca::IncrementalKpca` carries the step scratch).
 
-use crate::kernels::{kernel_column, Kernel};
+use crate::kernels::{kernel_column_into, Kernel};
 use crate::linalg::Mat;
-use crate::rankone::{rank_one_update, sort_pairs, NativeRotate, Rotate};
+use crate::rankone::{
+    rank_one_update_ws, sort_pairs_ws, EigenBasis, NativeRotate, Rotate, UpdateWorkspace,
+};
 
 /// Top-`r` mean-adjusted incremental kernel PCA.
 #[derive(Clone)]
@@ -23,10 +30,12 @@ pub struct TopKKpca<'k> {
     /// Tracked eigenvalues (ascending, length ≤ r).
     pub vals: Vec<f64>,
     /// Tracked eigenvectors (`m × len(vals)`).
-    pub vecs: Mat,
+    pub vecs: EigenBasis,
     /// Running sums of the *unadjusted* kernel matrix (as Algorithm 2).
     s: f64,
     k1: Vec<f64>,
+    /// Per-stream rank-one scratch.
+    ws: UpdateWorkspace,
 }
 
 impl<'k> TopKKpca<'k> {
@@ -50,7 +59,18 @@ impl<'k> TopKKpca<'k> {
         }
         let k1: Vec<f64> = (0..m).map(|i| k.row(i).iter().sum()).collect();
         let s = k1.iter().sum();
-        Ok(TopKKpca { kernel, x: x0.as_slice().to_vec(), dim: x0.cols(), m, r, vals, vecs, s, k1 })
+        Ok(TopKKpca {
+            kernel,
+            x: x0.as_slice().to_vec(),
+            dim: x0.cols(),
+            m,
+            r,
+            vals,
+            vecs: EigenBasis::from_mat(vecs),
+            s,
+            k1,
+            ws: UpdateWorkspace::new(),
+        })
     }
 
     pub fn len(&self) -> usize {
@@ -71,8 +91,9 @@ impl<'k> TopKKpca<'k> {
         assert_eq!(xnew.len(), self.dim);
         let m = self.m;
         let mf = m as f64;
-        let xmat = Mat::from_vec(m, self.dim, self.x.clone());
-        let a = kernel_column(self.kernel, &xmat, m, xnew);
+        // Kernel column over the flat retained data — no matrix clone.
+        let mut a = Vec::with_capacity(m);
+        kernel_column_into(self.kernel, &self.x, self.dim, m, xnew, &mut a);
         let knew = self.kernel.eval(xnew, xnew);
         let asum: f64 = a.iter().sum();
 
@@ -87,8 +108,8 @@ impl<'k> TopKKpca<'k> {
             let gamma = (unorm / mf.sqrt()).sqrt();
             let vp: Vec<f64> = u.iter().map(|ui| gamma + ui / gamma).collect();
             let vm: Vec<f64> = u.iter().map(|ui| gamma - ui / gamma).collect();
-            rank_one_update(&mut self.vals, &mut self.vecs, 0.5, &vp, engine)?;
-            rank_one_update(&mut self.vals, &mut self.vecs, -0.5, &vm, engine)?;
+            rank_one_update_ws(&mut self.vals, &mut self.vecs, 0.5, &vp, engine, &mut self.ws)?;
+            rank_one_update_ws(&mut self.vals, &mut self.vecs, -0.5, &vm, engine, &mut self.ws)?;
         }
 
         // Centered new row/column over m+1 points (lines 7–12).
@@ -112,30 +133,24 @@ impl<'k> TopKKpca<'k> {
         }
 
         // Expansion on the rectangular system + the two final updates.
-        let cols = self.vals.len();
-        let mut grown = Mat::zeros(m + 1, cols + 1);
-        for i in 0..m {
-            for j in 0..cols {
-                grown[(i, j)] = self.vecs[(i, j)];
-            }
-        }
-        grown[(m, cols)] = 1.0;
-        self.vecs = grown;
+        let (rows, cols) = (self.vecs.rows(), self.vecs.cols());
+        self.vecs.expand();
+        self.vecs[(rows, cols)] = 1.0;
         self.vals.push(0.25 * v0);
-        sort_pairs(&mut self.vals, &mut self.vecs);
+        sort_pairs_ws(&mut self.vals, &mut self.vecs, &mut self.ws);
         let sigma = 4.0 / v0;
         let mut v1 = v[..m].to_vec();
         v1.push(0.5 * v0);
         let mut v2 = v[..m].to_vec();
         v2.push(0.25 * v0);
-        rank_one_update(&mut self.vals, &mut self.vecs, sigma, &v1, engine)?;
-        rank_one_update(&mut self.vals, &mut self.vecs, -sigma, &v2, engine)?;
+        rank_one_update_ws(&mut self.vals, &mut self.vecs, sigma, &v1, engine, &mut self.ws)?;
+        rank_one_update_ws(&mut self.vals, &mut self.vecs, -sigma, &v2, engine, &mut self.ws)?;
 
-        // Truncate to the dominant r (ascending order: drop the front).
+        // Truncate to the dominant r (ascending order: drop the front) —
+        // an in-place column shift, no reallocation.
         while self.vals.len() > self.r {
             self.vals.remove(0);
-            let (rows, cols) = (self.vecs.rows(), self.vecs.cols());
-            self.vecs = Mat::from_fn(rows, cols - 1, |i, j| self.vecs[(i, j + 1)]);
+            self.vecs.remove_col(0);
         }
 
         self.s = s2;
@@ -148,7 +163,7 @@ impl<'k> TopKKpca<'k> {
     /// Low-rank reconstruction of the centered kernel matrix.
     pub fn reconstruct(&self) -> Mat {
         let (m, c) = (self.vecs.rows(), self.vecs.cols());
-        let mut ul = self.vecs.clone();
+        let mut ul = self.vecs.to_mat();
         for i in 0..m {
             for j in 0..c {
                 ul[(i, j)] *= self.vals[j];

@@ -2,19 +2,66 @@
 //!
 //! A three-layer Rust + JAX + Pallas reproduction of Hallgren &
 //! Northrop, *"Incremental kernel PCA and the Nyström method"*
-//! (stat.ML 2018).
+//! (stat.ML 2018), grown toward a production streaming system.
+//!
+//! ## Layers
 //!
 //! - **Layer 3** ([`coordinator`]) — streaming orchestrator in Rust:
 //!   ingestion with backpressure, eigenstate management, engine routing,
-//!   drift monitoring, metrics.
+//!   drift monitoring, metrics (including hot-path allocation gauges).
 //! - **Layer 2/1** — JAX model + Pallas kernels (build-time Python),
 //!   AOT-lowered to HLO text and executed from Rust via PJRT
-//!   ([`runtime`]).
+//!   ([`runtime`]; compiled under `--cfg pjrt_runtime`, with a clean
+//!   native fallback stub otherwise).
 //! - The paper's algorithms live in [`kpca`] (Algorithms 1 & 2),
 //!   [`rankone`]/[`secular`] (the Golub-73 / Bunch–Nielsen–Sorensen-78
 //!   rank-one eigen update) and [`nystrom`] (§4 incremental Nyström),
 //!   with baselines in [`baselines`] and all dense linear algebra built
 //!   from scratch in [`linalg`].
+//!
+//! ## The zero-allocation streaming hot path
+//!
+//! The point of rank-one updates is that streaming is cheaper than
+//! re-solving — so the steady-state update loop must not pay the
+//! allocator either. Three pieces make the hot path allocation-free
+//! once warm:
+//!
+//! - **Views** ([`linalg::MatView`]/[`linalg::MatViewMut`]): shape +
+//!   row-stride windows over borrowed `&[f64]`. Every BLAS kernel has a
+//!   `*_into` variant (`matmul_into`, `gemv_t_into`, …) writing into
+//!   caller-owned, possibly strided buffers; the allocating entry
+//!   points are thin wrappers accepting anything viewable (`&Mat`,
+//!   `MatView`, `&EigenBasis`).
+//! - **[`rankone::EigenBasis`]**: capacity-doubling eigenvector storage
+//!   (rows kept at a fixed stride inside a `row_cap × stride` buffer).
+//!   The per-example expansion by one row + one column is an in-place
+//!   `O(m)` write instead of a full `O(m²)` re-layout; reallocation is
+//!   amortized `O(1)` by doubling.
+//! - **[`rankone::UpdateWorkspace`]**: one scratch arena per stream
+//!   owning every intermediate a rank-one step needs — `z = Uᵀv`, the
+//!   deflation partition, secular roots, stabilized weights, the `W`
+//!   factor, and the rotated-`U` double buffer that commits the
+//!   no-deflation fast path by an `O(1)` buffer swap. A realloc counter
+//!   proves steady-state silence (`tests/workspace.rs`), and the
+//!   coordinator surfaces bytes-resident / reallocs-per-update gauges
+//!   per stream.
+//!
+//! The workspace threads from [`linalg`] through [`rankone`] (the
+//! [`rankone::Rotate`] engines now rotate *into* caller buffers, fused
+//! or W-form), [`kpca::IncrementalKpca`] (2 updates per example
+//! unadjusted, 4 adjusted — one shared workspace), the top-`r` trackers
+//! and [`baselines`], [`nystrom::IncrementalNystrom`] (whose cross-Gram
+//! appends rows in amortized `O(n)`), up to [`coordinator::server`]
+//! (one workspace per stream, gauges in [`coordinator::metrics`]).
+//! This is the substrate the multi-stream sharding work builds on (see
+//! ROADMAP).
+
+// The numeric kernels are written index-style on purpose (they mirror
+// the paper's equations and the blocked-GEMM literature); clippy's
+// iterator-style suggestions hurt readability there. `Mat::add`/`sub`
+// are deliberate inherent methods (operator impls would force owned
+// receivers or double-reference noise everywhere).
+#![allow(clippy::needless_range_loop, clippy::should_implement_trait)]
 
 pub mod baselines;
 pub mod coordinator;

@@ -1,9 +1,14 @@
-//! Blocked, cache-aware, rayon-parallel matrix multiplication and the
-//! small BLAS-2 kernels the rest of the crate needs. This is the native
-//! compute engine: the same products can also be routed to an AOT PJRT
-//! executable via `runtime`/`coordinator::router`.
+//! Blocked, cache-aware, parallel matrix multiplication and the small
+//! BLAS-2 kernels the rest of the crate needs — all expressed over
+//! [`MatView`]/[`MatViewMut`] so the streaming hot path can run into
+//! caller-owned buffers without allocating. The allocating entry points
+//! (`matmul`, `gemv`, …) are thin wrappers and accept anything
+//! convertible to a view (`&Mat`, `MatView`, `&rankone::EigenBasis`).
+//! The same products can also be routed to an AOT PJRT executable via
+//! `runtime`/`coordinator::router`.
 
 use super::matrix::Mat;
+use super::view::{MatView, MatViewMut};
 use crate::util::par;
 
 /// Row-panel height used by the blocked kernel. Chosen so that an
@@ -15,67 +20,68 @@ const KC: usize = 256;
 /// they save.
 const PAR_FLOPS: usize = 1 << 20;
 
-/// `C = A · B`.
-pub fn matmul(a: &Mat, b: &Mat) -> Mat {
+/// `C = A · B` into a caller-owned view (zeroed first). The blocked,
+/// register-tiled kernel runs in parallel over `MC`-row panels of `C`
+/// when the flop count warrants it; all three operands may be strided.
+pub fn matmul_into(a: MatView<'_>, b: MatView<'_>, out: &mut MatViewMut<'_>) {
     assert_eq!(a.cols(), b.rows(), "matmul shape mismatch");
+    assert_eq!(out.rows(), a.rows(), "matmul out rows mismatch");
+    assert_eq!(out.cols(), b.cols(), "matmul out cols mismatch");
     let (m, k, n) = (a.rows(), a.cols(), b.cols());
-    let mut c = Mat::zeros(m, n);
+    out.fill_zero();
     if m == 0 || k == 0 || n == 0 {
-        return c;
+        return;
     }
-    let flops = 2 * m * k * n;
-    if flops < PAR_FLOPS {
-        matmul_serial_into(a, b, &mut c);
+    let (sa, sb, sc) = (a.stride(), b.stride(), out.stride());
+    let a_data = a.raw();
+    let b_data = b.raw();
+    if 2 * m * k * n < PAR_FLOPS {
+        let c_data = out.raw_mut();
+        for kk in (0..k).step_by(KC) {
+            let kend = (kk + KC).min(k);
+            gemm_panel(a_data, sa, b_data, sb, c_data, sc, 0, m, n, kk, kend);
+        }
     } else {
-        matmul_parallel_into(a, b, &mut c);
+        par::par_chunks_mut(out.raw_mut(), MC * sc, |blk, c_panel| {
+            let i0 = blk * MC;
+            if i0 >= m {
+                return; // capacity rows beyond the viewed window
+            }
+            let i1 = (i0 + MC).min(m);
+            for kk in (0..k).step_by(KC) {
+                let kend = (kk + KC).min(k);
+                gemm_panel(a_data, sa, b_data, sb, c_panel, sc, i0, i1, n, kk, kend);
+            }
+        });
     }
-    c
 }
 
-/// `C = A · Bᵀ` without materializing the transpose (both row-major, so
-/// this is the dot-product-friendly orientation).
-pub fn matmul_nt(a: &Mat, b: &Mat) -> Mat {
-    assert_eq!(a.cols(), b.cols(), "matmul_nt shape mismatch");
-    let (m, k, n) = (a.rows(), a.cols(), b.rows());
-    let mut c = Mat::zeros(m, n);
-    if m == 0 || k == 0 || n == 0 {
-        return c;
-    }
-    let a_data = a.as_slice();
-    let b_data = b.as_slice();
-    let do_row = |i: usize, crow: &mut [f64]| {
-        let arow = &a_data[i * k..(i + 1) * k];
-        for j in 0..n {
-            let brow = &b_data[j * k..(j + 1) * k];
-            let mut s = 0.0;
-            for p in 0..k {
-                s += arow[p] * brow[p];
-            }
-            crow[j] = s;
-        }
-    };
-    if 2 * m * k * n < PAR_FLOPS {
-        for i in 0..m {
-            do_row(i, &mut c.as_mut_slice()[i * n..(i + 1) * n]);
-        }
-    } else {
-        par::par_chunks_mut(c.as_mut_slice(), n, |i, crow| do_row(i, crow));
-    }
+/// `C = A · B`.
+pub fn matmul<'a, 'b>(a: impl Into<MatView<'a>>, b: impl Into<MatView<'b>>) -> Mat {
+    let (a, b) = (a.into(), b.into());
+    assert_eq!(a.cols(), b.rows(), "matmul shape mismatch");
+    let mut c = Mat::zeros(a.rows(), b.cols());
+    let mut cv = c.view_mut();
+    matmul_into(a, b, &mut cv);
     c
 }
 
 /// Inner kernel: accumulate rows `i0..i1` of `C` over the `kk..kend`
 /// depth slice, with 4-row register blocking — each `brow` load feeds
 /// four FMAs, quadrupling arithmetic intensity vs the plain axpy form
-/// (the win measured in EXPERIMENTS.md §Perf).
+/// (the win measured in EXPERIMENTS.md §Perf). `c_panel` starts at row
+/// `i0`; `sa`/`sb`/`sc` are the row strides of the three operands.
+#[allow(clippy::too_many_arguments)]
 #[inline]
 fn gemm_panel(
     a_data: &[f64],
+    sa: usize,
     b_data: &[f64],
+    sb: usize,
     c_panel: &mut [f64],
+    sc: usize,
     i0: usize,
     i1: usize,
-    k: usize,
     n: usize,
     kk: usize,
     kend: usize,
@@ -83,20 +89,23 @@ fn gemm_panel(
     let mut i = i0;
     while i + 4 <= i1 {
         // Split the 4 destination rows without aliasing.
-        let base = (i - i0) * n;
-        let (r0, rest) = c_panel[base..].split_at_mut(n);
-        let (r1, rest) = rest.split_at_mut(n);
-        let (r2, rest) = rest.split_at_mut(n);
+        let base = (i - i0) * sc;
+        let (r0, rest) = c_panel[base..].split_at_mut(sc);
+        let (r1, rest) = rest.split_at_mut(sc);
+        let (r2, rest) = rest.split_at_mut(sc);
+        let r0 = &mut r0[..n];
+        let r1 = &mut r1[..n];
+        let r2 = &mut r2[..n];
         let r3 = &mut rest[..n];
         for p in kk..kend {
-            let a0 = a_data[i * k + p];
-            let a1 = a_data[(i + 1) * k + p];
-            let a2 = a_data[(i + 2) * k + p];
-            let a3 = a_data[(i + 3) * k + p];
+            let a0 = a_data[i * sa + p];
+            let a1 = a_data[(i + 1) * sa + p];
+            let a2 = a_data[(i + 2) * sa + p];
+            let a3 = a_data[(i + 3) * sa + p];
             if a0 == 0.0 && a1 == 0.0 && a2 == 0.0 && a3 == 0.0 {
                 continue;
             }
-            let brow = &b_data[p * n..(p + 1) * n];
+            let brow = &b_data[p * sb..p * sb + n];
             for j in 0..n {
                 let bj = brow[j];
                 r0[j] += a0 * bj;
@@ -108,13 +117,14 @@ fn gemm_panel(
         i += 4;
     }
     while i < i1 {
-        let crow = &mut c_panel[(i - i0) * n..(i - i0 + 1) * n];
+        let base = (i - i0) * sc;
+        let crow = &mut c_panel[base..base + n];
         for p in kk..kend {
-            let aip = a_data[i * k + p];
+            let aip = a_data[i * sa + p];
             if aip == 0.0 {
                 continue;
             }
-            let brow = &b_data[p * n..(p + 1) * n];
+            let brow = &b_data[p * sb..p * sb + n];
             for j in 0..n {
                 crow[j] += aip * brow[j];
             }
@@ -123,53 +133,155 @@ fn gemm_panel(
     }
 }
 
-fn matmul_serial_into(a: &Mat, b: &Mat, c: &mut Mat) {
-    let (m, k, n) = (a.rows(), a.cols(), b.cols());
-    let a_data = a.as_slice();
-    let b_data = b.as_slice();
-    let c_data = c.as_mut_slice();
-    for kk in (0..k).step_by(KC) {
-        let kend = (kk + KC).min(k);
-        gemm_panel(a_data, b_data, c_data, 0, m, k, n, kk, kend);
+/// `C = A · Bᵀ` into a caller-owned view — both row-major, so this is
+/// the dot-product-friendly orientation (no transpose materialized).
+pub fn matmul_nt_into(a: MatView<'_>, b: MatView<'_>, out: &mut MatViewMut<'_>) {
+    assert_eq!(a.cols(), b.cols(), "matmul_nt shape mismatch");
+    assert_eq!(out.rows(), a.rows(), "matmul_nt out rows mismatch");
+    assert_eq!(out.cols(), b.rows(), "matmul_nt out cols mismatch");
+    let (m, k, n) = (a.rows(), a.cols(), b.rows());
+    out.fill_zero();
+    if m == 0 || k == 0 || n == 0 {
+        return;
+    }
+    let sc = out.stride();
+    let do_row = |i: usize, crow: &mut [f64]| {
+        let arow = a.row(i);
+        for j in 0..n {
+            let brow = b.row(j);
+            let mut s = 0.0;
+            for p in 0..k {
+                s += arow[p] * brow[p];
+            }
+            crow[j] = s;
+        }
+    };
+    if 2 * m * k * n < PAR_FLOPS {
+        let c_data = out.raw_mut();
+        for i in 0..m {
+            do_row(i, &mut c_data[i * sc..i * sc + n]);
+        }
+    } else {
+        par::par_chunks_mut(out.raw_mut(), sc, |i, crow| {
+            if i < m {
+                do_row(i, &mut crow[..n]);
+            }
+        });
     }
 }
 
-fn matmul_parallel_into(a: &Mat, b: &Mat, c: &mut Mat) {
-    let (m, k, n) = (a.rows(), a.cols(), b.cols());
-    let a_data = a.as_slice();
-    let b_data = b.as_slice();
-    par::par_chunks_mut(c.as_mut_slice(), MC * n, |blk, c_panel| {
-        let i0 = blk * MC;
-        let i1 = (i0 + MC).min(m);
-        for kk in (0..k).step_by(KC) {
-            let kend = (kk + KC).min(k);
-            gemm_panel(a_data, b_data, c_panel, i0, i1, k, n, kk, kend);
+/// `C = A · Bᵀ` without materializing the transpose.
+pub fn matmul_nt<'a, 'b>(a: impl Into<MatView<'a>>, b: impl Into<MatView<'b>>) -> Mat {
+    let (a, b) = (a.into(), b.into());
+    assert_eq!(a.cols(), b.cols(), "matmul_nt shape mismatch");
+    let mut c = Mat::zeros(a.rows(), b.rows());
+    let mut cv = c.view_mut();
+    matmul_nt_into(a, b, &mut cv);
+    c
+}
+
+/// `C = Aᵀ · B` into a caller-owned view. Small problems accumulate
+/// rank-one outer products row by row (cache-friendly for row-major
+/// operands); above the flop threshold the accumulation parallelizes
+/// over disjoint output rows (each owning one strided column of `A`).
+pub fn matmul_tn_into(a: MatView<'_>, b: MatView<'_>, out: &mut MatViewMut<'_>) {
+    assert_eq!(a.rows(), b.rows(), "matmul_tn shape mismatch");
+    assert_eq!(out.rows(), a.cols(), "matmul_tn out rows mismatch");
+    assert_eq!(out.cols(), b.cols(), "matmul_tn out cols mismatch");
+    let (m, r, n) = (a.rows(), a.cols(), b.cols());
+    out.fill_zero();
+    if m == 0 || r == 0 || n == 0 {
+        return;
+    }
+    let sc = out.stride();
+    let (sa, sb) = (a.stride(), b.stride());
+    let a_data = a.raw();
+    let b_data = b.raw();
+    if 2 * m * r * n < PAR_FLOPS {
+        let c_data = out.raw_mut();
+        for p in 0..m {
+            let arow = a.row(p);
+            let brow = b.row(p);
+            for (i, &aip) in arow.iter().enumerate() {
+                if aip == 0.0 {
+                    continue;
+                }
+                let crow = &mut c_data[i * sc..i * sc + n];
+                for j in 0..n {
+                    crow[j] += aip * brow[j];
+                }
+            }
         }
-    });
+    } else {
+        par::par_chunks_mut(out.raw_mut(), sc, |i, crow| {
+            if i >= r {
+                return;
+            }
+            let crow = &mut crow[..n];
+            for p in 0..m {
+                let aip = a_data[p * sa + i];
+                if aip == 0.0 {
+                    continue;
+                }
+                let brow = &b_data[p * sb..p * sb + n];
+                for j in 0..n {
+                    crow[j] += aip * brow[j];
+                }
+            }
+        });
+    }
+}
+
+/// `T = Aᵀ` into a caller-owned view.
+pub fn transpose_into(a: MatView<'_>, out: &mut MatViewMut<'_>) {
+    assert_eq!(out.rows(), a.cols(), "transpose out rows mismatch");
+    assert_eq!(out.cols(), a.rows(), "transpose out cols mismatch");
+    for i in 0..a.rows() {
+        let arow = a.row(i);
+        for (j, &v) in arow.iter().enumerate() {
+            out[(j, i)] = v;
+        }
+    }
+}
+
+/// `y = A · x` into a caller-owned slice.
+pub fn gemv_into(a: MatView<'_>, x: &[f64], y: &mut [f64]) {
+    assert_eq!(a.cols(), x.len(), "gemv shape mismatch");
+    assert_eq!(a.rows(), y.len(), "gemv out length mismatch");
+    for (i, yi) in y.iter_mut().enumerate() {
+        *yi = super::matrix::dot(a.row(i), x);
+    }
 }
 
 /// `y = A · x`.
-pub fn gemv(a: &Mat, x: &[f64]) -> Vec<f64> {
-    assert_eq!(a.cols(), x.len(), "gemv shape mismatch");
-    (0..a.rows())
-        .map(|i| super::matrix::dot(a.row(i), x))
-        .collect()
+pub fn gemv<'a>(a: impl Into<MatView<'a>>, x: &[f64]) -> Vec<f64> {
+    let a = a.into();
+    let mut y = vec![0.0; a.rows()];
+    gemv_into(a, x, &mut y);
+    y
 }
 
-/// `y = Aᵀ · x`.
-pub fn gemv_t(a: &Mat, x: &[f64]) -> Vec<f64> {
+/// `y = Aᵀ · x` into a caller-owned slice.
+pub fn gemv_t_into(a: MatView<'_>, x: &[f64], y: &mut [f64]) {
     assert_eq!(a.rows(), x.len(), "gemv_t shape mismatch");
-    let mut y = vec![0.0; a.cols()];
-    for i in 0..a.rows() {
-        let xi = x[i];
+    assert_eq!(a.cols(), y.len(), "gemv_t out length mismatch");
+    y.fill(0.0);
+    for (i, &xi) in x.iter().enumerate() {
         if xi == 0.0 {
             continue;
         }
         let row = a.row(i);
-        for j in 0..a.cols() {
-            y[j] += xi * row[j];
+        for (j, yj) in y.iter_mut().enumerate() {
+            *yj += xi * row[j];
         }
     }
+}
+
+/// `y = Aᵀ · x`.
+pub fn gemv_t<'a>(a: impl Into<MatView<'a>>, x: &[f64]) -> Vec<f64> {
+    let a = a.into();
+    let mut y = vec![0.0; a.cols()];
+    gemv_t_into(a, x, &mut y);
     y
 }
 
@@ -230,12 +342,71 @@ mod tests {
     }
 
     #[test]
+    fn matmul_into_strided_out_matches() {
+        // The output lives in a wider capacity buffer (stride > cols),
+        // exactly how the workspace's rotated panel is laid out.
+        let a = Mat::from_fn(9, 6, |i, j| ((i * 5 + j) % 7) as f64 - 3.0);
+        let b = Mat::from_fn(6, 5, |i, j| ((i + 2 * j) % 5) as f64 * 0.5);
+        let stride = 8;
+        let mut buf = vec![f64::NAN; 12 * stride];
+        {
+            let mut out = MatViewMut::new(&mut buf, 9, 5, stride);
+            matmul_into(a.view(), b.view(), &mut out);
+        }
+        let expect = naive(&a, &b);
+        for i in 0..9 {
+            for j in 0..5 {
+                assert!((buf[i * stride + j] - expect[(i, j)]).abs() < 1e-12);
+            }
+        }
+        // Gap columns untouched.
+        assert!(buf[5].is_nan());
+    }
+
+    #[test]
+    fn matmul_strided_inputs_match() {
+        // a and b viewed as windows of wider buffers.
+        let full_a = Mat::from_fn(4, 9, |i, j| (i * 9 + j) as f64 * 0.1);
+        let full_b = Mat::from_fn(3, 7, |i, j| (i * 7 + j) as f64 * 0.2 - 1.0);
+        let av = MatView::new(full_a.as_slice(), 4, 3, 9);
+        let bv = MatView::new(full_b.as_slice(), 3, 4, 7);
+        let c = matmul(av, bv);
+        let a_win = av.to_mat();
+        let b_win = bv.to_mat();
+        assert!(c.max_abs_diff(&naive(&a_win, &b_win)) < 1e-12);
+    }
+
+    #[test]
     fn matmul_nt_matches() {
         let a = Mat::from_fn(6, 9, |i, j| (i + j) as f64 * 0.5);
         let b = Mat::from_fn(8, 9, |i, j| i as f64 * 1.5 - j as f64);
         let c = matmul_nt(&a, &b);
         let c2 = matmul(&a, &b.transpose());
         assert!(c.max_abs_diff(&c2) < 1e-12);
+    }
+
+    #[test]
+    fn matmul_tn_matches() {
+        let a = Mat::from_fn(7, 4, |i, j| ((i * 3 + j) as f64).sin());
+        let b = Mat::from_fn(7, 5, |i, j| ((i + 2 * j) as f64).cos());
+        let mut c = Mat::zeros(4, 5);
+        {
+            let mut cv = c.view_mut();
+            matmul_tn_into(a.view(), b.view(), &mut cv);
+        }
+        let expect = matmul(&a.transpose(), &b);
+        assert!(c.max_abs_diff(&expect) < 1e-12);
+    }
+
+    #[test]
+    fn transpose_into_matches() {
+        let a = Mat::from_fn(3, 5, |i, j| (i * 5 + j) as f64);
+        let mut t = Mat::zeros(5, 3);
+        {
+            let mut tv = t.view_mut();
+            transpose_into(a.view(), &mut tv);
+        }
+        assert!(t.max_abs_diff(&a.transpose()) < 1e-15);
     }
 
     #[test]

@@ -102,6 +102,19 @@ impl Mat {
         }
     }
 
+    /// Append one row (amortized `O(cols)` — `Vec` growth doubles, so
+    /// streaming appenders like the Nyström cross-Gram never re-layout).
+    pub fn push_row(&mut self, row: &[f64]) {
+        assert_eq!(row.len(), self.cols, "push_row width mismatch");
+        self.data.extend_from_slice(row);
+        self.rows += 1;
+    }
+
+    /// Consume into the flat row-major backing vector.
+    pub fn into_vec(self) -> Vec<f64> {
+        self.data
+    }
+
     /// Transposed copy.
     pub fn transpose(&self) -> Mat {
         let mut t = Mat::zeros(self.cols, self.rows);

@@ -1,7 +1,9 @@
 //! Dense linear-algebra substrate, built from scratch: matrix type,
-//! blocked/parallel BLAS-3, Householder tridiagonalization, implicit-QL
-//! tridiagonal eigensolver, full symmetric `eigh`, Cholesky with rank-one
-//! up/downdates, and the three norms the paper's figures report.
+//! borrowed matrix views (the zero-allocation hot-path currency),
+//! blocked/parallel BLAS-3 with `*_into` variants, Householder
+//! tridiagonalization, implicit-QL tridiagonal eigensolver, full
+//! symmetric `eigh`, Cholesky with rank-one up/downdates, and the three
+//! norms the paper's figures report.
 
 pub mod cholesky;
 pub mod eigh;
@@ -10,11 +12,16 @@ pub mod householder;
 pub mod matrix;
 pub mod norms;
 pub mod tridiag;
+pub mod view;
 
 pub use cholesky::Cholesky;
 pub use eigh::{eigh, eigvalsh, Eigh};
-pub use gemm::{gemv, gemv_t, matmul, matmul_nt, syrk};
+pub use gemm::{
+    gemv, gemv_into, gemv_t, gemv_t_into, matmul, matmul_into, matmul_nt, matmul_nt_into,
+    matmul_tn_into, syrk, transpose_into,
+};
 pub use matrix::{dot, norm2, Mat};
 pub use norms::{
     frobenius, orthogonality_defect, psd_norms, spectral_sym, sym_norms, trace_sym, Norms,
 };
+pub use view::{MatView, MatViewMut};

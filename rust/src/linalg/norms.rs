@@ -112,7 +112,10 @@ pub fn psd_norms(a: &Mat) -> Norms {
 }
 
 /// `‖UUᵀ − I‖_F` — the orthogonality-loss diagnostic from §5.1.
-pub fn orthogonality_defect(u: &Mat) -> f64 {
+/// Accepts anything viewable as a matrix (`&Mat`, `MatView`,
+/// `&rankone::EigenBasis`).
+pub fn orthogonality_defect<'a>(u: impl Into<super::view::MatView<'a>>) -> f64 {
+    let u = u.into();
     let uut = super::gemm::matmul_nt(u, u);
     let n = uut.rows();
     let mut s = 0.0;

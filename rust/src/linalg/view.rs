@@ -1,0 +1,257 @@
+//! Borrowed matrix views: shape + row stride over a flat `&[f64]`.
+//!
+//! The streaming hot path must not allocate once warm, so every kernel
+//! in [`super::gemm`] has an `*_into` variant operating on these views.
+//! A view never owns storage; the stride lets callers expose a
+//! `rows × cols` window of a larger capacity buffer (the device
+//! `rankone::EigenBasis` uses to grow in place) without copying.
+
+use std::ops::{Index, IndexMut};
+
+use super::matrix::Mat;
+
+/// Immutable `rows × cols` window over `data`, with `stride` elements
+/// between row starts (`stride >= cols`; `stride == cols` means
+/// contiguous row-major).
+#[derive(Clone, Copy)]
+pub struct MatView<'a> {
+    data: &'a [f64],
+    rows: usize,
+    cols: usize,
+    stride: usize,
+}
+
+impl<'a> MatView<'a> {
+    /// Wrap `data` as a `rows × cols` view with the given row stride.
+    pub fn new(data: &'a [f64], rows: usize, cols: usize, stride: usize) -> Self {
+        assert!(stride >= cols, "stride must cover a full row");
+        assert!(
+            rows == 0 || data.len() >= (rows - 1) * stride + cols,
+            "view exceeds backing slice"
+        );
+        MatView { data, rows, cols, stride }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn stride(&self) -> usize {
+        self.stride
+    }
+
+    /// Row `i` as a `cols`-long slice.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        debug_assert!(i < self.rows);
+        &self.data[i * self.stride..i * self.stride + self.cols]
+    }
+
+    /// The full backing slice (rows at `stride` spacing).
+    pub fn raw(&self) -> &'a [f64] {
+        self.data
+    }
+
+    /// Copy the viewed window out into an owned matrix.
+    pub fn to_mat(&self) -> Mat {
+        let mut data = Vec::with_capacity(self.rows * self.cols);
+        for i in 0..self.rows {
+            data.extend_from_slice(self.row(i));
+        }
+        Mat::from_vec(self.rows, self.cols, data)
+    }
+}
+
+impl Index<(usize, usize)> for MatView<'_> {
+    type Output = f64;
+    #[inline(always)]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[i * self.stride + j]
+    }
+}
+
+impl<'a> From<&'a Mat> for MatView<'a> {
+    fn from(m: &'a Mat) -> MatView<'a> {
+        MatView::new(m.as_slice(), m.rows(), m.cols(), m.cols())
+    }
+}
+
+/// Mutable counterpart of [`MatView`].
+pub struct MatViewMut<'a> {
+    data: &'a mut [f64],
+    rows: usize,
+    cols: usize,
+    stride: usize,
+}
+
+impl<'a> MatViewMut<'a> {
+    pub fn new(data: &'a mut [f64], rows: usize, cols: usize, stride: usize) -> Self {
+        assert!(stride >= cols, "stride must cover a full row");
+        assert!(
+            rows == 0 || data.len() >= (rows - 1) * stride + cols,
+            "view exceeds backing slice"
+        );
+        MatViewMut { data, rows, cols, stride }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn stride(&self) -> usize {
+        self.stride
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        debug_assert!(i < self.rows);
+        &self.data[i * self.stride..i * self.stride + self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        debug_assert!(i < self.rows);
+        &mut self.data[i * self.stride..i * self.stride + self.cols]
+    }
+
+    /// Reborrow as an immutable view.
+    pub fn as_view(&self) -> MatView<'_> {
+        MatView { data: &*self.data, rows: self.rows, cols: self.cols, stride: self.stride }
+    }
+
+    /// The full backing slice (rows at `stride` spacing).
+    pub fn raw_mut(&mut self) -> &mut [f64] {
+        &mut *self.data
+    }
+
+    /// Zero the viewed `rows × cols` window (stride gaps untouched).
+    pub fn fill_zero(&mut self) {
+        for i in 0..self.rows {
+            self.row_mut(i).fill(0.0);
+        }
+    }
+
+    /// Copy `src` (same shape) into the viewed window.
+    pub fn copy_from(&mut self, src: MatView<'_>) {
+        assert_eq!(self.rows, src.rows(), "copy_from row mismatch");
+        assert_eq!(self.cols, src.cols(), "copy_from col mismatch");
+        for i in 0..self.rows {
+            self.row_mut(i).copy_from_slice(src.row(i));
+        }
+    }
+}
+
+impl Index<(usize, usize)> for MatViewMut<'_> {
+    type Output = f64;
+    #[inline(always)]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[i * self.stride + j]
+    }
+}
+
+impl IndexMut<(usize, usize)> for MatViewMut<'_> {
+    #[inline(always)]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.stride + j]
+    }
+}
+
+impl<'a> From<&'a mut Mat> for MatViewMut<'a> {
+    fn from(m: &'a mut Mat) -> MatViewMut<'a> {
+        let (rows, cols) = (m.rows(), m.cols());
+        MatViewMut::new(m.as_mut_slice(), rows, cols, cols)
+    }
+}
+
+impl Mat {
+    /// Contiguous view of the whole matrix.
+    pub fn view(&self) -> MatView<'_> {
+        MatView::from(self)
+    }
+
+    /// Contiguous mutable view of the whole matrix.
+    pub fn view_mut(&mut self) -> MatViewMut<'_> {
+        MatViewMut::from(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn view_over_mat_matches_indexing() {
+        let m = Mat::from_fn(3, 4, |i, j| (i * 4 + j) as f64);
+        let v = m.view();
+        assert_eq!(v.rows(), 3);
+        assert_eq!(v.cols(), 4);
+        assert_eq!(v.stride(), 4);
+        for i in 0..3 {
+            for j in 0..4 {
+                assert_eq!(v[(i, j)], m[(i, j)]);
+            }
+        }
+        assert_eq!(v.row(1), m.row(1));
+    }
+
+    #[test]
+    fn strided_view_selects_window() {
+        // 3 rows of a 2-wide window inside a stride-5 buffer.
+        let data: Vec<f64> = (0..15).map(|x| x as f64).collect();
+        let v = MatView::new(&data, 3, 2, 5);
+        assert_eq!(v[(0, 0)], 0.0);
+        assert_eq!(v[(1, 1)], 6.0);
+        assert_eq!(v[(2, 0)], 10.0);
+        let m = v.to_mat();
+        assert_eq!(m.rows(), 3);
+        assert_eq!(m[(2, 1)], 11.0);
+    }
+
+    #[test]
+    fn mut_view_writes_through() {
+        let mut m = Mat::zeros(2, 3);
+        {
+            let mut v = m.view_mut();
+            v[(1, 2)] = 7.0;
+            v.row_mut(0)[1] = 3.0;
+        }
+        assert_eq!(m[(1, 2)], 7.0);
+        assert_eq!(m[(0, 1)], 3.0);
+    }
+
+    #[test]
+    fn fill_zero_respects_stride_gaps() {
+        let mut data = vec![1.0; 10];
+        {
+            let mut v = MatViewMut::new(&mut data, 2, 2, 5);
+            v.fill_zero();
+        }
+        // Window rows zeroed, gap elements untouched.
+        assert_eq!(data[0], 0.0);
+        assert_eq!(data[1], 0.0);
+        assert_eq!(data[2], 1.0);
+        assert_eq!(data[5], 0.0);
+        assert_eq!(data[6], 0.0);
+        assert_eq!(data[7], 1.0);
+    }
+
+    #[test]
+    fn copy_from_strided_source() {
+        let src_data: Vec<f64> = (0..12).map(|x| x as f64).collect();
+        let src = MatView::new(&src_data, 2, 3, 6);
+        let mut dst = Mat::zeros(2, 3);
+        dst.view_mut().copy_from(src);
+        assert_eq!(dst[(1, 2)], 8.0);
+    }
+}

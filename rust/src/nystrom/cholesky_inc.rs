@@ -60,8 +60,7 @@ impl<'k> CholeskyNystrom<'k> {
                     self.rejected += 1;
                     return Ok(false);
                 }
-                self.chol =
-                    Some(Cholesky::new(&Mat::from_vec(1, 1, vec![kself])).map_err(|e| e)?);
+                self.chol = Some(Cholesky::new(&Mat::from_vec(1, 1, vec![kself]))?);
             }
             Some(ch) => {
                 if ch.expand(&col, kself).is_err() {

@@ -1,13 +1,15 @@
 //! §4 — incremental calculation of the Nyström approximation: the
 //! subset eigensystem `K_{m,m} = UΛUᵀ` is maintained by the paper's
-//! incremental algorithm (rank-one updates), `K_{n,m}` gains one column
-//! per added subset point, and the rescaling of eq. (7) produces the
-//! approximate eigensystem of the full `K` at every step — *exactly*
-//! reproducing batch computation at each `m` (paper §4), which the tests
-//! assert.
+//! incremental algorithm (rank-one updates on the shared
+//! workspace/eigenbasis hot path), the cross-Gram gains one *row* per
+//! added subset point — stored transposed (`m × n`) so the append is an
+//! amortized `O(n)` `Vec` extend instead of a full `O(nm)` re-layout —
+//! and the rescaling of eq. (7) produces the approximate eigensystem of
+//! the full `K` at every step — *exactly* reproducing batch computation
+//! at each `m` (paper §4), which the tests assert.
 
-use crate::kernels::{kernel_column, Kernel};
-use crate::linalg::{matmul, matmul_nt, Mat, Norms};
+use crate::kernels::{kernel_column_into, Kernel};
+use crate::linalg::{matmul_nt, matmul_tn_into, transpose_into, Mat, Norms};
 use crate::rankone::Rotate;
 
 use crate::kpca::IncrementalKpca;
@@ -20,12 +22,15 @@ pub struct IncrementalNystrom<'k> {
     x: Mat,
     /// Incremental eigendecomposition of the (unadjusted) subset Gram.
     pub inc: IncrementalKpca<'k>,
-    /// `n × m` cross-Gram, one column appended per subset point.
-    pub knm: Mat,
+    /// `m × n` *transposed* cross-Gram `K_{m,n}`: row `c` holds
+    /// `k(x_{s_c}, x_j)` for all `j` — appended per subset point.
+    pub kmn: Mat,
     /// Indices (into `x`) of the current subset, in insertion order.
     pub subset: Vec<usize>,
     /// Relative eigenvalue cutoff for the pseudo-inverse in eq. (7).
     pub rcond: f64,
+    /// Reusable kernel-column buffer for the append.
+    col_buf: Vec<f64>,
 }
 
 impl<'k> IncrementalNystrom<'k> {
@@ -37,11 +42,12 @@ impl<'k> IncrementalNystrom<'k> {
         let n = x.rows();
         Ok(IncrementalNystrom {
             kernel,
-            knm: Mat::zeros(n, 0),
+            kmn: Mat::zeros(0, n),
             x,
             inc,
             subset: Vec::new(),
             rcond: 1e-12,
+            col_buf: Vec::new(),
         })
     }
 
@@ -52,6 +58,15 @@ impl<'k> IncrementalNystrom<'k> {
     /// Current subset size `m`.
     pub fn m(&self) -> usize {
         self.subset.len()
+    }
+
+    /// The `n × m` cross-Gram `K_{n,m}` (transposed copy — evaluation
+    /// paths only; the stream maintains the `m × n` layout).
+    pub fn knm(&self) -> Mat {
+        let mut out = Mat::zeros(self.kmn.cols(), self.kmn.rows());
+        let mut v = out.view_mut();
+        transpose_into(self.kmn.view(), &mut v);
+        out
     }
 
     /// Add evaluation point `idx` to the subset (with the native rotate
@@ -69,18 +84,13 @@ impl<'k> IncrementalNystrom<'k> {
         if !self.inc.push_with(&xi, engine)? {
             return Ok(false);
         }
-        // Append the new K_{n,m} column k(x_j, x_idx) for all j.
-        let col = kernel_column(self.kernel, &self.x, self.n(), &xi);
+        // Append the K_{m,n} row k(x_idx, x_j) for all j — amortized
+        // O(n), no re-layout of the existing cross-Gram.
         let n = self.n();
-        let m_new = self.m() + 1;
-        let mut grown = Mat::zeros(n, m_new);
-        for i in 0..n {
-            for j in 0..m_new - 1 {
-                grown[(i, j)] = self.knm[(i, j)];
-            }
-            grown[(i, m_new - 1)] = col[i];
-        }
-        self.knm = grown;
+        let mut col = std::mem::take(&mut self.col_buf);
+        kernel_column_into(self.kernel, self.x.as_slice(), self.x.cols(), n, &xi, &mut col);
+        self.kmn.push_row(&col);
+        self.col_buf = col;
         self.subset.push(idx);
         Ok(true)
     }
@@ -93,7 +103,7 @@ impl<'k> IncrementalNystrom<'k> {
         let lam_max = self.inc.vals.iter().fold(0.0_f64, |a, &b| a.max(b.abs()));
         let cutoff = self.rcond * lam_max;
         let vals: Vec<f64> = self.inc.vals.iter().map(|l| l * nf / mf).collect();
-        let mut ulinv = self.inc.vecs.clone();
+        let mut ulinv = self.inc.vecs.to_mat();
         for j in 0..m {
             let l = self.inc.vals[j];
             let inv = if l.abs() > cutoff { 1.0 / l } else { 0.0 };
@@ -101,7 +111,12 @@ impl<'k> IncrementalNystrom<'k> {
                 ulinv[(i, j)] *= inv;
             }
         }
-        let mut u = matmul(&self.knm, &ulinv);
+        // u = K_{n,m} · UΛ⁻¹ = (K_{m,n})ᵀ · UΛ⁻¹.
+        let mut u = Mat::zeros(n, m);
+        {
+            let mut uv = u.view_mut();
+            matmul_tn_into(self.kmn.view(), ulinv.view(), &mut uv);
+        }
         u.scale((mf / nf).sqrt());
         (vals, u)
     }
@@ -147,6 +162,20 @@ mod tests {
             let diff = inys.approx_gram().max_abs_diff(&batch.approx_gram());
             assert!(diff < 1e-7, "m={m}: diff {diff}");
         }
+    }
+
+    #[test]
+    fn transposed_cross_gram_matches_batch_layout() {
+        let ds = yeast_like(12, 7);
+        let kern = Rbf { sigma: 1.0 };
+        let mut inys = IncrementalNystrom::new(&kern, ds.x.clone()).unwrap();
+        for m in 0..4 {
+            inys.add_point(m).unwrap();
+        }
+        let batch = BatchNystrom::fit(&kern, &ds.x, &[0, 1, 2, 3]).unwrap();
+        assert_eq!(inys.kmn.rows(), 4);
+        assert_eq!(inys.kmn.cols(), 12);
+        assert!(inys.knm().max_abs_diff(&batch.knm) < 1e-12);
     }
 
     #[test]

@@ -1,0 +1,292 @@
+//! Capacity-doubling eigenvector storage. The streaming algorithms grow
+//! the eigensystem by one row *and* one column per accepted example;
+//! with a plain contiguous matrix that is a full `O(mn)` re-layout per
+//! step. `EigenBasis` keeps rows at a fixed `stride ≥ cols` inside a
+//! `row_cap × stride` buffer, so expansion is `O(m)` writes (zeroing the
+//! newly exposed row/column) and reallocation is amortized `O(1)` via
+//! doubling — the same trade `Vec` makes, lifted to two dimensions.
+//!
+//! Only the leading `rows × cols` window is meaningful; slack capacity
+//! holds stale values by design (every consumer goes through
+//! [`EigenBasis::view`], which exposes exactly the window).
+
+use std::ops::{Index, IndexMut};
+
+use crate::linalg::{Mat, MatView, MatViewMut};
+
+/// Growable eigenvector matrix (`rows × cols` window, one eigenvector
+/// per column) with stride/capacity slack for in-place expansion.
+#[derive(Clone, Debug, Default)]
+pub struct EigenBasis {
+    data: Vec<f64>,
+    rows: usize,
+    cols: usize,
+    /// Allocated elements per row (`>= cols`).
+    stride: usize,
+    /// Allocated rows (`>= rows`).
+    row_cap: usize,
+    reallocs: u64,
+}
+
+impl EigenBasis {
+    /// Empty basis (grows on first [`EigenBasis::expand`]).
+    pub fn new() -> Self {
+        EigenBasis::default()
+    }
+
+    /// Take over a dense matrix without copying (stride = cols).
+    pub fn from_mat(m: Mat) -> Self {
+        let (rows, cols) = (m.rows(), m.cols());
+        EigenBasis { data: m.into_vec(), rows, cols, stride: cols, row_cap: rows, reallocs: 0 }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Buffer-growth events since construction (zero in steady state).
+    pub fn reallocs(&self) -> u64 {
+        self.reallocs
+    }
+
+    /// Bytes held by the backing buffer.
+    pub fn bytes_resident(&self) -> usize {
+        self.data.capacity() * std::mem::size_of::<f64>()
+    }
+
+    /// Length of the backing buffer in elements (`row_cap × stride`).
+    pub(crate) fn data_len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Row stride of the backing buffer.
+    pub(crate) fn stride(&self) -> usize {
+        self.stride
+    }
+
+    /// Swap the backing buffer with an equally-sized external one — the
+    /// `O(1)` commit of the rotated-eigenvector double buffer.
+    pub(crate) fn swap_data(&mut self, other: &mut Vec<f64>) {
+        debug_assert_eq!(other.len(), self.data.len(), "double buffer length mismatch");
+        std::mem::swap(&mut self.data, other);
+    }
+
+    /// View of the valid `rows × cols` window.
+    pub fn view(&self) -> MatView<'_> {
+        MatView::new(&self.data, self.rows, self.cols, self.stride.max(self.cols))
+    }
+
+    /// Mutable view of the valid window.
+    pub fn view_mut(&mut self) -> MatViewMut<'_> {
+        let stride = self.stride.max(self.cols);
+        MatViewMut::new(&mut self.data, self.rows, self.cols, stride)
+    }
+
+    /// Row `i` of the window.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        debug_assert!(i < self.rows);
+        &self.data[i * self.stride..i * self.stride + self.cols]
+    }
+
+    /// Mutable row `i` of the window.
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        debug_assert!(i < self.rows);
+        &mut self.data[i * self.stride..i * self.stride + self.cols]
+    }
+
+    /// Column `j` copied into a new vector.
+    pub fn col(&self, j: usize) -> Vec<f64> {
+        debug_assert!(j < self.cols);
+        (0..self.rows).map(|i| self[(i, j)]).collect()
+    }
+
+    /// Copy the window out into a dense matrix.
+    pub fn to_mat(&self) -> Mat {
+        self.view().to_mat()
+    }
+
+    /// Consume into a dense matrix (`O(1)` when the storage is exactly
+    /// contiguous, one compaction copy otherwise).
+    pub fn into_mat(self) -> Mat {
+        if self.stride == self.cols && self.data.len() == self.rows * self.cols {
+            Mat::from_vec(self.rows, self.cols, self.data)
+        } else {
+            self.to_mat()
+        }
+    }
+
+    /// Grow the window by one row and one column. Within capacity this
+    /// is `O(rows + cols)` (zero the newly exposed lane pair); beyond it
+    /// the buffer doubles in the overflowing dimension(s).
+    pub fn expand(&mut self) {
+        let (m, n) = (self.rows, self.cols);
+        if n + 1 > self.stride || m + 1 > self.row_cap {
+            let new_stride =
+                if n + 1 > self.stride { (n + 1).max(2 * self.stride) } else { self.stride };
+            let new_row_cap =
+                if m + 1 > self.row_cap { (m + 1).max(2 * self.row_cap) } else { self.row_cap };
+            let mut data = vec![0.0; new_row_cap * new_stride];
+            for i in 0..m {
+                data[i * new_stride..i * new_stride + n]
+                    .copy_from_slice(&self.data[i * self.stride..i * self.stride + n]);
+            }
+            self.data = data;
+            self.stride = new_stride;
+            self.row_cap = new_row_cap;
+            self.reallocs += 1;
+        } else {
+            // Clear the stale lane pair the window is about to expose.
+            for i in 0..m {
+                self.data[i * self.stride + n] = 0.0;
+            }
+            let base = m * self.stride;
+            self.data[base..base + n + 1].fill(0.0);
+        }
+        self.rows = m + 1;
+        self.cols = n + 1;
+    }
+
+    /// Drop column `j`, shifting later columns left in place (no
+    /// reallocation; used by the top-`r` truncating trackers).
+    pub fn remove_col(&mut self, j: usize) {
+        assert!(j < self.cols, "remove_col out of range");
+        for i in 0..self.rows {
+            let base = i * self.stride;
+            self.data.copy_within(base + j + 1..base + self.cols, base + j);
+        }
+        self.cols -= 1;
+    }
+
+    /// Max absolute difference to a dense matrix (test helper).
+    pub fn max_abs_diff(&self, other: &Mat) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows(), other.cols()));
+        let mut m = 0.0_f64;
+        for i in 0..self.rows {
+            for (a, b) in self.row(i).iter().zip(other.row(i)) {
+                m = m.max((a - b).abs());
+            }
+        }
+        m
+    }
+}
+
+impl Index<(usize, usize)> for EigenBasis {
+    type Output = f64;
+    #[inline(always)]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[i * self.stride + j]
+    }
+}
+
+impl IndexMut<(usize, usize)> for EigenBasis {
+    #[inline(always)]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.stride + j]
+    }
+}
+
+impl<'a> From<&'a EigenBasis> for MatView<'a> {
+    fn from(b: &'a EigenBasis) -> MatView<'a> {
+        b.view()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_mat_roundtrip_is_lossless() {
+        let m = Mat::from_fn(4, 3, |i, j| (i * 3 + j) as f64);
+        let b = EigenBasis::from_mat(m.clone());
+        assert_eq!(b.rows(), 4);
+        assert_eq!(b.cols(), 3);
+        assert_eq!(b.max_abs_diff(&m), 0.0);
+        assert_eq!(b.into_mat().max_abs_diff(&m), 0.0);
+    }
+
+    #[test]
+    fn expand_zeroes_new_lane_pair() {
+        let mut b = EigenBasis::from_mat(Mat::from_fn(2, 2, |_, _| 7.0));
+        b.expand();
+        assert_eq!(b.rows(), 3);
+        assert_eq!(b.cols(), 3);
+        for i in 0..3 {
+            assert_eq!(b[(i, 2)], 0.0);
+            assert_eq!(b[(2, i)], 0.0);
+        }
+        assert_eq!(b[(1, 1)], 7.0);
+    }
+
+    #[test]
+    fn expansion_reallocs_are_amortized() {
+        let mut b = EigenBasis::new();
+        for _ in 0..64 {
+            b.expand();
+        }
+        assert_eq!(b.rows(), 64);
+        // Doubling growth: far fewer reallocations than expansions.
+        assert!(b.reallocs() <= 8, "reallocs {}", b.reallocs());
+    }
+
+    #[test]
+    fn in_capacity_expand_does_not_realloc() {
+        let mut b = EigenBasis::new();
+        for _ in 0..20 {
+            b.expand();
+        }
+        // Shrink the window, then regrow within the existing capacity.
+        let before = b.reallocs();
+        b.remove_col(0);
+        // Stale column beyond the window must come back as zeros.
+        for i in 0..b.rows() {
+            b.row_mut(i).fill(3.0);
+        }
+        b.expand();
+        assert_eq!(b.reallocs(), before);
+        for i in 0..b.rows() {
+            assert_eq!(b[(i, b.cols() - 1)], 0.0, "stale column leaked at row {i}");
+        }
+    }
+
+    #[test]
+    fn remove_col_shifts_left() {
+        let m = Mat::from_fn(3, 4, |i, j| (10 * i + j) as f64);
+        let mut b = EigenBasis::from_mat(m);
+        b.remove_col(1);
+        assert_eq!(b.cols(), 3);
+        assert_eq!(b[(0, 0)], 0.0);
+        assert_eq!(b[(0, 1)], 2.0);
+        assert_eq!(b[(2, 2)], 23.0);
+    }
+
+    #[test]
+    fn view_matches_indexing_after_growth() {
+        let mut b = EigenBasis::from_mat(Mat::from_fn(2, 2, |i, j| (i + j) as f64));
+        b.expand();
+        b[(2, 2)] = 1.0;
+        let v = b.view();
+        assert_eq!(v.rows(), 3);
+        assert_eq!(v[(2, 2)], 1.0);
+        assert_eq!(v[(0, 1)], 1.0);
+        let m = b.to_mat();
+        assert_eq!(m[(2, 2)], 1.0);
+    }
+
+    #[test]
+    fn swap_data_exchanges_storage() {
+        let mut b = EigenBasis::from_mat(Mat::from_fn(2, 2, |i, j| (i * 2 + j) as f64));
+        let mut buf = vec![9.0; b.data_len()];
+        b.swap_data(&mut buf);
+        assert_eq!(b[(0, 0)], 9.0);
+        assert_eq!(buf[3], 3.0);
+    }
+}

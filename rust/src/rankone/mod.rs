@@ -10,33 +10,60 @@
 //! The `2n³`-flop back-rotation `U · Ũ` dominates and is delegated to a
 //! pluggable [`Rotate`] engine: the native blocked GEMM, or a PJRT
 //! executable AOT-compiled from the Pallas kernel (see `runtime`).
+//!
+//! The streaming entry points are the `*_ws` forms: eigenvectors live in
+//! an [`EigenBasis`] (capacity-doubling storage, expanded in place) and
+//! every scratch buffer comes from an [`UpdateWorkspace`], so a warm
+//! steady-state update touches the allocator zero times. On the
+//! no-deflation fast path the rotation writes into the workspace's
+//! double buffer and commits by an `O(1)` buffer swap. The `Mat`-based
+//! functions remain as allocating compatibility wrappers (and as the
+//! baseline the `benches/micro_linalg.rs` comparison measures against).
 
-use crate::linalg::{gemv_t, norm2, Mat};
-use crate::secular::{deflate, solve_all, SecularRoot};
+mod basis;
+mod workspace;
+
+pub use basis::EigenBasis;
+pub use workspace::UpdateWorkspace;
+
+use workspace::ensure_f64;
+
+use crate::linalg::{norm2, Mat, MatView, MatViewMut};
+use crate::secular::{deflate_into, solve_all_into, SecularRoot};
 
 /// Engine for the `U_active · W` product — the hot `2n³` path.
 pub trait Rotate {
-    /// Multiply `u` (`m × k`) by `w` (`k × k`).
-    fn rotate(&self, u: &Mat, w: &Mat) -> Mat;
+    /// `out ← u · w` where `u` is `m × k` and `w` is `k × k`. All three
+    /// operands may be strided views; `out` must not alias `u`/`w`.
+    fn rotate_into(&self, u: MatView<'_>, w: MatView<'_>, out: MatViewMut<'_>);
 
     /// Fused path: given the raw secular quantities, build the
-    /// normalized `W` internally and return `U·W` — the shape the AOT
-    /// Pallas artifact implements (runtime::PjrtRotate). Returning
-    /// `None` (default) makes `rank_one_update` build `W` in
-    /// pole-relative precision and call [`Rotate::rotate`].
-    fn rotate_fused(
+    /// normalized `W` internally, write `U·W` into `out` and return
+    /// `true` — the shape the AOT Pallas artifact implements
+    /// (runtime::PjrtRotate). Returning `false` (default) makes
+    /// `rank_one_update` build `W` in pole-relative precision and call
+    /// [`Rotate::rotate_into`].
+    fn rotate_fused_into(
         &self,
-        _u: &Mat,
+        _u: MatView<'_>,
         _z: &[f64],
         _d: &[f64],
         _roots: &[SecularRoot],
-    ) -> Option<Mat> {
-        None
+        _out: MatViewMut<'_>,
+    ) -> bool {
+        false
     }
 
     /// Short engine label for metrics/logs.
     fn name(&self) -> &'static str {
         "unnamed"
+    }
+
+    /// Allocating convenience form of [`Rotate::rotate_into`].
+    fn rotate(&self, u: &Mat, w: &Mat) -> Mat {
+        let mut out = Mat::zeros(u.rows(), w.cols());
+        self.rotate_into(MatView::from(u), MatView::from(w), MatViewMut::from(&mut out));
+        out
     }
 }
 
@@ -45,8 +72,8 @@ pub trait Rotate {
 pub struct NativeRotate;
 
 impl Rotate for NativeRotate {
-    fn rotate(&self, u: &Mat, w: &Mat) -> Mat {
-        crate::linalg::matmul(u, w)
+    fn rotate_into(&self, u: MatView<'_>, w: MatView<'_>, mut out: MatViewMut<'_>) {
+        crate::linalg::matmul_into(u, w, &mut out);
     }
     fn name(&self) -> &'static str {
         "native"
@@ -68,11 +95,9 @@ pub struct UpdateStats {
 /// Relative deflation tolerance (on `|z|/‖z‖` and eigenvalue gaps).
 pub const DEFAULT_DEFLATE_TOL: f64 = 1e-14;
 
-/// Update the eigendecomposition `(vals ascending, vecs columns)` of a
-/// symmetric matrix under the perturbation `+ σ v vᵀ`, in place.
-///
-/// `vecs` is `m × n` with one column per eigenpair (for full
-/// decompositions `m == n`; the Hoegaerts top-k baseline uses `n < m`).
+/// Allocating compatibility form of [`rank_one_update_ws`]: a fresh
+/// workspace per call (the pre-workspace behaviour, kept for tests,
+/// cold paths, and as the bench baseline).
 pub fn rank_one_update(
     vals: &mut Vec<f64>,
     vecs: &mut Mat,
@@ -92,6 +117,40 @@ pub fn rank_one_update_tol(
     engine: &dyn Rotate,
     tol: f64,
 ) -> Result<UpdateStats, String> {
+    let mut ws = UpdateWorkspace::new();
+    let mut basis = EigenBasis::from_mat(std::mem::replace(vecs, Mat::zeros(0, 0)));
+    let result = rank_one_update_tol_ws(vals, &mut basis, sigma, v, engine, tol, &mut ws);
+    *vecs = basis.into_mat();
+    result
+}
+
+/// Update the eigendecomposition `(vals ascending, vecs columns)` of a
+/// symmetric matrix under the perturbation `+ σ v vᵀ`, in place, using
+/// caller-owned scratch — the zero-allocation streaming form.
+///
+/// `vecs` is `m × n` with one column per eigenpair (for full
+/// decompositions `m == n`; the Hoegaerts/top-k trackers use `n < m`).
+pub fn rank_one_update_ws(
+    vals: &mut Vec<f64>,
+    vecs: &mut EigenBasis,
+    sigma: f64,
+    v: &[f64],
+    engine: &dyn Rotate,
+    ws: &mut UpdateWorkspace,
+) -> Result<UpdateStats, String> {
+    rank_one_update_tol_ws(vals, vecs, sigma, v, engine, DEFAULT_DEFLATE_TOL, ws)
+}
+
+/// [`rank_one_update_ws`] with an explicit deflation tolerance.
+pub fn rank_one_update_tol_ws(
+    vals: &mut Vec<f64>,
+    vecs: &mut EigenBasis,
+    sigma: f64,
+    v: &[f64],
+    engine: &dyn Rotate,
+    tol: f64,
+    ws: &mut UpdateWorkspace,
+) -> Result<UpdateStats, String> {
     let n = vals.len();
     assert_eq!(vecs.cols(), n, "one eigenvector column per eigenvalue");
     assert_eq!(vecs.rows(), v.len(), "v must live in the row space of vecs");
@@ -103,11 +162,27 @@ pub fn rank_one_update_tol(
         "eigenvalues must be ascending"
     );
 
+    let UpdateWorkspace {
+        z,
+        zhat,
+        w,
+        col,
+        u_active,
+        rotated,
+        scratch,
+        vals_tmp,
+        perm,
+        def,
+        roots,
+        reallocs,
+    } = ws;
+
     // z = Uᵀ v — project the perturbation into the eigenbasis.
-    let mut z = gemv_t(vecs, v);
+    ensure_f64(z, n, reallocs);
+    crate::linalg::gemv_t_into(vecs.view(), v, z);
 
     // Deflate tiny weights / repeated eigenvalues (rotating U with z).
-    let def = deflate(vals, &mut z, Some(vecs), tol);
+    deflate_into(vals, z, Some(vecs.view_mut()), tol, def, reallocs);
     let k = def.active.len();
     let stats = UpdateStats { deflated: def.deflated.len(), rotations: def.rotations, solved: k };
     if k == 0 {
@@ -115,7 +190,7 @@ pub fn rank_one_update_tol(
     }
 
     // Secular solve on the active sub-problem.
-    let roots = solve_all(&def.d_active, &def.z_active, sigma)?;
+    solve_all_into(&def.d_active, &def.z_active, sigma, roots, reallocs)?;
 
     // Gu–Eisenstat (1994) stabilization: recompute the weight vector ẑ
     // from the solved roots via the characteristic-polynomial identity,
@@ -123,23 +198,34 @@ pub fn rank_one_update_tol(
     // computed eigenvalues. Without this, clustered poles (fast-decaying
     // kernel spectra) lose eigenvector orthogonality — the instability
     // the paper's §3 cites Gu & Eisenstat for.
-    let z_hat = stabilized_weights(&def.d_active, &def.z_active, sigma, &roots);
+    ensure_f64(zhat, k, reallocs);
+    stabilized_weights_into(&def.d_active, &def.z_active, sigma, roots, zhat);
 
-    // Gather U_active (m × k). Fast path: with nothing deflated the
-    // active set is the whole basis — rotate `vecs` in place and skip
-    // both O(mk) copies (measured ~15% of the update at m=256, §Perf).
     let m = vecs.rows();
-    let full = def.deflated.is_empty() && def.active.len() == vecs.cols();
-    let u_active = if full {
-        std::mem::replace(vecs, Mat::zeros(0, 0))
+    // Fast path: with nothing deflated the active set is the whole
+    // basis — rotate `vecs` directly into the double buffer and commit
+    // by an O(1) swap, skipping both O(mk) copies (measured ~15% of the
+    // update at m=256, §Perf).
+    let full = def.deflated.is_empty() && k == vecs.cols();
+    let (out_rows, out_cols, out_stride, out_len) = if full {
+        (m, k, vecs.stride(), vecs.data_len())
     } else {
-        let mut u = Mat::zeros(m, k);
+        (m, k, k, m * k)
+    };
+    ensure_f64(rotated, out_len, reallocs);
+
+    // Gather U_active (m × k) for the deflation path; the full path
+    // reads the basis in place.
+    let u_view: MatView<'_> = if full {
+        vecs.view()
+    } else {
+        ensure_f64(u_active, m * k, reallocs);
         for (c, &idx) in def.active.iter().enumerate() {
             for r in 0..m {
-                u[(r, c)] = vecs[(r, idx)];
+                u_active[r * k + c] = vecs[(r, idx)];
             }
         }
-        u
+        MatView::new(u_active, m, k, k)
     };
 
     // Back-rotation: either the engine's fused path (AOT Pallas kernel
@@ -147,61 +233,66 @@ pub fn rank_one_update_tol(
     // in pole-relative precision — eigenvectors of the inner problem are
     // Ũ[:,i] = D̃ᵢ⁻¹ z / ‖·‖ over active coordinates (paper eq. 6) —
     // and issues one engine GEMM for the 2mk² product.
-    let rotated = match engine.rotate_fused(&u_active, &z_hat, &def.d_active, &roots) {
-        Some(r) => r,
-        None => {
-            let mut w = Mat::zeros(k, k);
-            for (i, root) in roots.iter().enumerate() {
-                let mut col = vec![0.0; k];
-                for j in 0..k {
-                    col[j] = z_hat[j] / root.diff(&def.d_active, j);
-                }
-                let nrm = norm2(&col);
-                if nrm == 0.0 || !nrm.is_finite() {
-                    return Err(format!("rank_one_update: degenerate eigenvector at root {i}"));
-                }
-                for j in 0..k {
-                    w[(j, i)] = col[j] / nrm;
-                }
+    let out_view = MatViewMut::new(rotated, out_rows, out_cols, out_stride);
+    let fused = engine.rotate_fused_into(u_view, zhat, &def.d_active, roots, out_view);
+    if !fused {
+        ensure_f64(w, k * k, reallocs);
+        ensure_f64(col, k, reallocs);
+        for (i, root) in roots.iter().enumerate() {
+            for j in 0..k {
+                col[j] = zhat[j] / root.diff(&def.d_active, j);
             }
-            engine.rotate(&u_active, &w)
+            let nrm = norm2(col);
+            if nrm == 0.0 || !nrm.is_finite() {
+                return Err(format!("rank_one_update: degenerate eigenvector at root {i}"));
+            }
+            for j in 0..k {
+                w[j * k + i] = col[j] / nrm;
+            }
         }
-    };
+        let w_view = MatView::new(w, k, k, k);
+        let out_view = MatViewMut::new(rotated, out_rows, out_cols, out_stride);
+        engine.rotate_into(u_view, w_view, out_view);
+    }
+
     if full {
-        // Roots are already ascending and cover every position.
+        // Commit: the rotated panel becomes the eigenvector storage.
+        vecs.swap_data(rotated);
         for (c, root) in roots.iter().enumerate() {
+            // Roots are already ascending and cover every position.
             vals[c] = root.value;
         }
-        *vecs = rotated;
         return Ok(stats);
     }
+
+    // Deflation path: scatter the rotated panel back into the active
+    // columns, then restore the ascending invariant (deflated values may
+    // now be out of order relative to moved roots).
     for (c, &idx) in def.active.iter().enumerate() {
         vals[idx] = roots[c].value;
         for r in 0..m {
-            vecs[(r, idx)] = rotated[(r, c)];
+            vecs[(r, idx)] = rotated[r * k + c];
         }
     }
-
-    // Restore the ascending invariant (deflated values may now be out of
-    // order relative to moved roots).
-    sort_pairs(vals, vecs);
+    sort_pairs_impl(vals, vecs, perm, vals_tmp, scratch, reallocs);
     Ok(stats)
 }
 
 /// Gu–Eisenstat weight recomputation: given sorted poles `d`, original
 /// weights `z` (signs only), strength `sigma` and the solved roots,
-/// return `ẑ` with `ẑⱼ² = ∏ᵢ(λ̃ᵢ − dⱼ) / (σ ∏_{i≠j}(dᵢ − dⱼ))`,
+/// fill `zhat` with `ẑⱼ² = ∏ᵢ(λ̃ᵢ − dⱼ) / (σ ∏_{i≠j}(dᵢ − dⱼ))`,
 /// evaluated in interlacing-paired form so every factor is an `O(1)`
 /// ratio (no overflow for large `n`). All differences `λ̃ᵢ − dⱼ` are
 /// formed pole-relatively through [`SecularRoot::diff`].
-fn stabilized_weights(
+fn stabilized_weights_into(
     d: &[f64],
     z: &[f64],
     sigma: f64,
-    roots: &[crate::secular::SecularRoot],
-) -> Vec<f64> {
+    roots: &[SecularRoot],
+    zhat: &mut [f64],
+) {
     let n = d.len();
-    let mut zhat = vec![0.0; n];
+    debug_assert_eq!(zhat.len(), n);
     for j in 0..n {
         let mut prod: f64;
         if sigma > 0.0 {
@@ -234,30 +325,39 @@ fn stabilized_weights(
             zhat[j] = z[j];
         }
     }
-    zhat
 }
 
 /// Expand an eigensystem with a new decoupled eigenpair
 /// `(new_val, eₘ₊₁)` — the paper's expansion step before the two
 /// rank-one updates (Algorithm 1 lines 1–2 / Algorithm 2 lines 13–14),
 /// then restore ascending order as eq. (5)'s note requires.
+/// Allocating compatibility form; see [`expand_eigensystem_ws`].
 pub fn expand_eigensystem(vals: &mut Vec<f64>, vecs: &mut Mat, new_val: f64) {
-    let m = vecs.rows();
-    let n = vecs.cols();
-    debug_assert_eq!(vals.len(), n);
-    let mut grown = Mat::zeros(m + 1, n + 1);
-    for i in 0..m {
-        for j in 0..n {
-            grown[(i, j)] = vecs[(i, j)];
-        }
-    }
-    grown[(m, n)] = 1.0;
-    *vecs = grown;
-    vals.push(new_val);
-    sort_pairs(vals, vecs);
+    let mut ws = UpdateWorkspace::new();
+    let mut basis = EigenBasis::from_mat(std::mem::replace(vecs, Mat::zeros(0, 0)));
+    expand_eigensystem_ws(vals, &mut basis, new_val, &mut ws);
+    *vecs = basis.into_mat();
 }
 
-/// Sort eigenpairs ascending, permuting columns alongside values.
+/// [`expand_eigensystem`] on capacity-doubling storage: the basis grows
+/// in place (amortized O(1) reallocation, O(m) writes) instead of the
+/// full-copy-per-step a dense matrix forces.
+pub fn expand_eigensystem_ws(
+    vals: &mut Vec<f64>,
+    vecs: &mut EigenBasis,
+    new_val: f64,
+    ws: &mut UpdateWorkspace,
+) {
+    let (m, n) = (vecs.rows(), vecs.cols());
+    debug_assert_eq!(vals.len(), n);
+    vecs.expand();
+    vecs[(m, n)] = 1.0;
+    vals.push(new_val);
+    sort_pairs_ws(vals, vecs, ws);
+}
+
+/// Sort eigenpairs ascending, permuting columns alongside values
+/// (allocating compatibility form of [`sort_pairs_ws`]).
 pub fn sort_pairs(vals: &mut [f64], vecs: &mut Mat) {
     let n = vals.len();
     let mut idx: Vec<usize> = (0..n).collect();
@@ -275,10 +375,53 @@ pub fn sort_pairs(vals: &mut [f64], vecs: &mut Mat) {
     }
 }
 
+/// Sort eigenpairs ascending using workspace scratch — no allocation
+/// once the workspace is warm.
+pub fn sort_pairs_ws(vals: &mut [f64], vecs: &mut EigenBasis, ws: &mut UpdateWorkspace) {
+    let UpdateWorkspace { scratch, vals_tmp, perm, reallocs, .. } = ws;
+    sort_pairs_impl(vals, vecs, perm, vals_tmp, scratch, reallocs);
+}
+
+fn sort_pairs_impl(
+    vals: &mut [f64],
+    vecs: &mut EigenBasis,
+    perm: &mut Vec<usize>,
+    vals_tmp: &mut Vec<f64>,
+    scratch: &mut Vec<f64>,
+    reallocs: &mut u64,
+) {
+    let n = vals.len();
+    debug_assert_eq!(vecs.cols(), n);
+    if vals.windows(2).all(|w| w[0] <= w[1]) {
+        return;
+    }
+    if perm.capacity() < n {
+        *reallocs += 1;
+        perm.reserve(n);
+    }
+    perm.clear();
+    perm.extend(0..n);
+    // sort_unstable: no allocation (stable sort buffers internally).
+    perm.sort_unstable_by(|&a, &b| vals[a].partial_cmp(&vals[b]).unwrap());
+    ensure_f64(vals_tmp, n, reallocs);
+    vals_tmp.copy_from_slice(vals);
+    for (j, &p) in perm.iter().enumerate() {
+        vals[j] = vals_tmp[p];
+    }
+    ensure_f64(scratch, n, reallocs);
+    for i in 0..vecs.rows() {
+        let row = vecs.row_mut(i);
+        for (j, &p) in perm.iter().enumerate() {
+            scratch[j] = row[p];
+        }
+        row.copy_from_slice(&scratch[..n]);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::linalg::{eigh, matmul, orthogonality_defect};
+    use crate::linalg::{eigh, orthogonality_defect};
     use crate::util::Rng;
 
     fn rand_sym(n: usize, rng: &mut Rng) -> Mat {
@@ -353,6 +496,27 @@ mod tests {
     }
 
     #[test]
+    fn workspace_updates_stay_orthogonal_and_sorted() {
+        let n = 16;
+        let mut rng = Rng::new(29);
+        let a = rand_sym(n, &mut rng);
+        let eg = eigh(&a).unwrap();
+        let mut vals = eg.values;
+        let mut basis = EigenBasis::from_mat(eg.vectors);
+        let mut ws = UpdateWorkspace::new();
+        for _ in 0..50 {
+            let v: Vec<f64> = (0..n).map(|_| rng.range(-0.5, 0.5)).collect();
+            let sigma = rng.range(0.2, 1.0);
+            rank_one_update_ws(&mut vals, &mut basis, sigma, &v, &NativeRotate, &mut ws)
+                .unwrap();
+        }
+        assert!(orthogonality_defect(&basis) < 1e-8);
+        for w in vals.windows(2) {
+            assert!(w[0] <= w[1] + 1e-12);
+        }
+    }
+
+    #[test]
     fn deflation_fires_on_aligned_perturbation() {
         // v equal to an existing eigenvector: z has one nonzero entry →
         // n−1 deflations, eigenvalue shifts by exactly σ.
@@ -382,6 +546,20 @@ mod tests {
         // The new eigenvector e₃ must sit at the sorted position (col 1).
         assert_eq!(vecs[(2, 1)], 1.0);
         assert!(orthogonality_defect(&vecs) < 1e-15);
+    }
+
+    #[test]
+    fn expand_ws_matches_compat_expand() {
+        let mut vals_a = vec![1.0, 3.0];
+        let mut vecs_a = Mat::eye(2);
+        expand_eigensystem(&mut vals_a, &mut vecs_a, 2.0);
+
+        let mut vals_b = vec![1.0, 3.0];
+        let mut basis = EigenBasis::from_mat(Mat::eye(2));
+        let mut ws = UpdateWorkspace::new();
+        expand_eigensystem_ws(&mut vals_b, &mut basis, 2.0, &mut ws);
+        assert_eq!(vals_a, vals_b);
+        assert_eq!(basis.max_abs_diff(&vecs_a), 0.0);
     }
 
     #[test]
@@ -448,9 +626,9 @@ mod tests {
     fn rotate_engine_receives_gathered_panels() {
         struct Spy(std::sync::atomic::AtomicUsize);
         impl Rotate for Spy {
-            fn rotate(&self, u: &Mat, w: &Mat) -> Mat {
+            fn rotate_into(&self, u: MatView<'_>, w: MatView<'_>, out: MatViewMut<'_>) {
                 self.0.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                matmul(u, w)
+                NativeRotate.rotate_into(u, w, out);
             }
         }
         let spy = Spy(std::sync::atomic::AtomicUsize::new(0));

@@ -1,0 +1,143 @@
+//! The reusable scratch arena for rank-one eigensystem updates. One
+//! workspace per stream: every buffer a [`super::rank_one_update_ws`]
+//! step needs — the projected weight vector `z`, the deflation
+//! partition, the secular roots, the stabilized weights, the `W`
+//! eigenvector factor and the rotated-`U` double buffer — lives here
+//! and is reused across updates, so the steady-state hot path performs
+//! no heap allocation (verified by the realloc counter and the
+//! `tests/workspace.rs` suite; the parallel GEMM still spawns scoped
+//! threads above its flop threshold).
+
+use crate::secular::{Deflation, SecularRoot};
+
+/// Scratch buffers for the rank-one update hot path. Construct once per
+/// stream and thread through every update; capacities are retained and
+/// only ever grow (doubling with the eigensystem).
+#[derive(Clone, Debug, Default)]
+pub struct UpdateWorkspace {
+    /// `z = Uᵀv` — perturbation in the eigenbasis (length n).
+    pub(crate) z: Vec<f64>,
+    /// Gu–Eisenstat stabilized weights over the active set (length k).
+    pub(crate) zhat: Vec<f64>,
+    /// The `k × k` inner eigenvector factor `W`.
+    pub(crate) w: Vec<f64>,
+    /// One column of `W` during assembly (length k).
+    pub(crate) col: Vec<f64>,
+    /// Gathered `m × k` active eigenvector panel (deflation path only).
+    pub(crate) u_active: Vec<f64>,
+    /// Rotation output; doubles as the eigenbasis swap buffer on the
+    /// no-deflation fast path.
+    pub(crate) rotated: Vec<f64>,
+    /// Row scratch for in-place column permutation (length n).
+    pub(crate) scratch: Vec<f64>,
+    /// Eigenvalue scratch for the sort (length n).
+    pub(crate) vals_tmp: Vec<f64>,
+    /// Sort permutation (length n).
+    pub(crate) perm: Vec<usize>,
+    /// Reusable deflation partition.
+    pub(crate) def: Deflation,
+    /// Reusable secular roots.
+    pub(crate) roots: Vec<SecularRoot>,
+    /// Buffer-growth events across all members (zero once warm).
+    pub(crate) reallocs: u64,
+}
+
+impl UpdateWorkspace {
+    pub fn new() -> Self {
+        UpdateWorkspace::default()
+    }
+
+    /// Pre-size every buffer for eigensystems up to `m` rows × `n`
+    /// eigenpairs, *without* counting toward the realloc counter — the
+    /// warm-up entry point for latency-critical streams.
+    pub fn reserve(&mut self, m: usize, n: usize) {
+        fn grow<T>(v: &mut Vec<T>, cap: usize) {
+            if v.capacity() < cap {
+                v.reserve(cap - v.len());
+            }
+        }
+        grow(&mut self.z, n);
+        grow(&mut self.zhat, n);
+        grow(&mut self.w, n * n);
+        grow(&mut self.col, n);
+        grow(&mut self.u_active, m * n);
+        grow(&mut self.rotated, m * n);
+        grow(&mut self.scratch, n);
+        grow(&mut self.vals_tmp, n);
+        grow(&mut self.perm, n);
+        grow(&mut self.roots, n);
+        grow(&mut self.def.active, n);
+        grow(&mut self.def.deflated, n);
+        grow(&mut self.def.d_active, n);
+        grow(&mut self.def.z_active, n);
+    }
+
+    /// Buffer-growth events since construction. Constant across updates
+    /// once the workspace is warm — the zero-allocation guarantee the
+    /// steady-state test pins down.
+    pub fn reallocs(&self) -> u64 {
+        self.reallocs
+    }
+
+    /// Bytes currently held across all scratch buffers.
+    pub fn bytes_resident(&self) -> usize {
+        let f = std::mem::size_of::<f64>();
+        let u = std::mem::size_of::<usize>();
+        let r = std::mem::size_of::<SecularRoot>();
+        f * (self.z.capacity()
+            + self.zhat.capacity()
+            + self.w.capacity()
+            + self.col.capacity()
+            + self.u_active.capacity()
+            + self.rotated.capacity()
+            + self.scratch.capacity()
+            + self.vals_tmp.capacity()
+            + self.def.d_active.capacity()
+            + self.def.z_active.capacity())
+            + u * (self.perm.capacity()
+                + self.def.active.capacity()
+                + self.def.deflated.capacity())
+            + r * self.roots.capacity()
+    }
+}
+
+/// Resize `buf` to `len`, counting a realloc only when capacity grows.
+/// Retained elements keep their previous (stale) values — every
+/// consumer fully overwrites its window, so no full-buffer memset is
+/// paid on the hot path; only growth zero-fills the tail.
+pub(crate) fn ensure_f64(buf: &mut Vec<f64>, len: usize, reallocs: &mut u64) {
+    if len > buf.capacity() {
+        *reallocs += 1;
+    }
+    buf.resize(len, 0.0);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ensure_counts_only_capacity_growth() {
+        let mut buf = Vec::new();
+        let mut r = 0u64;
+        ensure_f64(&mut buf, 8, &mut r);
+        assert_eq!(r, 1);
+        assert_eq!(buf.len(), 8);
+        ensure_f64(&mut buf, 4, &mut r);
+        ensure_f64(&mut buf, 8, &mut r);
+        assert_eq!(r, 1, "shrink/regrow within capacity must be free");
+        ensure_f64(&mut buf, 16, &mut r);
+        assert_eq!(r, 2);
+    }
+
+    #[test]
+    fn reserve_is_invisible_to_the_counter() {
+        let mut ws = UpdateWorkspace::new();
+        ws.reserve(32, 32);
+        assert_eq!(ws.reallocs(), 0);
+        assert!(ws.bytes_resident() > 0);
+        let mut r = ws.reallocs;
+        ensure_f64(&mut ws.z, 32, &mut r);
+        assert_eq!(r, 0, "reserved buffer must absorb ensure() without realloc");
+    }
+}

@@ -1,349 +1,27 @@
 //! PJRT runtime: loads the HLO-text artifacts produced by
 //! `python/compile/aot.py`, compiles them once per (kind, bucket) on the
-//! CPU PJRT client, and exposes typed, padded execution wrappers. This
-//! is the only module that touches the `xla` crate — Python never runs
-//! at request time.
+//! CPU PJRT client, and exposes typed, padded execution wrappers.
+//!
+//! The execution path needs the `xla` crate, which the offline image
+//! does not carry; it is compiled only under `--cfg pjrt_runtime` (with
+//! a vendored `xla` checkout patched in). Without the cfg, [`stub`]
+//! provides the same `Runtime`/`PjrtRotate` surface: construction fails
+//! cleanly, so the coordinator falls back to the native engine, and
+//! `PjrtRotate` routes every rotation to the native blocked GEMM. The
+//! artifact manifest and padding contract are pure Rust and always
+//! compiled (they are exercised by tests and the build-time tooling).
 
 pub mod artifact;
 pub mod pad;
 
 pub use artifact::{ArtifactMeta, Manifest};
 
-use std::collections::HashMap;
-use std::path::Path;
-use std::sync::Mutex;
+#[cfg(pjrt_runtime)]
+mod pjrt;
+#[cfg(pjrt_runtime)]
+pub use pjrt::{PjrtRotate, Runtime};
 
-use crate::linalg::Mat;
-use crate::rankone::{NativeRotate, Rotate};
-use crate::secular::SecularRoot;
-
-/// Compiled-executable cache keyed by artifact name.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    manifest: Manifest,
-    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
-}
-
-impl Runtime {
-    /// Create a CPU PJRT client and load the artifact manifest from
-    /// `dir` (normally `artifacts/`).
-    pub fn new(dir: &Path) -> Result<Self, String> {
-        let manifest = Manifest::load(dir)?;
-        let client = xla::PjRtClient::cpu().map_err(|e| format!("pjrt cpu client: {e}"))?;
-        Ok(Runtime { client, manifest, cache: Mutex::new(HashMap::new()) })
-    }
-
-    pub fn manifest(&self) -> &Manifest {
-        &self.manifest
-    }
-
-    /// Compile (or fetch from cache) the executable for `(kind, bucket)`.
-    fn exe(
-        &self,
-        kind: &str,
-        bucket: usize,
-    ) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>, String> {
-        let meta = self
-            .manifest
-            .entry(kind, bucket)
-            .ok_or_else(|| format!("no artifact for {kind}@{bucket}"))?;
-        let mut cache = self.cache.lock().unwrap();
-        if let Some(exe) = cache.get(&meta.name) {
-            return Ok(exe.clone());
-        }
-        let proto = xla::HloModuleProto::from_text_file(
-            meta.path.to_str().ok_or("non-utf8 artifact path")?,
-        )
-        .map_err(|e| format!("parse {}: {e}", meta.path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp).map_err(|e| format!("compile {kind}: {e}"))?;
-        let exe = std::sync::Arc::new(exe);
-        cache.insert(meta.name.clone(), exe.clone());
-        Ok(exe)
-    }
-
-    /// Warm the executable cache for every artifact (start-up path of
-    /// the coordinator, so first requests don't pay compile latency).
-    pub fn warmup(&self) -> Result<usize, String> {
-        let mut n = 0;
-        for kind in self.manifest.kinds() {
-            for &b in self.manifest.buckets(kind) {
-                self.exe(kind, b)?;
-                n += 1;
-            }
-        }
-        Ok(n)
-    }
-
-    fn run(
-        &self,
-        kind: &str,
-        bucket: usize,
-        inputs: &[xla::Literal],
-    ) -> Result<Vec<f64>, String> {
-        let exe = self.exe(kind, bucket)?;
-        let result = exe
-            .execute::<xla::Literal>(inputs)
-            .map_err(|e| format!("execute {kind}@{bucket}: {e}"))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| format!("fetch {kind}: {e}"))?;
-        let out = result.to_tuple1().map_err(|e| format!("untuple {kind}: {e}"))?;
-        out.to_vec::<f64>().map_err(|e| format!("to_vec {kind}: {e}"))
-    }
-
-    fn mat_literal(m: &Mat) -> Result<xla::Literal, String> {
-        xla::Literal::vec1(m.as_slice())
-            .reshape(&[m.rows() as i64, m.cols() as i64])
-            .map_err(|e| format!("reshape literal: {e}"))
-    }
-
-    /// RBF kernel column `k(xᵢ, y)` for the leading `m` rows of `x`.
-    pub fn kernel_column(&self, x: &Mat, y: &[f64], sigma: f64) -> Result<Vec<f64>, String> {
-        let m = x.rows();
-        let d = self.manifest.dim;
-        assert!(x.cols() <= d, "feature dim exceeds artifact pad target");
-        let bucket = self
-            .manifest
-            .bucket_for("kernel_column", m)
-            .ok_or_else(|| format!("kernel_column: no bucket ≥ {m}"))?;
-        let xp = pad::pad_mat(x, bucket, d);
-        let yp = pad::pad_zeros(y, d);
-        let out = self.run(
-            "kernel_column",
-            bucket,
-            &[
-                Self::mat_literal(&xp)?,
-                xla::Literal::vec1(&yp),
-                xla::Literal::from(sigma),
-            ],
-        )?;
-        Ok(out[..m].to_vec())
-    }
-
-    /// Full RBF Gram matrix over the rows of `x`.
-    pub fn gram(&self, x: &Mat, sigma: f64) -> Result<Mat, String> {
-        let n = x.rows();
-        let d = self.manifest.dim;
-        let bucket = self
-            .manifest
-            .bucket_for("gram", n)
-            .ok_or_else(|| format!("gram: no bucket ≥ {n}"))?;
-        let xp = pad::pad_mat(x, bucket, d);
-        let out = self.run(
-            "gram",
-            bucket,
-            &[Self::mat_literal(&xp)?, xla::Literal::from(sigma)],
-        )?;
-        let full = Mat::from_vec(bucket, bucket, out);
-        Ok(pad::unpad_mat(&full, n, n))
-    }
-
-    /// BNS78 back-rotation via the AOT Pallas kernel: `u` is `m × k`
-    /// (rows = eigenvector length, cols = active eigenpairs).
-    pub fn eigvec_update(
-        &self,
-        u: &Mat,
-        z: &[f64],
-        lam: &[f64],
-        lam_new: &[f64],
-    ) -> Result<Mat, String> {
-        let (m, k) = (u.rows(), u.cols());
-        assert!(z.len() == k && lam.len() == k && lam_new.len() == k);
-        let size = m.max(k);
-        let bucket = self
-            .manifest
-            .bucket_for("eigvec_update", size)
-            .ok_or_else(|| format!("eigvec_update: no bucket ≥ {size}"))?;
-        let up = pad::pad_mat(u, bucket, bucket);
-        let zp = pad::pad_zeros(z, bucket);
-        let lamp = pad::pad_sentinels(lam, bucket, 0.0);
-        let lamnp = pad::pad_sentinels(lam_new, bucket, 0.5);
-        let out = self.run(
-            "eigvec_update",
-            bucket,
-            &[
-                Self::mat_literal(&up)?,
-                xla::Literal::vec1(&zp),
-                xla::Literal::vec1(&lamp),
-                xla::Literal::vec1(&lamnp),
-            ],
-        )?;
-        let full = Mat::from_vec(bucket, bucket, out);
-        Ok(pad::unpad_mat(&full, m, k))
-    }
-
-    /// Nyström reconstruction `K̃` from `K_{n,m}`, `U`, `Λ` (eq. 7).
-    pub fn nystrom_reconstruct(&self, knm: &Mat, u: &Mat, lam: &[f64]) -> Result<Mat, String> {
-        let (n, m) = (knm.rows(), knm.cols());
-        assert_eq!(u.rows(), m);
-        assert_eq!(lam.len(), m);
-        let bucket_m = self
-            .manifest
-            .bucket_for("nystrom_reconstruct", m)
-            .ok_or_else(|| format!("nystrom_reconstruct: no bucket ≥ {m}"))?;
-        // The artifact fixes n at the top of the ladder.
-        let bucket_n = *self
-            .manifest
-            .buckets("gram")
-            .last()
-            .ok_or("nystrom_reconstruct: no gram buckets")?;
-        if n > bucket_n {
-            return Err(format!("nystrom_reconstruct: n={n} exceeds max bucket {bucket_n}"));
-        }
-        let knmp = pad::pad_mat(knm, bucket_n, bucket_m);
-        let up = pad::pad_mat(u, bucket_m, bucket_m);
-        // Padded eigenvalues are ZEROS here, not sentinels: the artifact
-        // computes its pseudo-inverse cutoff from max|λ|, which sentinel
-        // values would corrupt; zeros fail the cutoff test and invert to
-        // exactly 0 (and the padded U columns are zero anyway).
-        let lamp = pad::pad_zeros(lam, bucket_m);
-        let out = self.run(
-            "nystrom_reconstruct",
-            bucket_m,
-            &[Self::mat_literal(&knmp)?, Self::mat_literal(&up)?, xla::Literal::vec1(&lamp)],
-        )?;
-        let full = Mat::from_vec(bucket_n, bucket_n, out);
-        Ok(pad::unpad_mat(&full, n, n))
-    }
-}
-
-/// [`Rotate`] engine backed by the AOT Pallas `eigvec_update` artifact.
-/// Problems smaller than `min_size` (or without a fitting bucket) fall
-/// back to the native engine — padding waste dominates below ~64.
-pub struct PjrtRotate {
-    pub runtime: std::sync::Arc<Runtime>,
-    pub min_size: usize,
-    fallback: NativeRotate,
-}
-
-impl PjrtRotate {
-    pub fn new(runtime: std::sync::Arc<Runtime>) -> Self {
-        PjrtRotate { runtime, min_size: 0, fallback: NativeRotate }
-    }
-}
-
-impl Rotate for PjrtRotate {
-    fn rotate(&self, u: &Mat, w: &Mat) -> Mat {
-        // The W-form product has no dedicated artifact; only the fused
-        // path runs on PJRT.
-        self.fallback.rotate(u, w)
-    }
-
-    fn rotate_fused(
-        &self,
-        u: &Mat,
-        z: &[f64],
-        d: &[f64],
-        roots: &[SecularRoot],
-    ) -> Option<Mat> {
-        if u.rows().max(u.cols()) < self.min_size {
-            return None;
-        }
-        let lam_new: Vec<f64> = roots.iter().map(|r| r.value).collect();
-        self.runtime.eigvec_update(u, z, d, &lam_new).ok()
-    }
-
-    fn name(&self) -> &'static str {
-        "pjrt"
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use crate::kernels::{gram as native_gram, kernel_column as native_col, Rbf};
-    use crate::linalg::eigh;
-    use crate::util::Rng;
-
-    fn runtime() -> Option<Runtime> {
-        let dir = Path::new("artifacts");
-        if dir.join("manifest.tsv").exists() {
-            Some(Runtime::new(dir).expect("runtime init"))
-        } else {
-            None
-        }
-    }
-
-    #[test]
-    fn pjrt_kernel_column_matches_native() {
-        let Some(rt) = runtime() else { return };
-        let mut rng = Rng::new(1);
-        let x = Mat::from_fn(50, 10, |_, _| rng.range(-1.0, 1.0));
-        let y: Vec<f64> = (0..10).map(|_| rng.range(-1.0, 1.0)).collect();
-        let sigma = 1.3;
-        let got = rt.kernel_column(&x, &y, sigma).unwrap();
-        let want = native_col(&Rbf { sigma }, &x, 50, &y);
-        for (g, w) in got.iter().zip(want.iter()) {
-            assert!((g - w).abs() < 1e-12, "{g} vs {w}");
-        }
-    }
-
-    #[test]
-    fn pjrt_gram_matches_native() {
-        let Some(rt) = runtime() else { return };
-        let mut rng = Rng::new(2);
-        let x = Mat::from_fn(70, 8, |_, _| rng.range(-1.0, 1.0));
-        let sigma = 0.9;
-        let got = rt.gram(&x, sigma).unwrap();
-        let want = native_gram(&Rbf { sigma }, &x);
-        assert!(got.max_abs_diff(&want) < 1e-11);
-    }
-
-    #[test]
-    fn pjrt_eigvec_update_matches_dense() {
-        let Some(rt) = runtime() else { return };
-        let mut rng = Rng::new(3);
-        let n = 40;
-        let mut a = Mat::from_fn(n, n, |_, _| rng.range(-1.0, 1.0));
-        a.symmetrize();
-        let eg = eigh(&a).unwrap();
-        let v: Vec<f64> = (0..n).map(|_| rng.range(-1.0, 1.0)).collect();
-        let mut b = a.clone();
-        b.syr(1.0, &v);
-        let expect = eigh(&b).unwrap();
-        let z = crate::linalg::gemv_t(&eg.vectors, &v);
-        let got = rt
-            .eigvec_update(&eg.vectors, &z, &eg.values, &expect.values)
-            .unwrap();
-        // got should reconstruct b: got Λ̃ gotᵀ == b.
-        let mut gl = got.clone();
-        for i in 0..n {
-            for j in 0..n {
-                gl[(i, j)] *= expect.values[j];
-            }
-        }
-        let rec = crate::linalg::matmul_nt(&gl, &got);
-        assert!(rec.max_abs_diff(&b) < 1e-7, "diff {}", rec.max_abs_diff(&b));
-    }
-
-    #[test]
-    fn pjrt_rotate_engine_drives_incremental_kpca() {
-        let Some(rt) = runtime() else { return };
-        let engine = PjrtRotate::new(std::sync::Arc::new(rt));
-        let ds = crate::data::synthetic::yeast_like(14, 4);
-        let kern = Rbf { sigma: 1.0 };
-        let seed = ds.x.submatrix(6, ds.dim());
-        let mut inc = crate::kpca::IncrementalKpca::from_batch(&kern, &seed, true).unwrap();
-        for i in 6..ds.n() {
-            inc.push_with(ds.x.row(i), &engine).unwrap();
-        }
-        let drift = inc.reconstruct().max_abs_diff(&inc.batch_reference());
-        assert!(drift < 1e-6, "pjrt-engine drift {drift}");
-    }
-
-    #[test]
-    fn pjrt_nystrom_reconstruct_matches_native() {
-        let Some(rt) = runtime() else { return };
-        let ds = crate::data::synthetic::yeast_like(60, 5);
-        let kern = Rbf { sigma: 1.0 };
-        let mut inys = crate::nystrom::IncrementalNystrom::new(&kern, ds.x.clone()).unwrap();
-        for m in 0..12 {
-            inys.add_point(m).unwrap();
-        }
-        let native = inys.approx_gram();
-        let got = rt
-            .nystrom_reconstruct(&inys.knm, &inys.inc.vecs, &inys.inc.vals)
-            .unwrap();
-        assert!(got.max_abs_diff(&native) < 1e-7, "diff {}", got.max_abs_diff(&native));
-    }
-}
+#[cfg(not(pjrt_runtime))]
+mod stub;
+#[cfg(not(pjrt_runtime))]
+pub use stub::{PjrtRotate, Runtime};

@@ -1,0 +1,101 @@
+//! Stub PJRT runtime, compiled when `--cfg pjrt_runtime` is off (the
+//! offline image carries no `xla` crate). [`Runtime::new`] fails with a
+//! clear message — `coordinator::server::build_engine` catches it and
+//! falls back to the native engine — and [`PjrtRotate`] satisfies the
+//! [`Rotate`] trait by delegating every rotation to the native blocked
+//! GEMM, so code paths and tests that *route through* a PJRT engine
+//! still compile and run.
+
+use std::path::Path;
+
+use crate::linalg::{Mat, MatView, MatViewMut};
+use crate::rankone::{NativeRotate, Rotate};
+use crate::secular::SecularRoot;
+
+const UNAVAILABLE: &str =
+    "pjrt runtime not compiled in (build with RUSTFLAGS=\"--cfg pjrt_runtime\" and a vendored `xla` crate)";
+
+/// Placeholder for the compiled-executable cache. Never constructible
+/// in stub builds.
+pub struct Runtime {
+    _private: (),
+}
+
+impl Runtime {
+    /// Always fails in stub builds.
+    pub fn new(_dir: &Path) -> Result<Self, String> {
+        Err(UNAVAILABLE.into())
+    }
+
+    pub fn warmup(&self) -> Result<usize, String> {
+        Err(UNAVAILABLE.into())
+    }
+
+    pub fn kernel_column(&self, _x: &Mat, _y: &[f64], _sigma: f64) -> Result<Vec<f64>, String> {
+        Err(UNAVAILABLE.into())
+    }
+
+    pub fn gram(&self, _x: &Mat, _sigma: f64) -> Result<Mat, String> {
+        Err(UNAVAILABLE.into())
+    }
+
+    pub fn eigvec_update(
+        &self,
+        _u: &Mat,
+        _z: &[f64],
+        _lam: &[f64],
+        _lam_new: &[f64],
+    ) -> Result<Mat, String> {
+        Err(UNAVAILABLE.into())
+    }
+
+    pub fn nystrom_reconstruct(&self, _knm: &Mat, _u: &Mat, _lam: &[f64]) -> Result<Mat, String> {
+        Err(UNAVAILABLE.into())
+    }
+}
+
+/// [`Rotate`] engine surface matching the real PJRT engine; in stub
+/// builds it is a pass-through to [`NativeRotate`].
+pub struct PjrtRotate {
+    pub runtime: std::sync::Arc<Runtime>,
+    pub min_size: usize,
+    fallback: NativeRotate,
+}
+
+impl PjrtRotate {
+    pub fn new(runtime: std::sync::Arc<Runtime>) -> Self {
+        PjrtRotate { runtime, min_size: 0, fallback: NativeRotate }
+    }
+}
+
+impl Rotate for PjrtRotate {
+    fn rotate_into(&self, u: MatView<'_>, w: MatView<'_>, out: MatViewMut<'_>) {
+        self.fallback.rotate_into(u, w, out);
+    }
+
+    fn rotate_fused_into(
+        &self,
+        _u: MatView<'_>,
+        _z: &[f64],
+        _d: &[f64],
+        _roots: &[SecularRoot],
+        _out: MatViewMut<'_>,
+    ) -> bool {
+        false
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt-stub"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_runtime_fails_cleanly() {
+        let err = Runtime::new(Path::new("artifacts")).err().unwrap();
+        assert!(err.contains("pjrt runtime not compiled"), "{err}");
+    }
+}

@@ -11,11 +11,17 @@
 //! The paper handles near-rank-deficiency by *excluding* the offending
 //! data example; deflation is strictly better (nothing is dropped) and
 //! we count deflations so experiments can report them (§5.1).
+//!
+//! [`deflate_into`] is the zero-allocation form: the partition vectors
+//! live in a caller-owned [`Deflation`] (inside
+//! `rankone::UpdateWorkspace` on the streaming hot path) whose
+//! capacities survive across updates.
 
-use crate::linalg::Mat;
+use crate::linalg::{Mat, MatViewMut};
 
-/// Result of deflating `(d, z)` prior to the secular solve.
-#[derive(Clone, Debug)]
+/// Result of deflating `(d, z)` prior to the secular solve. Reused
+/// across updates by [`deflate_into`]; capacities are retained.
+#[derive(Clone, Debug, Default)]
 pub struct Deflation {
     /// Indices participating in the secular solve.
     pub active: Vec<usize>,
@@ -29,11 +35,28 @@ pub struct Deflation {
     pub rotations: usize,
 }
 
-/// Deflate the problem `Λ + σ z zᵀ` given ascending `d` and weights `z`.
-/// `u` is the current eigenvector matrix whose columns are rotated
-/// whenever a repeated-eigenvalue Givens rotation fires (pass `None`
-/// when the caller only needs eigenvalues).
-pub fn deflate(d: &[f64], z: &mut [f64], mut u: Option<&mut Mat>, tol: f64) -> Deflation {
+/// Allocating convenience wrapper over [`deflate_into`].
+pub fn deflate(d: &[f64], z: &mut [f64], u: Option<&mut Mat>, tol: f64) -> Deflation {
+    let mut out = Deflation::default();
+    let mut reallocs = 0u64;
+    deflate_into(d, z, u.map(MatViewMut::from), tol, &mut out, &mut reallocs);
+    out
+}
+
+/// Deflate the problem `Λ + σ z zᵀ` given ascending `d` and weights `z`,
+/// writing the partition into the reusable `out`. `u` is a view of the
+/// current eigenvector matrix whose columns are rotated whenever a
+/// repeated-eigenvalue Givens rotation fires (pass `None` when the
+/// caller only needs eigenvalues). `reallocs` is bumped once per call
+/// in which any of `out`'s buffers had to grow — zero in steady state.
+pub fn deflate_into(
+    d: &[f64],
+    z: &mut [f64],
+    mut u: Option<MatViewMut<'_>>,
+    tol: f64,
+    out: &mut Deflation,
+    reallocs: &mut u64,
+) {
     let n = d.len();
     assert_eq!(z.len(), n);
     let znorm = z.iter().map(|x| x * x).sum::<f64>().sqrt();
@@ -55,7 +78,7 @@ pub fn deflate(d: &[f64], z: &mut [f64], mut u: Option<&mut Mat>, tol: f64) -> D
                     let s = z[j] / r;
                     z[i] = r;
                     z[j] = 0.0;
-                    if let Some(uu) = u.as_deref_mut() {
+                    if let Some(uu) = u.as_mut() {
                         // Rotate columns i and j of U: the diagonal block
                         // is (near-)scalar, so it commutes with the
                         // rotation to within tol.
@@ -74,19 +97,32 @@ pub fn deflate(d: &[f64], z: &mut [f64], mut u: Option<&mut Mat>, tol: f64) -> D
         i = j.max(i + 1);
     }
 
-    // Pass 2: partition by weight magnitude.
-    let mut active = Vec::new();
-    let mut deflated = Vec::new();
+    // Pass 2: partition by weight magnitude into the reusable buffers.
+    if out.active.capacity() < n
+        || out.deflated.capacity() < n
+        || out.d_active.capacity() < n
+        || out.z_active.capacity() < n
+    {
+        *reallocs += 1;
+        out.active.reserve(n);
+        out.deflated.reserve(n);
+        out.d_active.reserve(n);
+        out.z_active.reserve(n);
+    }
+    out.active.clear();
+    out.deflated.clear();
+    out.d_active.clear();
+    out.z_active.clear();
     for k in 0..n {
         if z[k].abs() <= ztol {
-            deflated.push(k);
+            out.deflated.push(k);
         } else {
-            active.push(k);
+            out.active.push(k);
         }
     }
-    let d_active = active.iter().map(|&k| d[k]).collect();
-    let z_active = active.iter().map(|&k| z[k]).collect();
-    Deflation { active, deflated, z_active, d_active, rotations }
+    out.d_active.extend(out.active.iter().map(|&k| d[k]));
+    out.z_active.extend(out.active.iter().map(|&k| z[k]));
+    out.rotations = rotations;
 }
 
 #[cfg(test)]
@@ -158,5 +194,21 @@ mod tests {
         assert!(def.deflated.is_empty());
         assert_eq!(def.active.len(), 3);
         assert_eq!(def.rotations, 0);
+    }
+
+    #[test]
+    fn reused_deflation_buffers_stop_reallocating() {
+        let d = vec![0.5, 1.5, 2.5, 3.5];
+        let mut out = Deflation::default();
+        let mut reallocs = 0u64;
+        let mut z = vec![0.4, -0.2, 0.3, 0.6];
+        deflate_into(&d, &mut z, None, 1e-12, &mut out, &mut reallocs);
+        let after_warm = reallocs;
+        for _ in 0..10 {
+            let mut z = vec![0.4, -0.2, 0.3, 0.6];
+            deflate_into(&d, &mut z, None, 1e-12, &mut out, &mut reallocs);
+        }
+        assert_eq!(reallocs, after_warm, "warm deflation buffers must not grow");
+        assert_eq!(out.active.len(), 4);
     }
 }

@@ -12,7 +12,7 @@
 
 pub mod deflate;
 
-pub use deflate::{deflate, Deflation};
+pub use deflate::{deflate, deflate_into, Deflation};
 
 /// One root of the secular equation, kept in pole-relative form so that
 /// downstream difference computations `λⱼ − λ̃ᵢ` can be formed without
@@ -120,19 +120,38 @@ fn solve_in(
 /// zero weight makes its interval degenerate (handled by returning the
 /// pole itself).
 pub fn solve_all(d: &[f64], z: &[f64], sigma: f64) -> Result<Vec<SecularRoot>, String> {
+    let mut roots = Vec::new();
+    let mut reallocs = 0u64;
+    solve_all_into(d, z, sigma, &mut roots, &mut reallocs)?;
+    Ok(roots)
+}
+
+/// [`solve_all`] into a caller-owned, capacity-retaining buffer — the
+/// zero-allocation form used by `rankone::UpdateWorkspace`. `reallocs`
+/// is bumped when `roots` had to grow (zero once warm).
+pub fn solve_all_into(
+    d: &[f64],
+    z: &[f64],
+    sigma: f64,
+    roots: &mut Vec<SecularRoot>,
+    reallocs: &mut u64,
+) -> Result<(), String> {
     let n = d.len();
     assert_eq!(z.len(), n);
+    if roots.capacity() < n {
+        *reallocs += 1;
+        roots.reserve(n);
+    }
+    roots.clear();
     if n == 0 {
-        return Ok(Vec::new());
+        return Ok(());
     }
     debug_assert!(d.windows(2).all(|w| w[0] <= w[1]), "poles must be sorted");
     let zz: f64 = z.iter().map(|x| x * x).sum();
     if zz == 0.0 || sigma == 0.0 {
-        return Ok((0..n)
-            .map(|i| SecularRoot { origin: i, delta: 0.0, value: d[i] })
-            .collect());
+        roots.extend((0..n).map(|i| SecularRoot { origin: i, delta: 0.0, value: d[i] }));
+        return Ok(());
     }
-    let mut roots = Vec::with_capacity(n);
     if sigma > 0.0 {
         // Roots interlace from above: root i ∈ (λᵢ, λᵢ₊₁), last in
         // (λₙ, λₙ + σ‖z‖²).                                 (eq. 5)
@@ -198,7 +217,7 @@ pub fn solve_all(d: &[f64], z: &[f64], sigma: f64) -> Result<Vec<SecularRoot>, S
             roots.push(SecularRoot { origin, delta, value: d[origin] + delta });
         }
     }
-    Ok(roots)
+    Ok(())
 }
 
 /// Direct evaluation of `ω(x)` (test/diagnostic helper).

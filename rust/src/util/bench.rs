@@ -110,6 +110,37 @@ impl Bench {
         &self.results
     }
 
+    /// Write the recorded results as a JSON array (hand-rolled — no
+    /// serde offline). The perf-trajectory files (`BENCH_*.json`) the
+    /// bench binaries emit go through here.
+    pub fn write_json(&self, path: &str) -> std::io::Result<()> {
+        use std::io::Write;
+        if let Some(parent) = std::path::Path::new(path).parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        let mut f = std::fs::File::create(path)?;
+        writeln!(f, "[")?;
+        for (i, (name, s)) in self.results.iter().enumerate() {
+            let comma = if i + 1 < self.results.len() { "," } else { "" };
+            writeln!(
+                f,
+                "  {{\"name\": \"{}\", \"median_ns\": {:.0}, \"mean_ns\": {:.0}, \"stddev_ns\": {:.0}, \"min_ns\": {:.0}, \"max_ns\": {:.0}, \"samples\": {}}}{}",
+                name.replace('"', "'"),
+                s.median_ns,
+                s.mean_ns,
+                s.stddev_ns,
+                s.min_ns,
+                s.max_ns,
+                s.samples,
+                comma
+            )?;
+        }
+        writeln!(f, "]")?;
+        Ok(())
+    }
+
     /// Final machine-readable TSV block (consumed by EXPERIMENTS.md
     /// tooling and by `inkpca bench-report`).
     pub fn finish(&self) {
@@ -144,6 +175,26 @@ mod tests {
         assert_eq!(s.median_ns, 2.0);
         let s = Stats::from_samples(vec![1.0, 2.0, 3.0, 4.0]);
         assert_eq!(s.median_ns, 2.5);
+    }
+
+    #[test]
+    fn write_json_emits_valid_rows() {
+        let mut b = Bench::new();
+        b.min_time = Duration::from_millis(1);
+        b.max_samples = 5;
+        b.warmup = 0;
+        b.case("alpha", || 1);
+        b.case("beta/gamma", || 2);
+        let path = std::env::temp_dir().join("inkpca_bench_test.json");
+        let path = path.to_str().unwrap().to_string();
+        b.write_json(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.trim_start().starts_with('['));
+        assert!(text.trim_end().ends_with(']'));
+        assert!(text.contains("\"name\": \"alpha\""));
+        assert!(text.contains("\"name\": \"beta/gamma\""));
+        assert_eq!(text.matches("median_ns").count(), 2);
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -1,0 +1,150 @@
+//! Zero-allocation hot-path guarantees: the workspace update path must
+//! reproduce the allocating path bit-for-bit (they share one core), and
+//! a warmed `UpdateWorkspace` must never touch the allocator again at
+//! fixed eigensystem size.
+
+use inkpca::data::synthetic::yeast_like;
+use inkpca::kernels::{gram, Kernel, Linear, Polynomial, Rbf};
+use inkpca::kpca::{center_gram, IncrementalKpca};
+use inkpca::linalg::{eigh, orthogonality_defect};
+use inkpca::rankone::{
+    expand_eigensystem, expand_eigensystem_ws, rank_one_update, rank_one_update_ws, EigenBasis,
+    NativeRotate, UpdateWorkspace,
+};
+use inkpca::util::prop::{check, ensure};
+use inkpca::util::Rng;
+
+fn random_kernel(rng: &mut Rng) -> Box<dyn Kernel> {
+    match rng.below(3) {
+        0 => Box::new(Rbf { sigma: rng.range(0.5, 3.0) }),
+        1 => Box::new(Linear),
+        _ => Box::new(Polynomial { degree: 2, offset: rng.range(0.5, 2.0) }),
+    }
+}
+
+/// The workspace path and the allocating path must agree to ≤ 1e-12 on
+/// the same update sequence, across RBF/linear/polynomial kernels and
+/// both mean-adjust modes (the eigensystems come from real centered /
+/// uncentered Gram matrices), including a mid-stream expansion step.
+#[test]
+fn prop_workspace_path_reproduces_allocating_path() {
+    check("workspace==alloc", 24, |rng| {
+        let n = 6 + rng.below(10);
+        let ds = yeast_like(n, rng.next_u64());
+        let kern = random_kernel(rng);
+        let mean_adjust = rng.uniform() < 0.5;
+        let k = gram(kern.as_ref(), &ds.x);
+        let k_used = if mean_adjust { center_gram(&k) } else { k };
+        let eg = eigh(&k_used).map_err(|e| e.to_string())?;
+
+        let mut vals_a = eg.values.clone();
+        let mut vecs_a = eg.vectors.clone();
+        let mut vals_w = eg.values.clone();
+        let mut basis_w = EigenBasis::from_mat(eg.vectors.clone());
+        let mut ws = UpdateWorkspace::new();
+
+        for step in 0..6 {
+            if step == 3 {
+                // An expansion rides along mid-stream, as in the real
+                // algorithms.
+                expand_eigensystem(&mut vals_a, &mut vecs_a, 0.5);
+                expand_eigensystem_ws(&mut vals_w, &mut basis_w, 0.5, &mut ws);
+            }
+            let m = vecs_a.rows();
+            let v: Vec<f64> = (0..m).map(|_| rng.range(-1.0, 1.0)).collect();
+            let sigma =
+                if step % 2 == 0 { rng.range(0.2, 2.0) } else { rng.range(-2.0, -0.2) };
+            rank_one_update(&mut vals_a, &mut vecs_a, sigma, &v, &NativeRotate)
+                .map_err(|e| e.to_string())?;
+            rank_one_update_ws(&mut vals_w, &mut basis_w, sigma, &v, &NativeRotate, &mut ws)
+                .map_err(|e| e.to_string())?;
+        }
+
+        for (a, b) in vals_a.iter().zip(vals_w.iter()) {
+            ensure((a - b).abs() <= 1e-12 * (1.0 + a.abs()), || {
+                format!("kernel {} eigenvalue {a} vs {b}", kern.name())
+            })?;
+        }
+        let diff = basis_w.max_abs_diff(&vecs_a);
+        ensure(diff <= 1e-12, || {
+            format!("kernel {} adjust={mean_adjust} eigenvector diff {diff}", kern.name())
+        })?;
+        ensure(orthogonality_defect(&basis_w) < 1e-8, || "orthogonality lost".to_string())
+    });
+}
+
+/// A warmed workspace performs zero buffer reallocations over 100
+/// consecutive updates at fixed eigensystem size — the allocator has
+/// left the steady state.
+#[test]
+fn warm_workspace_zero_reallocations_over_100_updates() {
+    let n = 24;
+    let ds = yeast_like(n, 5);
+    let kern = Rbf { sigma: 1.0 };
+    let k = gram(&kern, &ds.x);
+    let eg = eigh(&k).unwrap();
+    let mut vals = eg.values.clone();
+    let mut basis = EigenBasis::from_mat(eg.vectors.clone());
+    let mut ws = UpdateWorkspace::new();
+    ws.reserve(n, n);
+    assert_eq!(ws.reallocs(), 0, "reserve must not count as growth");
+
+    let mut rng = Rng::new(11);
+    let mut v = vec![0.0; n];
+    for step in 0..100 {
+        for x in v.iter_mut() {
+            *x = rng.range(-1.0, 1.0);
+        }
+        let sigma = if step % 2 == 0 { 0.8 } else { -0.8 };
+        rank_one_update_ws(&mut vals, &mut basis, sigma, &v, &NativeRotate, &mut ws).unwrap();
+    }
+    assert_eq!(
+        ws.reallocs(),
+        0,
+        "workspace buffers reallocated on the steady-state hot path"
+    );
+    assert_eq!(basis.reallocs(), 0, "eigenbasis reallocated at fixed size");
+    // The math stayed healthy while the allocator stayed idle.
+    assert!(orthogonality_defect(&basis) < 1e-8);
+    for w in vals.windows(2) {
+        assert!(w[0] <= w[1] + 1e-12);
+    }
+}
+
+/// Streaming growth (expansion every push) reallocates only on capacity
+/// doublings — amortized O(1) per accepted example, not copy-per-step.
+#[test]
+fn streaming_growth_reallocs_are_logarithmic() {
+    let ds = yeast_like(80, 9);
+    let kern = Rbf { sigma: 1.0 };
+    let seed = ds.x.submatrix(4, ds.dim());
+    let mut inc = IncrementalKpca::from_batch(&kern, &seed, true).unwrap();
+    for i in 4..ds.n() {
+        inc.push(ds.x.row(i)).unwrap();
+    }
+    assert_eq!(inc.len(), 80);
+    let pushes = (ds.n() - 4) as u64;
+    // Each adjusted push performs 4 rank-one updates + 1 expansion; a
+    // copy-per-step design would pay ≥ 5 allocations per push. Doubling
+    // growth keeps total growth events well under one per push.
+    let reallocs = inc.hot_path_reallocs();
+    assert!(reallocs < pushes / 2, "reallocs {reallocs} vs pushes {pushes}");
+    // And the result is still the exact algorithm.
+    let drift = inc.reconstruct().max_abs_diff(&inc.batch_reference());
+    assert!(drift < 1e-7, "drift {drift}");
+}
+
+/// The engine-visible workspace diagnostics are wired through the
+/// incremental state.
+#[test]
+fn hot_path_gauges_report_residency() {
+    let ds = yeast_like(16, 3);
+    let kern = Rbf { sigma: 1.0 };
+    let seed = ds.x.submatrix(4, ds.dim());
+    let mut inc = IncrementalKpca::from_batch(&kern, &seed, true).unwrap();
+    for i in 4..ds.n() {
+        inc.push(ds.x.row(i)).unwrap();
+    }
+    assert!(inc.hot_path_bytes() > 0);
+    assert!(inc.workspace().bytes_resident() > 0);
+}
