@@ -43,7 +43,7 @@ fn main() -> Result<(), String> {
     let top: Vec<f64> = inc.vals.iter().rev().take(5).copied().collect();
     println!("top-5 eigenvalues: {top:?}");
     let probe = vec![0.5; ds.dim()];
-    let scores = inc.project(&kern, &probe, 3);
+    let scores = inc.project(&probe, 3);
     println!("projection of probe point on top-3 components: {scores:?}");
     println!("quickstart OK");
     Ok(())

@@ -75,4 +75,9 @@ fn main() {
         });
     }
     b.finish();
+    if let Err(e) = b.write_json("BENCH_e2e.json") {
+        eprintln!("warning: could not write BENCH_e2e.json: {e}");
+    } else {
+        println!("wrote BENCH_e2e.json");
+    }
 }

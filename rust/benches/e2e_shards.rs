@@ -1,0 +1,69 @@
+//! Shard-pool scaling bench: aggregate ingest throughput of a fixed
+//! multi-stream workload (one producer thread per stream) as the shard
+//! count grows 1 → 2 → 4. Streams are pinned by id hash, so with more
+//! shards the same producers contend on fewer shared queues and the
+//! per-shard update loops run on separate cores. Emits
+//! `BENCH_shards.json` for the perf trajectory.
+
+use inkpca::coordinator::{EngineConfig, KernelConfig, PoolConfig, ShardPool, StreamConfig};
+use inkpca::data::{load, Dataset};
+use inkpca::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new();
+    let fast = std::env::var("INKPCA_BENCH_FAST").is_ok();
+    let n_per_stream = if fast { 60 } else { 160 };
+    let n_streams = 4usize;
+
+    // One dataset per stream (distinct seeds — independent eigensystems).
+    let datasets: Vec<Dataset> = (0..n_streams)
+        .map(|s| {
+            let mut ds = load("yeast", n_per_stream, 100 + s as u64).unwrap();
+            ds.standardize();
+            ds
+        })
+        .collect();
+
+    for shards in [1usize, 2, 4] {
+        b.case(&format!("shards/ingest_4streams/shards{shards}"), || {
+            let pool = ShardPool::spawn(PoolConfig {
+                shards,
+                queue: 64,
+                engine: EngineConfig::Native,
+            });
+            let router = pool.router();
+            std::thread::scope(|scope| {
+                for (si, ds) in datasets.iter().enumerate() {
+                    let r = router.clone();
+                    scope.spawn(move || {
+                        let id = format!("stream-{si}");
+                        r.open_stream(
+                            &id,
+                            ds.dim(),
+                            StreamConfig {
+                                kernel: KernelConfig::Rbf { sigma: 2.0 },
+                                mean_adjust: true,
+                                seed_points: 10,
+                                drift_every: 0,
+                            },
+                        )
+                        .unwrap();
+                        for i in 0..ds.n() {
+                            r.ingest(&id, ds.x.row(i).to_vec()).unwrap();
+                        }
+                    });
+                }
+            });
+            let snap = router.pool_snapshot().unwrap();
+            pool.shutdown();
+            snap.accepted
+        });
+    }
+
+    b.finish();
+    if let Err(e) = b.write_json("BENCH_shards.json") {
+        eprintln!("warning: could not write BENCH_shards.json: {e}");
+    } else {
+        println!("wrote BENCH_shards.json");
+    }
+}

@@ -30,4 +30,9 @@ fn main() {
         }
     }
     b.finish();
+    if let Err(e) = b.write_json("BENCH_fig1.json") {
+        eprintln!("warning: could not write BENCH_fig1.json: {e}");
+    } else {
+        println!("wrote BENCH_fig1.json");
+    }
 }

@@ -60,4 +60,9 @@ fn main() {
         inc.push(ds.x.row(65)).unwrap()
     });
     b.finish();
+    if let Err(e) = b.write_json("BENCH_fig2.json") {
+        eprintln!("warning: could not write BENCH_fig2.json: {e}");
+    } else {
+        println!("wrote BENCH_fig2.json");
+    }
 }

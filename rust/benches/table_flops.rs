@@ -66,4 +66,9 @@ fn main() {
         b.case(&format!("t1/clone_floor/m{m}"), || base_adj.clone().len());
     }
     b.finish();
+    if let Err(e) = b.write_json("BENCH_t1.json") {
+        eprintln!("warning: could not write BENCH_t1.json: {e}");
+    } else {
+        println!("wrote BENCH_t1.json");
+    }
 }

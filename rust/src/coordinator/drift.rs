@@ -2,7 +2,9 @@
 //! measurement: every `every` accepted examples, reconstruct `UΛUᵀ`,
 //! recompute the batch (adjusted) kernel matrix, and record the three
 //! norms of the difference. `O(m³)` per measurement, so it is sampled,
-//! not per-step.
+//! not per-step. Each stream entry in the shard pool owns one monitor;
+//! its latest Frobenius norm surfaces as the per-stream `drift` gauge
+//! in the pool snapshot.
 
 use crate::kpca::IncrementalKpca;
 use crate::linalg::{sym_norms, Norms};

@@ -1,6 +1,19 @@
-//! Latency/throughput metrics for the streaming coordinator: a fixed
-//! log-spaced latency histogram (HDR-style, no allocation on the record
-//! path) plus counters, snapshotted into a compact report.
+//! Latency/throughput metrics for the streaming coordinator, split into
+//! two altitudes:
+//!
+//! - **per-stream** ([`Metrics`]/[`MetricsReport`], plus the compact
+//!   [`StreamGauges`]): latency histograms, accept/exclude/error
+//!   counters and the hot-path allocation gauges
+//!   (`ws_bytes_resident`, `reallocs_per_update`), one instance per
+//!   stream entry in a shard;
+//! - **pool-level** ([`PoolSnapshot`]): rollups across every shard and
+//!   stream — total resident bytes, merged ingest/project latency
+//!   histograms ([`LatencyHistogram::merge`]), aggregated engine
+//!   dispatch counts — with the per-stream gauges attached for
+//!   attribution.
+//!
+//! The histogram is a fixed log-spaced array (HDR-style): recording and
+//! merging never allocate.
 
 use std::time::{Duration, Instant};
 
@@ -66,6 +79,18 @@ impl LatencyHistogram {
     pub fn count(&self) -> u64 {
         self.total
     }
+
+    /// Fold another histogram into this one (bucket-wise; exact for
+    /// counts/mean/max, and percentiles stay upper bounds) — how the
+    /// pool rolls per-shard latency up into one distribution.
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum_ns += other.sum_ns;
+        self.max_ns = self.max_ns.max(other.max_ns);
+    }
 }
 
 /// Aggregate coordinator metrics.
@@ -104,6 +129,13 @@ impl Default for Metrics {
 }
 
 impl Metrics {
+    /// Growth events per rank-one update — the steady-state allocation
+    /// gauge (≈0 once warm). Single definition shared by the per-stream
+    /// report and the pool-snapshot gauges.
+    pub fn reallocs_per_update(&self) -> f64 {
+        self.ws_reallocs as f64 / self.updates.max(1) as f64
+    }
+
     pub fn report(&self) -> MetricsReport {
         let elapsed = self.started.elapsed().as_secs_f64().max(1e-9);
         MetricsReport {
@@ -118,7 +150,7 @@ impl Metrics {
             project_mean_us: self.project_latency.mean_ns() / 1e3,
             ws_bytes_resident: self.ws_bytes_resident,
             ws_reallocs: self.ws_reallocs,
-            reallocs_per_update: self.ws_reallocs as f64 / self.updates.max(1) as f64,
+            reallocs_per_update: self.reallocs_per_update(),
         }
     }
 }
@@ -162,6 +194,74 @@ impl std::fmt::Display for MetricsReport {
     }
 }
 
+/// Compact per-stream hot-path gauges, attributed by stream id and
+/// shard — the per-stream half of the pool snapshot.
+#[derive(Clone, Debug, Default)]
+pub struct StreamGauges {
+    pub stream: String,
+    /// Shard the stream is pinned to.
+    pub shard: usize,
+    /// Current eigensystem size (or buffered seed count pre-init).
+    pub m: usize,
+    /// Bytes resident in the stream's hot-path buffers.
+    pub ws_bytes_resident: u64,
+    /// Cumulative hot-path buffer-growth events.
+    pub ws_reallocs: u64,
+    /// Growth events per rank-one update — ≈0 in steady state.
+    pub reallocs_per_update: f64,
+    /// Frobenius norm of the latest drift measurement, if any.
+    pub drift_frobenius: Option<f64>,
+}
+
+/// Pool-level rollup across all shards and streams: aggregate counters,
+/// merged latency distributions, total hot-path residency, summed
+/// engine dispatch counts, plus the per-stream gauges for attribution.
+/// The counters and latency stats are *lifetime* values — they include
+/// streams closed since the pool spawned, so they are monotonic under
+/// stream churn; residency (`total_ws_bytes`) and `per_stream` reflect
+/// only the currently open streams.
+#[derive(Clone, Debug, Default)]
+pub struct PoolSnapshot {
+    pub shards: usize,
+    /// Open streams across the pool.
+    pub streams: usize,
+    pub accepted: u64,
+    pub excluded: u64,
+    pub errors: u64,
+    /// Hot-path bytes resident summed over every stream.
+    pub total_ws_bytes: u64,
+    /// Ingest latency over the merged per-stream histograms.
+    pub ingest_p50_us: f64,
+    pub ingest_p99_us: f64,
+    pub ingest_mean_us: f64,
+    pub ingest_count: u64,
+    pub project_mean_us: f64,
+    /// (native, pjrt) rotation dispatches summed across shard engines.
+    pub engine_calls: (u64, u64),
+    /// Per-stream gauges, sorted by stream id.
+    pub per_stream: Vec<StreamGauges>,
+}
+
+impl std::fmt::Display for PoolSnapshot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "pool: shards={} streams={} accepted={} excluded={} errors={} ws_total={}B ingest p50={:.0}µs p99={:.0}µs mean={:.0}µs (n={}) engines(native,pjrt)={:?}",
+            self.shards,
+            self.streams,
+            self.accepted,
+            self.excluded,
+            self.errors,
+            self.total_ws_bytes,
+            self.ingest_p50_us,
+            self.ingest_p99_us,
+            self.ingest_mean_us,
+            self.ingest_count,
+            self.engine_calls
+        )
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -193,6 +293,41 @@ mod tests {
         let h = LatencyHistogram::default();
         assert_eq!(h.percentile_ns(0.99), 0.0);
         assert_eq!(h.mean_ns(), 0.0);
+    }
+
+    #[test]
+    fn merge_combines_counts_and_max() {
+        let mut a = LatencyHistogram::default();
+        let mut b = LatencyHistogram::default();
+        for us in [5u64, 50] {
+            a.record(Duration::from_micros(us));
+        }
+        for us in [500u64, 5000] {
+            b.record(Duration::from_micros(us));
+        }
+        let (mean_a, mean_b) = (a.mean_ns(), b.mean_ns());
+        a.merge(&b);
+        assert_eq!(a.count(), 4);
+        assert!((a.mean_ns() - 0.5 * (mean_a + mean_b)).abs() < 1.0);
+        // Percentiles still bracket the merged max.
+        assert!(a.percentile_ns(0.99) >= 5_000_000.0 / 2.0);
+        let empty = LatencyHistogram::default();
+        a.merge(&empty); // merging empty is a no-op
+        assert_eq!(a.count(), 4);
+    }
+
+    #[test]
+    fn pool_snapshot_displays() {
+        let snap = PoolSnapshot {
+            shards: 2,
+            streams: 4,
+            accepted: 100,
+            per_stream: vec![StreamGauges { stream: "s0".into(), ..Default::default() }],
+            ..Default::default()
+        };
+        let line = format!("{snap}");
+        assert!(line.contains("shards=2"));
+        assert!(line.contains("streams=4"));
     }
 
     #[test]

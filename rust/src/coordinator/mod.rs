@@ -1,13 +1,24 @@
-//! Layer-3 streaming coordinator: bounded-queue ingestion with
-//! backpressure, eigenstate ownership, engine routing (native GEMM vs
-//! AOT PJRT), periodic drift measurement and latency/throughput metrics.
+//! Layer-3 streaming coordinator: a sharded multi-stream engine.
+//! [`shard`] owns the machinery — a [`ShardPool`] of worker threads
+//! (each holding a map of stream-id → per-stream eigenstate, a shared
+//! rotation engine, and per-stream metrics) fronted by a stream-keyed
+//! [`StreamRouter`] over per-shard bounded channels (backpressure is
+//! per shard). [`server`] keeps the historical single-stream
+//! [`Coordinator`] API as a thin wrapper over a 1-shard pool. [`drift`]
+//! measures live reconstruction error; [`metrics`] holds the per-stream
+//! histograms/gauges and the pool-level rollup; [`router`] routes each
+//! rank-one back-rotation to the native GEMM or the AOT PJRT engine.
 
 pub mod drift;
 pub mod metrics;
 pub mod router;
 pub mod server;
+pub mod shard;
 
 pub use drift::{DriftMonitor, DriftPoint};
-pub use metrics::{LatencyHistogram, Metrics, MetricsReport};
+pub use metrics::{
+    LatencyHistogram, Metrics, MetricsReport, PoolSnapshot, StreamGauges,
+};
 pub use router::{EnginePolicy, RoutedEngine};
 pub use server::{Config, Coordinator, EngineConfig, IngestReply, KernelConfig, Snapshot};
+pub use shard::{PoolConfig, ShardPool, StreamConfig, StreamRouter};

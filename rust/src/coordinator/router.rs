@@ -3,6 +3,11 @@
 //! executable (bucket-laddered Pallas kernel). Policy: PJRT above a
 //! size threshold when a runtime is attached, native otherwise — small
 //! problems lose more to padding/transfer than the kernel gains.
+//!
+//! In the shard pool one `RoutedEngine` exists *per shard worker* and
+//! is shared by every stream pinned to that shard (the engine is
+//! stateless apart from its atomic dispatch counters, which the pool
+//! snapshot sums across shards).
 
 use std::sync::atomic::{AtomicU64, Ordering};
 

@@ -1,24 +1,22 @@
-//! The streaming coordinator: a worker thread owning the incremental
-//! eigensystem, fed through a *bounded* command channel (backpressure —
-//! producers block when the update loop falls behind), with rendezvous
-//! replies, periodic drift measurement and latency metrics. This is the
-//! L3 event loop; the PJRT runtime (not `Send`) is constructed inside
-//! the worker thread.
-
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
-use std::thread::JoinHandle;
-use std::time::Instant;
+//! The single-stream coordinator API, kept source-compatible for every
+//! existing caller (CLI, benches, examples, tests) — now a thin wrapper
+//! over a 1-shard [`ShardPool`](super::shard::ShardPool): `spawn` opens
+//! one default stream on a one-worker pool and every method routes to
+//! it. The multi-stream machinery (per-shard workers, stream-keyed
+//! routing, pool-level metrics rollups) lives in [`super::shard`]; the
+//! per-stream kernel is owned by the stream entry through an `Arc` —
+//! the old per-coordinator `Box::leak` is gone.
 
 use crate::data::StreamSource;
-use crate::kernels::{median_heuristic, Kernel};
-use crate::kpca::{IncrementalKpca, KpcaStats};
-use crate::linalg::{Mat, Norms};
+use crate::kpca::KpcaStats;
+use crate::linalg::Norms;
 
-use super::drift::{DriftMonitor, DriftPoint};
-use super::metrics::{Metrics, MetricsReport};
-use super::router::{EnginePolicy, RoutedEngine};
+use super::drift::DriftPoint;
+use super::metrics::MetricsReport;
+use super::router::EnginePolicy;
+use super::shard::{PoolConfig, ShardPool, StreamConfig, StreamRouter};
 
-/// Kernel selection (constructed inside the worker thread).
+/// Kernel selection (constructed inside the owning shard worker).
 #[derive(Clone, Debug)]
 pub enum KernelConfig {
     Rbf { sigma: f64 },
@@ -38,7 +36,8 @@ pub enum EngineConfig {
     Pjrt { dir: String, policy: EnginePolicy },
 }
 
-/// Coordinator configuration.
+/// Single-stream coordinator configuration (the historical surface:
+/// stream knobs and pool knobs in one struct, split internally).
 #[derive(Clone, Debug)]
 pub struct Config {
     pub kernel: KernelConfig,
@@ -65,6 +64,22 @@ impl Default for Config {
     }
 }
 
+impl Config {
+    /// Split into the pool-level and per-stream halves (a 1-shard pool
+    /// reproduces the historical single-worker behaviour exactly).
+    pub fn split(&self) -> (PoolConfig, StreamConfig) {
+        (
+            PoolConfig { shards: 1, queue: self.queue, engine: self.engine.clone() },
+            StreamConfig {
+                kernel: self.kernel.clone(),
+                mean_adjust: self.mean_adjust,
+                seed_points: self.seed_points,
+                drift_every: self.drift_every,
+            },
+        )
+    }
+}
+
 /// Reply to an ingest request.
 #[derive(Clone, Copy, Debug)]
 pub struct IngestReply {
@@ -75,7 +90,7 @@ pub struct IngestReply {
     pub seeding: bool,
 }
 
-/// Point-in-time view of the coordinator state.
+/// Point-in-time view of a stream's state.
 #[derive(Clone, Debug)]
 pub struct Snapshot {
     pub m: usize,
@@ -83,68 +98,53 @@ pub struct Snapshot {
     pub top_values: Vec<f64>,
     pub stats: KpcaStats,
     pub drift: Option<DriftPoint>,
-    /// (native, pjrt) rotation dispatch counts.
+    /// (native, pjrt) rotation dispatch counts of the owning shard.
     pub engine_calls: (u64, u64),
 }
 
-enum Command {
-    Ingest(Vec<f64>, SyncSender<Result<IngestReply, String>>),
-    Project(Vec<f64>, usize, SyncSender<Result<Vec<f64>, String>>),
-    MeasureDrift(SyncSender<Result<DriftPoint, String>>),
-    Snapshot(SyncSender<Snapshot>),
-    Metrics(SyncSender<MetricsReport>),
-    Shutdown,
-}
+/// The stream id the single-stream wrapper opens on its pool.
+const DEFAULT_STREAM: &str = "default";
 
-/// Handle to a running coordinator.
+/// Handle to a running single-stream coordinator (a 1-shard pool with
+/// one open stream).
 pub struct Coordinator {
-    tx: SyncSender<Command>,
-    join: Option<JoinHandle<KpcaStats>>,
+    router: StreamRouter,
+    pool: ShardPool,
 }
 
 impl Coordinator {
-    /// Spawn the worker thread.
+    /// Spawn the worker and open the default stream.
     pub fn spawn(cfg: Config, dim: usize) -> Coordinator {
-        let (tx, rx) = sync_channel(cfg.queue.max(1));
-        let join = std::thread::spawn(move || worker(cfg, dim, rx));
-        Coordinator { tx, join: Some(join) }
+        let (pool_cfg, stream_cfg) = cfg.split();
+        let pool = ShardPool::spawn(pool_cfg);
+        let router = pool.router();
+        router
+            .open_stream(DEFAULT_STREAM, dim, stream_cfg)
+            .expect("fresh 1-shard pool accepts its default stream");
+        Coordinator { router, pool }
     }
 
     /// Ingest one example (blocks under backpressure).
     pub fn ingest(&self, x: Vec<f64>) -> Result<IngestReply, String> {
-        let (rtx, rrx) = sync_channel(1);
-        self.tx.send(Command::Ingest(x, rtx)).map_err(|_| "coordinator down".to_string())?;
-        rrx.recv().map_err(|_| "coordinator dropped reply".to_string())?
+        self.router.ingest(DEFAULT_STREAM, x)
     }
 
     /// Project a point onto the current top-`r` components.
     pub fn project(&self, x: Vec<f64>, r: usize) -> Result<Vec<f64>, String> {
-        let (rtx, rrx) = sync_channel(1);
-        self.tx
-            .send(Command::Project(x, r, rtx))
-            .map_err(|_| "coordinator down".to_string())?;
-        rrx.recv().map_err(|_| "coordinator dropped reply".to_string())?
+        self.router.project(DEFAULT_STREAM, x, r)
     }
 
     /// Force an immediate drift measurement.
     pub fn measure_drift(&self) -> Result<DriftPoint, String> {
-        let (rtx, rrx) = sync_channel(1);
-        self.tx
-            .send(Command::MeasureDrift(rtx))
-            .map_err(|_| "coordinator down".to_string())?;
-        rrx.recv().map_err(|_| "coordinator dropped reply".to_string())?
+        self.router.measure_drift(DEFAULT_STREAM)
     }
 
     pub fn snapshot(&self) -> Result<Snapshot, String> {
-        let (rtx, rrx) = sync_channel(1);
-        self.tx.send(Command::Snapshot(rtx)).map_err(|_| "coordinator down".to_string())?;
-        rrx.recv().map_err(|_| "coordinator dropped reply".to_string())
+        self.router.snapshot(DEFAULT_STREAM)
     }
 
     pub fn metrics(&self) -> Result<MetricsReport, String> {
-        let (rtx, rrx) = sync_channel(1);
-        self.tx.send(Command::Metrics(rtx)).map_err(|_| "coordinator down".to_string())?;
-        rrx.recv().map_err(|_| "coordinator dropped reply".to_string())
+        self.router.metrics(DEFAULT_STREAM)
     }
 
     /// Drain a whole stream source through the coordinator, returning
@@ -160,180 +160,11 @@ impl Coordinator {
     }
 
     /// Stop the worker and return final stats.
-    pub fn shutdown(mut self) -> KpcaStats {
-        let _ = self.tx.send(Command::Shutdown);
-        self.join.take().map(|j| j.join().unwrap_or_default()).unwrap_or_default()
+    pub fn shutdown(self) -> KpcaStats {
+        let stats = self.router.close_stream(DEFAULT_STREAM).unwrap_or_default();
+        self.pool.shutdown();
+        stats
     }
-}
-
-impl Drop for Coordinator {
-    fn drop(&mut self) {
-        let _ = self.tx.send(Command::Shutdown);
-        if let Some(j) = self.join.take() {
-            let _ = j.join();
-        }
-    }
-}
-
-fn build_kernel(cfg: &KernelConfig, seed: &Mat) -> Box<dyn Kernel> {
-    match cfg {
-        KernelConfig::Rbf { sigma } => Box::new(crate::kernels::Rbf { sigma: *sigma }),
-        KernelConfig::RbfMedian => {
-            let sigma = median_heuristic(seed, 500);
-            Box::new(crate::kernels::Rbf { sigma })
-        }
-        KernelConfig::Linear => Box::new(crate::kernels::Linear),
-        KernelConfig::Polynomial { degree, offset } => {
-            Box::new(crate::kernels::Polynomial { degree: *degree, offset: *offset })
-        }
-        KernelConfig::Laplacian { sigma } => {
-            Box::new(crate::kernels::Laplacian { sigma: *sigma })
-        }
-    }
-}
-
-fn build_engine(cfg: &EngineConfig) -> RoutedEngine {
-    match cfg {
-        EngineConfig::Native => RoutedEngine::native_only(),
-        EngineConfig::Pjrt { dir, policy } => {
-            match crate::runtime::Runtime::new(std::path::Path::new(dir)) {
-                Ok(rt) => RoutedEngine::with_pjrt(
-                    crate::runtime::PjrtRotate::new(std::sync::Arc::new(rt)),
-                    policy.clone(),
-                ),
-                Err(e) => {
-                    eprintln!("coordinator: pjrt unavailable ({e}); using native engine");
-                    RoutedEngine::native_only()
-                }
-            }
-        }
-    }
-}
-
-fn worker(cfg: Config, dim: usize, rx: Receiver<Command>) -> KpcaStats {
-    let engine = build_engine(&cfg.engine);
-    let mut metrics = Metrics::default();
-    let mut drift = DriftMonitor::new(cfg.drift_every);
-    let mut seed_buf: Vec<f64> = Vec::new();
-    let mut seeded = 0usize;
-    // The state borrows the kernel; we intentionally `Box::leak` one
-    // kernel per coordinator (long-lived singleton, a few bytes) to get
-    // the `'static` lifetime the owning thread needs.
-    let mut state: Option<IncrementalKpca<'static>> = None;
-    let min_seed = if cfg.mean_adjust { cfg.seed_points.max(2) } else { cfg.seed_points.max(1) };
-
-    while let Ok(cmd) = rx.recv() {
-        match cmd {
-            Command::Ingest(x, reply) => {
-                let t0 = Instant::now();
-                if x.len() != dim {
-                    metrics.errors += 1;
-                    let _ = reply.send(Err(format!(
-                        "dimension mismatch: got {}, want {dim}",
-                        x.len()
-                    )));
-                    continue;
-                }
-                let result = if state.is_none() {
-                    // Seeding phase: buffer until the batch init.
-                    seed_buf.extend_from_slice(&x);
-                    seeded += 1;
-                    if seeded >= min_seed {
-                        let seed = Mat::from_vec(seeded, dim, seed_buf.clone());
-                        let k: &'static dyn Kernel =
-                            Box::leak(build_kernel(&cfg.kernel, &seed));
-                        match IncrementalKpca::from_batch(k, &seed, cfg.mean_adjust) {
-                            Ok(s) => {
-                                state = Some(s);
-                                Ok(IngestReply { accepted: true, m: seeded, seeding: false })
-                            }
-                            Err(e) => {
-                                metrics.errors += 1;
-                                Err(e)
-                            }
-                        }
-                    } else {
-                        Ok(IngestReply { accepted: true, m: seeded, seeding: true })
-                    }
-                } else {
-                    let st = state.as_mut().unwrap();
-                    match st.push_with(&x, &engine) {
-                        Ok(accepted) => {
-                            if accepted {
-                                metrics.accepted += 1;
-                                drift.on_accept(st);
-                            } else {
-                                metrics.excluded += 1;
-                            }
-                            // Refresh the per-stream hot-path gauges
-                            // (workspace + eigenbasis residency/growth).
-                            metrics.updates = st.stats.updates as u64;
-                            metrics.ws_bytes_resident = st.hot_path_bytes() as u64;
-                            metrics.ws_reallocs = st.hot_path_reallocs();
-                            Ok(IngestReply { accepted, m: st.len(), seeding: false })
-                        }
-                        Err(e) => {
-                            metrics.errors += 1;
-                            Err(e)
-                        }
-                    }
-                };
-                metrics.ingest_latency.record(t0.elapsed());
-                let _ = reply.send(result);
-            }
-            Command::Project(x, r, reply) => {
-                let t0 = Instant::now();
-                let result = match (&state, x.len() == dim) {
-                    (Some(st), true) => {
-                        // The kernel reference lives inside the state.
-                        Ok(st.project(st_kernel(st), &x, r))
-                    }
-                    (Some(_), false) => Err("dimension mismatch".to_string()),
-                    (None, _) => Err("not initialized (still seeding)".to_string()),
-                };
-                metrics.project_latency.record(t0.elapsed());
-                let _ = reply.send(result);
-            }
-            Command::MeasureDrift(reply) => {
-                let result = match &state {
-                    Some(st) => Ok(drift.measure(st)),
-                    None => Err("not initialized".to_string()),
-                };
-                let _ = reply.send(result);
-            }
-            Command::Snapshot(reply) => {
-                let snap = match &state {
-                    Some(st) => Snapshot {
-                        m: st.len(),
-                        dim,
-                        top_values: st.vals.iter().rev().take(10).copied().collect(),
-                        stats: st.stats,
-                        drift: drift.latest().copied(),
-                        engine_calls: engine.counts(),
-                    },
-                    None => Snapshot {
-                        m: seeded,
-                        dim,
-                        top_values: Vec::new(),
-                        stats: KpcaStats::default(),
-                        drift: None,
-                        engine_calls: engine.counts(),
-                    },
-                };
-                let _ = reply.send(snap);
-            }
-            Command::Metrics(reply) => {
-                let _ = reply.send(metrics.report());
-            }
-            Command::Shutdown => break,
-        }
-    }
-    state.map(|s| s.stats).unwrap_or_default()
-}
-
-/// Fetch the kernel a state was built over (stored by reference).
-fn st_kernel<'a>(st: &'a IncrementalKpca<'_>) -> &'a dyn Kernel {
-    st.kernel_ref()
 }
 
 /// Convenience: drift norms of a snapshot, if measured.

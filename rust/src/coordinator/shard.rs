@@ -1,0 +1,738 @@
+//! Sharded multi-stream coordinator: a [`ShardPool`] of worker threads,
+//! each owning a map of stream-id → per-stream state, fronted by a
+//! stream-keyed [`StreamRouter`].
+//!
+//! # Design
+//!
+//! **Pinning.** Every stream id is hashed (FNV-1a, deterministic within
+//! and across processes) and pinned to `hash % shards` for its whole
+//! life. All commands for a stream therefore serialize through one
+//! worker — per-stream state needs no locks, and the paper's rank-one
+//! hot path (workspace + eigenbasis, allocation-free once warm, PR 1)
+//! runs untouched inside the shard. Streams only ever contend with the
+//! *other streams of their own shard*.
+//!
+//! **Backpressure.** Each shard has its own *bounded* command channel
+//! (`PoolConfig::queue` deep). Producers of a hot shard block on that
+//! shard's queue without slowing streams pinned elsewhere — the same
+//! rendezvous discipline the single-stream coordinator used, sharded.
+//!
+//! **Shared immutable resources.** One [`RoutedEngine`] (and, when
+//! configured, one PJRT runtime — it is not `Send`, so it must be built
+//! inside the worker thread) exists *per shard*, not per stream: the
+//! engine is stateless apart from its dispatch counters, so all streams
+//! of a shard share it. Per-stream state owns its kernel through an
+//! `Arc` handed to [`IncrementalKpca::from_batch_shared`] — closing a
+//! stream frees its kernel (the old single-stream server `Box::leak`ed
+//! one kernel per coordinator, which a multi-stream pool cannot afford).
+//!
+//! **Metrics aggregation.** Each stream entry keeps its own
+//! [`Metrics`] (latency histograms + counters + hot-path gauges).
+//! [`StreamRouter::pool_snapshot`] asks every shard for a rollup —
+//! counters summed, histograms merged bucket-wise, engine dispatch
+//! counts added — and returns one [`PoolSnapshot`] with the per-stream
+//! [`StreamGauges`] attached for attribution.
+
+use std::collections::HashMap;
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::kernels::{median_heuristic, Kernel};
+use crate::kpca::{IncrementalKpca, KpcaStats};
+use crate::linalg::Mat;
+
+use super::drift::{DriftMonitor, DriftPoint};
+use super::metrics::{LatencyHistogram, Metrics, MetricsReport, PoolSnapshot, StreamGauges};
+use super::router::RoutedEngine;
+use super::server::{EngineConfig, IngestReply, KernelConfig, Snapshot};
+
+/// Per-stream configuration (what used to be the per-coordinator
+/// `Config`, minus the pool-level engine/queue knobs).
+#[derive(Clone, Debug)]
+pub struct StreamConfig {
+    pub kernel: KernelConfig,
+    pub mean_adjust: bool,
+    /// Seed examples accumulated before the batch initialization.
+    pub seed_points: usize,
+    /// Drift measurement cadence (accepted points; 0 = off).
+    pub drift_every: usize,
+}
+
+impl Default for StreamConfig {
+    fn default() -> Self {
+        StreamConfig {
+            kernel: KernelConfig::RbfMedian,
+            mean_adjust: true,
+            seed_points: 20,
+            drift_every: 0,
+        }
+    }
+}
+
+/// Pool-level configuration: shard/queue topology and the (per-shard)
+/// rotation engine.
+#[derive(Clone, Debug)]
+pub struct PoolConfig {
+    /// Worker threads; streams are pinned by stream-id hash.
+    pub shards: usize,
+    /// Bounded command-queue depth *per shard* (ingest backpressure).
+    pub queue: usize,
+    /// Rotation engine, instantiated once per shard worker.
+    pub engine: EngineConfig,
+}
+
+impl Default for PoolConfig {
+    fn default() -> Self {
+        PoolConfig { shards: 1, queue: 64, engine: EngineConfig::Native }
+    }
+}
+
+enum ShardCommand {
+    Open {
+        stream: String,
+        dim: usize,
+        cfg: StreamConfig,
+        reply: SyncSender<Result<(), String>>,
+    },
+    Ingest {
+        stream: String,
+        x: Vec<f64>,
+        reply: SyncSender<Result<IngestReply, String>>,
+    },
+    Project {
+        stream: String,
+        x: Vec<f64>,
+        r: usize,
+        reply: SyncSender<Result<Vec<f64>, String>>,
+    },
+    MeasureDrift {
+        stream: String,
+        reply: SyncSender<Result<DriftPoint, String>>,
+    },
+    Snapshot {
+        stream: String,
+        reply: SyncSender<Result<Snapshot, String>>,
+    },
+    Metrics {
+        stream: String,
+        reply: SyncSender<Result<MetricsReport, String>>,
+    },
+    Close {
+        stream: String,
+        reply: SyncSender<Result<KpcaStats, String>>,
+    },
+    Rollup {
+        reply: SyncSender<ShardRollup>,
+    },
+    Shutdown,
+}
+
+/// Per-shard aggregation answered to `Rollup` (internal wire format;
+/// the router folds these into one [`PoolSnapshot`]).
+struct ShardRollup {
+    streams: usize,
+    accepted: u64,
+    excluded: u64,
+    errors: u64,
+    total_ws_bytes: u64,
+    ingest: LatencyHistogram,
+    project: LatencyHistogram,
+    engine_calls: (u64, u64),
+    gauges: Vec<StreamGauges>,
+}
+
+/// Lifetime totals of streams already closed on this shard: folded into
+/// every rollup so pool-level counters stay *monotonic* across stream
+/// churn (closing a stream must not erase its history from the pool).
+/// Residency gauges are deliberately not kept — closed streams hold no
+/// bytes.
+#[derive(Default)]
+struct ClosedTotals {
+    accepted: u64,
+    excluded: u64,
+    errors: u64,
+    ingest: LatencyHistogram,
+    project: LatencyHistogram,
+}
+
+impl ClosedTotals {
+    fn absorb(&mut self, m: &Metrics) {
+        self.accepted += m.accepted;
+        self.excluded += m.excluded;
+        self.errors += m.errors;
+        self.ingest.merge(&m.ingest_latency);
+        self.project.merge(&m.project_latency);
+    }
+}
+
+/// Build the kernel a stream entry owns (shared ownership — freed with
+/// the stream, never leaked).
+fn build_kernel(cfg: &KernelConfig, seed: &Mat) -> Arc<dyn Kernel> {
+    match cfg {
+        KernelConfig::Rbf { sigma } => Arc::new(crate::kernels::Rbf { sigma: *sigma }),
+        KernelConfig::RbfMedian => {
+            let sigma = median_heuristic(seed, 500);
+            Arc::new(crate::kernels::Rbf { sigma })
+        }
+        KernelConfig::Linear => Arc::new(crate::kernels::Linear),
+        KernelConfig::Polynomial { degree, offset } => {
+            Arc::new(crate::kernels::Polynomial { degree: *degree, offset: *offset })
+        }
+        KernelConfig::Laplacian { sigma } => {
+            Arc::new(crate::kernels::Laplacian { sigma: *sigma })
+        }
+    }
+}
+
+/// Build the shard's shared rotation engine. The PJRT runtime is not
+/// `Send`, so this runs inside the worker thread — one runtime per
+/// worker, shared by all streams pinned to it.
+fn build_engine(cfg: &EngineConfig) -> RoutedEngine {
+    match cfg {
+        EngineConfig::Native => RoutedEngine::native_only(),
+        EngineConfig::Pjrt { dir, policy } => {
+            match crate::runtime::Runtime::new(std::path::Path::new(dir)) {
+                Ok(rt) => RoutedEngine::with_pjrt(
+                    crate::runtime::PjrtRotate::new(std::sync::Arc::new(rt)),
+                    policy.clone(),
+                ),
+                Err(e) => {
+                    eprintln!("shard: pjrt unavailable ({e}); using native engine");
+                    RoutedEngine::native_only()
+                }
+            }
+        }
+    }
+}
+
+/// All state of one stream, owned by exactly one shard worker:
+/// the incremental eigensystem (which itself owns the kernel, the
+/// update workspace and the eigenbasis), the drift monitor, and the
+/// per-stream metrics.
+struct StreamEntry {
+    cfg: StreamConfig,
+    dim: usize,
+    seed_buf: Vec<f64>,
+    seeded: usize,
+    state: Option<IncrementalKpca<'static>>,
+    drift: DriftMonitor,
+    metrics: Metrics,
+}
+
+impl StreamEntry {
+    fn new(dim: usize, cfg: StreamConfig) -> StreamEntry {
+        let drift = DriftMonitor::new(cfg.drift_every);
+        StreamEntry {
+            cfg,
+            dim,
+            seed_buf: Vec::new(),
+            seeded: 0,
+            state: None,
+            drift,
+            metrics: Metrics::default(),
+        }
+    }
+
+    fn min_seed(&self) -> usize {
+        if self.cfg.mean_adjust {
+            self.cfg.seed_points.max(2)
+        } else {
+            self.cfg.seed_points.max(1)
+        }
+    }
+
+    fn ingest(&mut self, x: Vec<f64>, engine: &RoutedEngine) -> Result<IngestReply, String> {
+        if x.len() != self.dim {
+            self.metrics.errors += 1;
+            return Err(format!("dimension mismatch: got {}, want {}", x.len(), self.dim));
+        }
+        if self.state.is_none() {
+            // Seeding phase: buffer until the batch init.
+            self.seed_buf.extend_from_slice(&x);
+            self.seeded += 1;
+            if self.seeded < self.min_seed() {
+                return Ok(IngestReply { accepted: true, m: self.seeded, seeding: true });
+            }
+            let seed = Mat::from_vec(self.seeded, self.dim, self.seed_buf.clone());
+            let kernel = build_kernel(&self.cfg.kernel, &seed);
+            return match IncrementalKpca::from_batch_shared(kernel, &seed, self.cfg.mean_adjust)
+            {
+                Ok(st) => {
+                    // The batch init allocated the full eigensystem +
+                    // workspace — publish the residency gauges now, not
+                    // only after the first post-seed push.
+                    self.metrics.updates = st.stats.updates as u64;
+                    self.metrics.ws_bytes_resident = st.hot_path_bytes() as u64;
+                    self.metrics.ws_reallocs = st.hot_path_reallocs();
+                    self.state = Some(st);
+                    Ok(IngestReply { accepted: true, m: self.seeded, seeding: false })
+                }
+                Err(e) => {
+                    self.metrics.errors += 1;
+                    Err(e)
+                }
+            };
+        }
+        let st = self.state.as_mut().unwrap();
+        match st.push_with(&x, engine) {
+            Ok(accepted) => {
+                if accepted {
+                    self.metrics.accepted += 1;
+                    self.drift.on_accept(st);
+                } else {
+                    self.metrics.excluded += 1;
+                }
+                // Refresh the per-stream hot-path gauges.
+                self.metrics.updates = st.stats.updates as u64;
+                self.metrics.ws_bytes_resident = st.hot_path_bytes() as u64;
+                self.metrics.ws_reallocs = st.hot_path_reallocs();
+                Ok(IngestReply { accepted, m: st.len(), seeding: false })
+            }
+            Err(e) => {
+                self.metrics.errors += 1;
+                Err(e)
+            }
+        }
+    }
+
+    fn project(&self, x: &[f64], r: usize) -> Result<Vec<f64>, String> {
+        match (&self.state, x.len() == self.dim) {
+            (Some(st), true) => Ok(st.project(x, r)),
+            (Some(_), false) => Err("dimension mismatch".to_string()),
+            (None, _) => Err("not initialized (still seeding)".to_string()),
+        }
+    }
+
+    fn measure_drift(&mut self) -> Result<DriftPoint, String> {
+        match &self.state {
+            Some(st) => Ok(self.drift.measure(st)),
+            None => Err("not initialized".to_string()),
+        }
+    }
+
+    fn snapshot(&self, engine_calls: (u64, u64)) -> Snapshot {
+        match &self.state {
+            Some(st) => Snapshot {
+                m: st.len(),
+                dim: self.dim,
+                top_values: st.vals.iter().rev().take(10).copied().collect(),
+                stats: st.stats,
+                drift: self.drift.latest().copied(),
+                engine_calls,
+            },
+            None => Snapshot {
+                m: self.seeded,
+                dim: self.dim,
+                top_values: Vec::new(),
+                stats: KpcaStats::default(),
+                drift: None,
+                engine_calls,
+            },
+        }
+    }
+
+    fn gauges(&self, stream: &str, shard: usize) -> StreamGauges {
+        StreamGauges {
+            stream: stream.to_string(),
+            shard,
+            m: self.state.as_ref().map(|s| s.len()).unwrap_or(self.seeded),
+            ws_bytes_resident: self.metrics.ws_bytes_resident,
+            ws_reallocs: self.metrics.ws_reallocs,
+            reallocs_per_update: self.metrics.reallocs_per_update(),
+            drift_frobenius: self.drift.latest().map(|d| d.norms.frobenius),
+        }
+    }
+
+    fn final_stats(self) -> KpcaStats {
+        self.state.map(|s| s.stats).unwrap_or_default()
+    }
+}
+
+fn shard_worker(shard: usize, engine_cfg: EngineConfig, rx: Receiver<ShardCommand>) {
+    let engine = build_engine(&engine_cfg);
+    let mut streams: HashMap<String, StreamEntry> = HashMap::new();
+    let mut closed = ClosedTotals::default();
+    while let Ok(cmd) = rx.recv() {
+        match cmd {
+            ShardCommand::Open { stream, dim, cfg, reply } => {
+                let res = if streams.contains_key(&stream) {
+                    Err(format!("stream '{stream}' already open"))
+                } else {
+                    streams.insert(stream, StreamEntry::new(dim, cfg));
+                    Ok(())
+                };
+                let _ = reply.send(res);
+            }
+            ShardCommand::Ingest { stream, x, reply } => {
+                let res = match streams.get_mut(&stream) {
+                    Some(entry) => {
+                        let t0 = Instant::now();
+                        let r = entry.ingest(x, &engine);
+                        entry.metrics.ingest_latency.record(t0.elapsed());
+                        r
+                    }
+                    None => Err(format!("unknown stream '{stream}'")),
+                };
+                let _ = reply.send(res);
+            }
+            ShardCommand::Project { stream, x, r, reply } => {
+                let res = match streams.get_mut(&stream) {
+                    Some(entry) => {
+                        let t0 = Instant::now();
+                        let out = entry.project(&x, r);
+                        entry.metrics.project_latency.record(t0.elapsed());
+                        out
+                    }
+                    None => Err(format!("unknown stream '{stream}'")),
+                };
+                let _ = reply.send(res);
+            }
+            ShardCommand::MeasureDrift { stream, reply } => {
+                let res = match streams.get_mut(&stream) {
+                    Some(entry) => entry.measure_drift(),
+                    None => Err(format!("unknown stream '{stream}'")),
+                };
+                let _ = reply.send(res);
+            }
+            ShardCommand::Snapshot { stream, reply } => {
+                let res = match streams.get(&stream) {
+                    Some(entry) => Ok(entry.snapshot(engine.counts())),
+                    None => Err(format!("unknown stream '{stream}'")),
+                };
+                let _ = reply.send(res);
+            }
+            ShardCommand::Metrics { stream, reply } => {
+                let res = match streams.get(&stream) {
+                    Some(entry) => Ok(entry.metrics.report()),
+                    None => Err(format!("unknown stream '{stream}'")),
+                };
+                let _ = reply.send(res);
+            }
+            ShardCommand::Close { stream, reply } => {
+                let res = match streams.remove(&stream) {
+                    Some(entry) => {
+                        // Keep the stream's lifetime counters/latency in
+                        // the shard totals — pool counters stay monotonic.
+                        closed.absorb(&entry.metrics);
+                        Ok(entry.final_stats())
+                    }
+                    None => Err(format!("unknown stream '{stream}'")),
+                };
+                let _ = reply.send(res);
+            }
+            ShardCommand::Rollup { reply } => {
+                let mut rollup = ShardRollup {
+                    streams: streams.len(),
+                    accepted: closed.accepted,
+                    excluded: closed.excluded,
+                    errors: closed.errors,
+                    total_ws_bytes: 0,
+                    ingest: closed.ingest.clone(),
+                    project: closed.project.clone(),
+                    engine_calls: engine.counts(),
+                    gauges: Vec::with_capacity(streams.len()),
+                };
+                for (name, entry) in &streams {
+                    rollup.accepted += entry.metrics.accepted;
+                    rollup.excluded += entry.metrics.excluded;
+                    rollup.errors += entry.metrics.errors;
+                    rollup.total_ws_bytes += entry.metrics.ws_bytes_resident;
+                    rollup.ingest.merge(&entry.metrics.ingest_latency);
+                    rollup.project.merge(&entry.metrics.project_latency);
+                    rollup.gauges.push(entry.gauges(name, shard));
+                }
+                let _ = reply.send(rollup);
+            }
+            ShardCommand::Shutdown => break,
+        }
+    }
+}
+
+/// FNV-1a — deterministic stream→shard pinning (the std hasher is
+/// randomly seeded per process, which would break cross-run
+/// attribution in logs and tests).
+fn fnv1a(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Cloneable, thread-safe routing front-end over the per-shard command
+/// channels. `ingest`/`project`/`open_stream`/`close_stream` hash the
+/// stream id to its pinned shard; producers on different shards never
+/// touch the same queue.
+#[derive(Clone)]
+pub struct StreamRouter {
+    shards: Arc<Vec<SyncSender<ShardCommand>>>,
+}
+
+impl StreamRouter {
+    /// Number of shards behind this router.
+    pub fn shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The shard a stream id is pinned to (stable for the pool's life).
+    pub fn shard_of(&self, stream: &str) -> usize {
+        (fnv1a(stream) % self.shards.len() as u64) as usize
+    }
+
+    /// One rendezvous round-trip to shard `shard`: build the command
+    /// around a fresh reply channel, send, await the answer. Every
+    /// router verb goes through here so the error discipline cannot
+    /// diverge between commands.
+    fn rpc<T>(
+        &self,
+        shard: usize,
+        make: impl FnOnce(SyncSender<T>) -> ShardCommand,
+    ) -> Result<T, String> {
+        let (rtx, rrx) = sync_channel(1);
+        self.shards[shard].send(make(rtx)).map_err(|_| "shard pool down".to_string())?;
+        rrx.recv().map_err(|_| "shard dropped reply".to_string())
+    }
+
+    /// Open a stream on its pinned shard. Fails if the id is in use.
+    pub fn open_stream(
+        &self,
+        stream: &str,
+        dim: usize,
+        cfg: StreamConfig,
+    ) -> Result<(), String> {
+        self.rpc(self.shard_of(stream), |reply| ShardCommand::Open {
+            stream: stream.to_string(),
+            dim,
+            cfg,
+            reply,
+        })?
+    }
+
+    /// Ingest one example into a stream (blocks under backpressure of
+    /// that stream's shard only).
+    pub fn ingest(&self, stream: &str, x: Vec<f64>) -> Result<IngestReply, String> {
+        self.rpc(self.shard_of(stream), |reply| ShardCommand::Ingest {
+            stream: stream.to_string(),
+            x,
+            reply,
+        })?
+    }
+
+    /// Project a point onto a stream's current top-`r` components.
+    pub fn project(&self, stream: &str, x: Vec<f64>, r: usize) -> Result<Vec<f64>, String> {
+        self.rpc(self.shard_of(stream), |reply| ShardCommand::Project {
+            stream: stream.to_string(),
+            x,
+            r,
+            reply,
+        })?
+    }
+
+    /// Force an immediate drift measurement on a stream.
+    pub fn measure_drift(&self, stream: &str) -> Result<DriftPoint, String> {
+        self.rpc(self.shard_of(stream), |reply| ShardCommand::MeasureDrift {
+            stream: stream.to_string(),
+            reply,
+        })?
+    }
+
+    /// Point-in-time view of one stream.
+    pub fn snapshot(&self, stream: &str) -> Result<Snapshot, String> {
+        self.rpc(self.shard_of(stream), |reply| ShardCommand::Snapshot {
+            stream: stream.to_string(),
+            reply,
+        })?
+    }
+
+    /// Per-stream metrics report.
+    pub fn metrics(&self, stream: &str) -> Result<MetricsReport, String> {
+        self.rpc(self.shard_of(stream), |reply| ShardCommand::Metrics {
+            stream: stream.to_string(),
+            reply,
+        })?
+    }
+
+    /// Close a stream, freeing its state (and its kernel), returning
+    /// the stream's final stats. The stream's counters stay in the
+    /// shard's lifetime totals, so pool counters remain monotonic.
+    pub fn close_stream(&self, stream: &str) -> Result<KpcaStats, String> {
+        self.rpc(self.shard_of(stream), |reply| ShardCommand::Close {
+            stream: stream.to_string(),
+            reply,
+        })?
+    }
+
+    /// Pool-level rollup: per-shard counters summed (including streams
+    /// closed since spawn — counters are monotonic under churn), latency
+    /// histograms merged, engine dispatches aggregated, per-stream
+    /// gauges attached for the currently open streams.
+    pub fn pool_snapshot(&self) -> Result<PoolSnapshot, String> {
+        let mut snap = PoolSnapshot { shards: self.shards.len(), ..Default::default() };
+        let mut ingest = LatencyHistogram::default();
+        let mut project = LatencyHistogram::default();
+        for shard in 0..self.shards.len() {
+            let rollup = self.rpc(shard, |reply| ShardCommand::Rollup { reply })?;
+            snap.streams += rollup.streams;
+            snap.accepted += rollup.accepted;
+            snap.excluded += rollup.excluded;
+            snap.errors += rollup.errors;
+            snap.total_ws_bytes += rollup.total_ws_bytes;
+            snap.engine_calls.0 += rollup.engine_calls.0;
+            snap.engine_calls.1 += rollup.engine_calls.1;
+            ingest.merge(&rollup.ingest);
+            project.merge(&rollup.project);
+            snap.per_stream.extend(rollup.gauges);
+        }
+        snap.ingest_p50_us = ingest.percentile_ns(0.50) / 1e3;
+        snap.ingest_p99_us = ingest.percentile_ns(0.99) / 1e3;
+        snap.ingest_mean_us = ingest.mean_ns() / 1e3;
+        snap.ingest_count = ingest.count();
+        snap.project_mean_us = project.mean_ns() / 1e3;
+        snap.per_stream.sort_by(|a, b| a.stream.cmp(&b.stream));
+        Ok(snap)
+    }
+}
+
+/// Owner of the shard worker threads. Dropping (or calling
+/// [`ShardPool::shutdown`]) stops every worker and joins it; router
+/// clones held elsewhere then fail cleanly with "shard pool down".
+pub struct ShardPool {
+    router: StreamRouter,
+    joins: Vec<JoinHandle<()>>,
+}
+
+impl ShardPool {
+    /// Spawn `cfg.shards` worker threads (at least one), each with its
+    /// own bounded command queue and rotation engine.
+    pub fn spawn(cfg: PoolConfig) -> ShardPool {
+        let n = cfg.shards.max(1);
+        let mut txs = Vec::with_capacity(n);
+        let mut joins = Vec::with_capacity(n);
+        for shard in 0..n {
+            let (tx, rx) = sync_channel(cfg.queue.max(1));
+            let engine_cfg = cfg.engine.clone();
+            joins.push(std::thread::spawn(move || shard_worker(shard, engine_cfg, rx)));
+            txs.push(tx);
+        }
+        ShardPool { router: StreamRouter { shards: Arc::new(txs) }, joins }
+    }
+
+    /// Number of shards.
+    pub fn shards(&self) -> usize {
+        self.router.shards()
+    }
+
+    /// A cloneable routing handle (safe to share across producer
+    /// threads).
+    pub fn router(&self) -> StreamRouter {
+        self.router.clone()
+    }
+
+    /// Stop all workers and join them (open streams are dropped; close
+    /// streams first if their final stats matter).
+    pub fn shutdown(self) {
+        // Drop runs the shutdown/join sequence.
+    }
+}
+
+impl Drop for ShardPool {
+    fn drop(&mut self) {
+        for tx in self.router.shards.iter() {
+            let _ = tx.send(ShardCommand::Shutdown);
+        }
+        for join in self.joins.drain(..) {
+            let _ = join.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::yeast_like;
+
+    fn small_cfg() -> StreamConfig {
+        StreamConfig {
+            kernel: KernelConfig::Rbf { sigma: 1.0 },
+            mean_adjust: true,
+            seed_points: 5,
+            drift_every: 0,
+        }
+    }
+
+    #[test]
+    fn pinning_is_deterministic_and_spreads() {
+        let pool = ShardPool::spawn(PoolConfig { shards: 2, ..Default::default() });
+        let router = pool.router();
+        let mut hit = [false; 2];
+        for i in 0..16 {
+            let id = format!("stream-{i}");
+            let s = router.shard_of(&id);
+            assert_eq!(s, router.shard_of(&id), "pinning must be stable");
+            assert!(s < 2);
+            hit[s] = true;
+        }
+        assert!(hit[0] && hit[1], "16 ids should land on both shards");
+        pool.shutdown();
+    }
+
+    #[test]
+    fn open_twice_rejected_unknown_stream_errors() {
+        let pool = ShardPool::spawn(PoolConfig::default());
+        let router = pool.router();
+        router.open_stream("a", 3, small_cfg()).unwrap();
+        assert!(router.open_stream("a", 3, small_cfg()).is_err());
+        assert!(router.ingest("nope", vec![0.0; 3]).is_err());
+        assert!(router.snapshot("nope").is_err());
+        assert!(router.close_stream("nope").is_err());
+        pool.shutdown();
+    }
+
+    #[test]
+    fn single_stream_through_pool_matches_reference() {
+        let ds = yeast_like(24, 21);
+        let pool = ShardPool::spawn(PoolConfig { shards: 2, ..Default::default() });
+        let router = pool.router();
+        router.open_stream("s", ds.dim(), small_cfg()).unwrap();
+        for i in 0..ds.n() {
+            router.ingest("s", ds.x.row(i).to_vec()).unwrap();
+        }
+        let snap = router.snapshot("s").unwrap();
+        assert_eq!(snap.m, 24);
+        let d = router.measure_drift("s").unwrap();
+        assert!(d.norms.frobenius < 1e-7, "pool stream drift {:?}", d.norms);
+        let stats = router.close_stream("s").unwrap();
+        assert_eq!(stats.accepted, 24);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn pool_snapshot_rolls_up_across_shards() {
+        let ds = yeast_like(16, 22);
+        let pool = ShardPool::spawn(PoolConfig { shards: 2, ..Default::default() });
+        let router = pool.router();
+        for sid in ["alpha", "beta", "gamma"] {
+            router.open_stream(sid, ds.dim(), small_cfg()).unwrap();
+            for i in 0..ds.n() {
+                router.ingest(sid, ds.x.row(i).to_vec()).unwrap();
+            }
+        }
+        let snap = router.pool_snapshot().unwrap();
+        assert_eq!(snap.shards, 2);
+        assert_eq!(snap.streams, 3);
+        assert_eq!(snap.accepted, 3 * (16 - 5) as u64);
+        assert_eq!(snap.ingest_count, 3 * 16);
+        assert!(snap.total_ws_bytes > 0);
+        assert_eq!(snap.per_stream.len(), 3);
+        // Sorted by stream id, each attributed to its pinned shard.
+        assert_eq!(snap.per_stream[0].stream, "alpha");
+        for g in &snap.per_stream {
+            assert_eq!(g.shard, router.shard_of(&g.stream));
+            assert_eq!(g.m, 16);
+        }
+        pool.shutdown();
+    }
+}

@@ -20,12 +20,35 @@
 //!   * Algorithm 2 line 4 writes `K1/(m(m+1))²`; the derivation defines
 //!     `u = Kₘ𝟙ₘ/(m(m+1)) − a/(m+1) + ½C𝟙ₘ`.
 
+use std::sync::Arc;
+
 use crate::kernels::{kernel_column_into, Kernel};
 use crate::linalg::Mat;
 use crate::rankone::{
     expand_eigensystem_ws, rank_one_update_ws, EigenBasis, NativeRotate, Rotate, UpdateStats,
     UpdateWorkspace,
 };
+
+/// How a state holds its kernel: borrowed from the caller (library use,
+/// lifetimes managed by the embedder) or shared ownership (long-lived
+/// stream entries in the coordinator shard pool — each stream owns its
+/// kernel through the `Arc`, nothing is leaked and no `'static` bound
+/// plumbing is needed).
+#[derive(Clone)]
+enum KernelHandle<'k> {
+    Borrowed(&'k dyn Kernel),
+    Shared(Arc<dyn Kernel>),
+}
+
+impl<'k> KernelHandle<'k> {
+    #[inline]
+    fn get(&self) -> &dyn Kernel {
+        match self {
+            KernelHandle::Borrowed(k) => *k,
+            KernelHandle::Shared(k) => k.as_ref(),
+        }
+    }
+}
 
 /// Aggregated per-stream statistics (reported by §5.1 experiments and
 /// the coordinator metrics endpoint).
@@ -76,7 +99,7 @@ struct StepScratch {
 /// matrix itself is never stored (paper §3.1.2).
 #[derive(Clone)]
 pub struct IncrementalKpca<'k> {
-    kernel: &'k dyn Kernel,
+    kernel: KernelHandle<'k>,
     /// Whether to maintain the eigensystem of `K'` (Algorithm 2) rather
     /// than `K` (Algorithm 1).
     pub mean_adjust: bool,
@@ -118,6 +141,26 @@ impl<'k> IncrementalKpca<'k> {
         x0: &Mat,
         mean_adjust: bool,
     ) -> Result<Self, String> {
+        Self::from_handle(KernelHandle::Borrowed(kernel), x0, mean_adjust)
+    }
+
+    /// [`IncrementalKpca::from_batch`] with shared kernel ownership: the
+    /// state co-owns the kernel through the `Arc`, so it carries no
+    /// borrow and the result is `'static` (and `Send`) — the form the
+    /// coordinator's per-stream entries use.
+    pub fn from_batch_shared(
+        kernel: Arc<dyn Kernel>,
+        x0: &Mat,
+        mean_adjust: bool,
+    ) -> Result<IncrementalKpca<'static>, String> {
+        IncrementalKpca::from_handle(KernelHandle::Shared(kernel), x0, mean_adjust)
+    }
+
+    fn from_handle(
+        kernel: KernelHandle<'k>,
+        x0: &Mat,
+        mean_adjust: bool,
+    ) -> Result<Self, String> {
         let m = x0.rows();
         if mean_adjust && m < 2 {
             return Err("mean-adjusted incremental KPCA needs ≥ 2 seed points".into());
@@ -140,7 +183,7 @@ impl<'k> IncrementalKpca<'k> {
             scratch: StepScratch::default(),
         };
         if m > 0 {
-            let k = crate::kernels::gram(kernel, x0);
+            let k = crate::kernels::gram(state.kernel.get(), x0);
             let fit = super::batch::BatchKpca::fit_gram(k.clone(), mean_adjust)?;
             state.vals = fit.values;
             state.vecs = EigenBasis::from_mat(fit.vectors);
@@ -155,8 +198,16 @@ impl<'k> IncrementalKpca<'k> {
     }
 
     /// The kernel this state evaluates.
-    pub fn kernel_ref(&self) -> &'k dyn Kernel {
-        self.kernel
+    pub fn kernel_ref(&self) -> &dyn Kernel {
+        self.kernel.get()
+    }
+
+    /// The incrementally maintained centering sums: `Σₘ = 𝟙ᵀKₘ𝟙` and
+    /// the row sums `Kₘ𝟙` of the *unadjusted* kernel matrix. These are
+    /// what make mean-adjusted projection `O(m·r)` — no per-query Gram
+    /// recomputation (see [`IncrementalKpca::project`]).
+    pub fn centering_sums(&self) -> (f64, &[f64]) {
+        (self.s, &self.k1)
     }
 
     /// Number of examples currently in the eigensystem.
@@ -215,9 +266,9 @@ impl<'k> IncrementalKpca<'k> {
         // Kernel column a = [k(x₁,x) … k(xₘ,x)]ᵀ into reusable scratch —
         // no per-push clone of the retained data.
         let mut a = std::mem::take(&mut self.scratch.a);
-        kernel_column_into(self.kernel, &self.x, self.dim, self.m, xnew, &mut a);
+        kernel_column_into(self.kernel.get(), &self.x, self.dim, self.m, xnew, &mut a);
         self.scratch.a = a;
-        let knew = self.kernel.eval(xnew, xnew);
+        let knew = self.kernel.get().eval(xnew, xnew);
         if self.mean_adjust {
             self.push_adjusted(xnew, knew, engine)
         } else {
@@ -231,7 +282,7 @@ impl<'k> IncrementalKpca<'k> {
         if self.mean_adjust {
             return Err("mean-adjusted stream cannot cold-start from m=0".into());
         }
-        let knew = self.kernel.eval(xnew, xnew);
+        let knew = self.kernel.get().eval(xnew, xnew);
         self.x.extend_from_slice(xnew);
         self.m = 1;
         self.vals = vec![knew];
@@ -443,7 +494,7 @@ impl<'k> IncrementalKpca<'k> {
     /// reference; `O(m³)` — for experiments, not the hot path).
     pub fn batch_reference(&self) -> Mat {
         let xmat = self.data();
-        let k = crate::kernels::gram(self.kernel, &xmat);
+        let k = crate::kernels::gram(self.kernel.get(), &xmat);
         if self.mean_adjust {
             super::centering::center_gram(&k)
         } else {
@@ -625,6 +676,26 @@ mod tests {
             inc.hot_path_reallocs()
         );
         assert!(inc.hot_path_bytes() > 0);
+    }
+
+    #[test]
+    fn shared_kernel_state_is_owned_and_sendable() {
+        // `from_batch_shared` co-owns the kernel: no borrow, no leak —
+        // the whole state moves into another thread (what a shard
+        // worker's stream entry does) and stays exact.
+        let ds = yeast_like(14, 10);
+        let kernel: std::sync::Arc<dyn crate::kernels::Kernel> =
+            std::sync::Arc::new(Rbf { sigma: 1.0 });
+        let seed = ds.x.submatrix(4, ds.dim());
+        let mut inc = IncrementalKpca::from_batch_shared(kernel, &seed, true).unwrap();
+        let handle = std::thread::spawn(move || {
+            for i in 4..ds.n() {
+                inc.push(ds.x.row(i)).unwrap();
+            }
+            inc.reconstruct().max_abs_diff(&inc.batch_reference())
+        });
+        let drift = handle.join().unwrap();
+        assert!(drift < 1e-8, "drift {drift}");
     }
 
     #[test]

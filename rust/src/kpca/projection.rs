@@ -33,8 +33,14 @@ pub fn project_point<'v>(
         Some(k) => center_column(k, &ky),
         None => ky,
     };
-    // Top components are at the END of the ascending eigenvalue order.
+    score_top_r(vals, vecs, &col, r)
+}
+
+/// Scores of a (centered) kernel column on the top `r` components:
+/// `(uᵢᵀ col)/√λᵢ`, top components at the END of the ascending order.
+fn score_top_r(vals: &[f64], vecs: MatView<'_>, col: &[f64], r: usize) -> Vec<f64> {
     let n = vals.len();
+    let m = col.len();
     let r = r.min(n);
     let mut scores = Vec::with_capacity(r);
     for c in 0..r {
@@ -54,18 +60,40 @@ pub fn project_point<'v>(
 }
 
 impl<'k> IncrementalKpca<'k> {
-    /// Project a new point onto the current top-`r` components.
-    /// For mean-adjusted models this recomputes the uncentered Gram
-    /// (`O(m²)` kernel evaluations) — acceptable for scoring paths;
-    /// the coordinator caches it per snapshot.
-    pub fn project(&self, kernel: &dyn Kernel, y: &[f64], r: usize) -> Vec<f64> {
+    /// Project a new point onto the current top-`r` components in
+    /// `O(m·(d + r))`: the mean-adjusted centering reuses the
+    /// incrementally maintained sums `Σₘ`/`Kₘ𝟙` (`centering_sums`)
+    /// instead of recomputing the `O(m²)` uncentered Gram per query —
+    /// the centered column is `k_y − Kₘ𝟙/m − mean(k_y)·𝟙 + Σₘ/m²·𝟙`.
+    pub fn project(&self, y: &[f64], r: usize) -> Vec<f64> {
+        assert_eq!(y.len(), self.dim(), "project: query dimension mismatch");
+        let m = self.len();
+        let kernel = self.kernel_ref();
+        let mut col: Vec<f64> = (0..m).map(|i| kernel.eval(self.row(i), y)).collect();
+        if self.mean_adjust && m > 0 {
+            let (s, k1) = self.centering_sums();
+            let mf = m as f64;
+            let ky_mean = col.iter().sum::<f64>() / mf;
+            let total_mean = s / (mf * mf);
+            for (c, k1i) in col.iter_mut().zip(k1) {
+                *c += total_mean - k1i / mf - ky_mean;
+            }
+        }
+        score_top_r(&self.vals, self.vecs.view(), &col, r)
+    }
+
+    /// Reference scoring path: recompute the uncentered Gram and center
+    /// the query column against it (`O(m²)` kernel evaluations) — the
+    /// pre-cache behaviour, kept to validate [`IncrementalKpca::project`]
+    /// against (the two must agree to ~1e-12).
+    pub fn project_recomputed(&self, y: &[f64], r: usize) -> Vec<f64> {
         let x = self.data();
         let k = if self.mean_adjust {
-            Some(crate::kernels::gram(kernel, &x))
+            Some(crate::kernels::gram(self.kernel_ref(), &x))
         } else {
             None
         };
-        project_point(kernel, &x, &self.vals, &self.vecs, k.as_ref(), y, r)
+        project_point(self.kernel_ref(), &x, &self.vals, &self.vecs, k.as_ref(), y, r)
     }
 }
 
@@ -127,12 +155,42 @@ mod tests {
         let batch = BatchKpca::fit(&kern, &ds.x, true).unwrap();
         let k = gram(&kern, &ds.x);
         let probe = vec![0.4; ds.dim()];
-        let si = inc.project(&kern, &probe, 3);
+        let si = inc.project(&probe, 3);
         let sb =
             project_point(&kern, &ds.x, &batch.values, &batch.vectors, Some(&k), &probe, 3);
         for (a, b) in si.iter().zip(sb.iter()) {
             // Eigenvector sign is arbitrary — compare magnitudes.
             assert!((a.abs() - b.abs()).abs() < 1e-7, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn cached_centering_matches_recomputed_path() {
+        // The O(m·r) path (incrementally maintained Σₘ/Kₘ𝟙) must agree
+        // with the O(m²) recompute-the-Gram path to ≤1e-12, both
+        // adjusted and unadjusted, on seeded + streamed states.
+        for adjust in [true, false] {
+            let ds = yeast_like(22, 11);
+            let kern = Rbf { sigma: 1.3 };
+            let seed = ds.x.submatrix(6, ds.dim());
+            let mut inc =
+                crate::kpca::IncrementalKpca::from_batch(&kern, &seed, adjust).unwrap();
+            for i in 6..ds.n() {
+                inc.push(ds.x.row(i)).unwrap();
+            }
+            for probe_seed in 0..3 {
+                let probe: Vec<f64> =
+                    (0..ds.dim()).map(|j| 0.2 * ((j + probe_seed) as f64).sin()).collect();
+                let fast = inc.project(&probe, 5);
+                let slow = inc.project_recomputed(&probe, 5);
+                assert_eq!(fast.len(), slow.len());
+                for (a, b) in fast.iter().zip(slow.iter()) {
+                    assert!(
+                        (a - b).abs() < 1e-12,
+                        "adjust={adjust}: cached {a} vs recomputed {b}"
+                    );
+                }
+            }
         }
     }
 

@@ -6,18 +6,38 @@
 //!
 //! ## Layers
 //!
-//! - **Layer 3** ([`coordinator`]) — streaming orchestrator in Rust:
-//!   ingestion with backpressure, eigenstate management, engine routing,
-//!   drift monitoring, metrics (including hot-path allocation gauges).
+//! - **Layer 3** ([`coordinator`]) — a *sharded multi-stream* engine:
+//!   a [`coordinator::ShardPool`] of worker threads, each owning a map
+//!   of stream-id → per-stream state (incremental eigensystem + update
+//!   workspace + eigenbasis + drift monitor + metrics), fronted by a
+//!   stream-keyed [`coordinator::StreamRouter`] over per-shard bounded
+//!   channels. Streams are pinned to shards by an FNV-1a hash of the
+//!   stream id, so backpressure and queue contention are per shard;
+//!   each shard shares one rotation engine (and one PJRT runtime)
+//!   across its streams, and the pool rolls per-stream metrics up into
+//!   a [`coordinator::PoolSnapshot`]. The historical single-stream
+//!   [`coordinator::Coordinator`] survives as a thin wrapper over a
+//!   1-shard pool.
 //! - **Layer 2/1** — JAX model + Pallas kernels (build-time Python),
 //!   AOT-lowered to HLO text and executed from Rust via PJRT
 //!   ([`runtime`]; compiled under `--cfg pjrt_runtime`, with a clean
 //!   native fallback stub otherwise).
 //! - The paper's algorithms live in [`kpca`] (Algorithms 1 & 2),
 //!   [`rankone`]/[`secular`] (the Golub-73 / Bunch–Nielsen–Sorensen-78
-//!   rank-one eigen update) and [`nystrom`] (§4 incremental Nyström),
-//!   with baselines in [`baselines`] and all dense linear algebra built
-//!   from scratch in [`linalg`].
+//!   rank-one eigen update) and [`nystrom`] (§4 incremental Nyström —
+//!   both the eigen path and the Rudi-15 Cholesky baseline now grow by
+//!   amortized appends, never re-layouting per added point), with
+//!   baselines in [`baselines`] and all dense linear algebra built from
+//!   scratch in [`linalg`].
+//!
+//! ## Multi-stream ownership
+//!
+//! Per-stream state owns its kernel through an
+//! `Arc` ([`kpca::IncrementalKpca::from_batch_shared`]) — closing a
+//! stream frees everything it held; nothing is leaked per stream.
+//! Mean-adjusted projection reuses the incrementally maintained
+//! centering sums (`Σₘ`, `Kₘ𝟙`), making scoring `O(m·r)` per query
+//! with no Gram recomputation.
 //!
 //! ## The zero-allocation streaming hot path
 //!
@@ -51,10 +71,13 @@
 //! or W-form), [`kpca::IncrementalKpca`] (2 updates per example
 //! unadjusted, 4 adjusted — one shared workspace), the top-`r` trackers
 //! and [`baselines`], [`nystrom::IncrementalNystrom`] (whose cross-Gram
-//! appends rows in amortized `O(n)`), up to [`coordinator::server`]
-//! (one workspace per stream, gauges in [`coordinator::metrics`]).
-//! This is the substrate the multi-stream sharding work builds on (see
-//! ROADMAP).
+//! appends rows in amortized `O(n)`) and the packed
+//! [`linalg::PackedCholesky`] factor under
+//! [`nystrom::CholeskyNystrom`], up to [`coordinator::shard`] (one
+//! workspace per stream entry; per-stream gauges and pool rollups in
+//! [`coordinator::metrics`]). Because the steady state is
+//! allocation-free, N streams on one shard contend only on the shard's
+//! queue — which is what makes the shard pool scale.
 
 // The numeric kernels are written index-style on purpose (they mirror
 // the paper's equations and the blocked-GEMM literature); clippy's

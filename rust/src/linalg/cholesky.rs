@@ -1,8 +1,12 @@
 //! Cholesky factorization `A = L Lᵀ` with triangular solves and rank-one
-//! up/downdates. Substrate for the batch Nyström inverse and for the
-//! Rudi et al. (2015) incremental-Cholesky Nyström baseline (§4).
+//! up/downdates ([`Cholesky`], dense storage), plus a *packed*
+//! capacity-slack variant ([`PackedCholesky`]) whose bordered expansion
+//! is an amortized `Vec` append — the streaming form the incremental
+//! Nyström-Cholesky baseline grows one point at a time. Substrate for
+//! the batch Nyström inverse and for the Rudi et al. (2015)
+//! incremental-Cholesky Nyström baseline (§4).
 
-use super::matrix::Mat;
+use super::matrix::{dot, Mat};
 
 /// Lower-triangular Cholesky factor.
 #[derive(Clone, Debug)]
@@ -170,6 +174,113 @@ impl Cholesky {
     }
 }
 
+/// Lower-triangular Cholesky factor in packed row-major storage: row
+/// `i` holds its `i+1` entries at offset `i(i+1)/2`. The bordered
+/// expansion (`[A a; aᵀ α]`) appends one row to the backing `Vec` —
+/// amortized `O(n)` with capacity-doubling slack, where the dense
+/// [`Cholesky::expand`] re-layouts the whole `O(n²)` factor per added
+/// point. A realloc counter proves the amortization (mirroring
+/// `EigenBasis`/`UpdateWorkspace` on the eigen path).
+#[derive(Clone, Debug, Default)]
+pub struct PackedCholesky {
+    /// Packed rows, `n(n+1)/2` elements.
+    data: Vec<f64>,
+    n: usize,
+    /// Reusable forward-substitution scratch for `expand`.
+    scratch: Vec<f64>,
+    reallocs: u64,
+}
+
+impl PackedCholesky {
+    /// Empty factor of order 0 (grows via [`PackedCholesky::expand`]).
+    pub fn new() -> Self {
+        PackedCholesky::default()
+    }
+
+    pub fn order(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Buffer-growth events since construction (amortized `O(log n)`
+    /// over `n` expansions).
+    pub fn reallocs(&self) -> u64 {
+        self.reallocs
+    }
+
+    #[inline]
+    fn row(&self, i: usize) -> &[f64] {
+        let off = i * (i + 1) / 2;
+        &self.data[off..off + i + 1]
+    }
+
+    /// `L[i][j]` for `j ≤ i`.
+    pub fn at(&self, i: usize, j: usize) -> f64 {
+        debug_assert!(j <= i && i < self.n);
+        self.data[i * (i + 1) / 2 + j]
+    }
+
+    /// Solve `L y = b` by forward substitution into a caller-owned,
+    /// capacity-retaining buffer.
+    pub fn solve_lower_into(&self, b: &[f64], y: &mut Vec<f64>) {
+        assert_eq!(b.len(), self.n);
+        y.clear();
+        y.extend_from_slice(b);
+        for i in 0..self.n {
+            let row = self.row(i);
+            let mut s = y[i];
+            for k in 0..i {
+                s -= row[k] * y[k];
+            }
+            y[i] = s / row[i];
+        }
+    }
+
+    /// Allocating form of [`PackedCholesky::solve_lower_into`].
+    pub fn solve_lower(&self, b: &[f64]) -> Vec<f64> {
+        let mut y = Vec::new();
+        self.solve_lower_into(b, &mut y);
+        y
+    }
+
+    /// Expand the factor for `A` bordered by a new row/column
+    /// `[A a; aᵀ alpha]`. `O(n²)` flops for the solve but only an
+    /// amortized `O(n)` append to storage. Fails — without mutating the
+    /// factor — when the new pivot is non-positive.
+    pub fn expand(&mut self, a_col: &[f64], alpha: f64) -> Result<(), String> {
+        assert_eq!(a_col.len(), self.n);
+        let mut y = std::mem::take(&mut self.scratch);
+        self.solve_lower_into(a_col, &mut y);
+        let d = alpha - dot(&y, &y);
+        if d <= 0.0 {
+            self.scratch = y;
+            return Err("cholesky expand: new pivot non-positive".into());
+        }
+        let cap = self.data.capacity();
+        self.data.extend_from_slice(&y);
+        self.data.push(d.sqrt());
+        if self.data.capacity() != cap {
+            self.reallocs += 1;
+        }
+        self.n += 1;
+        self.scratch = y;
+        Ok(())
+    }
+
+    /// Dense copy of the factor (evaluation/diagnostic paths).
+    pub fn to_mat(&self) -> Mat {
+        let mut l = Mat::zeros(self.n, self.n);
+        for i in 0..self.n {
+            let off = i * (i + 1) / 2;
+            l.row_mut(i)[..i + 1].copy_from_slice(&self.data[off..off + i + 1]);
+        }
+        l
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -244,5 +355,52 @@ mod tests {
         let mut a = Mat::eye(3);
         a[(2, 2)] = -1.0;
         assert!(Cholesky::new(&a).is_err());
+    }
+
+    #[test]
+    fn packed_grown_factor_matches_dense() {
+        // Grow a packed factor point-by-point; it must equal the dense
+        // batch factor at every order, and solves must agree.
+        let a = spd(9, 31);
+        let mut packed = PackedCholesky::new();
+        for m in 0..9 {
+            let col: Vec<f64> = (0..m).map(|i| a[(i, m)]).collect();
+            packed.expand(&col, a[(m, m)]).unwrap();
+            let dense = Cholesky::new(&a.submatrix(m + 1, m + 1)).unwrap();
+            assert!(
+                packed.to_mat().max_abs_diff(dense.factor()) < 1e-11,
+                "factor mismatch at order {}",
+                m + 1
+            );
+        }
+        let b: Vec<f64> = (0..9).map(|i| (i as f64 * 0.7).sin()).collect();
+        let dense = Cholesky::new(&a).unwrap();
+        let yp = packed.solve_lower(&b);
+        let yd = dense.solve_lower(&b);
+        for (p, d) in yp.iter().zip(yd.iter()) {
+            assert!((p - d).abs() < 1e-11);
+        }
+    }
+
+    #[test]
+    fn packed_expand_is_amortized_and_fails_clean() {
+        let n = 64;
+        let a = spd(n, 7);
+        let mut packed = PackedCholesky::new();
+        for m in 0..n {
+            let col: Vec<f64> = (0..m).map(|i| a[(i, m)]).collect();
+            packed.expand(&col, a[(m, m)]).unwrap();
+        }
+        // Vec-doubling growth: far fewer reallocations than expansions.
+        assert!(packed.reallocs() < 16, "reallocs {}", packed.reallocs());
+        // A decisively non-positive pivot (repeat of the last column
+        // with a deflated diagonal) must fail without corrupting the
+        // factor.
+        let col: Vec<f64> = (0..n).map(|i| a[(i, n - 1)]).collect();
+        let alpha = a[(n - 1, n - 1)] - 1.0;
+        assert!(packed.expand(&col, alpha).is_err());
+        assert_eq!(packed.order(), n);
+        let dense = Cholesky::new(&a).unwrap();
+        assert!(packed.to_mat().max_abs_diff(dense.factor()) < 1e-10);
     }
 }

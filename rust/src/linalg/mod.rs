@@ -14,7 +14,7 @@ pub mod norms;
 pub mod tridiag;
 pub mod view;
 
-pub use cholesky::Cholesky;
+pub use cholesky::{Cholesky, PackedCholesky};
 pub use eigh::{eigh, eigvalsh, Eigh};
 pub use gemm::{
     gemv, gemv_into, gemv_t, gemv_t_into, matmul, matmul_into, matmul_nt, matmul_nt_into,

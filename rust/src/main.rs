@@ -9,9 +9,12 @@
 //!
 //! `serve` options: --dataset magic|yeast  --n <pts>  --engine native|pjrt
 //!                  --no-adjust  --drift-every <k>  --seed-points <k>
+//!                  --shards <k>  --streams <k>   (multi-stream pool mode)
 
-use inkpca::coordinator::{Config, Coordinator, EngineConfig, EnginePolicy, KernelConfig};
-use inkpca::data::{load, SliceSource};
+use inkpca::coordinator::{
+    Config, Coordinator, EngineConfig, EnginePolicy, KernelConfig, ShardPool,
+};
+use inkpca::data::{load, Dataset, SliceSource};
 use inkpca::experiments::{self, RunMode};
 
 fn main() {
@@ -98,6 +101,13 @@ fn serve(args: &[String]) -> Result<(), String> {
     let mut ds = load(&dataset, n, 42)?;
     ds.standardize();
     let dim = ds.dim();
+    let shards: usize =
+        flag_value(args, "--shards").and_then(|v| v.parse().ok()).unwrap_or(1);
+    let streams: usize =
+        flag_value(args, "--streams").and_then(|v| v.parse().ok()).unwrap_or(1);
+    if shards > 1 || streams > 1 {
+        return serve_pool(cfg, ds, shards.max(1), streams.max(1));
+    }
     println!("serving {} points of {dataset} (dim {dim})…", ds.n());
     let coord = Coordinator::spawn(cfg, dim);
     let mut src = SliceSource::new(ds);
@@ -118,6 +128,60 @@ fn serve(args: &[String]) -> Result<(), String> {
     println!("engine calls (native, pjrt): {:?}", snap.engine_calls);
     println!("{metrics}");
     coord.shutdown();
+    Ok(())
+}
+
+/// Multi-stream mode: split the feed round-robin over `streams`
+/// concurrent streams on a `shards`-shard pool, one producer thread per
+/// stream, then print the pool rollup and per-stream gauges.
+fn serve_pool(cfg: Config, ds: Dataset, shards: usize, streams: usize) -> Result<(), String> {
+    let dim = ds.dim();
+    let (mut pool_cfg, stream_cfg) = cfg.split();
+    pool_cfg.shards = shards;
+    if ds.n() / streams <= stream_cfg.seed_points {
+        return Err(format!(
+            "{} points over {streams} streams leaves ≤ {} per stream — not enough to seed",
+            ds.n(),
+            stream_cfg.seed_points
+        ));
+    }
+    println!(
+        "serving {} points of {} over {streams} streams on {shards} shards…",
+        ds.n(),
+        ds.name
+    );
+    let pool = ShardPool::spawn(pool_cfg);
+    let router = pool.router();
+    std::thread::scope(|scope| {
+        for s in 0..streams {
+            let r = router.clone();
+            let ds = &ds;
+            let scfg = stream_cfg.clone();
+            scope.spawn(move || {
+                let id = format!("stream-{s}");
+                r.open_stream(&id, dim, scfg).expect("open stream");
+                let mut i = s;
+                while i < ds.n() {
+                    r.ingest(&id, ds.x.row(i).to_vec()).expect("ingest");
+                    i += streams;
+                }
+            });
+        }
+    });
+    let snap = router.pool_snapshot()?;
+    println!("{snap}");
+    for g in &snap.per_stream {
+        println!(
+            "  {} @ shard {}: m={} ws={}B reallocs/update={:.4} drift={}",
+            g.stream,
+            g.shard,
+            g.m,
+            g.ws_bytes_resident,
+            g.reallocs_per_update,
+            g.drift_frobenius.map(|d| format!("{d:.3e}")).unwrap_or_else(|| "–".into())
+        );
+    }
+    pool.shutdown();
     Ok(())
 }
 

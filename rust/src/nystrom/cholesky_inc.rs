@@ -4,23 +4,37 @@
 //! computes `K̃ = (L⁻¹K_{m,n})ᵀ(L⁻¹K_{m,n})` by triangular solves,
 //! without ever forming an eigendecomposition. Serves as the comparison
 //! baseline for the ablation bench (which decomposition to update).
+//!
+//! Streaming layout (mirroring `nystrom::incremental`): the factor
+//! lives in a [`PackedCholesky`] (capacity-slack triangular store whose
+//! bordered expansion is an amortized `Vec` append), the cross-Gram is
+//! stored *transposed* (`kmn`, `m × n`) so adding a subset point is one
+//! amortized-`O(n)` [`Mat::push_row`], and the subset's own rows are
+//! kept flat so the per-add kernel column needs no subset-matrix
+//! rebuild. Nothing re-layouts per added point.
 
-use crate::kernels::{kernel_column, Kernel};
-use crate::linalg::{Cholesky, Mat, Norms};
+use crate::kernels::{kernel_column_into, Kernel};
+use crate::linalg::{transpose_into, Mat, Norms, PackedCholesky};
 
 /// Incrementally grown Cholesky-based Nyström approximation.
 pub struct CholeskyNystrom<'k> {
     kernel: &'k dyn Kernel,
     x: Mat,
-    /// Cholesky factor of the subset Gram (plus jitter).
-    chol: Option<Cholesky>,
-    /// `n × m` cross-Gram.
-    pub knm: Mat,
+    /// Packed Cholesky factor of the subset Gram (plus jitter).
+    chol: PackedCholesky,
+    /// `m × n` *transposed* cross-Gram `K_{m,n}`: row `c` holds
+    /// `k(x_{s_c}, x_j)` for all `j` — appended per subset point.
+    pub kmn: Mat,
     pub subset: Vec<usize>,
+    /// Flat row-major copy of the subset's points (`m × dim`),
+    /// appended per accepted point.
+    sub_x: Vec<f64>,
     /// Diagonal jitter guaranteeing positive-definite expansion.
     pub jitter: f64,
     /// Points rejected because expansion lost positive definiteness.
     pub rejected: usize,
+    /// Reusable kernel-column buffer for the appends.
+    col_buf: Vec<f64>,
 }
 
 impl<'k> CholeskyNystrom<'k> {
@@ -29,11 +43,13 @@ impl<'k> CholeskyNystrom<'k> {
         CholeskyNystrom {
             kernel,
             x,
-            chol: None,
-            knm: Mat::zeros(n, 0),
+            chol: PackedCholesky::new(),
+            kmn: Mat::zeros(0, n),
             subset: Vec::new(),
+            sub_x: Vec::new(),
             jitter: 1e-10,
             rejected: 0,
+            col_buf: Vec::new(),
         }
     }
 
@@ -45,41 +61,45 @@ impl<'k> CholeskyNystrom<'k> {
         self.subset.len()
     }
 
+    /// The factor of the (jittered) subset Gram.
+    pub fn factor(&self) -> &PackedCholesky {
+        &self.chol
+    }
+
+    /// The `n × m` cross-Gram `K_{n,m}` (transposed copy — evaluation
+    /// paths only; the stream maintains the `m × n` layout).
+    pub fn knm(&self) -> Mat {
+        let mut out = Mat::zeros(self.kmn.cols(), self.kmn.rows());
+        let mut v = out.view_mut();
+        transpose_into(self.kmn.view(), &mut v);
+        out
+    }
+
     /// Add evaluation point `idx` to the subset. Returns `false` when
     /// the bordered Cholesky expansion fails (rank-degenerate point).
+    /// Amortized `O(n + m·dim)` storage traffic — no re-layout of the
+    /// factor or the cross-Gram.
     pub fn add_point(&mut self, idx: usize) -> Result<bool, String> {
-        let xi = self.x.row(idx).to_vec();
-        let m = self.m();
-        // Kernel column against the current subset + self-similarity.
-        let sub = Mat::from_fn(m, self.x.cols(), |i, j| self.x[(self.subset[i], j)]);
-        let col: Vec<f64> = (0..m).map(|i| self.kernel.eval(sub.row(i), &xi)).collect();
-        let kself = self.kernel.eval(&xi, &xi) + self.jitter;
-        match self.chol.as_mut() {
-            None => {
-                if kself <= 0.0 {
-                    self.rejected += 1;
-                    return Ok(false);
-                }
-                self.chol = Some(Cholesky::new(&Mat::from_vec(1, 1, vec![kself]))?);
-            }
-            Some(ch) => {
-                if ch.expand(&col, kself).is_err() {
-                    self.rejected += 1;
-                    return Ok(false);
-                }
-            }
+        assert!(idx < self.x.rows(), "subset index out of range");
+        let dim = self.x.cols();
+        let m = self.subset.len();
+        let xi = self.x.row(idx);
+        // Kernel column against the current subset (flat rows — no
+        // subset-matrix rebuild) + jittered self-similarity.
+        let mut col = std::mem::take(&mut self.col_buf);
+        kernel_column_into(self.kernel, &self.sub_x, dim, m, xi, &mut col);
+        let kself = self.kernel.eval(xi, xi) + self.jitter;
+        if self.chol.expand(&col, kself).is_err() {
+            self.rejected += 1;
+            self.col_buf = col;
+            return Ok(false);
         }
-        // Append the K_{n,m} column.
-        let full_col = kernel_column(self.kernel, &self.x, self.n(), &xi);
-        let n = self.n();
-        let mut grown = Mat::zeros(n, m + 1);
-        for i in 0..n {
-            for j in 0..m {
-                grown[(i, j)] = self.knm[(i, j)];
-            }
-            grown[(i, m)] = full_col[i];
-        }
-        self.knm = grown;
+        // Append the K_{m,n} row k(x_idx, x_j) for all j.
+        let n = self.x.rows();
+        kernel_column_into(self.kernel, self.x.as_slice(), dim, n, xi, &mut col);
+        self.kmn.push_row(&col);
+        self.col_buf = col;
+        self.sub_x.extend_from_slice(xi);
         self.subset.push(idx);
         Ok(true)
     }
@@ -92,13 +112,16 @@ impl<'k> CholeskyNystrom<'k> {
         if m == 0 {
             return Mat::zeros(n, n);
         }
-        let ch = self.chol.as_ref().unwrap();
-        // Solve L b = K_{m,n} column-wise (columns of K_{m,n} are rows
-        // of knm).
+        // Solve L b = K_{m,n} column-wise (columns of K_{m,n} are the
+        // stored kmn columns).
         let mut b = Mat::zeros(m, n);
+        let mut rhs = vec![0.0; m];
+        let mut y = Vec::with_capacity(m);
         for j in 0..n {
-            let rhs: Vec<f64> = (0..m).map(|i| self.knm[(j, i)]).collect();
-            let y = ch.solve_lower(&rhs);
+            for i in 0..m {
+                rhs[i] = self.kmn[(i, j)];
+            }
+            self.chol.solve_lower_into(&rhs, &mut y);
             for i in 0..m {
                 b[(i, j)] = y[i];
             }
@@ -143,6 +166,11 @@ mod tests {
         assert!(!chol.add_point(3).unwrap());
         assert_eq!(chol.rejected, 1);
         assert_eq!(chol.m(), 1);
+        // The failed expansion left the factor and cross-Gram intact.
+        assert_eq!(chol.factor().order(), 1);
+        assert_eq!(chol.kmn.rows(), 1);
+        assert!(chol.add_point(4).unwrap());
+        assert_eq!(chol.m(), 2);
     }
 
     #[test]
@@ -154,5 +182,34 @@ mod tests {
         let k = gram(&kern, &ds.x);
         let norms = chol.error_norms(&k);
         assert!((norms.frobenius - crate::linalg::frobenius(&k)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn transposed_layout_and_amortized_growth() {
+        // The cross-Gram is kept m × n and appended per point; the
+        // packed factor grows by Vec append — reallocations stay far
+        // below the number of added points.
+        let ds = yeast_like(40, 4);
+        let kern = Rbf { sigma: 1.0 };
+        let k_full = gram(&kern, &ds.x);
+        let mut chol = CholeskyNystrom::new(&kern, ds.x.clone());
+        for m in 0..32 {
+            assert!(chol.add_point(m).unwrap());
+        }
+        assert_eq!(chol.kmn.rows(), 32);
+        assert_eq!(chol.kmn.cols(), 40);
+        assert!(chol.factor().reallocs() < 12, "reallocs {}", chol.factor().reallocs());
+        // kmn rows are true kernel columns.
+        for c in [0usize, 13, 31] {
+            for j in 0..40 {
+                let expect = k_full[(chol.subset[c], j)];
+                assert!((chol.kmn[(c, j)] - expect).abs() < 1e-12);
+            }
+        }
+        // knm() is the batch-layout transpose.
+        let knm = chol.knm();
+        assert_eq!(knm.rows(), 40);
+        assert_eq!(knm.cols(), 32);
+        assert!((knm[(7, 3)] - chol.kmn[(3, 7)]).abs() == 0.0);
     }
 }

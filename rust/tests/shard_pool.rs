@@ -1,0 +1,234 @@
+//! Shard-pool integration tests: concurrent multi-stream ingest with
+//! stream isolation (every stream's eigensystem must match its
+//! single-stream reference run), per-stream metrics attribution, the
+//! steady-state allocation gauge, and clean close/shutdown semantics.
+
+use inkpca::coordinator::{
+    EngineConfig, KernelConfig, PoolConfig, RoutedEngine, ShardPool, StreamConfig,
+};
+use inkpca::data::synthetic::yeast_like;
+use inkpca::data::Dataset;
+use inkpca::kernels::Rbf;
+use inkpca::kpca::IncrementalKpca;
+
+fn stream_cfg(sigma: f64, seed_points: usize) -> StreamConfig {
+    StreamConfig {
+        kernel: KernelConfig::Rbf { sigma },
+        mean_adjust: true,
+        seed_points,
+        drift_every: 0,
+    }
+}
+
+fn pool_cfg(shards: usize) -> PoolConfig {
+    PoolConfig { shards, queue: 8, engine: EngineConfig::Native }
+}
+
+/// Reference: the same stream driven directly, single-threaded, through
+/// the identical engine type the shard workers use.
+fn reference_run(ds: &Dataset, sigma: f64, seed_points: usize) -> IncrementalKpca<'static> {
+    let kernel: std::sync::Arc<dyn inkpca::kernels::Kernel> =
+        std::sync::Arc::new(Rbf { sigma });
+    let seed = ds.x.submatrix(seed_points, ds.dim());
+    let engine = RoutedEngine::native_only();
+    let mut inc = IncrementalKpca::from_batch_shared(kernel, &seed, true).unwrap();
+    for i in seed_points..ds.n() {
+        inc.push_with(ds.x.row(i), &engine).unwrap();
+    }
+    inc
+}
+
+#[test]
+fn concurrent_streams_across_shards_stay_isolated() {
+    const STREAMS: usize = 4;
+    const N: usize = 26;
+    const SEED_POINTS: usize = 6;
+    let datasets: Vec<Dataset> = (0..STREAMS)
+        .map(|s| {
+            let mut ds = yeast_like(N, 700 + s as u64);
+            ds.standardize();
+            ds
+        })
+        .collect();
+    let sigmas: Vec<f64> = (0..STREAMS).map(|s| 1.0 + 0.4 * s as f64).collect();
+
+    let pool = ShardPool::spawn(pool_cfg(2));
+    let router = pool.router();
+    // One producer thread per stream, all ingesting interleaved.
+    std::thread::scope(|scope| {
+        for si in 0..STREAMS {
+            let r = router.clone();
+            let ds = &datasets[si];
+            let sigma = sigmas[si];
+            scope.spawn(move || {
+                let id = format!("stream-{si}");
+                r.open_stream(&id, ds.dim(), stream_cfg(sigma, SEED_POINTS)).unwrap();
+                for i in 0..ds.n() {
+                    let reply = r.ingest(&id, ds.x.row(i).to_vec()).unwrap();
+                    assert!(reply.accepted);
+                }
+            });
+        }
+    });
+
+    // Both shards must actually own streams (4 ids, 2 shards).
+    let owned: std::collections::HashSet<usize> =
+        (0..STREAMS).map(|si| router.shard_of(&format!("stream-{si}"))).collect();
+    assert_eq!(owned.len(), 2, "4 streams should spread over both shards");
+
+    // Every stream's final eigensystem matches its isolated reference.
+    for si in 0..STREAMS {
+        let id = format!("stream-{si}");
+        let reference = reference_run(&datasets[si], sigmas[si], SEED_POINTS);
+        let snap = router.snapshot(&id).unwrap();
+        assert_eq!(snap.m, N, "{id}");
+        let top_ref: Vec<f64> = reference.vals.iter().rev().take(10).copied().collect();
+        assert_eq!(snap.top_values.len(), top_ref.len());
+        for (got, want) in snap.top_values.iter().zip(&top_ref) {
+            assert!(
+                (got - want).abs() <= 1e-10,
+                "{id}: eigenvalue {got} vs reference {want}"
+            );
+        }
+        // Projections (which exercise eigenvectors + centering sums)
+        // agree too — magnitudes, since eigenvector sign is arbitrary.
+        let probe = vec![0.25; datasets[si].dim()];
+        let got = router.project(&id, probe.clone(), 4).unwrap();
+        let want = reference.project(&probe, 4);
+        for (g, w) in got.iter().zip(&want) {
+            assert!(
+                (g.abs() - w.abs()).abs() <= 1e-10,
+                "{id}: projection {g} vs reference {w}"
+            );
+        }
+        // And the tracked eigensystem is still exact wrt batch.
+        let drift = router.measure_drift(&id).unwrap();
+        assert!(drift.norms.frobenius < 1e-7, "{id}: drift {:?}", drift.norms);
+    }
+    pool.shutdown();
+}
+
+#[test]
+fn per_stream_metrics_attribution_and_allocation_gauge() {
+    let mut big = yeast_like(40, 801);
+    big.standardize();
+    let mut small = yeast_like(18, 802);
+    small.standardize();
+
+    let pool = ShardPool::spawn(pool_cfg(2));
+    let router = pool.router();
+    router.open_stream("big", big.dim(), stream_cfg(1.5, 5)).unwrap();
+    router.open_stream("small", small.dim(), stream_cfg(1.5, 5)).unwrap();
+    for i in 0..big.n() {
+        router.ingest("big", big.x.row(i).to_vec()).unwrap();
+    }
+    for i in 0..small.n() {
+        router.ingest("small", small.x.row(i).to_vec()).unwrap();
+    }
+    // One dimension-mismatch error attributed to `small` only.
+    assert!(router.ingest("small", vec![0.0; small.dim() + 1]).is_err());
+
+    let mb = router.metrics("big").unwrap();
+    let ms = router.metrics("small").unwrap();
+    assert_eq!(mb.accepted, (40 - 5) as u64);
+    assert_eq!(ms.accepted, (18 - 5) as u64);
+    assert_eq!(mb.errors, 0);
+    assert_eq!(ms.errors, 1);
+    // The acceptance gauge: steady-state per-stream ingest stays
+    // allocation-free — growth events per update pinned below 1.
+    assert!(mb.reallocs_per_update < 1.0, "big: {mb}");
+    assert!(ms.reallocs_per_update < 1.0, "small: {ms}");
+    assert!(mb.ws_bytes_resident > ms.ws_bytes_resident, "bigger stream, more resident");
+
+    // Pool rollup sums the counters and attributes gauges per stream.
+    let snap = router.pool_snapshot().unwrap();
+    assert_eq!(snap.streams, 2);
+    assert_eq!(snap.accepted, mb.accepted + ms.accepted);
+    assert_eq!(snap.errors, 1);
+    assert_eq!(snap.total_ws_bytes, mb.ws_bytes_resident + ms.ws_bytes_resident);
+    assert_eq!(snap.ingest_count, (40 + 18 + 1) as u64);
+    assert_eq!(snap.per_stream.len(), 2);
+    let gb = snap.per_stream.iter().find(|g| g.stream == "big").unwrap();
+    let gs = snap.per_stream.iter().find(|g| g.stream == "small").unwrap();
+    assert_eq!(gb.m, 40);
+    assert_eq!(gs.m, 18);
+    assert!(gb.reallocs_per_update < 1.0 && gs.reallocs_per_update < 1.0);
+    assert_eq!(gb.shard, router.shard_of("big"));
+    assert_eq!(gs.shard, router.shard_of("small"));
+    pool.shutdown();
+}
+
+#[test]
+fn close_stream_frees_state_and_returns_stats() {
+    let ds = yeast_like(20, 803);
+    let pool = ShardPool::spawn(pool_cfg(2));
+    let router = pool.router();
+    for id in ["a", "b", "c"] {
+        router.open_stream(id, ds.dim(), stream_cfg(1.0, 5)).unwrap();
+        for i in 0..ds.n() {
+            router.ingest(id, ds.x.row(i).to_vec()).unwrap();
+        }
+    }
+    let stats = router.close_stream("b").unwrap();
+    assert_eq!(stats.accepted, 20);
+    // Closed stream is gone; the others keep serving.
+    assert!(router.ingest("b", ds.x.row(0).to_vec()).is_err());
+    assert!(router.snapshot("b").is_err());
+    assert_eq!(router.snapshot("a").unwrap().m, 20);
+    assert!(router.project("c", vec![0.1; ds.dim()], 2).is_ok());
+    let snap = router.pool_snapshot().unwrap();
+    assert_eq!(snap.streams, 2);
+    // Pool counters are monotonic under churn: the closed stream's
+    // accepts/latency stay in the lifetime totals.
+    assert_eq!(snap.accepted, 3 * (20 - 5) as u64);
+    assert_eq!(snap.ingest_count, 3 * 20);
+    // The id can be reopened fresh after close.
+    router.open_stream("b", ds.dim(), stream_cfg(1.0, 5)).unwrap();
+    assert_eq!(router.snapshot("b").unwrap().m, 0);
+    pool.shutdown();
+}
+
+#[test]
+fn drop_with_open_streams_does_not_hang() {
+    let ds = yeast_like(12, 804);
+    let pool = ShardPool::spawn(pool_cfg(4));
+    let router = pool.router();
+    for si in 0..6 {
+        let id = format!("s{si}");
+        router.open_stream(&id, ds.dim(), stream_cfg(1.0, 4)).unwrap();
+        for i in 0..ds.n() {
+            router.ingest(&id, ds.x.row(i).to_vec()).unwrap();
+        }
+    }
+    drop(pool); // joins all 4 workers with streams still open
+    // Surviving router clones fail cleanly instead of hanging.
+    assert!(router.ingest("s0", ds.x.row(0).to_vec()).is_err());
+    assert!(router.pool_snapshot().is_err());
+}
+
+#[test]
+fn concurrent_producers_on_one_stream_keep_m_consistent() {
+    // Multiple producers feeding the SAME stream serialize through its
+    // pinned shard: every reply carries a consistent, growing m.
+    let mut ds = yeast_like(48, 805);
+    ds.standardize();
+    let pool = ShardPool::spawn(pool_cfg(2));
+    let router = pool.router();
+    router.open_stream("shared", ds.dim(), stream_cfg(2.0, 4)).unwrap();
+    std::thread::scope(|scope| {
+        for half in 0..2 {
+            let r = router.clone();
+            let ds = &ds;
+            scope.spawn(move || {
+                for i in (half..ds.n()).step_by(2) {
+                    r.ingest("shared", ds.x.row(i).to_vec()).unwrap();
+                }
+            });
+        }
+    });
+    let snap = router.snapshot("shared").unwrap();
+    assert_eq!(snap.m, 48);
+    let drift = router.measure_drift("shared").unwrap();
+    assert!(drift.norms.frobenius < 1e-6);
+    pool.shutdown();
+}
