@@ -1,69 +1,163 @@
-//! Shard-pool scaling bench: aggregate ingest throughput of a fixed
-//! multi-stream workload (one producer thread per stream) as the shard
-//! count grows 1 → 2 → 4. Streams are pinned by id hash, so with more
-//! shards the same producers contend on fewer shared queues and the
-//! per-shard update loops run on separate cores. Emits
-//! `BENCH_shards.json` for the perf trajectory.
+//! Shard-pool scaling + batched-ingest benches.
+//!
+//! Series 1 (`shards/ingest_4streams/shardsK`): aggregate ingest
+//! throughput of a fixed multi-stream workload (one producer thread per
+//! stream) as the shard count grows 1 → 2 → 4 — unchanged from PR 2.
+//!
+//! Series 2 (`shards/ingest_4streams_batchB/shards2`): the same
+//! 2-shard/4-stream topology at ingest batch sizes 1 / 8 / 64. Batch 1
+//! pays one rendezvous round-trip (two thread wake-ups), one command
+//! allocation and one m-long scalar kernel loop *per point*; batch 64
+//! amortizes the round-trip over the batch and computes the batch's
+//! kernel rows as one blocked GEMM. The workload uses short unadjusted
+//! streams (the paper's Algorithm 1 regime where each rank-one update
+//! is cheap), so the per-point overhead is a first-order cost — exactly
+//! the regime the batched front-end targets. The acceptance bar is
+//! ≥2× aggregate throughput at batch 64 vs batch 1.
+//!
+//! Series 3 (`shards/ingest_4streams_async/shards2`): fire-and-forget
+//! ingest + final sync on the same workload — the reply-less middle
+//! ground (round-trip removed, command-per-point kept).
+//!
+//! Emits `BENCH_e2e_shards.json` for the perf trajectory and the CI
+//! regression gate.
 
-use inkpca::coordinator::{EngineConfig, KernelConfig, PoolConfig, ShardPool, StreamConfig};
+use inkpca::coordinator::{
+    EngineConfig, KernelConfig, PoolConfig, ShardPool, StreamConfig, StreamRouter,
+};
 use inkpca::data::{load, Dataset};
 use inkpca::util::bench::Bench;
+
+fn scaling_cfg() -> StreamConfig {
+    StreamConfig {
+        kernel: KernelConfig::Rbf { sigma: 2.0 },
+        mean_adjust: true,
+        seed_points: 10,
+        drift_every: 0,
+    }
+}
+
+/// Short unadjusted streams: rank-one updates stay cheap, so the
+/// per-point ingest overhead (round-trip, allocation, scalar kernel
+/// loop) is what the series measures.
+fn batch_cfg() -> StreamConfig {
+    StreamConfig {
+        kernel: KernelConfig::Rbf { sigma: 2.0 },
+        mean_adjust: false,
+        seed_points: 4,
+        drift_every: 0,
+    }
+}
+
+fn spawn_pool(shards: usize) -> (ShardPool, StreamRouter) {
+    let pool = ShardPool::spawn(PoolConfig { shards, queue: 64, engine: EngineConfig::Native });
+    let router = pool.router();
+    (pool, router)
+}
+
+/// Drive `datasets.len()` producer threads, one stream each, shipping
+/// points in `batch`-sized `ingest_many` commands (plain `ingest` at
+/// batch 1); returns the pool's accepted total.
+fn run_batched(datasets: &[Dataset], cfg: &StreamConfig, shards: usize, batch: usize) -> u64 {
+    let (pool, router) = spawn_pool(shards);
+    std::thread::scope(|scope| {
+        for (si, ds) in datasets.iter().enumerate() {
+            let r = router.clone();
+            let cfg = cfg.clone();
+            scope.spawn(move || {
+                let id = format!("stream-{si}");
+                let h = r.open_stream(&id, ds.dim(), cfg).unwrap();
+                if batch <= 1 {
+                    // Deliberately the per-point rendezvous verb — the
+                    // baseline the batch ladder is measured against.
+                    for i in 0..ds.n() {
+                        r.ingest(&h, ds.x.row(i).to_vec()).unwrap();
+                    }
+                } else {
+                    r.ingest_all(&h, ds.x.as_slice(), ds.dim(), batch).unwrap();
+                }
+            });
+        }
+    });
+    let snap = router.pool_snapshot().unwrap();
+    pool.shutdown();
+    snap.accepted
+}
+
+/// Fire-and-forget variant: every point is a reply-less command; one
+/// sync per stream at the end drains deferred errors.
+fn run_async(datasets: &[Dataset], cfg: &StreamConfig, shards: usize) -> u64 {
+    let (pool, router) = spawn_pool(shards);
+    std::thread::scope(|scope| {
+        for (si, ds) in datasets.iter().enumerate() {
+            let r = router.clone();
+            let cfg = cfg.clone();
+            scope.spawn(move || {
+                let id = format!("stream-{si}");
+                let h = r.open_stream(&id, ds.dim(), cfg).unwrap();
+                for i in 0..ds.n() {
+                    r.ingest_async(&h, ds.x.row(i).to_vec()).unwrap();
+                }
+                assert_eq!(r.sync(&h).unwrap(), 0);
+            });
+        }
+    });
+    let snap = router.pool_snapshot().unwrap();
+    pool.shutdown();
+    snap.accepted
+}
 
 fn main() {
     let mut b = Bench::new();
     let fast = std::env::var("INKPCA_BENCH_FAST").is_ok();
-    let n_per_stream = if fast { 60 } else { 160 };
     let n_streams = 4usize;
 
-    // One dataset per stream (distinct seeds — independent eigensystems).
-    let datasets: Vec<Dataset> = (0..n_streams)
+    // Series 1: shard scaling on the PR 2 workload (batch 1).
+    let n_scaling = if fast { 60 } else { 160 };
+    let scaling_sets: Vec<Dataset> = (0..n_streams)
         .map(|s| {
-            let mut ds = load("yeast", n_per_stream, 100 + s as u64).unwrap();
+            let mut ds = load("yeast", n_scaling, 100 + s as u64).unwrap();
             ds.standardize();
             ds
         })
         .collect();
-
     for shards in [1usize, 2, 4] {
         b.case(&format!("shards/ingest_4streams/shards{shards}"), || {
-            let pool = ShardPool::spawn(PoolConfig {
-                shards,
-                queue: 64,
-                engine: EngineConfig::Native,
-            });
-            let router = pool.router();
-            std::thread::scope(|scope| {
-                for (si, ds) in datasets.iter().enumerate() {
-                    let r = router.clone();
-                    scope.spawn(move || {
-                        let id = format!("stream-{si}");
-                        r.open_stream(
-                            &id,
-                            ds.dim(),
-                            StreamConfig {
-                                kernel: KernelConfig::Rbf { sigma: 2.0 },
-                                mean_adjust: true,
-                                seed_points: 10,
-                                drift_every: 0,
-                            },
-                        )
-                        .unwrap();
-                        for i in 0..ds.n() {
-                            r.ingest(&id, ds.x.row(i).to_vec()).unwrap();
-                        }
-                    });
-                }
-            });
-            let snap = router.pool_snapshot().unwrap();
-            pool.shutdown();
-            snap.accepted
+            run_batched(&scaling_sets, &scaling_cfg(), shards, 1)
         });
     }
 
+    // Series 2: batch-size ladder on the 2-shard/4-stream topology.
+    // Short streams (update math cheap) — the per-point overhead the
+    // batch amortizes is the dominant cost at batch 1.
+    let n_batchwl = if fast { 24 } else { 32 };
+    let batch_sets: Vec<Dataset> = (0..n_streams)
+        .map(|s| {
+            let mut ds = load("yeast", n_batchwl, 200 + s as u64).unwrap();
+            ds.standardize();
+            ds
+        })
+        .collect();
+    // Post-seed accepts only — the seeding buffer copies are not
+    // counted by the per-stream metrics.
+    let expected: u64 = (n_streams * (n_batchwl - 4)) as u64;
+    for batch in [1usize, 8, 64] {
+        b.case(&format!("shards/ingest_4streams_batch{batch}/shards2"), || {
+            run_batched(&batch_sets, &batch_cfg(), 2, batch)
+        });
+        // Correctness guard: every post-seed point of every stream lands.
+        assert_eq!(run_batched(&batch_sets, &batch_cfg(), 2, batch), expected);
+    }
+
+    // Series 3: fire-and-forget on the same workload.
+    b.case("shards/ingest_4streams_async/shards2", || {
+        run_async(&batch_sets, &batch_cfg(), 2)
+    });
+
     b.finish();
-    if let Err(e) = b.write_json("BENCH_shards.json") {
-        eprintln!("warning: could not write BENCH_shards.json: {e}");
+    if let Err(e) = b.write_json("BENCH_e2e_shards.json") {
+        eprintln!("warning: could not write BENCH_e2e_shards.json: {e}");
     } else {
-        println!("wrote BENCH_shards.json");
+        println!("wrote BENCH_e2e_shards.json");
     }
 }

@@ -1,0 +1,178 @@
+//! Perf regression gate: compare the `BENCH_*.json` files of two runs
+//! (the current workspace vs the previous CI run's uploaded artifacts)
+//! and fail when any case regressed beyond the tolerance.
+//!
+//! A case only counts as regressed when **both** its median and its
+//! minimum moved past the tolerance: scheduler noise on shared CI
+//! runners (the e2e benches spawn 8+ threads on 2 vCPUs) routinely
+//! inflates the median of a single run, but a genuine slowdown shifts
+//! the whole distribution — including the best-case sample — so
+//! requiring the min to agree keeps the gate meaningful without going
+//! red on noisy-neighbor variance.
+//!
+//! The JSON is the hand-rolled array `util::bench::Bench::write_json`
+//! emits — one object per line with `"name"`, `"median_ns"` and
+//! `"min_ns"` fields — so the parser here is a line scanner, not a JSON
+//! library (the image is offline; no serde).
+//!
+//! Usage: `bench_compare --old <dir> --new <dir> [--tolerance 0.20]`
+//!
+//! Exit codes: 0 = no regressions (or no previous run to compare
+//! against — the first run of a fresh pipeline must pass), 1 = at least
+//! one case regressed, 2 = usage error.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// `name → (median_ns, min_ns)` for one BENCH_*.json file.
+type Cases = BTreeMap<String, (f64, f64)>;
+
+/// Extract the string value following `"key": "` on a line.
+fn str_field(line: &str, key: &str) -> Option<String> {
+    let tag = format!("\"{key}\": \"");
+    let start = line.find(&tag)? + tag.len();
+    let rest = &line[start..];
+    let end = rest.find('"')?;
+    Some(rest[..end].to_string())
+}
+
+/// Extract the numeric value following `"key": ` on a line.
+fn num_field(line: &str, key: &str) -> Option<f64> {
+    let tag = format!("\"{key}\": ");
+    let start = line.find(&tag)? + tag.len();
+    let rest = &line[start..];
+    let end = rest
+        .find(|c: char| !(c.is_ascii_digit() || c == '.' || c == '-' || c == 'e' || c == '+'))
+        .unwrap_or(rest.len());
+    rest[..end].parse().ok()
+}
+
+fn parse_bench_json(path: &Path) -> std::io::Result<Cases> {
+    let text = std::fs::read_to_string(path)?;
+    let mut cases = Cases::new();
+    for line in text.lines() {
+        if let (Some(name), Some(median), Some(min)) = (
+            str_field(line, "name"),
+            num_field(line, "median_ns"),
+            num_field(line, "min_ns"),
+        ) {
+            cases.insert(name, (median, min));
+        }
+    }
+    Ok(cases)
+}
+
+/// All BENCH_*.json files directly inside `dir`, keyed by file name.
+fn bench_files(dir: &Path) -> Vec<(String, PathBuf)> {
+    let mut out = Vec::new();
+    let entries = match std::fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(_) => return out,
+    };
+    for entry in entries.flatten() {
+        let name = entry.file_name().to_string_lossy().to_string();
+        if name.starts_with("BENCH_") && name.ends_with(".json") {
+            out.push((name, entry.path()));
+        }
+    }
+    out.sort();
+    out
+}
+
+fn flag_value(args: &[String], name: &str) -> Option<String> {
+    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1).cloned())
+}
+
+fn fmt_ms(ns: f64) -> String {
+    format!("{:.3}", ns / 1e6)
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let (old_dir, new_dir) = match (flag_value(&args, "--old"), flag_value(&args, "--new")) {
+        (Some(o), Some(n)) => (PathBuf::from(o), PathBuf::from(n)),
+        _ => {
+            eprintln!("usage: bench_compare --old <dir> --new <dir> [--tolerance 0.20]");
+            std::process::exit(2);
+        }
+    };
+    let tolerance: f64 = flag_value(&args, "--tolerance")
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0.20);
+
+    let old_files: BTreeMap<String, PathBuf> = bench_files(&old_dir).into_iter().collect();
+    if old_files.is_empty() {
+        println!(
+            "bench_compare: no previous BENCH_*.json under {} — nothing to gate (first run?)",
+            old_dir.display()
+        );
+        return;
+    }
+
+    let mut regressions = Vec::new();
+    let mut compared = 0usize;
+    for (file, new_path) in bench_files(&new_dir) {
+        let Some(old_path) = old_files.get(&file) else {
+            println!("bench_compare: {file}: new bench file (no baseline) — skipped");
+            continue;
+        };
+        let old = match parse_bench_json(old_path) {
+            Ok(c) => c,
+            Err(e) => {
+                println!("bench_compare: {file}: unreadable baseline ({e}) — skipped");
+                continue;
+            }
+        };
+        let new = match parse_bench_json(&new_path) {
+            Ok(c) => c,
+            Err(e) => {
+                println!("bench_compare: {file}: unreadable current run ({e}) — skipped");
+                continue;
+            }
+        };
+        for (case, (new_median, new_min)) in &new {
+            let Some((old_median, old_min)) = old.get(case) else {
+                println!("bench_compare: {file} :: {case}: new case — skipped");
+                continue;
+            };
+            compared += 1;
+            let ratio = |new: f64, old: f64| if old > 0.0 { new / old } else { 1.0 };
+            let med_ratio = ratio(*new_median, *old_median);
+            let min_ratio = ratio(*new_min, *old_min);
+            // Both the median and the best-case sample must move past
+            // the tolerance — single-run medians of threaded benches on
+            // shared runners are too noisy to gate on alone.
+            let verdict = if med_ratio > 1.0 + tolerance && min_ratio > 1.0 + tolerance {
+                regressions.push(format!(
+                    "{file} :: {case}: median {} ms → {} ms ({:+.1}%), min {:+.1}%",
+                    fmt_ms(*old_median),
+                    fmt_ms(*new_median),
+                    (med_ratio - 1.0) * 100.0,
+                    (min_ratio - 1.0) * 100.0
+                ));
+                "REGRESSED"
+            } else if med_ratio < 1.0 - tolerance && min_ratio < 1.0 - tolerance {
+                "improved"
+            } else {
+                "ok"
+            };
+            println!(
+                "bench_compare: {file} :: {case}: median {} ms → {} ms  [{verdict}]",
+                fmt_ms(*old_median),
+                fmt_ms(*new_median)
+            );
+        }
+    }
+
+    println!(
+        "bench_compare: {compared} case(s) compared, {} regression(s) beyond {:.0}%",
+        regressions.len(),
+        tolerance * 100.0
+    );
+    if !regressions.is_empty() {
+        for r in &regressions {
+            eprintln!("REGRESSION: {r}");
+        }
+        std::process::exit(1);
+    }
+}

@@ -46,6 +46,26 @@ impl DriftMonitor {
         Some(self.measure(state))
     }
 
+    /// Notify of `n` accepted examples at once (batched ingest).
+    /// Measures at most once — at the batch boundary — even when `n`
+    /// spans several cadence periods: drift is a sampled diagnostic and
+    /// the intermediate eigensystems no longer exist to be measured.
+    pub fn on_accept_many(
+        &mut self,
+        n: usize,
+        state: &IncrementalKpca<'_>,
+    ) -> Option<DriftPoint> {
+        if self.every == 0 || n == 0 {
+            return None;
+        }
+        self.accepted_since += n;
+        if self.accepted_since < self.every {
+            return None;
+        }
+        self.accepted_since = 0;
+        Some(self.measure(state))
+    }
+
     /// Unconditional measurement.
     pub fn measure(&mut self, state: &IncrementalKpca<'_>) -> DriftPoint {
         let diff = state.reconstruct().sub(&state.batch_reference());

@@ -101,10 +101,14 @@ pub struct Metrics {
     pub accepted: u64,
     pub excluded: u64,
     pub errors: u64,
+    /// Subset of `errors` raised by fire-and-forget (`ingest_async`)
+    /// commands — deferred rather than replied, surfaced by `sync`.
+    pub async_errors: u64,
     /// Rank-one updates performed by the stream's eigensystem.
     pub updates: u64,
     /// Bytes resident in the stream's hot-path buffers (update
-    /// workspace + eigenvector storage); refreshed after each ingest.
+    /// workspace + eigenvector storage + batched-ingest scratch);
+    /// refreshed after each ingest.
     pub ws_bytes_resident: u64,
     /// Cumulative buffer-growth events on the hot path — flat in steady
     /// state, stepping only on capacity doublings as the stream grows.
@@ -120,6 +124,7 @@ impl Default for Metrics {
             accepted: 0,
             excluded: 0,
             errors: 0,
+            async_errors: 0,
             updates: 0,
             ws_bytes_resident: 0,
             ws_reallocs: 0,
@@ -142,6 +147,7 @@ impl Metrics {
             accepted: self.accepted,
             excluded: self.excluded,
             errors: self.errors,
+            async_errors: self.async_errors,
             uptime_s: elapsed,
             throughput_per_s: self.accepted as f64 / elapsed,
             ingest_p50_us: self.ingest_latency.percentile_ns(0.50) / 1e3,
@@ -161,6 +167,8 @@ pub struct MetricsReport {
     pub accepted: u64,
     pub excluded: u64,
     pub errors: u64,
+    /// Deferred fire-and-forget failures (subset of `errors`).
+    pub async_errors: u64,
     pub uptime_s: f64,
     pub throughput_per_s: f64,
     pub ingest_p50_us: f64,

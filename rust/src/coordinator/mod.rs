@@ -1,9 +1,13 @@
 //! Layer-3 streaming coordinator: a sharded multi-stream engine.
 //! [`shard`] owns the machinery — a [`ShardPool`] of worker threads
-//! (each holding a map of stream-id → per-stream eigenstate, a shared
-//! rotation engine, and per-stream metrics) fronted by a stream-keyed
+//! (each holding slot-indexed per-stream eigenstate, a shared rotation
+//! engine, and per-stream metrics) fronted by a stream-keyed
 //! [`StreamRouter`] over per-shard bounded channels (backpressure is
-//! per shard). [`server`] keeps the historical single-stream
+//! per shard). [`StreamRouter::open_stream`] resolves a stream id to a
+//! cheap [`StreamHandle`] once; the data-path verbs — rendezvous
+//! `ingest`, fire-and-forget `ingest_async` (+ `sync` error drain), and
+//! batched `ingest_many` — then address by slot with no per-command
+//! string. [`server`] keeps the historical single-stream
 //! [`Coordinator`] API as a thin wrapper over a 1-shard pool. [`drift`]
 //! measures live reconstruction error; [`metrics`] holds the per-stream
 //! histograms/gauges and the pool-level rollup; [`router`] routes each
@@ -20,5 +24,7 @@ pub use metrics::{
     LatencyHistogram, Metrics, MetricsReport, PoolSnapshot, StreamGauges,
 };
 pub use router::{EnginePolicy, RoutedEngine};
-pub use server::{Config, Coordinator, EngineConfig, IngestReply, KernelConfig, Snapshot};
-pub use shard::{PoolConfig, ShardPool, StreamConfig, StreamRouter};
+pub use server::{
+    BatchReply, Config, Coordinator, EngineConfig, IngestReply, KernelConfig, Snapshot,
+};
+pub use shard::{PoolConfig, ShardPool, StreamConfig, StreamHandle, StreamRouter};

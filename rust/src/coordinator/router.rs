@@ -7,7 +7,10 @@
 //! In the shard pool one `RoutedEngine` exists *per shard worker* and
 //! is shared by every stream pinned to that shard (the engine is
 //! stateless apart from its atomic dispatch counters, which the pool
-//! snapshot sums across shards).
+//! snapshot sums across shards). Batched ingest (`ingest_many`) drives
+//! the same engine: the `b` rank-one update sequences of a batch
+//! dispatch through it back to back, so the policy threshold applies
+//! per update exactly as in the rendezvous path.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 

@@ -14,7 +14,7 @@ use crate::linalg::Norms;
 use super::drift::DriftPoint;
 use super::metrics::MetricsReport;
 use super::router::EnginePolicy;
-use super::shard::{PoolConfig, ShardPool, StreamConfig, StreamRouter};
+use super::shard::{PoolConfig, ShardPool, StreamConfig, StreamHandle, StreamRouter};
 
 /// Kernel selection (constructed inside the owning shard worker).
 #[derive(Clone, Debug)]
@@ -25,6 +25,19 @@ pub enum KernelConfig {
     Linear,
     Polynomial { degree: u32, offset: f64 },
     Laplacian { sigma: f64 },
+}
+
+impl KernelConfig {
+    /// Static family label (matches `Kernel::name` of the kernel the
+    /// config builds) — snapshot/metrics paths, no allocation.
+    pub fn name(&self) -> &'static str {
+        match self {
+            KernelConfig::Rbf { .. } | KernelConfig::RbfMedian => "rbf",
+            KernelConfig::Linear => "linear",
+            KernelConfig::Polynomial { .. } => "poly",
+            KernelConfig::Laplacian { .. } => "laplacian",
+        }
+    }
 }
 
 /// Where the hot rotation runs.
@@ -90,11 +103,28 @@ pub struct IngestReply {
     pub seeding: bool,
 }
 
+/// Reply to a batched ingest: how the batch's points split. One reply
+/// per *batch*, not per point — the amortization `ingest_many` exists
+/// for.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BatchReply {
+    /// Points that joined the eigensystem.
+    pub accepted: usize,
+    /// Points excluded as rank-deficient (§5.1).
+    pub excluded: usize,
+    /// Points consumed while the stream was still seeding.
+    pub seeded: usize,
+    /// Eigensystem size (or buffered seed count) after the batch.
+    pub m: usize,
+}
+
 /// Point-in-time view of a stream's state.
 #[derive(Clone, Debug)]
 pub struct Snapshot {
     pub m: usize,
     pub dim: usize,
+    /// Kernel family label (static — no allocation on this path).
+    pub kernel: &'static str,
     pub top_values: Vec<f64>,
     pub stats: KpcaStats,
     pub drift: Option<DriftPoint>,
@@ -106,9 +136,10 @@ pub struct Snapshot {
 const DEFAULT_STREAM: &str = "default";
 
 /// Handle to a running single-stream coordinator (a 1-shard pool with
-/// one open stream).
+/// one open stream, addressed through its resolved [`StreamHandle`]).
 pub struct Coordinator {
     router: StreamRouter,
+    handle: StreamHandle,
     pool: ShardPool,
 }
 
@@ -118,33 +149,55 @@ impl Coordinator {
         let (pool_cfg, stream_cfg) = cfg.split();
         let pool = ShardPool::spawn(pool_cfg);
         let router = pool.router();
-        router
+        let handle = router
             .open_stream(DEFAULT_STREAM, dim, stream_cfg)
             .expect("fresh 1-shard pool accepts its default stream");
-        Coordinator { router, pool }
+        Coordinator { router, handle, pool }
     }
 
     /// Ingest one example (blocks under backpressure).
     pub fn ingest(&self, x: Vec<f64>) -> Result<IngestReply, String> {
-        self.router.ingest(DEFAULT_STREAM, x)
+        self.router.ingest(&self.handle, x)
+    }
+
+    /// Ingest a whole batch (`xs` is `b × dim` row-major) as one
+    /// command — see [`StreamRouter::ingest_many`].
+    pub fn ingest_many(&self, xs: Vec<f64>) -> Result<BatchReply, String> {
+        self.router.ingest_many(&self.handle, xs)
+    }
+
+    /// Fire-and-forget ingest — see [`StreamRouter::ingest_async`].
+    pub fn ingest_async(&self, x: Vec<f64>) -> Result<(), String> {
+        self.router.ingest_async(&self.handle, x)
+    }
+
+    /// Drive a whole flat `n × dim` feed in `batch`-sized commands —
+    /// see [`StreamRouter::ingest_all`].
+    pub fn ingest_all(&self, flat: &[f64], dim: usize, batch: usize) -> Result<BatchReply, String> {
+        self.router.ingest_all(&self.handle, flat, dim, batch)
+    }
+
+    /// Barrier + deferred-error drain for fire-and-forget ingest.
+    pub fn sync(&self) -> Result<u64, String> {
+        self.router.sync(&self.handle)
     }
 
     /// Project a point onto the current top-`r` components.
     pub fn project(&self, x: Vec<f64>, r: usize) -> Result<Vec<f64>, String> {
-        self.router.project(DEFAULT_STREAM, x, r)
+        self.router.project(&self.handle, x, r)
     }
 
     /// Force an immediate drift measurement.
     pub fn measure_drift(&self) -> Result<DriftPoint, String> {
-        self.router.measure_drift(DEFAULT_STREAM)
+        self.router.measure_drift(&self.handle)
     }
 
     pub fn snapshot(&self) -> Result<Snapshot, String> {
-        self.router.snapshot(DEFAULT_STREAM)
+        self.router.snapshot(&self.handle)
     }
 
     pub fn metrics(&self) -> Result<MetricsReport, String> {
-        self.router.metrics(DEFAULT_STREAM)
+        self.router.metrics(&self.handle)
     }
 
     /// Drain a whole stream source through the coordinator, returning
@@ -161,7 +214,7 @@ impl Coordinator {
 
     /// Stop the worker and return final stats.
     pub fn shutdown(self) -> KpcaStats {
-        let stats = self.router.close_stream(DEFAULT_STREAM).unwrap_or_default();
+        let stats = self.router.close_stream(&self.handle).unwrap_or_default();
         self.pool.shutdown();
         stats
     }
@@ -247,5 +300,28 @@ mod tests {
     fn shutdown_idempotent_under_drop() {
         let coord = Coordinator::spawn(config(), 3);
         drop(coord); // must not hang or panic
+    }
+
+    #[test]
+    fn batched_session_matches_sequential_counters() {
+        let ds = yeast_like(30, 9);
+        let dim = ds.dim();
+        let coord = Coordinator::spawn(config(), dim);
+        let flat = ds.x.as_slice();
+        let mut i = 0;
+        while i < 30 {
+            let end = (i + 7).min(30);
+            let reply = coord.ingest_many(flat[i * dim..end * dim].to_vec()).unwrap();
+            assert_eq!(reply.seeded + reply.accepted + reply.excluded, end - i);
+            i = end;
+        }
+        let snap = coord.snapshot().unwrap();
+        assert_eq!(snap.m, 30);
+        assert_eq!(snap.kernel, "rbf");
+        let report = coord.metrics().unwrap();
+        assert_eq!(report.accepted as usize, 30 - 6);
+        assert_eq!(report.async_errors, 0);
+        let stats = coord.shutdown();
+        assert_eq!(stats.accepted, 30);
     }
 }

@@ -1,6 +1,6 @@
 //! Sharded multi-stream coordinator: a [`ShardPool`] of worker threads,
-//! each owning a map of stream-id → per-stream state, fronted by a
-//! stream-keyed [`StreamRouter`].
+//! each owning slot-indexed per-stream state, fronted by a stream-keyed
+//! [`StreamRouter`] that hands out resolved [`StreamHandle`]s.
 //!
 //! # Design
 //!
@@ -12,10 +12,28 @@
 //! runs untouched inside the shard. Streams only ever contend with the
 //! *other streams of their own shard*.
 //!
+//! **Resolved handles.** [`StreamRouter::open_stream`] resolves the
+//! stream→shard hash and the shard-local storage slot *once* and
+//! returns a cheap [`StreamHandle`] (shard index + integer slot +
+//! generation + `Arc<str>` id). Every subsequent command addresses the
+//! stream by slot — no per-command `String` allocation and no
+//! `HashMap` lookup on the ingest path. The worker keeps its streams in
+//! a slot-indexed `Vec<Option<StreamEntry>>`; the name map exists only
+//! for open (duplicate check) and close (removal). Slots are reused
+//! after close with a bumped generation, so a stale handle can never
+//! address a stream that replaced the one it named.
+//!
 //! **Backpressure.** Each shard has its own *bounded* command channel
 //! (`PoolConfig::queue` deep). Producers of a hot shard block on that
-//! shard's queue without slowing streams pinned elsewhere — the same
-//! rendezvous discipline the single-stream coordinator used, sharded.
+//! shard's queue without slowing streams pinned elsewhere. Three ingest
+//! shapes share it: rendezvous [`StreamRouter::ingest`] (one reply per
+//! point), fire-and-forget [`StreamRouter::ingest_async`] (reply-less;
+//! errors land in a per-stream counter and the *first* deferred error
+//! message is surfaced by the next [`StreamRouter::sync`]), and batched
+//! [`StreamRouter::ingest_many`] (one command and one reply per batch —
+//! the per-point channel round-trip amortizes across the batch, and the
+//! worker computes the batch's kernel rows as one blocked GEMM via
+//! [`IncrementalKpca::push_batch_with`]).
 //!
 //! **Shared immutable resources.** One [`RoutedEngine`] (and, when
 //! configured, one PJRT runtime — it is not `Send`, so it must be built
@@ -23,8 +41,7 @@
 //! engine is stateless apart from its dispatch counters, so all streams
 //! of a shard share it. Per-stream state owns its kernel through an
 //! `Arc` handed to [`IncrementalKpca::from_batch_shared`] — closing a
-//! stream frees its kernel (the old single-stream server `Box::leak`ed
-//! one kernel per coordinator, which a multi-stream pool cannot afford).
+//! stream frees its kernel.
 //!
 //! **Metrics aggregation.** Each stream entry keeps its own
 //! [`Metrics`] (latency histograms + counters + hot-path gauges).
@@ -46,7 +63,7 @@ use crate::linalg::Mat;
 use super::drift::{DriftMonitor, DriftPoint};
 use super::metrics::{LatencyHistogram, Metrics, MetricsReport, PoolSnapshot, StreamGauges};
 use super::router::RoutedEngine;
-use super::server::{EngineConfig, IngestReply, KernelConfig, Snapshot};
+use super::server::{BatchReply, EngineConfig, IngestReply, KernelConfig, Snapshot};
 
 /// Per-stream configuration (what used to be the per-coordinator
 /// `Config`, minus the pool-level engine/queue knobs).
@@ -89,38 +106,90 @@ impl Default for PoolConfig {
     }
 }
 
+/// Resolved address of an open stream: pinned shard, storage slot in
+/// that shard's worker, the slot generation (guards against reuse after
+/// close), and the shared id for attribution. Cheap to clone
+/// (`Arc<str>` bump); commands built from a handle carry two integers
+/// instead of an owned `String`.
+#[derive(Clone, Debug)]
+pub struct StreamHandle {
+    shard: usize,
+    slot: u32,
+    gen: u32,
+    id: Arc<str>,
+}
+
+impl StreamHandle {
+    /// The stream id this handle was opened with.
+    pub fn id(&self) -> &str {
+        &self.id
+    }
+
+    /// The shard the stream is pinned to.
+    pub fn shard(&self) -> usize {
+        self.shard
+    }
+}
+
 enum ShardCommand {
     Open {
-        stream: String,
+        stream: Arc<str>,
         dim: usize,
         cfg: StreamConfig,
-        reply: SyncSender<Result<(), String>>,
+        reply: SyncSender<Result<(u32, u32), String>>,
     },
     Ingest {
-        stream: String,
+        slot: u32,
+        gen: u32,
         x: Vec<f64>,
         reply: SyncSender<Result<IngestReply, String>>,
     },
+    /// Fire-and-forget ingest: no reply channel. Failures increment the
+    /// stream's error counters; the first deferred message surfaces on
+    /// the next `Sync`.
+    IngestAsync {
+        slot: u32,
+        gen: u32,
+        x: Vec<f64>,
+    },
+    /// One command per batch: `xs` is `b × dim` row-major.
+    IngestMany {
+        slot: u32,
+        gen: u32,
+        xs: Vec<f64>,
+        reply: SyncSender<Result<BatchReply, String>>,
+    },
+    /// Barrier + deferred-error drain for async ingest.
+    Sync {
+        slot: u32,
+        gen: u32,
+        reply: SyncSender<Result<u64, String>>,
+    },
     Project {
-        stream: String,
+        slot: u32,
+        gen: u32,
         x: Vec<f64>,
         r: usize,
         reply: SyncSender<Result<Vec<f64>, String>>,
     },
     MeasureDrift {
-        stream: String,
+        slot: u32,
+        gen: u32,
         reply: SyncSender<Result<DriftPoint, String>>,
     },
     Snapshot {
-        stream: String,
+        slot: u32,
+        gen: u32,
         reply: SyncSender<Result<Snapshot, String>>,
     },
     Metrics {
-        stream: String,
+        slot: u32,
+        gen: u32,
         reply: SyncSender<Result<MetricsReport, String>>,
     },
     Close {
-        stream: String,
+        slot: u32,
+        gen: u32,
         reply: SyncSender<Result<KpcaStats, String>>,
     },
     Rollup {
@@ -147,12 +216,14 @@ struct ShardRollup {
 /// every rollup so pool-level counters stay *monotonic* across stream
 /// churn (closing a stream must not erase its history from the pool).
 /// Residency gauges are deliberately not kept — closed streams hold no
-/// bytes.
+/// bytes. `orphans` counts commands addressed to dead slots (stale
+/// handles); with no live entry to attribute them to, they live here.
 #[derive(Default)]
 struct ClosedTotals {
     accepted: u64,
     excluded: u64,
     errors: u64,
+    orphans: u64,
     ingest: LatencyHistogram,
     project: LatencyHistogram,
 }
@@ -210,8 +281,11 @@ fn build_engine(cfg: &EngineConfig) -> RoutedEngine {
 /// All state of one stream, owned by exactly one shard worker:
 /// the incremental eigensystem (which itself owns the kernel, the
 /// update workspace and the eigenbasis), the drift monitor, and the
-/// per-stream metrics.
+/// per-stream metrics. Stored in its shard's slot vector; `gen` must
+/// match the addressing handle's generation.
 struct StreamEntry {
+    id: Arc<str>,
+    gen: u32,
     cfg: StreamConfig,
     dim: usize,
     seed_buf: Vec<f64>,
@@ -219,12 +293,17 @@ struct StreamEntry {
     state: Option<IncrementalKpca<'static>>,
     drift: DriftMonitor,
     metrics: Metrics,
+    /// First error deferred by fire-and-forget ingest, surfaced (and
+    /// cleared) by the next `Sync`.
+    pending_error: Option<String>,
 }
 
 impl StreamEntry {
-    fn new(dim: usize, cfg: StreamConfig) -> StreamEntry {
+    fn new(id: Arc<str>, gen: u32, dim: usize, cfg: StreamConfig) -> StreamEntry {
         let drift = DriftMonitor::new(cfg.drift_every);
         StreamEntry {
+            id,
+            gen,
             cfg,
             dim,
             seed_buf: Vec::new(),
@@ -232,6 +311,7 @@ impl StreamEntry {
             state: None,
             drift,
             metrics: Metrics::default(),
+            pending_error: None,
         }
     }
 
@@ -243,40 +323,55 @@ impl StreamEntry {
         }
     }
 
-    fn ingest(&mut self, x: Vec<f64>, engine: &RoutedEngine) -> Result<IngestReply, String> {
+    /// Buffer one point toward the seed batch; initializes the
+    /// eigensystem when the seed quota is reached.
+    fn seed_point(&mut self, x: &[f64]) -> Result<IngestReply, String> {
+        self.seed_buf.extend_from_slice(x);
+        self.seeded += 1;
+        if self.seeded < self.min_seed() {
+            return Ok(IngestReply { accepted: true, m: self.seeded, seeding: true });
+        }
+        let seed = Mat::from_vec(self.seeded, self.dim, self.seed_buf.clone());
+        let kernel = build_kernel(&self.cfg.kernel, &seed);
+        match IncrementalKpca::from_batch_shared(kernel, &seed, self.cfg.mean_adjust) {
+            Ok(st) => {
+                // The batch init allocated the full eigensystem +
+                // workspace — publish the residency gauges now, not
+                // only after the first post-seed push.
+                self.state = Some(st);
+                self.refresh_gauges();
+                Ok(IngestReply { accepted: true, m: self.seeded, seeding: false })
+            }
+            Err(e) => {
+                self.metrics.errors += 1;
+                Err(e)
+            }
+        }
+    }
+
+    /// Refresh the per-stream hot-path gauges from the eigensystem:
+    /// update count, resident bytes and growth events across the
+    /// rank-one workspace, the eigenbasis *and* the batched-ingest
+    /// scratch — batched streams' kernel-block memory must be visible
+    /// to the pool rollup too.
+    fn refresh_gauges(&mut self) {
+        let st = self.state.as_ref().expect("gauges need an initialized stream");
+        self.metrics.updates = st.stats.updates as u64;
+        self.metrics.ws_bytes_resident =
+            (st.hot_path_bytes() + st.batch_bytes_resident()) as u64;
+        self.metrics.ws_reallocs = st.hot_path_reallocs() + st.batch_reallocs();
+    }
+
+    fn ingest(&mut self, x: &[f64], engine: &RoutedEngine) -> Result<IngestReply, String> {
         if x.len() != self.dim {
             self.metrics.errors += 1;
             return Err(format!("dimension mismatch: got {}, want {}", x.len(), self.dim));
         }
         if self.state.is_none() {
-            // Seeding phase: buffer until the batch init.
-            self.seed_buf.extend_from_slice(&x);
-            self.seeded += 1;
-            if self.seeded < self.min_seed() {
-                return Ok(IngestReply { accepted: true, m: self.seeded, seeding: true });
-            }
-            let seed = Mat::from_vec(self.seeded, self.dim, self.seed_buf.clone());
-            let kernel = build_kernel(&self.cfg.kernel, &seed);
-            return match IncrementalKpca::from_batch_shared(kernel, &seed, self.cfg.mean_adjust)
-            {
-                Ok(st) => {
-                    // The batch init allocated the full eigensystem +
-                    // workspace — publish the residency gauges now, not
-                    // only after the first post-seed push.
-                    self.metrics.updates = st.stats.updates as u64;
-                    self.metrics.ws_bytes_resident = st.hot_path_bytes() as u64;
-                    self.metrics.ws_reallocs = st.hot_path_reallocs();
-                    self.state = Some(st);
-                    Ok(IngestReply { accepted: true, m: self.seeded, seeding: false })
-                }
-                Err(e) => {
-                    self.metrics.errors += 1;
-                    Err(e)
-                }
-            };
+            return self.seed_point(x);
         }
         let st = self.state.as_mut().unwrap();
-        match st.push_with(&x, engine) {
+        match st.push_with(x, engine) {
             Ok(accepted) => {
                 if accepted {
                     self.metrics.accepted += 1;
@@ -284,17 +379,64 @@ impl StreamEntry {
                 } else {
                     self.metrics.excluded += 1;
                 }
-                // Refresh the per-stream hot-path gauges.
-                self.metrics.updates = st.stats.updates as u64;
-                self.metrics.ws_bytes_resident = st.hot_path_bytes() as u64;
-                self.metrics.ws_reallocs = st.hot_path_reallocs();
-                Ok(IngestReply { accepted, m: st.len(), seeding: false })
+                let m = st.len();
+                self.refresh_gauges();
+                Ok(IngestReply { accepted, m, seeding: false })
             }
             Err(e) => {
                 self.metrics.errors += 1;
                 Err(e)
             }
         }
+    }
+
+    /// Batched ingest: points still owed to the seed buffer are
+    /// consumed one by one (they are cheap copies); the remainder goes
+    /// through the eigensystem's blocked batch entry point in one call.
+    /// On `Err`, points before the failure remain applied.
+    fn ingest_many(&mut self, xs: &[f64], engine: &RoutedEngine) -> Result<BatchReply, String> {
+        if self.dim == 0 || xs.len() % self.dim != 0 {
+            self.metrics.errors += 1;
+            return Err(format!(
+                "batch length {} is not a multiple of dim {}",
+                xs.len(),
+                self.dim
+            ));
+        }
+        let b = xs.len() / self.dim;
+        let mut reply = BatchReply::default();
+        let mut off = 0;
+        while self.state.is_none() && off < b {
+            self.seed_point(&xs[off * self.dim..(off + 1) * self.dim])?;
+            reply.seeded += 1;
+            off += 1;
+        }
+        if off < b {
+            let st = self.state.as_mut().unwrap();
+            let result = st.push_batch_with(&xs[off * self.dim..], engine);
+            // The accepted prefix stays applied even on `Err` (the mask
+            // covers exactly the processed points) — counters, drift
+            // cadence and gauges must track it either way, or `m` would
+            // permanently outrun the accounting after one bad batch.
+            let accepted = st.last_batch_mask().iter().filter(|&&ok| ok).count();
+            let excluded = st.last_batch_mask().len() - accepted;
+            self.metrics.accepted += accepted as u64;
+            self.metrics.excluded += excluded as u64;
+            self.drift.on_accept_many(accepted, st);
+            self.refresh_gauges();
+            match result {
+                Ok(_) => {
+                    reply.accepted = accepted;
+                    reply.excluded = excluded;
+                }
+                Err(e) => {
+                    self.metrics.errors += 1;
+                    return Err(e);
+                }
+            }
+        }
+        reply.m = self.state.as_ref().map(|s| s.len()).unwrap_or(self.seeded);
+        Ok(reply)
     }
 
     fn project(&self, x: &[f64], r: usize) -> Result<Vec<f64>, String> {
@@ -312,11 +454,19 @@ impl StreamEntry {
         }
     }
 
+    fn kernel_name(&self) -> &'static str {
+        match &self.state {
+            Some(st) => st.kernel_ref().name(),
+            None => self.cfg.kernel.name(),
+        }
+    }
+
     fn snapshot(&self, engine_calls: (u64, u64)) -> Snapshot {
         match &self.state {
             Some(st) => Snapshot {
                 m: st.len(),
                 dim: self.dim,
+                kernel: self.kernel_name(),
                 top_values: st.vals.iter().rev().take(10).copied().collect(),
                 stats: st.stats,
                 drift: self.drift.latest().copied(),
@@ -325,6 +475,7 @@ impl StreamEntry {
             None => Snapshot {
                 m: self.seeded,
                 dim: self.dim,
+                kernel: self.kernel_name(),
                 top_values: Vec::new(),
                 stats: KpcaStats::default(),
                 drift: None,
@@ -333,9 +484,9 @@ impl StreamEntry {
         }
     }
 
-    fn gauges(&self, stream: &str, shard: usize) -> StreamGauges {
+    fn gauges(&self, shard: usize) -> StreamGauges {
         StreamGauges {
-            stream: stream.to_string(),
+            stream: self.id.to_string(),
             shard,
             m: self.state.as_ref().map(|s| s.len()).unwrap_or(self.seeded),
             ws_bytes_resident: self.metrics.ws_bytes_resident,
@@ -350,98 +501,188 @@ impl StreamEntry {
     }
 }
 
+/// Shard-local stream storage: slot-indexed entries (the ingest path
+/// addresses by integer), a name map used only at open/close, and the
+/// free list for slot reuse.
+#[derive(Default)]
+struct SlotTable {
+    slots: Vec<Option<StreamEntry>>,
+    names: HashMap<Arc<str>, u32>,
+    free: Vec<u32>,
+    next_gen: u32,
+}
+
+impl SlotTable {
+    fn open(
+        &mut self,
+        stream: Arc<str>,
+        dim: usize,
+        cfg: StreamConfig,
+    ) -> Result<(u32, u32), String> {
+        if self.names.contains_key(stream.as_ref()) {
+            return Err(format!("stream '{stream}' already open"));
+        }
+        let slot = self.free.pop().unwrap_or_else(|| {
+            self.slots.push(None);
+            (self.slots.len() - 1) as u32
+        });
+        let gen = self.next_gen;
+        self.next_gen = self.next_gen.wrapping_add(1);
+        self.slots[slot as usize] = Some(StreamEntry::new(stream.clone(), gen, dim, cfg));
+        self.names.insert(stream, slot);
+        Ok((slot, gen))
+    }
+
+    /// The live entry a (slot, gen) pair addresses, if any.
+    fn get_mut(&mut self, slot: u32, gen: u32) -> Result<&mut StreamEntry, String> {
+        match self.slots.get_mut(slot as usize) {
+            Some(Some(e)) if e.gen == gen => Ok(e),
+            _ => Err("unknown or closed stream".to_string()),
+        }
+    }
+
+    fn get(&self, slot: u32, gen: u32) -> Result<&StreamEntry, String> {
+        match self.slots.get(slot as usize) {
+            Some(Some(e)) if e.gen == gen => Ok(e),
+            _ => Err("unknown or closed stream".to_string()),
+        }
+    }
+
+    fn close(&mut self, slot: u32, gen: u32) -> Result<StreamEntry, String> {
+        match self.slots.get_mut(slot as usize) {
+            Some(s) if s.as_ref().map(|e| e.gen) == Some(gen) => {
+                let entry = s.take().unwrap();
+                self.names.remove(entry.id.as_ref());
+                self.free.push(slot);
+                Ok(entry)
+            }
+            _ => Err("unknown or closed stream".to_string()),
+        }
+    }
+
+    fn live(&self) -> impl Iterator<Item = &StreamEntry> {
+        self.slots.iter().flatten()
+    }
+
+    fn live_count(&self) -> usize {
+        self.names.len()
+    }
+}
+
 fn shard_worker(shard: usize, engine_cfg: EngineConfig, rx: Receiver<ShardCommand>) {
     let engine = build_engine(&engine_cfg);
-    let mut streams: HashMap<String, StreamEntry> = HashMap::new();
+    let mut table = SlotTable::default();
     let mut closed = ClosedTotals::default();
     while let Ok(cmd) = rx.recv() {
         match cmd {
             ShardCommand::Open { stream, dim, cfg, reply } => {
-                let res = if streams.contains_key(&stream) {
-                    Err(format!("stream '{stream}' already open"))
-                } else {
-                    streams.insert(stream, StreamEntry::new(dim, cfg));
-                    Ok(())
-                };
-                let _ = reply.send(res);
+                let _ = reply.send(table.open(stream, dim, cfg));
             }
-            ShardCommand::Ingest { stream, x, reply } => {
-                let res = match streams.get_mut(&stream) {
-                    Some(entry) => {
+            ShardCommand::Ingest { slot, gen, x, reply } => {
+                let res = match table.get_mut(slot, gen) {
+                    Ok(entry) => {
                         let t0 = Instant::now();
-                        let r = entry.ingest(x, &engine);
+                        let r = entry.ingest(&x, &engine);
                         entry.metrics.ingest_latency.record(t0.elapsed());
                         r
                     }
-                    None => Err(format!("unknown stream '{stream}'")),
+                    Err(e) => Err(e),
                 };
                 let _ = reply.send(res);
             }
-            ShardCommand::Project { stream, x, r, reply } => {
-                let res = match streams.get_mut(&stream) {
-                    Some(entry) => {
+            ShardCommand::IngestAsync { slot, gen, x } => match table.get_mut(slot, gen) {
+                Ok(entry) => {
+                    let t0 = Instant::now();
+                    if let Err(e) = entry.ingest(&x, &engine) {
+                        entry.metrics.async_errors += 1;
+                        if entry.pending_error.is_none() {
+                            entry.pending_error = Some(e);
+                        }
+                    }
+                    entry.metrics.ingest_latency.record(t0.elapsed());
+                }
+                Err(_) => closed.orphans += 1,
+            },
+            ShardCommand::IngestMany { slot, gen, xs, reply } => {
+                let res = match table.get_mut(slot, gen) {
+                    Ok(entry) => {
+                        let t0 = Instant::now();
+                        let r = entry.ingest_many(&xs, &engine);
+                        // One latency sample per batch command — the
+                        // amortization the batch exists for.
+                        entry.metrics.ingest_latency.record(t0.elapsed());
+                        r
+                    }
+                    Err(e) => Err(e),
+                };
+                let _ = reply.send(res);
+            }
+            ShardCommand::Sync { slot, gen, reply } => {
+                let res = match table.get_mut(slot, gen) {
+                    Ok(entry) => match entry.pending_error.take() {
+                        Some(e) => Err(e),
+                        None => Ok(entry.metrics.async_errors),
+                    },
+                    Err(e) => Err(e),
+                };
+                let _ = reply.send(res);
+            }
+            ShardCommand::Project { slot, gen, x, r, reply } => {
+                let res = match table.get_mut(slot, gen) {
+                    Ok(entry) => {
                         let t0 = Instant::now();
                         let out = entry.project(&x, r);
                         entry.metrics.project_latency.record(t0.elapsed());
                         out
                     }
-                    None => Err(format!("unknown stream '{stream}'")),
+                    Err(e) => Err(e),
                 };
                 let _ = reply.send(res);
             }
-            ShardCommand::MeasureDrift { stream, reply } => {
-                let res = match streams.get_mut(&stream) {
-                    Some(entry) => entry.measure_drift(),
-                    None => Err(format!("unknown stream '{stream}'")),
+            ShardCommand::MeasureDrift { slot, gen, reply } => {
+                let res = match table.get_mut(slot, gen) {
+                    Ok(entry) => entry.measure_drift(),
+                    Err(e) => Err(e),
                 };
                 let _ = reply.send(res);
             }
-            ShardCommand::Snapshot { stream, reply } => {
-                let res = match streams.get(&stream) {
-                    Some(entry) => Ok(entry.snapshot(engine.counts())),
-                    None => Err(format!("unknown stream '{stream}'")),
-                };
+            ShardCommand::Snapshot { slot, gen, reply } => {
+                let res = table.get(slot, gen).map(|entry| entry.snapshot(engine.counts()));
                 let _ = reply.send(res);
             }
-            ShardCommand::Metrics { stream, reply } => {
-                let res = match streams.get(&stream) {
-                    Some(entry) => Ok(entry.metrics.report()),
-                    None => Err(format!("unknown stream '{stream}'")),
-                };
+            ShardCommand::Metrics { slot, gen, reply } => {
+                let res = table.get(slot, gen).map(|entry| entry.metrics.report());
                 let _ = reply.send(res);
             }
-            ShardCommand::Close { stream, reply } => {
-                let res = match streams.remove(&stream) {
-                    Some(entry) => {
-                        // Keep the stream's lifetime counters/latency in
-                        // the shard totals — pool counters stay monotonic.
-                        closed.absorb(&entry.metrics);
-                        Ok(entry.final_stats())
-                    }
-                    None => Err(format!("unknown stream '{stream}'")),
-                };
+            ShardCommand::Close { slot, gen, reply } => {
+                let res = table.close(slot, gen).map(|entry| {
+                    // Keep the stream's lifetime counters/latency in
+                    // the shard totals — pool counters stay monotonic.
+                    closed.absorb(&entry.metrics);
+                    entry.final_stats()
+                });
                 let _ = reply.send(res);
             }
             ShardCommand::Rollup { reply } => {
                 let mut rollup = ShardRollup {
-                    streams: streams.len(),
+                    streams: table.live_count(),
                     accepted: closed.accepted,
                     excluded: closed.excluded,
-                    errors: closed.errors,
+                    errors: closed.errors + closed.orphans,
                     total_ws_bytes: 0,
                     ingest: closed.ingest.clone(),
                     project: closed.project.clone(),
                     engine_calls: engine.counts(),
-                    gauges: Vec::with_capacity(streams.len()),
+                    gauges: Vec::with_capacity(table.live_count()),
                 };
-                for (name, entry) in &streams {
+                for entry in table.live() {
                     rollup.accepted += entry.metrics.accepted;
                     rollup.excluded += entry.metrics.excluded;
                     rollup.errors += entry.metrics.errors;
                     rollup.total_ws_bytes += entry.metrics.ws_bytes_resident;
                     rollup.ingest.merge(&entry.metrics.ingest_latency);
                     rollup.project.merge(&entry.metrics.project_latency);
-                    rollup.gauges.push(entry.gauges(name, shard));
+                    rollup.gauges.push(entry.gauges(shard));
                 }
                 let _ = reply.send(rollup);
             }
@@ -463,9 +704,10 @@ fn fnv1a(s: &str) -> u64 {
 }
 
 /// Cloneable, thread-safe routing front-end over the per-shard command
-/// channels. `ingest`/`project`/`open_stream`/`close_stream` hash the
-/// stream id to its pinned shard; producers on different shards never
-/// touch the same queue.
+/// channels. [`StreamRouter::open_stream`] resolves a stream id to a
+/// [`StreamHandle`] once; all data-path verbs then address by handle —
+/// producers on different shards never touch the same queue, and the
+/// ingest path carries no string.
 #[derive(Clone)]
 pub struct StreamRouter {
     shards: Arc<Vec<SyncSender<ShardCommand>>>,
@@ -484,8 +726,8 @@ impl StreamRouter {
 
     /// One rendezvous round-trip to shard `shard`: build the command
     /// around a fresh reply channel, send, await the answer. Every
-    /// router verb goes through here so the error discipline cannot
-    /// diverge between commands.
+    /// replying router verb goes through here so the error discipline
+    /// cannot diverge between commands.
     fn rpc<T>(
         &self,
         shard: usize,
@@ -496,35 +738,96 @@ impl StreamRouter {
         rrx.recv().map_err(|_| "shard dropped reply".to_string())
     }
 
-    /// Open a stream on its pinned shard. Fails if the id is in use.
+    /// Open a stream on its pinned shard and resolve it to a cheap
+    /// [`StreamHandle`]. Fails if the id is in use.
     pub fn open_stream(
         &self,
         stream: &str,
         dim: usize,
         cfg: StreamConfig,
-    ) -> Result<(), String> {
-        self.rpc(self.shard_of(stream), |reply| ShardCommand::Open {
-            stream: stream.to_string(),
-            dim,
-            cfg,
+    ) -> Result<StreamHandle, String> {
+        let shard = self.shard_of(stream);
+        let id: Arc<str> = Arc::from(stream);
+        let cmd_id = id.clone();
+        let (slot, gen) =
+            self.rpc(shard, move |reply| ShardCommand::Open { stream: cmd_id, dim, cfg, reply })??;
+        Ok(StreamHandle { shard, slot, gen, id })
+    }
+
+    /// Ingest one example (blocks under backpressure of the stream's
+    /// shard only; one rendezvous round-trip per point).
+    pub fn ingest(&self, h: &StreamHandle, x: Vec<f64>) -> Result<IngestReply, String> {
+        self.rpc(h.shard, |reply| ShardCommand::Ingest { slot: h.slot, gen: h.gen, x, reply })?
+    }
+
+    /// Fire-and-forget ingest: enqueue and return. Still blocks when
+    /// the shard's bounded queue is full (backpressure is preserved);
+    /// per-point failures are deferred — they bump the stream's
+    /// `async_errors` counter and the first message is returned by the
+    /// next [`StreamRouter::sync`]. `Err` here only means the pool is
+    /// down.
+    pub fn ingest_async(&self, h: &StreamHandle, x: Vec<f64>) -> Result<(), String> {
+        self.shards[h.shard]
+            .send(ShardCommand::IngestAsync { slot: h.slot, gen: h.gen, x })
+            .map_err(|_| "shard pool down".to_string())
+    }
+
+    /// Ingest a whole batch (`xs` is `b × dim` row-major) as one
+    /// command and one reply: the channel round-trip amortizes over the
+    /// batch and the worker computes the batch's kernel rows as one
+    /// blocked GEMM.
+    pub fn ingest_many(&self, h: &StreamHandle, xs: Vec<f64>) -> Result<BatchReply, String> {
+        self.rpc(h.shard, |reply| ShardCommand::IngestMany {
+            slot: h.slot,
+            gen: h.gen,
+            xs,
             reply,
         })?
     }
 
-    /// Ingest one example into a stream (blocks under backpressure of
-    /// that stream's shard only).
-    pub fn ingest(&self, stream: &str, x: Vec<f64>) -> Result<IngestReply, String> {
-        self.rpc(self.shard_of(stream), |reply| ShardCommand::Ingest {
-            stream: stream.to_string(),
-            x,
-            reply,
-        })?
+    /// Drive a whole flat `n × dim` row-major feed through
+    /// [`StreamRouter::ingest_many`] in `batch`-sized commands
+    /// (`batch ≤ 1` means one-point batches) and return the aggregated
+    /// counts — the one chunking loop the CLI, benches and tests all
+    /// share, so the accounting cannot diverge between them.
+    pub fn ingest_all(
+        &self,
+        h: &StreamHandle,
+        flat: &[f64],
+        dim: usize,
+        batch: usize,
+    ) -> Result<BatchReply, String> {
+        assert!(dim > 0 && flat.len() % dim == 0, "feed must be n × dim row-major");
+        let n = flat.len() / dim;
+        let batch = batch.max(1);
+        let mut total = BatchReply::default();
+        let mut i = 0;
+        while i < n {
+            let end = (i + batch).min(n);
+            let r = self.ingest_many(h, flat[i * dim..end * dim].to_vec())?;
+            total.accepted += r.accepted;
+            total.excluded += r.excluded;
+            total.seeded += r.seeded;
+            total.m = r.m;
+            i = end;
+        }
+        Ok(total)
+    }
+
+    /// Barrier for fire-and-forget ingest: when this returns, every
+    /// previously enqueued `ingest_async` for the stream has been
+    /// applied (commands serialize through the shard). Returns the
+    /// stream's cumulative async-error count, or `Err` with the first
+    /// deferred error message since the last sync (clearing it).
+    pub fn sync(&self, h: &StreamHandle) -> Result<u64, String> {
+        self.rpc(h.shard, |reply| ShardCommand::Sync { slot: h.slot, gen: h.gen, reply })?
     }
 
     /// Project a point onto a stream's current top-`r` components.
-    pub fn project(&self, stream: &str, x: Vec<f64>, r: usize) -> Result<Vec<f64>, String> {
-        self.rpc(self.shard_of(stream), |reply| ShardCommand::Project {
-            stream: stream.to_string(),
+    pub fn project(&self, h: &StreamHandle, x: Vec<f64>, r: usize) -> Result<Vec<f64>, String> {
+        self.rpc(h.shard, |reply| ShardCommand::Project {
+            slot: h.slot,
+            gen: h.gen,
             x,
             r,
             reply,
@@ -532,37 +835,31 @@ impl StreamRouter {
     }
 
     /// Force an immediate drift measurement on a stream.
-    pub fn measure_drift(&self, stream: &str) -> Result<DriftPoint, String> {
-        self.rpc(self.shard_of(stream), |reply| ShardCommand::MeasureDrift {
-            stream: stream.to_string(),
+    pub fn measure_drift(&self, h: &StreamHandle) -> Result<DriftPoint, String> {
+        self.rpc(h.shard, |reply| ShardCommand::MeasureDrift {
+            slot: h.slot,
+            gen: h.gen,
             reply,
         })?
     }
 
     /// Point-in-time view of one stream.
-    pub fn snapshot(&self, stream: &str) -> Result<Snapshot, String> {
-        self.rpc(self.shard_of(stream), |reply| ShardCommand::Snapshot {
-            stream: stream.to_string(),
-            reply,
-        })?
+    pub fn snapshot(&self, h: &StreamHandle) -> Result<Snapshot, String> {
+        self.rpc(h.shard, |reply| ShardCommand::Snapshot { slot: h.slot, gen: h.gen, reply })?
     }
 
     /// Per-stream metrics report.
-    pub fn metrics(&self, stream: &str) -> Result<MetricsReport, String> {
-        self.rpc(self.shard_of(stream), |reply| ShardCommand::Metrics {
-            stream: stream.to_string(),
-            reply,
-        })?
+    pub fn metrics(&self, h: &StreamHandle) -> Result<MetricsReport, String> {
+        self.rpc(h.shard, |reply| ShardCommand::Metrics { slot: h.slot, gen: h.gen, reply })?
     }
 
     /// Close a stream, freeing its state (and its kernel), returning
     /// the stream's final stats. The stream's counters stay in the
-    /// shard's lifetime totals, so pool counters remain monotonic.
-    pub fn close_stream(&self, stream: &str) -> Result<KpcaStats, String> {
-        self.rpc(self.shard_of(stream), |reply| ShardCommand::Close {
-            stream: stream.to_string(),
-            reply,
-        })?
+    /// shard's lifetime totals, so pool counters remain monotonic; the
+    /// slot is recycled under a new generation, so this (and any clone
+    /// of this) handle goes stale rather than aliasing a successor.
+    pub fn close_stream(&self, h: &StreamHandle) -> Result<KpcaStats, String> {
+        self.rpc(h.shard, |reply| ShardCommand::Close { slot: h.slot, gen: h.gen, reply })?
     }
 
     /// Pool-level rollup: per-shard counters summed (including streams
@@ -680,14 +977,37 @@ mod tests {
     }
 
     #[test]
-    fn open_twice_rejected_unknown_stream_errors() {
+    fn open_twice_rejected_and_handles_expose_identity() {
         let pool = ShardPool::spawn(PoolConfig::default());
         let router = pool.router();
-        router.open_stream("a", 3, small_cfg()).unwrap();
+        let h = router.open_stream("a", 3, small_cfg()).unwrap();
+        assert_eq!(h.id(), "a");
+        assert_eq!(h.shard(), router.shard_of("a"));
         assert!(router.open_stream("a", 3, small_cfg()).is_err());
-        assert!(router.ingest("nope", vec![0.0; 3]).is_err());
-        assert!(router.snapshot("nope").is_err());
-        assert!(router.close_stream("nope").is_err());
+        pool.shutdown();
+    }
+
+    #[test]
+    fn stale_handle_after_close_is_rejected() {
+        let ds = yeast_like(8, 20);
+        let pool = ShardPool::spawn(PoolConfig::default());
+        let router = pool.router();
+        let h = router.open_stream("s", ds.dim(), small_cfg()).unwrap();
+        for i in 0..ds.n() {
+            router.ingest(&h, ds.x.row(i).to_vec()).unwrap();
+        }
+        router.close_stream(&h).unwrap();
+        // The slot may be reused by a new stream; the old handle's
+        // generation must not alias it.
+        let h2 = router.open_stream("s2", ds.dim(), small_cfg()).unwrap();
+        assert!(router.ingest(&h, ds.x.row(0).to_vec()).is_err());
+        assert!(router.snapshot(&h).is_err());
+        assert!(router.close_stream(&h).is_err());
+        // Async ingest through a stale handle is counted, not lost.
+        router.ingest_async(&h, ds.x.row(0).to_vec()).unwrap();
+        router.ingest(&h2, ds.x.row(0).to_vec()).unwrap(); // barrier
+        let snap = router.pool_snapshot().unwrap();
+        assert_eq!(snap.errors, 1, "orphaned async command must surface in pool errors");
         pool.shutdown();
     }
 
@@ -696,16 +1016,77 @@ mod tests {
         let ds = yeast_like(24, 21);
         let pool = ShardPool::spawn(PoolConfig { shards: 2, ..Default::default() });
         let router = pool.router();
-        router.open_stream("s", ds.dim(), small_cfg()).unwrap();
+        let h = router.open_stream("s", ds.dim(), small_cfg()).unwrap();
         for i in 0..ds.n() {
-            router.ingest("s", ds.x.row(i).to_vec()).unwrap();
+            router.ingest(&h, ds.x.row(i).to_vec()).unwrap();
         }
-        let snap = router.snapshot("s").unwrap();
+        let snap = router.snapshot(&h).unwrap();
         assert_eq!(snap.m, 24);
-        let d = router.measure_drift("s").unwrap();
+        assert_eq!(snap.kernel, "rbf");
+        let d = router.measure_drift(&h).unwrap();
         assert!(d.norms.frobenius < 1e-7, "pool stream drift {:?}", d.norms);
-        let stats = router.close_stream("s").unwrap();
+        let stats = router.close_stream(&h).unwrap();
         assert_eq!(stats.accepted, 24);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn batched_and_async_ingest_reach_the_same_state() {
+        let ds = yeast_like(21, 22);
+        let pool = ShardPool::spawn(PoolConfig { shards: 2, ..Default::default() });
+        let router = pool.router();
+        let hs = router.open_stream("seq", ds.dim(), small_cfg()).unwrap();
+        let hb = router.open_stream("bat", ds.dim(), small_cfg()).unwrap();
+        let ha = router.open_stream("asy", ds.dim(), small_cfg()).unwrap();
+        for i in 0..ds.n() {
+            router.ingest(&hs, ds.x.row(i).to_vec()).unwrap();
+            router.ingest_async(&ha, ds.x.row(i).to_vec()).unwrap();
+        }
+        // Batched: all 21 points in chunks of 8 (seed phase included).
+        let dim = ds.dim();
+        let flat = ds.x.as_slice();
+        let mut i = 0;
+        while i < ds.n() {
+            let end = (i + 8).min(ds.n());
+            let reply = router.ingest_many(&hb, flat[i * dim..end * dim].to_vec()).unwrap();
+            assert_eq!(reply.seeded + reply.accepted + reply.excluded, end - i);
+            i = end;
+        }
+        assert_eq!(router.sync(&ha).unwrap(), 0, "clean async stream has no errors");
+        for h in [&hs, &hb, &ha] {
+            let snap = router.snapshot(h).unwrap();
+            assert_eq!(snap.m, 21, "{}", h.id());
+        }
+        // All three eigensystems agree (same data, same kernel).
+        let s0 = router.snapshot(&hs).unwrap();
+        for h in [&hb, &ha] {
+            let s = router.snapshot(h).unwrap();
+            for (a, b) in s0.top_values.iter().zip(&s.top_values) {
+                assert!((a - b).abs() < 1e-10, "{}: {a} vs {b}", h.id());
+            }
+        }
+        pool.shutdown();
+    }
+
+    #[test]
+    fn async_errors_surface_on_next_sync() {
+        let ds = yeast_like(8, 23);
+        let pool = ShardPool::spawn(PoolConfig::default());
+        let router = pool.router();
+        let h = router.open_stream("s", ds.dim(), small_cfg()).unwrap();
+        for i in 0..ds.n() {
+            router.ingest_async(&h, ds.x.row(i).to_vec()).unwrap();
+        }
+        // A wrong-dimension point: accepted by the queue, deferred as a
+        // per-stream error.
+        router.ingest_async(&h, vec![0.0; ds.dim() + 1]).unwrap();
+        let err = router.sync(&h).unwrap_err();
+        assert!(err.contains("dimension mismatch"), "deferred error: {err}");
+        // Error cleared; the counter remembers.
+        assert_eq!(router.sync(&h).unwrap(), 1);
+        let m = router.metrics(&h).unwrap();
+        assert_eq!(m.errors, 1);
+        assert_eq!(m.async_errors, 1);
         pool.shutdown();
     }
 
@@ -715,9 +1096,9 @@ mod tests {
         let pool = ShardPool::spawn(PoolConfig { shards: 2, ..Default::default() });
         let router = pool.router();
         for sid in ["alpha", "beta", "gamma"] {
-            router.open_stream(sid, ds.dim(), small_cfg()).unwrap();
+            let h = router.open_stream(sid, ds.dim(), small_cfg()).unwrap();
             for i in 0..ds.n() {
-                router.ingest(sid, ds.x.row(i).to_vec()).unwrap();
+                router.ingest(&h, ds.x.row(i).to_vec()).unwrap();
             }
         }
         let snap = router.pool_snapshot().unwrap();

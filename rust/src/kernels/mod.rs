@@ -5,21 +5,59 @@
 //! constant-diagonal case (`k(x,x) = 1`) the paper's Algorithm 1 note
 //! discusses.
 
-use crate::linalg::Mat;
+use crate::linalg::{matmul_nt_into, Mat, MatView, MatViewMut};
 use crate::util::par;
+
+/// How a kernel's Gram blocks decompose over a dot-product GEMM — the
+/// dispatch key for [`kernel_rows_into`], which turns the `b·m` scalar
+/// `eval` calls of a batched ingest into one blocked `A·Bᵀ` product.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BlockForm {
+    /// `k(x, y) = f(⟨x, y⟩)` — one GEMM, then map every entry
+    /// (linear, polynomial, sigmoid).
+    DotProduct,
+    /// `k(x, y) = f(‖x − y‖²)` with `‖x − y‖² = ‖x‖² − 2⟨x, y⟩ + ‖y‖²`
+    /// — one GEMM plus row norms (RBF).
+    SquaredDistance,
+    /// No GEMM form (e.g. the L1-distance Laplacian) — fall back to
+    /// per-point scalar evaluation.
+    General,
+}
 
 /// A symmetric positive (semi-)definite kernel over ℝᵈ rows.
 pub trait Kernel: Sync + Send {
     /// Evaluate `k(x, y)`.
     fn eval(&self, x: &[f64], y: &[f64]) -> f64;
 
-    /// Human-readable name for logs / experiment reports.
-    fn name(&self) -> String;
+    /// Kernel family label for logs, metrics and snapshots. Static —
+    /// the metrics/snapshot paths call this per report and must not
+    /// allocate.
+    fn name(&self) -> &'static str;
+
+    /// Human-readable description including parameters (allocates;
+    /// experiment reports only, never the hot path).
+    fn describe(&self) -> String {
+        self.name().to_string()
+    }
 
     /// Whether `k(x, x)` is the same for every `x` (true for RBF and
     /// Laplacian) — enables the simplification noted after Algorithm 1.
     fn constant_diagonal(&self) -> bool {
         false
+    }
+
+    /// How blocks of this kernel reduce to a GEMM (see [`BlockForm`]).
+    fn block_form(&self) -> BlockForm {
+        BlockForm::General
+    }
+
+    /// Finish a blocked evaluation: map the raw GEMM quantity — the dot
+    /// product (`DotProduct`) or the squared distance
+    /// (`SquaredDistance`) — to the kernel value. Must compute the same
+    /// function of that quantity as `eval` does, so blocked and scalar
+    /// paths agree to rounding.
+    fn map_block(&self, raw: f64) -> f64 {
+        raw
     }
 }
 
@@ -34,11 +72,20 @@ impl Kernel for Rbf {
     fn eval(&self, x: &[f64], y: &[f64]) -> f64 {
         (-sqdist(x, y) / self.sigma).exp()
     }
-    fn name(&self) -> String {
+    fn name(&self) -> &'static str {
+        "rbf"
+    }
+    fn describe(&self) -> String {
         format!("rbf(sigma={:.4})", self.sigma)
     }
     fn constant_diagonal(&self) -> bool {
         true
+    }
+    fn block_form(&self) -> BlockForm {
+        BlockForm::SquaredDistance
+    }
+    fn map_block(&self, raw: f64) -> f64 {
+        (-raw / self.sigma).exp()
     }
 }
 
@@ -50,8 +97,11 @@ impl Kernel for Linear {
     fn eval(&self, x: &[f64], y: &[f64]) -> f64 {
         crate::linalg::dot(x, y)
     }
-    fn name(&self) -> String {
-        "linear".into()
+    fn name(&self) -> &'static str {
+        "linear"
+    }
+    fn block_form(&self) -> BlockForm {
+        BlockForm::DotProduct
     }
 }
 
@@ -66,8 +116,17 @@ impl Kernel for Polynomial {
     fn eval(&self, x: &[f64], y: &[f64]) -> f64 {
         (crate::linalg::dot(x, y) + self.offset).powi(self.degree as i32)
     }
-    fn name(&self) -> String {
+    fn name(&self) -> &'static str {
+        "poly"
+    }
+    fn describe(&self) -> String {
         format!("poly(d={}, c={})", self.degree, self.offset)
+    }
+    fn block_form(&self) -> BlockForm {
+        BlockForm::DotProduct
+    }
+    fn map_block(&self, raw: f64) -> f64 {
+        (raw + self.offset).powi(self.degree as i32)
     }
 }
 
@@ -82,7 +141,10 @@ impl Kernel for Laplacian {
         let l1: f64 = x.iter().zip(y).map(|(a, b)| (a - b).abs()).sum();
         (-l1 / self.sigma).exp()
     }
-    fn name(&self) -> String {
+    fn name(&self) -> &'static str {
+        "laplacian"
+    }
+    fn describe(&self) -> String {
         format!("laplacian(sigma={:.4})", self.sigma)
     }
     fn constant_diagonal(&self) -> bool {
@@ -102,8 +164,17 @@ impl Kernel for Sigmoid {
     fn eval(&self, x: &[f64], y: &[f64]) -> f64 {
         (self.alpha * crate::linalg::dot(x, y) + self.beta).tanh()
     }
-    fn name(&self) -> String {
+    fn name(&self) -> &'static str {
+        "sigmoid"
+    }
+    fn describe(&self) -> String {
         format!("sigmoid(a={}, b={})", self.alpha, self.beta)
+    }
+    fn block_form(&self) -> BlockForm {
+        BlockForm::DotProduct
+    }
+    fn map_block(&self, raw: f64) -> f64 {
+        (self.alpha * raw + self.beta).tanh()
     }
 }
 
@@ -216,6 +287,137 @@ pub fn kernel_column_into(
         for (i, slot) in out.iter_mut().enumerate() {
             *slot = kernel.eval(row(i), y);
         }
+    }
+}
+
+/// Reusable scratch for [`kernel_rows_into`]: the row-norm vectors the
+/// squared-distance trick needs, with a realloc counter so the batched
+/// ingest path can assert steady-state allocation silence.
+#[derive(Clone, Debug, Default)]
+pub struct KernelBlockScratch {
+    /// `‖xⱼ‖²` over the retained rows.
+    xnorms: Vec<f64>,
+    /// `‖yᵢ‖²` over the batch rows.
+    ynorms: Vec<f64>,
+    reallocs: u64,
+}
+
+impl KernelBlockScratch {
+    pub fn new() -> Self {
+        KernelBlockScratch::default()
+    }
+
+    /// Capacity-growth events since construction (zero once warm).
+    pub fn reallocs(&self) -> u64 {
+        self.reallocs
+    }
+
+    /// Bytes currently held by the row-norm buffers.
+    pub fn bytes_resident(&self) -> usize {
+        std::mem::size_of::<f64>() * (self.xnorms.capacity() + self.ynorms.capacity())
+    }
+
+    /// Pre-size for blocks of up to `m` retained × `b` batch rows
+    /// without counting toward the realloc counter.
+    pub fn reserve(&mut self, m: usize, b: usize) {
+        if self.xnorms.capacity() < m {
+            self.xnorms.reserve(m - self.xnorms.len());
+        }
+        if self.ynorms.capacity() < b {
+            self.ynorms.reserve(b - self.ynorms.len());
+        }
+    }
+}
+
+// Capacity-growth-counting resize shared with the rank-one workspace —
+// one definition, so batch-path and update-path realloc accounting can
+// never diverge.
+use crate::rankone::ensure_f64;
+
+/// Kernel rows of a *batch*: fills `out` (`b × m`, row-major) with
+/// `out[i·m + j] = k(yᵢ, xⱼ)` for the `b` rows of `ys` against the
+/// first `m` rows of `x` — the batched form of [`kernel_column_into`].
+///
+/// For dot-product-family kernels ([`BlockForm::DotProduct`]) the whole
+/// block is one blocked `Y·Xᵀ` GEMM ([`matmul_nt_into`]) followed by an
+/// entry-wise map; the RBF family ([`BlockForm::SquaredDistance`])
+/// additionally forms the two row-norm vectors and evaluates
+/// `‖y‖² − 2⟨y,x⟩ + ‖x‖²` per entry (clamped at zero against rounding).
+/// Kernels without a GEMM form fall back to per-point scalar `eval`,
+/// bitwise identical to the sequential path.
+#[allow(clippy::too_many_arguments)]
+pub fn kernel_rows_into(
+    kernel: &dyn Kernel,
+    x: &[f64],
+    dim: usize,
+    m: usize,
+    ys: &[f64],
+    b: usize,
+    out: &mut Vec<f64>,
+    scratch: &mut KernelBlockScratch,
+) {
+    assert!(x.len() >= m * dim, "kernel_rows_into: data shorter than m rows");
+    assert!(ys.len() >= b * dim, "kernel_rows_into: batch shorter than b rows");
+    ensure_f64(out, b * m, &mut scratch.reallocs);
+    if b == 0 || m == 0 {
+        return;
+    }
+    let form = kernel.block_form();
+    if form == BlockForm::General || dim == 0 {
+        // Scalar fallback — same evaluation order as kernel_column_into,
+        // parallel over batch rows when the block is large enough.
+        let row_x = |j: usize| &x[j * dim..(j + 1) * dim];
+        if b * m >= 256 {
+            par::par_chunks_mut(out, m, |i, row| {
+                let yi = &ys[i * dim..(i + 1) * dim];
+                for (j, slot) in row.iter_mut().enumerate() {
+                    *slot = kernel.eval(row_x(j), yi);
+                }
+            });
+        } else {
+            for i in 0..b {
+                let yi = &ys[i * dim..(i + 1) * dim];
+                for (j, slot) in out[i * m..(i + 1) * m].iter_mut().enumerate() {
+                    *slot = kernel.eval(row_x(j), yi);
+                }
+            }
+        }
+        return;
+    }
+    // One blocked GEMM: out[i,j] = ⟨yᵢ, xⱼ⟩.
+    {
+        let yv = MatView::of_rows(ys, b, dim);
+        let xv = MatView::of_rows(x, m, dim);
+        let mut ov = MatViewMut::new(out, b, m, m);
+        matmul_nt_into(yv, xv, &mut ov);
+    }
+    match form {
+        BlockForm::DotProduct => {
+            for v in out.iter_mut() {
+                *v = kernel.map_block(*v);
+            }
+        }
+        BlockForm::SquaredDistance => {
+            ensure_f64(&mut scratch.xnorms, m, &mut scratch.reallocs);
+            ensure_f64(&mut scratch.ynorms, b, &mut scratch.reallocs);
+            for (j, nj) in scratch.xnorms.iter_mut().enumerate() {
+                let r = &x[j * dim..(j + 1) * dim];
+                *nj = crate::linalg::dot(r, r);
+            }
+            for (i, ni) in scratch.ynorms.iter_mut().enumerate() {
+                let r = &ys[i * dim..(i + 1) * dim];
+                *ni = crate::linalg::dot(r, r);
+            }
+            for i in 0..b {
+                let yn = scratch.ynorms[i];
+                let row = &mut out[i * m..(i + 1) * m];
+                for (j, v) in row.iter_mut().enumerate() {
+                    let d2 = (yn - 2.0 * *v + scratch.xnorms[j]).max(0.0);
+                    *v = kernel.map_block(d2);
+                }
+            }
+        }
+        BlockForm::General => unreachable!(),
     }
 }
 
@@ -343,5 +545,76 @@ mod tests {
         let x = toy_data();
         let c = cross_gram(&k, &x, &x);
         assert!(c.max_abs_diff(&gram(&k, &x)) < 1e-15);
+    }
+
+    #[test]
+    fn kernel_rows_match_scalar_eval_across_forms() {
+        // Every block form (GEMM+map, GEMM+norms, scalar fallback) must
+        // agree with per-entry eval to rounding.
+        let x = toy_data(); // 8 × 3 retained
+        let ys = Mat::from_fn(5, 3, |i, j| ((i * 7 + j) as f64 * 0.23).cos());
+        let kernels: Vec<Box<dyn Kernel>> = vec![
+            Box::new(Rbf { sigma: 0.8 }),
+            Box::new(Linear),
+            Box::new(Polynomial { degree: 3, offset: 0.5 }),
+            Box::new(Sigmoid { alpha: 0.7, beta: 0.1 }),
+            Box::new(Laplacian { sigma: 1.2 }),
+        ];
+        let mut scratch = KernelBlockScratch::new();
+        let mut out = Vec::new();
+        for k in &kernels {
+            let (xs, yy) = (x.as_slice(), ys.as_slice());
+            kernel_rows_into(k.as_ref(), xs, 3, 8, yy, 5, &mut out, &mut scratch);
+            assert_eq!(out.len(), 5 * 8);
+            for i in 0..5 {
+                for j in 0..8 {
+                    let expect = k.eval(ys.row(i), x.row(j));
+                    assert!(
+                        (out[i * 8 + j] - expect).abs() < 1e-12,
+                        "{} ({i},{j}): {} vs {expect}",
+                        k.name(),
+                        out[i * 8 + j]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn kernel_rows_scratch_reuse_is_allocation_silent() {
+        let k = Rbf { sigma: 1.1 };
+        let x = toy_data();
+        let mut scratch = KernelBlockScratch::new();
+        let mut out = Vec::new();
+        kernel_rows_into(&k, x.as_slice(), 3, 8, x.as_slice(), 8, &mut out, &mut scratch);
+        let warm = scratch.reallocs();
+        let cap = out.capacity();
+        for _ in 0..5 {
+            kernel_rows_into(&k, x.as_slice(), 3, 8, x.as_slice(), 6, &mut out, &mut scratch);
+        }
+        assert_eq!(scratch.reallocs(), warm, "warm blocked path must not grow buffers");
+        assert_eq!(out.capacity(), cap);
+    }
+
+    #[test]
+    fn kernel_rows_empty_edges() {
+        let k = Linear;
+        let x = toy_data();
+        let mut scratch = KernelBlockScratch::new();
+        let mut out = vec![7.0; 3];
+        kernel_rows_into(&k, x.as_slice(), 3, 0, x.as_slice(), 4, &mut out, &mut scratch);
+        assert!(out.is_empty());
+        kernel_rows_into(&k, x.as_slice(), 3, 5, x.as_slice(), 0, &mut out, &mut scratch);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn names_are_static_and_describe_carries_params() {
+        let k = Rbf { sigma: 0.5 };
+        let n: &'static str = k.name();
+        assert_eq!(n, "rbf");
+        assert!(k.describe().contains("0.5"));
+        assert_eq!(Linear.name(), "linear");
+        assert_eq!(Linear.describe(), "linear");
     }
 }

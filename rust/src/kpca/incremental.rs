@@ -22,7 +22,7 @@
 
 use std::sync::Arc;
 
-use crate::kernels::{kernel_column_into, Kernel};
+use crate::kernels::{kernel_column_into, kernel_rows_into, Kernel, KernelBlockScratch};
 use crate::linalg::Mat;
 use crate::rankone::{
     expand_eigensystem_ws, rank_one_update_ws, EigenBasis, NativeRotate, Rotate, UpdateStats,
@@ -74,6 +74,16 @@ impl KpcaStats {
     }
 }
 
+/// Result of a batched ingest ([`IncrementalKpca::push_batch_with`]):
+/// how the batch's points split between accepted and §5.1-excluded.
+/// Per-point flags are available from
+/// [`IncrementalKpca::last_batch_mask`] until the next batch.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BatchOutcome {
+    pub accepted: usize,
+    pub excluded: usize,
+}
+
 /// Reusable per-step vectors (capacities retained across pushes).
 #[derive(Clone, Debug, Default)]
 struct StepScratch {
@@ -91,6 +101,21 @@ struct StepScratch {
     /// Expansion update vectors (eq. 2 / eq. 3).
     v1: Vec<f64>,
     v2: Vec<f64>,
+    /// Batched-ingest scratch: the `b × m₀` kernel rows of the batch
+    /// against the retained set (one blocked GEMM for GEMM-able
+    /// kernels) …
+    block: Vec<f64>,
+    /// … the `b × b` kernel block among the batch's own points …
+    intra: Vec<f64>,
+    /// … per-point accept flags of the last batch …
+    mask: Vec<bool>,
+    /// … and the batch-local indices accepted so far.
+    batch_idx: Vec<usize>,
+    /// Row-norm scratch for the blocked kernel evaluation.
+    kb: KernelBlockScratch,
+    /// Capacity-growth events across the batch scratch buffers (zero
+    /// once warm — asserted by the batching test suite).
+    reallocs: u64,
 }
 
 /// Incremental kernel PCA state: the eigendecomposition of the
@@ -277,20 +302,187 @@ impl<'k> IncrementalKpca<'k> {
     }
 
     /// First point of a cold-started (unadjusted) stream: the 1×1
-    /// eigensystem is immediate.
+    /// eigensystem is immediate. Grows the existing (possibly
+    /// pre-[`IncrementalKpca::reserve`]d) buffers in place rather than
+    /// replacing them, so reserved capacity survives the cold start.
     fn bootstrap_first(&mut self, xnew: &[f64]) -> Result<bool, String> {
         if self.mean_adjust {
             return Err("mean-adjusted stream cannot cold-start from m=0".into());
         }
+        debug_assert_eq!(self.vecs.cols(), 0, "bootstrap on a non-empty basis");
         let knew = self.kernel.get().eval(xnew, xnew);
         self.x.extend_from_slice(xnew);
         self.m = 1;
-        self.vals = vec![knew];
-        self.vecs = EigenBasis::from_mat(Mat::eye(1));
+        self.vals.clear();
+        self.vals.push(knew);
+        self.vecs.expand(); // 0×0 → zeroed 1×1, within reserved capacity
+        self.vecs[(0, 0)] = 1.0;
         self.s = knew;
-        self.k1 = vec![knew];
+        self.k1.clear();
+        self.k1.push(knew);
         self.stats.accepted += 1;
         Ok(true)
+    }
+
+    /// Ingest a whole batch with the default native rotation engine
+    /// (see [`IncrementalKpca::push_batch_with`]).
+    pub fn push_batch(&mut self, xs: &[f64]) -> Result<BatchOutcome, String> {
+        self.push_batch_with(xs, &NativeRotate)
+    }
+
+    /// Ingest `b = xs.len() / dim` examples (flat row-major) in one
+    /// call. The kernel rows of all `b` points against the `m` retained
+    /// points — and the `b × b` block among the new points themselves —
+    /// are computed up front as blocked GEMMs
+    /// ([`kernel_rows_into`]: one `matmul_nt_into` plus an entry map
+    /// for dot-product-family kernels, the row-norm trick for RBF, a
+    /// scalar fallback otherwise); the `b` rank-one update sequences
+    /// then run back to back with no kernel evaluation in between —
+    /// identical update numerics to `b` sequential pushes, with the
+    /// `b·m` scalar `eval` loop replaced by one GEMM.
+    ///
+    /// Points are applied in order; a point excluded as rank-deficient
+    /// (§5.1) simply does not join the retained set, exactly as in the
+    /// sequential path. On `Err`, points before the failing one remain
+    /// applied.
+    pub fn push_batch_with(
+        &mut self,
+        xs: &[f64],
+        engine: &dyn Rotate,
+    ) -> Result<BatchOutcome, String> {
+        assert!(self.dim > 0, "push_batch on a zero-dimensional stream");
+        assert_eq!(xs.len() % self.dim, 0, "batch length not a multiple of dim");
+        let b = xs.len() / self.dim;
+        let cap_mask = self.scratch.mask.capacity();
+        let cap_idx = self.scratch.batch_idx.capacity();
+        self.scratch.mask.clear();
+        self.scratch.batch_idx.clear();
+        if b == 0 {
+            return Ok(BatchOutcome::default());
+        }
+        let m0 = self.m;
+        // Stage 1: blocked kernel rows — batch × retained, batch × batch.
+        {
+            let mut block = std::mem::take(&mut self.scratch.block);
+            let mut kb = std::mem::take(&mut self.scratch.kb);
+            kernel_rows_into(self.kernel.get(), &self.x, self.dim, m0, xs, b, &mut block, &mut kb);
+            self.scratch.block = block;
+            let mut intra = std::mem::take(&mut self.scratch.intra);
+            kernel_rows_into(self.kernel.get(), xs, self.dim, b, xs, b, &mut intra, &mut kb);
+            self.scratch.intra = intra;
+            self.scratch.kb = kb;
+        }
+        // Stage 2: the b rank-one update sequences, in order. The kernel
+        // column of point i is the precomputed row against the original
+        // retained set plus the intra-batch entries of the points
+        // accepted before it.
+        let mut outcome = BatchOutcome::default();
+        for i in 0..b {
+            let xi = &xs[i * self.dim..(i + 1) * self.dim];
+            let accepted = if self.m == 0 {
+                self.bootstrap_first(xi)?
+            } else {
+                let mut a = std::mem::take(&mut self.scratch.a);
+                let cap_a = a.capacity();
+                a.clear();
+                a.extend_from_slice(&self.scratch.block[i * m0..(i + 1) * m0]);
+                for &j in &self.scratch.batch_idx {
+                    a.push(self.scratch.intra[i * b + j]);
+                }
+                if a.capacity() > cap_a {
+                    self.scratch.reallocs += 1;
+                }
+                self.scratch.a = a;
+                let knew = self.scratch.intra[i * b + i];
+                if self.mean_adjust {
+                    self.push_adjusted(xi, knew, engine)?
+                } else {
+                    self.push_unadjusted(xi, knew, engine)?
+                }
+            };
+            self.scratch.mask.push(accepted);
+            if accepted {
+                self.scratch.batch_idx.push(i);
+                outcome.accepted += 1;
+            } else {
+                outcome.excluded += 1;
+            }
+        }
+        if self.scratch.mask.capacity() > cap_mask {
+            self.scratch.reallocs += 1;
+        }
+        if self.scratch.batch_idx.capacity() > cap_idx {
+            self.scratch.reallocs += 1;
+        }
+        Ok(outcome)
+    }
+
+    /// Per-point accept flags of the most recent
+    /// [`IncrementalKpca::push_batch_with`] call (empty before the
+    /// first batch). Entry `i` is `true` iff batch point `i` joined the
+    /// retained set.
+    pub fn last_batch_mask(&self) -> &[bool] {
+        &self.scratch.mask
+    }
+
+    /// Capacity-growth events in the batched-ingest scratch (kernel
+    /// blocks, row norms, assembly buffers) — the batch-path companion
+    /// of [`IncrementalKpca::hot_path_reallocs`], zero once warm.
+    pub fn batch_reallocs(&self) -> u64 {
+        self.scratch.reallocs + self.scratch.kb.reallocs()
+    }
+
+    /// Bytes resident in the batched-ingest scratch (kernel blocks,
+    /// intra-batch block, accept mask/indices, row norms) — the
+    /// batch-path companion of [`IncrementalKpca::hot_path_bytes`]. A
+    /// stream that never batches holds none of this.
+    pub fn batch_bytes_resident(&self) -> usize {
+        let f = std::mem::size_of::<f64>();
+        f * (self.scratch.block.capacity() + self.scratch.intra.capacity())
+            + std::mem::size_of::<bool>() * self.scratch.mask.capacity()
+            + std::mem::size_of::<usize>() * self.scratch.batch_idx.capacity()
+            + self.scratch.kb.bytes_resident()
+    }
+
+    /// Pre-size every hot-path buffer for eigensystems up to `m` rows
+    /// and ingest batches up to `b` points, without counting toward the
+    /// realloc counters — after this, streaming (single or batched) up
+    /// to that size touches the allocator only for the retained-data
+    /// and running-sum appends.
+    pub fn reserve(&mut self, m: usize, b: usize) {
+        self.ws.reserve(m, m);
+        self.vecs.reserve(m, m);
+        self.x.reserve((m * self.dim).saturating_sub(self.x.len()));
+        self.k1.reserve(m.saturating_sub(self.k1.len()));
+        let s = &mut self.scratch;
+        for buf in [
+            &mut s.a, &mut s.u, &mut s.vp, &mut s.vm, &mut s.k1_next, &mut s.v, &mut s.v1,
+            &mut s.v2,
+        ] {
+            if buf.capacity() < m + 1 {
+                buf.reserve(m + 1 - buf.len());
+            }
+        }
+        if s.block.capacity() < b * m {
+            s.block.reserve(b * m - s.block.len());
+        }
+        if s.intra.capacity() < b * b {
+            s.intra.reserve(b * b - s.intra.len());
+        }
+        if s.mask.capacity() < b {
+            s.mask.reserve(b - s.mask.len());
+        }
+        if s.batch_idx.capacity() < b {
+            s.batch_idx.reserve(b - s.batch_idx.len());
+        }
+        s.kb.reserve(m, b);
+    }
+
+    /// The retained examples as a flat row-major slice (`m × dim`) —
+    /// the no-copy companion of [`IncrementalKpca::data`] for scoring
+    /// paths that feed [`kernel_column_into`] directly.
+    pub fn data_flat(&self) -> &[f64] {
+        &self.x
     }
 
     /// Algorithm 1: expansion + two rank-one updates (eq. 2). Reads the
@@ -696,6 +888,137 @@ mod tests {
         });
         let drift = handle.join().unwrap();
         assert!(drift < 1e-8, "drift {drift}");
+    }
+
+    #[test]
+    fn batched_push_matches_sequential_pushes() {
+        // Same stream driven point-by-point and in batches of 5: the
+        // rank-one update sequences are identical, so the eigensystems
+        // must agree to rounding of the blocked kernel evaluation.
+        let ds = yeast_like(26, 31);
+        let kern = Rbf { sigma: 1.3 };
+        let seed = ds.x.submatrix(6, ds.dim());
+        let mut seq = IncrementalKpca::from_batch(&kern, &seed, true).unwrap();
+        let mut bat = IncrementalKpca::from_batch(&kern, &seed, true).unwrap();
+        for i in 6..ds.n() {
+            seq.push(ds.x.row(i)).unwrap();
+        }
+        let dim = ds.dim();
+        let flat = ds.x.as_slice();
+        let mut i = 6;
+        while i < ds.n() {
+            let end = (i + 5).min(ds.n());
+            let out = bat.push_batch(&flat[i * dim..end * dim]).unwrap();
+            assert_eq!(out.accepted, end - i);
+            assert_eq!(bat.last_batch_mask().len(), end - i);
+            i = end;
+        }
+        assert_eq!(seq.len(), bat.len());
+        for (a, b) in seq.vals.iter().zip(&bat.vals) {
+            assert!((a - b).abs() < 1e-10, "{a} vs {b}");
+        }
+        let diff = bat.reconstruct().max_abs_diff(&seq.reconstruct());
+        assert!(diff < 1e-10, "batched vs sequential reconstruction diff {diff}");
+    }
+
+    #[test]
+    fn batched_push_cold_start_unadjusted() {
+        // Whole stream in one batch from an empty unadjusted state: the
+        // first point bootstraps, the rest run off the intra-batch block.
+        let ds = yeast_like(12, 32);
+        let kern = Linear;
+        let empty = Mat::zeros(0, ds.dim());
+        let mut inc = IncrementalKpca::from_batch(&kern, &empty, false).unwrap();
+        let out = inc.push_batch(ds.x.as_slice()).unwrap();
+        assert_eq!(out.accepted, 12);
+        let drift = inc.reconstruct().max_abs_diff(&inc.batch_reference());
+        assert!(drift < 1e-8, "drift {drift}");
+    }
+
+    #[test]
+    fn batched_push_excludes_mid_batch_like_sequential() {
+        // A batch whose middle point sits at the data mean (linear
+        // kernel, adjusted): the §5.1 exclusion must fire inside the
+        // batch and later points must still match the sequential run.
+        let ds = yeast_like(10, 33);
+        let kern = Linear;
+        let seed = ds.x.submatrix(6, ds.dim());
+        let dim = ds.dim();
+        let mean: Vec<f64> =
+            (0..dim).map(|j| (0..6).map(|i| ds.x[(i, j)]).sum::<f64>() / 6.0).collect();
+        // The mean goes FIRST so it is evaluated against exactly the
+        // seed set it is the mean of (v₀ = 0 → excluded); the accepted
+        // points behind it must then match the sequential run.
+        let mut batch = Vec::new();
+        batch.extend_from_slice(&mean);
+        batch.extend_from_slice(ds.x.row(6));
+        batch.extend_from_slice(ds.x.row(7));
+        batch.extend_from_slice(ds.x.row(8));
+
+        let mut bat = IncrementalKpca::from_batch(&kern, &seed, true).unwrap();
+        let out = bat.push_batch(&batch).unwrap();
+        assert_eq!(out.excluded, 1);
+        assert_eq!(out.accepted, 3);
+        assert_eq!(bat.last_batch_mask(), &[false, true, true, true]);
+
+        let mut seq = IncrementalKpca::from_batch(&kern, &seed, true).unwrap();
+        assert!(!seq.push(&mean).unwrap());
+        assert!(seq.push(ds.x.row(6)).unwrap());
+        assert!(seq.push(ds.x.row(7)).unwrap());
+        assert!(seq.push(ds.x.row(8)).unwrap());
+        let diff = bat.reconstruct().max_abs_diff(&seq.reconstruct());
+        assert!(diff < 1e-10, "diff {diff}");
+    }
+
+    #[test]
+    fn reserved_cold_start_is_allocation_silent() {
+        // bootstrap_first must grow the reserved buffers in place —
+        // reserve() capacity survives the cold start, so the whole
+        // stream (bootstrap included) leaves the tracked counters flat.
+        let ds = yeast_like(20, 35);
+        let kern = Rbf { sigma: 1.0 };
+        let empty = Mat::zeros(0, ds.dim());
+        let mut inc = IncrementalKpca::from_batch(&kern, &empty, false).unwrap();
+        inc.reserve(24, 8);
+        let ws0 = inc.hot_path_reallocs();
+        let bat0 = inc.batch_reallocs();
+        let dim = ds.dim();
+        let flat = ds.x.as_slice();
+        let mut i = 0;
+        while i < ds.n() {
+            let end = (i + 8).min(ds.n());
+            inc.push_batch(&flat[i * dim..end * dim]).unwrap();
+            i = end;
+        }
+        assert_eq!(inc.len(), 20);
+        assert_eq!(inc.hot_path_reallocs(), ws0, "cold start discarded reserved capacity");
+        assert_eq!(inc.batch_reallocs(), bat0);
+        let drift = inc.reconstruct().max_abs_diff(&inc.batch_reference());
+        assert!(drift < 1e-8, "drift {drift}");
+    }
+
+    #[test]
+    fn reserved_batched_stream_is_allocation_silent() {
+        // Pre-size for the final eigensystem and batch, then assert the
+        // tracked hot-path counters never move across the batched run.
+        let ds = yeast_like(36, 34);
+        let kern = Rbf { sigma: 1.0 };
+        let seed = ds.x.submatrix(6, ds.dim());
+        let mut inc = IncrementalKpca::from_batch(&kern, &seed, true).unwrap();
+        inc.reserve(40, 10);
+        let ws0 = inc.hot_path_reallocs();
+        let bat0 = inc.batch_reallocs();
+        let dim = ds.dim();
+        let flat = ds.x.as_slice();
+        let mut i = 6;
+        while i < ds.n() {
+            let end = (i + 10).min(ds.n());
+            inc.push_batch(&flat[i * dim..end * dim]).unwrap();
+            i = end;
+        }
+        assert_eq!(inc.len(), 36);
+        assert_eq!(inc.hot_path_reallocs(), ws0, "workspace/basis grew after reserve");
+        assert_eq!(inc.batch_reallocs(), bat0, "batch scratch grew after reserve");
     }
 
     #[test]

@@ -7,12 +7,22 @@
 //! ridge value, with the eigensystem update doing the `O(m³)` work once
 //! per example regardless of how many ridges are evaluated (the standard
 //! reason to prefer the eigendecomposition over one Cholesky per λ).
+//!
+//! Refits follow the cached discipline the projection path adopted in
+//! the coordinator work: everything a refit needs — coefficients,
+//! in-sample fits, effective degrees of freedom — is computed from the
+//! *tracked* eigensystem (`K = UΛUᵀ` exactly, to update rounding), so
+//! no Gram matrix is ever recomputed per refit. The pre-cache
+//! Gram-recomputing path survives as [`IncrementalKrr::fitted_recomputed`],
+//! the ≤1e-10 equivalence reference. Prediction evaluates its kernel
+//! column over the state's flat retained data
+//! ([`IncrementalKpca::data_flat`]) — no per-query matrix clone.
 
-use crate::kernels::{kernel_column, Kernel};
+use crate::kernels::{kernel_column_into, Kernel};
 use crate::linalg::{gemv_t, Mat};
 use crate::rankone::Rotate;
 
-use super::incremental::IncrementalKpca;
+use super::incremental::{BatchOutcome, IncrementalKpca};
 
 /// Incremental KRR model: an (unadjusted) incremental eigensystem plus
 /// the stored targets.
@@ -58,6 +68,38 @@ impl<'k> IncrementalKrr<'k> {
         Ok(accepted)
     }
 
+    /// Ingest a labelled batch (`xs` is `b × dim` row-major, one target
+    /// per point) through the eigensystem's blocked batch entry point;
+    /// targets of excluded points are dropped to keep `y` aligned with
+    /// the retained set.
+    pub fn push_batch(&mut self, xs: &[f64], ys: &[f64]) -> Result<BatchOutcome, String> {
+        self.push_batch_with(xs, ys, &crate::rankone::NativeRotate)
+    }
+
+    pub fn push_batch_with(
+        &mut self,
+        xs: &[f64],
+        ys: &[f64],
+        engine: &dyn Rotate,
+    ) -> Result<BatchOutcome, String> {
+        assert_eq!(
+            xs.len(),
+            ys.len() * self.kpca.dim(),
+            "one target per batch point required"
+        );
+        let outcome = self.kpca.push_batch_with(xs, engine);
+        // Sync targets with whatever prefix the eigensystem actually
+        // accepted — on `Err` the accepted prefix remains applied (the
+        // mask covers exactly the processed points), and `y` must not
+        // fall out of step with the retained set.
+        for (&yi, &ok) in ys.iter().zip(self.kpca.last_batch_mask()) {
+            if ok {
+                self.y.push(yi);
+            }
+        }
+        outcome
+    }
+
     /// Dual coefficients `α = U (Λ + λI)⁻¹ Uᵀ y` for the current ridge.
     pub fn coefficients(&self) -> Vec<f64> {
         self.coefficients_for(self.ridge)
@@ -75,15 +117,49 @@ impl<'k> IncrementalKrr<'k> {
         crate::linalg::gemv(&self.kpca.vecs, &scaled)
     }
 
-    /// Predict at a query point.
+    /// Predict at a query point. The kernel column is evaluated over
+    /// the state's flat retained data — `O(m·d)` kernel work, no
+    /// per-query matrix clone.
     pub fn predict(&self, x: &[f64]) -> f64 {
-        let data = self.kpca.data();
-        let kq = kernel_column(self.kpca.kernel_ref(), &data, self.len(), x);
+        let mut kq = Vec::with_capacity(self.len());
+        kernel_column_into(
+            self.kpca.kernel_ref(),
+            self.kpca.data_flat(),
+            self.kpca.dim(),
+            self.len(),
+            x,
+            &mut kq,
+        );
         crate::linalg::dot(&self.coefficients(), &kq)
     }
 
-    /// In-sample predictions (smoother matrix applied to `y`).
+    /// In-sample predictions for the current ridge (see
+    /// [`IncrementalKrr::fitted_for`]).
     pub fn fitted(&self) -> Vec<f64> {
+        self.fitted_for(self.ridge)
+    }
+
+    /// In-sample predictions `K α = U Λ (Λ + λI)⁻¹ Uᵀ y` straight off
+    /// the tracked eigensystem — the cached-centering discipline: a
+    /// refit at any ridge is `O(m²)` with *zero* kernel evaluations (the
+    /// incremental update already paid for `K = UΛUᵀ`). The
+    /// Gram-recomputing path is kept as
+    /// [`IncrementalKrr::fitted_recomputed`] and must agree to ≤1e-10.
+    pub fn fitted_for(&self, ridge: f64) -> Vec<f64> {
+        let uty = gemv_t(&self.kpca.vecs, &self.y);
+        let scaled: Vec<f64> = uty
+            .iter()
+            .zip(&self.kpca.vals)
+            .map(|(c, l)| c * l / (l + ridge))
+            .collect();
+        crate::linalg::gemv(&self.kpca.vecs, &scaled)
+    }
+
+    /// Reference in-sample predictions: recompute the full Gram and
+    /// apply it to the coefficients (`O(m²)` kernel evaluations — the
+    /// pre-cache behaviour, kept to validate [`IncrementalKrr::fitted`]
+    /// against).
+    pub fn fitted_recomputed(&self) -> Vec<f64> {
         let data = self.kpca.data();
         let k = crate::kernels::gram(self.kpca.kernel_ref(), &data);
         crate::linalg::gemv(&k, &self.coefficients())
@@ -148,6 +224,66 @@ mod tests {
             let p = krr.predict(x.row(i));
             assert!((p - y[i]).abs() < 1e-3, "{p} vs {}", y[i]);
         }
+    }
+
+    #[test]
+    fn cached_refit_matches_recomputed_gram_path() {
+        // The cached-centering discipline: fitted() refits off the
+        // tracked eigensystem with zero kernel evaluations and must
+        // agree with the Gram-recomputing reference to ≤ 1e-10 — at the
+        // stored ridge and across a refit path.
+        let (x, y) = toy_problem(16);
+        let kern = Rbf { sigma: 1.0 };
+        let mut krr =
+            IncrementalKrr::from_batch(&kern, &x.submatrix(5, x.cols()), &y[..5], 0.2).unwrap();
+        for i in 5..16 {
+            krr.push(x.row(i), y[i]).unwrap();
+        }
+        let cached = krr.fitted();
+        let recomputed = krr.fitted_recomputed();
+        for (a, b) in cached.iter().zip(&recomputed) {
+            assert!((a - b).abs() <= 1e-10, "cached {a} vs recomputed {b}");
+        }
+        // Refits at other ridges stay on the cached path too.
+        for ridge in [0.01, 0.5, 2.0] {
+            let f = krr.fitted_for(ridge);
+            let mut k = crate::kernels::gram(&kern, &x);
+            for i in 0..16 {
+                k[(i, i)] += ridge;
+            }
+            let alpha = Cholesky::new(&k).unwrap().solve(&y);
+            let k_plain = crate::kernels::gram(&kern, &x);
+            let direct = crate::linalg::gemv(&k_plain, &alpha);
+            for (a, b) in f.iter().zip(&direct) {
+                assert!((a - b).abs() <= 1e-8, "ridge {ridge}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn labelled_batch_push_matches_sequential() {
+        let (x, y) = toy_problem(15);
+        let kern = Rbf { sigma: 1.0 };
+        let mut seq =
+            IncrementalKrr::from_batch(&kern, &x.submatrix(4, x.cols()), &y[..4], 0.1).unwrap();
+        for i in 4..15 {
+            seq.push(x.row(i), y[i]).unwrap();
+        }
+        let mut bat =
+            IncrementalKrr::from_batch(&kern, &x.submatrix(4, x.cols()), &y[..4], 0.1).unwrap();
+        let dim = x.cols();
+        let flat = x.as_slice();
+        let out = bat.push_batch(&flat[4 * dim..9 * dim], &y[4..9]).unwrap();
+        assert_eq!(out.accepted, 5);
+        let out = bat.push_batch(&flat[9 * dim..15 * dim], &y[9..15]).unwrap();
+        assert_eq!(out.accepted, 6);
+        assert_eq!(bat.len(), 15);
+        for (a, b) in seq.coefficients().iter().zip(bat.coefficients().iter()) {
+            assert!((a - b).abs() <= 1e-10, "{a} vs {b}");
+        }
+        let p_seq = seq.predict(x.row(2));
+        let p_bat = bat.predict(x.row(2));
+        assert!((p_seq - p_bat).abs() <= 1e-10);
     }
 
     #[test]

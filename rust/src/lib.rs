@@ -7,15 +7,24 @@
 //! ## Layers
 //!
 //! - **Layer 3** ([`coordinator`]) — a *sharded multi-stream* engine:
-//!   a [`coordinator::ShardPool`] of worker threads, each owning a map
-//!   of stream-id → per-stream state (incremental eigensystem + update
+//!   a [`coordinator::ShardPool`] of worker threads, each owning
+//!   slot-indexed per-stream state (incremental eigensystem + update
 //!   workspace + eigenbasis + drift monitor + metrics), fronted by a
 //!   stream-keyed [`coordinator::StreamRouter`] over per-shard bounded
 //!   channels. Streams are pinned to shards by an FNV-1a hash of the
-//!   stream id, so backpressure and queue contention are per shard;
-//!   each shard shares one rotation engine (and one PJRT runtime)
-//!   across its streams, and the pool rolls per-stream metrics up into
-//!   a [`coordinator::PoolSnapshot`]. The historical single-stream
+//!   stream id, resolved *once* at `open_stream` into a cheap
+//!   [`coordinator::StreamHandle`] (shard + integer slot + generation)
+//!   — the ingest path carries no `String` and does no map lookup.
+//!   Three ingest shapes share the per-shard queues: rendezvous
+//!   `ingest`, fire-and-forget `ingest_async` (errors deferred to a
+//!   per-stream counter, drained by `sync`), and batched `ingest_many`
+//!   (one command per batch; the worker computes the batch's kernel
+//!   rows as one blocked GEMM through
+//!   [`kpca::IncrementalKpca::push_batch_with`]). Backpressure and
+//!   queue contention stay per shard; each shard shares one rotation
+//!   engine (and one PJRT runtime) across its streams, and the pool
+//!   rolls per-stream metrics up into a
+//!   [`coordinator::PoolSnapshot`]. The historical single-stream
 //!   [`coordinator::Coordinator`] survives as a thin wrapper over a
 //!   1-shard pool.
 //! - **Layer 2/1** — JAX model + Pallas kernels (build-time Python),
@@ -78,6 +87,26 @@
 //! [`coordinator::metrics`]). Because the steady state is
 //! allocation-free, N streams on one shard contend only on the shard's
 //! queue — which is what makes the shard pool scale.
+//!
+//! ## Batched ingest
+//!
+//! The rank-one update makes each ingest cheap, so at modest `m` the
+//! *per-point* costs around the update — channel rendezvous, command
+//! allocation, the `m`-long scalar kernel loop — rival the math.
+//! Batching removes them without changing the math: a batch of `b`
+//! points computes its `b × m` kernel rows (plus the `b × b`
+//! intra-batch block) as one blocked GEMM for dot-product-family
+//! kernels ([`kernels::kernel_rows_into`]; RBF goes through the
+//! row-norm identity `‖x−y‖² = ‖x‖² − 2⟨x,y⟩ + ‖y‖²`, anything else
+//! falls back to scalar evaluation), then applies the `b` rank-one
+//! update sequences back to back — the identical update algorithm,
+//! with batched ≡ sequential equivalence ≤1e-10 pinned by
+//! `tests/batching.rs`. The same
+//! entry point serves [`nystrom::IncrementalNystrom::add_points`] (the
+//! `K_{m,n}` rows of all accepted points are one `b × n` block) and the
+//! labelled [`kpca::IncrementalKrr::push_batch`]; KRR refits follow the
+//! cached discipline too — `fitted` is `U Λ (Λ+λI)⁻¹ Uᵀ y` off the
+//! tracked eigensystem, zero kernel evaluations per refit.
 
 // The numeric kernels are written index-style on purpose (they mirror
 // the paper's equations and the blocked-GEMM literature); clippy's

@@ -32,6 +32,15 @@ impl<'a> MatView<'a> {
         MatView { data, rows, cols, stride }
     }
 
+    /// Contiguous `rows × cols` view over the leading `rows·cols`
+    /// elements of a flat row-major buffer — the shape the streaming
+    /// states keep their retained examples in (and batched ingest its
+    /// incoming points), so the blocked kernels can consume them
+    /// without a `Mat` copy.
+    pub fn of_rows(data: &'a [f64], rows: usize, cols: usize) -> Self {
+        MatView::new(&data[..rows * cols], rows, cols, cols)
+    }
+
     pub fn rows(&self) -> usize {
         self.rows
     }
@@ -244,6 +253,16 @@ mod tests {
         assert_eq!(data[5], 0.0);
         assert_eq!(data[6], 0.0);
         assert_eq!(data[7], 1.0);
+    }
+
+    #[test]
+    fn of_rows_views_leading_window() {
+        // A 10-long buffer holding 3 rows of width 3 plus one slack slot.
+        let data: Vec<f64> = (0..10).map(|x| x as f64).collect();
+        let v = MatView::of_rows(&data, 3, 3);
+        assert_eq!(v.rows(), 3);
+        assert_eq!(v.stride(), 3);
+        assert_eq!(v[(2, 2)], 8.0);
     }
 
     #[test]

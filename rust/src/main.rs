@@ -10,6 +10,8 @@
 //! `serve` options: --dataset magic|yeast  --n <pts>  --engine native|pjrt
 //!                  --no-adjust  --drift-every <k>  --seed-points <k>
 //!                  --shards <k>  --streams <k>   (multi-stream pool mode)
+//!                  --batch <b>   (ship points in b-sized `ingest_many`
+//!                                 batches instead of per-point rendezvous)
 
 use inkpca::coordinator::{
     Config, Coordinator, EngineConfig, EnginePolicy, KernelConfig, ShardPool,
@@ -105,13 +107,20 @@ fn serve(args: &[String]) -> Result<(), String> {
         flag_value(args, "--shards").and_then(|v| v.parse().ok()).unwrap_or(1);
     let streams: usize =
         flag_value(args, "--streams").and_then(|v| v.parse().ok()).unwrap_or(1);
+    let batch: usize =
+        flag_value(args, "--batch").and_then(|v| v.parse().ok()).unwrap_or(1).max(1);
     if shards > 1 || streams > 1 {
-        return serve_pool(cfg, ds, shards.max(1), streams.max(1));
+        return serve_pool(cfg, ds, shards.max(1), streams.max(1), batch);
     }
-    println!("serving {} points of {dataset} (dim {dim})…", ds.n());
+    println!("serving {} points of {dataset} (dim {dim}, batch {batch})…", ds.n());
     let coord = Coordinator::spawn(cfg, dim);
-    let mut src = SliceSource::new(ds);
-    let accepted = coord.ingest_stream(&mut src)?;
+    let accepted = if batch > 1 {
+        let reply = coord.ingest_all(ds.x.as_slice(), dim, batch)?;
+        reply.seeded + reply.accepted
+    } else {
+        let mut src = SliceSource::new(ds);
+        coord.ingest_stream(&mut src)?
+    };
     let snap = coord.snapshot()?;
     let metrics = coord.metrics()?;
     println!("ingested: {accepted} accepted, eigensystem m={}", snap.m);
@@ -133,8 +142,15 @@ fn serve(args: &[String]) -> Result<(), String> {
 
 /// Multi-stream mode: split the feed round-robin over `streams`
 /// concurrent streams on a `shards`-shard pool, one producer thread per
-/// stream, then print the pool rollup and per-stream gauges.
-fn serve_pool(cfg: Config, ds: Dataset, shards: usize, streams: usize) -> Result<(), String> {
+/// stream (shipping `batch`-sized `ingest_many` commands when
+/// `batch > 1`), then print the pool rollup and per-stream gauges.
+fn serve_pool(
+    cfg: Config,
+    ds: Dataset,
+    shards: usize,
+    streams: usize,
+    batch: usize,
+) -> Result<(), String> {
     let dim = ds.dim();
     let (mut pool_cfg, stream_cfg) = cfg.split();
     pool_cfg.shards = shards;
@@ -146,7 +162,7 @@ fn serve_pool(cfg: Config, ds: Dataset, shards: usize, streams: usize) -> Result
         ));
     }
     println!(
-        "serving {} points of {} over {streams} streams on {shards} shards…",
+        "serving {} points of {} over {streams} streams on {shards} shards (batch {batch})…",
         ds.n(),
         ds.name
     );
@@ -159,11 +175,21 @@ fn serve_pool(cfg: Config, ds: Dataset, shards: usize, streams: usize) -> Result
             let scfg = stream_cfg.clone();
             scope.spawn(move || {
                 let id = format!("stream-{s}");
-                r.open_stream(&id, dim, scfg).expect("open stream");
-                let mut i = s;
-                while i < ds.n() {
-                    r.ingest(&id, ds.x.row(i).to_vec()).expect("ingest");
-                    i += streams;
+                let h = r.open_stream(&id, dim, scfg).expect("open stream");
+                if batch > 1 {
+                    // Gather this stream's round-robin share once, then
+                    // ship it through the shared chunking loop.
+                    let mine: Vec<f64> = (s..ds.n())
+                        .step_by(streams)
+                        .flat_map(|i| ds.x.row(i).iter().copied())
+                        .collect();
+                    r.ingest_all(&h, &mine, dim, batch).expect("ingest_all");
+                } else {
+                    let mut i = s;
+                    while i < ds.n() {
+                        r.ingest(&h, ds.x.row(i).to_vec()).expect("ingest");
+                        i += streams;
+                    }
                 }
             });
         }

@@ -13,7 +13,7 @@
 //! kept flat so the per-add kernel column needs no subset-matrix
 //! rebuild. Nothing re-layouts per added point.
 
-use crate::kernels::{kernel_column_into, Kernel};
+use crate::kernels::{kernel_column_into, kernel_rows_into, Kernel, KernelBlockScratch};
 use crate::linalg::{transpose_into, Mat, Norms, PackedCholesky};
 
 /// Incrementally grown Cholesky-based Nyström approximation.
@@ -35,6 +35,12 @@ pub struct CholeskyNystrom<'k> {
     pub rejected: usize,
     /// Reusable kernel-column buffer for the appends.
     col_buf: Vec<f64>,
+    /// Reusable flat gather of a batch's accepted points (`b × dim`).
+    batch_buf: Vec<f64>,
+    /// Reusable `b × n` kernel-row block for the batched append.
+    rows_buf: Vec<f64>,
+    /// Row-norm scratch for the blocked kernel evaluation.
+    kb: KernelBlockScratch,
 }
 
 impl<'k> CholeskyNystrom<'k> {
@@ -50,6 +56,9 @@ impl<'k> CholeskyNystrom<'k> {
             jitter: 1e-10,
             rejected: 0,
             col_buf: Vec::new(),
+            batch_buf: Vec::new(),
+            rows_buf: Vec::new(),
+            kb: KernelBlockScratch::new(),
         }
     }
 
@@ -102,6 +111,58 @@ impl<'k> CholeskyNystrom<'k> {
         self.sub_x.extend_from_slice(xi);
         self.subset.push(idx);
         Ok(true)
+    }
+
+    /// Add a batch of evaluation points. The bordered Cholesky
+    /// expansions are inherently sequential (each point's column is
+    /// taken against the subset *including* the batch points accepted
+    /// before it), but the `K_{m,n}` rows of every accepted point are
+    /// computed afterwards as one `b × n` blocked kernel-row evaluation
+    /// and appended in order — mirroring
+    /// [`super::IncrementalNystrom::add_points`]. Returns the number of
+    /// accepted points.
+    pub fn add_points(&mut self, idxs: &[usize]) -> Result<usize, String> {
+        let n = self.x.rows();
+        let dim = self.x.cols();
+        let mut acc = std::mem::take(&mut self.batch_buf);
+        acc.clear();
+        for &idx in idxs {
+            assert!(idx < n, "subset index out of range");
+            let m = self.subset.len();
+            let xi = self.x.row(idx);
+            let mut col = std::mem::take(&mut self.col_buf);
+            kernel_column_into(self.kernel, &self.sub_x, dim, m, xi, &mut col);
+            let kself = self.kernel.eval(xi, xi) + self.jitter;
+            let expanded = self.chol.expand(&col, kself).is_ok();
+            self.col_buf = col;
+            if !expanded {
+                self.rejected += 1;
+                continue;
+            }
+            acc.extend_from_slice(xi);
+            self.sub_x.extend_from_slice(xi);
+            self.subset.push(idx);
+        }
+        let b = acc.len() / dim.max(1);
+        if b > 0 {
+            let mut rows = std::mem::take(&mut self.rows_buf);
+            kernel_rows_into(
+                self.kernel,
+                self.x.as_slice(),
+                dim,
+                n,
+                &acc,
+                b,
+                &mut rows,
+                &mut self.kb,
+            );
+            for r in 0..b {
+                self.kmn.push_row(&rows[r * n..(r + 1) * n]);
+            }
+            self.rows_buf = rows;
+        }
+        self.batch_buf = acc;
+        Ok(b)
     }
 
     /// The approximation `K̃ = K_{n,m} (LLᵀ)⁻¹ K_{m,n}` via triangular
@@ -171,6 +232,38 @@ mod tests {
         assert_eq!(chol.kmn.rows(), 1);
         assert!(chol.add_point(4).unwrap());
         assert_eq!(chol.m(), 2);
+    }
+
+    #[test]
+    fn batched_add_points_matches_sequential_cholesky() {
+        let ds = yeast_like(18, 6);
+        let kern = Rbf { sigma: 1.0 };
+        let mut seq = CholeskyNystrom::new(&kern, ds.x.clone());
+        for m in 0..8 {
+            assert!(seq.add_point(m).unwrap());
+        }
+        let mut bat = CholeskyNystrom::new(&kern, ds.x.clone());
+        assert_eq!(bat.add_points(&[0, 1, 2]).unwrap(), 3);
+        assert_eq!(bat.add_points(&[3, 4, 5, 6, 7]).unwrap(), 5);
+        assert_eq!(bat.subset, seq.subset);
+        assert_eq!(bat.kmn.rows(), 8);
+        assert!(bat.knm().max_abs_diff(&seq.knm()) < 1e-12);
+        let diff = bat.approx_gram().max_abs_diff(&seq.approx_gram());
+        assert!(diff < 1e-10, "batched vs sequential diff {diff}");
+    }
+
+    #[test]
+    fn batched_add_points_rejects_duplicates_mid_batch() {
+        let ds = yeast_like(10, 7);
+        let kern = Rbf { sigma: 1.0 };
+        let mut chol = CholeskyNystrom::new(&kern, ds.x.clone());
+        chol.jitter = 0.0; // make degeneracy exact
+        let accepted = chol.add_points(&[3, 3, 4]).unwrap();
+        assert_eq!(accepted, 2);
+        assert_eq!(chol.rejected, 1);
+        assert_eq!(chol.subset, vec![3, 4]);
+        assert_eq!(chol.kmn.rows(), 2);
+        assert_eq!(chol.factor().order(), 2);
     }
 
     #[test]

@@ -8,7 +8,7 @@
 //! the full `K` at every step — *exactly* reproducing batch computation
 //! at each `m` (paper §4), which the tests assert.
 
-use crate::kernels::{kernel_column_into, Kernel};
+use crate::kernels::{kernel_column_into, kernel_rows_into, Kernel, KernelBlockScratch};
 use crate::linalg::{matmul_nt, matmul_tn_into, transpose_into, Mat, Norms};
 use crate::rankone::Rotate;
 
@@ -31,6 +31,12 @@ pub struct IncrementalNystrom<'k> {
     pub rcond: f64,
     /// Reusable kernel-column buffer for the append.
     col_buf: Vec<f64>,
+    /// Reusable flat gather of a batch's subset points (`b × dim`).
+    batch_buf: Vec<f64>,
+    /// Reusable `b × n` kernel-row block for the batched append.
+    rows_buf: Vec<f64>,
+    /// Row-norm scratch for the blocked kernel evaluation.
+    kb: KernelBlockScratch,
 }
 
 impl<'k> IncrementalNystrom<'k> {
@@ -48,6 +54,9 @@ impl<'k> IncrementalNystrom<'k> {
             subset: Vec::new(),
             rcond: 1e-12,
             col_buf: Vec::new(),
+            batch_buf: Vec::new(),
+            rows_buf: Vec::new(),
+            kb: KernelBlockScratch::new(),
         })
     }
 
@@ -93,6 +102,73 @@ impl<'k> IncrementalNystrom<'k> {
         self.col_buf = col;
         self.subset.push(idx);
         Ok(true)
+    }
+
+    /// Add a whole batch of evaluation points to the subset with the
+    /// native rotate engine (see
+    /// [`IncrementalNystrom::add_points_with`]).
+    pub fn add_points(&mut self, idxs: &[usize]) -> Result<usize, String> {
+        self.add_points_with(idxs, &crate::rankone::NativeRotate)
+    }
+
+    /// Add `idxs.len()` evaluation points to the subset in one call:
+    /// the subset eigensystem grows through the blocked batch entry
+    /// point ([`IncrementalKpca::push_batch_with`] — the batch's kernel
+    /// rows against the retained subset are one GEMM), and the
+    /// `K_{m,n}` rows of every *accepted* point are computed as one
+    /// `b × n` blocked kernel-row evaluation and appended in order.
+    /// Returns the number of accepted (non-degenerate) points.
+    pub fn add_points_with(
+        &mut self,
+        idxs: &[usize],
+        engine: &dyn Rotate,
+    ) -> Result<usize, String> {
+        let n = self.n();
+        let dim = self.x.cols();
+        // Gather the batch rows flat (the eigensystem and the blocked
+        // kernel evaluation both want `b × dim` row-major).
+        let mut ys = std::mem::take(&mut self.batch_buf);
+        ys.clear();
+        for &idx in idxs {
+            assert!(idx < n, "subset index out of range");
+            ys.extend_from_slice(self.x.row(idx));
+        }
+        let result = self.inc.push_batch_with(&ys, engine);
+        self.batch_buf = ys;
+        // Sync the subset list and cross-Gram with whatever prefix the
+        // eigensystem actually accepted — on `Err` the accepted prefix
+        // remains applied (the mask covers exactly the processed
+        // points), and `subset`/`kmn` must not fall out of step with it.
+        let b = self.inc.last_batch_mask().iter().filter(|&&ok| ok).count();
+        if b > 0 {
+            // One blocked kernel-row evaluation for all accepted points
+            // against the full evaluation set, then amortized appends.
+            let mut acc = std::mem::take(&mut self.batch_buf);
+            acc.clear();
+            for (&idx, &ok) in idxs.iter().zip(self.inc.last_batch_mask()) {
+                if ok {
+                    acc.extend_from_slice(self.x.row(idx));
+                    self.subset.push(idx);
+                }
+            }
+            let mut rows = std::mem::take(&mut self.rows_buf);
+            kernel_rows_into(
+                self.kernel,
+                self.x.as_slice(),
+                dim,
+                n,
+                &acc,
+                b,
+                &mut rows,
+                &mut self.kb,
+            );
+            for r in 0..b {
+                self.kmn.push_row(&rows[r * n..(r + 1) * n]);
+            }
+            self.rows_buf = rows;
+            self.batch_buf = acc;
+        }
+        result.map(|outcome| outcome.accepted)
     }
 
     /// Approximate eigenpairs of the full `K` per eq. (7).
@@ -162,6 +238,45 @@ mod tests {
             let diff = inys.approx_gram().max_abs_diff(&batch.approx_gram());
             assert!(diff < 1e-7, "m={m}: diff {diff}");
         }
+    }
+
+    #[test]
+    fn batched_add_points_matches_sequential() {
+        let ds = yeast_like(20, 11);
+        let kern = Rbf { sigma: 1.0 };
+        let mut seq = IncrementalNystrom::new(&kern, ds.x.clone()).unwrap();
+        for m in 0..9 {
+            seq.add_point(m).unwrap();
+        }
+        let mut bat = IncrementalNystrom::new(&kern, ds.x.clone()).unwrap();
+        assert_eq!(bat.add_points(&[0, 1, 2, 3]).unwrap(), 4);
+        assert_eq!(bat.add_points(&[4, 5, 6, 7, 8]).unwrap(), 5);
+        assert_eq!(bat.m(), 9);
+        assert_eq!(bat.subset, seq.subset);
+        assert!(bat.knm().max_abs_diff(&seq.knm()) < 1e-12);
+        let diff = bat.approx_gram().max_abs_diff(&seq.approx_gram());
+        assert!(diff < 1e-10, "batched vs sequential Nyström diff {diff}");
+    }
+
+    #[test]
+    fn batched_add_points_skips_degenerate_points() {
+        // Under the linear kernel a zero row has k(x,x) = 0 — the §5.1
+        // exclusion fires mid-batch; its K_{m,n} row must NOT be
+        // appended and the survivors must match the batch reference.
+        let mut x = yeast_like(14, 12).x;
+        for j in 0..x.cols() {
+            x[(1, j)] = 0.0;
+        }
+        let kern = crate::kernels::Linear;
+        let mut inys = IncrementalNystrom::new(&kern, x.clone()).unwrap();
+        let accepted = inys.add_points(&[0, 1, 2, 3]).unwrap();
+        assert_eq!(accepted, 3, "zero point must be excluded");
+        assert_eq!(inys.m(), 3);
+        assert_eq!(inys.subset, vec![0, 2, 3]);
+        assert_eq!(inys.kmn.rows(), 3);
+        let batch = BatchNystrom::fit(&kern, &x, &[0, 2, 3]).unwrap();
+        let diff = inys.approx_gram().max_abs_diff(&batch.approx_gram());
+        assert!(diff < 1e-7, "diff {diff}");
     }
 
     #[test]

@@ -152,6 +152,27 @@ impl EigenBasis {
         self.cols = n + 1;
     }
 
+    /// Pre-size the backing buffer for windows up to `rows × cols`
+    /// *without* counting toward the realloc counter — the warm-up
+    /// entry point matching [`super::UpdateWorkspace::reserve`]. All
+    /// subsequent in-capacity [`EigenBasis::expand`] calls are then
+    /// allocation-free up to that size.
+    pub fn reserve(&mut self, rows: usize, cols: usize) {
+        if rows <= self.row_cap && cols <= self.stride {
+            return;
+        }
+        let new_stride = self.stride.max(cols);
+        let new_row_cap = self.row_cap.max(rows);
+        let mut data = vec![0.0; new_row_cap * new_stride];
+        for i in 0..self.rows {
+            data[i * new_stride..i * new_stride + self.cols]
+                .copy_from_slice(&self.data[i * self.stride..i * self.stride + self.cols]);
+        }
+        self.data = data;
+        self.stride = new_stride;
+        self.row_cap = new_row_cap;
+    }
+
     /// Drop column `j`, shifting later columns left in place (no
     /// reallocation; used by the top-`r` truncating trackers).
     pub fn remove_col(&mut self, j: usize) {
@@ -255,6 +276,22 @@ mod tests {
         for i in 0..b.rows() {
             assert_eq!(b[(i, b.cols() - 1)], 0.0, "stale column leaked at row {i}");
         }
+    }
+
+    #[test]
+    fn reserve_preserves_window_and_silences_growth() {
+        let m = Mat::from_fn(3, 3, |i, j| (i * 3 + j) as f64);
+        let mut b = EigenBasis::from_mat(m.clone());
+        b.reserve(16, 16);
+        assert_eq!(b.reallocs(), 0, "reserve must not count as a realloc");
+        assert_eq!(b.max_abs_diff(&m), 0.0);
+        for _ in 3..16 {
+            b.expand();
+        }
+        assert_eq!(b.rows(), 16);
+        assert_eq!(b.reallocs(), 0, "expansion within reserved capacity is free");
+        // The original window survived the growth.
+        assert_eq!(b[(2, 2)], 8.0);
     }
 
     #[test]

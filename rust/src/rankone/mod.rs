@@ -26,7 +26,7 @@ mod workspace;
 pub use basis::EigenBasis;
 pub use workspace::UpdateWorkspace;
 
-use workspace::ensure_f64;
+pub(crate) use workspace::ensure_f64;
 
 use crate::linalg::{norm2, Mat, MatView, MatViewMut};
 use crate::secular::{deflate_into, solve_all_into, SecularRoot};

@@ -1,0 +1,205 @@
+//! Batched-ingest equivalence suite: `ingest_many` and
+//! `ingest_async`-then-`sync` must reach exactly the state sequential
+//! `ingest` reaches (≤1e-10) across kernel families and batch shapes,
+//! including batches that straddle the seeding boundary and batches
+//! with mid-batch §5.1 exclusions / deflation-heavy duplicates — plus
+//! the zero-realloc steady-state guarantee of the batched hot path.
+
+use inkpca::coordinator::{
+    EngineConfig, KernelConfig, PoolConfig, ShardPool, StreamConfig, StreamHandle, StreamRouter,
+};
+use inkpca::data::synthetic::yeast_like;
+use inkpca::data::Dataset;
+use inkpca::kernels::{Kernel, Linear, Polynomial, Rbf};
+use inkpca::kpca::IncrementalKpca;
+
+fn cfg(kernel: KernelConfig, mean_adjust: bool) -> StreamConfig {
+    StreamConfig { kernel, mean_adjust, seed_points: 6, drift_every: 0 }
+}
+
+fn drive_sequential(router: &StreamRouter, h: &StreamHandle, ds: &Dataset) {
+    for i in 0..ds.n() {
+        router.ingest(h, ds.x.row(i).to_vec()).unwrap();
+    }
+}
+
+fn drive_batched(router: &StreamRouter, h: &StreamHandle, ds: &Dataset, batch: usize) {
+    let reply = router.ingest_all(h, ds.x.as_slice(), ds.dim(), batch).unwrap();
+    assert_eq!(reply.seeded + reply.accepted + reply.excluded, ds.n());
+    assert_eq!(reply.m, ds.n() - reply.excluded);
+}
+
+fn drive_async(router: &StreamRouter, h: &StreamHandle, ds: &Dataset) {
+    for i in 0..ds.n() {
+        router.ingest_async(h, ds.x.row(i).to_vec()).unwrap();
+    }
+    assert_eq!(router.sync(h).unwrap(), 0, "{}: async stream saw errors", h.id());
+}
+
+/// All three ingest shapes against one dataset/kernel/adjust mode; the
+/// batched and async streams must match the sequential one ≤ 1e-10 on
+/// eigenvalues and projection magnitudes.
+fn assert_ingest_shapes_equivalent(kernel: KernelConfig, mean_adjust: bool, seed: u64) {
+    let mut ds = yeast_like(27, seed);
+    ds.standardize();
+    let pool = ShardPool::spawn(PoolConfig { shards: 2, queue: 16, engine: EngineConfig::Native });
+    let router = pool.router();
+    let hs = router.open_stream("seq", ds.dim(), cfg(kernel.clone(), mean_adjust)).unwrap();
+    let h5 = router.open_stream("b5", ds.dim(), cfg(kernel.clone(), mean_adjust)).unwrap();
+    let h64 = router.open_stream("b64", ds.dim(), cfg(kernel.clone(), mean_adjust)).unwrap();
+    let ha = router.open_stream("asy", ds.dim(), cfg(kernel.clone(), mean_adjust)).unwrap();
+    drive_sequential(&router, &hs, &ds);
+    drive_batched(&router, &h5, &ds, 5); // straddles the seeding boundary
+    drive_batched(&router, &h64, &ds, 64); // whole stream in one command
+    drive_async(&router, &ha, &ds);
+
+    let reference = router.snapshot(&hs).unwrap();
+    assert_eq!(reference.m, 27);
+    let probe = vec![0.3; ds.dim()];
+    let ref_proj = router.project(&hs, probe.clone(), 4).unwrap();
+    for h in [&h5, &h64, &ha] {
+        let snap = router.snapshot(h).unwrap();
+        assert_eq!(snap.m, 27, "{:?} {}", kernel, h.id());
+        for (got, want) in snap.top_values.iter().zip(&reference.top_values) {
+            assert!(
+                (got - want).abs() <= 1e-10,
+                "{:?} {}: eigenvalue {got} vs {want}",
+                kernel,
+                h.id()
+            );
+        }
+        let proj = router.project(h, probe.clone(), 4).unwrap();
+        for (g, w) in proj.iter().zip(&ref_proj) {
+            assert!(
+                (g.abs() - w.abs()).abs() <= 1e-10,
+                "{:?} {}: projection {g} vs {w}",
+                kernel,
+                h.id()
+            );
+        }
+    }
+    pool.shutdown();
+}
+
+#[test]
+fn batched_equals_sequential_rbf_adjusted() {
+    assert_ingest_shapes_equivalent(KernelConfig::Rbf { sigma: 1.2 }, true, 900);
+}
+
+#[test]
+fn batched_equals_sequential_linear_unadjusted() {
+    assert_ingest_shapes_equivalent(KernelConfig::Linear, false, 901);
+}
+
+#[test]
+fn batched_equals_sequential_poly_adjusted() {
+    assert_ingest_shapes_equivalent(
+        KernelConfig::Polynomial { degree: 2, offset: 1.0 },
+        true,
+        902,
+    );
+}
+
+/// Duplicate points make the adjusted kernel matrix singular — the
+/// deflation path runs *inside* a batch and must stay ≤1e-10 equal to
+/// the sequential run through the same points.
+#[test]
+fn deflation_heavy_batch_matches_sequential() {
+    let mut ds = yeast_like(12, 903);
+    ds.standardize();
+    let dim = ds.dim();
+    // points 6.. with two mid-batch duplicates of earlier rows.
+    let mut tail: Vec<f64> = Vec::new();
+    for i in 6..10 {
+        tail.extend_from_slice(ds.x.row(i));
+        tail.extend_from_slice(ds.x.row(i - 4)); // duplicate
+    }
+    let kern = Rbf { sigma: 1.0 };
+    let seed = ds.x.submatrix(6, dim);
+    let mut seq = IncrementalKpca::from_batch(&kern, &seed, true).unwrap();
+    for chunk in tail.chunks(dim) {
+        seq.push(chunk).unwrap();
+    }
+    let mut bat = IncrementalKpca::from_batch(&kern, &seed, true).unwrap();
+    let out = bat.push_batch(&tail).unwrap();
+    assert_eq!(out.accepted + out.excluded, 8);
+    assert_eq!(seq.len(), bat.len());
+    let diff = bat.reconstruct().max_abs_diff(&seq.reconstruct());
+    assert!(diff < 1e-10, "deflation-heavy batch diff {diff}");
+    // And the batched run still tracks the batch-recomputed ground
+    // truth through the singular stretches.
+    let drift = bat.reconstruct().max_abs_diff(&bat.batch_reference());
+    assert!(drift < 1e-7, "drift {drift}");
+}
+
+/// Batch equivalence across kernel families at the library level, with
+/// ragged batch sizes (1, 3, then the rest) against point-by-point.
+#[test]
+fn ragged_batches_match_sequential_across_kernels() {
+    let kernels: Vec<Box<dyn Kernel>> = vec![
+        Box::new(Rbf { sigma: 0.9 }),
+        Box::new(Linear),
+        Box::new(Polynomial { degree: 3, offset: 0.7 }),
+    ];
+    for (ki, kern) in kernels.iter().enumerate() {
+        for &mean_adjust in &[false, true] {
+            let mut ds = yeast_like(22, 910 + ki as u64);
+            ds.standardize();
+            let dim = ds.dim();
+            let seed = ds.x.submatrix(5, dim);
+            let flat = ds.x.as_slice();
+            let mut seq = IncrementalKpca::from_batch(kern.as_ref(), &seed, mean_adjust).unwrap();
+            for i in 5..ds.n() {
+                seq.push(ds.x.row(i)).unwrap();
+            }
+            let mut bat = IncrementalKpca::from_batch(kern.as_ref(), &seed, mean_adjust).unwrap();
+            bat.push_batch(&flat[5 * dim..6 * dim]).unwrap(); // b = 1
+            bat.push_batch(&flat[6 * dim..9 * dim]).unwrap(); // b = 3
+            bat.push_batch(&flat[9 * dim..22 * dim]).unwrap(); // b = 13
+            assert_eq!(seq.len(), bat.len());
+            let diff = bat.reconstruct().max_abs_diff(&seq.reconstruct());
+            assert!(
+                diff < 1e-10,
+                "kernel {} adjust={mean_adjust}: diff {diff}",
+                kern.name()
+            );
+        }
+    }
+}
+
+/// The zero-realloc steady-state guarantee for the batched path: with
+/// the stream pre-sized ([`IncrementalKpca::reserve`]), a batched run
+/// must leave every tracked hot-path counter untouched — the workspace
+/// and eigenbasis (as in the sequential guarantee) *and* the batch
+/// scratch (kernel blocks, row norms, assembly buffers).
+#[test]
+fn batched_steady_state_is_zero_realloc() {
+    let mut ds = yeast_like(46, 920);
+    ds.standardize();
+    let dim = ds.dim();
+    let kern = Rbf { sigma: 1.1 };
+    let seed = ds.x.submatrix(6, dim);
+    let mut inc = IncrementalKpca::from_batch(&kern, &seed, true).unwrap();
+    inc.reserve(48, 8);
+    let ws0 = inc.hot_path_reallocs();
+    let batch0 = inc.batch_reallocs();
+    let flat = ds.x.as_slice();
+    let mut i = 6;
+    while i < ds.n() {
+        let end = (i + 8).min(ds.n());
+        inc.push_batch(&flat[i * dim..end * dim]).unwrap();
+        i = end;
+    }
+    assert_eq!(inc.len(), 46);
+    assert_eq!(inc.hot_path_reallocs(), ws0, "workspace/basis allocated in steady state");
+    assert_eq!(inc.batch_reallocs(), batch0, "batch scratch allocated in steady state");
+    // The same stream keeps running batch-silent on further batches of
+    // the reserved size.
+    let extra = yeast_like(8, 921);
+    let mut tail = Vec::new();
+    for i in 0..2 {
+        tail.extend_from_slice(extra.x.row(i));
+    }
+    inc.push_batch(&tail).unwrap();
+    assert_eq!(inc.batch_reallocs(), batch0);
+}

@@ -1,7 +1,8 @@
 //! Shard-pool integration tests: concurrent multi-stream ingest with
 //! stream isolation (every stream's eigensystem must match its
 //! single-stream reference run), per-stream metrics attribution, the
-//! steady-state allocation gauge, and clean close/shutdown semantics.
+//! steady-state allocation gauge, and clean close/shutdown semantics —
+//! all through the resolved [`StreamHandle`] front-end.
 
 use inkpca::coordinator::{
     EngineConfig, KernelConfig, PoolConfig, RoutedEngine, ShardPool, StreamConfig,
@@ -55,55 +56,60 @@ fn concurrent_streams_across_shards_stay_isolated() {
     let pool = ShardPool::spawn(pool_cfg(2));
     let router = pool.router();
     // One producer thread per stream, all ingesting interleaved.
-    std::thread::scope(|scope| {
-        for si in 0..STREAMS {
-            let r = router.clone();
-            let ds = &datasets[si];
-            let sigma = sigmas[si];
-            scope.spawn(move || {
-                let id = format!("stream-{si}");
-                r.open_stream(&id, ds.dim(), stream_cfg(sigma, SEED_POINTS)).unwrap();
-                for i in 0..ds.n() {
-                    let reply = r.ingest(&id, ds.x.row(i).to_vec()).unwrap();
-                    assert!(reply.accepted);
-                }
-            });
-        }
+    let handles: Vec<_> = std::thread::scope(|scope| {
+        let joins: Vec<_> = (0..STREAMS)
+            .map(|si| {
+                let r = router.clone();
+                let ds = &datasets[si];
+                let sigma = sigmas[si];
+                scope.spawn(move || {
+                    let id = format!("stream-{si}");
+                    let h = r.open_stream(&id, ds.dim(), stream_cfg(sigma, SEED_POINTS)).unwrap();
+                    for i in 0..ds.n() {
+                        let reply = r.ingest(&h, ds.x.row(i).to_vec()).unwrap();
+                        assert!(reply.accepted);
+                    }
+                    h
+                })
+            })
+            .collect();
+        joins.into_iter().map(|j| j.join().unwrap()).collect()
     });
 
     // Both shards must actually own streams (4 ids, 2 shards).
-    let owned: std::collections::HashSet<usize> =
-        (0..STREAMS).map(|si| router.shard_of(&format!("stream-{si}"))).collect();
+    let owned: std::collections::HashSet<usize> = handles.iter().map(|h| h.shard()).collect();
     assert_eq!(owned.len(), 2, "4 streams should spread over both shards");
 
     // Every stream's final eigensystem matches its isolated reference.
-    for si in 0..STREAMS {
-        let id = format!("stream-{si}");
+    for (si, h) in handles.iter().enumerate() {
+        assert_eq!(h.id(), format!("stream-{si}"));
         let reference = reference_run(&datasets[si], sigmas[si], SEED_POINTS);
-        let snap = router.snapshot(&id).unwrap();
-        assert_eq!(snap.m, N, "{id}");
+        let snap = router.snapshot(h).unwrap();
+        assert_eq!(snap.m, N, "{}", h.id());
         let top_ref: Vec<f64> = reference.vals.iter().rev().take(10).copied().collect();
         assert_eq!(snap.top_values.len(), top_ref.len());
         for (got, want) in snap.top_values.iter().zip(&top_ref) {
             assert!(
                 (got - want).abs() <= 1e-10,
-                "{id}: eigenvalue {got} vs reference {want}"
+                "{}: eigenvalue {got} vs reference {want}",
+                h.id()
             );
         }
         // Projections (which exercise eigenvectors + centering sums)
         // agree too — magnitudes, since eigenvector sign is arbitrary.
         let probe = vec![0.25; datasets[si].dim()];
-        let got = router.project(&id, probe.clone(), 4).unwrap();
+        let got = router.project(h, probe.clone(), 4).unwrap();
         let want = reference.project(&probe, 4);
         for (g, w) in got.iter().zip(&want) {
             assert!(
                 (g.abs() - w.abs()).abs() <= 1e-10,
-                "{id}: projection {g} vs reference {w}"
+                "{}: projection {g} vs reference {w}",
+                h.id()
             );
         }
         // And the tracked eigensystem is still exact wrt batch.
-        let drift = router.measure_drift(&id).unwrap();
-        assert!(drift.norms.frobenius < 1e-7, "{id}: drift {:?}", drift.norms);
+        let drift = router.measure_drift(h).unwrap();
+        assert!(drift.norms.frobenius < 1e-7, "{}: drift {:?}", h.id(), drift.norms);
     }
     pool.shutdown();
 }
@@ -117,19 +123,19 @@ fn per_stream_metrics_attribution_and_allocation_gauge() {
 
     let pool = ShardPool::spawn(pool_cfg(2));
     let router = pool.router();
-    router.open_stream("big", big.dim(), stream_cfg(1.5, 5)).unwrap();
-    router.open_stream("small", small.dim(), stream_cfg(1.5, 5)).unwrap();
+    let hb = router.open_stream("big", big.dim(), stream_cfg(1.5, 5)).unwrap();
+    let hs = router.open_stream("small", small.dim(), stream_cfg(1.5, 5)).unwrap();
     for i in 0..big.n() {
-        router.ingest("big", big.x.row(i).to_vec()).unwrap();
+        router.ingest(&hb, big.x.row(i).to_vec()).unwrap();
     }
     for i in 0..small.n() {
-        router.ingest("small", small.x.row(i).to_vec()).unwrap();
+        router.ingest(&hs, small.x.row(i).to_vec()).unwrap();
     }
     // One dimension-mismatch error attributed to `small` only.
-    assert!(router.ingest("small", vec![0.0; small.dim() + 1]).is_err());
+    assert!(router.ingest(&hs, vec![0.0; small.dim() + 1]).is_err());
 
-    let mb = router.metrics("big").unwrap();
-    let ms = router.metrics("small").unwrap();
+    let mb = router.metrics(&hb).unwrap();
+    let ms = router.metrics(&hs).unwrap();
     assert_eq!(mb.accepted, (40 - 5) as u64);
     assert_eq!(ms.accepted, (18 - 5) as u64);
     assert_eq!(mb.errors, 0);
@@ -153,8 +159,10 @@ fn per_stream_metrics_attribution_and_allocation_gauge() {
     assert_eq!(gb.m, 40);
     assert_eq!(gs.m, 18);
     assert!(gb.reallocs_per_update < 1.0 && gs.reallocs_per_update < 1.0);
-    assert_eq!(gb.shard, router.shard_of("big"));
-    assert_eq!(gs.shard, router.shard_of("small"));
+    assert_eq!(gb.shard, hb.shard());
+    assert_eq!(gs.shard, hs.shard());
+    assert_eq!(hb.shard(), router.shard_of("big"));
+    assert_eq!(hs.shard(), router.shard_of("small"));
     pool.shutdown();
 }
 
@@ -163,28 +171,34 @@ fn close_stream_frees_state_and_returns_stats() {
     let ds = yeast_like(20, 803);
     let pool = ShardPool::spawn(pool_cfg(2));
     let router = pool.router();
-    for id in ["a", "b", "c"] {
-        router.open_stream(id, ds.dim(), stream_cfg(1.0, 5)).unwrap();
-        for i in 0..ds.n() {
-            router.ingest(id, ds.x.row(i).to_vec()).unwrap();
-        }
-    }
-    let stats = router.close_stream("b").unwrap();
+    let handles: Vec<_> = ["a", "b", "c"]
+        .iter()
+        .map(|id| {
+            let h = router.open_stream(id, ds.dim(), stream_cfg(1.0, 5)).unwrap();
+            for i in 0..ds.n() {
+                router.ingest(&h, ds.x.row(i).to_vec()).unwrap();
+            }
+            h
+        })
+        .collect();
+    let stats = router.close_stream(&handles[1]).unwrap();
     assert_eq!(stats.accepted, 20);
-    // Closed stream is gone; the others keep serving.
-    assert!(router.ingest("b", ds.x.row(0).to_vec()).is_err());
-    assert!(router.snapshot("b").is_err());
-    assert_eq!(router.snapshot("a").unwrap().m, 20);
-    assert!(router.project("c", vec![0.1; ds.dim()], 2).is_ok());
+    // The closed handle is stale; the others keep serving.
+    assert!(router.ingest(&handles[1], ds.x.row(0).to_vec()).is_err());
+    assert!(router.snapshot(&handles[1]).is_err());
+    assert_eq!(router.snapshot(&handles[0]).unwrap().m, 20);
+    assert!(router.project(&handles[2], vec![0.1; ds.dim()], 2).is_ok());
     let snap = router.pool_snapshot().unwrap();
     assert_eq!(snap.streams, 2);
     // Pool counters are monotonic under churn: the closed stream's
     // accepts/latency stay in the lifetime totals.
     assert_eq!(snap.accepted, 3 * (20 - 5) as u64);
     assert_eq!(snap.ingest_count, 3 * 20);
-    // The id can be reopened fresh after close.
-    router.open_stream("b", ds.dim(), stream_cfg(1.0, 5)).unwrap();
-    assert_eq!(router.snapshot("b").unwrap().m, 0);
+    // The id can be reopened fresh after close (possibly reusing the
+    // slot — under a new generation).
+    let hb2 = router.open_stream("b", ds.dim(), stream_cfg(1.0, 5)).unwrap();
+    assert_eq!(router.snapshot(&hb2).unwrap().m, 0);
+    assert!(router.snapshot(&handles[1]).is_err(), "old handle must stay stale");
     pool.shutdown();
 }
 
@@ -193,42 +207,103 @@ fn drop_with_open_streams_does_not_hang() {
     let ds = yeast_like(12, 804);
     let pool = ShardPool::spawn(pool_cfg(4));
     let router = pool.router();
+    let mut handles = Vec::new();
     for si in 0..6 {
         let id = format!("s{si}");
-        router.open_stream(&id, ds.dim(), stream_cfg(1.0, 4)).unwrap();
+        let h = router.open_stream(&id, ds.dim(), stream_cfg(1.0, 4)).unwrap();
         for i in 0..ds.n() {
-            router.ingest(&id, ds.x.row(i).to_vec()).unwrap();
+            router.ingest(&h, ds.x.row(i).to_vec()).unwrap();
         }
+        handles.push(h);
     }
     drop(pool); // joins all 4 workers with streams still open
     // Surviving router clones fail cleanly instead of hanging.
-    assert!(router.ingest("s0", ds.x.row(0).to_vec()).is_err());
+    assert!(router.ingest(&handles[0], ds.x.row(0).to_vec()).is_err());
+    assert!(router.ingest_async(&handles[0], ds.x.row(0).to_vec()).is_err());
     assert!(router.pool_snapshot().is_err());
 }
 
 #[test]
 fn concurrent_producers_on_one_stream_keep_m_consistent() {
-    // Multiple producers feeding the SAME stream serialize through its
-    // pinned shard: every reply carries a consistent, growing m.
+    // Multiple producers feeding the SAME stream (each holding a clone
+    // of its handle) serialize through its pinned shard: every reply
+    // carries a consistent, growing m.
     let mut ds = yeast_like(48, 805);
     ds.standardize();
     let pool = ShardPool::spawn(pool_cfg(2));
     let router = pool.router();
-    router.open_stream("shared", ds.dim(), stream_cfg(2.0, 4)).unwrap();
+    let h = router.open_stream("shared", ds.dim(), stream_cfg(2.0, 4)).unwrap();
     std::thread::scope(|scope| {
         for half in 0..2 {
             let r = router.clone();
+            let hc = h.clone();
             let ds = &ds;
             scope.spawn(move || {
                 for i in (half..ds.n()).step_by(2) {
-                    r.ingest("shared", ds.x.row(i).to_vec()).unwrap();
+                    r.ingest(&hc, ds.x.row(i).to_vec()).unwrap();
                 }
             });
         }
     });
-    let snap = router.snapshot("shared").unwrap();
+    let snap = router.snapshot(&h).unwrap();
     assert_eq!(snap.m, 48);
-    let drift = router.measure_drift("shared").unwrap();
+    let drift = router.measure_drift(&h).unwrap();
     assert!(drift.norms.frobenius < 1e-6);
+    pool.shutdown();
+}
+
+#[test]
+fn mixed_batch_and_async_producers_stay_isolated() {
+    // One stream fed by ingest_many batches, one by fire-and-forget,
+    // concurrently on the same pool: both end at the reference state.
+    let mut ds = yeast_like(32, 806);
+    ds.standardize();
+    let pool = ShardPool::spawn(pool_cfg(2));
+    let router = pool.router();
+    let hb = router.open_stream("batched", ds.dim(), stream_cfg(1.5, 6)).unwrap();
+    let ha = router.open_stream("async", ds.dim(), stream_cfg(1.5, 6)).unwrap();
+    std::thread::scope(|scope| {
+        {
+            let r = router.clone();
+            let h = hb.clone();
+            let ds = &ds;
+            scope.spawn(move || {
+                let dim = ds.dim();
+                let flat = ds.x.as_slice();
+                let mut i = 0;
+                while i < ds.n() {
+                    let end = (i + 8).min(ds.n());
+                    r.ingest_many(&h, flat[i * dim..end * dim].to_vec()).unwrap();
+                    i = end;
+                }
+            });
+        }
+        {
+            let r = router.clone();
+            let h = ha.clone();
+            let ds = &ds;
+            scope.spawn(move || {
+                for i in 0..ds.n() {
+                    r.ingest_async(&h, ds.x.row(i).to_vec()).unwrap();
+                }
+                assert_eq!(r.sync(&h).unwrap(), 0);
+            });
+        }
+    });
+    let reference = reference_run(&ds, 1.5, 6);
+    for h in [&hb, &ha] {
+        let snap = router.snapshot(h).unwrap();
+        assert_eq!(snap.m, 32, "{}", h.id());
+        let top_ref: Vec<f64> = reference.vals.iter().rev().take(10).copied().collect();
+        for (got, want) in snap.top_values.iter().zip(&top_ref) {
+            assert!(
+                (got - want).abs() <= 1e-10,
+                "{}: eigenvalue {got} vs reference {want}",
+                h.id()
+            );
+        }
+        let drift = router.measure_drift(h).unwrap();
+        assert!(drift.norms.frobenius < 1e-7, "{}: {:?}", h.id(), drift.norms);
+    }
     pool.shutdown();
 }
