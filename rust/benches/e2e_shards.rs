@@ -19,13 +19,23 @@
 //! ingest + final sync on the same workload — the reply-less middle
 //! ground (round-trip removed, command-per-point kept).
 //!
+//! Series 4 (`shards/ingest_4streams_batchB_{fusedrot,seqrot}/shards2`):
+//! the blocked rank-b eigen-update isolated — the same batched workload
+//! with the back-rotation strategy *forced* to fused vs sequential (and
+//! the entries pre-sized via `expected_m`/`expected_batch`, so neither
+//! side pays allocator noise). The run also asserts, via the pool's
+//! workspace-counted `ws_engine_gemms` rollup, that the fused series
+//! dispatches strictly fewer back-rotation GEMMs than the sequential
+//! one — the amortization the blocked update exists for.
+//!
 //! Emits `BENCH_e2e_shards.json` for the perf trajectory and the CI
 //! regression gate.
 
 use inkpca::coordinator::{
-    EngineConfig, KernelConfig, PoolConfig, ShardPool, StreamConfig, StreamRouter,
+    EngineConfig, KernelConfig, PoolConfig, PoolSnapshot, ShardPool, StreamConfig, StreamRouter,
 };
 use inkpca::data::{load, Dataset};
+use inkpca::kpca::BatchRotation;
 use inkpca::util::bench::Bench;
 
 fn scaling_cfg() -> StreamConfig {
@@ -33,7 +43,7 @@ fn scaling_cfg() -> StreamConfig {
         kernel: KernelConfig::Rbf { sigma: 2.0 },
         mean_adjust: true,
         seed_points: 10,
-        drift_every: 0,
+        ..StreamConfig::default()
     }
 }
 
@@ -45,7 +55,19 @@ fn batch_cfg() -> StreamConfig {
         kernel: KernelConfig::Rbf { sigma: 2.0 },
         mean_adjust: false,
         seed_points: 4,
-        drift_every: 0,
+        ..StreamConfig::default()
+    }
+}
+
+/// Series-4 config: forced rotation strategy + open-time reserve sized
+/// to the workload, so the two sides differ only in how back-rotations
+/// are applied.
+fn rot_cfg(rot: BatchRotation, n_points: usize, batch: usize) -> StreamConfig {
+    StreamConfig {
+        batch_rotation: Some(rot),
+        expected_m: n_points,
+        expected_batch: batch,
+        ..batch_cfg()
     }
 }
 
@@ -57,8 +79,14 @@ fn spawn_pool(shards: usize) -> (ShardPool, StreamRouter) {
 
 /// Drive `datasets.len()` producer threads, one stream each, shipping
 /// points in `batch`-sized `ingest_many` commands (plain `ingest` at
-/// batch 1); returns the pool's accepted total.
-fn run_batched(datasets: &[Dataset], cfg: &StreamConfig, shards: usize, batch: usize) -> u64 {
+/// batch 1); returns the pool snapshot taken while the streams are
+/// still open (accepted totals + workspace gauges).
+fn run_batched(
+    datasets: &[Dataset],
+    cfg: &StreamConfig,
+    shards: usize,
+    batch: usize,
+) -> PoolSnapshot {
     let (pool, router) = spawn_pool(shards);
     std::thread::scope(|scope| {
         for (si, ds) in datasets.iter().enumerate() {
@@ -81,7 +109,7 @@ fn run_batched(datasets: &[Dataset], cfg: &StreamConfig, shards: usize, batch: u
     });
     let snap = router.pool_snapshot().unwrap();
     pool.shutdown();
-    snap.accepted
+    snap
 }
 
 /// Fire-and-forget variant: every point is a reply-less command; one
@@ -123,7 +151,7 @@ fn main() {
         .collect();
     for shards in [1usize, 2, 4] {
         b.case(&format!("shards/ingest_4streams/shards{shards}"), || {
-            run_batched(&scaling_sets, &scaling_cfg(), shards, 1)
+            run_batched(&scaling_sets, &scaling_cfg(), shards, 1).accepted
         });
     }
 
@@ -143,16 +171,50 @@ fn main() {
     let expected: u64 = (n_streams * (n_batchwl - 4)) as u64;
     for batch in [1usize, 8, 64] {
         b.case(&format!("shards/ingest_4streams_batch{batch}/shards2"), || {
-            run_batched(&batch_sets, &batch_cfg(), 2, batch)
+            run_batched(&batch_sets, &batch_cfg(), 2, batch).accepted
         });
         // Correctness guard: every post-seed point of every stream lands.
-        assert_eq!(run_batched(&batch_sets, &batch_cfg(), 2, batch), expected);
+        assert_eq!(run_batched(&batch_sets, &batch_cfg(), 2, batch).accepted, expected);
     }
 
     // Series 3: fire-and-forget on the same workload.
     b.case("shards/ingest_4streams_async/shards2", || {
         run_async(&batch_sets, &batch_cfg(), 2)
     });
+
+    // Series 4: the blocked rank-b update isolated — forced fused vs
+    // forced sequential back-rotation at batch 8 and 64, entries
+    // pre-sized at open. The workspace-counted GEMM rollup is the
+    // acceptance gauge: fused must dispatch strictly fewer.
+    for batch in [8usize, 64] {
+        let mut gemms = [0u64; 2];
+        for (i, (label, rot)) in
+            [("fusedrot", BatchRotation::Fused), ("seqrot", BatchRotation::Sequential)]
+                .iter()
+                .enumerate()
+        {
+            let cfg = rot_cfg(*rot, n_batchwl, batch);
+            b.case(&format!("shards/ingest_4streams_batch{batch}_{label}/shards2"), || {
+                run_batched(&batch_sets, &cfg, 2, batch).accepted
+            });
+            let snap = run_batched(&batch_sets, &cfg, 2, batch);
+            assert_eq!(snap.accepted, expected);
+            gemms[i] = snap.ws_engine_gemms;
+        }
+        println!(
+            "batch {batch}: back-rotation GEMMs fused={} sequential={} ({}x amortization)",
+            gemms[0],
+            gemms[1],
+            if gemms[0] > 0 { gemms[1] / gemms[0].max(1) } else { 0 }
+        );
+        assert!(
+            gemms[0] < gemms[1],
+            "fused batch-{batch} run must dispatch fewer back-rotation GEMMs \
+             (fused {} vs sequential {})",
+            gemms[0],
+            gemms[1]
+        );
+    }
 
     b.finish();
     if let Err(e) = b.write_json("BENCH_e2e_shards.json") {

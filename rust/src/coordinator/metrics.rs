@@ -113,6 +113,11 @@ pub struct Metrics {
     /// Cumulative buffer-growth events on the hot path — flat in steady
     /// state, stepping only on capacity doublings as the stream grows.
     pub ws_reallocs: u64,
+    /// `U`-sized back-rotation GEMMs dispatched by the stream's update
+    /// workspace (one per sequential rank-one update, one per
+    /// blocked-batch flush) — the amortization gauge of the fused
+    /// rank-b path.
+    pub engine_gemms: u64,
     started: Instant,
 }
 
@@ -128,6 +133,7 @@ impl Default for Metrics {
             updates: 0,
             ws_bytes_resident: 0,
             ws_reallocs: 0,
+            engine_gemms: 0,
             started: Instant::now(),
         }
     }
@@ -157,6 +163,7 @@ impl Metrics {
             ws_bytes_resident: self.ws_bytes_resident,
             ws_reallocs: self.ws_reallocs,
             reallocs_per_update: self.reallocs_per_update(),
+            engine_gemms: self.engine_gemms,
         }
     }
 }
@@ -182,6 +189,9 @@ pub struct MetricsReport {
     /// Growth events per rank-one update — ≈0 in steady state; the
     /// allocator has left the loop when this stays pinned near zero.
     pub reallocs_per_update: f64,
+    /// Engine back-rotation GEMMs dispatched by the stream (fused
+    /// batches dispatch one per flush instead of one per update).
+    pub engine_gemms: u64,
 }
 
 impl std::fmt::Display for MetricsReport {
@@ -217,6 +227,10 @@ pub struct StreamGauges {
     pub ws_reallocs: u64,
     /// Growth events per rank-one update — ≈0 in steady state.
     pub reallocs_per_update: f64,
+    /// Engine back-rotation GEMMs the stream has dispatched — compare
+    /// against `4 × accepted` (adjusted) / `2 × accepted` (unadjusted)
+    /// to see the blocked rank-b amortization.
+    pub engine_gemms: u64,
     /// Frobenius norm of the latest drift measurement, if any.
     pub drift_frobenius: Option<f64>,
 }
@@ -238,6 +252,9 @@ pub struct PoolSnapshot {
     pub errors: u64,
     /// Hot-path bytes resident summed over every stream.
     pub total_ws_bytes: u64,
+    /// Workspace-counted engine back-rotation GEMMs summed over every
+    /// stream (lifetime — includes streams closed since spawn).
+    pub ws_engine_gemms: u64,
     /// Ingest latency over the merged per-stream histograms.
     pub ingest_p50_us: f64,
     pub ingest_p99_us: f64,

@@ -88,6 +88,7 @@ impl Config {
                 mean_adjust: self.mean_adjust,
                 seed_points: self.seed_points,
                 drift_every: self.drift_every,
+                ..StreamConfig::default()
             },
         )
     }

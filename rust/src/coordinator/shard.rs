@@ -31,9 +31,15 @@
 //! errors land in a per-stream counter and the *first* deferred error
 //! message is surfaced by the next [`StreamRouter::sync`]), and batched
 //! [`StreamRouter::ingest_many`] (one command and one reply per batch —
-//! the per-point channel round-trip amortizes across the batch, and the
+//! the per-point channel round-trip amortizes across the batch, the
 //! worker computes the batch's kernel rows as one blocked GEMM via
-//! [`IncrementalKpca::push_batch_with`]).
+//! [`IncrementalKpca::push_batch_with`], and the batch's rank-one
+//! back-rotations fold into a single fused engine GEMM — the blocked
+//! rank-b update, whose per-stream `engine_gemms` gauge the pool
+//! snapshot rolls up). Streams opened with
+//! [`StreamConfig::expected_m`]/[`StreamConfig::expected_batch`] are
+//! pre-sized once at initialization, so their whole streamed life is
+//! allocation-silent.
 //!
 //! **Shared immutable resources.** One [`RoutedEngine`] (and, when
 //! configured, one PJRT runtime — it is not `Send`, so it must be built
@@ -57,7 +63,7 @@ use std::thread::JoinHandle;
 use std::time::Instant;
 
 use crate::kernels::{median_heuristic, Kernel};
-use crate::kpca::{IncrementalKpca, KpcaStats};
+use crate::kpca::{BatchRotation, IncrementalKpca, KpcaStats};
 use crate::linalg::Mat;
 
 use super::drift::{DriftMonitor, DriftPoint};
@@ -75,6 +81,19 @@ pub struct StreamConfig {
     pub seed_points: usize,
     /// Drift measurement cadence (accepted points; 0 = off).
     pub drift_every: usize,
+    /// Expected steady-state eigensystem size. When > 0 (or
+    /// `expected_batch` > 0) the worker calls
+    /// [`IncrementalKpca::reserve`] the moment the stream's eigensystem
+    /// is built — every hot-path buffer is pre-sized once, instead of
+    /// growing across the first batches.
+    pub expected_m: usize,
+    /// Expected ingest batch size for the same reserve call.
+    pub expected_batch: usize,
+    /// Batched back-rotation strategy for this stream's `ingest_many`
+    /// commands; `None` keeps the library's auto rule (fused for real
+    /// batches). Forcing [`BatchRotation::Sequential`] is how the
+    /// fused-vs-sequential bench series isolates the amortization.
+    pub batch_rotation: Option<BatchRotation>,
 }
 
 impl Default for StreamConfig {
@@ -84,6 +103,9 @@ impl Default for StreamConfig {
             mean_adjust: true,
             seed_points: 20,
             drift_every: 0,
+            expected_m: 0,
+            expected_batch: 0,
+            batch_rotation: None,
         }
     }
 }
@@ -206,6 +228,7 @@ struct ShardRollup {
     excluded: u64,
     errors: u64,
     total_ws_bytes: u64,
+    ws_engine_gemms: u64,
     ingest: LatencyHistogram,
     project: LatencyHistogram,
     engine_calls: (u64, u64),
@@ -224,6 +247,7 @@ struct ClosedTotals {
     excluded: u64,
     errors: u64,
     orphans: u64,
+    engine_gemms: u64,
     ingest: LatencyHistogram,
     project: LatencyHistogram,
 }
@@ -233,6 +257,7 @@ impl ClosedTotals {
         self.accepted += m.accepted;
         self.excluded += m.excluded;
         self.errors += m.errors;
+        self.engine_gemms += m.engine_gemms;
         self.ingest.merge(&m.ingest_latency);
         self.project.merge(&m.project_latency);
     }
@@ -334,7 +359,18 @@ impl StreamEntry {
         let seed = Mat::from_vec(self.seeded, self.dim, self.seed_buf.clone());
         let kernel = build_kernel(&self.cfg.kernel, &seed);
         match IncrementalKpca::from_batch_shared(kernel, &seed, self.cfg.mean_adjust) {
-            Ok(st) => {
+            Ok(mut st) => {
+                st.batch_rotation = self.cfg.batch_rotation;
+                // Warm the entry per the open-time expectations: one
+                // reserve here replaces incremental growth across the
+                // stream's first batches (ROADMAP "per-stream reserve
+                // through the coordinator").
+                if self.cfg.expected_m > 0 || self.cfg.expected_batch > 0 {
+                    st.reserve(
+                        self.cfg.expected_m.max(self.seeded),
+                        self.cfg.expected_batch,
+                    );
+                }
                 // The batch init allocated the full eigensystem +
                 // workspace — publish the residency gauges now, not
                 // only after the first post-seed push.
@@ -360,6 +396,7 @@ impl StreamEntry {
         self.metrics.ws_bytes_resident =
             (st.hot_path_bytes() + st.batch_bytes_resident()) as u64;
         self.metrics.ws_reallocs = st.hot_path_reallocs() + st.batch_reallocs();
+        self.metrics.engine_gemms = st.engine_gemms();
     }
 
     fn ingest(&mut self, x: &[f64], engine: &RoutedEngine) -> Result<IngestReply, String> {
@@ -492,6 +529,7 @@ impl StreamEntry {
             ws_bytes_resident: self.metrics.ws_bytes_resident,
             ws_reallocs: self.metrics.ws_reallocs,
             reallocs_per_update: self.metrics.reallocs_per_update(),
+            engine_gemms: self.metrics.engine_gemms,
             drift_frobenius: self.drift.latest().map(|d| d.norms.frobenius),
         }
     }
@@ -670,6 +708,7 @@ fn shard_worker(shard: usize, engine_cfg: EngineConfig, rx: Receiver<ShardComman
                     excluded: closed.excluded,
                     errors: closed.errors + closed.orphans,
                     total_ws_bytes: 0,
+                    ws_engine_gemms: closed.engine_gemms,
                     ingest: closed.ingest.clone(),
                     project: closed.project.clone(),
                     engine_calls: engine.counts(),
@@ -680,6 +719,7 @@ fn shard_worker(shard: usize, engine_cfg: EngineConfig, rx: Receiver<ShardComman
                     rollup.excluded += entry.metrics.excluded;
                     rollup.errors += entry.metrics.errors;
                     rollup.total_ws_bytes += entry.metrics.ws_bytes_resident;
+                    rollup.ws_engine_gemms += entry.metrics.engine_gemms;
                     rollup.ingest.merge(&entry.metrics.ingest_latency);
                     rollup.project.merge(&entry.metrics.project_latency);
                     rollup.gauges.push(entry.gauges(shard));
@@ -740,6 +780,33 @@ impl StreamRouter {
 
     /// Open a stream on its pinned shard and resolve it to a cheap
     /// [`StreamHandle`]. Fails if the id is in use.
+    ///
+    /// Setting [`StreamConfig::expected_m`]/
+    /// [`StreamConfig::expected_batch`] makes the worker pre-size every
+    /// hot-path buffer when the stream's eigensystem is built, so the
+    /// whole streamed life of the entry is allocation-silent.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use inkpca::coordinator::{KernelConfig, PoolConfig, ShardPool, StreamConfig};
+    ///
+    /// let pool = ShardPool::spawn(PoolConfig::default());
+    /// let router = pool.router();
+    /// let cfg = StreamConfig {
+    ///     kernel: KernelConfig::Rbf { sigma: 1.0 },
+    ///     mean_adjust: false,
+    ///     seed_points: 2,
+    ///     expected_m: 64,      // reserve for 64 points …
+    ///     expected_batch: 16,  // … fed in batches of up to 16
+    ///     ..StreamConfig::default()
+    /// };
+    /// let h = router.open_stream("sensor-7", 3, cfg)?;
+    /// assert_eq!(h.id(), "sensor-7");
+    /// assert_eq!(h.shard(), router.shard_of("sensor-7"));
+    /// # pool.shutdown();
+    /// # Ok::<(), String>(())
+    /// ```
     pub fn open_stream(
         &self,
         stream: &str,
@@ -774,8 +841,35 @@ impl StreamRouter {
 
     /// Ingest a whole batch (`xs` is `b × dim` row-major) as one
     /// command and one reply: the channel round-trip amortizes over the
-    /// batch and the worker computes the batch's kernel rows as one
-    /// blocked GEMM.
+    /// batch, the worker computes the batch's kernel rows as one
+    /// blocked GEMM, and the batch's rank-one back-rotations fold into
+    /// one fused engine GEMM (the blocked rank-b update — override per
+    /// stream via [`StreamConfig::batch_rotation`]).
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use inkpca::coordinator::{KernelConfig, PoolConfig, ShardPool, StreamConfig};
+    ///
+    /// let pool = ShardPool::spawn(PoolConfig::default());
+    /// let router = pool.router();
+    /// let cfg = StreamConfig {
+    ///     kernel: KernelConfig::Rbf { sigma: 1.0 },
+    ///     mean_adjust: false,
+    ///     seed_points: 2,
+    ///     ..StreamConfig::default()
+    /// };
+    /// let h = router.open_stream("s", 2, cfg)?;
+    /// // Six 2-d points in one command: two consumed by seeding, four
+    /// // through the blocked batch path.
+    /// let pts: Vec<f64> = (0..12).map(|i| (i as f64 * 0.31).cos()).collect();
+    /// let reply = router.ingest_many(&h, pts)?;
+    /// assert_eq!(reply.seeded, 2);
+    /// assert_eq!(reply.accepted + reply.excluded, 4);
+    /// assert_eq!(reply.m, 6 - reply.excluded);
+    /// # pool.shutdown();
+    /// # Ok::<(), String>(())
+    /// ```
     pub fn ingest_many(&self, h: &StreamHandle, xs: Vec<f64>) -> Result<BatchReply, String> {
         self.rpc(h.shard, |reply| ShardCommand::IngestMany {
             slot: h.slot,
@@ -877,6 +971,7 @@ impl StreamRouter {
             snap.excluded += rollup.excluded;
             snap.errors += rollup.errors;
             snap.total_ws_bytes += rollup.total_ws_bytes;
+            snap.ws_engine_gemms += rollup.ws_engine_gemms;
             snap.engine_calls.0 += rollup.engine_calls.0;
             snap.engine_calls.1 += rollup.engine_calls.1;
             ingest.merge(&rollup.ingest);
@@ -956,7 +1051,7 @@ mod tests {
             kernel: KernelConfig::Rbf { sigma: 1.0 },
             mean_adjust: true,
             seed_points: 5,
-            drift_every: 0,
+            ..StreamConfig::default()
         }
     }
 

@@ -4,6 +4,11 @@
 //! Northrop, *"Incremental kernel PCA and the Nyström method"*
 //! (stat.ML 2018), grown toward a production streaming system.
 //!
+//! **`ARCHITECTURE.md` at the repository root is the companion map**:
+//! paper section → module, the data flow of one batched ingest through
+//! the shard pool, and the blocked rank-b rotation decision rule. Start
+//! there when orienting; the module docs below carry the details.
+//!
 //! ## Layers
 //!
 //! - **Layer 3** ([`coordinator`]) — a *sharded multi-stream* engine:
@@ -107,6 +112,24 @@
 //! labelled [`kpca::IncrementalKrr::push_batch`]; KRR refits follow the
 //! cached discipline too — `fitted` is `U Λ (Λ+λI)⁻¹ Uᵀ y` off the
 //! tracked eigensystem, zero kernel evaluations per refit.
+//!
+//! ## The blocked rank-b eigen-update
+//!
+//! Batching the kernel evaluation left one per-point cost: each
+//! rank-one update still paid its own `2m³` back-rotation GEMM. The
+//! blocked path ([`rankone::rank_one_update_fused_ws`]) removes it: a
+//! clean update's rotation factor `W` depends only on the spectrum and
+//! on `z = Uᵀv`, so a batch's factors fold into one pending product
+//! `Q = W₁·…·W_j` in workspace scratch (eigenvalues advance per update;
+//! the next `z` is `Qᵀ(Uᵀv)`; expansions embed as `diag(Q, 1)` plus a
+//! column permutation of `Q`), and [`rankone::flush_rotation_ws`]
+//! applies `U ← U·Q` as **one** engine GEMM per batch. Updates that
+//! would deflate — screened in `O(n)` by [`secular::is_clean`] — flush
+//! and run sequentially, so fused ≡ sequential to rounding; the
+//! [`kpca::BatchRotation`] strategy (auto: fused for `b ≥ 2`) selects
+//! per batch, and `UpdateWorkspace::engine_gemms` / the coordinator's
+//! `engine_gemms` gauges expose the amortization (the `e2e_shards`
+//! bench carries a forced fused-vs-sequential series).
 
 // The numeric kernels are written index-style on purpose (they mirror
 // the paper's equations and the blocked-GEMM literature); clippy's

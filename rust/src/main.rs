@@ -7,11 +7,11 @@
 //!   serve [opts]          run the streaming coordinator on a dataset feed
 //!   quickstart            tiny end-to-end sanity run
 //!
-//! `serve` options: --dataset magic|yeast  --n <pts>  --engine native|pjrt
-//!                  --no-adjust  --drift-every <k>  --seed-points <k>
-//!                  --shards <k>  --streams <k>   (multi-stream pool mode)
-//!                  --batch <b>   (ship points in b-sized `ingest_many`
-//!                                 batches instead of per-point rendezvous)
+//! `serve` options: `--dataset magic|yeast`  `--n <pts>`  `--engine native|pjrt`
+//!                  `--no-adjust`  `--drift-every <k>`  `--seed-points <k>`
+//!                  `--shards <k>`  `--streams <k>`   (multi-stream pool mode)
+//!                  `--batch <b>`   (ship points in b-sized `ingest_many`
+//!                                  batches instead of per-point rendezvous)
 
 use inkpca::coordinator::{
     Config, Coordinator, EngineConfig, EnginePolicy, KernelConfig, ShardPool,
@@ -152,8 +152,14 @@ fn serve_pool(
     batch: usize,
 ) -> Result<(), String> {
     let dim = ds.dim();
-    let (mut pool_cfg, stream_cfg) = cfg.split();
+    let (mut pool_cfg, mut stream_cfg) = cfg.split();
     pool_cfg.shards = shards;
+    // Per-stream reserve through the coordinator: each stream's share
+    // and batch size are known up front, so the workers pre-size every
+    // hot-path buffer at initialization instead of growing across the
+    // first batches.
+    stream_cfg.expected_m = ds.n().div_ceil(streams);
+    stream_cfg.expected_batch = batch;
     if ds.n() / streams <= stream_cfg.seed_points {
         return Err(format!(
             "{} points over {streams} streams leaves ≤ {} per stream — not enough to seed",
@@ -198,12 +204,13 @@ fn serve_pool(
     println!("{snap}");
     for g in &snap.per_stream {
         println!(
-            "  {} @ shard {}: m={} ws={}B reallocs/update={:.4} drift={}",
+            "  {} @ shard {}: m={} ws={}B reallocs/update={:.4} rotation_gemms={} drift={}",
             g.stream,
             g.shard,
             g.m,
             g.ws_bytes_resident,
             g.reallocs_per_update,
+            g.engine_gemms,
             g.drift_frobenius.map(|d| format!("{d:.3e}")).unwrap_or_else(|| "–".into())
         );
     }

@@ -116,7 +116,10 @@ impl<'k> CholeskyNystrom<'k> {
     /// Add a batch of evaluation points. The bordered Cholesky
     /// expansions are inherently sequential (each point's column is
     /// taken against the subset *including* the batch points accepted
-    /// before it), but the `K_{m,n}` rows of every accepted point are
+    /// before it) and — unlike the eigen path's blocked rank-b update —
+    /// there is no spectrum here whose back-rotation could be fused:
+    /// the factor row append *is* the whole per-point cost. The
+    /// `K_{m,n}` rows of every accepted point are still
     /// computed afterwards as one `b × n` blocked kernel-row evaluation
     /// and appended in order — mirroring
     /// [`super::IncrementalNystrom::add_points`]. Returns the number of

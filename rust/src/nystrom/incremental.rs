@@ -111,13 +111,37 @@ impl<'k> IncrementalNystrom<'k> {
         self.add_points_with(idxs, &crate::rankone::NativeRotate)
     }
 
+    /// Pre-size the append path for subsets up to `m` points added in
+    /// batches of up to `b`: the subset eigensystem's hot-path and
+    /// batch scratch ([`IncrementalKpca::reserve`]) plus this layer's
+    /// gather and kernel-row buffers. Warm batched adds then touch the
+    /// allocator only for the amortized `kmn`/`subset` appends.
+    pub fn reserve(&mut self, m: usize, b: usize) {
+        self.inc.reserve(m, b);
+        let n = self.n();
+        let dim = self.x.cols();
+        if self.batch_buf.capacity() < b * dim {
+            self.batch_buf.reserve(b * dim - self.batch_buf.len());
+        }
+        if self.rows_buf.capacity() < b * n {
+            self.rows_buf.reserve(b * n - self.rows_buf.len());
+        }
+        if self.col_buf.capacity() < n {
+            self.col_buf.reserve(n - self.col_buf.len());
+        }
+        self.kb.reserve(n, b);
+    }
+
     /// Add `idxs.len()` evaluation points to the subset in one call:
     /// the subset eigensystem grows through the blocked batch entry
     /// point ([`IncrementalKpca::push_batch_with`] — the batch's kernel
-    /// rows against the retained subset are one GEMM), and the
-    /// `K_{m,n}` rows of every *accepted* point are computed as one
-    /// `b × n` blocked kernel-row evaluation and appended in order.
-    /// Returns the number of accepted (non-degenerate) points.
+    /// rows against the retained subset are one GEMM, and the batch's
+    /// rank-one back-rotations fold into one fused engine GEMM under
+    /// the default [`crate::kpca::BatchRotation`] auto-selection; set
+    /// `self.inc.batch_rotation` to override), and the `K_{m,n}` rows
+    /// of every *accepted* point are computed as one `b × n` blocked
+    /// kernel-row evaluation and appended in order. Returns the number
+    /// of accepted (non-degenerate) points.
     pub fn add_points_with(
         &mut self,
         idxs: &[usize],
@@ -254,8 +278,17 @@ mod tests {
         assert_eq!(bat.m(), 9);
         assert_eq!(bat.subset, seq.subset);
         assert!(bat.knm().max_abs_diff(&seq.knm()) < 1e-12);
+        // Eigensystem rounding (the batched side applies the fused
+        // rank-b rotation) passes through the rcond-clipped Λ⁻¹ of
+        // eq. (7), which amplifies noise along the Gram's near-null
+        // directions — compare at the suite's Nyström tolerance rather
+        // than the raw-eigensystem one.
         let diff = bat.approx_gram().max_abs_diff(&seq.approx_gram());
-        assert!(diff < 1e-10, "batched vs sequential Nyström diff {diff}");
+        assert!(diff < 1e-7, "batched vs sequential Nyström diff {diff}");
+        // The raw eigensystems themselves agree tightly.
+        for (a, b) in bat.inc.vals.iter().zip(&seq.inc.vals) {
+            assert!((a - b).abs() < 1e-10, "{a} vs {b}");
+        }
     }
 
     #[test]

@@ -1,0 +1,471 @@
+//! The blocked rank-b eigen-update: fold a batch's per-update
+//! back-rotations into one pending product, apply it as a single engine
+//! GEMM.
+//!
+//! # Why this is sound
+//!
+//! A clean (no-deflation) rank-one update factors as `U ← U·W` with `W`
+//! built purely from the *eigenvalues* and the projected weight vector
+//! `z = Uᵀv` — never from `U`'s entries themselves. So a run of `j`
+//! clean updates is `U ← U·(W₁·…·W_j)`, and the product can be
+//! accumulated in `r × r` scratch while `U` stays untouched:
+//!
+//! - the eigenvalues after each update are the secular roots, available
+//!   without rotating anything;
+//! - the next update's weight vector is recovered through the pending
+//!   product, `z = Qᵀ(Uᵀv)` — two GEMVs instead of a rotated basis;
+//! - an expansion embeds as `Q ← diag(Q, 1)` followed by the sorted
+//!   insertion's *column permutation applied to `Q`* (the basis only
+//!   gains its untouched identity row/column).
+//!
+//! The two situations that do reach into `U` — a deflation Givens
+//! rotation for (near-)repeated eigenvalues, and the deflated-index
+//! scatter/sort — are exactly what [`crate::secular::is_clean`]
+//! screens for; a dirty update flushes the pending product and runs the
+//! ordinary sequential path, then accumulation resumes.
+//!
+//! # What it buys
+//!
+//! Sequential, a batch of `b` points costs `2b`–`4b` engine
+//! back-rotation GEMMs against the `m × r` basis; fused it costs the
+//! same number of *native* `r × r` accumulation products plus **one**
+//! engine GEMM at the flush. The flop count is comparable for a square
+//! basis (`r ≈ m`) — the win is engine dispatches (PJRT launch/padding
+//! overhead, one double-buffer commit instead of `b`) and it grows to a
+//! real flop win whenever `U` is taller than wide (top-`r` trackers,
+//! `m > r`). `UpdateWorkspace::engine_gemms` measures the difference.
+
+use crate::linalg::{MatView, MatViewMut};
+use crate::secular::is_clean;
+
+use super::workspace::ensure_f64;
+use super::{EigenBasis, Rotate, UpdateStats, UpdateWorkspace, DEFAULT_DEFLATE_TOL};
+
+/// [`rank_one_update_fused_tol_ws`] at the default deflation tolerance.
+pub fn rank_one_update_fused_ws(
+    vals: &mut Vec<f64>,
+    vecs: &mut EigenBasis,
+    sigma: f64,
+    v: &[f64],
+    engine: &dyn Rotate,
+    ws: &mut UpdateWorkspace,
+) -> Result<UpdateStats, String> {
+    rank_one_update_fused_tol_ws(vals, vecs, sigma, v, engine, DEFAULT_DEFLATE_TOL, ws)
+}
+
+/// Deferred form of [`super::rank_one_update_tol_ws`]: when the update
+/// is clean (nothing would deflate), its rotation is folded into the
+/// workspace's pending product instead of being applied to `vecs` — no
+/// engine GEMM, no basis write. When deflation makes deferral unsound,
+/// the pending product is flushed and the update runs sequentially.
+///
+/// Until [`flush_rotation_ws`] is called, `vecs` holds a *stale* basis:
+/// the true eigenvectors are `vecs · Q`. Callers must flush before any
+/// read of the basis (projection, reconstruction, cloning) and before
+/// handing the eigensystem to code unaware of the pending state.
+pub fn rank_one_update_fused_tol_ws(
+    vals: &mut Vec<f64>,
+    vecs: &mut EigenBasis,
+    sigma: f64,
+    v: &[f64],
+    engine: &dyn Rotate,
+    tol: f64,
+    ws: &mut UpdateWorkspace,
+) -> Result<UpdateStats, String> {
+    let n = vals.len();
+    assert_eq!(vecs.cols(), n, "one eigenvector column per eigenvalue");
+    assert_eq!(vecs.rows(), v.len(), "v must live in the row space of vecs");
+    if n == 0 || sigma == 0.0 {
+        return Ok(UpdateStats::default());
+    }
+    debug_assert!(
+        vals.windows(2).all(|w| w[0] <= w[1]),
+        "eigenvalues must be ascending"
+    );
+    debug_assert!(ws.q_dim == 0 || ws.q_dim == n, "pending rotation order mismatch");
+
+    // z = Qᵀ(Uᵀv) — the perturbation projected into the *effective*
+    // basis U·Q; with nothing pending this is the ordinary Uᵀv.
+    ensure_f64(&mut ws.zq, n, &mut ws.reallocs);
+    crate::linalg::gemv_t_into(vecs.view(), v, &mut ws.zq);
+    ensure_f64(&mut ws.z, n, &mut ws.reallocs);
+    if ws.q_dim > 0 {
+        crate::linalg::gemv_t_into(MatView::new(&ws.q, n, n, n), &ws.zq, &mut ws.z);
+    } else {
+        ws.z.copy_from_slice(&ws.zq);
+    }
+
+    // Deflation screen: tiny weights or (near-)repeated eigenvalues
+    // need Givens rotations / index scatters on U itself — flush the
+    // pending product and run the exact sequential update instead.
+    if !is_clean(vals, &ws.z, tol) {
+        ws.fused_fallbacks += 1;
+        flush_rotation_ws(vecs, engine, ws);
+        return super::rank_one_update_tol_ws(vals, vecs, sigma, v, engine, tol, ws);
+    }
+
+    // Clean path: secular solve over the full active set, Gu–Eisenstat
+    // stabilized weights, and the W factor — all against the current
+    // spectrum, no basis access.
+    crate::secular::solve_all_into(vals, &ws.z, sigma, &mut ws.roots, &mut ws.reallocs)?;
+    ensure_f64(&mut ws.zhat, n, &mut ws.reallocs);
+    super::stabilized_weights_into(vals, &ws.z, sigma, &ws.roots, &mut ws.zhat);
+    super::assemble_w_into(&ws.zhat, vals, &ws.roots, &mut ws.w, &mut ws.col, &mut ws.reallocs)?;
+
+    // Fold: Q ← Q·W (native r×r product into the double buffer), or
+    // seed the product with W when nothing is pending yet.
+    if ws.q_dim == 0 {
+        ensure_f64(&mut ws.q, n * n, &mut ws.reallocs);
+        ws.q.copy_from_slice(&ws.w[..n * n]);
+        ws.q_dim = n;
+    } else {
+        ensure_f64(&mut ws.q_next, n * n, &mut ws.reallocs);
+        let q_view = MatView::new(&ws.q, n, n, n);
+        let w_view = MatView::new(&ws.w, n, n, n);
+        let mut out = MatViewMut::new(&mut ws.q_next, n, n, n);
+        crate::linalg::matmul_into(q_view, w_view, &mut out);
+        std::mem::swap(&mut ws.q, &mut ws.q_next);
+        ws.accum_gemms += 1;
+    }
+    // The secular roots are ascending and cover every position — the
+    // eigenvalues update without any sort.
+    for (c, root) in ws.roots.iter().enumerate() {
+        vals[c] = root.value;
+    }
+    ws.fused_updates += 1;
+    Ok(UpdateStats { deflated: 0, rotations: 0, solved: n })
+}
+
+/// Materialize a pending rotation product: `U ← U·Q` as one engine GEMM
+/// into the workspace double buffer, committed by an `O(1)` swap.
+/// Returns `true` if a product was pending (and one engine GEMM was
+/// dispatched), `false` as a no-op. Idempotent; cheap when clean.
+pub fn flush_rotation_ws(
+    vecs: &mut EigenBasis,
+    engine: &dyn Rotate,
+    ws: &mut UpdateWorkspace,
+) -> bool {
+    let n = ws.q_dim;
+    if n == 0 {
+        return false;
+    }
+    debug_assert_eq!(vecs.cols(), n, "pending rotation order must match the basis");
+    let m = vecs.rows();
+    let stride = vecs.stride();
+    let out_len = vecs.data_len();
+    ensure_f64(&mut ws.rotated, out_len, &mut ws.reallocs);
+    {
+        let q_view = MatView::new(&ws.q, n, n, n);
+        let out_view = MatViewMut::new(&mut ws.rotated, m, n, stride);
+        engine.rotate_into(vecs.view(), q_view, out_view);
+    }
+    vecs.swap_data(&mut ws.rotated);
+    ws.q_dim = 0;
+    ws.engine_gemms += 1;
+    ws.flushes += 1;
+    true
+}
+
+/// Expansion step while a rotation is pending (called from
+/// [`super::expand_eigensystem_ws`] *after* the basis gained its
+/// identity row/column and `vals` its trailing entry): extend the
+/// product to `diag(Q, 1)` and apply the sorted-insertion column
+/// permutation to `Q` and `vals` — `U` is left untouched.
+pub(super) fn expand_pending_rotation(vals: &mut [f64], ws: &mut UpdateWorkspace) {
+    let n = ws.q_dim;
+    let n1 = n + 1;
+    debug_assert_eq!(vals.len(), n1);
+    // diag(Q, 1) re-layout into the double buffer (row stride changes
+    // from n to n+1, so this cannot be done in place front-to-back).
+    ensure_f64(&mut ws.q_next, n1 * n1, &mut ws.reallocs);
+    for i in 0..n {
+        ws.q_next[i * n1..i * n1 + n].copy_from_slice(&ws.q[i * n..(i + 1) * n]);
+        ws.q_next[i * n1 + n] = 0.0;
+    }
+    ws.q_next[n * n1..n1 * n1].fill(0.0);
+    ws.q_next[n * n1 + n] = 1.0;
+    std::mem::swap(&mut ws.q, &mut ws.q_next);
+    ws.q_dim = n1;
+    // Restore ascending order: the new eigenvalue sits at the end; move
+    // it (and Q's last column) to its sorted slot by a right-rotation.
+    let new_val = vals[n];
+    let p = vals[..n].partition_point(|&x| x <= new_val);
+    if p < n {
+        vals[p..].rotate_right(1);
+        for i in 0..n1 {
+            let row = &mut ws.q[i * n1..(i + 1) * n1];
+            row[p..].rotate_right(1);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{eigh, orthogonality_defect, Mat};
+    use crate::rankone::{expand_eigensystem_ws, rank_one_update_ws, NativeRotate};
+    use crate::util::Rng;
+
+    fn rand_sym(n: usize, rng: &mut Rng) -> Mat {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let v = rng.range(-1.0, 1.0);
+                m[(i, j)] = v;
+                m[(j, i)] = v;
+            }
+        }
+        m
+    }
+
+    /// A run of clean updates, accumulated then flushed, must match the
+    /// same updates applied sequentially — and dispatch one engine GEMM
+    /// instead of one per update.
+    #[test]
+    fn fused_run_matches_sequential_with_one_gemm() {
+        let n = 12;
+        let mut rng = Rng::new(41);
+        let a = rand_sym(n, &mut rng);
+        let eg = eigh(&a).unwrap();
+
+        let mut vals_s = eg.values.clone();
+        let mut basis_s = EigenBasis::from_mat(eg.vectors.clone());
+        let mut ws_s = UpdateWorkspace::new();
+        let mut vals_f = eg.values.clone();
+        let mut basis_f = EigenBasis::from_mat(eg.vectors.clone());
+        let mut ws_f = UpdateWorkspace::new();
+
+        let updates: Vec<(f64, Vec<f64>)> = (0..6)
+            .map(|_| {
+                let sigma = rng.range(0.3, 1.5);
+                let v: Vec<f64> = (0..n).map(|_| rng.range(-0.8, 0.8)).collect();
+                (sigma, v)
+            })
+            .collect();
+        for (sigma, v) in &updates {
+            rank_one_update_ws(&mut vals_s, &mut basis_s, *sigma, v, &NativeRotate, &mut ws_s)
+                .unwrap();
+            rank_one_update_fused_ws(
+                &mut vals_f,
+                &mut basis_f,
+                *sigma,
+                v,
+                &NativeRotate,
+                &mut ws_f,
+            )
+            .unwrap();
+        }
+        assert!(ws_f.pending_rotation());
+        assert!(flush_rotation_ws(&mut basis_f, &NativeRotate, &mut ws_f));
+        assert!(!flush_rotation_ws(&mut basis_f, &NativeRotate, &mut ws_f), "idempotent");
+
+        assert_eq!(ws_s.engine_gemms(), 6);
+        assert_eq!(ws_f.engine_gemms(), 1, "fused run must dispatch exactly one GEMM");
+        assert_eq!(ws_f.fused_updates(), 6);
+        for (a, b) in vals_s.iter().zip(&vals_f) {
+            assert!((a - b).abs() < 1e-10, "{a} vs {b}");
+        }
+        assert!(basis_f.max_abs_diff(&basis_s.to_mat()) < 1e-10);
+        assert!(orthogonality_defect(&basis_f) < 1e-9);
+    }
+
+    /// Expansions mid-run defer into the product (diag-embed + column
+    /// permutation) and still match the sequential result.
+    #[test]
+    fn deferred_expansion_matches_sequential() {
+        let n = 8;
+        let mut rng = Rng::new(43);
+        let a = rand_sym(n, &mut rng);
+        let eg = eigh(&a).unwrap();
+
+        let mut vals_s = eg.values.clone();
+        let mut basis_s = EigenBasis::from_mat(eg.vectors.clone());
+        let mut ws_s = UpdateWorkspace::new();
+        let mut vals_f = eg.values.clone();
+        let mut basis_f = EigenBasis::from_mat(eg.vectors.clone());
+        let mut ws_f = UpdateWorkspace::new();
+
+        // Interleave updates and expansions the way a batch of points
+        // does: (update, update, expand) × 3 — the expansion value is
+        // chosen interior so the sorted insertion actually permutes.
+        for step in 0..3 {
+            for _ in 0..2 {
+                let sigma = rng.range(0.3, 1.2);
+                let k = vals_s.len();
+                let v: Vec<f64> = (0..k).map(|_| rng.range(-0.8, 0.8)).collect();
+                rank_one_update_ws(&mut vals_s, &mut basis_s, sigma, &v, &NativeRotate, &mut ws_s)
+                    .unwrap();
+                rank_one_update_fused_ws(
+                    &mut vals_f,
+                    &mut basis_f,
+                    sigma,
+                    &v,
+                    &NativeRotate,
+                    &mut ws_f,
+                )
+                .unwrap();
+            }
+            let mid = 0.5 * (vals_s[0] + vals_s[vals_s.len() - 1]) + 0.01 * step as f64;
+            expand_eigensystem_ws(&mut vals_s, &mut basis_s, mid, &mut ws_s);
+            expand_eigensystem_ws(&mut vals_f, &mut basis_f, mid, &mut ws_f);
+        }
+        flush_rotation_ws(&mut basis_f, &NativeRotate, &mut ws_f);
+        assert_eq!(vals_s.len(), n + 3);
+        for (a, b) in vals_s.iter().zip(&vals_f) {
+            assert!((a - b).abs() < 1e-10, "{a} vs {b}");
+        }
+        assert!(basis_f.max_abs_diff(&basis_s.to_mat()) < 1e-10);
+        assert!(ws_f.engine_gemms() < ws_s.engine_gemms());
+    }
+
+    /// An update that must deflate (exactly repeated eigenvalues from a
+    /// duplicated expansion value — the duplicate-point scenario)
+    /// flushes the pending product, falls back, and stays exact against
+    /// a sequential twin.
+    #[test]
+    fn deflating_update_falls_back_and_stays_exact() {
+        let n = 6;
+        let mut rng = Rng::new(47);
+        let a = rand_sym(n, &mut rng);
+        let eg = eigh(&a).unwrap();
+        let mut vals = eg.values.clone();
+        let mut basis = EigenBasis::from_mat(eg.vectors.clone());
+        let mut ws = UpdateWorkspace::new();
+        let mut vals_s = eg.values.clone();
+        let mut basis_s = EigenBasis::from_mat(eg.vectors.clone());
+        let mut ws_s = UpdateWorkspace::new();
+
+        // One clean update to get a pending product…
+        let v: Vec<f64> = (0..n).map(|_| rng.range(-0.8, 0.8)).collect();
+        rank_one_update_fused_ws(&mut vals, &mut basis, 0.9, &v, &NativeRotate, &mut ws).unwrap();
+        rank_one_update_ws(&mut vals_s, &mut basis_s, 0.9, &v, &NativeRotate, &mut ws_s)
+            .unwrap();
+        assert!(ws.pending_rotation());
+        // …then expand with an eigenvalue that already exists: the next
+        // update sees an exactly repeated pole — a deflation Givens
+        // must fire, which cannot fold into the pending product.
+        let dup = vals[3];
+        expand_eigensystem_ws(&mut vals, &mut basis, dup, &mut ws);
+        expand_eigensystem_ws(&mut vals_s, &mut basis_s, dup, &mut ws_s);
+        assert!(ws.pending_rotation(), "expansion alone must not force a flush");
+        let v2: Vec<f64> = (0..n + 1).map(|_| rng.range(-0.8, 0.8)).collect();
+        let stats = rank_one_update_fused_ws(
+            &mut vals,
+            &mut basis,
+            0.5,
+            &v2,
+            &NativeRotate,
+            &mut ws,
+        )
+        .unwrap();
+        let stats_s =
+            rank_one_update_ws(&mut vals_s, &mut basis_s, 0.5, &v2, &NativeRotate, &mut ws_s)
+                .unwrap();
+        assert!(!ws.pending_rotation(), "fallback must flush the pending product");
+        assert_eq!(ws.fused_fallbacks(), 1);
+        assert!(stats.rotations > 0, "repeated pole must trigger a deflation Givens");
+        assert!(stats_s.rotations > 0);
+        for (a, b) in vals.iter().zip(&vals_s) {
+            assert!((a - b).abs() < 1e-10, "{a} vs {b}");
+        }
+        // Within the formerly degenerate pair the individual
+        // eigenvectors are only unique up to a rotation — compare the
+        // reconstruction, which is invariant.
+        let rec = |vals: &[f64], basis: &EigenBasis| {
+            let mut vl = basis.to_mat();
+            for i in 0..vl.rows() {
+                for j in 0..vl.cols() {
+                    vl[(i, j)] *= vals[j];
+                }
+            }
+            crate::linalg::matmul_nt(&vl, basis)
+        };
+        let diff = rec(&vals, &basis).max_abs_diff(&rec(&vals_s, &basis_s));
+        assert!(diff < 1e-10, "reconstruction diff {diff}");
+        assert!(orthogonality_defect(&basis) < 1e-9);
+        for w in vals.windows(2) {
+            assert!(w[0] <= w[1] + 1e-12);
+        }
+    }
+
+    /// Against the dense ground truth: accumulate a run over a growing
+    /// eigensystem, flush, and compare the reconstruction.
+    #[test]
+    fn fused_reconstruction_matches_dense() {
+        let n = 10;
+        let mut rng = Rng::new(53);
+        let a = rand_sym(n, &mut rng);
+        let eg = eigh(&a).unwrap();
+        let mut vals = eg.values.clone();
+        let mut basis = EigenBasis::from_mat(eg.vectors.clone());
+        let mut ws = UpdateWorkspace::new();
+        let mut dense = a.clone();
+        for _ in 0..5 {
+            let sigma = rng.range(0.2, 1.0);
+            let v: Vec<f64> = (0..n).map(|_| rng.range(-0.7, 0.7)).collect();
+            dense.syr(sigma, &v);
+            rank_one_update_fused_ws(&mut vals, &mut basis, sigma, &v, &NativeRotate, &mut ws)
+                .unwrap();
+        }
+        flush_rotation_ws(&mut basis, &NativeRotate, &mut ws);
+        let expect = eigh(&dense).unwrap();
+        for (u, w) in vals.iter().zip(expect.values.iter()) {
+            assert!((u - w).abs() < 1e-8, "{u} vs {w}");
+        }
+        let rec = {
+            let mut vl = basis.to_mat();
+            for i in 0..n {
+                for j in 0..n {
+                    vl[(i, j)] *= vals[j];
+                }
+            }
+            crate::linalg::matmul_nt(&vl, &basis)
+        };
+        assert!(rec.max_abs_diff(&dense) < 1e-8);
+    }
+
+    /// The sequential entry point must transparently flush a pending
+    /// product left by the fused path.
+    #[test]
+    fn sequential_update_flushes_pending_product() {
+        let n = 7;
+        let mut rng = Rng::new(59);
+        let a = rand_sym(n, &mut rng);
+        let eg = eigh(&a).unwrap();
+        let mut vals = eg.values.clone();
+        let mut basis = EigenBasis::from_mat(eg.vectors.clone());
+        let mut ws = UpdateWorkspace::new();
+        let v: Vec<f64> = (0..n).map(|_| rng.range(-0.8, 0.8)).collect();
+        rank_one_update_fused_ws(&mut vals, &mut basis, 0.8, &v, &NativeRotate, &mut ws).unwrap();
+        assert!(ws.pending_rotation());
+        let v2: Vec<f64> = (0..n).map(|_| rng.range(-0.8, 0.8)).collect();
+        rank_one_update_ws(&mut vals, &mut basis, 0.6, &v2, &NativeRotate, &mut ws).unwrap();
+        assert!(!ws.pending_rotation());
+        assert!(orthogonality_defect(&basis) < 1e-10);
+    }
+
+    /// reserve() pre-sizes the blocked-path scratch too: a warm fused
+    /// run is allocation-silent.
+    #[test]
+    fn fused_path_is_zero_realloc_after_reserve() {
+        let n = 10;
+        let mut rng = Rng::new(61);
+        let a = rand_sym(n, &mut rng);
+        let eg = eigh(&a).unwrap();
+        let mut vals = eg.values.clone();
+        let mut basis = EigenBasis::from_mat(eg.vectors.clone());
+        let mut ws = UpdateWorkspace::new();
+        ws.reserve(n, n);
+        ws.reserve_blocked(n);
+        basis.reserve(n, n);
+        let r0 = ws.reallocs();
+        for _ in 0..8 {
+            let sigma = rng.range(0.3, 1.0);
+            let v: Vec<f64> = (0..n).map(|_| rng.range(-0.7, 0.7)).collect();
+            rank_one_update_fused_ws(&mut vals, &mut basis, sigma, &v, &NativeRotate, &mut ws)
+                .unwrap();
+        }
+        flush_rotation_ws(&mut basis, &NativeRotate, &mut ws);
+        assert_eq!(ws.reallocs(), r0, "fused steady state must not allocate");
+    }
+}

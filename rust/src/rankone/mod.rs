@@ -19,11 +19,28 @@
 //! double buffer and commits by an `O(1)` buffer swap. The `Mat`-based
 //! functions remain as allocating compatibility wrappers (and as the
 //! baseline the `benches/micro_linalg.rs` comparison measures against).
+//!
+//! **Blocked rank-b updates.** A batch of `b` accepted points triggers
+//! `2b` (unadjusted) or `4b` (adjusted) rank-one updates; applying each
+//! back-rotation eagerly costs one engine GEMM per update. The fused
+//! path ([`rank_one_update_fused_ws`]) instead *defers* the rotation:
+//! each clean (no-deflation) update solves its secular system against
+//! the current spectrum, builds its `W` factor, and folds it into a
+//! pending product `Q ← Q·W` held in workspace scratch; deferred
+//! expansions embed as `diag(Q, 1)` plus a column permutation. One
+//! [`flush_rotation_ws`] then applies `U ← U·Q` as a single engine
+//! GEMM for the whole batch. Updates that would deflate (tiny weight or
+//! repeated eigenvalues — the cases that must rotate or permute `U`
+//! itself) flush and fall back to the sequential path, so blocked and
+//! sequential runs are numerically interchangeable. The
+//! [`UpdateWorkspace::engine_gemms`] counter exposes the amortization.
 
 mod basis;
+mod blocked;
 mod workspace;
 
 pub use basis::EigenBasis;
+pub use blocked::{flush_rotation_ws, rank_one_update_fused_tol_ws, rank_one_update_fused_ws};
 pub use workspace::UpdateWorkspace;
 
 pub(crate) use workspace::ensure_f64;
@@ -151,6 +168,10 @@ pub fn rank_one_update_tol_ws(
     tol: f64,
     ws: &mut UpdateWorkspace,
 ) -> Result<UpdateStats, String> {
+    // A pending blocked-batch rotation must be materialized before the
+    // sequential path reads or mutates `vecs` directly.
+    flush_rotation_ws(vecs, engine, ws);
+
     let n = vals.len();
     assert_eq!(vecs.cols(), n, "one eigenvector column per eigenvalue");
     assert_eq!(vecs.rows(), v.len(), "v must live in the row space of vecs");
@@ -175,6 +196,8 @@ pub fn rank_one_update_tol_ws(
         def,
         roots,
         reallocs,
+        engine_gemms,
+        ..
     } = ws;
 
     // z = Uᵀ v — project the perturbation into the eigenbasis.
@@ -236,24 +259,12 @@ pub fn rank_one_update_tol_ws(
     let out_view = MatViewMut::new(rotated, out_rows, out_cols, out_stride);
     let fused = engine.rotate_fused_into(u_view, zhat, &def.d_active, roots, out_view);
     if !fused {
-        ensure_f64(w, k * k, reallocs);
-        ensure_f64(col, k, reallocs);
-        for (i, root) in roots.iter().enumerate() {
-            for j in 0..k {
-                col[j] = zhat[j] / root.diff(&def.d_active, j);
-            }
-            let nrm = norm2(col);
-            if nrm == 0.0 || !nrm.is_finite() {
-                return Err(format!("rank_one_update: degenerate eigenvector at root {i}"));
-            }
-            for j in 0..k {
-                w[j * k + i] = col[j] / nrm;
-            }
-        }
+        assemble_w_into(zhat, &def.d_active, roots, w, col, reallocs)?;
         let w_view = MatView::new(w, k, k, k);
         let out_view = MatViewMut::new(rotated, out_rows, out_cols, out_stride);
         engine.rotate_into(u_view, w_view, out_view);
     }
+    *engine_gemms += 1;
 
     if full {
         // Commit: the rotated panel becomes the eigenvector storage.
@@ -276,6 +287,37 @@ pub fn rank_one_update_tol_ws(
     }
     sort_pairs_impl(vals, vecs, perm, vals_tmp, scratch, reallocs);
     Ok(stats)
+}
+
+/// Assemble the normalized inner eigenvector factor `W` (`k × k`,
+/// column `i` is `D̃ᵢ⁻¹ ẑ / ‖·‖` over the active coordinates — paper
+/// eq. 6) into workspace scratch, in pole-relative precision. Shared by
+/// the sequential back-rotation and the blocked accumulation path.
+fn assemble_w_into(
+    zhat: &[f64],
+    d: &[f64],
+    roots: &[SecularRoot],
+    w: &mut Vec<f64>,
+    col: &mut Vec<f64>,
+    reallocs: &mut u64,
+) -> Result<(), String> {
+    let k = roots.len();
+    debug_assert_eq!(zhat.len(), k);
+    ensure_f64(w, k * k, reallocs);
+    ensure_f64(col, k, reallocs);
+    for (i, root) in roots.iter().enumerate() {
+        for j in 0..k {
+            col[j] = zhat[j] / root.diff(d, j);
+        }
+        let nrm = norm2(col);
+        if nrm == 0.0 || !nrm.is_finite() {
+            return Err(format!("rank_one_update: degenerate eigenvector at root {i}"));
+        }
+        for j in 0..k {
+            w[j * k + i] = col[j] / nrm;
+        }
+    }
+    Ok(())
 }
 
 /// Gu–Eisenstat weight recomputation: given sorted poles `d`, original
@@ -342,6 +384,13 @@ pub fn expand_eigensystem(vals: &mut Vec<f64>, vecs: &mut Mat, new_val: f64) {
 /// [`expand_eigensystem`] on capacity-doubling storage: the basis grows
 /// in place (amortized O(1) reallocation, O(m) writes) instead of the
 /// full-copy-per-step a dense matrix forces.
+///
+/// While a blocked-batch rotation is pending (see
+/// [`rank_one_update_fused_ws`]), the expansion is *deferred-aware*: the
+/// basis still gains its identity row/column, but the sorted-order
+/// column permutation is applied to the pending product `Q` (extended
+/// as `diag(Q, 1)`) instead of to `U` — only `U·Q` is meaningful until
+/// the flush, and this keeps the expansion from forcing one.
 pub fn expand_eigensystem_ws(
     vals: &mut Vec<f64>,
     vecs: &mut EigenBasis,
@@ -353,7 +402,11 @@ pub fn expand_eigensystem_ws(
     vecs.expand();
     vecs[(m, n)] = 1.0;
     vals.push(new_val);
-    sort_pairs_ws(vals, vecs, ws);
+    if ws.q_dim > 0 {
+        blocked::expand_pending_rotation(vals, ws);
+    } else {
+        sort_pairs_ws(vals, vecs, ws);
+    }
 }
 
 /// Sort eigenpairs ascending, permuting columns alongside values

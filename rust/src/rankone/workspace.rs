@@ -7,6 +7,15 @@
 //! no heap allocation (verified by the realloc counter and the
 //! `tests/workspace.rs` suite; the parallel GEMM still spawns scoped
 //! threads above its flop threshold).
+//!
+//! The workspace also hosts the **blocked rank-b state**: the pending
+//! rotation product `Q = Q₁·…·Q_j` accumulated by
+//! [`super::rank_one_update_fused_ws`] across a batch's updates, its
+//! double buffer, and the counters ([`UpdateWorkspace::engine_gemms`],
+//! [`UpdateWorkspace::fused_updates`], …) that let tests and the
+//! coordinator's metrics observe how many `U`-sized back-rotation GEMMs
+//! actually reached the [`super::Rotate`] engine — the quantity the
+//! fused path exists to amortize.
 
 use crate::secular::{Deflation, SecularRoot};
 
@@ -38,8 +47,32 @@ pub struct UpdateWorkspace {
     pub(crate) def: Deflation,
     /// Reusable secular roots.
     pub(crate) roots: Vec<SecularRoot>,
+    /// Pending accumulated rotation `Q = Q₁·…·Q_j` of the blocked
+    /// rank-b path, row-major `q_dim × q_dim`. While `q_dim > 0` the
+    /// true eigenvectors are `U·Q`, not `U` — every read of the basis
+    /// must go through [`super::flush_rotation_ws`] first.
+    pub(crate) q: Vec<f64>,
+    /// Double buffer for the `Q ← Q·W` accumulation GEMM and the
+    /// `diag(Q, 1)` re-layout at deferred expansions.
+    pub(crate) q_next: Vec<f64>,
+    /// Order of the pending rotation (0 = none pending).
+    pub(crate) q_dim: usize,
+    /// Scratch for `Uᵀv` before the `Qᵀ` re-projection (length n).
+    pub(crate) zq: Vec<f64>,
     /// Buffer-growth events across all members (zero once warm).
     pub(crate) reallocs: u64,
+    /// `U`-sized back-rotation GEMMs dispatched to the engine — one per
+    /// sequential rank-one update, one per blocked-batch flush.
+    pub(crate) engine_gemms: u64,
+    /// Small `Q·W` accumulation products (native, never the engine).
+    pub(crate) accum_gemms: u64,
+    /// Rank-one updates absorbed into the pending product.
+    pub(crate) fused_updates: u64,
+    /// Fused attempts that had to fall back to the sequential path
+    /// (deflation / repeated eigenvalues made folding unsound).
+    pub(crate) fused_fallbacks: u64,
+    /// Pending products materialized into `U` (one engine GEMM each).
+    pub(crate) flushes: u64,
 }
 
 impl UpdateWorkspace {
@@ -72,11 +105,67 @@ impl UpdateWorkspace {
         grow(&mut self.def.z_active, n);
     }
 
+    /// Pre-size the blocked rank-b scratch (the pending product, its
+    /// double buffer and the `Uᵀv` projection buffer) for eigensystems
+    /// up to `n` eigenpairs — a further `2n² + n` floats on top of
+    /// [`UpdateWorkspace::reserve`], so it is split out: only streams
+    /// that can actually take the fused path should pay for it (the
+    /// fused entry point grows these lazily otherwise).
+    pub fn reserve_blocked(&mut self, n: usize) {
+        fn grow<T>(v: &mut Vec<T>, cap: usize) {
+            if v.capacity() < cap {
+                v.reserve(cap - v.len());
+            }
+        }
+        grow(&mut self.q, n * n);
+        grow(&mut self.q_next, n * n);
+        grow(&mut self.zq, n);
+    }
+
     /// Buffer-growth events since construction. Constant across updates
     /// once the workspace is warm — the zero-allocation guarantee the
     /// steady-state test pins down.
     pub fn reallocs(&self) -> u64 {
         self.reallocs
+    }
+
+    /// Whether a blocked-batch rotation product is pending (the basis is
+    /// stale until [`super::flush_rotation_ws`] materializes `U·Q`).
+    pub fn pending_rotation(&self) -> bool {
+        self.q_dim > 0
+    }
+
+    /// `U`-sized back-rotation GEMMs dispatched to the [`super::Rotate`]
+    /// engine since construction: one per sequential rank-one update,
+    /// one per blocked-batch flush. The gap between this and
+    /// [`UpdateWorkspace::fused_updates`] is the amortization the
+    /// blocked rank-b path buys.
+    pub fn engine_gemms(&self) -> u64 {
+        self.engine_gemms
+    }
+
+    /// Rank-one updates absorbed into a pending rotation product
+    /// instead of dispatching their own engine GEMM.
+    pub fn fused_updates(&self) -> u64 {
+        self.fused_updates
+    }
+
+    /// Fused update attempts that fell back to the sequential path
+    /// because deflation (tiny weight or repeated eigenvalues) made
+    /// folding the rotation unsound.
+    pub fn fused_fallbacks(&self) -> u64 {
+        self.fused_fallbacks
+    }
+
+    /// Pending rotation products materialized into the basis.
+    pub fn rotation_flushes(&self) -> u64 {
+        self.flushes
+    }
+
+    /// Small `Q·W` accumulation GEMMs (native scratch products — never
+    /// the engine; reported for the flop-tradeoff accounting).
+    pub fn accum_gemms(&self) -> u64 {
+        self.accum_gemms
     }
 
     /// Bytes currently held across all scratch buffers.
@@ -92,6 +181,9 @@ impl UpdateWorkspace {
             + self.rotated.capacity()
             + self.scratch.capacity()
             + self.vals_tmp.capacity()
+            + self.q.capacity()
+            + self.q_next.capacity()
+            + self.zq.capacity()
             + self.def.d_active.capacity()
             + self.def.z_active.capacity())
             + u * (self.perm.capacity()

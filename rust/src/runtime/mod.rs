@@ -4,8 +4,8 @@
 //!
 //! The execution path needs the `xla` crate, which the offline image
 //! does not carry; it is compiled only under `--cfg pjrt_runtime` (with
-//! a vendored `xla` checkout patched in). Without the cfg, [`stub`]
-//! provides the same `Runtime`/`PjrtRotate` surface: construction fails
+//! a vendored `xla` checkout patched in). Without the cfg, the `stub`
+//! module provides the same `Runtime`/`PjrtRotate` surface: construction fails
 //! cleanly, so the coordinator falls back to the native engine, and
 //! `PjrtRotate` routes every rotation to the native blocked GEMM. The
 //! artifact manifest and padding contract are pure Rust and always

@@ -35,6 +35,24 @@ pub struct Deflation {
     pub rotations: usize,
 }
 
+/// Non-mutating deflation probe for the blocked rank-b path: `true` iff
+/// [`deflate_into`] on `(d, z)` would be a no-op — every weight clears
+/// the tiny-weight threshold and no adjacent eigenvalue pair is within
+/// the repeated-eigenvalue tolerance, so the whole problem is active,
+/// no Givens rotation would touch `U`, and the update's rotation can be
+/// folded into a pending product without materializing the basis.
+/// `O(n)`, reads only; thresholds are formed exactly as in
+/// [`deflate_into`] so the two can never disagree on a clean problem.
+pub fn is_clean(d: &[f64], z: &[f64], tol: f64) -> bool {
+    let n = d.len();
+    debug_assert_eq!(z.len(), n);
+    let znorm = z.iter().map(|x| x * x).sum::<f64>().sqrt();
+    let dscale = d.iter().fold(0.0_f64, |m, v| m.max(v.abs())).max(1e-300);
+    let ztol = tol * znorm.max(1e-300);
+    let dtol = tol * dscale;
+    z.iter().all(|zk| zk.abs() > ztol) && d.windows(2).all(|w| (w[1] - w[0]).abs() > dtol)
+}
+
 /// Allocating convenience wrapper over [`deflate_into`].
 pub fn deflate(d: &[f64], z: &mut [f64], u: Option<&mut Mat>, tol: f64) -> Deflation {
     let mut out = Deflation::default();
@@ -128,6 +146,34 @@ pub fn deflate_into(
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn is_clean_agrees_with_deflate() {
+        // Clean problem: well-separated poles, solid weights.
+        let d = vec![1.0, 2.0, 3.0];
+        assert!(is_clean(&d, &[0.5, 0.6, 0.7], 1e-12));
+        // Tiny weight → not clean, and deflate_into indeed deflates.
+        let mut z = vec![0.5, 1e-18, 0.5];
+        assert!(!is_clean(&d, &z, 1e-12));
+        let def = deflate(&d, &mut z, None, 1e-12);
+        assert!(!def.deflated.is_empty());
+        // Repeated eigenvalues → not clean (a Givens would fire).
+        let dr = vec![1.0, 1.0, 2.0];
+        let mut zr = vec![3.0, 4.0, 1.0];
+        assert!(!is_clean(&dr, &zr, 1e-12));
+        let defr = deflate(&dr, &mut zr, None, 1e-12);
+        assert!(defr.rotations > 0 || !defr.deflated.is_empty());
+        // Conversely: when is_clean says yes, deflate_into is a no-op.
+        let dc = vec![0.2, 1.1, 2.7, 4.0];
+        let zc0 = vec![0.4, -0.3, 0.2, 0.6];
+        assert!(is_clean(&dc, &zc0, 1e-12));
+        let mut zc = zc0.clone();
+        let defc = deflate(&dc, &mut zc, None, 1e-12);
+        assert_eq!(defc.active.len(), 4);
+        assert!(defc.deflated.is_empty());
+        assert_eq!(defc.rotations, 0);
+        assert_eq!(zc, zc0, "clean deflation must not touch z");
+    }
 
     #[test]
     fn tiny_weights_deflate() {

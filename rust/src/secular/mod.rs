@@ -9,10 +9,17 @@
 //! a safeguarded Newton iteration in a *pole-relative* coordinate
 //! `δ = λ̃ − λ_origin`, which preserves relative accuracy when the root
 //! sits very close to a pole (the same device LAPACK's `dlaed4` uses).
+//!
+//! The blocked rank-b batch path solves its `b` secular systems against
+//! the *evolving* spectrum one after another (each solve needs only the
+//! previous roots, never the rotated eigenvectors), gated by the
+//! `O(n)` non-mutating [`deflate::is_clean`] probe — a system that
+//! would deflate falls back to the sequential update instead of being
+//! folded into the pending rotation product (see `rankone`).
 
 pub mod deflate;
 
-pub use deflate::{deflate, deflate_into, Deflation};
+pub use deflate::{deflate, deflate_into, is_clean, Deflation};
 
 /// One root of the secular equation, kept in pole-relative form so that
 /// downstream difference computations `λⱼ − λ̃ᵢ` can be formed without

@@ -3,7 +3,10 @@
 //! `ingest` reaches (≤1e-10) across kernel families and batch shapes,
 //! including batches that straddle the seeding boundary and batches
 //! with mid-batch §5.1 exclusions / deflation-heavy duplicates — plus
-//! the zero-realloc steady-state guarantee of the batched hot path.
+//! the zero-realloc steady-state guarantee of the batched hot path,
+//! and the blocked rank-b rotation: the fused strategy must match the
+//! sequential one ≤1e-10 everywhere (deflation fallbacks included)
+//! while dispatching strictly fewer engine back-rotation GEMMs.
 
 use inkpca::coordinator::{
     EngineConfig, KernelConfig, PoolConfig, ShardPool, StreamConfig, StreamHandle, StreamRouter,
@@ -11,10 +14,10 @@ use inkpca::coordinator::{
 use inkpca::data::synthetic::yeast_like;
 use inkpca::data::Dataset;
 use inkpca::kernels::{Kernel, Linear, Polynomial, Rbf};
-use inkpca::kpca::IncrementalKpca;
+use inkpca::kpca::{BatchRotation, IncrementalKpca};
 
 fn cfg(kernel: KernelConfig, mean_adjust: bool) -> StreamConfig {
-    StreamConfig { kernel, mean_adjust, seed_points: 6, drift_every: 0 }
+    StreamConfig { kernel, mean_adjust, seed_points: 6, ..StreamConfig::default() }
 }
 
 fn drive_sequential(router: &StreamRouter, h: &StreamHandle, ds: &Dataset) {
@@ -165,6 +168,236 @@ fn ragged_batches_match_sequential_across_kernels() {
             );
         }
     }
+}
+
+/// Fused vs sequential back-rotation across kernel families × both
+/// mean-adjust modes: identical eigensystems ≤1e-10, and — when the
+/// kernel's spectrum leaves updates clean (`expect_amortization`) —
+/// strictly fewer engine GEMMs (workspace-counted) on the fused side.
+/// A rank-deficient kernel (linear in d=8 with n ≫ d) carries a
+/// cluster of numerically repeated zero eigenvalues, so *every* update
+/// correctly takes the deflation fallback: equivalence still holds,
+/// amortization legitimately does not.
+fn assert_rotation_strategies_equivalent(
+    kern: &dyn Kernel,
+    mean_adjust: bool,
+    seed: u64,
+    expect_amortization: bool,
+) {
+    let mut ds = yeast_like(29, seed);
+    ds.standardize();
+    let dim = ds.dim();
+    let seed_mat = ds.x.submatrix(5, dim);
+    let flat = ds.x.as_slice();
+    let mut runs = Vec::new();
+    for rot in [BatchRotation::Fused, BatchRotation::Sequential] {
+        let mut inc = IncrementalKpca::from_batch(kern, &seed_mat, mean_adjust).unwrap();
+        inc.batch_rotation = Some(rot);
+        let mut i = 5;
+        while i < ds.n() {
+            let end = (i + 6).min(ds.n());
+            inc.push_batch(&flat[i * dim..end * dim]).unwrap();
+            i = end;
+        }
+        assert!(
+            !inc.workspace().pending_rotation(),
+            "no pending rotation may survive a batch boundary"
+        );
+        runs.push(inc);
+    }
+    let (fus, seq) = (&runs[0], &runs[1]);
+    assert_eq!(fus.len(), seq.len());
+    for (a, b) in fus.vals.iter().zip(&seq.vals) {
+        assert!(
+            (a - b).abs() <= 1e-10,
+            "{} adjust={mean_adjust}: eigenvalue {a} vs {b}",
+            kern.name()
+        );
+    }
+    let diff = fus.reconstruct().max_abs_diff(&seq.reconstruct());
+    assert!(
+        diff <= 1e-10,
+        "{} adjust={mean_adjust}: fused vs sequential reconstruction diff {diff}",
+        kern.name()
+    );
+    // The fused run must also still track the batch ground truth.
+    let drift = fus.reconstruct().max_abs_diff(&fus.batch_reference());
+    assert!(drift < 1e-7, "{} adjust={mean_adjust}: drift {drift}", kern.name());
+    if expect_amortization {
+        assert!(
+            fus.engine_gemms() < seq.engine_gemms(),
+            "{} adjust={mean_adjust}: fused {} vs sequential {} engine GEMMs",
+            kern.name(),
+            fus.engine_gemms(),
+            seq.engine_gemms()
+        );
+        assert!(fus.workspace().fused_updates() > 0);
+    } else {
+        // Every update fell back — never more GEMMs than sequential.
+        assert!(fus.engine_gemms() <= seq.engine_gemms());
+    }
+}
+
+#[test]
+fn fused_rotation_matches_sequential_rbf() {
+    assert_rotation_strategies_equivalent(&Rbf { sigma: 1.2 }, true, 930, true);
+    assert_rotation_strategies_equivalent(&Rbf { sigma: 0.8 }, false, 931, true);
+}
+
+#[test]
+fn fused_rotation_matches_sequential_linear() {
+    // Linear on d=8 with 29 points: the Gram is rank-deficient, its
+    // zero-eigenvalue cluster keeps deflation live, and the fused path
+    // must *survive* by falling back — equivalence without
+    // amortization.
+    assert_rotation_strategies_equivalent(&Linear, true, 932, false);
+    assert_rotation_strategies_equivalent(&Linear, false, 933, false);
+}
+
+#[test]
+fn fused_rotation_matches_sequential_poly() {
+    assert_rotation_strategies_equivalent(&Polynomial { degree: 2, offset: 1.0 }, true, 934, true);
+    assert_rotation_strategies_equivalent(&Polynomial { degree: 3, offset: 0.5 }, false, 935, true);
+}
+
+/// Duplicate points inside a fused batch force the mid-batch
+/// `Sequential` fallback (repeated eigenvalues → deflation Givens); the
+/// fused run must still match the forced-sequential run ≤1e-10 and
+/// record the fallbacks it took.
+#[test]
+fn fused_deflation_heavy_batch_falls_back_and_matches() {
+    let mut ds = yeast_like(12, 936);
+    ds.standardize();
+    let dim = ds.dim();
+    let mut tail: Vec<f64> = Vec::new();
+    for i in 6..10 {
+        tail.extend_from_slice(ds.x.row(i));
+        tail.extend_from_slice(ds.x.row(i - 4)); // duplicate of a retained row
+    }
+    let kern = Rbf { sigma: 1.0 };
+    let seed = ds.x.submatrix(6, dim);
+    let mut fus = IncrementalKpca::from_batch(&kern, &seed, true).unwrap();
+    fus.batch_rotation = Some(BatchRotation::Fused);
+    let mut seq = IncrementalKpca::from_batch(&kern, &seed, true).unwrap();
+    seq.batch_rotation = Some(BatchRotation::Sequential);
+    let of = fus.push_batch(&tail).unwrap();
+    let os = seq.push_batch(&tail).unwrap();
+    assert_eq!(of.accepted, os.accepted);
+    assert_eq!(of.excluded, os.excluded);
+    assert!(
+        fus.workspace().fused_fallbacks() > 0,
+        "duplicates must force the sequential fallback mid-batch"
+    );
+    assert!(
+        fus.workspace().fused_updates() > 0,
+        "clean updates in the same batch must still fuse"
+    );
+    let diff = fus.reconstruct().max_abs_diff(&seq.reconstruct());
+    assert!(diff < 1e-10, "deflation-heavy fused batch diff {diff}");
+    let drift = fus.reconstruct().max_abs_diff(&fus.batch_reference());
+    assert!(drift < 1e-7, "drift {drift}");
+}
+
+/// Mid-batch §5.1 exclusion under the fused strategy: the excluded
+/// point triggers no updates (the pending rotation from the points
+/// before it is simply carried over, no flush), and the batch still
+/// matches the sequential run.
+#[test]
+fn fused_batch_with_mid_batch_exclusion_matches() {
+    let ds = yeast_like(10, 937);
+    let kern = Linear;
+    let dim = ds.dim();
+    let seed = ds.x.submatrix(6, dim);
+    // The mean of the retained set *as it will be when the point is
+    // evaluated* — seed plus row 6, already applied earlier in the same
+    // batch. Under the linear kernel that point has centered diagonal
+    // v₀ = 0, so the §5.1 exclusion fires mid-batch, with a rotation
+    // product already pending on the fused side.
+    let mean: Vec<f64> =
+        (0..dim).map(|j| (0..7).map(|i| ds.x[(i, j)]).sum::<f64>() / 7.0).collect();
+    let mut batch = Vec::new();
+    batch.extend_from_slice(ds.x.row(6));
+    batch.extend_from_slice(&mean); // mean of rows 0..=6 → v₀ = 0 → excluded
+    batch.extend_from_slice(ds.x.row(7));
+    batch.extend_from_slice(ds.x.row(8));
+
+    let mut fus = IncrementalKpca::from_batch(&kern, &seed, true).unwrap();
+    fus.batch_rotation = Some(BatchRotation::Fused);
+    let out = fus.push_batch(&batch).unwrap();
+    assert_eq!(out.excluded, 1);
+    assert_eq!(fus.last_batch_mask(), &[true, false, true, true]);
+
+    let mut seq = IncrementalKpca::from_batch(&kern, &seed, true).unwrap();
+    seq.batch_rotation = Some(BatchRotation::Sequential);
+    seq.push_batch(&batch).unwrap();
+    let diff = fus.reconstruct().max_abs_diff(&seq.reconstruct());
+    assert!(diff < 1e-10, "mid-batch exclusion fused diff {diff}");
+}
+
+/// Through the router: a fused stream and a forced-sequential stream
+/// fed identical seeding-straddling batches agree ≤1e-10, and the
+/// pool's workspace-counted GEMM gauges show the amortization.
+#[test]
+fn router_fused_stream_matches_sequential_stream() {
+    let mut ds = yeast_like(30, 938);
+    ds.standardize();
+    let pool = ShardPool::spawn(PoolConfig { shards: 2, queue: 16, engine: EngineConfig::Native });
+    let router = pool.router();
+    let mk = |rot| StreamConfig {
+        kernel: KernelConfig::Rbf { sigma: 1.1 },
+        mean_adjust: true,
+        seed_points: 6,
+        batch_rotation: Some(rot),
+        expected_m: 32,
+        expected_batch: 8,
+        ..StreamConfig::default()
+    };
+    let hf = router.open_stream("fused", ds.dim(), mk(BatchRotation::Fused)).unwrap();
+    let hs = router.open_stream("seqrot", ds.dim(), mk(BatchRotation::Sequential)).unwrap();
+    // Batch 8 with seed 6: the first command straddles the seeding
+    // boundary (6 seeded + 2 batched) — the fused path starts mid-batch
+    // on a freshly built eigensystem.
+    drive_batched(&router, &hf, &ds, 8);
+    drive_batched(&router, &hs, &ds, 8);
+    let sf = router.snapshot(&hf).unwrap();
+    let ss = router.snapshot(&hs).unwrap();
+    assert_eq!(sf.m, 30);
+    assert_eq!(ss.m, 30);
+    for (a, b) in sf.top_values.iter().zip(&ss.top_values) {
+        assert!((a - b).abs() <= 1e-10, "eigenvalue {a} vs {b}");
+    }
+    let probe = vec![0.4; ds.dim()];
+    let pf = router.project(&hf, probe.clone(), 4).unwrap();
+    let ps = router.project(&hs, probe, 4).unwrap();
+    for (g, w) in pf.iter().zip(&ps) {
+        assert!((g.abs() - w.abs()).abs() <= 1e-10, "projection {g} vs {w}");
+    }
+    // Workspace-counted GEMM gauges: per-stream and in the pool rollup.
+    let mf = router.metrics(&hf).unwrap();
+    let ms = router.metrics(&hs).unwrap();
+    assert!(
+        mf.engine_gemms < ms.engine_gemms,
+        "fused stream {} vs sequential stream {} engine GEMMs",
+        mf.engine_gemms,
+        ms.engine_gemms
+    );
+    // Sequential adjusted mode pays up to 4 GEMMs per accepted point
+    // (expansion + final updates always dispatch two; the two
+    // re-centering updates can skip only in degenerate cases).
+    assert!(ms.engine_gemms >= 2 * ms.accepted && ms.engine_gemms <= 4 * ms.accepted);
+    let snap = router.pool_snapshot().unwrap();
+    assert_eq!(snap.ws_engine_gemms, mf.engine_gemms + ms.engine_gemms);
+    let gf = snap.per_stream.iter().find(|g| g.stream == "fused").unwrap();
+    assert_eq!(gf.engine_gemms, mf.engine_gemms);
+    // Reserve-at-open (`expected_m`/`expected_batch`): both streams
+    // were pre-sized when their eigensystems were built, so the whole
+    // streamed run — batched kernel blocks, fused rotation scratch,
+    // eigenbasis growth — must leave the growth gauge at exactly zero.
+    // If the worker's reserve call regresses, these counters go
+    // positive (buffers grow across the first batches).
+    assert_eq!(mf.ws_reallocs, 0, "reserve-at-open must pre-size the fused stream");
+    assert_eq!(ms.ws_reallocs, 0, "reserve-at-open must pre-size the sequential stream");
+    pool.shutdown();
 }
 
 /// The zero-realloc steady-state guarantee for the batched path: with

@@ -17,7 +17,7 @@ fn stream_cfg(sigma: f64, seed_points: usize) -> StreamConfig {
         kernel: KernelConfig::Rbf { sigma },
         mean_adjust: true,
         seed_points,
-        drift_every: 0,
+        ..StreamConfig::default()
     }
 }
 
