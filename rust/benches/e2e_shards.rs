@@ -19,6 +19,16 @@
 //! ingest + final sync on the same workload — the reply-less middle
 //! ground (round-trip removed, command-per-point kept).
 //!
+//! Series 5 (`shards/grow_2to4_{before,during,after}/4streams`): the
+//! elastic topology isolated — the batched 4-stream workload on 2
+//! shards (`before`), with a live 2→4 grow at the half-feed barrier
+//! (`during`: ring change + stream migration + redirected handles,
+//! all while the feed continues), and on a pool already grown to 4
+//! (`after`). The during/before gap prices the migration machinery;
+//! after/before shows the steady-state payoff of the wider pool. The
+//! series lands in `BENCH_e2e_shards.json` with the rest, so the CI
+//! gate covers rebalance throughput from its first baseline onward.
+//!
 //! Series 4 (`shards/ingest_4streams_batchB_{fusedrot,seqrot}/shards2`):
 //! the blocked rank-b eigen-update isolated — the same batched workload
 //! with the back-rotation strategy *forced* to fused vs sequential (and
@@ -72,7 +82,12 @@ fn rot_cfg(rot: BatchRotation, n_points: usize, batch: usize) -> StreamConfig {
 }
 
 fn spawn_pool(shards: usize) -> (ShardPool, StreamRouter) {
-    let pool = ShardPool::spawn(PoolConfig { shards, queue: 64, engine: EngineConfig::Native });
+    let pool = ShardPool::spawn(PoolConfig {
+        shards,
+        queue: 64,
+        engine: EngineConfig::Native,
+        ..PoolConfig::default()
+    });
     let router = pool.router();
     (pool, router)
 }
@@ -106,6 +121,62 @@ fn run_batched(
                 }
             });
         }
+    });
+    let snap = router.pool_snapshot().unwrap();
+    pool.shutdown();
+    snap
+}
+
+/// How the grow series exercises the elastic topology.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum GrowMode {
+    /// Plain 2-shard run — the pre-grow baseline.
+    Before,
+    /// 2 shards at open; two `add_shard` calls (ring change + live
+    /// stream migration) fire at the half-feed barrier while producers
+    /// hold, and the second half flows through the original (now
+    /// possibly redirected) handles.
+    During,
+    /// Grown 2→4 before any stream opens — post-grow steady state.
+    After,
+}
+
+/// Batched 4-stream workload around a 2→4 shard grow; returns the pool
+/// snapshot for the accept/migration assertions.
+fn run_grow(
+    datasets: &[Dataset],
+    cfg: &StreamConfig,
+    batch: usize,
+    mode: GrowMode,
+) -> PoolSnapshot {
+    let (pool, router) = spawn_pool(2);
+    if mode == GrowMode::After {
+        router.add_shard().unwrap();
+        router.add_shard().unwrap();
+    }
+    let barrier = std::sync::Barrier::new(datasets.len() + 1);
+    std::thread::scope(|scope| {
+        for (si, ds) in datasets.iter().enumerate() {
+            let r = router.clone();
+            let cfg = cfg.clone();
+            let barrier = &barrier;
+            scope.spawn(move || {
+                let id = format!("stream-{si}");
+                let h = r.open_stream(&id, ds.dim(), cfg).unwrap();
+                let flat = ds.x.as_slice();
+                let half = (ds.n() / 2) * ds.dim();
+                r.ingest_all(&h, &flat[..half], ds.dim(), batch).unwrap();
+                barrier.wait();
+                barrier.wait();
+                r.ingest_all(&h, &flat[half..], ds.dim(), batch).unwrap();
+            });
+        }
+        barrier.wait();
+        if mode == GrowMode::During {
+            router.add_shard().unwrap();
+            router.add_shard().unwrap();
+        }
+        barrier.wait();
     });
     let snap = router.pool_snapshot().unwrap();
     pool.shutdown();
@@ -214,6 +285,36 @@ fn main() {
             gemms[0],
             gemms[1]
         );
+    }
+
+    // Series 5: elastic topology — the same batched workload before,
+    // during and after a live 2→4 shard grow. "during" pays the ring
+    // change, the entry migrations and the redirected handles while
+    // the feed keeps flowing; "after" is the steady-state payoff.
+    for (label, mode) in
+        [("before", GrowMode::Before), ("during", GrowMode::During), ("after", GrowMode::After)]
+    {
+        b.case(&format!("shards/grow_2to4_{label}/4streams"), || {
+            run_grow(&batch_sets, &batch_cfg(), 8, mode).accepted
+        });
+        // Correctness guard: a grow must lose no points, and the
+        // "during" run must actually have exercised migration.
+        let snap = run_grow(&batch_sets, &batch_cfg(), 8, mode);
+        assert_eq!(snap.accepted, expected, "grow mode {label} lost points");
+        match mode {
+            GrowMode::Before => assert_eq!(snap.shards, 2),
+            _ => assert_eq!(snap.shards, 4),
+        }
+        if mode == GrowMode::During {
+            assert!(
+                snap.migrations > 0,
+                "a 2→4 grow with 4 open streams must migrate at least one stream"
+            );
+            println!(
+                "grow during: {} migrations, {} tombstone-forwarded commands",
+                snap.migrations, snap.forwards
+            );
+        }
     }
 
     b.finish();

@@ -111,9 +111,24 @@ fn main() {
 
     let mut regressions = Vec::new();
     let mut compared = 0usize;
-    for (file, new_path) in bench_files(&new_dir) {
-        let Some(old_path) = old_files.get(&file) else {
-            println!("bench_compare: {file}: new bench file (no baseline) — skipped");
+    // Coverage deltas are reported, not silently skipped: a case
+    // present only in the new run has no baseline yet (it joins the
+    // gate on the next comparison), and a case that vanished from the
+    // new run is a bench that was renamed or deleted — either way the
+    // operator should see it in the log, or the gate quietly narrows.
+    let mut new_only = 0usize;
+    let mut vanished = 0usize;
+    let new_files: BTreeMap<String, PathBuf> = bench_files(&new_dir).into_iter().collect();
+    for file in old_files.keys() {
+        if !new_files.contains_key(file) {
+            vanished += 1;
+            println!("bench_compare: {file}: baseline file absent from current run");
+        }
+    }
+    for (file, new_path) in &new_files {
+        let Some(old_path) = old_files.get(file) else {
+            new_only += 1;
+            println!("bench_compare: {file}: new bench file (no baseline yet)");
             continue;
         };
         let old = match parse_bench_json(old_path) {
@@ -123,16 +138,26 @@ fn main() {
                 continue;
             }
         };
-        let new = match parse_bench_json(&new_path) {
+        let new = match parse_bench_json(new_path) {
             Ok(c) => c,
             Err(e) => {
                 println!("bench_compare: {file}: unreadable current run ({e}) — skipped");
                 continue;
             }
         };
+        for case in old.keys() {
+            if !new.contains_key(case) {
+                vanished += 1;
+                println!(
+                    "bench_compare: {file} :: {case}: baseline case absent from current run \
+                     (renamed or deleted bench?)"
+                );
+            }
+        }
         for (case, (new_median, new_min)) in &new {
             let Some((old_median, old_min)) = old.get(case) else {
-                println!("bench_compare: {file} :: {case}: new case — skipped");
+                new_only += 1;
+                println!("bench_compare: {file} :: {case}: new case (no baseline yet)");
                 continue;
             };
             compared += 1;
@@ -165,9 +190,12 @@ fn main() {
     }
 
     println!(
-        "bench_compare: {compared} case(s) compared, {} regression(s) beyond {:.0}%",
+        "bench_compare: {compared} case(s) compared, {} regression(s) beyond {:.0}%, \
+         {} new (ungated this run), {} vanished from baseline",
         regressions.len(),
-        tolerance * 100.0
+        tolerance * 100.0,
+        new_only,
+        vanished
     );
     if !regressions.is_empty() {
         for r in &regressions {

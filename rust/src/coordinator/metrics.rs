@@ -62,7 +62,18 @@ impl LatencyHistogram {
         for (b, &c) in self.counts.iter().enumerate() {
             seen += c;
             if seen >= target {
-                return BASE_NS * (1u64 << (b + 1)) as f64 / 2.0 * 2.0;
+                if b == BUCKETS - 1 {
+                    // The clamped last bucket has no finite upper edge
+                    // — every sample beyond the 2^25-µs ladder lands
+                    // here, so the observed maximum is the only honest
+                    // bound (the old bucket-edge answer under-reported
+                    // any tail beyond ~33 s).
+                    return self.max_ns;
+                }
+                // Upper edge of bucket b, tightened by the observed
+                // max (no sample can exceed it).
+                let edge = BASE_NS * (1u64 << (b + 1)) as f64;
+                return edge.min(self.max_ns);
             }
         }
         self.max_ns
@@ -235,16 +246,42 @@ pub struct StreamGauges {
     pub drift_frobenius: Option<f64>,
 }
 
+/// Per-shard occupancy row of a [`PoolSnapshot`] — how the pool's
+/// streams and memory are spread over the (elastic) topology, and how
+/// much migration traffic each shard has seen.
+#[derive(Clone, Debug, Default)]
+pub struct ShardOccupancy {
+    pub shard: usize,
+    /// Whether the shard is a ring member (eligible to receive
+    /// streams). Retired workers stay alive to serve stale-handle
+    /// forwards and keep their lifetime counters in the rollup, but
+    /// get no new placements.
+    pub active: bool,
+    /// Streams currently owned by this shard.
+    pub streams: usize,
+    /// Hot-path bytes resident across this shard's streams.
+    pub ws_bytes_resident: u64,
+    /// Streams migrated onto this shard since spawn.
+    pub migrated_in: u64,
+    /// Streams migrated off this shard since spawn.
+    pub migrated_out: u64,
+}
+
 /// Pool-level rollup across all shards and streams: aggregate counters,
 /// merged latency distributions, total hot-path residency, summed
-/// engine dispatch counts, plus the per-stream gauges for attribution.
+/// engine dispatch counts, plus the per-stream gauges and per-shard
+/// occupancy for attribution.
 /// The counters and latency stats are *lifetime* values — they include
 /// streams closed since the pool spawned, so they are monotonic under
-/// stream churn; residency (`total_ws_bytes`) and `per_stream` reflect
-/// only the currently open streams.
+/// stream churn (and across migrations: a moved stream's counters
+/// travel with it); residency (`total_ws_bytes`) and `per_stream`
+/// reflect only the currently open streams.
 #[derive(Clone, Debug, Default)]
 pub struct PoolSnapshot {
+    /// Shard workers behind the router, including retired ones.
     pub shards: usize,
+    /// Ring members — shards eligible to own streams (≤ `shards`).
+    pub active_shards: usize,
     /// Open streams across the pool.
     pub streams: usize,
     pub accepted: u64,
@@ -263,17 +300,29 @@ pub struct PoolSnapshot {
     pub project_mean_us: f64,
     /// (native, pjrt) rotation dispatches summed across shard engines.
     pub engine_calls: (u64, u64),
+    /// Completed stream migrations since spawn (monotonic — the
+    /// elastic-topology activity counter).
+    pub migrations: u64,
+    /// Commands re-addressed and forwarded by migration tombstones —
+    /// stale-handle traffic that arrived at a stream's old shard after
+    /// its move and was delivered anyway.
+    pub forwards: u64,
     /// Per-stream gauges, sorted by stream id.
     pub per_stream: Vec<StreamGauges>,
+    /// Per-shard occupancy, one row per worker (retired workers are
+    /// listed with `active == false`).
+    pub per_shard: Vec<ShardOccupancy>,
 }
 
 impl std::fmt::Display for PoolSnapshot {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "pool: shards={} streams={} accepted={} excluded={} errors={} ws_total={}B ingest p50={:.0}µs p99={:.0}µs mean={:.0}µs (n={}) engines(native,pjrt)={:?}",
+            "pool: shards={}/{} streams={} migrations={} accepted={} excluded={} errors={} ws_total={}B ingest p50={:.0}µs p99={:.0}µs mean={:.0}µs (n={}) engines(native,pjrt)={:?}",
+            self.active_shards,
             self.shards,
             self.streams,
+            self.migrations,
             self.accepted,
             self.excluded,
             self.errors,
@@ -344,15 +393,66 @@ mod tests {
     #[test]
     fn pool_snapshot_displays() {
         let snap = PoolSnapshot {
-            shards: 2,
+            shards: 3,
+            active_shards: 2,
             streams: 4,
             accepted: 100,
+            migrations: 5,
             per_stream: vec![StreamGauges { stream: "s0".into(), ..Default::default() }],
             ..Default::default()
         };
         let line = format!("{snap}");
-        assert!(line.contains("shards=2"));
+        assert!(line.contains("shards=2/3"));
         assert!(line.contains("streams=4"));
+        assert!(line.contains("migrations=5"));
+    }
+
+    #[test]
+    fn percentile_bucket_edges() {
+        // ≤ 1 µs lands in bucket 0; the reported edge is tightened by
+        // the observed max, so a lone 500 ns sample reads back exactly.
+        let mut h = LatencyHistogram::default();
+        h.record(Duration::from_nanos(500));
+        assert_eq!(h.percentile_ns(1.0), 500.0);
+        // Exactly-2× boundary: 2 µs falls in bucket 1 (range
+        // (2, 4] µs); min(edge, max) collapses to the sample.
+        let mut h = LatencyHistogram::default();
+        h.record(Duration::from_micros(2));
+        assert_eq!(h.percentile_ns(0.5), 2_000.0);
+        // Mid-bucket sample: still bounded by max, not the 4 µs edge.
+        let mut h = LatencyHistogram::default();
+        h.record(Duration::from_micros(3));
+        assert_eq!(h.percentile_ns(0.5), 3_000.0);
+        // Below-max sample in a lower bucket keeps the bucket edge.
+        let mut h = LatencyHistogram::default();
+        h.record(Duration::from_micros(3));
+        h.record(Duration::from_micros(100));
+        assert_eq!(h.percentile_ns(0.25), 4_000.0);
+    }
+
+    #[test]
+    fn clamped_last_bucket_reports_true_max() {
+        // 60 s lies beyond the 2^25-µs bucket ladder (~33.5 s). The old
+        // code returned the clamped bucket's edge, under-reporting the
+        // tail; the fix returns the observed maximum.
+        let mut h = LatencyHistogram::default();
+        h.record(Duration::from_micros(10));
+        h.record(Duration::from_secs(60));
+        assert_eq!(h.percentile_ns(0.99), 60e9);
+        // A >17 s sample below the old edge also reports exactly.
+        let mut h = LatencyHistogram::default();
+        h.record(Duration::from_secs(20));
+        assert_eq!(h.percentile_ns(0.5), 20e9);
+    }
+
+    #[test]
+    fn percentile_zero_is_first_bucket_bound() {
+        let h = LatencyHistogram::default();
+        assert_eq!(h.percentile_ns(0.0), 0.0);
+        let mut h = LatencyHistogram::default();
+        h.record(Duration::from_micros(100));
+        // p = 0 resolves at the first (empty) bucket: its 2 µs edge.
+        assert_eq!(h.percentile_ns(0.0), 2_000.0);
     }
 
     #[test]

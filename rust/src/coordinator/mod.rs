@@ -1,28 +1,39 @@
-//! Layer-3 streaming coordinator: a sharded multi-stream engine.
-//! [`shard`] owns the machinery — a [`ShardPool`] of worker threads
-//! (each holding slot-indexed per-stream eigenstate, a shared rotation
-//! engine, and per-stream metrics) fronted by a stream-keyed
-//! [`StreamRouter`] over per-shard bounded channels (backpressure is
-//! per shard). [`StreamRouter::open_stream`] resolves a stream id to a
-//! cheap [`StreamHandle`] once; the data-path verbs — rendezvous
-//! `ingest`, fire-and-forget `ingest_async` (+ `sync` error drain), and
-//! batched `ingest_many` — then address by slot with no per-command
-//! string. [`server`] keeps the historical single-stream
-//! [`Coordinator`] API as a thin wrapper over a 1-shard pool. [`drift`]
-//! measures live reconstruction error; [`metrics`] holds the per-stream
-//! histograms/gauges and the pool-level rollup; [`router`] routes each
-//! rank-one back-rotation to the native GEMM or the AOT PJRT engine.
+//! Layer-3 streaming coordinator: a sharded multi-stream engine with an
+//! *elastic* topology. [`shard`] owns the machinery — a [`ShardPool`]
+//! of worker threads (each holding slot-indexed per-stream eigenstate,
+//! a shared rotation engine, and per-stream metrics) fronted by a
+//! stream-keyed [`StreamRouter`] over per-shard bounded channels
+//! (backpressure is per shard). Streams are placed on a consistent-hash
+//! ring ([`ring`], FNV-1a keyed, deterministic across processes);
+//! [`StreamRouter::add_shard`] / [`StreamRouter::remove_shard`] /
+//! [`StreamRouter::rebalance`] change the shard count *live*, migrating
+//! only the streams whose ring arc moved — each stream's eigensystem
+//! ships between workers (it is `Send`) behind a queue-drain barrier,
+//! under a bumped slot generation, with stale handles re-routed through
+//! a redirect table plus worker-side forwarding tombstones.
+//! [`StreamRouter::open_stream`] resolves a stream id to a cheap
+//! [`StreamHandle`] once; the data-path verbs — rendezvous `ingest`,
+//! fire-and-forget `ingest_async` (+ `sync` error drain), and batched
+//! `ingest_many` — then address by slot with no per-command string.
+//! [`server`] keeps the historical single-stream [`Coordinator`] API as
+//! a thin wrapper over a 1-shard pool. [`drift`] measures live
+//! reconstruction error; [`metrics`] holds the per-stream
+//! histograms/gauges and the pool-level rollup (now with per-shard
+//! occupancy and migration counters); [`router`] routes each rank-one
+//! back-rotation to the native GEMM or the AOT PJRT engine.
 
 pub mod drift;
 pub mod metrics;
+pub mod ring;
 pub mod router;
 pub mod server;
 pub mod shard;
 
 pub use drift::{DriftMonitor, DriftPoint};
 pub use metrics::{
-    LatencyHistogram, Metrics, MetricsReport, PoolSnapshot, StreamGauges,
+    LatencyHistogram, Metrics, MetricsReport, PoolSnapshot, ShardOccupancy, StreamGauges,
 };
+pub use ring::HashRing;
 pub use router::{EnginePolicy, RoutedEngine};
 pub use server::{
     BatchReply, Config, Coordinator, EngineConfig, IngestReply, KernelConfig, Snapshot,

@@ -1,0 +1,262 @@
+//! Consistent-hash ring for stream→shard placement.
+//!
+//! PR 2 pinned every stream to `fnv1a(id) % shards` — deterministic,
+//! but any change of the shard count remaps almost every stream, which
+//! makes growing or shrinking the pool equivalent to restarting it.
+//! The ring keeps the determinism (everything is a pure function of
+//! the shard-id set and the vnode count — no per-process seed, so two
+//! processes always agree) while making topology changes *minimally
+//! disruptive*: adding a shard steals arcs only for the new shard
+//! (≈ `1/(k+1)` of the keyspace), removing one re-distributes only the
+//! removed shard's arcs.
+//!
+//! Each shard contributes `vnodes` points, placed at
+//! `mix64(fnv1a(shard ‖ v))` on the `u64` circle; a key lands on the
+//! first point clockwise of `mix64(fnv1a(key))`. FNV-1a alone has weak
+//! high-bit avalanche on short inputs, so every hash is finished with
+//! the splitmix64 finalizer before it touches the circle — with ≥ 128
+//! vnodes per shard the arc shares concentrate well enough that stream
+//! counts stay within ~1.6× of each other (pinned by the property
+//! tests below at a 2× bound).
+
+/// FNV-1a over a byte slice — deterministic within and across processes
+/// (the std hasher is randomly seeded per process, which would break
+/// cross-run attribution in logs and tests, and would make two router
+/// processes disagree about placement).
+pub fn fnv1a_bytes(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in bytes {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// FNV-1a over a stream id.
+pub fn fnv1a(s: &str) -> u64 {
+    fnv1a_bytes(s.as_bytes())
+}
+
+/// splitmix64 finalizer: full-avalanche mix of an FNV hash before it is
+/// used as a ring position.
+fn mix64(mut h: u64) -> u64 {
+    h ^= h >> 30;
+    h = h.wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    h ^= h >> 27;
+    h = h.wrapping_mul(0x94d0_49bb_1331_11eb);
+    h ^= h >> 31;
+    h
+}
+
+/// Ring position of vnode `v` of shard `shard`: FNV-1a over the
+/// 16-byte little-endian encoding of the pair, finalized.
+fn vnode_hash(shard: usize, v: usize) -> u64 {
+    let mut bytes = [0u8; 16];
+    bytes[..8].copy_from_slice(&(shard as u64).to_le_bytes());
+    bytes[8..].copy_from_slice(&(v as u64).to_le_bytes());
+    mix64(fnv1a_bytes(&bytes))
+}
+
+/// Consistent-hash ring over shard ids. Placement depends only on the
+/// *set* of member shards and the vnode count — not on the order they
+/// were added — so any two processes (or a process and its restart)
+/// that agree on the membership agree on every key.
+#[derive(Clone, Debug)]
+pub struct HashRing {
+    vnodes: usize,
+    /// Sorted `(position, shard)` points. Ties (astronomically
+    /// unlikely) break deterministically on the shard id.
+    points: Vec<(u64, usize)>,
+}
+
+impl HashRing {
+    /// Empty ring with `vnodes` points per future shard (≥ 1 enforced).
+    pub fn new(vnodes: usize) -> HashRing {
+        HashRing { vnodes: vnodes.max(1), points: Vec::new() }
+    }
+
+    /// Ring with shards `0..shards` (the spawn-time topology).
+    pub fn with_shards(shards: usize, vnodes: usize) -> HashRing {
+        let mut ring = HashRing::new(vnodes);
+        for s in 0..shards {
+            ring.add_shard(s);
+        }
+        ring
+    }
+
+    /// Vnodes contributed per shard.
+    pub fn vnodes(&self) -> usize {
+        self.vnodes
+    }
+
+    /// Number of member shards.
+    pub fn len(&self) -> usize {
+        self.points.len() / self.vnodes
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    /// Whether `shard` is a member.
+    pub fn contains(&self, shard: usize) -> bool {
+        self.points.iter().any(|&(_, s)| s == shard)
+    }
+
+    /// Member shard ids, ascending.
+    pub fn shards(&self) -> Vec<usize> {
+        let mut out: Vec<usize> = self.points.iter().map(|&(_, s)| s).collect();
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+
+    /// Add a member (no-op if already present). O(points) — topology
+    /// changes are rare and never on the ingest path.
+    pub fn add_shard(&mut self, shard: usize) {
+        if self.contains(shard) {
+            return;
+        }
+        for v in 0..self.vnodes {
+            self.points.push((vnode_hash(shard, v), shard));
+        }
+        self.points.sort_unstable();
+    }
+
+    /// Remove a member (no-op if absent).
+    pub fn remove_shard(&mut self, shard: usize) {
+        self.points.retain(|&(_, s)| s != shard);
+    }
+
+    /// The shard a key is placed on: the first vnode clockwise of the
+    /// key's ring position (wrapping). Panics on an empty ring — the
+    /// pool always keeps ≥ 1 member.
+    pub fn shard_of(&self, key: &str) -> usize {
+        assert!(!self.points.is_empty(), "shard_of on an empty ring");
+        let h = mix64(fnv1a(key));
+        let i = self.points.partition_point(|&(p, _)| p < h);
+        if i == self.points.len() {
+            self.points[0].1
+        } else {
+            self.points[i].1
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashMap;
+
+    const N_KEYS: usize = 4096;
+
+    fn keys() -> Vec<String> {
+        (0..N_KEYS).map(|i| format!("s{i}")).collect()
+    }
+
+    fn counts(ring: &HashRing, keys: &[String]) -> HashMap<usize, usize> {
+        let mut c = HashMap::new();
+        for k in keys {
+            *c.entry(ring.shard_of(k)).or_insert(0) += 1;
+        }
+        c
+    }
+
+    #[test]
+    fn deterministic_across_instances_and_insertion_order() {
+        // Two independently built rings — and one built in a different
+        // membership order — agree on every key. Placement is a pure
+        // function of the member set, which is what makes it stable
+        // across processes (no per-process hasher seed anywhere).
+        let a = HashRing::with_shards(4, 128);
+        let b = HashRing::with_shards(4, 128);
+        let mut c = HashRing::new(128);
+        for s in [3, 1, 0, 2] {
+            c.add_shard(s);
+        }
+        for k in keys() {
+            let want = a.shard_of(&k);
+            assert_eq!(b.shard_of(&k), want, "{k}");
+            assert_eq!(c.shard_of(&k), want, "{k} (insertion order)");
+        }
+    }
+
+    #[test]
+    fn balanced_within_2x_at_128_vnodes() {
+        let keys = keys();
+        for k in [2usize, 3, 4, 6, 8] {
+            let ring = HashRing::with_shards(k, 128);
+            let c = counts(&ring, &keys);
+            assert_eq!(c.len(), k, "every shard must own keys at k={k}");
+            let max = *c.values().max().unwrap() as f64;
+            let min = *c.values().min().unwrap() as f64;
+            assert!(
+                max / min <= 2.0,
+                "k={k}: stream spread {max}/{min} exceeds 2x: {c:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn growing_remaps_at_most_its_share_and_only_to_the_new_shard() {
+        let keys = keys();
+        for k in [1usize, 2, 3, 4, 7] {
+            let before = HashRing::with_shards(k, 128);
+            let mut after = before.clone();
+            after.add_shard(k);
+            let mut moved = 0usize;
+            for key in &keys {
+                let (a, b) = (before.shard_of(key), after.shard_of(key));
+                if a != b {
+                    moved += 1;
+                    // The defining consistent-hashing property: a grow
+                    // only ever moves keys ONTO the new shard.
+                    assert_eq!(b, k, "{key} moved {a}->{b}, not to the new shard");
+                }
+            }
+            // Expected share is 1/(k+1); allow 1.5x slack for arc-share
+            // concentration at 128 vnodes.
+            let bound = 1.5 * N_KEYS as f64 / (k + 1) as f64;
+            assert!(
+                (moved as f64) <= bound,
+                "k={k}->{}: {moved} of {N_KEYS} keys moved (bound {bound:.0})",
+                k + 1
+            );
+        }
+    }
+
+    #[test]
+    fn removal_redistributes_only_the_removed_shards_keys() {
+        let keys = keys();
+        let before = HashRing::with_shards(4, 128);
+        let mut after = before.clone();
+        after.remove_shard(2);
+        assert!(!after.contains(2));
+        assert_eq!(after.len(), 3);
+        for key in &keys {
+            let (a, b) = (before.shard_of(key), after.shard_of(key));
+            assert_ne!(b, 2, "{key} placed on a removed shard");
+            if a != 2 {
+                assert_eq!(a, b, "{key} moved although its shard stayed");
+            }
+        }
+    }
+
+    #[test]
+    fn membership_bookkeeping() {
+        let mut ring = HashRing::new(16);
+        assert!(ring.is_empty());
+        ring.add_shard(5);
+        ring.add_shard(5); // idempotent
+        ring.add_shard(9);
+        assert_eq!(ring.len(), 2);
+        assert_eq!(ring.shards(), vec![5, 9]);
+        assert!(ring.contains(5) && ring.contains(9) && !ring.contains(0));
+        ring.remove_shard(5);
+        assert_eq!(ring.shards(), vec![9]);
+        // With one member every key lands there.
+        for k in keys().iter().take(64) {
+            assert_eq!(ring.shard_of(k), 9);
+        }
+    }
+}

@@ -82,7 +82,12 @@ impl Config {
     /// reproduces the historical single-worker behaviour exactly).
     pub fn split(&self) -> (PoolConfig, StreamConfig) {
         (
-            PoolConfig { shards: 1, queue: self.queue, engine: self.engine.clone() },
+            PoolConfig {
+                shards: 1,
+                queue: self.queue,
+                engine: self.engine.clone(),
+                ..PoolConfig::default()
+            },
             StreamConfig {
                 kernel: self.kernel.clone(),
                 mean_adjust: self.mean_adjust,

@@ -190,16 +190,25 @@ pub fn sqdist(x: &[f64], y: &[f64]) -> f64 {
 /// rows to bound the O(n²) scan.
 pub fn median_heuristic(x: &Mat, max_points: usize) -> f64 {
     let n = x.rows().min(max_points);
+    if n < 2 {
+        return 1.0;
+    }
     let mut dists = Vec::with_capacity(n * (n - 1) / 2);
     for i in 0..n {
         for j in (i + 1)..n {
-            dists.push(sqdist(x.row(i), x.row(j)));
+            let d = sqdist(x.row(i), x.row(j));
+            // One non-finite feature row (a bad CSV record) must not
+            // poison bandwidth selection for the whole stream: drop
+            // NaN/∞ distances instead of letting them reach the sort.
+            if d.is_finite() {
+                dists.push(d);
+            }
         }
     }
     if dists.is_empty() {
         return 1.0;
     }
-    dists.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    dists.sort_by(f64::total_cmp);
     let m = dists.len();
     let med = if m % 2 == 1 { dists[m / 2] } else { 0.5 * (dists[m / 2 - 1] + dists[m / 2]) };
     if med > 0.0 {
@@ -495,6 +504,26 @@ mod tests {
         x2.scale(2.0);
         let s2 = median_heuristic(&x2, 100);
         assert!((s2 / s1 - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn median_heuristic_survives_non_finite_data() {
+        // A single NaN cell used to panic the partial_cmp sort — in a
+        // serving context that takes the whole ingest thread down.
+        let mut x = toy_data();
+        let clean = median_heuristic(&x, 100);
+        x[(3, 1)] = f64::NAN;
+        let s = median_heuristic(&x, 100);
+        assert!(s.is_finite() && s > 0.0, "sigma from NaN-bearing data: {s}");
+        // The finite pairs still dominate, so the estimate stays in the
+        // same ballpark as the clean one.
+        assert!(s / clean < 10.0 && clean / s < 10.0, "{s} vs {clean}");
+        // All-NaN data falls back to the unit bandwidth, no panic.
+        let bad = Mat::from_fn(4, 2, |_, _| f64::NAN);
+        assert_eq!(median_heuristic(&bad, 100), 1.0);
+        // Degenerate row counts (0 or 1 rows) fall back too.
+        assert_eq!(median_heuristic(&Mat::zeros(0, 3), 100), 1.0);
+        assert_eq!(median_heuristic(&Mat::zeros(1, 3), 100), 1.0);
     }
 
     #[test]

@@ -16,10 +16,16 @@
 //!   slot-indexed per-stream state (incremental eigensystem + update
 //!   workspace + eigenbasis + drift monitor + metrics), fronted by a
 //!   stream-keyed [`coordinator::StreamRouter`] over per-shard bounded
-//!   channels. Streams are pinned to shards by an FNV-1a hash of the
-//!   stream id, resolved *once* at `open_stream` into a cheap
+//!   channels. Streams are placed on a consistent-hash ring
+//!   ([`coordinator::HashRing`]: FNV-1a keyed, deterministic across
+//!   processes), resolved *once* at `open_stream` into a cheap
 //!   [`coordinator::StreamHandle`] (shard + integer slot + generation)
-//!   — the ingest path carries no `String` and does no map lookup.
+//!   — the ingest path carries no `String` and does no map lookup. The
+//!   topology is *elastic*: `add_shard`/`remove_shard`/`rebalance`
+//!   migrate live streams between workers (the entry is `Send`) behind
+//!   a queue-drain barrier, under bumped generations, with stale
+//!   handles re-routed through a redirect table — the pool grows and
+//!   shrinks under load without restarting a stream.
 //!   Three ingest shapes share the per-shard queues: rendezvous
 //!   `ingest`, fire-and-forget `ingest_async` (errors deferred to a
 //!   per-stream counter, drained by `sync`), and batched `ingest_many`

@@ -12,6 +12,10 @@
 //!                  `--shards <k>`  `--streams <k>`   (multi-stream pool mode)
 //!                  `--batch <b>`   (ship points in b-sized `ingest_many`
 //!                                  batches instead of per-point rendezvous)
+//!                  `--grow <k>` / `--shrink <k>`  (elastic topology: halfway
+//!                                  through the feed, add k shards / retire k
+//!                                  shards live — streams migrate, handles
+//!                                  keep working, nothing restarts)
 
 use inkpca::coordinator::{
     Config, Coordinator, EngineConfig, EnginePolicy, KernelConfig, ShardPool,
@@ -109,8 +113,11 @@ fn serve(args: &[String]) -> Result<(), String> {
         flag_value(args, "--streams").and_then(|v| v.parse().ok()).unwrap_or(1);
     let batch: usize =
         flag_value(args, "--batch").and_then(|v| v.parse().ok()).unwrap_or(1).max(1);
-    if shards > 1 || streams > 1 {
-        return serve_pool(cfg, ds, shards.max(1), streams.max(1), batch);
+    let grow: usize = flag_value(args, "--grow").and_then(|v| v.parse().ok()).unwrap_or(0);
+    let shrink: usize =
+        flag_value(args, "--shrink").and_then(|v| v.parse().ok()).unwrap_or(0);
+    if shards > 1 || streams > 1 || grow > 0 || shrink > 0 {
+        return serve_pool(cfg, ds, shards.max(1), streams.max(1), batch, grow, shrink);
     }
     println!("serving {} points of {dataset} (dim {dim}, batch {batch})…", ds.n());
     let coord = Coordinator::spawn(cfg, dim);
@@ -143,13 +150,20 @@ fn serve(args: &[String]) -> Result<(), String> {
 /// Multi-stream mode: split the feed round-robin over `streams`
 /// concurrent streams on a `shards`-shard pool, one producer thread per
 /// stream (shipping `batch`-sized `ingest_many` commands when
-/// `batch > 1`), then print the pool rollup and per-stream gauges.
+/// `batch > 1`), then print the pool rollup, per-stream gauges and
+/// per-shard occupancy. With `--grow`/`--shrink`, the producers pause
+/// at a half-feed barrier while the topology changes live (streams
+/// migrate between workers; the producers keep their original handles,
+/// which re-route through the router's redirect table), then finish
+/// the feed on the new topology.
 fn serve_pool(
     cfg: Config,
     ds: Dataset,
     shards: usize,
     streams: usize,
     batch: usize,
+    grow: usize,
+    shrink: usize,
 ) -> Result<(), String> {
     let dim = ds.dim();
     let (mut pool_cfg, mut stream_cfg) = cfg.split();
@@ -174,15 +188,34 @@ fn serve_pool(
     );
     let pool = ShardPool::spawn(pool_cfg);
     let router = pool.router();
+    let reshape = grow + shrink > 0;
+    // Producers + (when resharding) the topology driver rendezvous at
+    // the half-feed point.
+    let barrier = std::sync::Barrier::new(streams + usize::from(reshape));
     std::thread::scope(|scope| {
         for s in 0..streams {
             let r = router.clone();
             let ds = &ds;
             let scfg = stream_cfg.clone();
+            let barrier = &barrier;
             scope.spawn(move || {
                 let id = format!("stream-{s}");
                 let h = r.open_stream(&id, dim, scfg).expect("open stream");
-                if batch > 1 {
+                if reshape {
+                    // Gather this stream's round-robin share, feed the
+                    // first half, hold while the topology changes, then
+                    // finish through the SAME handle — migrated streams
+                    // re-route via the redirect table.
+                    let mine: Vec<f64> = (s..ds.n())
+                        .step_by(streams)
+                        .flat_map(|i| ds.x.row(i).iter().copied())
+                        .collect();
+                    let half = (mine.len() / dim / 2) * dim;
+                    r.ingest_all(&h, &mine[..half], dim, batch).expect("ingest_all");
+                    barrier.wait();
+                    barrier.wait();
+                    r.ingest_all(&h, &mine[half..], dim, batch).expect("ingest_all");
+                } else if batch > 1 {
                     // Gather this stream's round-robin share once, then
                     // ship it through the shared chunking loop.
                     let mine: Vec<f64> = (s..ds.n())
@@ -199,9 +232,37 @@ fn serve_pool(
                 }
             });
         }
+        if reshape {
+            barrier.wait();
+            for _ in 0..grow {
+                let s = router.add_shard().expect("add_shard");
+                println!("grew: shard {s} joined the ring");
+            }
+            for _ in 0..shrink {
+                let victim = *router.active_shard_ids().last().expect("non-empty ring");
+                match router.remove_shard(victim) {
+                    Ok(moved) => println!(
+                        "shrunk: shard {victim} retired ({moved} streams migrated off)"
+                    ),
+                    Err(e) => eprintln!("shrink failed: {e}"),
+                }
+            }
+            barrier.wait();
+        }
     });
     let snap = router.pool_snapshot()?;
     println!("{snap}");
+    for o in &snap.per_shard {
+        println!(
+            "  shard {}{}: {} streams, ws={}B, migrated in/out {}/{}",
+            o.shard,
+            if o.active { "" } else { " (retired)" },
+            o.streams,
+            o.ws_bytes_resident,
+            o.migrated_in,
+            o.migrated_out
+        );
+    }
     for g in &snap.per_stream {
         println!(
             "  {} @ shard {}: m={} ws={}B reallocs/update={:.4} rotation_gemms={} drift={}",

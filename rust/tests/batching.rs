@@ -45,7 +45,12 @@ fn drive_async(router: &StreamRouter, h: &StreamHandle, ds: &Dataset) {
 fn assert_ingest_shapes_equivalent(kernel: KernelConfig, mean_adjust: bool, seed: u64) {
     let mut ds = yeast_like(27, seed);
     ds.standardize();
-    let pool = ShardPool::spawn(PoolConfig { shards: 2, queue: 16, engine: EngineConfig::Native });
+    let pool = ShardPool::spawn(PoolConfig {
+        shards: 2,
+        queue: 16,
+        engine: EngineConfig::Native,
+        ..PoolConfig::default()
+    });
     let router = pool.router();
     let hs = router.open_stream("seq", ds.dim(), cfg(kernel.clone(), mean_adjust)).unwrap();
     let h5 = router.open_stream("b5", ds.dim(), cfg(kernel.clone(), mean_adjust)).unwrap();
@@ -341,7 +346,12 @@ fn fused_batch_with_mid_batch_exclusion_matches() {
 fn router_fused_stream_matches_sequential_stream() {
     let mut ds = yeast_like(30, 938);
     ds.standardize();
-    let pool = ShardPool::spawn(PoolConfig { shards: 2, queue: 16, engine: EngineConfig::Native });
+    let pool = ShardPool::spawn(PoolConfig {
+        shards: 2,
+        queue: 16,
+        engine: EngineConfig::Native,
+        ..PoolConfig::default()
+    });
     let router = pool.router();
     let mk = |rot| StreamConfig {
         kernel: KernelConfig::Rbf { sigma: 1.1 },

@@ -1,0 +1,390 @@
+//! Elastic-topology integration tests: live stream migration between
+//! shard workers (consistent-hash resharding, manual placement), the
+//! slot/generation safety of the migration protocol, survival of
+//! queued fire-and-forget traffic across a move, and the monotonicity
+//! of pool counters while streams change shards.
+//!
+//! The exactness bar mirrors the shard-pool suite: a migrated stream's
+//! eigensystem must match an unmigrated single-shard reference to
+//! ≤ 1e-10 — migration ships state, it never recomputes it.
+
+use inkpca::coordinator::{
+    EngineConfig, KernelConfig, PoolConfig, RoutedEngine, ShardPool, StreamConfig,
+};
+use inkpca::data::synthetic::yeast_like;
+use inkpca::data::Dataset;
+use inkpca::kernels::Rbf;
+use inkpca::kpca::IncrementalKpca;
+
+const SEED_POINTS: usize = 6;
+const SIGMA: f64 = 1.5;
+
+fn stream_cfg() -> StreamConfig {
+    StreamConfig {
+        kernel: KernelConfig::Rbf { sigma: SIGMA },
+        mean_adjust: true,
+        seed_points: SEED_POINTS,
+        ..StreamConfig::default()
+    }
+}
+
+fn pool_cfg(shards: usize) -> PoolConfig {
+    PoolConfig { shards, queue: 64, engine: EngineConfig::Native, ..PoolConfig::default() }
+}
+
+/// Reference: the same stream driven directly, single-threaded, through
+/// the identical engine type the shard workers use.
+fn reference_run(ds: &Dataset) -> IncrementalKpca<'static> {
+    let kernel: std::sync::Arc<dyn inkpca::kernels::Kernel> =
+        std::sync::Arc::new(Rbf { sigma: SIGMA });
+    let seed = ds.x.submatrix(SEED_POINTS, ds.dim());
+    let engine = RoutedEngine::native_only();
+    let mut inc = IncrementalKpca::from_batch_shared(kernel, &seed, true).unwrap();
+    for i in SEED_POINTS..ds.n() {
+        inc.push_with(ds.x.row(i), &engine).unwrap();
+    }
+    inc
+}
+
+fn assert_matches_reference(
+    router: &inkpca::coordinator::StreamRouter,
+    h: &inkpca::coordinator::StreamHandle,
+    ds: &Dataset,
+    reference: &IncrementalKpca<'static>,
+) {
+    let snap = router.snapshot(h).unwrap();
+    assert_eq!(snap.m, ds.n(), "{}", h.id());
+    let top_ref: Vec<f64> = reference.vals.iter().rev().take(10).copied().collect();
+    for (got, want) in snap.top_values.iter().zip(&top_ref) {
+        assert!(
+            (got - want).abs() <= 1e-10,
+            "{}: eigenvalue {got} vs reference {want}",
+            h.id()
+        );
+    }
+    // Projections exercise eigenvectors + centering sums; magnitudes,
+    // since eigenvector sign is arbitrary.
+    let probe = vec![0.25; ds.dim()];
+    let got = router.project(h, probe.clone(), 4).unwrap();
+    let want = reference.project(&probe, 4);
+    for (g, w) in got.iter().zip(&want) {
+        assert!(
+            (g.abs() - w.abs()).abs() <= 1e-10,
+            "{}: projection {g} vs reference {w}",
+            h.id()
+        );
+    }
+    let drift = router.measure_drift(h).unwrap();
+    assert!(drift.norms.frobenius < 1e-7, "{}: drift {:?}", h.id(), drift.norms);
+}
+
+#[test]
+fn migrated_stream_matches_unmigrated_reference() {
+    let mut ds = yeast_like(32, 901);
+    ds.standardize();
+    let pool = ShardPool::spawn(pool_cfg(2));
+    let router = pool.router();
+    let h = router.open_stream("mig", ds.dim(), stream_cfg()).unwrap();
+    let home = h.shard();
+    let away = (home + 1) % 2;
+
+    // First half on the home shard …
+    for i in 0..ds.n() / 2 {
+        router.ingest(&h, ds.x.row(i).to_vec()).unwrap();
+    }
+    // … migrate mid-stream …
+    router.migrate_stream(&h, away).unwrap();
+    // … second half through the SAME (now stale) handle — every verb
+    // must re-route via the redirect table.
+    for i in ds.n() / 2..ds.n() {
+        router.ingest(&h, ds.x.row(i).to_vec()).unwrap();
+    }
+
+    let reference = reference_run(&ds);
+    assert_matches_reference(&router, &h, &ds, &reference);
+
+    // The pool attributes the stream to its new shard and counted the
+    // move.
+    let snap = router.pool_snapshot().unwrap();
+    assert_eq!(snap.migrations, 1);
+    let g = snap.per_stream.iter().find(|g| g.stream == "mig").unwrap();
+    assert_eq!(g.shard, away);
+    assert_eq!(snap.per_shard[away].migrated_in, 1);
+    assert_eq!(snap.per_shard[home].migrated_out, 1);
+    pool.shutdown();
+}
+
+#[test]
+fn migration_mid_seeding_carries_the_seed_buffer() {
+    let mut ds = yeast_like(20, 902);
+    ds.standardize();
+    let pool = ShardPool::spawn(pool_cfg(2));
+    let router = pool.router();
+    let h = router.open_stream("migseed", ds.dim(), stream_cfg()).unwrap();
+    // Two of six seed points, then move the half-seeded entry.
+    for i in 0..2 {
+        router.ingest(&h, ds.x.row(i).to_vec()).unwrap();
+    }
+    router.migrate_stream(&h, (h.shard() + 1) % 2).unwrap();
+    for i in 2..ds.n() {
+        router.ingest(&h, ds.x.row(i).to_vec()).unwrap();
+    }
+    let reference = reference_run(&ds);
+    assert_matches_reference(&router, &h, &ds, &reference);
+    pool.shutdown();
+}
+
+#[test]
+fn queued_async_ingest_survives_migration() {
+    let mut ds = yeast_like(28, 903);
+    ds.standardize();
+    let pool = ShardPool::spawn(pool_cfg(2));
+    let router = pool.router();
+    let h = router.open_stream("amove", ds.dim(), stream_cfg()).unwrap();
+    // Seed synchronously, then queue a burst of fire-and-forget points
+    // and migrate while they sit in the source shard's queue: the
+    // Migrate command serializes behind them, so the queue itself is
+    // the drain barrier — none may be lost.
+    for i in 0..SEED_POINTS {
+        router.ingest(&h, ds.x.row(i).to_vec()).unwrap();
+    }
+    for i in SEED_POINTS..20 {
+        router.ingest_async(&h, ds.x.row(i).to_vec()).unwrap();
+    }
+    router.migrate_stream(&h, (h.shard() + 1) % 2).unwrap();
+    // More async traffic through the stale handle after the move.
+    for i in 20..ds.n() {
+        router.ingest_async(&h, ds.x.row(i).to_vec()).unwrap();
+    }
+    // The sync barrier resolves through the redirect table too.
+    assert_eq!(router.sync(&h).unwrap(), 0, "no async ingest may be lost or fail");
+
+    let reference = reference_run(&ds);
+    assert_matches_reference(&router, &h, &ds, &reference);
+
+    let m = router.metrics(&h).unwrap();
+    assert_eq!(m.accepted, (ds.n() - SEED_POINTS) as u64);
+    assert_eq!(m.errors, 0);
+    let snap = router.pool_snapshot().unwrap();
+    assert_eq!(snap.errors, 0, "a migrated stream's traffic must not orphan");
+    pool.shutdown();
+}
+
+#[test]
+fn generation_safety_outlives_migration_and_close() {
+    let mut ds = yeast_like(16, 904);
+    ds.standardize();
+    let pool = ShardPool::spawn(pool_cfg(2));
+    let router = pool.router();
+    let h = router.open_stream("gsafe", ds.dim(), stream_cfg()).unwrap();
+    for i in 0..ds.n() {
+        router.ingest(&h, ds.x.row(i).to_vec()).unwrap();
+    }
+    router.migrate_stream(&h, (h.shard() + 1) % 2).unwrap();
+    // The pre-migration handle closes the stream at its new home.
+    let stats = router.close_stream(&h).unwrap();
+    assert_eq!(stats.accepted, ds.n() as u64);
+
+    // Re-open the same id: a FRESH stream. The old handle's redirect
+    // still points at the (now closed) migrated slot, whose generation
+    // is retired — it must never alias the successor.
+    let h2 = router.open_stream("gsafe", ds.dim(), stream_cfg()).unwrap();
+    assert!(router.ingest(&h, ds.x.row(0).to_vec()).is_err());
+    assert!(router.snapshot(&h).is_err());
+    assert!(router.close_stream(&h).is_err());
+    let reply = router.ingest(&h2, ds.x.row(0).to_vec()).unwrap();
+    assert_eq!(reply.m, 1, "successor stream starts fresh");
+
+    // Invalid migration targets fail cleanly.
+    assert!(router.migrate_stream(&h2, 99).is_err());
+    pool.shutdown();
+}
+
+#[test]
+fn stream_ids_stay_unique_across_migration() {
+    let mut ds = yeast_like(16, 907);
+    ds.standardize();
+    let pool = ShardPool::spawn(pool_cfg(2));
+    let router = pool.router();
+    let h = router.open_stream("uniq", ds.dim(), stream_cfg()).unwrap();
+    for i in 0..ds.n() {
+        router.ingest(&h, ds.x.row(i).to_vec()).unwrap();
+    }
+    // Move the stream off its ring shard: its name no longer lives in
+    // the worker a duplicate open would hash to, so uniqueness must be
+    // enforced at the router, not per worker.
+    router.migrate_stream(&h, (h.shard() + 1) % 2).unwrap();
+    assert!(router.open_stream("uniq", ds.dim(), stream_cfg()).is_err());
+    // The rebalance sweep converges (one stream back home) without
+    // tripping over itself, and the id frees only on a real close.
+    assert_eq!(router.rebalance().unwrap(), 1);
+    assert!(router.open_stream("uniq", ds.dim(), stream_cfg()).is_err());
+    let stats = router.close_stream(&h).unwrap();
+    assert_eq!(stats.accepted, ds.n() as u64);
+    let h2 = router.open_stream("uniq", ds.dim(), stream_cfg()).unwrap();
+    assert_eq!(router.snapshot(&h2).unwrap().m, 0);
+    pool.shutdown();
+}
+
+#[test]
+fn pool_counters_monotonic_across_moves() {
+    let mut ds = yeast_like(24, 905);
+    ds.standardize();
+    let pool = ShardPool::spawn(pool_cfg(2));
+    let router = pool.router();
+    let handles: Vec<_> = ["m0", "m1", "m2"]
+        .iter()
+        .map(|id| {
+            let h = router.open_stream(id, ds.dim(), stream_cfg()).unwrap();
+            for i in 0..ds.n() {
+                router.ingest(&h, ds.x.row(i).to_vec()).unwrap();
+            }
+            h
+        })
+        .collect();
+    let before = router.pool_snapshot().unwrap();
+    assert_eq!(before.accepted, 3 * (ds.n() - SEED_POINTS) as u64);
+    assert_eq!(before.ingest_count, 3 * ds.n() as u64);
+
+    // A move must change NO pool counter: the stream's counters and
+    // latency histograms travel inside the entry.
+    router.migrate_stream(&handles[1], (handles[1].shard() + 1) % 2).unwrap();
+    let during = router.pool_snapshot().unwrap();
+    assert_eq!(during.accepted, before.accepted);
+    assert_eq!(during.excluded, before.excluded);
+    assert_eq!(during.errors, before.errors);
+    assert_eq!(during.ingest_count, before.ingest_count);
+    assert_eq!(during.ws_engine_gemms, before.ws_engine_gemms);
+    assert_eq!(during.streams, 3);
+    assert_eq!(during.migrations, 1);
+
+    // More traffic through every handle (one of them stale) only grows
+    // the counters.
+    for h in &handles {
+        for i in 0..4 {
+            router.ingest(h, ds.x.row(i).to_vec()).unwrap();
+        }
+    }
+    let after = router.pool_snapshot().unwrap();
+    assert_eq!(after.accepted + after.excluded, during.accepted + during.excluded + 12);
+    assert_eq!(after.ingest_count, during.ingest_count + 12);
+    assert!(after.ws_engine_gemms >= during.ws_engine_gemms);
+    // Occupancy stays consistent with the per-stream attribution.
+    let by_shard = |snap: &inkpca::coordinator::PoolSnapshot| {
+        snap.per_shard.iter().map(|o| o.streams).sum::<usize>()
+    };
+    assert_eq!(by_shard(&after), 3);
+    for g in &after.per_stream {
+        assert!(after.per_shard[g.shard].active);
+    }
+    pool.shutdown();
+}
+
+#[test]
+fn grow_and_shrink_rebalance_to_ring_placement() {
+    let mut ds = yeast_like(20, 906);
+    ds.standardize();
+    let pool = ShardPool::spawn(pool_cfg(2));
+    let router = pool.router();
+    let handles: Vec<_> = (0..6)
+        .map(|i| {
+            let id = format!("p{i}");
+            let h = router.open_stream(&id, ds.dim(), stream_cfg()).unwrap();
+            for r in 0..ds.n() {
+                router.ingest(&h, ds.x.row(r).to_vec()).unwrap();
+            }
+            h
+        })
+        .collect();
+    let before = router.pool_snapshot().unwrap();
+    let reference = reference_run(&ds);
+
+    // Grow 2 → 3: a new worker spawns, joins the ring, and exactly the
+    // streams whose arc it took over migrate onto it.
+    let new_shard = router.add_shard().unwrap();
+    assert_eq!(new_shard, 2);
+    assert_eq!(router.active_shards(), 3);
+    assert_eq!(router.shards(), 3);
+    let grown = router.pool_snapshot().unwrap();
+    assert_eq!(grown.streams, 6);
+    assert_eq!(grown.accepted, before.accepted, "a grow loses no counters");
+    assert_eq!(grown.ingest_count, before.ingest_count);
+    for g in &grown.per_stream {
+        assert_eq!(
+            g.shard,
+            router.shard_of(&g.stream),
+            "{} must sit on its ring shard after rebalance",
+            g.stream
+        );
+    }
+    // A rebalance right after a grow is a no-op.
+    assert_eq!(router.rebalance().unwrap(), 0);
+
+    // Every stream still serves, exactly.
+    for h in &handles {
+        assert_matches_reference(&router, h, &ds, &reference);
+    }
+
+    // Shrink back: the retired worker's streams move off; the worker
+    // itself stays parked (handles must remain serviceable).
+    let was_on_new = grown.per_stream.iter().filter(|g| g.shard == new_shard).count();
+    assert!(was_on_new > 0, "the grow must have populated the new shard");
+    let moved_off = router.remove_shard(new_shard).unwrap();
+    assert_eq!(moved_off, was_on_new, "a shrink moves exactly the retired shard's streams");
+    let shrunk = router.pool_snapshot().unwrap();
+    assert_eq!(router.active_shards(), 2);
+    assert_eq!(router.shards(), 3, "retired worker stays behind the router");
+    assert_eq!(shrunk.streams, 6);
+    assert_eq!(shrunk.accepted, before.accepted, "a shrink loses no counters");
+    assert!(!shrunk.per_shard[new_shard].active);
+    assert_eq!(shrunk.per_shard[new_shard].streams, 0);
+    for g in &shrunk.per_stream {
+        assert_eq!(g.shard, router.shard_of(&g.stream));
+        assert_ne!(g.shard, new_shard);
+    }
+    for h in &handles {
+        assert_matches_reference(&router, h, &ds, &reference);
+    }
+
+    // Growing again revives the parked worker instead of spawning.
+    let revived = router.add_shard().unwrap();
+    assert_eq!(revived, new_shard);
+    assert_eq!(router.shards(), 3, "no extra worker thread");
+    assert_eq!(router.active_shards(), 3);
+    // Placement is a pure function of the member set, so the revived
+    // topology reproduces the pre-shrink placement exactly.
+    for (g_new, g_old) in router
+        .pool_snapshot()
+        .unwrap()
+        .per_stream
+        .iter()
+        .zip(&grown.per_stream)
+    {
+        assert_eq!(g_new.stream, g_old.stream);
+        assert_eq!(g_new.shard, g_old.shard);
+    }
+
+    // The last-shard guard: shrinking to zero is refused.
+    router.remove_shard(revived).unwrap();
+    router.remove_shard(router.active_shard_ids()[1]).unwrap();
+    assert_eq!(router.active_shards(), 1);
+    let last = router.active_shard_ids()[0];
+    assert!(router.remove_shard(last).is_err());
+    assert!(router.remove_shard(revived).is_err(), "already retired");
+    pool.shutdown();
+}
+
+#[test]
+fn coordinator_ingest_all_rejects_malformed_feed() {
+    // The single-stream wrapper surfaces the router-side Err (it used
+    // to assert! and take the caller thread down).
+    let coord = inkpca::coordinator::Coordinator::spawn(
+        inkpca::coordinator::Config { seed_points: 4, ..Default::default() },
+        3,
+    );
+    assert!(coord.ingest_all(&[0.0; 7], 3, 2).is_err());
+    assert!(coord.ingest_all(&[0.0; 6], 0, 2).is_err());
+    let reply = coord.ingest_all(&[0.1; 6], 3, 2).unwrap();
+    assert_eq!(reply.seeded, 2);
+    coord.shutdown();
+}

@@ -22,7 +22,7 @@ fn stream_cfg(sigma: f64, seed_points: usize) -> StreamConfig {
 }
 
 fn pool_cfg(shards: usize) -> PoolConfig {
-    PoolConfig { shards, queue: 8, engine: EngineConfig::Native }
+    PoolConfig { shards, queue: 8, engine: EngineConfig::Native, ..PoolConfig::default() }
 }
 
 /// Reference: the same stream driven directly, single-threaded, through
