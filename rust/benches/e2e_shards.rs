@@ -38,11 +38,27 @@
 //! dispatches strictly fewer back-rotation GEMMs than the sequential
 //! one — the amortization the blocked update exists for.
 //!
+//! Series 6 (`shards/read95_{snapshot,worker}_rR/shards2`): the
+//! lock-free read path under a read-heavy serving mix — ~95:5
+//! read:write, one writer batching points in throughout, R ∈ {1,2,4,8}
+//! reader threads splitting a fixed projection budget. The `snapshot`
+//! side reads through the epoch-published [`ProjectionSnapshot`] with a
+//! per-reader `ProjectScratch` (no shard command, no lock in steady
+//! state); the `worker` side issues the rendezvous `project` RPC and
+//! queues behind the writes. The run also asserts the acceptance
+//! signature outside the timed region: the snapshot series finishes
+//! with `worker_reads == 0` while `snapshot_reads` carries the whole
+//! budget, and multi-reader snapshot medians must not degrade against
+//! the single-reader baseline (the scaling itself lands in the JSON
+//! trajectory — core counts vary too much across CI hosts to hard-gate
+//! a speedup).
+//!
 //! Emits `BENCH_e2e_shards.json` for the perf trajectory and the CI
 //! regression gate.
 
 use inkpca::coordinator::{
-    EngineConfig, KernelConfig, PoolConfig, PoolSnapshot, ShardPool, StreamConfig, StreamRouter,
+    EngineConfig, KernelConfig, PoolConfig, PoolSnapshot, ProjectScratch, ShardPool, StreamConfig,
+    StreamRouter,
 };
 use inkpca::data::{load, Dataset};
 use inkpca::kpca::BatchRotation;
@@ -206,6 +222,69 @@ fn run_async(datasets: &[Dataset], cfg: &StreamConfig, shards: usize) -> u64 {
     snap.accepted
 }
 
+/// Series-6 workload: a read-heavy (~95:5) serving mix on one stream.
+/// A writer keeps `ingest_many` batches flowing while `readers` threads
+/// split a fixed budget of single-point projections — through the
+/// epoch-published snapshot (per-reader [`ProjectScratch`], no shard
+/// command) or through the worker's rendezvous `project` RPC (queued
+/// behind the writes). Returns the pool snapshot so the caller can
+/// assert where the reads were served.
+fn run_read_heavy(
+    ds: &Dataset,
+    readers: usize,
+    reads: u64,
+    write_points: usize,
+    snapshot_path: bool,
+) -> PoolSnapshot {
+    let (pool, router) = spawn_pool(2);
+    let dim = ds.dim();
+    let h = router.open_stream("serve", dim, batch_cfg()).unwrap();
+    // Warm corpus + first publish before the mix starts.
+    router.ingest_all(&h, ds.x.as_slice(), dim, 8).unwrap();
+    router.sync(&h).unwrap();
+    std::thread::scope(|scope| {
+        // The 5% side: synthetic points in batches of 8, concurrent
+        // with every read below.
+        {
+            let r = router.clone();
+            let h = h.clone();
+            scope.spawn(move || {
+                let mut batch = Vec::with_capacity(8 * dim);
+                for p in 0..write_points {
+                    for d in 0..dim {
+                        batch.push(((p * dim + d) as f64 * 0.137).sin());
+                    }
+                    if batch.len() == 8 * dim || p + 1 == write_points {
+                        let full = std::mem::replace(&mut batch, Vec::with_capacity(8 * dim));
+                        r.ingest_many(&h, full).unwrap();
+                    }
+                }
+            });
+        }
+        // The 95% side: `readers` threads splitting the `reads` budget.
+        for t in 0..readers as u64 {
+            let r = router.clone();
+            let h = h.clone();
+            let probe = ds.x.row(t as usize % ds.n());
+            let share = reads / readers as u64 + u64::from(reads % readers as u64 > t);
+            scope.spawn(move || {
+                let mut scratch = ProjectScratch::new();
+                let mut out = Vec::new();
+                for _ in 0..share {
+                    if snapshot_path {
+                        r.project_many_into(&h, probe, 3, &mut scratch, &mut out).unwrap();
+                    } else {
+                        r.project(&h, probe.to_vec(), 3).unwrap();
+                    }
+                }
+            });
+        }
+    });
+    let snap = router.pool_snapshot().unwrap();
+    pool.shutdown();
+    snap
+}
+
 fn main() {
     let mut b = Bench::new();
     let fast = std::env::var("INKPCA_BENCH_FAST").is_ok();
@@ -316,6 +395,53 @@ fn main() {
             );
         }
     }
+
+    // Series 6: the lock-free read path under a read-heavy (95:5)
+    // serving mix, reader threads 1/2/4/8, snapshot vs worker path.
+    let serve_ds = &batch_sets[0];
+    let (s6_reads, s6_writes) = if fast { (950u64, 50usize) } else { (3800u64, 200usize) };
+    let mut snapshot_medians: Vec<(usize, f64)> = Vec::new();
+    for readers in [1usize, 2, 4, 8] {
+        for (label, snapshot_path) in [("snapshot", true), ("worker", false)] {
+            let stats = b.case(&format!("shards/read95_{label}_r{readers}/shards2"), || {
+                let snap = run_read_heavy(serve_ds, readers, s6_reads, s6_writes, snapshot_path);
+                snap.snapshot_reads + snap.worker_reads
+            });
+            if snapshot_path {
+                snapshot_medians.push((readers, stats.median_ns));
+            }
+        }
+    }
+    // Attribution guard (outside the timed region): the snapshot series
+    // must never touch a worker queue — flat `worker_reads` next to a
+    // full `snapshot_reads` budget is the read path's acceptance
+    // signature — and the worker series is its exact mirror.
+    let snap = run_read_heavy(serve_ds, 4, s6_reads, s6_writes, true);
+    assert_eq!(snap.worker_reads, 0, "snapshot reads leaked onto the worker queue");
+    assert_eq!(snap.snapshot_reads, s6_reads);
+    let snap = run_read_heavy(serve_ds, 4, s6_reads, s6_writes, false);
+    assert_eq!(snap.worker_reads, s6_reads);
+    assert_eq!(snap.snapshot_reads, 0);
+    // Reader scaling: the medians land in the JSON trajectory; here we
+    // only pin the lock-free claim — adding readers must not *degrade*
+    // the fixed read budget's wall time (a contended path would).
+    let solo = snapshot_medians[0].1;
+    let (best_r, best) = snapshot_medians[1..]
+        .iter()
+        .copied()
+        .fold((1usize, f64::INFINITY), |a, b| if b.1 < a.1 { b } else { a });
+    println!(
+        "read95 snapshot path: 1 reader median {:.3} ms, best multi-reader (r={}) {:.3} ms ({:.2}x)",
+        solo / 1e6,
+        best_r,
+        best / 1e6,
+        solo / best
+    );
+    assert!(
+        best <= solo * 1.25,
+        "snapshot read path degraded under reader concurrency: 1 reader {solo} ns, \
+         best multi-reader {best} ns"
+    );
 
     b.finish();
     if let Err(e) = b.write_json("BENCH_e2e_shards.json") {

@@ -129,6 +129,12 @@ pub struct Metrics {
     /// blocked-batch flush) — the amortization gauge of the fused
     /// rank-b path.
     pub engine_gemms: u64,
+    /// Projections served through the worker queue (`Project` RPCs).
+    /// The lock-free counterpart — snapshot-path reads — lives in the
+    /// stream's `SnapshotCell` and is reported next to this one; a
+    /// healthy read-heavy deployment shows this flat while
+    /// `snapshot_reads` grows.
+    pub worker_reads: u64,
     started: Instant,
 }
 
@@ -145,6 +151,7 @@ impl Default for Metrics {
             ws_bytes_resident: 0,
             ws_reallocs: 0,
             engine_gemms: 0,
+            worker_reads: 0,
             started: Instant::now(),
         }
     }
@@ -175,6 +182,12 @@ impl Metrics {
             ws_reallocs: self.ws_reallocs,
             reallocs_per_update: self.reallocs_per_update(),
             engine_gemms: self.engine_gemms,
+            worker_reads: self.worker_reads,
+            // Snapshot-cell fields are filled in by the stream entry
+            // (the cell lives outside `Metrics`).
+            snapshot_epoch: 0,
+            snapshot_reads: 0,
+            points_since_publish: 0,
         }
     }
 }
@@ -203,6 +216,16 @@ pub struct MetricsReport {
     /// Engine back-rotation GEMMs dispatched by the stream (fused
     /// batches dispatch one per flush instead of one per update).
     pub engine_gemms: u64,
+    /// Projections served through the worker queue.
+    pub worker_reads: u64,
+    /// Publication epoch of the stream's latest projection snapshot
+    /// (0 = nothing published — still seeding).
+    pub snapshot_epoch: u64,
+    /// Projections served lock-free from published snapshots.
+    pub snapshot_reads: u64,
+    /// Accepted points not yet captured by a published snapshot — the
+    /// read path's staleness bound right now.
+    pub points_since_publish: u64,
 }
 
 impl std::fmt::Display for MetricsReport {
@@ -244,6 +267,15 @@ pub struct StreamGauges {
     pub engine_gemms: u64,
     /// Frobenius norm of the latest drift measurement, if any.
     pub drift_frobenius: Option<f64>,
+    /// Publication epoch of the latest projection snapshot (0 = none
+    /// yet; monotonic per stream, survives migration).
+    pub snapshot_epoch: u64,
+    /// Projections served lock-free from published snapshots.
+    pub snapshot_reads: u64,
+    /// Projections served through the worker queue.
+    pub worker_reads: u64,
+    /// Accepted points not yet captured by a published snapshot.
+    pub points_since_publish: u64,
 }
 
 /// Per-shard occupancy row of a [`PoolSnapshot`] — how the pool's
@@ -298,6 +330,13 @@ pub struct PoolSnapshot {
     pub ingest_mean_us: f64,
     pub ingest_count: u64,
     pub project_mean_us: f64,
+    /// Projections served lock-free from published snapshots, summed
+    /// over every stream (lifetime — includes closed streams).
+    pub snapshot_reads: u64,
+    /// Projections served through the worker queues (lifetime). Flat
+    /// `worker_reads` next to a growing `snapshot_reads` is the
+    /// acceptance signature of the lock-free read path.
+    pub worker_reads: u64,
     /// (native, pjrt) rotation dispatches summed across shard engines.
     pub engine_calls: (u64, u64),
     /// Completed stream migrations since spawn (monotonic — the
@@ -318,7 +357,7 @@ impl std::fmt::Display for PoolSnapshot {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "pool: shards={}/{} streams={} migrations={} accepted={} excluded={} errors={} ws_total={}B ingest p50={:.0}µs p99={:.0}µs mean={:.0}µs (n={}) engines(native,pjrt)={:?}",
+            "pool: shards={}/{} streams={} migrations={} accepted={} excluded={} errors={} ws_total={}B ingest p50={:.0}µs p99={:.0}µs mean={:.0}µs (n={}) reads(snapshot,worker)=({},{}) engines(native,pjrt)={:?}",
             self.active_shards,
             self.shards,
             self.streams,
@@ -331,6 +370,8 @@ impl std::fmt::Display for PoolSnapshot {
             self.ingest_p99_us,
             self.ingest_mean_us,
             self.ingest_count,
+            self.snapshot_reads,
+            self.worker_reads,
             self.engine_calls
         )
     }

@@ -21,6 +21,11 @@
 //! histograms/gauges and the pool-level rollup (now with per-shard
 //! occupancy and migration counters); [`router`] routes each rank-one
 //! back-rotation to the native GEMM or the AOT PJRT engine.
+//! [`snapshot`] is the lock-free read path: the worker publishes an
+//! immutable [`ProjectionSnapshot`] per stream through an epoch-swapped
+//! [`SnapshotCell`], and [`StreamRouter::project_snapshot`] /
+//! [`StreamRouter::project_many`] serve projections from it without
+//! enqueueing a single shard command.
 
 pub mod drift;
 pub mod metrics;
@@ -28,6 +33,7 @@ pub mod ring;
 pub mod router;
 pub mod server;
 pub mod shard;
+pub mod snapshot;
 
 pub use drift::{DriftMonitor, DriftPoint};
 pub use metrics::{
@@ -39,3 +45,4 @@ pub use server::{
     BatchReply, Config, Coordinator, EngineConfig, IngestReply, KernelConfig, Snapshot,
 };
 pub use shard::{PoolConfig, ShardPool, StreamConfig, StreamHandle, StreamRouter};
+pub use snapshot::{ProjectScratch, ProjectionSnapshot, SnapshotCell};

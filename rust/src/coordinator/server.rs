@@ -62,6 +62,11 @@ pub struct Config {
     pub seed_points: usize,
     /// Drift measurement cadence (accepted points; 0 = off).
     pub drift_every: usize,
+    /// Snapshot publication cadence on the sequential ingest path
+    /// (accepted points; 0 disables the cadence — seed completion,
+    /// batch flushes and `sync` still publish). See
+    /// [`StreamConfig::publish_every`].
+    pub publish_every: usize,
 }
 
 impl Default for Config {
@@ -73,6 +78,7 @@ impl Default for Config {
             queue: 64,
             seed_points: 20,
             drift_every: 0,
+            publish_every: 64,
         }
     }
 }
@@ -93,6 +99,7 @@ impl Config {
                 mean_adjust: self.mean_adjust,
                 seed_points: self.seed_points,
                 drift_every: self.drift_every,
+                publish_every: self.publish_every,
                 ..StreamConfig::default()
             },
         )
@@ -188,9 +195,24 @@ impl Coordinator {
         self.router.sync(&self.handle)
     }
 
-    /// Project a point onto the current top-`r` components.
+    /// Project a point onto the current top-`r` components (worker
+    /// path: fully fresh, serialized behind ingests).
     pub fn project(&self, x: Vec<f64>, r: usize) -> Result<Vec<f64>, String> {
         self.router.project(&self.handle, x, r)
+    }
+
+    /// Project through the published snapshot — lock-free, never
+    /// enqueues a command. See [`StreamRouter::project_snapshot`] for
+    /// the freshness contract (`sync` first for read-your-writes).
+    pub fn project_snapshot(&self, x: &[f64], r: usize) -> Result<Vec<f64>, String> {
+        self.router.project_snapshot(&self.handle, x, r)
+    }
+
+    /// Batched lock-free projection (`ys` is `b × dim` row-major,
+    /// result `b × r_eff` row-major) — see
+    /// [`StreamRouter::project_many`].
+    pub fn project_many(&self, ys: &[f64], r: usize) -> Result<Vec<f64>, String> {
+        self.router.project_many(&self.handle, ys, r)
     }
 
     /// Force an immediate drift measurement.
@@ -276,6 +298,15 @@ mod tests {
         }
         let scores = coord.project(vec![0.3; dim], 3).unwrap();
         assert_eq!(scores.len(), 3);
+        // The lock-free path agrees with the worker path once synced.
+        coord.sync().unwrap();
+        let snap_scores = coord.project_snapshot(&vec![0.3; dim], 3).unwrap();
+        assert_eq!(snap_scores.len(), 3);
+        for (a, b) in scores.iter().zip(&snap_scores) {
+            assert!((a - b).abs() < 1e-12, "worker {a} vs snapshot {b}");
+        }
+        let many = coord.project_many(&vec![0.3; dim], 3).unwrap();
+        assert_eq!(many, snap_scores);
         coord.shutdown();
     }
 

@@ -92,9 +92,25 @@
 //! counts added, migration/forward counts folded — and returns one
 //! [`PoolSnapshot`] with the per-stream [`StreamGauges`] and per-shard
 //! [`ShardOccupancy`] attached for attribution.
+//!
+//! **Lock-free reads.** Projection is the served quantity at production
+//! read/write ratios, and routing every read through the worker FIFO
+//! serializes reads against ingests. Instead, the worker publishes an
+//! immutable [`super::snapshot::ProjectionSnapshot`] per stream into
+//! the [`super::snapshot::SnapshotCell`] embedded in every
+//! [`StreamHandle`] (on seed completion, every `ingest_many` flush,
+//! every [`StreamConfig::publish_every`] accepted points, and every
+//! `sync`); [`StreamRouter::project_snapshot`] /
+//! [`StreamRouter::project_many`] read it without enqueueing anything —
+//! see the snapshot module for the arc-swap and the freshness contract.
+//! The topology itself is published the same way: an epoch-swapped
+//! immutable `Arc<Topology>` (writers rebuild + swap under the reshard
+//! lock; readers cache the `Arc` per thread, keyed by epoch), so the
+//! data-path verbs stop paying a `RwLock` read per command.
 
+use std::cell::RefCell;
 use std::collections::{HashMap, HashSet, VecDeque};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex, RwLock};
 use std::thread::JoinHandle;
@@ -111,6 +127,7 @@ use super::metrics::{
 use super::ring::HashRing;
 use super::router::RoutedEngine;
 use super::server::{BatchReply, EngineConfig, IngestReply, KernelConfig, Snapshot};
+use super::snapshot::{ProjectScratch, ProjectionSnapshot, SnapshotCell};
 
 /// Per-stream configuration (what used to be the per-coordinator
 /// `Config`, minus the pool-level engine/queue knobs).
@@ -135,6 +152,16 @@ pub struct StreamConfig {
     /// batches). Forcing [`BatchRotation::Sequential`] is how the
     /// fused-vs-sequential bench series isolates the amortization.
     pub batch_rotation: Option<BatchRotation>,
+    /// Accepted points between automatic snapshot publications on the
+    /// sequential ingest path (0 disables the cadence). Seed
+    /// completion, every `ingest_many` flush and every `sync` publish
+    /// regardless, so the snapshot read path can never lag a batched
+    /// or synced stream by more than one command.
+    pub publish_every: usize,
+    /// Top components captured per published snapshot (0 = the full
+    /// basis). Serving deployments that only ever read a handful of
+    /// components can cap the per-publish copy at `O(m·r)`.
+    pub snapshot_r: usize,
 }
 
 impl Default for StreamConfig {
@@ -147,6 +174,8 @@ impl Default for StreamConfig {
             expected_m: 0,
             expected_batch: 0,
             batch_rotation: None,
+            publish_every: 64,
+            snapshot_r: 0,
         }
     }
 }
@@ -190,6 +219,10 @@ pub struct StreamHandle {
     slot: u32,
     gen: u32,
     id: Arc<str>,
+    /// The stream's snapshot publication cell — shared with the worker
+    /// entry (it migrates with the stream), read lock-free by
+    /// [`StreamRouter::project_snapshot`]/[`StreamRouter::project_many`].
+    cell: Arc<SnapshotCell>,
 }
 
 impl StreamHandle {
@@ -205,6 +238,11 @@ impl StreamHandle {
     /// stream to its current shard.
     pub fn shard(&self) -> usize {
         self.shard
+    }
+
+    /// The stream's snapshot cell (epoch, lock-free read counter).
+    pub fn snapshot_cell(&self) -> &Arc<SnapshotCell> {
+        &self.cell
     }
 }
 
@@ -229,6 +267,9 @@ enum ShardCommand {
         stream: Arc<str>,
         dim: usize,
         cfg: StreamConfig,
+        /// Router-created snapshot cell, shared with the handle — the
+        /// worker publishes through it for the stream's whole life.
+        cell: Arc<SnapshotCell>,
         reply: SyncSender<Result<(u32, u32), String>>,
     },
     Ingest {
@@ -245,12 +286,15 @@ enum ShardCommand {
         gen: u32,
         x: Vec<f64>,
     },
-    /// One command per batch: `xs` is `b × dim` row-major.
+    /// One command per batch: `xs` is `b × dim` row-major. The reply
+    /// hands the batch buffer back so chunked feeders
+    /// ([`StreamRouter::ingest_all`]) can reuse one allocation for the
+    /// whole feed instead of copying every chunk into a fresh `Vec`.
     IngestMany {
         slot: u32,
         gen: u32,
         xs: Vec<f64>,
-        reply: SyncSender<Result<BatchReply, String>>,
+        reply: SyncSender<(Result<BatchReply, String>, Vec<f64>)>,
     },
     /// Barrier + deferred-error drain for async ingest.
     Sync {
@@ -376,6 +420,8 @@ struct ShardRollup {
     migrated_in: u64,
     migrated_out: u64,
     forwarded: u64,
+    snapshot_reads: u64,
+    worker_reads: u64,
     ingest: LatencyHistogram,
     project: LatencyHistogram,
     engine_calls: (u64, u64),
@@ -401,6 +447,11 @@ struct ClosedTotals {
     errors: u64,
     orphans: u64,
     engine_gemms: u64,
+    /// Worker-path projections served by streams closed since spawn.
+    worker_reads: u64,
+    /// Snapshot-path reads served by closed streams' cells (absorbed
+    /// from the cell at close, since the cell lives outside `Metrics`).
+    snapshot_reads: u64,
     ingest: LatencyHistogram,
     project: LatencyHistogram,
 }
@@ -411,6 +462,7 @@ impl ClosedTotals {
         self.excluded += m.excluded;
         self.errors += m.errors;
         self.engine_gemms += m.engine_gemms;
+        self.worker_reads += m.worker_reads;
         self.ingest.merge(&m.ingest_latency);
         self.project.merge(&m.project_latency);
     }
@@ -484,10 +536,24 @@ struct StreamEntry {
     /// First error deferred by fire-and-forget ingest, surfaced (and
     /// cleared) by the next `Sync`.
     pending_error: Option<String>,
+    /// The stream's published-snapshot cell, shared with every clone of
+    /// the stream's handle. It travels with the entry across
+    /// migrations, so the epoch stays monotonic over the stream's whole
+    /// life and readers never observe a reset.
+    cell: Arc<SnapshotCell>,
+    /// Accepted points applied since the last snapshot publish — the
+    /// staleness gauge surfaced as `points_since_publish`.
+    since_publish: u64,
 }
 
 impl StreamEntry {
-    fn new(id: Arc<str>, gen: u32, dim: usize, cfg: StreamConfig) -> StreamEntry {
+    fn new(
+        id: Arc<str>,
+        gen: u32,
+        dim: usize,
+        cfg: StreamConfig,
+        cell: Arc<SnapshotCell>,
+    ) -> StreamEntry {
         let drift = DriftMonitor::new(cfg.drift_every);
         StreamEntry {
             id,
@@ -500,6 +566,8 @@ impl StreamEntry {
             drift,
             metrics: Metrics::default(),
             pending_error: None,
+            cell,
+            since_publish: 0,
         }
     }
 
@@ -539,6 +607,9 @@ impl StreamEntry {
                 // only after the first post-seed push.
                 self.state = Some(st);
                 self.refresh_gauges();
+                // First publish: the moment the eigensystem exists,
+                // snapshot readers stop erroring with "still seeding".
+                self.publish_snapshot();
                 Ok(IngestReply { accepted: true, m: self.seeded, seeding: false })
             }
             Err(e) => {
@@ -562,6 +633,19 @@ impl StreamEntry {
         self.metrics.engine_gemms = st.engine_gemms();
     }
 
+    /// Capture and publish a fresh projection snapshot (no-op while
+    /// seeding). Publish points: seed completion, every
+    /// [`StreamConfig::publish_every`] accepted points, the end of
+    /// every batch command, and `sync` — the read-your-writes point.
+    fn publish_snapshot(&mut self) {
+        if let Some(st) = &self.state {
+            if let Some(snap) = ProjectionSnapshot::capture(st, self.cfg.snapshot_r) {
+                self.cell.publish(snap);
+                self.since_publish = 0;
+            }
+        }
+    }
+
     fn ingest(&mut self, x: &[f64], engine: &RoutedEngine) -> Result<IngestReply, String> {
         if x.len() != self.dim {
             self.metrics.errors += 1;
@@ -581,6 +665,14 @@ impl StreamEntry {
                 }
                 let m = st.len();
                 self.refresh_gauges();
+                if accepted {
+                    self.since_publish += 1;
+                    if self.cfg.publish_every > 0
+                        && self.since_publish >= self.cfg.publish_every as u64
+                    {
+                        self.publish_snapshot();
+                    }
+                }
                 Ok(IngestReply { accepted, m, seeding: false })
             }
             Err(e) => {
@@ -624,6 +716,9 @@ impl StreamEntry {
             self.metrics.excluded += excluded as u64;
             self.drift.on_accept_many(accepted, st);
             self.refresh_gauges();
+            // Batch flush = publish point, even for a partial batch:
+            // the applied prefix is real state and readers may see it.
+            self.publish_snapshot();
             match result {
                 Ok(_) => {
                     reply.accepted = accepted;
@@ -694,7 +789,22 @@ impl StreamEntry {
             reallocs_per_update: self.metrics.reallocs_per_update(),
             engine_gemms: self.metrics.engine_gemms,
             drift_frobenius: self.drift.latest().map(|d| d.norms.frobenius),
+            snapshot_epoch: self.cell.epoch(),
+            snapshot_reads: self.cell.reads(),
+            worker_reads: self.metrics.worker_reads,
+            points_since_publish: self.since_publish,
         }
+    }
+
+    /// Per-stream metrics report with the snapshot gauges filled in —
+    /// the cell and the staleness counter live on the entry, next to
+    /// the handle, not inside [`Metrics`].
+    fn report(&self) -> MetricsReport {
+        let mut r = self.metrics.report();
+        r.snapshot_epoch = self.cell.epoch();
+        r.snapshot_reads = self.cell.reads();
+        r.points_since_publish = self.since_publish;
+        r
     }
 
     fn final_stats(self) -> KpcaStats {
@@ -743,6 +853,7 @@ impl SlotTable {
         stream: Arc<str>,
         dim: usize,
         cfg: StreamConfig,
+        cell: Arc<SnapshotCell>,
     ) -> Result<(u32, u32), String> {
         if self.names.contains_key(stream.as_ref()) {
             return Err(format!("stream '{stream}' already open"));
@@ -751,7 +862,7 @@ impl SlotTable {
         let gen = self.next_gen;
         self.next_gen = self.next_gen.wrapping_add(1);
         self.slots[slot as usize] =
-            Slot::Live(Box::new(StreamEntry::new(stream.clone(), gen, dim, cfg)));
+            Slot::Live(Box::new(StreamEntry::new(stream.clone(), gen, dim, cfg, cell)));
         self.names.insert(stream, slot);
         Ok((slot, gen))
     }
@@ -873,29 +984,94 @@ impl SlotTable {
     }
 }
 
-/// The mutable routing state every worker and router clone shares:
-/// per-shard command senders (index = shard id; senders are never
-/// removed, so retired workers keep receiving forwards and rollups)
-/// and the placement ring (membership decides where opens land).
+/// The routing state every worker and router clone shares: per-shard
+/// command senders (index = shard id; senders are never removed, so
+/// retired workers keep receiving forwards and rollups) and the
+/// placement ring (membership decides where opens land). Immutable
+/// once published — topology changes build a fresh value and swap it
+/// into the [`TopologyCell`].
+#[derive(Clone)]
 struct Topology {
     senders: Vec<SyncSender<ShardCommand>>,
     ring: HashRing,
 }
 
-type SharedTopology = Arc<RwLock<Topology>>;
-
-fn topo_read(topo: &SharedTopology) -> std::sync::RwLockReadGuard<'_, Topology> {
-    topo.read().unwrap_or_else(|e| e.into_inner())
+/// Epoch-swapped immutable topology (the deferred PR 5 follow-on):
+/// data-path readers revalidate a per-thread cached `Arc<Topology>`
+/// with one atomic load per verb — no lock, no reference-count traffic
+/// — while writers clone-mutate-swap under the router's reshard lock.
+/// Same arc-swap shape as [`SnapshotCell`].
+struct TopologyCell {
+    /// Bumped on every swap; readers revalidate against it (`Acquire`).
+    /// Starts at 1 so a zeroed thread-local cache can never match.
+    epoch: AtomicU64,
+    /// Write-rarely slot holding the current immutable topology.
+    current: RwLock<Arc<Topology>>,
 }
 
-fn topo_write(topo: &SharedTopology) -> std::sync::RwLockWriteGuard<'_, Topology> {
-    topo.write().unwrap_or_else(|e| e.into_inner())
+impl TopologyCell {
+    fn new(topo: Topology) -> TopologyCell {
+        TopologyCell {
+            epoch: AtomicU64::new(1),
+            current: RwLock::new(Arc::new(topo)),
+        }
+    }
+
+    fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::Acquire)
+    }
+
+    /// The current topology (read lock + `Arc` clone). Data-path verbs
+    /// go through [`topo_of`], which caches per thread.
+    fn load(&self) -> Arc<Topology> {
+        self.current.read().unwrap_or_else(|e| e.into_inner()).clone()
+    }
+
+    /// Publish a rebuilt topology. The value is stored before the epoch
+    /// bump, both under the write lock, so a reader that observes the
+    /// new epoch always loads a value at least that new (worst case it
+    /// reloads once more — never serves a stale one as current).
+    fn swap(&self, topo: Topology) {
+        let mut slot = self.current.write().unwrap_or_else(|e| e.into_inner());
+        *slot = Arc::new(topo);
+        self.epoch.fetch_add(1, Ordering::Release);
+    }
 }
 
-/// Clone shard `shard`'s sender without holding the topology lock
-/// across the (possibly blocking) send that follows.
+type SharedTopology = Arc<TopologyCell>;
+
+thread_local! {
+    /// Per-thread topology cache: (which cell, the epoch when cached,
+    /// the cached value). The cell-identity check keeps multiple pools
+    /// in one process from aliasing each other's slot; holding the
+    /// `Arc<TopologyCell>` pins the allocation, so `ptr_eq` cannot be
+    /// fooled by reuse.
+    static TOPO_TLS: RefCell<Option<(Arc<TopologyCell>, u64, Arc<Topology>)>> =
+        const { RefCell::new(None) };
+}
+
+/// The current topology, served from the calling thread's cache while
+/// the cell's epoch still matches — the steady-state read is one
+/// `Acquire` load plus a local `Arc` clone.
+fn topo_of(cell: &SharedTopology) -> Arc<Topology> {
+    let epoch = cell.epoch();
+    TOPO_TLS.with(|tls| {
+        let mut tls = tls.borrow_mut();
+        if let Some((c, e, t)) = tls.as_ref() {
+            if *e == epoch && Arc::ptr_eq(c, cell) {
+                return t.clone();
+            }
+        }
+        let t = cell.load();
+        *tls = Some((cell.clone(), epoch, t.clone()));
+        t
+    })
+}
+
+/// Clone shard `shard`'s sender; the (possibly blocking) send that
+/// follows happens against the clone, never against shared state.
 fn sender_of(topo: &SharedTopology, shard: usize) -> Option<SyncSender<ShardCommand>> {
-    topo_read(topo).senders.get(shard).cloned()
+    topo_of(topo).senders.get(shard).cloned()
 }
 
 /// Source-side migration: extract the entry, ship it to the target
@@ -1029,8 +1205,8 @@ fn shard_worker(
             }
         }
         match cmd {
-            ShardCommand::Open { stream, dim, cfg, reply } => {
-                let _ = reply.send(table.open(stream, dim, cfg));
+            ShardCommand::Open { stream, dim, cfg, cell, reply } => {
+                let _ = reply.send(table.open(stream, dim, cfg, cell));
             }
             ShardCommand::Ingest { slot, gen, x, reply } => {
                 let res = match table.get_mut(slot, gen) {
@@ -1069,14 +1245,23 @@ fn shard_worker(
                     }
                     Err(e) => Err(e),
                 };
-                let _ = reply.send(res);
+                // The chunk buffer rides the reply back so
+                // `ingest_all` refills one allocation for the whole
+                // feed instead of `to_vec()`-ing every chunk.
+                let _ = reply.send((res, xs));
             }
             ShardCommand::Sync { slot, gen, reply } => {
                 let res = match table.get_mut(slot, gen) {
-                    Ok(entry) => match entry.pending_error.take() {
-                        Some(e) => Err(e),
-                        None => Ok(entry.metrics.async_errors),
-                    },
+                    Ok(entry) => {
+                        // `sync` is the read-your-writes publish point:
+                        // once this reply lands, snapshot readers see
+                        // every previously applied ingest.
+                        entry.publish_snapshot();
+                        match entry.pending_error.take() {
+                            Some(e) => Err(e),
+                            None => Ok(entry.metrics.async_errors),
+                        }
+                    }
                     Err(e) => Err(e),
                 };
                 let _ = reply.send(res);
@@ -1087,6 +1272,7 @@ fn shard_worker(
                         let t0 = Instant::now();
                         let out = entry.project(&x, r);
                         entry.metrics.project_latency.record(t0.elapsed());
+                        entry.metrics.worker_reads += 1;
                         out
                     }
                     Err(e) => Err(e),
@@ -1105,7 +1291,7 @@ fn shard_worker(
                 let _ = reply.send(res);
             }
             ShardCommand::Metrics { slot, gen, reply } => {
-                let res = table.get(slot, gen).map(|entry| entry.metrics.report());
+                let res = table.get(slot, gen).map(|entry| entry.report());
                 let _ = reply.send(res);
             }
             ShardCommand::Close { slot, gen, reply } => {
@@ -1113,6 +1299,11 @@ fn shard_worker(
                     // Keep the stream's lifetime counters/latency in
                     // the shard totals — pool counters stay monotonic.
                     closed.absorb(&entry.metrics);
+                    closed.snapshot_reads += entry.cell.reads();
+                    // Flip in-flight snapshot readers to a clean
+                    // "unknown or closed stream" error and free the
+                    // retained basis/landmark copy.
+                    entry.cell.mark_closed();
                     entry.final_stats()
                 });
                 let _ = reply.send(res);
@@ -1143,6 +1334,8 @@ fn shard_worker(
                     migrated_in: migration.migrated_in,
                     migrated_out: migration.migrated_out,
                     forwarded: migration.forwarded,
+                    snapshot_reads: closed.snapshot_reads,
+                    worker_reads: closed.worker_reads,
                     ingest: closed.ingest.clone(),
                     project: closed.project.clone(),
                     engine_calls: engine.counts(),
@@ -1154,6 +1347,8 @@ fn shard_worker(
                     rollup.errors += entry.metrics.errors;
                     rollup.total_ws_bytes += entry.metrics.ws_bytes_resident;
                     rollup.ws_engine_gemms += entry.metrics.engine_gemms;
+                    rollup.snapshot_reads += entry.cell.reads();
+                    rollup.worker_reads += entry.metrics.worker_reads;
                     rollup.ingest.merge(&entry.metrics.ingest_latency);
                     rollup.project.merge(&entry.metrics.project_latency);
                     rollup.gauges.push(entry.gauges(shard));
@@ -1215,23 +1410,23 @@ impl StreamRouter {
     /// forwards; see [`StreamRouter::remove_shard`]). The placement-
     /// eligible count is [`StreamRouter::active_shards`].
     pub fn shards(&self) -> usize {
-        topo_read(&self.topo).senders.len()
+        topo_of(&self.topo).senders.len()
     }
 
     /// Number of ring members — shards eligible to own streams.
     pub fn active_shards(&self) -> usize {
-        topo_read(&self.topo).ring.len()
+        topo_of(&self.topo).ring.len()
     }
 
     /// Ring-member shard ids, ascending.
     pub fn active_shard_ids(&self) -> Vec<usize> {
-        topo_read(&self.topo).ring.shards()
+        topo_of(&self.topo).ring.shards()
     }
 
     /// The shard a stream id is currently placed on (stable until the
     /// ring membership changes).
     pub fn shard_of(&self, stream: &str) -> usize {
-        topo_read(&self.topo).ring.shard_of(stream)
+        topo_of(&self.topo).ring.shard_of(stream)
     }
 
     /// A handle's current address: its resolved coordinates, chased
@@ -1337,10 +1532,20 @@ impl StreamRouter {
             }
         }
         let cmd_id = id.clone();
-        let res = self
-            .rpc(shard, move |reply| ShardCommand::Open { stream: cmd_id, dim, cfg, reply });
+        // The snapshot cell is born with the stream: one allocation
+        // shared between the handle (reader side) and the worker's
+        // entry (publisher side).
+        let cell = Arc::new(SnapshotCell::new());
+        let cmd_cell = cell.clone();
+        let res = self.rpc(shard, move |reply| ShardCommand::Open {
+            stream: cmd_id,
+            dim,
+            cfg,
+            cell: cmd_cell,
+            reply,
+        });
         match res {
-            Ok(Ok((slot, gen))) => Ok(StreamHandle { shard, slot, gen, id }),
+            Ok(Ok((slot, gen))) => Ok(StreamHandle { shard, slot, gen, id, cell }),
             Ok(Err(e)) | Err(e) => {
                 // Failed open: release the reservation.
                 self.names.write().unwrap_or_else(|p| p.into_inner()).remove(&id);
@@ -1401,13 +1606,29 @@ impl StreamRouter {
     /// # Ok::<(), String>(())
     /// ```
     pub fn ingest_many(&self, h: &StreamHandle, xs: Vec<f64>) -> Result<BatchReply, String> {
+        self.ingest_many_rpc(h, xs).0
+    }
+
+    /// The batched-ingest rendezvous with the chunk buffer handed back:
+    /// the worker moves the buffer into the reply, so a chunking caller
+    /// ([`StreamRouter::ingest_all`]) refills one allocation for the
+    /// whole feed. On a transport error the buffer is gone (it rode the
+    /// channel) and an empty `Vec` comes back.
+    fn ingest_many_rpc(
+        &self,
+        h: &StreamHandle,
+        xs: Vec<f64>,
+    ) -> (Result<BatchReply, String>, Vec<f64>) {
         let a = self.resolve(h);
-        self.rpc(a.shard, |reply| ShardCommand::IngestMany {
+        match self.rpc(a.shard, |reply| ShardCommand::IngestMany {
             slot: a.slot,
             gen: a.gen,
             xs,
             reply,
-        })?
+        }) {
+            Ok((res, buf)) => (res, buf),
+            Err(e) => (Err(e), Vec::new()),
+        }
     }
 
     /// Drive a whole flat `n × dim` row-major feed through
@@ -1434,11 +1655,23 @@ impl StreamRouter {
         }
         let n = flat.len() / dim;
         let batch = batch.max(1);
+        if n <= batch {
+            // The whole feed fits one command: a single copy (the
+            // worker needs owned data), no chunking loop at all.
+            return self.ingest_many(h, flat.to_vec());
+        }
         let mut total = BatchReply::default();
+        // One reusable chunk buffer round-trips through the worker —
+        // refilled per chunk instead of `to_vec()`-allocated per chunk.
+        let mut buf: Vec<f64> = Vec::with_capacity(batch * dim);
         let mut i = 0;
         while i < n {
             let end = (i + batch).min(n);
-            let r = self.ingest_many(h, flat[i * dim..end * dim].to_vec())?;
+            buf.clear();
+            buf.extend_from_slice(&flat[i * dim..end * dim]);
+            let (res, back) = self.ingest_many_rpc(h, std::mem::take(&mut buf));
+            buf = back;
+            let r = res?;
             total.accepted += r.accepted;
             total.excluded += r.excluded;
             total.seeded += r.seeded;
@@ -1458,7 +1691,11 @@ impl StreamRouter {
         self.rpc(a.shard, |reply| ShardCommand::Sync { slot: a.slot, gen: a.gen, reply })?
     }
 
-    /// Project a point onto a stream's current top-`r` components.
+    /// Project a point onto a stream's current top-`r` components
+    /// through the worker — one rendezvous round-trip, serialized
+    /// behind the stream's ingests. This is the fully-fresh fallback;
+    /// the serving path is [`StreamRouter::project_snapshot`] /
+    /// [`StreamRouter::project_many`].
     pub fn project(&self, h: &StreamHandle, x: Vec<f64>, r: usize) -> Result<Vec<f64>, String> {
         let a = self.resolve(h);
         self.rpc(a.shard, |reply| ShardCommand::Project {
@@ -1468,6 +1705,91 @@ impl StreamRouter {
             r,
             reply,
         })?
+    }
+
+    /// Project one point through the stream's published snapshot —
+    /// never enqueues a shard command, so readers scale with cores
+    /// instead of queueing behind ingests. Borrowed input: no per-call
+    /// `Vec` handoff (the `Vec`-moving RPC stays on the worker path
+    /// only). Errors until the stream finishes seeding and publishes
+    /// its first snapshot, and after close.
+    ///
+    /// Freshness: the snapshot may lag the worker by up to
+    /// [`StreamConfig::publish_every`] accepted points;
+    /// [`StreamRouter::sync`] publishes, so `sync` + snapshot read is
+    /// read-your-writes.
+    pub fn project_snapshot(
+        &self,
+        h: &StreamHandle,
+        y: &[f64],
+        r: usize,
+    ) -> Result<Vec<f64>, String> {
+        h.cell.load()?.project(y, r)
+    }
+
+    /// Batched snapshot projection: `ys` is `b × dim` row-major, the
+    /// result is `b × r_eff` scores row-major. Allocating convenience
+    /// wrapper over [`StreamRouter::project_many_into`].
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use inkpca::coordinator::{KernelConfig, PoolConfig, ShardPool, StreamConfig};
+    ///
+    /// let pool = ShardPool::spawn(PoolConfig::default());
+    /// let router = pool.router();
+    /// let cfg = StreamConfig {
+    ///     kernel: KernelConfig::Rbf { sigma: 1.0 },
+    ///     mean_adjust: false,
+    ///     seed_points: 2,
+    ///     ..StreamConfig::default()
+    /// };
+    /// let h = router.open_stream("s", 2, cfg)?;
+    /// let pts: Vec<f64> = (0..12).map(|i| (i as f64 * 0.31).cos()).collect();
+    /// router.ingest_many(&h, pts)?;
+    /// router.sync(&h)?; // publish: read-your-writes from here on
+    /// let queries = [0.1, 0.2, 0.3, 0.4]; // two 2-d points
+    /// let scores = router.project_many(&h, &queries, 2)?;
+    /// assert_eq!(scores.len() % 2, 0);
+    /// # pool.shutdown();
+    /// # Ok::<(), String>(())
+    /// ```
+    pub fn project_many(
+        &self,
+        h: &StreamHandle,
+        ys: &[f64],
+        r: usize,
+    ) -> Result<Vec<f64>, String> {
+        let mut scratch = ProjectScratch::new();
+        let mut out = Vec::new();
+        self.project_many_into(h, ys, r, &mut scratch, &mut out)?;
+        Ok(out)
+    }
+
+    /// Batched snapshot projection into caller-owned scratch + output —
+    /// the zero-alloc steady-state read path: the b×m kernel block goes
+    /// through `kernels::kernel_rows_into` and one GEMM against the
+    /// snapshot basis, every buffer reused across calls. Returns the
+    /// number of components per row actually produced
+    /// (`min(r, published components)`); `out` holds `b × r_eff`
+    /// scores row-major.
+    pub fn project_many_into(
+        &self,
+        h: &StreamHandle,
+        ys: &[f64],
+        r: usize,
+        scratch: &mut ProjectScratch,
+        out: &mut Vec<f64>,
+    ) -> Result<usize, String> {
+        let snap = h.cell.load_cached(scratch)?;
+        snap.project_many_into(ys, r, scratch, out)
+    }
+
+    /// The stream's current published-snapshot epoch (0 until the first
+    /// publish). Monotonically non-decreasing for the stream's life,
+    /// including across migrations — the cell travels with the entry.
+    pub fn snapshot_epoch(&self, h: &StreamHandle) -> u64 {
+        h.cell.epoch()
     }
 
     /// Force an immediate drift measurement on a stream.
@@ -1517,12 +1839,16 @@ impl StreamRouter {
     /// shard's id. Open handles keep working throughout.
     pub fn add_shard(&self) -> Result<usize, String> {
         let _g = self.reshard.lock().unwrap_or_else(|e| e.into_inner());
+        // Writers rebuild and swap: clone the current topology, mutate
+        // the private copy, publish it atomically. Readers in flight
+        // keep their (still valid) old `Arc` — senders are never
+        // removed, so an old topology routes correctly forever.
         let (shard, rx) = {
-            let mut topo = topo_write(&self.topo);
+            let mut topo = (*self.topo.load()).clone();
             // Prefer reviving a retired worker (shrunk earlier): its
             // thread is parked on an empty queue and rejoins for free.
             let retired = (0..topo.senders.len()).find(|s| !topo.ring.contains(*s));
-            match retired {
+            let picked = match retired {
                 Some(s) => {
                     topo.ring.add_shard(s);
                     (s, None)
@@ -1534,7 +1860,9 @@ impl StreamRouter {
                     topo.ring.add_shard(s);
                     (s, Some(rx))
                 }
-            }
+            };
+            self.topo.swap(topo);
+            picked
         };
         if let Some(rx) = rx {
             let engine_cfg = self.engine.clone();
@@ -1564,7 +1892,7 @@ impl StreamRouter {
     pub fn remove_shard(&self, shard: usize) -> Result<usize, String> {
         let _g = self.reshard.lock().unwrap_or_else(|e| e.into_inner());
         {
-            let mut topo = topo_write(&self.topo);
+            let mut topo = (*self.topo.load()).clone();
             if !topo.ring.contains(shard) {
                 return Err(format!("shard {shard} is not in the ring"));
             }
@@ -1572,6 +1900,7 @@ impl StreamRouter {
                 return Err("cannot remove the last shard".to_string());
             }
             topo.ring.remove_shard(shard);
+            self.topo.swap(topo);
         }
         self.rebalance_locked()
     }
@@ -1672,7 +2001,7 @@ impl StreamRouter {
     /// inactive) listed for attribution.
     pub fn pool_snapshot(&self) -> Result<PoolSnapshot, String> {
         let (workers, active_ids) = {
-            let topo = topo_read(&self.topo);
+            let topo = topo_of(&self.topo);
             (topo.senders.len(), topo.ring.shards())
         };
         let mut snap = PoolSnapshot {
@@ -1694,6 +2023,8 @@ impl StreamRouter {
             snap.forwards += rollup.forwarded;
             snap.engine_calls.0 += rollup.engine_calls.0;
             snap.engine_calls.1 += rollup.engine_calls.1;
+            snap.snapshot_reads += rollup.snapshot_reads;
+            snap.worker_reads += rollup.worker_reads;
             ingest.merge(&rollup.ingest);
             project.merge(&rollup.project);
             snap.per_shard.push(ShardOccupancy {
@@ -1736,7 +2067,7 @@ impl ShardPool {
             txs.push(tx);
             rxs.push(rx);
         }
-        let topo: SharedTopology = Arc::new(RwLock::new(Topology {
+        let topo: SharedTopology = Arc::new(TopologyCell::new(Topology {
             senders: txs,
             ring: HashRing::with_shards(n, cfg.vnodes),
         }));
@@ -1789,10 +2120,11 @@ impl ShardPool {
 
 impl Drop for ShardPool {
     fn drop(&mut self) {
-        // Clone the senders out of the lock: Shutdown sends can block
-        // on full queues, and workers take topology reads to forward.
+        // Clone the senders out of the shared topology: Shutdown sends
+        // can block on full queues, and workers still load the
+        // topology to forward while draining.
         let senders: Vec<SyncSender<ShardCommand>> =
-            topo_read(&self.router.topo).senders.to_vec();
+            self.router.topo.load().senders.to_vec();
         for tx in senders {
             let _ = tx.send(ShardCommand::Shutdown);
         }

@@ -1,0 +1,630 @@
+//! Lock-free read path: epoch-published projection snapshots.
+//!
+//! Every `project` verb used to be an RPC through the owning shard
+//! worker's FIFO — reads serialized against ingests, so read throughput
+//! scaled with *shard count*, not cores. This module decouples them:
+//! the worker periodically captures an immutable [`ProjectionSnapshot`]
+//! of the stream's eigensystem (top-r basis copy, eigenvalues, the
+//! cached centering sums of the O(m·r) projection, retained landmark
+//! data, shared kernel handle) and publishes it through a
+//! [`SnapshotCell`] — a hand-rolled arc-swap: an `AtomicU64` epoch next
+//! to a rarely-written `RwLock<Arc<ProjectionSnapshot>>`. Readers that
+//! keep a [`ProjectScratch`] cache the `Arc` keyed by (cell, epoch), so
+//! the steady-state read is one atomic epoch load + an `Arc` clone —
+//! no lock, no queue, no worker involvement at all.
+//!
+//! # Freshness contract
+//!
+//! Snapshot reads may lag the eigensystem by up to
+//! [`super::StreamConfig::publish_every`] accepted points (the worker
+//! also publishes on every `sync`, every `ingest_many` flush, and at
+//! seed completion). `sync` + read gives read-your-writes: the sync
+//! barrier publishes before replying, so a snapshot read issued after
+//! a successful `sync` observes at least everything enqueued before it.
+//! The staleness is observable: `StreamGauges::points_since_publish`
+//! counts accepted points not yet captured, and `snapshot_epoch` is
+//! monotonic (it survives migration — the cell travels with the stream
+//! entry, and publishes serialize through the single owning worker).
+//!
+//! # Batched projection
+//!
+//! [`ProjectionSnapshot::project_many_into`] scores `b` queries in one
+//! pass: the b×m kernel block via [`crate::kernels::kernel_rows_into`]
+//! (one GEMM + entry map for dot-product/distance kernels), then ONE
+//! (b×m)·(m×r) GEMM against the captured basis. Mean-adjusted centering
+//! folds into a per-entry correction using the captured per-component
+//! sums `uᵀK𝟙` and `uᵀ𝟙` — algebraically identical to the worker path
+//! (`k_y − K𝟙/m − mean(k_y)·𝟙 + Σ/m²·𝟙` dotted with `u`), without ever
+//! materializing a centered column.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+use crate::kernels::{kernel_rows_into, Kernel, KernelBlockScratch};
+use crate::kpca::IncrementalKpca;
+use crate::linalg::{matmul_into, MatView, MatViewMut};
+use crate::rankone::ensure_f64;
+
+/// Immutable point-in-time copy of everything a projection needs,
+/// published by the owning shard worker, shared read-only by any number
+/// of reader threads. `m`, the basis and the centering sums are
+/// mutually consistent — they were captured atomically (the worker owns
+/// the eigensystem exclusively between commands).
+pub struct ProjectionSnapshot {
+    /// Publication counter (1-based; assigned by [`SnapshotCell`]).
+    epoch: u64,
+    /// Points in the eigensystem at capture.
+    m: usize,
+    dim: usize,
+    mean_adjust: bool,
+    /// Components captured (`min(snapshot_r, m)`; full basis when the
+    /// config leaves `snapshot_r` at 0).
+    r: usize,
+    /// Eigenvalues, DESCENDING (index 0 = top component), length `r`.
+    vals: Vec<f64>,
+    /// Basis copy, `m × r` row-major: `basis[j·r + c]` is component
+    /// `c`'s weight on retained example `j` (columns reordered so the
+    /// top component is column 0, unlike the ascending live basis).
+    basis: Vec<f64>,
+    /// Per-component `uᵀ(K𝟙)` over the captured row sums (empty when
+    /// unadjusted).
+    uk1: Vec<f64>,
+    /// Per-component `uᵀ𝟙` (empty when unadjusted).
+    u1: Vec<f64>,
+    /// `Σₘ = 𝟙ᵀKₘ𝟙` at capture.
+    s: f64,
+    /// Retained landmark data, `m × dim` row-major.
+    x: Vec<f64>,
+    kernel: Arc<dyn Kernel>,
+}
+
+impl ProjectionSnapshot {
+    /// Capture the current eigensystem (`r_limit` top components; 0 =
+    /// all). Returns `None` for a borrowed-kernel state — coordinator
+    /// streams always own their kernel through an `Arc`, so the worker
+    /// never sees that.
+    pub fn capture(state: &IncrementalKpca<'_>, r_limit: usize) -> Option<ProjectionSnapshot> {
+        let kernel = state.kernel_arc()?;
+        let m = state.len();
+        let dim = state.dim();
+        let n = state.vals.len();
+        let r = if r_limit == 0 { n } else { r_limit.min(n) };
+        let view = state.vecs.view();
+        let mut vals = Vec::with_capacity(r);
+        let mut basis = vec![0.0; m * r];
+        for c in 0..r {
+            // Live eigenpairs are ascending; the snapshot stores the
+            // top component first so `r_eff` at query time is a prefix.
+            let idx = n - 1 - c;
+            vals.push(state.vals[idx]);
+            for j in 0..m {
+                basis[j * r + c] = view[(j, idx)];
+            }
+        }
+        let (s, k1) = state.centering_sums();
+        let (mut uk1, mut u1) = (Vec::new(), Vec::new());
+        if state.mean_adjust {
+            uk1 = vec![0.0; r];
+            u1 = vec![0.0; r];
+            for j in 0..m {
+                let row = &basis[j * r..(j + 1) * r];
+                let k1j = k1[j];
+                for c in 0..r {
+                    uk1[c] += row[c] * k1j;
+                    u1[c] += row[c];
+                }
+            }
+        }
+        Some(ProjectionSnapshot {
+            epoch: 0, // assigned by SnapshotCell::publish
+            m,
+            dim,
+            mean_adjust: state.mean_adjust,
+            r,
+            vals,
+            basis,
+            uk1,
+            u1,
+            s,
+            x: state.data_flat().to_vec(),
+            kernel,
+        })
+    }
+
+    /// Publication epoch (1-based, monotonic per stream).
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Eigensystem size at capture.
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Components available (`project*` clamps `r` to this).
+    pub fn components(&self) -> usize {
+        self.r
+    }
+
+    /// Bytes resident in the snapshot's owned buffers.
+    pub fn bytes_resident(&self) -> usize {
+        std::mem::size_of::<f64>()
+            * (self.vals.len() + self.basis.len() + self.uk1.len() + self.u1.len() + self.x.len())
+    }
+
+    /// Score `b` queries (`ys` is `b × dim` row-major) on the top
+    /// `min(r, components)` captured components into `out` (`b × r_eff`
+    /// row-major), reusing `scratch` so the warm path never allocates.
+    /// Returns the number of query rows scored.
+    ///
+    /// Scores match the worker-side [`IncrementalKpca::project`] to
+    /// ≤1e-12: same centering, same `λ ≤ 1e-12 → 0` guard, only the
+    /// floating-point summation order differs (blocked GEMM vs scalar
+    /// loop).
+    pub fn project_many_into(
+        &self,
+        ys: &[f64],
+        r: usize,
+        scratch: &mut ProjectScratch,
+        out: &mut Vec<f64>,
+    ) -> Result<usize, String> {
+        if self.dim == 0 || ys.len() % self.dim != 0 {
+            return Err(format!(
+                "query length {} is not a multiple of dim {}",
+                ys.len(),
+                self.dim
+            ));
+        }
+        let b = ys.len() / self.dim;
+        let r_eff = r.min(self.r);
+        ensure_f64(out, b * r_eff, &mut scratch.out_reallocs);
+        if b == 0 || r_eff == 0 {
+            return Ok(b);
+        }
+        // b×m kernel block (blocked GEMM form for dot-product/distance
+        // kernels, scalar fallback otherwise).
+        kernel_rows_into(
+            self.kernel.as_ref(),
+            &self.x,
+            self.dim,
+            self.m,
+            ys,
+            b,
+            &mut scratch.block,
+            &mut scratch.kernel,
+        );
+        // One GEMM against the leading r_eff basis columns (stride r
+        // exposes the prefix without a copy).
+        let block = MatView::of_rows(&scratch.block, b, self.m);
+        let basis = MatView::new(&self.basis, self.m, r_eff, self.r);
+        let mut out_view = MatViewMut::new(out, b, r_eff, r_eff);
+        matmul_into(block, basis, &mut out_view);
+        // Fold centering + 1/√λ scaling into one per-entry pass. The
+        // centered column is k_y + (Σ/m² − mean(k_y))·𝟙 − K𝟙/m, so its
+        // dot with u is the raw GEMM entry plus the captured
+        // per-component corrections.
+        let mf = self.m as f64;
+        let total_mean = if self.mean_adjust { self.s / (mf * mf) } else { 0.0 };
+        for i in 0..b {
+            let adjust = if self.mean_adjust {
+                let row = &scratch.block[i * self.m..(i + 1) * self.m];
+                let ky_mean = row.iter().sum::<f64>() / mf;
+                total_mean - ky_mean
+            } else {
+                0.0
+            };
+            let o = &mut out[i * r_eff..(i + 1) * r_eff];
+            for c in 0..r_eff {
+                let lam = self.vals[c];
+                if lam <= 1e-12 {
+                    o[c] = 0.0;
+                    continue;
+                }
+                let mut dot = o[c];
+                if self.mean_adjust {
+                    dot += adjust * self.u1[c] - self.uk1[c] / mf;
+                }
+                o[c] = dot / lam.sqrt();
+            }
+        }
+        Ok(b)
+    }
+
+    /// Score one query (allocating convenience wrapper).
+    pub fn project(&self, y: &[f64], r: usize) -> Result<Vec<f64>, String> {
+        if y.len() != self.dim {
+            return Err(format!(
+                "dimension mismatch: got {}, want {}",
+                y.len(),
+                self.dim
+            ));
+        }
+        let mut scratch = ProjectScratch::new();
+        let mut out = Vec::new();
+        self.project_many_into(y, r, &mut scratch, &mut out)?;
+        Ok(out)
+    }
+}
+
+/// The per-stream publication cell: the hand-rolled arc-swap. One lives
+/// in every [`super::StreamHandle`] *and* inside the owning worker's
+/// stream entry (it migrates with the entry), so readers and the writer
+/// share it without going through the router.
+///
+/// ```text
+///            writer (owning shard worker, serialized)
+///                    │ publish: write-lock, store Arc, bump epoch
+///                    ▼
+///   epoch: AtomicU64 ─ slot: RwLock<Option<Arc<ProjectionSnapshot>>>
+///                    ▲
+///                    │ readers: epoch load (Acquire); on match reuse
+///                    │ the Arc cached in their ProjectScratch (no
+///                    │ lock), else read-lock + clone + re-cache
+/// ```
+///
+/// The write lock is held only for the two pointer stores; readers take
+/// the read lock only on the first read after a publish. Epoch 0 means
+/// "never published" (stream still seeding).
+pub struct SnapshotCell {
+    epoch: AtomicU64,
+    slot: RwLock<Option<Arc<ProjectionSnapshot>>>,
+    /// Snapshot-path reads served (lock-free counter; surfaces in
+    /// `StreamGauges`/`PoolSnapshot` next to `worker_reads`).
+    reads: AtomicU64,
+    /// Set on close: late readers get an error instead of a stale
+    /// snapshot of a stream that no longer exists.
+    closed: AtomicBool,
+}
+
+impl Default for SnapshotCell {
+    fn default() -> Self {
+        SnapshotCell::new()
+    }
+}
+
+impl SnapshotCell {
+    pub fn new() -> SnapshotCell {
+        SnapshotCell {
+            epoch: AtomicU64::new(0),
+            slot: RwLock::new(None),
+            reads: AtomicU64::new(0),
+            closed: AtomicBool::new(false),
+        }
+    }
+
+    /// Current publication epoch (0 = nothing published yet).
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::Acquire)
+    }
+
+    /// Snapshot-path reads served through this cell.
+    pub fn reads(&self) -> u64 {
+        self.reads.load(Ordering::Relaxed)
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.closed.load(Ordering::Acquire)
+    }
+
+    /// Publish a fresh snapshot under the next epoch. Writer side only
+    /// — publishes serialize through the single owning worker (the cell
+    /// migrates with the stream entry, so ownership transfer itself
+    /// serializes through the shard channels). Returns the epoch.
+    pub fn publish(&self, mut snap: ProjectionSnapshot) -> u64 {
+        let mut guard = self.slot.write().unwrap_or_else(|e| e.into_inner());
+        let epoch = self.epoch.load(Ordering::Relaxed) + 1;
+        snap.epoch = epoch;
+        *guard = Some(Arc::new(snap));
+        // Released before the guard: a reader that sees the new epoch
+        // and misses its scratch cache read-locks and finds the new
+        // Arc already in place.
+        self.epoch.store(epoch, Ordering::Release);
+        epoch
+    }
+
+    /// Mark the stream closed; subsequent loads error.
+    pub fn mark_closed(&self) {
+        self.closed.store(true, Ordering::Release);
+    }
+
+    /// Load the latest snapshot (read-lock + clone — the scratch-less
+    /// path; use [`SnapshotCell::load_cached`] from a read loop).
+    pub fn load(&self) -> Result<Arc<ProjectionSnapshot>, String> {
+        if self.is_closed() {
+            return Err("unknown or closed stream".to_string());
+        }
+        let guard = self.slot.read().unwrap_or_else(|e| e.into_inner());
+        match &*guard {
+            Some(snap) => {
+                self.reads.fetch_add(1, Ordering::Relaxed);
+                Ok(snap.clone())
+            }
+            None => Err("no snapshot published yet (stream still seeding?)".to_string()),
+        }
+    }
+
+    /// Load through a per-reader scratch cache: when the epoch matches
+    /// the cached `Arc`, the read is one atomic load + one `Arc` clone
+    /// — no lock. The cache is keyed by cell identity (`Arc::ptr_eq`),
+    /// so one scratch can serve reads against many streams.
+    pub fn load_cached(
+        self: &Arc<Self>,
+        scratch: &mut ProjectScratch,
+    ) -> Result<Arc<ProjectionSnapshot>, String> {
+        if self.is_closed() {
+            return Err("unknown or closed stream".to_string());
+        }
+        let epoch = self.epoch.load(Ordering::Acquire);
+        if epoch != 0 && scratch.cached_epoch == epoch {
+            if let (Some(cell), Some(snap)) = (&scratch.cached_cell, &scratch.cached) {
+                if Arc::ptr_eq(cell, self) {
+                    self.reads.fetch_add(1, Ordering::Relaxed);
+                    return Ok(snap.clone());
+                }
+            }
+        }
+        let snap = {
+            let guard = self.slot.read().unwrap_or_else(|e| e.into_inner());
+            match &*guard {
+                Some(snap) => snap.clone(),
+                None => {
+                    return Err(
+                        "no snapshot published yet (stream still seeding?)".to_string()
+                    )
+                }
+            }
+        };
+        scratch.cached_epoch = snap.epoch;
+        scratch.cached = Some(snap.clone());
+        scratch.cached_cell = Some(self.clone());
+        self.reads.fetch_add(1, Ordering::Relaxed);
+        Ok(snap)
+    }
+}
+
+impl std::fmt::Debug for SnapshotCell {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SnapshotCell")
+            .field("epoch", &self.epoch())
+            .field("reads", &self.reads())
+            .field("closed", &self.is_closed())
+            .finish()
+    }
+}
+
+/// Per-reader reusable state: the epoch-keyed snapshot cache plus every
+/// buffer the batched projection needs. Keep one per reader thread and
+/// the steady-state read path performs zero allocations (asserted by
+/// [`ProjectScratch::reallocs`] staying flat once warm).
+#[derive(Default)]
+pub struct ProjectScratch {
+    cached_epoch: u64,
+    cached_cell: Option<Arc<SnapshotCell>>,
+    cached: Option<Arc<ProjectionSnapshot>>,
+    /// b×m kernel block.
+    block: Vec<f64>,
+    /// Row-norm scratch of the blocked kernel evaluation.
+    kernel: KernelBlockScratch,
+    /// Growth events on the caller-owned `out` buffer.
+    out_reallocs: u64,
+}
+
+impl ProjectScratch {
+    pub fn new() -> ProjectScratch {
+        ProjectScratch::default()
+    }
+
+    /// Pre-size for batches of up to `b` queries against an `m`-point
+    /// snapshot (growths here don't count toward [`Self::reallocs`]).
+    pub fn reserve(&mut self, m: usize, b: usize) {
+        if self.block.capacity() < m * b {
+            self.block.reserve(m * b - self.block.len());
+        }
+        self.kernel.reserve(m, b);
+    }
+
+    /// Buffer-growth events since construction across the kernel block,
+    /// the row-norm scratch and the caller's `out` buffers — zero once
+    /// warm (the zero-alloc gauge of the read path).
+    pub fn reallocs(&self) -> u64 {
+        self.kernel.reallocs() + self.out_reallocs
+    }
+
+    /// Bytes resident in the scratch buffers (cached snapshot excluded
+    /// — it is shared, not per-reader).
+    pub fn bytes_resident(&self) -> usize {
+        std::mem::size_of::<f64>() * self.block.capacity() + self.kernel.bytes_resident()
+    }
+
+    /// Epoch of the cached snapshot (0 = nothing cached).
+    pub fn cached_epoch(&self) -> u64 {
+        self.cached_epoch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::yeast_like;
+    use crate::kernels::{Linear, Polynomial, Rbf};
+    use crate::linalg::Mat;
+
+    fn streamed_state(
+        kernel: Arc<dyn Kernel>,
+        n: usize,
+        seed: usize,
+        adjust: bool,
+    ) -> (IncrementalKpca<'static>, Mat) {
+        let ds = yeast_like(n, 7);
+        let seed_m = ds.x.submatrix(seed, ds.dim());
+        let mut st = IncrementalKpca::from_batch_shared(kernel, &seed_m, adjust).unwrap();
+        for i in seed..n {
+            st.push(ds.x.row(i)).unwrap();
+        }
+        (st, ds.x)
+    }
+
+    #[test]
+    fn snapshot_matches_worker_projection() {
+        let kernels: Vec<Arc<dyn Kernel>> = vec![
+            Arc::new(Rbf { sigma: 1.3 }),
+            Arc::new(Linear),
+            Arc::new(Polynomial { degree: 3, offset: 1.0 }),
+        ];
+        for kernel in kernels {
+            for adjust in [true, false] {
+                let (st, x) = streamed_state(kernel.clone(), 20, 8, adjust);
+                let cell = Arc::new(SnapshotCell::new());
+                cell.publish(ProjectionSnapshot::capture(&st, 0).unwrap());
+                let snap = cell.load().unwrap();
+                assert_eq!(snap.m(), st.len());
+                for probe_row in [0usize, 5, 19] {
+                    let y = x.row(probe_row);
+                    let want = st.project(y, 6);
+                    let got = snap.project(y, 6).unwrap();
+                    assert_eq!(want.len(), got.len());
+                    for (a, b) in want.iter().zip(&got) {
+                        assert!(
+                            (a - b).abs() < 1e-12,
+                            "{} adjust={adjust}: worker {a} vs snapshot {b}",
+                            kernel.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn batched_projection_matches_per_point() {
+        let kernel: Arc<dyn Kernel> = Arc::new(Rbf { sigma: 1.1 });
+        let (st, x) = streamed_state(kernel, 18, 6, true);
+        let snap_raw = ProjectionSnapshot::capture(&st, 0).unwrap();
+        let cell = Arc::new(SnapshotCell::new());
+        cell.publish(snap_raw);
+        let snap = cell.load().unwrap();
+        let dim = st.dim();
+        let b = 7;
+        let ys: Vec<f64> =
+            (0..b).flat_map(|i| x.row(i).iter().copied().collect::<Vec<_>>()).collect();
+        let mut scratch = ProjectScratch::new();
+        let mut out = Vec::new();
+        let rows = snap.project_many_into(&ys, 4, &mut scratch, &mut out).unwrap();
+        assert_eq!(rows, b);
+        assert_eq!(out.len(), b * 4);
+        for i in 0..b {
+            let single = snap.project(x.row(i), 4).unwrap();
+            for c in 0..4 {
+                assert!(
+                    (out[i * 4 + c] - single[c]).abs() < 1e-13,
+                    "row {i} comp {c}: batch {} vs single {}",
+                    out[i * 4 + c],
+                    single[c]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn top_r_capture_is_a_prefix_of_full_capture() {
+        let kernel: Arc<dyn Kernel> = Arc::new(Rbf { sigma: 1.0 });
+        let (st, x) = streamed_state(kernel, 16, 6, true);
+        let full = ProjectionSnapshot::capture(&st, 0).unwrap();
+        let top3 = ProjectionSnapshot::capture(&st, 3).unwrap();
+        assert_eq!(top3.components(), 3);
+        let y = x.row(2);
+        let a = full.project(y, 3).unwrap();
+        let b = top3.project(y, 10).unwrap(); // clamped to 3
+        assert_eq!(b.len(), 3);
+        for (p, q) in a.iter().zip(&b) {
+            assert!((p - q).abs() < 1e-13);
+        }
+    }
+
+    #[test]
+    fn steady_state_reads_are_zero_realloc() {
+        let kernel: Arc<dyn Kernel> = Arc::new(Rbf { sigma: 1.2 });
+        let (st, x) = streamed_state(kernel, 20, 8, true);
+        let cell = Arc::new(SnapshotCell::new());
+        cell.publish(ProjectionSnapshot::capture(&st, 0).unwrap());
+        let mut scratch = ProjectScratch::new();
+        let mut out = Vec::new();
+        let ys: Vec<f64> =
+            (0..5).flat_map(|i| x.row(i).iter().copied().collect::<Vec<_>>()).collect();
+        // Warm-up pass allocates; every pass after must not.
+        let snap = cell.load_cached(&mut scratch).unwrap();
+        snap.project_many_into(&ys, 5, &mut scratch, &mut out).unwrap();
+        let warm = scratch.reallocs();
+        for _ in 0..50 {
+            let snap = cell.load_cached(&mut scratch).unwrap();
+            snap.project_many_into(&ys, 5, &mut scratch, &mut out).unwrap();
+        }
+        assert_eq!(scratch.reallocs(), warm, "warm read path must not grow buffers");
+    }
+
+    #[test]
+    fn cell_epoch_read_counters_and_close() {
+        let kernel: Arc<dyn Kernel> = Arc::new(Rbf { sigma: 1.0 });
+        let (st, x) = streamed_state(kernel, 14, 6, false);
+        let cell = Arc::new(SnapshotCell::new());
+        assert_eq!(cell.epoch(), 0);
+        assert!(cell.load().is_err(), "unpublished cell must error, not panic");
+        assert_eq!(cell.publish(ProjectionSnapshot::capture(&st, 0).unwrap()), 1);
+        assert_eq!(cell.publish(ProjectionSnapshot::capture(&st, 0).unwrap()), 2);
+        assert_eq!(cell.epoch(), 2);
+        let mut scratch = ProjectScratch::new();
+        let before = cell.reads();
+        cell.load_cached(&mut scratch).unwrap();
+        cell.load_cached(&mut scratch).unwrap(); // cached hit
+        assert_eq!(cell.reads(), before + 2);
+        assert_eq!(scratch.cached_epoch(), 2);
+        let snap = cell.load().unwrap();
+        assert_eq!(snap.epoch(), 2);
+        assert!(snap.project(x.row(0), 3).is_ok());
+        cell.mark_closed();
+        assert!(cell.load().is_err());
+        assert!(cell.load_cached(&mut scratch).is_err());
+    }
+
+    #[test]
+    fn scratch_cache_is_keyed_by_cell_identity() {
+        // Two streams whose cells happen to share an epoch: a scratch
+        // bouncing between them must never serve one stream's snapshot
+        // for the other.
+        let kernel: Arc<dyn Kernel> = Arc::new(Rbf { sigma: 1.0 });
+        let (st_a, _) = streamed_state(kernel.clone(), 12, 6, false);
+        let (st_b, _) = streamed_state(kernel, 16, 6, false);
+        let cell_a = Arc::new(SnapshotCell::new());
+        let cell_b = Arc::new(SnapshotCell::new());
+        cell_a.publish(ProjectionSnapshot::capture(&st_a, 0).unwrap());
+        cell_b.publish(ProjectionSnapshot::capture(&st_b, 0).unwrap());
+        assert_eq!(cell_a.epoch(), cell_b.epoch());
+        let mut scratch = ProjectScratch::new();
+        assert_eq!(cell_a.load_cached(&mut scratch).unwrap().m(), 12);
+        assert_eq!(cell_b.load_cached(&mut scratch).unwrap().m(), 16);
+        assert_eq!(cell_a.load_cached(&mut scratch).unwrap().m(), 12);
+    }
+
+    #[test]
+    fn malformed_queries_error_without_panicking() {
+        let kernel: Arc<dyn Kernel> = Arc::new(Rbf { sigma: 1.0 });
+        let (st, _) = streamed_state(kernel, 12, 6, true);
+        let snap_raw = ProjectionSnapshot::capture(&st, 0).unwrap();
+        let cell = Arc::new(SnapshotCell::new());
+        cell.publish(snap_raw);
+        let snap = cell.load().unwrap();
+        assert!(snap.project(&vec![0.0; st.dim() + 1], 3).is_err());
+        let mut scratch = ProjectScratch::new();
+        let mut out = Vec::new();
+        assert!(snap
+            .project_many_into(&vec![0.0; st.dim() * 2 + 1], 3, &mut scratch, &mut out)
+            .is_err());
+        // Empty batch is fine: zero rows, empty output.
+        assert_eq!(snap.project_many_into(&[], 3, &mut scratch, &mut out).unwrap(), 0);
+        assert!(out.is_empty());
+    }
+}

@@ -321,6 +321,24 @@ impl<'k> IncrementalKpca<'k> {
         Mat::from_vec(self.m, self.dim, self.x.clone())
     }
 
+    /// The retained data as a borrowed flat `m × dim` row-major slice —
+    /// the no-copy form the projection-snapshot capture and the blocked
+    /// kernel helpers consume.
+    pub fn data_flat(&self) -> &[f64] {
+        &self.x[..self.m * self.dim]
+    }
+
+    /// The shared kernel handle, when this state owns its kernel
+    /// through an `Arc` (`from_batch_shared` — every coordinator
+    /// stream). Borrowed-kernel states return `None`: a snapshot cannot
+    /// outlive a borrow.
+    pub fn kernel_arc(&self) -> Option<Arc<dyn Kernel>> {
+        match &self.kernel {
+            KernelHandle::Shared(k) => Some(k.clone()),
+            KernelHandle::Borrowed(_) => None,
+        }
+    }
+
     /// Row `i` of the retained data.
     pub fn row(&self, i: usize) -> &[f64] {
         &self.x[i * self.dim..(i + 1) * self.dim]

@@ -35,7 +35,15 @@
 //!   queue contention stay per shard; each shard shares one rotation
 //!   engine (and one PJRT runtime) across its streams, and the pool
 //!   rolls per-stream metrics up into a
-//!   [`coordinator::PoolSnapshot`]. The historical single-stream
+//!   [`coordinator::PoolSnapshot`]. Reads take a *lock-free* path:
+//!   each worker publishes an immutable
+//!   [`coordinator::ProjectionSnapshot`] per stream through an
+//!   epoch-swapped [`coordinator::SnapshotCell`], and
+//!   `project_snapshot`/`project_many` serve projections (the b×m
+//!   kernel block + one GEMM against the snapshot basis, zero-alloc
+//!   with a per-reader [`coordinator::ProjectScratch`]) without
+//!   enqueueing a single shard command — read throughput scales with
+//!   reader cores, not shard count. The historical single-stream
 //!   [`coordinator::Coordinator`] survives as a thin wrapper over a
 //!   1-shard pool.
 //! - **Layer 2/1** — JAX model + Pallas kernels (build-time Python),

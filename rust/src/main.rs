@@ -16,6 +16,9 @@
 //!                                  through the feed, add k shards / retire k
 //!                                  shards live — streams migrate, handles
 //!                                  keep working, nothing restarts)
+//!                  `--publish-every <k>`  (snapshot publication cadence on
+//!                                  the sequential ingest path; reads are
+//!                                  served lock-free from published snapshots)
 
 use inkpca::coordinator::{
     Config, Coordinator, EngineConfig, EnginePolicy, KernelConfig, ShardPool,
@@ -103,6 +106,9 @@ fn serve(args: &[String]) -> Result<(), String> {
         drift_every: flag_value(args, "--drift-every")
             .and_then(|v| v.parse().ok())
             .unwrap_or(100),
+        publish_every: flag_value(args, "--publish-every")
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(64),
     };
     let mut ds = load(&dataset, n, 42)?;
     ds.standardize();
@@ -120,6 +126,7 @@ fn serve(args: &[String]) -> Result<(), String> {
         return serve_pool(cfg, ds, shards.max(1), streams.max(1), batch, grow, shrink);
     }
     println!("serving {} points of {dataset} (dim {dim}, batch {batch})…", ds.n());
+    let probe: Vec<f64> = ds.x.row(0).to_vec();
     let coord = Coordinator::spawn(cfg, dim);
     let accepted = if batch > 1 {
         let reply = coord.ingest_all(ds.x.as_slice(), dim, batch)?;
@@ -143,6 +150,16 @@ fn serve(args: &[String]) -> Result<(), String> {
     }
     println!("engine calls (native, pjrt): {:?}", snap.engine_calls);
     println!("{metrics}");
+    // Lock-free read demo: sync publishes the latest snapshot
+    // (read-your-writes), then the projection is served without
+    // touching the worker queue.
+    coord.sync()?;
+    let scores = coord.project_snapshot(&probe, 3)?;
+    println!(
+        "snapshot read (lock-free): top-{} scores {:?}",
+        scores.len(),
+        scores.iter().map(|v| (v * 1000.0).round() / 1000.0).collect::<Vec<_>>()
+    );
     coord.shutdown();
     Ok(())
 }
@@ -188,6 +205,15 @@ fn serve_pool(
     );
     let pool = ShardPool::spawn(pool_cfg);
     let router = pool.router();
+    // Handles are opened up front (they are cheap clones) so the
+    // snapshot-read demo below can reuse them after the producers join.
+    let handles: Vec<_> = (0..streams)
+        .map(|s| {
+            router
+                .open_stream(&format!("stream-{s}"), dim, stream_cfg.clone())
+                .expect("open stream")
+        })
+        .collect();
     let reshape = grow + shrink > 0;
     // Producers + (when resharding) the topology driver rendezvous at
     // the half-feed point.
@@ -196,11 +222,9 @@ fn serve_pool(
         for s in 0..streams {
             let r = router.clone();
             let ds = &ds;
-            let scfg = stream_cfg.clone();
+            let h = &handles[s];
             let barrier = &barrier;
             scope.spawn(move || {
-                let id = format!("stream-{s}");
-                let h = r.open_stream(&id, dim, scfg).expect("open stream");
                 if reshape {
                     // Gather this stream's round-robin share, feed the
                     // first half, hold while the topology changes, then
@@ -211,10 +235,10 @@ fn serve_pool(
                         .flat_map(|i| ds.x.row(i).iter().copied())
                         .collect();
                     let half = (mine.len() / dim / 2) * dim;
-                    r.ingest_all(&h, &mine[..half], dim, batch).expect("ingest_all");
+                    r.ingest_all(h, &mine[..half], dim, batch).expect("ingest_all");
                     barrier.wait();
                     barrier.wait();
-                    r.ingest_all(&h, &mine[half..], dim, batch).expect("ingest_all");
+                    r.ingest_all(h, &mine[half..], dim, batch).expect("ingest_all");
                 } else if batch > 1 {
                     // Gather this stream's round-robin share once, then
                     // ship it through the shared chunking loop.
@@ -222,11 +246,11 @@ fn serve_pool(
                         .step_by(streams)
                         .flat_map(|i| ds.x.row(i).iter().copied())
                         .collect();
-                    r.ingest_all(&h, &mine, dim, batch).expect("ingest_all");
+                    r.ingest_all(h, &mine, dim, batch).expect("ingest_all");
                 } else {
                     let mut i = s;
                     while i < ds.n() {
-                        r.ingest(&h, ds.x.row(i).to_vec()).expect("ingest");
+                        r.ingest(h, ds.x.row(i).to_vec()).expect("ingest");
                         i += streams;
                     }
                 }
@@ -250,6 +274,15 @@ fn serve_pool(
             barrier.wait();
         }
     });
+    // Lock-free read demo: every stream serves a projection straight
+    // from its published snapshot (sync first: read-your-writes). These
+    // reads never enqueue a shard command — they show up in the rollup
+    // as `snapshot_reads` while `worker_reads` stays flat.
+    let probe: Vec<f64> = ds.x.row(0).to_vec();
+    for h in &handles {
+        router.sync(h)?;
+        router.project_many(h, &probe, 3)?;
+    }
     let snap = router.pool_snapshot()?;
     println!("{snap}");
     for o in &snap.per_shard {
@@ -265,14 +298,18 @@ fn serve_pool(
     }
     for g in &snap.per_stream {
         println!(
-            "  {} @ shard {}: m={} ws={}B reallocs/update={:.4} rotation_gemms={} drift={}",
+            "  {} @ shard {}: m={} ws={}B reallocs/update={:.4} rotation_gemms={} drift={} snapshot(epoch={} reads={}/{} lag={})",
             g.stream,
             g.shard,
             g.m,
             g.ws_bytes_resident,
             g.reallocs_per_update,
             g.engine_gemms,
-            g.drift_frobenius.map(|d| format!("{d:.3e}")).unwrap_or_else(|| "–".into())
+            g.drift_frobenius.map(|d| format!("{d:.3e}")).unwrap_or_else(|| "–".into()),
+            g.snapshot_epoch,
+            g.snapshot_reads,
+            g.worker_reads,
+            g.points_since_publish
         );
     }
     pool.shutdown();

@@ -1,0 +1,263 @@
+//! Lock-free read-path integration tests: snapshot projections must
+//! match the worker's (read-your-writes after `sync`), must never
+//! enqueue a shard command (`worker_reads` flat while `snapshot_reads`
+//! grows — the acceptance signature), must stay zero-alloc in steady
+//! state through a reused [`ProjectScratch`], and must keep serving —
+//! with monotonically non-decreasing epochs — while the stream migrates
+//! and the pool reshards underneath the readers.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+use inkpca::coordinator::{
+    EngineConfig, KernelConfig, PoolConfig, ProjectScratch, ShardPool, StreamConfig,
+};
+use inkpca::data::synthetic::yeast_like;
+
+fn stream_cfg(sigma: f64, seed_points: usize) -> StreamConfig {
+    StreamConfig {
+        kernel: KernelConfig::Rbf { sigma },
+        mean_adjust: true,
+        seed_points,
+        ..StreamConfig::default()
+    }
+}
+
+fn pool_cfg(shards: usize) -> PoolConfig {
+    PoolConfig { shards, queue: 8, engine: EngineConfig::Native, ..PoolConfig::default() }
+}
+
+#[test]
+fn snapshot_projection_matches_worker_after_sync() {
+    // `sync` publishes before replying, so a snapshot read issued after
+    // `sync` returns sees exactly the worker's state: same basis, same
+    // centering sums, same signs — compare directly, no |abs| slack.
+    for mean_adjust in [false, true] {
+        let mut ds = yeast_like(30, 901);
+        ds.standardize();
+        let pool = ShardPool::spawn(pool_cfg(2));
+        let router = pool.router();
+        let cfg = StreamConfig { mean_adjust, ..stream_cfg(1.5, 6) };
+        let h = router.open_stream("s", ds.dim(), cfg).unwrap();
+        for i in 0..ds.n() {
+            router.ingest(&h, ds.x.row(i).to_vec()).unwrap();
+        }
+        router.sync(&h).unwrap();
+
+        let probes: Vec<Vec<f64>> =
+            (0..4).map(|i| ds.x.row(i * 5).to_vec()).collect();
+        let flat: Vec<f64> = probes.iter().flatten().copied().collect();
+        let batched = router.project_many(&h, &flat, 5).unwrap();
+        assert_eq!(batched.len(), probes.len() * 5);
+        for (b, probe) in probes.iter().enumerate() {
+            let want = router.project(&h, probe.clone(), 5).unwrap();
+            let snap = router.project_snapshot(&h, probe, 5).unwrap();
+            assert_eq!(want.len(), snap.len());
+            for (c, (w, s)) in want.iter().zip(&snap).enumerate() {
+                assert!(
+                    (w - s).abs() <= 1e-12,
+                    "adjust={mean_adjust} probe {b} comp {c}: worker {w} vs snapshot {s}"
+                );
+                let m = batched[b * 5 + c];
+                assert!(
+                    (w - m).abs() <= 1e-12,
+                    "adjust={mean_adjust} probe {b} comp {c}: worker {w} vs batched {m}"
+                );
+            }
+        }
+        pool.shutdown();
+    }
+}
+
+#[test]
+fn snapshot_reads_never_touch_the_worker() {
+    // The ISSUE acceptance signature: snapshot-path projections must
+    // not enqueue a shard command — `worker_reads` stays flat while
+    // `snapshot_reads` grows.
+    let mut ds = yeast_like(24, 902);
+    ds.standardize();
+    let pool = ShardPool::spawn(pool_cfg(2));
+    let router = pool.router();
+    let h = router.open_stream("reads", ds.dim(), stream_cfg(1.5, 6)).unwrap();
+    router.ingest_many(&h, ds.x.as_slice().to_vec()).unwrap();
+    router.sync(&h).unwrap();
+
+    let before = router.metrics(&h).unwrap();
+    assert_eq!(before.worker_reads, 0);
+    assert!(before.snapshot_epoch >= 1, "ingest_many + sync must have published");
+
+    let probe = ds.x.row(0).to_vec();
+    const READS: u64 = 40;
+    for i in 0..READS {
+        if i % 2 == 0 {
+            router.project_snapshot(&h, &probe, 3).unwrap();
+        } else {
+            router.project_many(&h, &probe, 3).unwrap();
+        }
+    }
+    let after = router.metrics(&h).unwrap();
+    assert_eq!(after.worker_reads, 0, "snapshot reads must not reach the worker");
+    assert_eq!(after.snapshot_reads, before.snapshot_reads + READS);
+    assert_eq!(after.snapshot_epoch, before.snapshot_epoch, "no ingest, no new publish");
+    assert_eq!(after.points_since_publish, 0, "sync captured everything");
+
+    // One worker-path read for contrast, then the pool rollup carries
+    // both counters.
+    router.project(&h, probe.clone(), 3).unwrap();
+    let snap = router.pool_snapshot().unwrap();
+    assert_eq!(snap.worker_reads, 1);
+    assert_eq!(snap.snapshot_reads, after.snapshot_reads);
+    let g = snap.per_stream.iter().find(|g| g.stream == "reads").unwrap();
+    assert_eq!(g.worker_reads, 1);
+    assert_eq!(g.snapshot_reads, after.snapshot_reads);
+    assert_eq!(g.snapshot_epoch, after.snapshot_epoch);
+
+    // Close folds the stream's read counters into the lifetime totals.
+    router.close_stream(&h).unwrap();
+    let closed = router.pool_snapshot().unwrap();
+    assert_eq!(closed.snapshot_reads, after.snapshot_reads);
+    assert_eq!(closed.worker_reads, 1);
+    pool.shutdown();
+}
+
+#[test]
+fn steady_state_snapshot_reads_are_zero_realloc() {
+    let mut ds = yeast_like(28, 903);
+    ds.standardize();
+    let pool = ShardPool::spawn(pool_cfg(1));
+    let router = pool.router();
+    let h = router.open_stream("warm", ds.dim(), stream_cfg(1.2, 6)).unwrap();
+    router.ingest_many(&h, ds.x.as_slice().to_vec()).unwrap();
+    router.sync(&h).unwrap();
+
+    let queries: Vec<f64> = ds.x.as_slice()[..8 * ds.dim()].to_vec();
+    let mut scratch = ProjectScratch::new();
+    let mut out = Vec::new();
+    // Warm-up sizes every buffer (kernel block, row norms, output).
+    router.project_many_into(&h, &queries, 4, &mut scratch, &mut out).unwrap();
+    let warm = scratch.reallocs();
+    for _ in 0..50 {
+        let r_eff = router.project_many_into(&h, &queries, 4, &mut scratch, &mut out).unwrap();
+        assert_eq!(r_eff, 4);
+    }
+    assert_eq!(
+        scratch.reallocs(),
+        warm,
+        "steady-state snapshot reads must not grow any buffer"
+    );
+    pool.shutdown();
+}
+
+#[test]
+fn reads_error_before_first_publish_and_after_close() {
+    let ds = yeast_like(12, 904);
+    let pool = ShardPool::spawn(pool_cfg(1));
+    let router = pool.router();
+    let h = router.open_stream("gate", ds.dim(), stream_cfg(1.0, 5)).unwrap();
+
+    // Still seeding: nothing published yet, reads fail fast.
+    for i in 0..4 {
+        router.ingest(&h, ds.x.row(i).to_vec()).unwrap();
+    }
+    assert_eq!(router.snapshot_epoch(&h), 0);
+    let err = router.project_snapshot(&h, ds.x.row(0), 2).unwrap_err();
+    assert!(err.contains("no snapshot"), "unexpected error: {err}");
+
+    // Seed completion publishes — the read path opens.
+    router.ingest(&h, ds.x.row(4).to_vec()).unwrap();
+    assert!(router.snapshot_epoch(&h) >= 1);
+    assert!(router.project_snapshot(&h, ds.x.row(0), 2).is_ok());
+
+    // Malformed queries error without panicking.
+    let bad = vec![0.0; ds.dim() + 1];
+    assert!(router.project_snapshot(&h, &bad, 2).is_err());
+    assert!(router.project_many(&h, &bad, 2).is_err());
+
+    // Close marks the cell: stale handles get the worker's own wording.
+    router.close_stream(&h).unwrap();
+    let err = router.project_snapshot(&h, ds.x.row(0), 2).unwrap_err();
+    assert!(err.contains("unknown or closed stream"), "unexpected error: {err}");
+    assert!(router.project_many(&h, ds.x.row(0), 2).is_err());
+    pool.shutdown();
+}
+
+#[test]
+fn concurrent_readers_survive_migration_and_reshard() {
+    // Readers hammer the snapshot path while the stream is manually
+    // migrated between shards, the pool grows by a shard (ring
+    // reshard + rebalance sweep), and a writer keeps batching points
+    // in. Invariants: once the first snapshot is published, every read
+    // succeeds, and the epoch observed by each reader never decreases
+    // (the cell travels with the entry across migrations).
+    let mut ds = yeast_like(60, 905);
+    ds.standardize();
+    let dim = ds.dim();
+    let pool = ShardPool::spawn(pool_cfg(2));
+    let router = pool.router();
+    let h = router.open_stream("moving", dim, stream_cfg(1.5, 6)).unwrap();
+    // Seed + publish before the readers start.
+    router.ingest_many(&h, ds.x.as_slice()[..10 * dim].to_vec()).unwrap();
+    router.sync(&h).unwrap();
+    assert!(router.snapshot_epoch(&h) >= 1);
+
+    let stop = AtomicBool::new(false);
+    let probe: Vec<f64> = ds.x.row(0).to_vec();
+    std::thread::scope(|scope| {
+        let mut readers = Vec::new();
+        for _ in 0..4 {
+            let r = router.clone();
+            let hc = h.clone();
+            let stop = &stop;
+            let probe = &probe;
+            readers.push(scope.spawn(move || {
+                let mut scratch = ProjectScratch::new();
+                let mut out = Vec::new();
+                let mut last_epoch = 0u64;
+                let mut reads = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    let e = r.snapshot_epoch(&hc);
+                    assert!(e >= last_epoch, "epoch went backwards: {last_epoch} -> {e}");
+                    last_epoch = e;
+                    r.project_many_into(&hc, probe, 3, &mut scratch, &mut out)
+                        .unwrap_or_else(|err| panic!("read failed mid-reshard: {err}"));
+                    reads += 1;
+                }
+                reads
+            }));
+        }
+
+        // Writer + topology churn on the main thread.
+        let mut next = 10;
+        let grown = router.add_shard().unwrap();
+        assert_eq!(grown, 2, "fresh pool of 2 grows into shard id 2");
+        let mut step = 0;
+        while next < ds.n() {
+            let end = (next + 5).min(ds.n());
+            router
+                .ingest_many(&h, ds.x.as_slice()[next * dim..end * dim].to_vec())
+                .unwrap();
+            // Cycle the stream over every worker; landing on its
+            // current shard is a documented no-op, the rest are real
+            // drain-barrier migrations under the readers.
+            router.migrate_stream(&h, step % router.shards()).unwrap();
+            step += 1;
+            next = end;
+        }
+        router.rebalance().unwrap();
+        router.sync(&h).unwrap();
+        stop.store(true, Ordering::Relaxed);
+        let total: u64 = readers.into_iter().map(|j| j.join().unwrap()).sum();
+        assert!(total > 0, "readers never got a read in");
+    });
+
+    // After the dust settles the snapshot still matches the worker.
+    router.sync(&h).unwrap();
+    let want = router.project(&h, probe.clone(), 3).unwrap();
+    let got = router.project_snapshot(&h, &probe, 3).unwrap();
+    for (w, g) in want.iter().zip(&got) {
+        assert!((w - g).abs() <= 1e-12, "post-reshard: worker {w} vs snapshot {g}");
+    }
+    let snap = router.pool_snapshot().unwrap();
+    assert!(snap.migrations > 0, "the stream should actually have moved");
+    assert!(snap.snapshot_reads > 0);
+    pool.shutdown();
+}
