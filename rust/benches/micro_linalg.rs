@@ -2,9 +2,14 @@
 //! symmetric eigensolver, the secular root finder and the rank-one
 //! update in both forms — the allocating compatibility path vs the
 //! zero-allocation workspace path — at sizes up to m=512. Emits
-//! `BENCH_rankone.json` so the perf trajectory is recorded run-over-run.
+//! `BENCH_rankone.json` plus `BENCH_micro_linalg.json` (packed vs
+//! unpacked GEMM at the hot-path shapes) so the perf trajectory is
+//! recorded run-over-run.
 
-use inkpca::linalg::{eigh, matmul, Mat};
+use inkpca::linalg::{
+    eigh, matmul, matmul_into_buf, matmul_into_unpacked, matmul_nt_into_buf,
+    matmul_nt_into_unpacked, Mat, PackBuffers,
+};
 use inkpca::rankone::{
     rank_one_update, rank_one_update_ws, EigenBasis, NativeRotate, UpdateWorkspace,
 };
@@ -12,9 +17,13 @@ use inkpca::secular::solve_all;
 use inkpca::util::bench::Bench;
 use inkpca::util::Rng;
 
-fn rand_mat(n: usize, seed: u64) -> Mat {
+fn rand_rect(rows: usize, cols: usize, seed: u64) -> Mat {
     let mut rng = Rng::new(seed);
-    Mat::from_fn(n, n, |_, _| rng.range(-1.0, 1.0))
+    Mat::from_fn(rows, cols, |_, _| rng.range(-1.0, 1.0))
+}
+
+fn rand_mat(n: usize, seed: u64) -> Mat {
+    rand_rect(n, n, seed)
 }
 
 fn rand_sym(n: usize, seed: u64) -> Mat {
@@ -119,5 +128,75 @@ fn main() {
         eprintln!("warning: could not write BENCH_rankone.json: {e}");
     } else {
         println!("wrote BENCH_rankone.json");
+    }
+
+    // Packed vs unpacked GEMM at the three hot-path product shapes: the
+    // blocked-flush back-rotation (m×r · r×r), the snapshot projection
+    // (b×m · m×r, b = one read batch), and kernel-block rows
+    // (b×dim · (m×dim)ᵀ via the NT variant). Acceptance: packed ≥1.5×
+    // unpacked at m ≥ 512; the series lands in BENCH_micro_linalg.json
+    // under the bench_compare gate.
+    let mut ml = Bench::new();
+    for m in [128usize, 512, 2048] {
+        let r = m.min(256);
+        let batch = 64usize;
+        let dim = 64usize;
+        let mut bufs = PackBuffers::new();
+        bufs.reserve(m, r, r);
+        bufs.reserve(batch, m, r);
+        bufs.reserve(batch, dim, m);
+
+        let a = rand_rect(m, r, 11);
+        let w = rand_rect(r, r, 12);
+        let mut c = Mat::zeros(m, r);
+        let pk_f = ml.case(&format!("gemm_flush/packed/m{m}"), || {
+            let mut cv = c.view_mut();
+            matmul_into_buf(a.view(), w.view(), &mut cv, &mut bufs);
+            c[(0, 0)]
+        });
+        let un_f = ml.case(&format!("gemm_flush/unpacked/m{m}"), || {
+            let mut cv = c.view_mut();
+            matmul_into_unpacked(a.view(), w.view(), &mut cv);
+            c[(0, 0)]
+        });
+        println!("  flush m={m}: packed speedup {:.2}x", un_f.median_ns / pk_f.median_ns);
+
+        let blk = rand_rect(batch, m, 13);
+        let basis = rand_rect(m, r, 14);
+        let mut proj = Mat::zeros(batch, r);
+        let pk_p = ml.case(&format!("gemm_project/packed/m{m}"), || {
+            let mut pv = proj.view_mut();
+            matmul_into_buf(blk.view(), basis.view(), &mut pv, &mut bufs);
+            proj[(0, 0)]
+        });
+        let un_p = ml.case(&format!("gemm_project/unpacked/m{m}"), || {
+            let mut pv = proj.view_mut();
+            matmul_into_unpacked(blk.view(), basis.view(), &mut pv);
+            proj[(0, 0)]
+        });
+        println!("  project m={m}: packed speedup {:.2}x", un_p.median_ns / pk_p.median_ns);
+
+        let yb = rand_rect(batch, dim, 15);
+        let xs = rand_rect(m, dim, 16);
+        let mut krows = Mat::zeros(batch, m);
+        let pk_k = ml.case(&format!("gemm_krows/packed/m{m}"), || {
+            let mut kv = krows.view_mut();
+            matmul_nt_into_buf(yb.view(), xs.view(), &mut kv, &mut bufs);
+            krows[(0, 0)]
+        });
+        let un_k = ml.case(&format!("gemm_krows/unpacked/m{m}"), || {
+            let mut kv = krows.view_mut();
+            matmul_nt_into_unpacked(yb.view(), xs.view(), &mut kv);
+            krows[(0, 0)]
+        });
+        println!("  krows m={m}: packed speedup {:.2}x", un_k.median_ns / pk_k.median_ns);
+
+        assert_eq!(bufs.reallocs(), 0, "reserved pack buffers must stay allocation-free");
+    }
+    ml.finish();
+    if let Err(e) = ml.write_json("BENCH_micro_linalg.json") {
+        eprintln!("warning: could not write BENCH_micro_linalg.json: {e}");
+    } else {
+        println!("wrote BENCH_micro_linalg.json");
     }
 }

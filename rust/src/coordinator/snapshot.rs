@@ -42,7 +42,7 @@ use std::sync::{Arc, RwLock};
 
 use crate::kernels::{kernel_rows_into, Kernel, KernelBlockScratch};
 use crate::kpca::IncrementalKpca;
-use crate::linalg::{matmul_into, MatView, MatViewMut};
+use crate::linalg::{matmul_into_buf, MatView, MatViewMut};
 use crate::rankone::ensure_f64;
 
 /// Immutable point-in-time copy of everything a projection needs,
@@ -202,7 +202,7 @@ impl ProjectionSnapshot {
         let block = MatView::of_rows(&scratch.block, b, self.m);
         let basis = MatView::new(&self.basis, self.m, r_eff, self.r);
         let mut out_view = MatViewMut::new(out, b, r_eff, r_eff);
-        matmul_into(block, basis, &mut out_view);
+        matmul_into_buf(block, basis, &mut out_view, &mut scratch.pack);
         // Fold centering + 1/√λ scaling into one per-entry pass. The
         // centered column is k_y + (Σ/m² − mean(k_y))·𝟙 − K𝟙/m, so its
         // dot with u is the raw GEMM entry plus the captured
@@ -409,6 +409,8 @@ pub struct ProjectScratch {
     block: Vec<f64>,
     /// Row-norm scratch of the blocked kernel evaluation.
     kernel: KernelBlockScratch,
+    /// Packing panels of the `block · basis` projection GEMM.
+    pack: crate::linalg::PackBuffers,
     /// Growth events on the caller-owned `out` buffer.
     out_reallocs: u64,
 }
@@ -418,26 +420,34 @@ impl ProjectScratch {
         ProjectScratch::default()
     }
 
-    /// Pre-size for batches of up to `b` queries against an `m`-point
-    /// snapshot (growths here don't count toward [`Self::reallocs`]).
-    pub fn reserve(&mut self, m: usize, b: usize) {
+    /// Pre-size for batches of up to `b` queries of `dim`-dimensional
+    /// points against an `m`-point snapshot (growths here don't count
+    /// toward [`Self::reallocs`]). `dim` sizes the packing panels of
+    /// the kernel-block GEMM.
+    pub fn reserve(&mut self, m: usize, b: usize, dim: usize) {
         if self.block.capacity() < m * b {
             self.block.reserve(m * b - self.block.len());
         }
-        self.kernel.reserve(m, b);
+        self.kernel.reserve(m, b, dim);
+        // Projection GEMM: the b×m kernel block against the m×r basis
+        // prefix (r ≤ m).
+        self.pack.reserve(b, m, m);
     }
 
     /// Buffer-growth events since construction across the kernel block,
-    /// the row-norm scratch and the caller's `out` buffers — zero once
-    /// warm (the zero-alloc gauge of the read path).
+    /// the row-norm scratch, the GEMM packing panels and the caller's
+    /// `out` buffers — zero once warm (the zero-alloc gauge of the read
+    /// path).
     pub fn reallocs(&self) -> u64 {
-        self.kernel.reallocs() + self.out_reallocs
+        self.kernel.reallocs() + self.pack.reallocs() + self.out_reallocs
     }
 
     /// Bytes resident in the scratch buffers (cached snapshot excluded
     /// — it is shared, not per-reader).
     pub fn bytes_resident(&self) -> usize {
-        std::mem::size_of::<f64>() * self.block.capacity() + self.kernel.bytes_resident()
+        std::mem::size_of::<f64>() * self.block.capacity()
+            + self.kernel.bytes_resident()
+            + self.pack.bytes_resident()
     }
 
     /// Epoch of the cached snapshot (0 = nothing cached).

@@ -5,7 +5,7 @@
 //! constant-diagonal case (`k(x,x) = 1`) the paper's Algorithm 1 note
 //! discusses.
 
-use crate::linalg::{matmul_nt_into, Mat, MatView, MatViewMut};
+use crate::linalg::{matmul_nt_into_buf, Mat, MatView, MatViewMut};
 use crate::util::par;
 
 /// How a kernel's Gram blocks decompose over a dot-product GEMM — the
@@ -300,14 +300,17 @@ pub fn kernel_column_into(
 }
 
 /// Reusable scratch for [`kernel_rows_into`]: the row-norm vectors the
-/// squared-distance trick needs, with a realloc counter so the batched
-/// ingest path can assert steady-state allocation silence.
+/// squared-distance trick needs plus the GEMM packing panels of the
+/// `Y·Xᵀ` block product, with a realloc counter so the batched ingest
+/// path can assert steady-state allocation silence.
 #[derive(Clone, Debug, Default)]
 pub struct KernelBlockScratch {
     /// `‖xⱼ‖²` over the retained rows.
     xnorms: Vec<f64>,
     /// `‖yᵢ‖²` over the batch rows.
     ynorms: Vec<f64>,
+    /// Packing panels of the blocked `Y·Xᵀ` kernel-rows GEMM.
+    pack: crate::linalg::PackBuffers,
     reallocs: u64,
 }
 
@@ -316,25 +319,33 @@ impl KernelBlockScratch {
         KernelBlockScratch::default()
     }
 
-    /// Capacity-growth events since construction (zero once warm).
+    /// Capacity-growth events since construction, including pack-panel
+    /// growth (zero once warm).
     pub fn reallocs(&self) -> u64 {
-        self.reallocs
+        self.reallocs + self.pack.reallocs()
     }
 
-    /// Bytes currently held by the row-norm buffers.
+    /// Bytes currently held by the row-norm and packing buffers.
     pub fn bytes_resident(&self) -> usize {
         std::mem::size_of::<f64>() * (self.xnorms.capacity() + self.ynorms.capacity())
+            + self.pack.bytes_resident()
     }
 
-    /// Pre-size for blocks of up to `m` retained × `b` batch rows
-    /// without counting toward the realloc counter.
-    pub fn reserve(&mut self, m: usize, b: usize) {
+    /// Pre-size for blocks of up to `m` retained × `b` batch rows of
+    /// `dim`-dimensional points, without counting toward the realloc
+    /// counter. `dim` sizes the packing panels of the `b×dim · dim×m`
+    /// block GEMM (callers that only ever take the scalar path may pass
+    /// 0).
+    pub fn reserve(&mut self, m: usize, b: usize, dim: usize) {
         if self.xnorms.capacity() < m {
             self.xnorms.reserve(m - self.xnorms.len());
         }
         if self.ynorms.capacity() < b {
             self.ynorms.reserve(b - self.ynorms.len());
         }
+        // The batch block is b×m; seeding paths also evaluate the m×m
+        // self-block through the same scratch.
+        self.pack.reserve(m.max(b), dim, m.max(b));
     }
 }
 
@@ -348,7 +359,7 @@ use crate::rankone::ensure_f64;
 /// first `m` rows of `x` — the batched form of [`kernel_column_into`].
 ///
 /// For dot-product-family kernels ([`BlockForm::DotProduct`]) the whole
-/// block is one blocked `Y·Xᵀ` GEMM ([`matmul_nt_into`]) followed by an
+/// block is one blocked `Y·Xᵀ` GEMM ([`matmul_nt_into_buf`]) followed by an
 /// entry-wise map; the RBF family ([`BlockForm::SquaredDistance`])
 /// additionally forms the two row-norm vectors and evaluates
 /// `‖y‖² − 2⟨y,x⟩ + ‖x‖²` per entry (clamped at zero against rounding).
@@ -393,12 +404,13 @@ pub fn kernel_rows_into(
         }
         return;
     }
-    // One blocked GEMM: out[i,j] = ⟨yᵢ, xⱼ⟩.
+    // One blocked GEMM: out[i,j] = ⟨yᵢ, xⱼ⟩, packed into the scratch's
+    // reusable panels.
     {
         let yv = MatView::of_rows(ys, b, dim);
         let xv = MatView::of_rows(x, m, dim);
         let mut ov = MatViewMut::new(out, b, m, m);
-        matmul_nt_into(yv, xv, &mut ov);
+        matmul_nt_into_buf(yv, xv, &mut ov, &mut scratch.pack);
     }
     match form {
         BlockForm::DotProduct => {

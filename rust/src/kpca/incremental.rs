@@ -650,7 +650,7 @@ impl<'k> IncrementalKpca<'k> {
         if s.batch_idx.capacity() < b {
             s.batch_idx.reserve(b - s.batch_idx.len());
         }
-        s.kb.reserve(m, b);
+        s.kb.reserve(m, b, self.dim);
     }
 
     /// The retained examples as a flat row-major slice (`m × dim`) —

@@ -1,29 +1,269 @@
-//! Blocked, cache-aware, parallel matrix multiplication and the small
+//! Packed, cache-blocked, parallel matrix multiplication and the small
 //! BLAS-2 kernels the rest of the crate needs — all expressed over
 //! [`MatView`]/[`MatViewMut`] so the streaming hot path can run into
-//! caller-owned buffers without allocating. The allocating entry points
-//! (`matmul`, `gemv`, …) are thin wrappers and accept anything
-//! convertible to a view (`&Mat`, `MatView`, `&rankone::EigenBasis`).
-//! The same products can also be routed to an AOT PJRT executable via
-//! `runtime`/`coordinator::router`.
+//! caller-owned buffers without allocating.
+//!
+//! All three GEMM orientations (`matmul_into`, `matmul_nt_into`,
+//! `matmul_tn_into`) route through one packed path: operands are
+//! copied per depth block into tile-ordered panels ([`pack`]) and the
+//! product bottoms out in the single fixed-shape `MR × NR`
+//! microkernel. The packer absorbs transposes, which is what makes
+//! the `NT`/`TN` variants free. The `_buf` forms take a caller-owned
+//! [`PackBuffers`] so streaming steady state packs into pre-reserved
+//! scratch; the plain forms fall back to a thread-local pack buffer.
+//! The legacy unpacked kernels survive as `*_unpacked` — they are the
+//! baseline the `micro_linalg` packed-vs-unpacked series measures
+//! against (EXPERIMENTS.md §Perf).
+//!
+//! The allocating entry points (`matmul`, `gemv`, …) are thin wrappers
+//! and accept anything convertible to a view (`&Mat`, `MatView`,
+//! `&rankone::EigenBasis`). The same products can also be routed to an
+//! AOT PJRT executable via `runtime`/`coordinator::router`.
+
+use std::cell::RefCell;
 
 use super::matrix::Mat;
+use super::pack::{self, PackBuffers, Src, KC, MC, MR, NC, NR};
 use super::view::{MatView, MatViewMut};
 use crate::util::par;
 
-/// Row-panel height used by the blocked kernel. Chosen so that an
-/// `MC × KC` panel of `a` plus a `KC × cols` strip of `b` stay in L2.
-const MC: usize = 64;
-/// Depth blocking factor.
-const KC: usize = 256;
 /// Parallelism threshold: below this many flops, threads cost more than
 /// they save.
 const PAR_FLOPS: usize = 1 << 20;
 
-/// `C = A · B` into a caller-owned view (zeroed first). The blocked,
-/// register-tiled kernel runs in parallel over `MC`-row panels of `C`
-/// when the flop count warrants it; all three operands may be strided.
+/// Row-panel height of the legacy unpacked kernel (kept only as the
+/// measured baseline for the packed path).
+const UNPACKED_MC: usize = 64;
+/// Depth blocking factor of the legacy unpacked kernel.
+const UNPACKED_KC: usize = 256;
+
+thread_local! {
+    /// Fallback pack scratch for the plain (non-`_buf`) entry points.
+    /// One per thread: reused across calls, so even the allocating
+    /// call sites stop paying per-call pack growth after the first
+    /// product at a given shape.
+    static TL_PACK: RefCell<PackBuffers> = RefCell::new(PackBuffers::new());
+}
+
+/// Run `f` with the thread-local pack scratch. If the scratch is
+/// already borrowed (a re-entrant matmul from inside a parallel
+/// worker's closure), fall back to a fresh local buffer rather than
+/// panicking — correctness first, reuse when possible.
+fn with_tl_pack<R>(f: impl FnOnce(&mut PackBuffers) -> R) -> R {
+    TL_PACK.with(|cell| match cell.try_borrow_mut() {
+        Ok(mut bufs) => f(&mut bufs),
+        Err(_) => f(&mut PackBuffers::new()),
+    })
+}
+
+/// The one packed GEMM driver: `C = op(A) · op(B)` where the `Src`
+/// orientation of each operand is absorbed by the packers. `m/k/n` are
+/// the *logical* product dimensions (after any transpose). The output
+/// window is zeroed first; gap columns and capacity rows of a wider
+/// backing buffer are never touched.
+///
+/// Loop nest (BLIS order): `j0` over `NC`-wide column slices, `kk`
+/// over `KC`-deep depth blocks — pack `B` once per `(j0, kk)` and `A`
+/// once per `kk` — then row blocks of `C` run the microkernel over the
+/// shared packed panels. When the flop count warrants it the row
+/// blocks run in parallel: the packing stays serial and single-copy,
+/// each worker consumes its own `MC`-row slice of the packed `A` (per
+/// -thread A panels over shared packed `B`), so no worker ever
+/// allocates (the per-call scoped threads in `util::par` would turn
+/// per-worker pack buffers into per-call reallocs).
+fn gemm_packed(
+    a: Src<'_>,
+    b: Src<'_>,
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut MatViewMut<'_>,
+    bufs: &mut PackBuffers,
+) {
+    out.fill_zero();
+    if m == 0 || k == 0 || n == 0 {
+        return;
+    }
+    let sc = out.stride();
+    let parallel = 2 * m * k * n >= PAR_FLOPS && par::num_threads() > 1;
+    for j0 in (0..n).step_by(NC) {
+        let nc = NC.min(n - j0);
+        for kk in (0..k).step_by(KC) {
+            let kc = KC.min(k - kk);
+            bufs.ensure(m, kc, nc);
+            pack::pack_b(b, kk, kc, j0, nc, &mut bufs.b);
+            pack::pack_a(a, 0, m, kk, kc, &mut bufs.a);
+            let (pa, pb) = (&bufs.a[..], &bufs.b[..]);
+            if parallel {
+                par::par_chunks_mut(out.raw_mut(), MC * sc, |blk, c_panel| {
+                    let i0 = blk * MC;
+                    if i0 >= m {
+                        return; // capacity rows beyond the viewed window
+                    }
+                    let i1 = (i0 + MC).min(m);
+                    block_rows(pa, pb, i0, i1, kc, nc, j0, c_panel, sc);
+                });
+            } else {
+                block_rows(pa, pb, 0, m, kc, nc, j0, out.raw_mut(), sc);
+            }
+        }
+    }
+}
+
+/// Accumulate rows `i0..i1` of `C` from the packed panels of one
+/// `(j0, kk)` block. `c_panel` starts at row `i0`; `i0` must be
+/// `MR`-aligned (guaranteed: parallel chunks start at multiples of
+/// `MC`, and `MC % MR == 0`). Panel order: `B` panels outer, `A`
+/// strips inner — one `kc × NR` B panel stays hot in L1 while the
+/// strips of the `MC`-row A block stream past it from L2.
+#[allow(clippy::too_many_arguments)]
+fn block_rows(
+    pa: &[f64],
+    pb: &[f64],
+    i0: usize,
+    i1: usize,
+    kc: usize,
+    nc: usize,
+    j0: usize,
+    c_panel: &mut [f64],
+    sc: usize,
+) {
+    debug_assert_eq!(i0 % MR, 0);
+    let panels = nc.div_ceil(NR);
+    let mut ib = i0;
+    while ib < i1 {
+        let ie = (ib + MC).min(i1);
+        for t in 0..panels {
+            let nv = NR.min(nc - t * NR);
+            let bpanel = &pb[t * NR * kc..(t + 1) * NR * kc];
+            let mut i = ib;
+            while i < ie {
+                let mv = MR.min(ie - i);
+                let astrip = &pa[(i / MR) * MR * kc..(i / MR + 1) * MR * kc];
+                let coff = (i - i0) * sc + j0 + t * NR;
+                pack::microkernel(kc, astrip, bpanel, &mut c_panel[coff..], sc, mv, nv);
+                i += MR;
+            }
+        }
+        ib = ie;
+    }
+}
+
+/// `C = A · B` into a caller-owned view (zeroed first), packing into
+/// caller-owned scratch — the zero-realloc form for the streaming hot
+/// path. All three operands may be strided.
+pub fn matmul_into_buf(
+    a: MatView<'_>,
+    b: MatView<'_>,
+    out: &mut MatViewMut<'_>,
+    bufs: &mut PackBuffers,
+) {
+    assert_eq!(a.cols(), b.rows(), "matmul shape mismatch");
+    assert_eq!(out.rows(), a.rows(), "matmul out rows mismatch");
+    assert_eq!(out.cols(), b.cols(), "matmul out cols mismatch");
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    let asrc = Src::Normal {
+        data: a.raw(),
+        stride: a.stride(),
+    };
+    let bsrc = Src::Normal {
+        data: b.raw(),
+        stride: b.stride(),
+    };
+    gemm_packed(asrc, bsrc, m, k, n, out, bufs);
+}
+
+/// `C = A · B` into a caller-owned view (zeroed first); packs into the
+/// thread-local scratch.
 pub fn matmul_into(a: MatView<'_>, b: MatView<'_>, out: &mut MatViewMut<'_>) {
+    with_tl_pack(|bufs| matmul_into_buf(a, b, out, bufs));
+}
+
+/// `C = A · B`.
+pub fn matmul<'a, 'b>(a: impl Into<MatView<'a>>, b: impl Into<MatView<'b>>) -> Mat {
+    let (a, b) = (a.into(), b.into());
+    assert_eq!(a.cols(), b.rows(), "matmul shape mismatch");
+    let mut c = Mat::zeros(a.rows(), b.cols());
+    let mut cv = c.view_mut();
+    matmul_into(a, b, &mut cv);
+    c
+}
+
+/// `C = A · Bᵀ` into caller-owned view and pack scratch — the packer
+/// walks `B` transposed (contiguous along each source row), so no
+/// transpose is ever materialized and the kernel is identical to the
+/// `NN` case.
+pub fn matmul_nt_into_buf(
+    a: MatView<'_>,
+    b: MatView<'_>,
+    out: &mut MatViewMut<'_>,
+    bufs: &mut PackBuffers,
+) {
+    assert_eq!(a.cols(), b.cols(), "matmul_nt shape mismatch");
+    assert_eq!(out.rows(), a.rows(), "matmul_nt out rows mismatch");
+    assert_eq!(out.cols(), b.rows(), "matmul_nt out cols mismatch");
+    let (m, k, n) = (a.rows(), a.cols(), b.rows());
+    let asrc = Src::Normal {
+        data: a.raw(),
+        stride: a.stride(),
+    };
+    let bsrc = Src::Trans {
+        data: b.raw(),
+        stride: b.stride(),
+    };
+    gemm_packed(asrc, bsrc, m, k, n, out, bufs);
+}
+
+/// `C = A · Bᵀ` into a caller-owned view; packs into the thread-local
+/// scratch.
+pub fn matmul_nt_into(a: MatView<'_>, b: MatView<'_>, out: &mut MatViewMut<'_>) {
+    with_tl_pack(|bufs| matmul_nt_into_buf(a, b, out, bufs));
+}
+
+/// `C = A · Bᵀ` without materializing the transpose.
+pub fn matmul_nt<'a, 'b>(a: impl Into<MatView<'a>>, b: impl Into<MatView<'b>>) -> Mat {
+    let (a, b) = (a.into(), b.into());
+    assert_eq!(a.cols(), b.cols(), "matmul_nt shape mismatch");
+    let mut c = Mat::zeros(a.rows(), b.rows());
+    let mut cv = c.view_mut();
+    matmul_nt_into(a, b, &mut cv);
+    c
+}
+
+/// `C = Aᵀ · B` into caller-owned view and pack scratch — the packer
+/// walks `A` transposed (contiguous along each source row), same
+/// kernel as the `NN` case.
+pub fn matmul_tn_into_buf(
+    a: MatView<'_>,
+    b: MatView<'_>,
+    out: &mut MatViewMut<'_>,
+    bufs: &mut PackBuffers,
+) {
+    assert_eq!(a.rows(), b.rows(), "matmul_tn shape mismatch");
+    assert_eq!(out.rows(), a.cols(), "matmul_tn out rows mismatch");
+    assert_eq!(out.cols(), b.cols(), "matmul_tn out cols mismatch");
+    let (m, k, n) = (a.cols(), a.rows(), b.cols());
+    let asrc = Src::Trans {
+        data: a.raw(),
+        stride: a.stride(),
+    };
+    let bsrc = Src::Normal {
+        data: b.raw(),
+        stride: b.stride(),
+    };
+    gemm_packed(asrc, bsrc, m, k, n, out, bufs);
+}
+
+/// `C = Aᵀ · B` into a caller-owned view; packs into the thread-local
+/// scratch.
+pub fn matmul_tn_into(a: MatView<'_>, b: MatView<'_>, out: &mut MatViewMut<'_>) {
+    with_tl_pack(|bufs| matmul_tn_into_buf(a, b, out, bufs));
+}
+
+/// `C = A · B` with the legacy unpacked kernel (strided source reads,
+/// 4-row register-blocked axpy). Benchmark baseline only — production
+/// call sites use the packed path.
+pub fn matmul_into_unpacked(a: MatView<'_>, b: MatView<'_>, out: &mut MatViewMut<'_>) {
     assert_eq!(a.cols(), b.rows(), "matmul shape mismatch");
     assert_eq!(out.rows(), a.rows(), "matmul out rows mismatch");
     assert_eq!(out.cols(), b.cols(), "matmul out cols mismatch");
@@ -37,40 +277,29 @@ pub fn matmul_into(a: MatView<'_>, b: MatView<'_>, out: &mut MatViewMut<'_>) {
     let b_data = b.raw();
     if 2 * m * k * n < PAR_FLOPS {
         let c_data = out.raw_mut();
-        for kk in (0..k).step_by(KC) {
-            let kend = (kk + KC).min(k);
+        for kk in (0..k).step_by(UNPACKED_KC) {
+            let kend = (kk + UNPACKED_KC).min(k);
             gemm_panel(a_data, sa, b_data, sb, c_data, sc, 0, m, n, kk, kend);
         }
     } else {
-        par::par_chunks_mut(out.raw_mut(), MC * sc, |blk, c_panel| {
-            let i0 = blk * MC;
+        par::par_chunks_mut(out.raw_mut(), UNPACKED_MC * sc, |blk, c_panel| {
+            let i0 = blk * UNPACKED_MC;
             if i0 >= m {
                 return; // capacity rows beyond the viewed window
             }
-            let i1 = (i0 + MC).min(m);
-            for kk in (0..k).step_by(KC) {
-                let kend = (kk + KC).min(k);
+            let i1 = (i0 + UNPACKED_MC).min(m);
+            for kk in (0..k).step_by(UNPACKED_KC) {
+                let kend = (kk + UNPACKED_KC).min(k);
                 gemm_panel(a_data, sa, b_data, sb, c_panel, sc, i0, i1, n, kk, kend);
             }
         });
     }
 }
 
-/// `C = A · B`.
-pub fn matmul<'a, 'b>(a: impl Into<MatView<'a>>, b: impl Into<MatView<'b>>) -> Mat {
-    let (a, b) = (a.into(), b.into());
-    assert_eq!(a.cols(), b.rows(), "matmul shape mismatch");
-    let mut c = Mat::zeros(a.rows(), b.cols());
-    let mut cv = c.view_mut();
-    matmul_into(a, b, &mut cv);
-    c
-}
-
-/// Inner kernel: accumulate rows `i0..i1` of `C` over the `kk..kend`
-/// depth slice, with 4-row register blocking — each `brow` load feeds
-/// four FMAs, quadrupling arithmetic intensity vs the plain axpy form
-/// (the win measured in EXPERIMENTS.md §Perf). `c_panel` starts at row
-/// `i0`; `sa`/`sb`/`sc` are the row strides of the three operands.
+/// Inner kernel of the legacy unpacked path: accumulate rows `i0..i1`
+/// of `C` over the `kk..kend` depth slice with 4-row register
+/// blocking — each `brow` load feeds four FMAs. `c_panel` starts at
+/// row `i0`; `sa`/`sb`/`sc` are the row strides of the three operands.
 #[allow(clippy::too_many_arguments)]
 #[inline]
 fn gemm_panel(
@@ -133,9 +362,9 @@ fn gemm_panel(
     }
 }
 
-/// `C = A · Bᵀ` into a caller-owned view — both row-major, so this is
-/// the dot-product-friendly orientation (no transpose materialized).
-pub fn matmul_nt_into(a: MatView<'_>, b: MatView<'_>, out: &mut MatViewMut<'_>) {
+/// `C = A · Bᵀ` with the legacy per-row dot-product kernel. Benchmark
+/// baseline only.
+pub fn matmul_nt_into_unpacked(a: MatView<'_>, b: MatView<'_>, out: &mut MatViewMut<'_>) {
     assert_eq!(a.cols(), b.cols(), "matmul_nt shape mismatch");
     assert_eq!(out.rows(), a.rows(), "matmul_nt out rows mismatch");
     assert_eq!(out.cols(), b.rows(), "matmul_nt out cols mismatch");
@@ -170,21 +399,9 @@ pub fn matmul_nt_into(a: MatView<'_>, b: MatView<'_>, out: &mut MatViewMut<'_>) 
     }
 }
 
-/// `C = A · Bᵀ` without materializing the transpose.
-pub fn matmul_nt<'a, 'b>(a: impl Into<MatView<'a>>, b: impl Into<MatView<'b>>) -> Mat {
-    let (a, b) = (a.into(), b.into());
-    assert_eq!(a.cols(), b.cols(), "matmul_nt shape mismatch");
-    let mut c = Mat::zeros(a.rows(), b.rows());
-    let mut cv = c.view_mut();
-    matmul_nt_into(a, b, &mut cv);
-    c
-}
-
-/// `C = Aᵀ · B` into a caller-owned view. Small problems accumulate
-/// rank-one outer products row by row (cache-friendly for row-major
-/// operands); above the flop threshold the accumulation parallelizes
-/// over disjoint output rows (each owning one strided column of `A`).
-pub fn matmul_tn_into(a: MatView<'_>, b: MatView<'_>, out: &mut MatViewMut<'_>) {
+/// `C = Aᵀ · B` with the legacy rank-one outer-product accumulation.
+/// Benchmark baseline only.
+pub fn matmul_tn_into_unpacked(a: MatView<'_>, b: MatView<'_>, out: &mut MatViewMut<'_>) {
     assert_eq!(a.rows(), b.rows(), "matmul_tn shape mismatch");
     assert_eq!(out.rows(), a.cols(), "matmul_tn out rows mismatch");
     assert_eq!(out.cols(), b.cols(), "matmul_tn out cols mismatch");
@@ -334,11 +551,98 @@ mod tests {
 
     #[test]
     fn matmul_matches_naive_blocked_sizes() {
-        // Exercise the KC blocking boundary and parallel path.
+        // Exercise the KC blocking boundary and parallel path. k > KC
+        // changes the per-element summation order (one partial sum per
+        // depth block), hence 1e-9 instead of the single-block 1e-12.
         let a = Mat::from_fn(70, 300, |i, j| ((i * 7 + j * 13) % 11) as f64 - 5.0);
         let b = Mat::from_fn(300, 65, |i, j| ((i * 3 + j * 17) % 13) as f64 * 0.25);
         let c = matmul(&a, &b);
         assert!(c.max_abs_diff(&naive(&a, &b)) < 1e-9);
+    }
+
+    #[test]
+    fn nt_tn_match_naive_across_kc_boundary() {
+        // Same k > KC shape through the transposed-operand packers.
+        let a = Mat::from_fn(70, 300, |i, j| ((i * 7 + j * 13) % 11) as f64 - 5.0);
+        let b = Mat::from_fn(300, 65, |i, j| ((i * 3 + j * 17) % 13) as f64 * 0.25);
+        let expect = naive(&a, &b);
+        let bt = b.transpose();
+        let mut c = Mat::zeros(70, 65);
+        {
+            let mut cv = c.view_mut();
+            matmul_nt_into(a.view(), bt.view(), &mut cv);
+        }
+        assert!(c.max_abs_diff(&expect) < 1e-9);
+        let at = a.transpose();
+        let mut c2 = Mat::zeros(70, 65);
+        {
+            let mut cv = c2.view_mut();
+            matmul_tn_into(at.view(), b.view(), &mut cv);
+        }
+        assert!(c2.max_abs_diff(&expect) < 1e-9);
+    }
+
+    #[test]
+    fn all_variants_match_naive_across_tail_shapes() {
+        // Every residue class mod the tile sizes for m and n, k across
+        // 0 and 1..MR·2+1 — all single-depth-block, so the packed path
+        // reproduces the naive summation order exactly (≤1e-12 is
+        // conservative; it is essentially bitwise).
+        let ms = [1usize, 2, 3, 4, 5, 6, 7, 8, 9, 13];
+        let ns = [1usize, 2, 3, 4, 5, 6, 7, 8, 9, 15, 16, 17];
+        let ks = [0usize, 1, 2, 3, 5, 7, 8, 9];
+        for &m in &ms {
+            for &n in &ns {
+                for &k in &ks {
+                    let a = Mat::from_fn(m, k, |i, j| ((i * 31 + j * 17) % 23) as f64 * 0.25 - 2.0);
+                    let b = Mat::from_fn(k, n, |i, j| ((i * 13 + j * 7) % 19) as f64 * 0.5 - 4.0);
+                    let expect = naive(&a, &b);
+                    let c = matmul(&a, &b);
+                    assert!(c.max_abs_diff(&expect) < 1e-12, "NN m={m} n={n} k={k}");
+                    let bt = b.transpose();
+                    let mut cnt = Mat::zeros(m, n);
+                    {
+                        let mut cv = cnt.view_mut();
+                        matmul_nt_into(a.view(), bt.view(), &mut cv);
+                    }
+                    assert!(cnt.max_abs_diff(&expect) < 1e-12, "NT m={m} n={n} k={k}");
+                    let at = a.transpose();
+                    let mut ctn = Mat::zeros(m, n);
+                    {
+                        let mut cv = ctn.view_mut();
+                        matmul_tn_into(at.view(), b.view(), &mut cv);
+                    }
+                    assert!(ctn.max_abs_diff(&expect) < 1e-12, "TN m={m} n={n} k={k}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn degenerate_shapes_zero_the_window() {
+        // n = 0 and k = 0 through every variant: output window must be
+        // all zeros (k = 0 is an empty sum, n = 0 an empty window).
+        let a = Mat::from_fn(4, 0, |_, _| f64::NAN);
+        let b = Mat::from_fn(0, 3, |_, _| f64::NAN);
+        let c = matmul(&a, &b);
+        assert_eq!((c.rows(), c.cols()), (4, 3));
+        assert!(c.as_slice().iter().all(|&v| v == 0.0));
+        let a2 = Mat::from_fn(4, 5, |i, j| (i + j) as f64);
+        let b2 = Mat::zeros(0, 5); // b2ᵀ is 5×0 → n = 0
+        let mut cnt = Mat::zeros(4, 0);
+        {
+            let mut cv = cnt.view_mut();
+            matmul_nt_into(a2.view(), b2.view(), &mut cv);
+        }
+        assert_eq!((cnt.rows(), cnt.cols()), (4, 0));
+        let a3 = Mat::zeros(0, 4); // a3ᵀ is 4×0 → k = 0
+        let b3 = Mat::zeros(0, 3);
+        let mut ctn = Mat::zeros(4, 3);
+        {
+            let mut cv = ctn.view_mut();
+            matmul_tn_into(a3.view(), b3.view(), &mut cv);
+        }
+        assert!(ctn.as_slice().iter().all(|&v| v == 0.0));
     }
 
     #[test]
@@ -359,8 +663,55 @@ mod tests {
                 assert!((buf[i * stride + j] - expect[(i, j)]).abs() < 1e-12);
             }
         }
-        // Gap columns untouched.
+        // Gap columns and capacity rows untouched.
         assert!(buf[5].is_nan());
+        assert!(buf[9 * stride].is_nan());
+    }
+
+    #[test]
+    fn nt_tn_strided_views_and_capacity_rows_match() {
+        // Operands are windows of wider buffers, outputs have both gap
+        // columns and capacity rows — the layouts the workspace and
+        // snapshot scratch actually use.
+        let full_a = Mat::from_fn(7, 11, |i, j| ((i * 9 + j) % 13) as f64 * 0.3 - 1.0);
+        let full_b = Mat::from_fn(9, 11, |i, j| ((i * 4 + j * 5) % 17) as f64 * 0.2);
+        let av = MatView::new(full_a.as_slice(), 7, 6, 11); // 7×6 window
+        let a_win = av.to_mat();
+        // NT: B window 5×6 viewed out of 9×11 backing → C is 7×5.
+        let bv = MatView::new(full_b.as_slice(), 5, 6, 11);
+        let b_win = bv.to_mat();
+        let stride = 9;
+        let mut buf = vec![f64::NAN; 10 * stride];
+        {
+            let mut out = MatViewMut::new(&mut buf, 7, 5, stride);
+            matmul_nt_into(av, bv, &mut out);
+        }
+        let expect = naive(&a_win, &b_win.transpose());
+        for i in 0..7 {
+            for j in 0..5 {
+                assert!((buf[i * stride + j] - expect[(i, j)]).abs() < 1e-12, "NT ({i},{j})");
+            }
+        }
+        assert!(buf[5].is_nan(), "NT gap column clobbered");
+        assert!(buf[7 * stride].is_nan(), "NT capacity row clobbered");
+        // TN: A window read transposed (6×7 logical), B window 7×8 out
+        // of the 9×11 backing → C is 6×8.
+        let bv2 = MatView::new(full_b.as_slice(), 7, 8, 11);
+        let b2_win = bv2.to_mat();
+        let av2 = MatView::new(full_a.as_slice(), 7, 6, 11);
+        let mut buf2 = vec![f64::NAN; 8 * stride];
+        {
+            let mut out = MatViewMut::new(&mut buf2, 6, 8, stride);
+            matmul_tn_into(av2, bv2, &mut out);
+        }
+        let expect2 = naive(&a_win.transpose(), &b2_win);
+        for i in 0..6 {
+            for j in 0..8 {
+                assert!((buf2[i * stride + j] - expect2[(i, j)]).abs() < 1e-12, "TN ({i},{j})");
+            }
+        }
+        assert!(buf2[8].is_nan(), "TN gap column clobbered");
+        assert!(buf2[6 * stride].is_nan(), "TN capacity row clobbered");
     }
 
     #[test]
@@ -374,6 +725,84 @@ mod tests {
         let a_win = av.to_mat();
         let b_win = bv.to_mat();
         assert!(c.max_abs_diff(&naive(&a_win, &b_win)) < 1e-12);
+    }
+
+    #[test]
+    fn parallel_path_matches_with_capacity_rows() {
+        // Big enough to cross PAR_FLOPS; k ≤ KC keeps the summation
+        // order identical to naive, so 1e-12 holds even in parallel.
+        let (m, k, n) = (160, 60, 60);
+        let a = Mat::from_fn(m, k, |i, j| ((i * 3 + j * 11) % 29) as f64 * 0.125 - 1.5);
+        let b = Mat::from_fn(k, n, |i, j| ((i * 5 + j * 2) % 31) as f64 * 0.0625);
+        let stride = n + 4;
+        let mut buf = vec![f64::NAN; (m + 30) * stride];
+        {
+            let mut out = MatViewMut::new(&mut buf, m, n, stride);
+            matmul_into(a.view(), b.view(), &mut out);
+        }
+        let expect = naive(&a, &b);
+        for i in 0..m {
+            for j in 0..n {
+                assert!((buf[i * stride + j] - expect[(i, j)]).abs() < 1e-12);
+            }
+        }
+        assert!(buf[n].is_nan(), "gap column clobbered");
+        assert!(buf[m * stride].is_nan(), "capacity row clobbered");
+    }
+
+    #[test]
+    fn unpacked_baselines_match_packed() {
+        // The *_unpacked benchmark baselines must agree with the packed
+        // production path (shared shape: one KC block, so ≤1e-12).
+        let a = Mat::from_fn(33, 40, |i, j| ((i * 7 + j * 3) % 13) as f64 * 0.5 - 3.0);
+        let b = Mat::from_fn(40, 21, |i, j| ((i + 5 * j) % 11) as f64 * 0.25);
+        let packed = matmul(&a, &b);
+        let mut up = Mat::zeros(33, 21);
+        {
+            let mut cv = up.view_mut();
+            matmul_into_unpacked(a.view(), b.view(), &mut cv);
+        }
+        assert!(packed.max_abs_diff(&up) < 1e-12);
+        let bt = b.transpose();
+        let mut nt_p = Mat::zeros(33, 21);
+        let mut nt_u = Mat::zeros(33, 21);
+        {
+            let mut cv = nt_p.view_mut();
+            matmul_nt_into(a.view(), bt.view(), &mut cv);
+            let mut cv = nt_u.view_mut();
+            matmul_nt_into_unpacked(a.view(), bt.view(), &mut cv);
+        }
+        assert!(nt_p.max_abs_diff(&nt_u) < 1e-12);
+        let at = a.transpose();
+        let mut tn_p = Mat::zeros(33, 21);
+        let mut tn_u = Mat::zeros(33, 21);
+        {
+            let mut cv = tn_p.view_mut();
+            matmul_tn_into(at.view(), b.view(), &mut cv);
+            let mut cv = tn_u.view_mut();
+            matmul_tn_into_unpacked(at.view(), b.view(), &mut cv);
+        }
+        assert!(tn_p.max_abs_diff(&tn_u) < 1e-12);
+    }
+
+    #[test]
+    fn packed_gemm_is_zero_realloc_after_reserve() {
+        // A PackBuffers reserved for the largest shape must absorb 100
+        // products (including smaller ones) without growing.
+        let a = Mat::from_fn(70, 300, |i, j| ((i + j) % 9) as f64 - 4.0);
+        let b = Mat::from_fn(300, 65, |i, j| ((i * 2 + j) % 7) as f64 * 0.5);
+        let small_a = Mat::from_fn(16, 16, |i, j| (i * 16 + j) as f64 * 0.01);
+        let mut bufs = PackBuffers::new();
+        bufs.reserve(70, 300, 65);
+        let mut c = Mat::zeros(70, 65);
+        let mut cs = Mat::zeros(16, 16);
+        for _ in 0..100 {
+            let mut cv = c.view_mut();
+            matmul_into_buf(a.view(), b.view(), &mut cv, &mut bufs);
+            let mut cv = cs.view_mut();
+            matmul_into_buf(small_a.view(), small_a.view(), &mut cv, &mut bufs);
+        }
+        assert_eq!(bufs.reallocs(), 0, "reserved pack buffers must never grow");
     }
 
     #[test]

@@ -11,17 +11,20 @@ pub mod gemm;
 pub mod householder;
 pub mod matrix;
 pub mod norms;
+pub mod pack;
 pub mod tridiag;
 pub mod view;
 
 pub use cholesky::{Cholesky, PackedCholesky};
 pub use eigh::{eigh, eigvalsh, Eigh};
 pub use gemm::{
-    gemv, gemv_into, gemv_t, gemv_t_into, matmul, matmul_into, matmul_nt, matmul_nt_into,
-    matmul_tn_into, syrk, transpose_into,
+    gemv, gemv_into, gemv_t, gemv_t_into, matmul, matmul_into, matmul_into_buf,
+    matmul_into_unpacked, matmul_nt, matmul_nt_into, matmul_nt_into_buf, matmul_nt_into_unpacked,
+    matmul_tn_into, matmul_tn_into_buf, matmul_tn_into_unpacked, syrk, transpose_into,
 };
 pub use matrix::{dot, norm2, Mat};
 pub use norms::{
     frobenius, orthogonality_defect, psd_norms, spectral_sym, sym_norms, trace_sym, Norms,
 };
+pub use pack::PackBuffers;
 pub use view::{MatView, MatViewMut};

@@ -1,0 +1,402 @@
+//! Packed-panel substrate for the native GEMM (BLIS-style): cache
+//! blocking constants, the reusable [`PackBuffers`] scratch, the
+//! `pack_a`/`pack_b` panel writers and the fixed-shape `MR × NR`
+//! microkernel every `matmul_*` variant bottoms out in.
+//!
+//! # Why packing
+//!
+//! The unpacked kernel reads `A` and `B` straight out of (possibly
+//! strided) source buffers, so a `2mkn`-flop product pays a TLB walk
+//! per `B` row and never presents the compiler with a fixed-width
+//! inner loop it can keep in vector registers. Packing copies the
+//! operands once per `KC`-deep slice into two contiguous, tile-ordered
+//! buffers:
+//!
+//! * **A panels** — `MR`-row strips, depth-major: strip `s` holds rows
+//!   `s·MR..s·MR+MR`, laid out `[p·MR + r]` so the microkernel loads
+//!   one `MR`-wide column of `A` per depth step with a single
+//!   contiguous read. Row tails zero-pad.
+//! * **B panels** — `NR`-column panels, depth-major: panel `t` holds
+//!   columns `t·NR..t·NR+NR`, laid out `[p·NR + c]` so each depth step
+//!   is one `NR`-wide contiguous load. Column tails zero-pad.
+//!
+//! The packers absorb the operand orientation (`Src::Trans` walks
+//! the source transposed), which is exactly what makes the `NT`/`TN`
+//! GEMM variants free: the microkernel always sees the same two panel
+//! layouts. Zero-padded tail lanes multiply against zeros and add
+//! nothing, so every tile — full or edge — runs the same full-width
+//! accumulate loop; only the write-back is bounded.
+//!
+//! # Blocking constants
+//!
+//! `MR×NR = 4×8` gives a 32-accumulator register tile (fits the 16
+//! AVX2 `ymm` registers as 8 × 4-lane vectors with room for the `A`
+//! broadcast and `B` loads). `KC = 256` puts one `A` strip (`4·256·8 =
+//! 8 KiB`) plus one `B` panel (`8·256·8 = 16 KiB`) comfortably in a
+//! 32 KiB L1d; `MC = 128` keeps the active `MC×KC` `A` block
+//! (256 KiB) in L2; `NC = 4096` bounds the packed `B` slice (8 MiB
+//! worst case) to an L3 share. Derivation and measurements:
+//! EXPERIMENTS.md §Perf.
+
+/// Microkernel tile rows (register blocking over `C` rows).
+pub const MR: usize = 4;
+/// Microkernel tile columns (one AVX2/AVX-512-friendly vector span).
+pub const NR: usize = 8;
+/// Row-panel height: the `MC × KC` packed `A` block targets L2.
+pub const MC: usize = 128;
+/// Depth blocking factor: one `A` strip + one `B` panel target L1d.
+pub const KC: usize = 256;
+/// Column blocking factor: bounds the packed `B` slice per pass.
+pub const NC: usize = 4096;
+
+/// Resize `buf` to `len`, counting a realloc only when capacity grows.
+/// Retained elements keep their previous (stale) values — every
+/// consumer fully overwrites its window, so no full-buffer memset is
+/// paid on the hot path; only growth zero-fills the tail.
+///
+/// The one shared definition (workspace, kernel-block and pack-buffer
+/// accounting all route here) so realloc counters can never diverge in
+/// semantics across subsystems.
+pub(crate) fn ensure_f64(buf: &mut Vec<f64>, len: usize, reallocs: &mut u64) {
+    if len > buf.capacity() {
+        *reallocs += 1;
+    }
+    buf.resize(len, 0.0);
+}
+
+/// Reusable packing scratch: one buffer for the tile-ordered `A`
+/// panels, one for the `B` panels, and a growth counter so the
+/// streaming steady state can assert the packed GEMM allocates
+/// nothing. Owned thread-locally by the allocating `matmul_*` entry
+/// points and cached inside `UpdateWorkspace` / `ProjectScratch` /
+/// `KernelBlockScratch` for the `_buf` forms.
+#[derive(Clone, Debug, Default)]
+pub struct PackBuffers {
+    /// Packed `A`: `div_ceil(m, MR)·MR × kc`, MR-strip layout.
+    pub(super) a: Vec<f64>,
+    /// Packed `B`: `kc × div_ceil(nc, NR)·NR`, NR-panel layout.
+    pub(super) b: Vec<f64>,
+    reallocs: u64,
+}
+
+impl PackBuffers {
+    pub fn new() -> PackBuffers {
+        PackBuffers::default()
+    }
+
+    /// Size both panels for one `(m, kc, nc)` blocking pass, counting
+    /// capacity growth (the hot-path entry — zero once warm).
+    pub(super) fn ensure(&mut self, m: usize, kc: usize, nc: usize) {
+        let alen = m.div_ceil(MR) * MR * kc;
+        let blen = nc.div_ceil(NR) * NR * kc;
+        ensure_f64(&mut self.a, alen, &mut self.reallocs);
+        ensure_f64(&mut self.b, blen, &mut self.reallocs);
+    }
+
+    /// Pre-size for products up to `m × k · k × n` without counting
+    /// toward the realloc counter. Monotone in every argument: a
+    /// reservation for `(m, k, n)` covers every smaller product.
+    pub fn reserve(&mut self, m: usize, k: usize, n: usize) {
+        let kc = k.min(KC);
+        let alen = m.div_ceil(MR) * MR * kc;
+        let blen = n.min(NC).div_ceil(NR) * NR * kc;
+        if self.a.capacity() < alen {
+            self.a.reserve(alen - self.a.len());
+        }
+        if self.b.capacity() < blen {
+            self.b.reserve(blen - self.b.len());
+        }
+    }
+
+    /// Capacity-growth events since construction (zero once warm).
+    pub fn reallocs(&self) -> u64 {
+        self.reallocs
+    }
+
+    /// Bytes currently held by the two panel buffers.
+    pub fn bytes_resident(&self) -> usize {
+        std::mem::size_of::<f64>() * (self.a.capacity() + self.b.capacity())
+    }
+}
+
+/// Operand descriptor for the packers: a row-major backing slice plus
+/// the orientation the packer should walk it in. `Trans` is how the
+/// `NT`/`TN` variants reach the one packed path — the transpose is
+/// absorbed here, never materialized.
+#[derive(Clone, Copy)]
+pub(super) enum Src<'a> {
+    /// Element `(i, j)` is `data[i * stride + j]`.
+    Normal { data: &'a [f64], stride: usize },
+    /// Element `(i, j)` is `data[j * stride + i]` (logical transpose).
+    Trans { data: &'a [f64], stride: usize },
+}
+
+/// Pack rows `i0..i1` of the left operand's `kk..kk+kc` depth slice
+/// into MR-strips (`buf[s·MR·kc + p·MR + r]`), zero-padding the last
+/// strip's missing rows. `i0` must be `MR`-aligned.
+pub(super) fn pack_a(src: Src<'_>, i0: usize, i1: usize, kk: usize, kc: usize, buf: &mut [f64]) {
+    debug_assert_eq!(i0 % MR, 0);
+    let rows = i1 - i0;
+    let strips = rows.div_ceil(MR);
+    match src {
+        Src::Normal { data, stride } => {
+            for s in 0..strips {
+                let dst = &mut buf[s * MR * kc..(s + 1) * MR * kc];
+                let base = i0 + s * MR;
+                let mv = MR.min(rows - s * MR);
+                for r in 0..mv {
+                    let off = (base + r) * stride + kk;
+                    let row = &data[off..off + kc];
+                    for (p, &v) in row.iter().enumerate() {
+                        dst[p * MR + r] = v;
+                    }
+                }
+                if mv < MR {
+                    for p in 0..kc {
+                        for r in mv..MR {
+                            dst[p * MR + r] = 0.0;
+                        }
+                    }
+                }
+            }
+        }
+        Src::Trans { data, stride } => {
+            // Element (i, p) lives at data[p·stride + i]: walking the
+            // strip rows innermost reads the source contiguously.
+            for s in 0..strips {
+                let dst = &mut buf[s * MR * kc..(s + 1) * MR * kc];
+                let base = i0 + s * MR;
+                let mv = MR.min(rows - s * MR);
+                for p in 0..kc {
+                    let srow = &data[(kk + p) * stride + base..];
+                    let d = &mut dst[p * MR..(p + 1) * MR];
+                    for (r, slot) in d.iter_mut().take(mv).enumerate() {
+                        *slot = srow[r];
+                    }
+                    for slot in d.iter_mut().skip(mv) {
+                        *slot = 0.0;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Pack the right operand's `kk..kk+kc × j0..j0+nc` block into
+/// NR-panels (`buf[t·NR·kc + p·NR + c]`), zero-padding the last
+/// panel's missing columns.
+pub(super) fn pack_b(src: Src<'_>, kk: usize, kc: usize, j0: usize, nc: usize, buf: &mut [f64]) {
+    let panels = nc.div_ceil(NR);
+    match src {
+        Src::Normal { data, stride } => {
+            for p in 0..kc {
+                let row = &data[(kk + p) * stride + j0..];
+                for t in 0..panels {
+                    let nv = NR.min(nc - t * NR);
+                    let d = &mut buf[t * NR * kc + p * NR..t * NR * kc + (p + 1) * NR];
+                    d[..nv].copy_from_slice(&row[t * NR..t * NR + nv]);
+                    for slot in d.iter_mut().skip(nv) {
+                        *slot = 0.0;
+                    }
+                }
+            }
+        }
+        Src::Trans { data, stride } => {
+            // Element (p, j) lives at data[j·stride + p]: per column
+            // the depth walk is contiguous.
+            for t in 0..panels {
+                let nv = NR.min(nc - t * NR);
+                let pb = t * NR * kc;
+                for c in 0..nv {
+                    let col = &data[(j0 + t * NR + c) * stride + kk..];
+                    for (p, &v) in col[..kc].iter().enumerate() {
+                        buf[pb + p * NR + c] = v;
+                    }
+                }
+                for c in nv..NR {
+                    for p in 0..kc {
+                        buf[pb + p * NR + c] = 0.0;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The one microkernel: accumulate a `kc`-deep `MR × NR` tile from one
+/// packed `A` strip and one packed `B` panel into a register block,
+/// then add it into `C`. `c` starts at the tile's top-left element;
+/// `sc` is the output row stride; `mv × nv` bounds the write-back for
+/// edge tiles (the accumulate itself always runs full width — padded
+/// lanes hold zeros and contribute nothing, which keeps the inner loop
+/// branch-free and lets rustc vectorize it; with `-C target-cpu=native`
+/// the `a·b + acc` chains compile to FMA).
+///
+/// Per output element the depth sum runs `p` ascending within a block
+/// and blocks in ascending `kk` order — for `k ≤ KC` that is exactly
+/// the naive triple-loop summation order, which is what the ≤1e-12
+/// packed≡naive equivalence tests pin down.
+#[inline]
+pub(super) fn microkernel(
+    kc: usize,
+    a: &[f64],
+    b: &[f64],
+    c: &mut [f64],
+    sc: usize,
+    mv: usize,
+    nv: usize,
+) {
+    let mut acc = [[0.0f64; NR]; MR];
+    let a = &a[..kc * MR];
+    let b = &b[..kc * NR];
+    for (ap, bp) in a.chunks_exact(MR).zip(b.chunks_exact(NR)) {
+        let ap: &[f64; MR] = ap.try_into().unwrap();
+        let bp: &[f64; NR] = bp.try_into().unwrap();
+        for i in 0..MR {
+            let ai = ap[i];
+            for j in 0..NR {
+                acc[i][j] += ai * bp[j];
+            }
+        }
+    }
+    if mv == MR && nv == NR {
+        for (i, arow) in acc.iter().enumerate() {
+            let crow = &mut c[i * sc..i * sc + NR];
+            for j in 0..NR {
+                crow[j] += arow[j];
+            }
+        }
+    } else {
+        for (i, arow) in acc.iter().enumerate().take(mv) {
+            let crow = &mut c[i * sc..i * sc + nv];
+            for (j, slot) in crow.iter_mut().enumerate() {
+                *slot += arow[j];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ensure_counts_only_capacity_growth() {
+        let mut buf = Vec::new();
+        let mut r = 0u64;
+        ensure_f64(&mut buf, 8, &mut r);
+        assert_eq!(r, 1);
+        assert_eq!(buf.len(), 8);
+        ensure_f64(&mut buf, 4, &mut r);
+        ensure_f64(&mut buf, 8, &mut r);
+        assert_eq!(r, 1, "shrink/regrow within capacity must be free");
+        ensure_f64(&mut buf, 16, &mut r);
+        assert_eq!(r, 2);
+    }
+
+    #[test]
+    fn reserve_covers_every_smaller_ensure() {
+        let mut bufs = PackBuffers::new();
+        bufs.reserve(70, 300, 33);
+        assert_eq!(bufs.reallocs(), 0, "reserve must not count as growth");
+        // Every blocking pass of every sub-shape must fit what reserve
+        // sized (monotonicity of the panel-length formulas).
+        for (m, k, n) in [(70, 300, 33), (1, 1, 1), (70, 256, 33), (64, 44, 32), (3, 300, 5)] {
+            for kk in (0..k).step_by(KC) {
+                let kc = KC.min(k - kk);
+                for j0 in (0..n).step_by(NC) {
+                    let nc = NC.min(n - j0);
+                    bufs.ensure(m, kc, nc);
+                }
+            }
+        }
+        assert_eq!(bufs.reallocs(), 0, "warm ensure within a reservation must be free");
+    }
+
+    #[test]
+    fn pack_roundtrip_normal_and_trans() {
+        // A 5×7 strided window; packing Normal then reading strips back
+        // must reproduce the window, Trans must reproduce its transpose.
+        let (rows, cols, stride) = (5usize, 7usize, 9usize);
+        let data: Vec<f64> = (0..rows * stride).map(|i| i as f64 * 0.25 - 3.0).collect();
+        let at = |i: usize, j: usize| data[i * stride + j];
+        let normal = Src::Normal {
+            data: &data,
+            stride,
+        };
+        let trans = Src::Trans {
+            data: &data,
+            stride,
+        };
+        let kc = cols;
+        let mut buf = vec![f64::NAN; rows.div_ceil(MR) * MR * kc];
+        pack_a(normal, 0, rows, 0, kc, &mut buf);
+        for i in 0..rows.div_ceil(MR) * MR {
+            for p in 0..kc {
+                let got = buf[(i / MR) * MR * kc + p * MR + (i % MR)];
+                let want = if i < rows { at(i, p) } else { 0.0 };
+                assert_eq!(got, want, "A pack ({i},{p})");
+            }
+        }
+        // Trans: left operand is the 7×5 transpose of the same window.
+        let (tm, tk) = (cols, rows);
+        let mut tbuf = vec![f64::NAN; tm.div_ceil(MR) * MR * tk];
+        pack_a(trans, 0, tm, 0, tk, &mut tbuf);
+        for i in 0..tm.div_ceil(MR) * MR {
+            for p in 0..tk {
+                let got = tbuf[(i / MR) * MR * tk + p * MR + (i % MR)];
+                let want = if i < tm { at(p, i) } else { 0.0 };
+                assert_eq!(got, want, "Aᵀ pack ({i},{p})");
+            }
+        }
+        // B: same window as the right operand, both orientations.
+        let nc = cols;
+        let mut bbuf = vec![f64::NAN; nc.div_ceil(NR) * NR * rows];
+        pack_b(normal, 0, rows, 0, nc, &mut bbuf);
+        for p in 0..rows {
+            for j in 0..nc.div_ceil(NR) * NR {
+                let got = bbuf[(j / NR) * NR * rows + p * NR + (j % NR)];
+                let want = if j < nc { at(p, j) } else { 0.0 };
+                assert_eq!(got, want, "B pack ({p},{j})");
+            }
+        }
+        let (bk, bn) = (cols, rows); // Bᵀ is 7×5
+        let mut btbuf = vec![f64::NAN; bn.div_ceil(NR) * NR * bk];
+        pack_b(trans, 0, bk, 0, bn, &mut btbuf);
+        for p in 0..bk {
+            for j in 0..bn.div_ceil(NR) * NR {
+                let got = btbuf[(j / NR) * NR * bk + p * NR + (j % NR)];
+                let want = if j < bn { at(j, p) } else { 0.0 };
+                assert_eq!(got, want, "Bᵀ pack ({p},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn microkernel_matches_scalar_tile() {
+        // One packed strip × one packed panel, every edge bound.
+        let kc = 11;
+        let a: Vec<f64> = (0..kc * MR).map(|i| (i as f64 * 0.37).sin()).collect();
+        let b: Vec<f64> = (0..kc * NR).map(|i| (i as f64 * 0.21).cos()).collect();
+        for mv in 1..=MR {
+            for nv in 1..=NR {
+                let sc = NR + 3;
+                let mut c = vec![0.5; MR * sc];
+                let keep = c.clone();
+                microkernel(kc, &a, &b, &mut c, sc, mv, nv);
+                for i in 0..MR {
+                    for j in 0..sc {
+                        let mut want = keep[i * sc + j];
+                        if i < mv && j < nv {
+                            for p in 0..kc {
+                                want += a[p * MR + i] * b[p * NR + j];
+                            }
+                        }
+                        let got = c[i * sc + j];
+                        assert!((got - want).abs() < 1e-12, "tile mv={mv} nv={nv}");
+                    }
+                }
+            }
+        }
+    }
+}

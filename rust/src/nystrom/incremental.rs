@@ -129,7 +129,7 @@ impl<'k> IncrementalNystrom<'k> {
         if self.col_buf.capacity() < n {
             self.col_buf.reserve(n - self.col_buf.len());
         }
-        self.kb.reserve(n, b);
+        self.kb.reserve(n, b, dim);
     }
 
     /// Add `idxs.len()` evaluation points to the subset in one call:

@@ -123,7 +123,7 @@ pub fn rank_one_update_fused_tol_ws(
         let q_view = MatView::new(&ws.q, n, n, n);
         let w_view = MatView::new(&ws.w, n, n, n);
         let mut out = MatViewMut::new(&mut ws.q_next, n, n, n);
-        crate::linalg::matmul_into(q_view, w_view, &mut out);
+        crate::linalg::matmul_into_buf(q_view, w_view, &mut out, &mut ws.pack);
         std::mem::swap(&mut ws.q, &mut ws.q_next);
         ws.accum_gemms += 1;
     }
@@ -157,7 +157,7 @@ pub fn flush_rotation_ws(
     {
         let q_view = MatView::new(&ws.q, n, n, n);
         let out_view = MatViewMut::new(&mut ws.rotated, m, n, stride);
-        engine.rotate_into(vecs.view(), q_view, out_view);
+        engine.rotate_into_buf(vecs.view(), q_view, out_view, &mut ws.pack);
     }
     vecs.swap_data(&mut ws.rotated);
     ws.q_dim = 0;

@@ -54,6 +54,21 @@ pub trait Rotate {
     /// operands may be strided views; `out` must not alias `u`/`w`.
     fn rotate_into(&self, u: MatView<'_>, w: MatView<'_>, out: MatViewMut<'_>);
 
+    /// [`Rotate::rotate_into`] with caller-owned GEMM packing scratch.
+    /// Engines that pack (the native path) override this to keep the
+    /// streaming steady state zero-realloc; engines with their own
+    /// memory discipline (PJRT device buffers) ignore the scratch and
+    /// fall through to [`Rotate::rotate_into`].
+    fn rotate_into_buf(
+        &self,
+        u: MatView<'_>,
+        w: MatView<'_>,
+        out: MatViewMut<'_>,
+        _bufs: &mut crate::linalg::PackBuffers,
+    ) {
+        self.rotate_into(u, w, out);
+    }
+
     /// Fused path: given the raw secular quantities, build the
     /// normalized `W` internally, write `U·W` into `out` and return
     /// `true` — the shape the AOT Pallas artifact implements
@@ -91,6 +106,15 @@ pub struct NativeRotate;
 impl Rotate for NativeRotate {
     fn rotate_into(&self, u: MatView<'_>, w: MatView<'_>, mut out: MatViewMut<'_>) {
         crate::linalg::matmul_into(u, w, &mut out);
+    }
+    fn rotate_into_buf(
+        &self,
+        u: MatView<'_>,
+        w: MatView<'_>,
+        mut out: MatViewMut<'_>,
+        bufs: &mut crate::linalg::PackBuffers,
+    ) {
+        crate::linalg::matmul_into_buf(u, w, &mut out, bufs);
     }
     fn name(&self) -> &'static str {
         "native"
@@ -197,6 +221,7 @@ pub fn rank_one_update_tol_ws(
         roots,
         reallocs,
         engine_gemms,
+        pack,
         ..
     } = ws;
 
@@ -262,7 +287,7 @@ pub fn rank_one_update_tol_ws(
         assemble_w_into(zhat, &def.d_active, roots, w, col, reallocs)?;
         let w_view = MatView::new(w, k, k, k);
         let out_view = MatViewMut::new(rotated, out_rows, out_cols, out_stride);
-        engine.rotate_into(u_view, w_view, out_view);
+        engine.rotate_into_buf(u_view, w_view, out_view, pack);
     }
     *engine_gemms += 1;
 

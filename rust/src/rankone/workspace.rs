@@ -73,6 +73,10 @@ pub struct UpdateWorkspace {
     pub(crate) fused_fallbacks: u64,
     /// Pending products materialized into `U` (one engine GEMM each).
     pub(crate) flushes: u64,
+    /// GEMM packing scratch: the sequential back-rotation, the `Q·W`
+    /// accumulation and the blocked flush all pack into these panels,
+    /// so the packed GEMM stays zero-realloc once the stream is warm.
+    pub(crate) pack: crate::linalg::PackBuffers,
 }
 
 impl UpdateWorkspace {
@@ -103,6 +107,10 @@ impl UpdateWorkspace {
         grow(&mut self.def.deflated, n);
         grow(&mut self.def.d_active, n);
         grow(&mut self.def.z_active, n);
+        // Largest GEMM the workspace ever packs for: the m × n basis
+        // against an n × n rotation factor (covers the n × n accum
+        // product too, by monotonicity of the panel-length formulas).
+        self.pack.reserve(m, n, n);
     }
 
     /// Pre-size the blocked rank-b scratch (the pending product, its
@@ -122,11 +130,12 @@ impl UpdateWorkspace {
         grow(&mut self.zq, n);
     }
 
-    /// Buffer-growth events since construction. Constant across updates
-    /// once the workspace is warm — the zero-allocation guarantee the
-    /// steady-state test pins down.
+    /// Buffer-growth events since construction (including the GEMM
+    /// packing scratch). Constant across updates once the workspace is
+    /// warm — the zero-allocation guarantee the steady-state test pins
+    /// down.
     pub fn reallocs(&self) -> u64 {
-        self.reallocs
+        self.reallocs + self.pack.reallocs()
     }
 
     /// Whether a blocked-batch rotation product is pending (the basis is
@@ -190,19 +199,14 @@ impl UpdateWorkspace {
                 + self.def.active.capacity()
                 + self.def.deflated.capacity())
             + r * self.roots.capacity()
+            + self.pack.bytes_resident()
     }
 }
 
-/// Resize `buf` to `len`, counting a realloc only when capacity grows.
-/// Retained elements keep their previous (stale) values — every
-/// consumer fully overwrites its window, so no full-buffer memset is
-/// paid on the hot path; only growth zero-fills the tail.
-pub(crate) fn ensure_f64(buf: &mut Vec<f64>, len: usize, reallocs: &mut u64) {
-    if len > buf.capacity() {
-        *reallocs += 1;
-    }
-    buf.resize(len, 0.0);
-}
+// The canonical counting-resize helper moved next to the pack buffers
+// it also guards; re-exported here so existing `rankone::ensure_f64`
+// users keep compiling unchanged.
+pub(crate) use crate::linalg::pack::ensure_f64;
 
 #[cfg(test)]
 mod tests {

@@ -9,42 +9,99 @@
 //! * **eigenvalues** pad with ascending sentinels far above any real
 //!   spectrum (`SENTINEL + j`), keeping denominators `λⱼ − λ̃ᵢ` huge so
 //!   padded columns stay finite and bounded before being sliced away.
+//!
+//! The `_into` forms write padded buckets straight from (possibly
+//! strided) views into reusable staging buffers — a [`Staging`] bundle
+//! per runtime, so steady-state dispatch re-pads without touching the
+//! allocator. The allocating forms survive as thin shims over them.
 
-use crate::linalg::Mat;
+use crate::linalg::{Mat, MatView};
 
 /// Base value for sentinel eigenvalues. Real kernel eigenvalues in this
 /// system are ≤ `n·max k(x,x)` ≲ 1e6; 1e12 keeps sentinel gaps dominant.
 pub const SENTINEL: f64 = 1e12;
 
-/// Zero-pad a matrix to `rows × cols`.
-pub fn pad_mat(a: &Mat, rows: usize, cols: usize) -> Mat {
-    assert!(rows >= a.rows() && cols >= a.cols());
-    let mut p = Mat::zeros(rows, cols);
+/// Reusable staging buffers for padded operands: one bundle per
+/// runtime, each executable wrapper staging its operands into the named
+/// slots before building device literals. Capacities only ever grow
+/// (to the largest bucket dispatched), so re-dispatch at a warm bucket
+/// size is allocation-free.
+#[derive(Clone, Debug, Default)]
+pub struct Staging {
+    /// First padded matrix operand of a dispatch.
+    pub mat_a: Vec<f64>,
+    /// Second padded matrix operand of a dispatch.
+    pub mat_b: Vec<f64>,
+    /// First padded vector operand.
+    pub vec_a: Vec<f64>,
+    /// Second padded vector operand.
+    pub vec_b: Vec<f64>,
+    /// Third padded vector operand.
+    pub vec_c: Vec<f64>,
+}
+
+impl Staging {
+    pub fn new() -> Staging {
+        Staging::default()
+    }
+}
+
+/// Zero-pad a matrix view to `rows × cols`, row-major into `buf`
+/// (resized to `rows·cols`; every cell is written — copied window,
+/// zeroed gap columns and tail rows — so stale staging contents never
+/// leak into a dispatch).
+pub fn pad_mat_into(a: MatView<'_>, rows: usize, cols: usize, buf: &mut Vec<f64>) {
+    assert!(rows >= a.rows() && cols >= a.cols(), "pad_mat_into: target smaller than source");
+    buf.resize(rows * cols, 0.0);
     for i in 0..a.rows() {
-        for j in 0..a.cols() {
-            p[(i, j)] = a[(i, j)];
-        }
+        let src = a.row(i);
+        let dst = &mut buf[i * cols..(i + 1) * cols];
+        dst[..src.len()].copy_from_slice(src);
+        dst[src.len()..].fill(0.0);
     }
-    p
+    buf[a.rows() * cols..].fill(0.0);
 }
 
-/// Zero-pad a vector to `len`.
+/// Zero-pad a vector to `len` into `buf` (every cell written).
+pub fn pad_zeros_into(v: &[f64], len: usize, buf: &mut Vec<f64>) {
+    assert!(len >= v.len(), "pad_zeros_into: target smaller than source");
+    buf.resize(len, 0.0);
+    buf[..v.len()].copy_from_slice(v);
+    buf[v.len()..].fill(0.0);
+}
+
+/// Pad eigenvalues with ascending sentinels into `buf` (`offset` shifts
+/// the sentinel series so poles and roots never collide).
+pub fn pad_sentinels_into(v: &[f64], len: usize, offset: f64, buf: &mut Vec<f64>) {
+    assert!(len >= v.len(), "pad_sentinels_into: target smaller than source");
+    buf.resize(len, 0.0);
+    buf[..v.len()].copy_from_slice(v);
+    for (j, slot) in buf.iter_mut().enumerate().skip(v.len()) {
+        *slot = SENTINEL + j as f64 + offset;
+    }
+}
+
+/// Zero-pad a matrix to `rows × cols` (allocating shim over
+/// [`pad_mat_into`]).
+pub fn pad_mat(a: &Mat, rows: usize, cols: usize) -> Mat {
+    let mut buf = Vec::new();
+    pad_mat_into(a.view(), rows, cols, &mut buf);
+    Mat::from_vec(rows, cols, buf)
+}
+
+/// Zero-pad a vector to `len` (allocating shim over [`pad_zeros_into`]).
 pub fn pad_zeros(v: &[f64], len: usize) -> Vec<f64> {
-    assert!(len >= v.len());
-    let mut p = v.to_vec();
-    p.resize(len, 0.0);
-    p
+    let mut buf = Vec::new();
+    pad_zeros_into(v, len, &mut buf);
+    buf
 }
 
-/// Pad eigenvalues with ascending sentinels (`offset` shifts the
-/// sentinel series so poles and roots never collide with each other).
+/// Pad eigenvalues with ascending sentinels (allocating shim over
+/// [`pad_sentinels_into`]).
 pub fn pad_sentinels(v: &[f64], len: usize, offset: f64) -> Vec<f64> {
-    assert!(len >= v.len());
-    let mut p = v.to_vec();
-    for j in p.len()..len {
-        p.push(SENTINEL + j as f64 + offset);
-    }
-    p
+    let mut buf = Vec::new();
+    pad_sentinels_into(v, len, offset, &mut buf);
+    buf
 }
 
 /// Slice the leading `rows × cols` block out of a padded result.
@@ -80,5 +137,63 @@ mod tests {
     #[test]
     fn pad_zeros_length() {
         assert_eq!(pad_zeros(&[1.0], 3), vec![1.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn into_forms_overwrite_stale_staging() {
+        // A reused staging buffer full of garbage must come out exactly
+        // as if freshly allocated — the resize path retains stale cells,
+        // so every pad writes the full target window.
+        let mut buf = vec![f64::NAN; 64];
+        let a = Mat::from_fn(2, 3, |i, j| (i * 3 + j) as f64 + 1.0);
+        pad_mat_into(a.view(), 4, 5, &mut buf);
+        assert_eq!(buf.len(), 4 * 5);
+        for i in 0..4 {
+            for j in 0..5 {
+                let want = if i < 2 && j < 3 { a[(i, j)] } else { 0.0 };
+                assert_eq!(buf[i * 5 + j], want, "({i},{j})");
+            }
+        }
+        // Strided source view: pad from a window without copying it out.
+        let backing = Mat::from_fn(3, 7, |i, j| (i * 7 + j) as f64);
+        let win = MatView::new(backing.as_slice(), 3, 2, 7);
+        buf.iter_mut().for_each(|v| *v = f64::NAN);
+        buf.resize(64, f64::NAN);
+        pad_mat_into(win, 4, 4, &mut buf);
+        for i in 0..4 {
+            for j in 0..4 {
+                let want = if i < 3 && j < 2 { backing[(i, j)] } else { 0.0 };
+                assert_eq!(buf[i * 4 + j], want, "strided ({i},{j})");
+            }
+        }
+        let mut vbuf = vec![f64::NAN; 10];
+        pad_zeros_into(&[7.0, 8.0], 5, &mut vbuf);
+        assert_eq!(vbuf, vec![7.0, 8.0, 0.0, 0.0, 0.0]);
+        let mut sbuf = vec![f64::NAN; 10];
+        pad_sentinels_into(&[1.0], 4, 0.5, &mut sbuf);
+        assert_eq!(sbuf.len(), 4);
+        assert_eq!(sbuf[0], 1.0);
+        for (j, &s) in sbuf.iter().enumerate().skip(1) {
+            assert_eq!(s, SENTINEL + j as f64 + 0.5);
+        }
+    }
+
+    #[test]
+    fn shims_match_into_forms() {
+        let a = Mat::from_fn(3, 2, |i, j| ((i * 2 + j) as f64).sin());
+        let p = pad_mat(&a, 6, 4);
+        let mut buf = Vec::new();
+        pad_mat_into(a.view(), 6, 4, &mut buf);
+        assert_eq!(p.as_slice(), &buf[..]);
+        assert_eq!(pad_zeros(&[1.0, 2.0], 4), {
+            let mut b = Vec::new();
+            pad_zeros_into(&[1.0, 2.0], 4, &mut b);
+            b
+        });
+        assert_eq!(pad_sentinels(&[1.0], 3, 0.0), {
+            let mut b = Vec::new();
+            pad_sentinels_into(&[1.0], 3, 0.0, &mut b);
+            b
+        });
     }
 }

@@ -18,6 +18,10 @@ pub struct Runtime {
     client: xla::PjRtClient,
     manifest: super::Manifest,
     cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+    /// Reusable padding buffers: operands are staged into these before
+    /// literal construction, so warm-bucket dispatch re-pads without
+    /// growing the allocator (the device literal copy is unavoidable).
+    staging: Mutex<pad::Staging>,
 }
 
 impl Runtime {
@@ -26,7 +30,12 @@ impl Runtime {
     pub fn new(dir: &Path) -> Result<Self, String> {
         let manifest = super::Manifest::load(dir)?;
         let client = xla::PjRtClient::cpu().map_err(|e| format!("pjrt cpu client: {e}"))?;
-        Ok(Runtime { client, manifest, cache: Mutex::new(HashMap::new()) })
+        Ok(Runtime {
+            client,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+            staging: Mutex::new(pad::Staging::new()),
+        })
     }
 
     pub fn manifest(&self) -> &super::Manifest {
@@ -87,9 +96,10 @@ impl Runtime {
         out.to_vec::<f64>().map_err(|e| format!("to_vec {kind}: {e}"))
     }
 
-    fn mat_literal(m: &Mat) -> Result<xla::Literal, String> {
-        xla::Literal::vec1(m.as_slice())
-            .reshape(&[m.rows() as i64, m.cols() as i64])
+    /// Build a `rows × cols` device literal from a staged padded buffer.
+    fn lit_mat(buf: &[f64], rows: usize, cols: usize) -> Result<xla::Literal, String> {
+        xla::Literal::vec1(buf)
+            .reshape(&[rows as i64, cols as i64])
             .map_err(|e| format!("reshape literal: {e}"))
     }
 
@@ -102,17 +112,13 @@ impl Runtime {
             .manifest
             .bucket_for("kernel_column", m)
             .ok_or_else(|| format!("kernel_column: no bucket ≥ {m}"))?;
-        let xp = pad::pad_mat(x, bucket, d);
-        let yp = pad::pad_zeros(y, d);
-        let out = self.run(
-            "kernel_column",
-            bucket,
-            &[
-                Self::mat_literal(&xp)?,
-                xla::Literal::vec1(&yp),
-                xla::Literal::from(sigma),
-            ],
-        )?;
+        let (xl, yl) = {
+            let mut st = self.staging.lock().unwrap();
+            pad::pad_mat_into(x.view(), bucket, d, &mut st.mat_a);
+            pad::pad_zeros_into(y, d, &mut st.vec_a);
+            (Self::lit_mat(&st.mat_a, bucket, d)?, xla::Literal::vec1(&st.vec_a))
+        };
+        let out = self.run("kernel_column", bucket, &[xl, yl, xla::Literal::from(sigma)])?;
         Ok(out[..m].to_vec())
     }
 
@@ -124,12 +130,12 @@ impl Runtime {
             .manifest
             .bucket_for("gram", n)
             .ok_or_else(|| format!("gram: no bucket ≥ {n}"))?;
-        let xp = pad::pad_mat(x, bucket, d);
-        let out = self.run(
-            "gram",
-            bucket,
-            &[Self::mat_literal(&xp)?, xla::Literal::from(sigma)],
-        )?;
+        let xl = {
+            let mut st = self.staging.lock().unwrap();
+            pad::pad_mat_into(x.view(), bucket, d, &mut st.mat_a);
+            Self::lit_mat(&st.mat_a, bucket, d)?
+        };
+        let out = self.run("gram", bucket, &[xl, xla::Literal::from(sigma)])?;
         let full = Mat::from_vec(bucket, bucket, out);
         Ok(pad::unpad_mat(&full, n, n))
     }
@@ -150,20 +156,20 @@ impl Runtime {
             .manifest
             .bucket_for("eigvec_update", size)
             .ok_or_else(|| format!("eigvec_update: no bucket ≥ {size}"))?;
-        let up = pad::pad_mat(u, bucket, bucket);
-        let zp = pad::pad_zeros(z, bucket);
-        let lamp = pad::pad_sentinels(lam, bucket, 0.0);
-        let lamnp = pad::pad_sentinels(lam_new, bucket, 0.5);
-        let out = self.run(
-            "eigvec_update",
-            bucket,
-            &[
-                Self::mat_literal(&up)?,
-                xla::Literal::vec1(&zp),
-                xla::Literal::vec1(&lamp),
-                xla::Literal::vec1(&lamnp),
-            ],
-        )?;
+        let lits = {
+            let mut st = self.staging.lock().unwrap();
+            pad::pad_mat_into(u.view(), bucket, bucket, &mut st.mat_a);
+            pad::pad_zeros_into(z, bucket, &mut st.vec_a);
+            pad::pad_sentinels_into(lam, bucket, 0.0, &mut st.vec_b);
+            pad::pad_sentinels_into(lam_new, bucket, 0.5, &mut st.vec_c);
+            [
+                Self::lit_mat(&st.mat_a, bucket, bucket)?,
+                xla::Literal::vec1(&st.vec_a),
+                xla::Literal::vec1(&st.vec_b),
+                xla::Literal::vec1(&st.vec_c),
+            ]
+        };
+        let out = self.run("eigvec_update", bucket, &lits)?;
         let full = Mat::from_vec(bucket, bucket, out);
         Ok(pad::unpad_mat(&full, m, k))
     }
@@ -186,18 +192,23 @@ impl Runtime {
         if n > bucket_n {
             return Err(format!("nystrom_reconstruct: n={n} exceeds max bucket {bucket_n}"));
         }
-        let knmp = pad::pad_mat(knm, bucket_n, bucket_m);
-        let up = pad::pad_mat(u, bucket_m, bucket_m);
-        // Padded eigenvalues are ZEROS here, not sentinels: the artifact
-        // computes its pseudo-inverse cutoff from max|λ|, which sentinel
-        // values would corrupt; zeros fail the cutoff test and invert to
-        // exactly 0 (and the padded U columns are zero anyway).
-        let lamp = pad::pad_zeros(lam, bucket_m);
-        let out = self.run(
-            "nystrom_reconstruct",
-            bucket_m,
-            &[Self::mat_literal(&knmp)?, Self::mat_literal(&up)?, xla::Literal::vec1(&lamp)],
-        )?;
+        let lits = {
+            let mut st = self.staging.lock().unwrap();
+            pad::pad_mat_into(knm.view(), bucket_n, bucket_m, &mut st.mat_a);
+            pad::pad_mat_into(u.view(), bucket_m, bucket_m, &mut st.mat_b);
+            // Padded eigenvalues are ZEROS here, not sentinels: the
+            // artifact computes its pseudo-inverse cutoff from max|λ|,
+            // which sentinel values would corrupt; zeros fail the cutoff
+            // test and invert to exactly 0 (and the padded U columns are
+            // zero anyway).
+            pad::pad_zeros_into(lam, bucket_m, &mut st.vec_a);
+            [
+                Self::lit_mat(&st.mat_a, bucket_n, bucket_m)?,
+                Self::lit_mat(&st.mat_b, bucket_m, bucket_m)?,
+                xla::Literal::vec1(&st.vec_a),
+            ]
+        };
+        let out = self.run("nystrom_reconstruct", bucket_m, &lits)?;
         let full = Mat::from_vec(bucket_n, bucket_n, out);
         Ok(pad::unpad_mat(&full, n, n))
     }

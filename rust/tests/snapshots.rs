@@ -132,10 +132,11 @@ fn steady_state_snapshot_reads_are_zero_realloc() {
     let queries: Vec<f64> = ds.x.as_slice()[..8 * ds.dim()].to_vec();
     let mut scratch = ProjectScratch::new();
     let mut out = Vec::new();
-    // Warm-up sizes every buffer (kernel block, row norms, output).
+    // Warm-up sizes every buffer (kernel block, GEMM packing panels,
+    // row norms, output).
     router.project_many_into(&h, &queries, 4, &mut scratch, &mut out).unwrap();
     let warm = scratch.reallocs();
-    for _ in 0..50 {
+    for _ in 0..100 {
         let r_eff = router.project_many_into(&h, &queries, 4, &mut scratch, &mut out).unwrap();
         assert_eq!(r_eff, 4);
     }

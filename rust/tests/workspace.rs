@@ -8,8 +8,8 @@ use inkpca::kernels::{gram, Kernel, Linear, Polynomial, Rbf};
 use inkpca::kpca::{center_gram, IncrementalKpca};
 use inkpca::linalg::{eigh, orthogonality_defect};
 use inkpca::rankone::{
-    expand_eigensystem, expand_eigensystem_ws, rank_one_update, rank_one_update_ws, EigenBasis,
-    NativeRotate, UpdateWorkspace,
+    expand_eigensystem, expand_eigensystem_ws, flush_rotation_ws, rank_one_update,
+    rank_one_update_fused_ws, rank_one_update_ws, EigenBasis, NativeRotate, UpdateWorkspace,
 };
 use inkpca::util::prop::{check, ensure};
 use inkpca::util::Rng;
@@ -106,6 +106,49 @@ fn warm_workspace_zero_reallocations_over_100_updates() {
     assert_eq!(basis.reallocs(), 0, "eigenbasis reallocated at fixed size");
     // The math stayed healthy while the allocator stayed idle.
     assert!(orthogonality_defect(&basis) < 1e-8);
+    for w in vals.windows(2) {
+        assert!(w[0] <= w[1] + 1e-12);
+    }
+}
+
+/// The fused rank-b path — accumulate, flush, repeat — performs zero
+/// buffer reallocations over 100 update+flush cycles once reserved:
+/// the secular scratch, the pending-product double buffer, the rotated
+/// basis swap buffer *and the GEMM packing panels* are all warm. This
+/// pins the packed GEMM's scratch into the same zero-allocation
+/// guarantee the sequential test above established.
+#[test]
+fn warm_fused_flush_zero_reallocations_over_100_cycles() {
+    let n = 24;
+    let ds = yeast_like(n, 7);
+    let kern = Rbf { sigma: 1.0 };
+    let k = gram(&kern, &ds.x);
+    let eg = eigh(&k).unwrap();
+    let mut vals = eg.values.clone();
+    let mut basis = EigenBasis::from_mat(eg.vectors.clone());
+    let mut ws = UpdateWorkspace::new();
+    ws.reserve(n, n);
+    ws.reserve_blocked(n);
+    assert_eq!(ws.reallocs(), 0, "reserve must not count as growth");
+
+    let mut rng = Rng::new(13);
+    let mut v = vec![0.0; n];
+    for cycle in 0..100 {
+        // Two fused updates per cycle so both the seed-Q and the Q·W
+        // accumulation GEMM run, then a flush (one engine GEMM).
+        for step in 0..2 {
+            for x in v.iter_mut() {
+                *x = rng.range(-1.0, 1.0);
+            }
+            let sigma = if (cycle + step) % 2 == 0 { 0.8 } else { -0.8 };
+            rank_one_update_fused_ws(&mut vals, &mut basis, sigma, &v, &NativeRotate, &mut ws)
+                .unwrap();
+        }
+        flush_rotation_ws(&mut basis, &NativeRotate, &mut ws);
+    }
+    assert_eq!(ws.reallocs(), 0, "fused flush cycle reallocated on the steady-state path");
+    assert_eq!(basis.reallocs(), 0, "eigenbasis reallocated at fixed size");
+    assert!(orthogonality_defect(&basis) < 1e-7);
     for w in vals.windows(2) {
         assert!(w[0] <= w[1] + 1e-12);
     }
