@@ -1,0 +1,219 @@
+//! Durability benches: what the write-ahead log costs on the ingest
+//! path, what a checkpoint costs to cut, and how fast a crashed pool is
+//! back to serving.
+//!
+//! Series 1 (`recovery/ingest_{off,wal,wal_fsync8}/1stream`): per-point
+//! rendezvous ingest with durability off, with the WAL appending every
+//! accepted command (fsync off — the page cache absorbs the write), and
+//! with an fsync every 8 appends. The off→wal gap prices the framing +
+//! one `write(2)` per point; wal→fsync8 prices the flush policy. The
+//! run asserts the logging happened (`wal_appends` = open + n ingests)
+//! and that the happy path never errors.
+//!
+//! Series 2 (`recovery/checkpoint/mN`): one `checkpoint_stream` cut of
+//! a live N-point stream — serialize + CRC + atomic rename, through the
+//! same queue the ingests use.
+//!
+//! Series 3 (`recovery/restore_checkpoint/mN` vs
+//! `recovery/restore_replay/mN`): time-to-serving after a crash, end to
+//! end (pool spawn + `restore_pool` + shutdown), from a fresh
+//! checkpoint (rotated WAL — install, no replay) vs from a bare WAL
+//! (open + full replay through the ingest path). Each iteration resets
+//! the snapshot directory from an in-memory template of the pristine
+//! post-crash files, so every sample restores the identical state. The
+//! replay/checkpoint gap is the argument for compaction-on-restore.
+//!
+//! Emits `BENCH_recovery.json` for the perf trajectory and the CI
+//! regression gate.
+
+use std::path::PathBuf;
+
+use inkpca::coordinator::{
+    EngineConfig, FsyncPolicy, KernelConfig, PersistConfig, PoolConfig, PoolSnapshot, ShardPool,
+    StreamConfig, StreamRouter,
+};
+use inkpca::data::{load, Dataset};
+use inkpca::util::bench::Bench;
+
+const SEED_POINTS: usize = 4;
+
+fn stream_cfg() -> StreamConfig {
+    StreamConfig {
+        kernel: KernelConfig::Rbf { sigma: 2.0 },
+        mean_adjust: false,
+        seed_points: SEED_POINTS,
+        ..StreamConfig::default()
+    }
+}
+
+fn spawn(persist: Option<PersistConfig>) -> (ShardPool, StreamRouter) {
+    let pool = ShardPool::spawn(PoolConfig {
+        shards: 1,
+        queue: 64,
+        engine: EngineConfig::Native,
+        persist,
+        ..PoolConfig::default()
+    });
+    let router = pool.router();
+    (pool, router)
+}
+
+fn scratch_dir(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("inkpca_bench_recovery_{tag}_{}", std::process::id()))
+}
+
+fn reset_dir(dir: &PathBuf) {
+    std::fs::remove_dir_all(dir).ok();
+    std::fs::create_dir_all(dir).unwrap();
+}
+
+/// Per-point feed of the whole dataset through one durable (or not)
+/// stream; returns the pool snapshot taken while the stream is open.
+fn run_feed(ds: &Dataset, persist: Option<PersistConfig>) -> PoolSnapshot {
+    let (pool, router) = spawn(persist);
+    let h = router.open_stream("bench", ds.dim(), stream_cfg()).unwrap();
+    for i in 0..ds.n() {
+        router.ingest(&h, ds.x.row(i).to_vec()).unwrap();
+    }
+    let snap = router.pool_snapshot().unwrap();
+    pool.shutdown();
+    snap
+}
+
+/// Snapshot the directory's files into memory (the pristine post-crash
+/// state the restore series resets to before every sample).
+fn template_of(dir: &PathBuf) -> Vec<(String, Vec<u8>)> {
+    let mut files: Vec<(String, Vec<u8>)> = std::fs::read_dir(dir)
+        .unwrap()
+        .filter_map(|e| {
+            let p = e.ok()?.path();
+            let name = p.file_name()?.to_str()?.to_string();
+            Some((name, std::fs::read(&p).ok()?))
+        })
+        .collect();
+    files.sort_by(|a, b| a.0.cmp(&b.0));
+    files
+}
+
+fn restore_from(dir: &PathBuf, template: &[(String, Vec<u8>)]) -> (u64, usize) {
+    reset_dir(dir);
+    for (name, bytes) in template {
+        std::fs::write(dir.join(name), bytes).unwrap();
+    }
+    let (pool, router) = spawn(Some(PersistConfig::new(dir.clone())));
+    let report = router.restore_pool().unwrap();
+    assert!(report.failed.is_empty(), "{:?}", report.failed);
+    let m = router.snapshot(&report.handles[0]).unwrap().m;
+    pool.shutdown();
+    (report.replayed, m)
+}
+
+fn main() {
+    let mut b = Bench::new();
+    let fast = std::env::var("INKPCA_BENCH_FAST").is_ok();
+    let n = if fast { 48 } else { 160 };
+    let mut ds = load("yeast", n, 42).unwrap();
+    ds.standardize();
+
+    // Series 1: the WAL's ingest-path overhead ladder.
+    let dir = scratch_dir("wal");
+    let policies: [(&str, Option<FsyncPolicy>); 3] = [
+        ("off", None),
+        ("wal", Some(FsyncPolicy::Off)),
+        ("wal_fsync8", Some(FsyncPolicy::EveryN(8))),
+    ];
+    for (label, fsync) in policies {
+        b.case(&format!("recovery/ingest_{label}/1stream"), || {
+            let persist = fsync.map(|f| {
+                reset_dir(&dir);
+                let mut p = PersistConfig::new(dir.clone());
+                p.fsync = f;
+                p
+            });
+            run_feed(&ds, persist).accepted
+        });
+        // Attribution guard (outside the timed region): durable runs
+        // logged one record per open + one per point, error-free.
+        if let Some(f) = fsync {
+            reset_dir(&dir);
+            let mut p = PersistConfig::new(dir.clone());
+            p.fsync = f;
+            let snap = run_feed(&ds, Some(p));
+            assert_eq!(snap.wal_appends, ds.n() as u64 + 1, "{label}");
+            assert_eq!(snap.wal_errors, 0, "{label}");
+            assert!(snap.wal_bytes > 0, "{label}");
+        }
+    }
+
+    // Series 2: checkpointing a live stream, by eigensystem size.
+    for m in if fast { vec![n] } else { vec![n / 2, n] } {
+        let dir = scratch_dir("ckpt");
+        reset_dir(&dir);
+        let (pool, router) = spawn(Some(PersistConfig::new(dir.clone())));
+        let h = router.open_stream("bench", ds.dim(), stream_cfg()).unwrap();
+        for i in 0..m {
+            router.ingest(&h, ds.x.row(i).to_vec()).unwrap();
+        }
+        b.case(&format!("recovery/checkpoint/m{m}"), || {
+            // Overwrites the same file each time — the atomic
+            // tmp+rename replace is part of what a cut costs.
+            router.checkpoint_stream(&h).unwrap()
+        });
+        pool.shutdown();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    // Series 3: crash-to-serving, checkpoint install vs full replay.
+    // Pristine state A: checkpointed + rotated WAL (clean cut).
+    let dir = scratch_dir("restore");
+    reset_dir(&dir);
+    let (pool, router) = spawn(Some(PersistConfig::new(dir.clone())));
+    let h = router.open_stream("bench", ds.dim(), stream_cfg()).unwrap();
+    for i in 0..ds.n() {
+        router.ingest(&h, ds.x.row(i).to_vec()).unwrap();
+    }
+    router.checkpoint_all().unwrap();
+    drop(h);
+    pool.shutdown(); // crash right after the checkpoint
+    let ckpt_template = template_of(&dir);
+
+    // Pristine state B: the same stream, never checkpointed — the WAL
+    // alone carries it.
+    reset_dir(&dir);
+    let (pool, router) = spawn(Some(PersistConfig::new(dir.clone())));
+    let h = router.open_stream("bench", ds.dim(), stream_cfg()).unwrap();
+    for i in 0..ds.n() {
+        router.ingest(&h, ds.x.row(i).to_vec()).unwrap();
+    }
+    drop(h);
+    pool.shutdown(); // crash with nothing but the log
+    let wal_template = template_of(&dir);
+
+    let stats_ckpt = b.case(&format!("recovery/restore_checkpoint/m{n}"), || {
+        let (replayed, m) = restore_from(&dir, &ckpt_template);
+        assert_eq!(replayed, 0, "a fresh checkpoint needs no replay");
+        assert_eq!(m, n);
+        m
+    });
+    let stats_replay = b.case(&format!("recovery/restore_replay/m{n}"), || {
+        let (replayed, m) = restore_from(&dir, &wal_template);
+        assert_eq!(replayed, n as u64, "the whole feed replays");
+        assert_eq!(m, n);
+        m
+    });
+    println!(
+        "restore m={n}: checkpoint {:.3} ms vs replay {:.3} ms ({:.1}x) — what \
+         compaction-on-restore buys the second crash",
+        stats_ckpt.median_ns / 1e6,
+        stats_replay.median_ns / 1e6,
+        stats_replay.median_ns / stats_ckpt.median_ns.max(1.0)
+    );
+    std::fs::remove_dir_all(&dir).ok();
+
+    b.finish();
+    if let Err(e) = b.write_json("BENCH_recovery.json") {
+        eprintln!("warning: could not write BENCH_recovery.json: {e}");
+    } else {
+        println!("wrote BENCH_recovery.json");
+    }
+}

@@ -85,6 +85,19 @@ impl DriftMonitor {
     pub fn latest(&self) -> Option<&DriftPoint> {
         self.history.last()
     }
+
+    /// Accepted examples since the last measurement — serialized by the
+    /// checkpoint codec so a restored monitor keeps its cadence phase.
+    pub fn accepted_since(&self) -> usize {
+        self.accepted_since
+    }
+
+    /// Rebuild a monitor from checkpointed parts (cadence, phase, and
+    /// the measurement history) — the restore inverse of
+    /// [`DriftMonitor::accepted_since`] / [`DriftMonitor::history`].
+    pub fn from_parts(every: usize, accepted_since: usize, history: Vec<DriftPoint>) -> Self {
+        DriftMonitor { every, accepted_since, history }
+    }
 }
 
 #[cfg(test)]

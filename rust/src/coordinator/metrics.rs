@@ -135,6 +135,18 @@ pub struct Metrics {
     /// healthy read-heavy deployment shows this flat while
     /// `snapshot_reads` grows.
     pub worker_reads: u64,
+    /// Checkpoints of this stream written successfully.
+    pub checkpoints: u64,
+    /// Write-ahead log records appended for this stream.
+    pub wal_appends: u64,
+    /// Bytes those appends framed into the log.
+    pub wal_bytes: u64,
+    /// Failed log appends (the stream stayed live in memory — WAL
+    /// failures degrade, they never take the write path down). A
+    /// nonzero value means the log has gaps: recovery replays what was
+    /// captured and the monotonic sequence numbers keep the rest
+    /// unambiguous.
+    pub wal_errors: u64,
     started: Instant,
 }
 
@@ -152,6 +164,10 @@ impl Default for Metrics {
             ws_reallocs: 0,
             engine_gemms: 0,
             worker_reads: 0,
+            checkpoints: 0,
+            wal_appends: 0,
+            wal_bytes: 0,
+            wal_errors: 0,
             started: Instant::now(),
         }
     }
@@ -183,6 +199,10 @@ impl Metrics {
             reallocs_per_update: self.reallocs_per_update(),
             engine_gemms: self.engine_gemms,
             worker_reads: self.worker_reads,
+            checkpoints: self.checkpoints,
+            wal_appends: self.wal_appends,
+            wal_bytes: self.wal_bytes,
+            wal_errors: self.wal_errors,
             // Snapshot-cell fields are filled in by the stream entry
             // (the cell lives outside `Metrics`).
             snapshot_epoch: 0,
@@ -218,6 +238,14 @@ pub struct MetricsReport {
     pub engine_gemms: u64,
     /// Projections served through the worker queue.
     pub worker_reads: u64,
+    /// Checkpoints of this stream written successfully.
+    pub checkpoints: u64,
+    /// Write-ahead log records appended for this stream.
+    pub wal_appends: u64,
+    /// Bytes those appends framed into the log.
+    pub wal_bytes: u64,
+    /// Failed log appends (stream stayed live; the log has gaps).
+    pub wal_errors: u64,
     /// Publication epoch of the stream's latest projection snapshot
     /// (0 = nothing published — still seeding).
     pub snapshot_epoch: u64,
@@ -276,6 +304,10 @@ pub struct StreamGauges {
     pub worker_reads: u64,
     /// Accepted points not yet captured by a published snapshot.
     pub points_since_publish: u64,
+    /// Checkpoints of this stream written successfully.
+    pub checkpoints: u64,
+    /// Whether this stream was rebuilt by crash recovery.
+    pub restored: bool,
 }
 
 /// Per-shard occupancy row of a [`PoolSnapshot`] — how the pool's
@@ -346,6 +378,19 @@ pub struct PoolSnapshot {
     /// stale-handle traffic that arrived at a stream's old shard after
     /// its move and was delivered anyway.
     pub forwards: u64,
+    /// Stream checkpoints written successfully (lifetime — includes
+    /// closed streams).
+    pub checkpoints: u64,
+    /// Write-ahead log records appended across the pool (lifetime).
+    pub wal_appends: u64,
+    /// Bytes framed into the write-ahead logs (lifetime).
+    pub wal_bytes: u64,
+    /// Failed log appends (lifetime). Streams stay live through append
+    /// failures; a nonzero value here means some durability was
+    /// forfeited, not that writes were refused.
+    pub wal_errors: u64,
+    /// Currently open streams that were rebuilt by crash recovery.
+    pub recovered_streams: usize,
     /// Per-stream gauges, sorted by stream id.
     pub per_stream: Vec<StreamGauges>,
     /// Per-shard occupancy, one row per worker (retired workers are
@@ -357,7 +402,7 @@ impl std::fmt::Display for PoolSnapshot {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "pool: shards={}/{} streams={} migrations={} accepted={} excluded={} errors={} ws_total={}B ingest p50={:.0}µs p99={:.0}µs mean={:.0}µs (n={}) reads(snapshot,worker)=({},{}) engines(native,pjrt)={:?}",
+            "pool: shards={}/{} streams={} migrations={} accepted={} excluded={} errors={} ws_total={}B ingest p50={:.0}µs p99={:.0}µs mean={:.0}µs (n={}) reads(snapshot,worker)=({},{}) engines(native,pjrt)={:?} wal(appends,bytes,errors)=({},{},{}) checkpoints={} recovered={}",
             self.active_shards,
             self.shards,
             self.streams,
@@ -372,7 +417,12 @@ impl std::fmt::Display for PoolSnapshot {
             self.ingest_count,
             self.snapshot_reads,
             self.worker_reads,
-            self.engine_calls
+            self.engine_calls,
+            self.wal_appends,
+            self.wal_bytes,
+            self.wal_errors,
+            self.checkpoints,
+            self.recovered_streams
         )
     }
 }

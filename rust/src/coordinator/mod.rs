@@ -26,23 +26,36 @@
 //! [`SnapshotCell`], and [`StreamRouter::project_snapshot`] /
 //! [`StreamRouter::project_many`] serve projections from it without
 //! enqueueing a single shard command.
+//! [`wal`] and [`persist`] are the durability layer: per-shard
+//! CRC-framed write-ahead ingest logs plus per-stream checkpoints cut
+//! at the same queue-drain barrier migration uses —
+//! [`StreamRouter::checkpoint_all`] captures the pool,
+//! [`StreamRouter::restore_pool`] brings it back after a crash
+//! (torn log tails truncated, corrupt checkpoints quarantined, the
+//! WAL suffix replayed through the normal ingest path).
 
 pub mod drift;
 pub mod metrics;
+pub mod persist;
 pub mod ring;
 pub mod router;
 pub mod server;
 pub mod shard;
 pub mod snapshot;
+pub mod wal;
 
 pub use drift::{DriftMonitor, DriftPoint};
 pub use metrics::{
     LatencyHistogram, Metrics, MetricsReport, PoolSnapshot, ShardOccupancy, StreamGauges,
 };
+pub use persist::PersistConfig;
 pub use ring::HashRing;
 pub use router::{EnginePolicy, RoutedEngine};
 pub use server::{
     BatchReply, Config, Coordinator, EngineConfig, IngestReply, KernelConfig, Snapshot,
 };
-pub use shard::{PoolConfig, ShardPool, StreamConfig, StreamHandle, StreamRouter};
+pub use shard::{
+    PoolConfig, RestoreReport, ShardPool, StreamConfig, StreamHandle, StreamRouter,
+};
 pub use snapshot::{ProjectScratch, ProjectionSnapshot, SnapshotCell};
+pub use wal::{FsyncPolicy, WalRecord};

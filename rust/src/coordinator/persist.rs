@@ -1,0 +1,752 @@
+//! Checkpoint codec: the snapshot half of the durability story (the
+//! replay half is [`super::wal`]).
+//!
+//! A checkpoint file captures everything a stream entry needs to
+//! come back after a crash: the stream configuration, the seed buffer
+//! (for streams that died mid-seed), the serialized eigensystem
+//! essence ([`crate::kpca::KpcaParts`] plus the kernel's `describe()`
+//! string — see [`crate::kernels::kernel_from_describe`]), the drift
+//! monitor, the persistent counters, and the stream's WAL sequence
+//! cursor (`ingest_seq`) so recovery replays exactly the logged suffix
+//! the checkpoint does not already contain.
+//!
+//! File format (all integers little-endian):
+//!
+//! ```text
+//! file  := MAGIC(8)  len:u32  crc:u32  payload[len]
+//! ```
+//!
+//! with `crc = CRC32(payload)` — one frame per file, same framing
+//! discipline as the WAL. Writes are atomic: encode, write to a
+//! sibling temp file, fsync, rename over the target (and fsync the
+//! directory), so a crash mid-checkpoint leaves either the old file or
+//! the new one, never a hybrid. Reads that fail the magic/CRC/decode
+//! checks are *quarantined* — the file is renamed to `<name>.corrupt`
+//! and recovery proceeds with the remaining streams instead of
+//! aborting the pool (the quarantined stream may still recover from
+//! its WAL `Open` record).
+//!
+//! Deliberately not persisted: latency histograms (process-lifetime
+//! observability, meaningless across a restart) and snapshot-cell
+//! epochs (readers re-subscribe against a fresh cell after recovery).
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use crate::kpca::{BatchRotation, KpcaStats};
+use crate::linalg::Norms;
+
+use super::drift::DriftPoint;
+use super::ring::fnv1a;
+use super::server::KernelConfig;
+use super::shard::StreamConfig;
+use super::wal::{
+    crc32, put_f64, put_f64s, put_str, put_u32, put_u64, put_u8, read_wal, Cur, FsyncPolicy,
+    WalRecord,
+};
+
+/// Leading bytes of every checkpoint file (name + format version).
+pub const CKPT_MAGIC: &[u8; 8] = b"IKCKPT01";
+
+/// Where and how the pool persists: the snapshot directory (checkpoint
+/// files + per-shard WALs) and the WAL fsync policy.
+#[derive(Clone, Debug)]
+pub struct PersistConfig {
+    /// Directory holding `ckpt-*.ckpt` files and `wal-<shard>.log`s.
+    /// Created on pool spawn if missing.
+    pub dir: PathBuf,
+    /// When WAL appends reach stable storage (see [`FsyncPolicy`]).
+    pub fsync: FsyncPolicy,
+}
+
+impl PersistConfig {
+    pub fn new(dir: impl Into<PathBuf>) -> PersistConfig {
+        PersistConfig { dir: dir.into(), fsync: FsyncPolicy::default() }
+    }
+
+    /// The WAL file owned by shard `shard`'s worker.
+    pub(crate) fn wal_path(&self, shard: usize) -> PathBuf {
+        self.dir.join(format!("wal-{shard}.log"))
+    }
+}
+
+/// Serialized eigensystem state: [`crate::kpca::KpcaParts`] plus the
+/// kernel's exact `describe()` string (RBF-median streams persist the
+/// *resolved* sigma, so recovery never re-runs the heuristic on
+/// different data).
+#[derive(Clone, Debug)]
+pub(crate) struct KpcaCheckpoint {
+    pub(crate) kernel_describe: String,
+    pub(crate) mean_adjust: bool,
+    pub(crate) x: Vec<f64>,
+    pub(crate) vals: Vec<f64>,
+    pub(crate) vecs: Vec<f64>,
+    pub(crate) s: f64,
+    pub(crate) k1: Vec<f64>,
+    pub(crate) exclude_tol: f64,
+    pub(crate) naive_recenter_split: bool,
+    pub(crate) batch_rotation: Option<BatchRotation>,
+    pub(crate) stats: KpcaStats,
+    pub(crate) engine_gemms: u64,
+}
+
+/// Counters that survive a restart (everything in
+/// [`super::metrics::Metrics`] except the latency histograms).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub(crate) struct PersistedCounters {
+    pub(crate) accepted: u64,
+    pub(crate) excluded: u64,
+    pub(crate) errors: u64,
+    pub(crate) async_errors: u64,
+    pub(crate) worker_reads: u64,
+    pub(crate) checkpoints: u64,
+    pub(crate) wal_appends: u64,
+    pub(crate) wal_bytes: u64,
+    pub(crate) wal_errors: u64,
+}
+
+/// Everything one stream persists — the unit of
+/// [`write_checkpoint`]/[`load_checkpoints`].
+#[derive(Clone, Debug)]
+pub(crate) struct CheckpointData {
+    pub(crate) id: String,
+    pub(crate) dim: usize,
+    pub(crate) cfg: StreamConfig,
+    pub(crate) seeded: usize,
+    pub(crate) seed_buf: Vec<f64>,
+    pub(crate) state: Option<KpcaCheckpoint>,
+    pub(crate) drift_every: usize,
+    pub(crate) drift_accepted_since: usize,
+    pub(crate) drift_history: Vec<DriftPoint>,
+    pub(crate) counters: PersistedCounters,
+    pub(crate) since_publish: u64,
+    /// Next WAL sequence number the stream will assign — recovery
+    /// replays exactly the records with `seq >= ingest_seq`.
+    pub(crate) ingest_seq: u64,
+}
+
+// ---------------------------------------------------------------------
+// Kernel / stream-config codec (shared with WAL `Open` records)
+// ---------------------------------------------------------------------
+
+const KERN_RBF: u8 = 1;
+const KERN_RBF_MEDIAN: u8 = 2;
+const KERN_LINEAR: u8 = 3;
+const KERN_POLY: u8 = 4;
+const KERN_LAPLACIAN: u8 = 5;
+
+fn put_kernel_config(buf: &mut Vec<u8>, k: &KernelConfig) {
+    match k {
+        KernelConfig::Rbf { sigma } => {
+            put_u8(buf, KERN_RBF);
+            put_f64(buf, *sigma);
+        }
+        KernelConfig::RbfMedian => put_u8(buf, KERN_RBF_MEDIAN),
+        KernelConfig::Linear => put_u8(buf, KERN_LINEAR),
+        KernelConfig::Polynomial { degree, offset } => {
+            put_u8(buf, KERN_POLY);
+            put_u32(buf, *degree);
+            put_f64(buf, *offset);
+        }
+        KernelConfig::Laplacian { sigma } => {
+            put_u8(buf, KERN_LAPLACIAN);
+            put_f64(buf, *sigma);
+        }
+    }
+}
+
+fn take_kernel_config(c: &mut Cur<'_>) -> Result<KernelConfig, String> {
+    Ok(match c.take_u8()? {
+        KERN_RBF => KernelConfig::Rbf { sigma: c.take_f64()? },
+        KERN_RBF_MEDIAN => KernelConfig::RbfMedian,
+        KERN_LINEAR => KernelConfig::Linear,
+        KERN_POLY => KernelConfig::Polynomial { degree: c.take_u32()?, offset: c.take_f64()? },
+        KERN_LAPLACIAN => KernelConfig::Laplacian { sigma: c.take_f64()? },
+        k => return Err(format!("unknown kernel tag {k}")),
+    })
+}
+
+fn put_rotation(buf: &mut Vec<u8>, r: Option<BatchRotation>) {
+    put_u8(
+        buf,
+        match r {
+            None => 0,
+            Some(BatchRotation::Fused) => 1,
+            Some(BatchRotation::Sequential) => 2,
+        },
+    );
+}
+
+fn take_rotation(c: &mut Cur<'_>) -> Result<Option<BatchRotation>, String> {
+    Ok(match c.take_u8()? {
+        0 => None,
+        1 => Some(BatchRotation::Fused),
+        2 => Some(BatchRotation::Sequential),
+        t => return Err(format!("unknown rotation tag {t}")),
+    })
+}
+
+/// Encode a [`StreamConfig`] — also the opaque `cfg` bytes of a WAL
+/// `Open` record, so mid-seed streams recover their full configuration
+/// from the log alone.
+pub(crate) fn encode_stream_config(buf: &mut Vec<u8>, cfg: &StreamConfig) {
+    put_kernel_config(buf, &cfg.kernel);
+    put_u8(buf, cfg.mean_adjust as u8);
+    put_u64(buf, cfg.seed_points as u64);
+    put_u64(buf, cfg.drift_every as u64);
+    put_u64(buf, cfg.expected_m as u64);
+    put_u64(buf, cfg.expected_batch as u64);
+    put_rotation(buf, cfg.batch_rotation);
+    put_u64(buf, cfg.publish_every as u64);
+    put_u64(buf, cfg.snapshot_r as u64);
+    match cfg.publish_after {
+        None => put_u8(buf, 0),
+        Some(d) => {
+            put_u8(buf, 1);
+            put_u64(buf, d.as_nanos() as u64);
+        }
+    }
+}
+
+pub(crate) fn decode_stream_config(c: &mut Cur<'_>) -> Result<StreamConfig, String> {
+    Ok(StreamConfig {
+        kernel: take_kernel_config(c)?,
+        mean_adjust: c.take_u8()? != 0,
+        seed_points: c.take_u64()? as usize,
+        drift_every: c.take_u64()? as usize,
+        expected_m: c.take_u64()? as usize,
+        expected_batch: c.take_u64()? as usize,
+        batch_rotation: take_rotation(c)?,
+        publish_every: c.take_u64()? as usize,
+        snapshot_r: c.take_u64()? as usize,
+        publish_after: match c.take_u8()? {
+            0 => None,
+            _ => Some(Duration::from_nanos(c.take_u64()?)),
+        },
+    })
+}
+
+/// Decode a standalone config blob — the `cfg` bytes of a WAL `Open`
+/// record. Trailing bytes are rejected like everywhere else in the
+/// codec (a longer blob is a different format, not this one).
+pub(crate) fn decode_stream_config_bytes(bytes: &[u8]) -> Result<StreamConfig, String> {
+    let mut c = Cur::new(bytes);
+    let cfg = decode_stream_config(&mut c)?;
+    if c.remaining() != 0 {
+        return Err(format!("{} trailing bytes after stream config", c.remaining()));
+    }
+    Ok(cfg)
+}
+
+// ---------------------------------------------------------------------
+// Checkpoint payload codec
+// ---------------------------------------------------------------------
+
+fn put_stats(buf: &mut Vec<u8>, s: &KpcaStats) {
+    put_u64(buf, s.accepted as u64);
+    put_u64(buf, s.excluded as u64);
+    put_u64(buf, s.deflated as u64);
+    put_u64(buf, s.rotations as u64);
+    put_u64(buf, s.updates as u64);
+}
+
+fn take_stats(c: &mut Cur<'_>) -> Result<KpcaStats, String> {
+    Ok(KpcaStats {
+        accepted: c.take_u64()? as usize,
+        excluded: c.take_u64()? as usize,
+        deflated: c.take_u64()? as usize,
+        rotations: c.take_u64()? as usize,
+        updates: c.take_u64()? as usize,
+    })
+}
+
+fn encode_payload(buf: &mut Vec<u8>, d: &CheckpointData) {
+    put_str(buf, &d.id);
+    put_u64(buf, d.dim as u64);
+    encode_stream_config(buf, &d.cfg);
+    put_u64(buf, d.seeded as u64);
+    put_f64s(buf, &d.seed_buf);
+    match &d.state {
+        None => put_u8(buf, 0),
+        Some(st) => {
+            put_u8(buf, 1);
+            put_str(buf, &st.kernel_describe);
+            put_u8(buf, st.mean_adjust as u8);
+            put_f64s(buf, &st.x);
+            put_f64s(buf, &st.vals);
+            put_f64s(buf, &st.vecs);
+            put_f64(buf, st.s);
+            put_f64s(buf, &st.k1);
+            put_f64(buf, st.exclude_tol);
+            put_u8(buf, st.naive_recenter_split as u8);
+            put_rotation(buf, st.batch_rotation);
+            put_stats(buf, &st.stats);
+            put_u64(buf, st.engine_gemms);
+        }
+    }
+    put_u64(buf, d.drift_every as u64);
+    put_u64(buf, d.drift_accepted_since as u64);
+    put_u64(buf, d.drift_history.len() as u64);
+    for p in &d.drift_history {
+        put_u64(buf, p.m as u64);
+        put_f64(buf, p.norms.frobenius);
+        put_f64(buf, p.norms.spectral);
+        put_f64(buf, p.norms.trace);
+        put_f64(buf, p.orthogonality);
+    }
+    let c = &d.counters;
+    for v in [
+        c.accepted,
+        c.excluded,
+        c.errors,
+        c.async_errors,
+        c.worker_reads,
+        c.checkpoints,
+        c.wal_appends,
+        c.wal_bytes,
+        c.wal_errors,
+    ] {
+        put_u64(buf, v);
+    }
+    put_u64(buf, d.since_publish);
+    put_u64(buf, d.ingest_seq);
+}
+
+fn decode_payload(payload: &[u8]) -> Result<CheckpointData, String> {
+    let mut c = Cur::new(payload);
+    let id = c.take_str()?;
+    let dim = c.take_u64()? as usize;
+    let cfg = decode_stream_config(&mut c)?;
+    let seeded = c.take_u64()? as usize;
+    let seed_buf = c.take_f64s()?;
+    let state = match c.take_u8()? {
+        0 => None,
+        _ => Some(KpcaCheckpoint {
+            kernel_describe: c.take_str()?,
+            mean_adjust: c.take_u8()? != 0,
+            x: c.take_f64s()?,
+            vals: c.take_f64s()?,
+            vecs: c.take_f64s()?,
+            s: c.take_f64()?,
+            k1: c.take_f64s()?,
+            exclude_tol: c.take_f64()?,
+            naive_recenter_split: c.take_u8()? != 0,
+            batch_rotation: take_rotation(&mut c)?,
+            stats: take_stats(&mut c)?,
+            engine_gemms: c.take_u64()?,
+        }),
+    };
+    let drift_every = c.take_u64()? as usize;
+    let drift_accepted_since = c.take_u64()? as usize;
+    let n_drift = c.take_u64()? as usize;
+    if c.remaining() < n_drift.saturating_mul(40) {
+        return Err(format!("short drift history: {n_drift} points claimed"));
+    }
+    let mut drift_history = Vec::with_capacity(n_drift);
+    for _ in 0..n_drift {
+        drift_history.push(DriftPoint {
+            m: c.take_u64()? as usize,
+            norms: Norms {
+                frobenius: c.take_f64()?,
+                spectral: c.take_f64()?,
+                trace: c.take_f64()?,
+            },
+            orthogonality: c.take_f64()?,
+        });
+    }
+    let counters = PersistedCounters {
+        accepted: c.take_u64()?,
+        excluded: c.take_u64()?,
+        errors: c.take_u64()?,
+        async_errors: c.take_u64()?,
+        worker_reads: c.take_u64()?,
+        checkpoints: c.take_u64()?,
+        wal_appends: c.take_u64()?,
+        wal_bytes: c.take_u64()?,
+        wal_errors: c.take_u64()?,
+    };
+    let since_publish = c.take_u64()?;
+    let ingest_seq = c.take_u64()?;
+    if c.remaining() != 0 {
+        return Err(format!("{} trailing bytes after checkpoint", c.remaining()));
+    }
+    Ok(CheckpointData {
+        id,
+        dim,
+        cfg,
+        seeded,
+        seed_buf,
+        state,
+        drift_every,
+        drift_accepted_since,
+        drift_history,
+        counters,
+        since_publish,
+        ingest_seq,
+    })
+}
+
+/// Encode a full checkpoint file (magic + one CRC frame).
+pub(crate) fn encode_checkpoint(d: &CheckpointData) -> Vec<u8> {
+    let mut payload = Vec::new();
+    encode_payload(&mut payload, d);
+    let mut bytes = CKPT_MAGIC.to_vec();
+    bytes.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    bytes.extend_from_slice(&crc32(&payload).to_le_bytes());
+    bytes.extend_from_slice(&payload);
+    bytes
+}
+
+/// Decode checkpoint file bytes. Never panics on malformed input —
+/// every failure is an `Err` the loader turns into a quarantine.
+pub(crate) fn decode_checkpoint(bytes: &[u8]) -> Result<CheckpointData, String> {
+    if bytes.len() < CKPT_MAGIC.len() + 8 || &bytes[..CKPT_MAGIC.len()] != CKPT_MAGIC {
+        return Err("bad checkpoint magic".into());
+    }
+    let p = CKPT_MAGIC.len();
+    let len = u32::from_le_bytes(bytes[p..p + 4].try_into().unwrap()) as usize;
+    let crc = u32::from_le_bytes(bytes[p + 4..p + 8].try_into().unwrap());
+    let payload = bytes
+        .get(p + 8..p + 8 + len)
+        .ok_or_else(|| "truncated checkpoint frame".to_string())?;
+    if bytes.len() != p + 8 + len {
+        return Err("trailing bytes after checkpoint frame".into());
+    }
+    if crc32(payload) != crc {
+        return Err("checkpoint CRC mismatch".into());
+    }
+    decode_payload(payload)
+}
+
+// ---------------------------------------------------------------------
+// Files
+// ---------------------------------------------------------------------
+
+/// Checkpoint filename for a stream id: a sanitized prefix for human
+/// legibility plus the FNV-1a hash of the *full* id for uniqueness
+/// (the true id lives inside the file; the name is only an address).
+pub(crate) fn checkpoint_filename(id: &str) -> String {
+    let sanitized: String = id
+        .chars()
+        .take(40)
+        .map(|ch| if ch.is_ascii_alphanumeric() || ch == '-' || ch == '_' { ch } else { '_' })
+        .collect();
+    format!("ckpt-{sanitized}-{:016x}.ckpt", fnv1a(id))
+}
+
+pub(crate) fn checkpoint_path(dir: &Path, id: &str) -> PathBuf {
+    dir.join(checkpoint_filename(id))
+}
+
+/// Atomically (write-temp → fsync → rename) persist one checkpoint.
+/// Returns the encoded byte count.
+pub(crate) fn write_checkpoint(dir: &Path, d: &CheckpointData) -> std::io::Result<u64> {
+    let bytes = encode_checkpoint(d);
+    let target = checkpoint_path(dir, &d.id);
+    let tmp = target.with_extension("ckpt.tmp");
+    {
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(&bytes)?;
+        f.sync_all()?;
+    }
+    std::fs::rename(&tmp, &target)?;
+    // Make the rename itself durable. Directory fsync is best-effort:
+    // not every filesystem supports opening a directory for sync.
+    if let Ok(dirf) = std::fs::File::open(dir) {
+        let _ = dirf.sync_all();
+    }
+    Ok(bytes.len() as u64)
+}
+
+/// Best-effort removal of a closed stream's checkpoint (the WAL `Close`
+/// record covers the window until the next rotation).
+pub(crate) fn remove_checkpoint(dir: &Path, id: &str) {
+    let _ = std::fs::remove_file(checkpoint_path(dir, id));
+}
+
+/// Result of sweeping a snapshot directory for checkpoints.
+#[derive(Debug, Default)]
+pub(crate) struct LoadedCheckpoints {
+    pub(crate) checkpoints: Vec<CheckpointData>,
+    /// Files that failed the magic/CRC/decode checks, renamed to
+    /// `<name>.corrupt` and skipped.
+    pub(crate) quarantined: Vec<PathBuf>,
+}
+
+/// Load every `ckpt-*.ckpt` under `dir`, quarantining corrupt files
+/// instead of failing the sweep. A missing directory loads as empty.
+pub(crate) fn load_checkpoints(dir: &Path) -> std::io::Result<LoadedCheckpoints> {
+    let mut out = LoadedCheckpoints::default();
+    let entries = match std::fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(out),
+        Err(e) => return Err(e),
+    };
+    let mut paths: Vec<PathBuf> = entries
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| {
+            p.extension().is_some_and(|x| x == "ckpt")
+                && p.file_name()
+                    .and_then(|n| n.to_str())
+                    .is_some_and(|n| n.starts_with("ckpt-"))
+        })
+        .collect();
+    paths.sort(); // deterministic restore order
+    for path in paths {
+        let decoded = std::fs::read(&path)
+            .map_err(|e| e.to_string())
+            .and_then(|bytes| decode_checkpoint(&bytes));
+        match decoded {
+            Ok(d) => out.checkpoints.push(d),
+            Err(_) => {
+                let mut corrupt = path.clone().into_os_string();
+                corrupt.push(".corrupt");
+                let _ = std::fs::rename(&path, PathBuf::from(corrupt));
+                out.quarantined.push(path);
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Result of sweeping a snapshot directory for WAL files.
+#[derive(Debug, Default)]
+pub(crate) struct LoadedWals {
+    /// All records across every shard log, in per-file append order
+    /// (cross-file order is irrelevant: ingest replay sorts by the
+    /// per-stream sequence number).
+    pub(crate) records: Vec<WalRecord>,
+    /// Shard logs that ended in a torn tail (tolerated — the valid
+    /// prefix is in `records`).
+    pub(crate) torn_logs: usize,
+}
+
+/// Read every `wal-*.log` under `dir`, tolerating torn tails. A missing
+/// directory loads as empty.
+pub(crate) fn load_wals(dir: &Path) -> std::io::Result<LoadedWals> {
+    let mut out = LoadedWals::default();
+    let entries = match std::fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(out),
+        Err(e) => return Err(e),
+    };
+    let mut paths: Vec<PathBuf> = entries
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| {
+            p.extension().is_some_and(|x| x == "log")
+                && p.file_name()
+                    .and_then(|n| n.to_str())
+                    .is_some_and(|n| n.starts_with("wal-"))
+        })
+        .collect();
+    paths.sort();
+    for path in paths {
+        let read = read_wal(&path)?;
+        out.torn_logs += read.torn as usize;
+        out.records.extend(read.records);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn temp_dir(tag: &str) -> PathBuf {
+        static SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+        let n = SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let dir = std::env::temp_dir().join(format!(
+            "inkpca_persist_{tag}_{}_{n}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn sample_config() -> StreamConfig {
+        StreamConfig {
+            kernel: KernelConfig::Polynomial { degree: 3, offset: 0.25 },
+            mean_adjust: true,
+            seed_points: 7,
+            drift_every: 5,
+            expected_m: 128,
+            expected_batch: 16,
+            batch_rotation: Some(BatchRotation::Sequential),
+            publish_every: 32,
+            snapshot_r: 4,
+            publish_after: Some(Duration::from_millis(250)),
+        }
+    }
+
+    fn sample_checkpoint(id: &str) -> CheckpointData {
+        CheckpointData {
+            id: id.to_string(),
+            dim: 3,
+            cfg: sample_config(),
+            seeded: 4,
+            seed_buf: vec![0.5; 12],
+            state: Some(KpcaCheckpoint {
+                kernel_describe: "rbf(sigma=0.30000000000000004)".into(),
+                mean_adjust: true,
+                x: (0..12).map(|i| i as f64 * 0.125).collect(),
+                vals: vec![0.1, 0.7, 1.0 / 3.0, 2.5],
+                vecs: (0..16).map(|i| (i as f64).sin()).collect(),
+                s: 17.25,
+                k1: vec![1.0, 2.0, 3.0, 4.0],
+                exclude_tol: 1e-10,
+                naive_recenter_split: false,
+                batch_rotation: Some(BatchRotation::Fused),
+                stats: KpcaStats {
+                    accepted: 20,
+                    excluded: 2,
+                    deflated: 1,
+                    rotations: 3,
+                    updates: 80,
+                },
+                engine_gemms: 44,
+            }),
+            drift_every: 5,
+            drift_accepted_since: 2,
+            drift_history: vec![DriftPoint {
+                m: 10,
+                norms: Norms { frobenius: 1e-12, spectral: 5e-13, trace: -2e-13 },
+                orthogonality: 3e-14,
+            }],
+            counters: PersistedCounters {
+                accepted: 20,
+                excluded: 2,
+                errors: 1,
+                async_errors: 1,
+                worker_reads: 9,
+                checkpoints: 2,
+                wal_appends: 22,
+                wal_bytes: 4096,
+                wal_errors: 0,
+            },
+            since_publish: 3,
+            ingest_seq: 22,
+        }
+    }
+
+    #[test]
+    fn stream_config_roundtrip_all_kernels() {
+        let kernels = [
+            KernelConfig::Rbf { sigma: 0.1 + 0.2 },
+            KernelConfig::RbfMedian,
+            KernelConfig::Linear,
+            KernelConfig::Polynomial { degree: 2, offset: 1.0 },
+            KernelConfig::Laplacian { sigma: 1.0 / 3.0 },
+        ];
+        for kernel in kernels {
+            for publish_after in [None, Some(Duration::from_micros(1500))] {
+                for batch_rotation in
+                    [None, Some(BatchRotation::Fused), Some(BatchRotation::Sequential)]
+                {
+                    let cfg = StreamConfig {
+                        kernel: kernel.clone(),
+                        batch_rotation,
+                        publish_after,
+                        ..sample_config()
+                    };
+                    let mut buf = Vec::new();
+                    encode_stream_config(&mut buf, &cfg);
+                    let back = decode_stream_config(&mut Cur::new(&buf)).unwrap();
+                    // `Debug` prints f64 fields with shortest exact
+                    // round-trip precision, so string equality is value
+                    // equality.
+                    assert_eq!(format!("{cfg:?}"), format!("{back:?}"));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn checkpoint_roundtrip_is_exact() {
+        let d = sample_checkpoint("stream/with:odd id");
+        let bytes = encode_checkpoint(&d);
+        let back = decode_checkpoint(&bytes).unwrap();
+        assert_eq!(format!("{d:?}"), format!("{back:?}"));
+        // Seeding-only checkpoint (no eigensystem yet) round-trips too.
+        let d2 = CheckpointData { state: None, ..sample_checkpoint("mid-seed") };
+        let back2 = decode_checkpoint(&encode_checkpoint(&d2)).unwrap();
+        assert_eq!(format!("{d2:?}"), format!("{back2:?}"));
+    }
+
+    #[test]
+    fn decode_rejects_corruption_without_panicking() {
+        let d = sample_checkpoint("c");
+        let good = encode_checkpoint(&d);
+        assert!(decode_checkpoint(b"not a checkpoint").is_err());
+        // Flip one bit everywhere: every mutant must decode to Err or
+        // to the original (a flip in ignored padding does not exist in
+        // this format, but the contract is only "never panic, never
+        // accept a corrupt payload").
+        for byte in 0..good.len() {
+            let mut bad = good.clone();
+            bad[byte] ^= 0x40;
+            if let Ok(back) = decode_checkpoint(&bad) {
+                assert_eq!(format!("{back:?}"), format!("{d:?}"), "byte {byte}");
+            }
+        }
+        // Truncations never panic.
+        for cut in 0..good.len() {
+            let _ = decode_checkpoint(&good[..cut]);
+        }
+    }
+
+    #[test]
+    fn write_then_load_roundtrips_and_overwrites() {
+        let dir = temp_dir("roundtrip");
+        let d = sample_checkpoint("s1");
+        write_checkpoint(&dir, &d).unwrap();
+        // Second write of the same stream replaces, not duplicates.
+        let mut d2 = sample_checkpoint("s1");
+        d2.ingest_seq = 99;
+        write_checkpoint(&dir, &d2).unwrap();
+        let loaded = load_checkpoints(&dir).unwrap();
+        assert_eq!(loaded.checkpoints.len(), 1);
+        assert!(loaded.quarantined.is_empty());
+        assert_eq!(loaded.checkpoints[0].ingest_seq, 99);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corrupt_file_is_quarantined_not_fatal() {
+        let dir = temp_dir("quarantine");
+        write_checkpoint(&dir, &sample_checkpoint("good")).unwrap();
+        let bad_path = dir.join("ckpt-bad-0000000000000000.ckpt");
+        let mut bytes = encode_checkpoint(&sample_checkpoint("bad"));
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0xFF;
+        std::fs::write(&bad_path, &bytes).unwrap();
+        let loaded = load_checkpoints(&dir).unwrap();
+        assert_eq!(loaded.checkpoints.len(), 1);
+        assert_eq!(loaded.checkpoints[0].id, "good");
+        assert_eq!(loaded.quarantined, vec![bad_path.clone()]);
+        assert!(!bad_path.exists(), "corrupt file renamed away");
+        let corrupt = PathBuf::from(format!("{}.corrupt", bad_path.display()));
+        assert!(corrupt.exists(), "renamed to .corrupt for post-mortem");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_dir_loads_empty() {
+        let dir = std::env::temp_dir().join("inkpca_persist_never_created");
+        assert!(load_checkpoints(&dir).unwrap().checkpoints.is_empty());
+        assert!(load_wals(&dir).unwrap().records.is_empty());
+    }
+
+    #[test]
+    fn filenames_are_sanitized_and_collision_safe() {
+        let a = checkpoint_filename("sensor/7:rack#2");
+        assert!(a.starts_with("ckpt-sensor_7_rack_2-"));
+        assert!(a.ends_with(".ckpt"));
+        // Ids that sanitize identically still get distinct names.
+        let b = checkpoint_filename("sensor_7_rack_2");
+        assert_ne!(a, b);
+        // Long ids truncate the legible prefix, not the hash.
+        let long = checkpoint_filename(&"x".repeat(200));
+        assert!(long.len() < 80);
+    }
+}

@@ -7,14 +7,19 @@
 //! per-stream kernel is owned by the stream entry through an `Arc` —
 //! the old per-coordinator `Box::leak` is gone.
 
+use std::time::Duration;
+
 use crate::data::StreamSource;
 use crate::kpca::KpcaStats;
 use crate::linalg::Norms;
 
 use super::drift::DriftPoint;
 use super::metrics::MetricsReport;
+use super::persist::PersistConfig;
 use super::router::EnginePolicy;
-use super::shard::{PoolConfig, ShardPool, StreamConfig, StreamHandle, StreamRouter};
+use super::shard::{
+    PoolConfig, RestoreReport, ShardPool, StreamConfig, StreamHandle, StreamRouter,
+};
 
 /// Kernel selection (constructed inside the owning shard worker).
 #[derive(Clone, Debug)]
@@ -67,6 +72,14 @@ pub struct Config {
     /// batch flushes and `sync` still publish). See
     /// [`StreamConfig::publish_every`].
     pub publish_every: usize,
+    /// Wall-clock snapshot staleness bound: publish on the next accept
+    /// once this much time has passed since the last publication, even
+    /// if the count cadence hasn't been reached. `None` disables. See
+    /// [`StreamConfig::publish_after`].
+    pub publish_after: Option<Duration>,
+    /// Durability: snapshot directory + WAL fsync policy. `None` (the
+    /// default) runs fully in-memory, exactly as before.
+    pub persist: Option<PersistConfig>,
 }
 
 impl Default for Config {
@@ -79,6 +92,8 @@ impl Default for Config {
             seed_points: 20,
             drift_every: 0,
             publish_every: 64,
+            publish_after: None,
+            persist: None,
         }
     }
 }
@@ -92,6 +107,7 @@ impl Config {
                 shards: 1,
                 queue: self.queue,
                 engine: self.engine.clone(),
+                persist: self.persist.clone(),
                 ..PoolConfig::default()
             },
             StreamConfig {
@@ -100,6 +116,7 @@ impl Config {
                 seed_points: self.seed_points,
                 drift_every: self.drift_every,
                 publish_every: self.publish_every,
+                publish_after: self.publish_after,
                 ..StreamConfig::default()
             },
         )
@@ -166,6 +183,42 @@ impl Coordinator {
             .open_stream(DEFAULT_STREAM, dim, stream_cfg)
             .expect("fresh 1-shard pool accepts its default stream");
         Coordinator { router, handle, pool }
+    }
+
+    /// Spawn a coordinator and recover the default stream from
+    /// `cfg.persist`'s snapshot directory: checkpoints are loaded, the
+    /// WAL suffix replayed, and the handle re-resolved. If the
+    /// directory holds no trace of the default stream (first boot, or
+    /// everything was cleanly closed), a fresh stream is opened —
+    /// restore-then-serve is safe to run unconditionally.
+    ///
+    /// Errors if `cfg.persist` is `None` or the restore itself fails.
+    pub fn restore(cfg: Config, dim: usize) -> Result<(Coordinator, RestoreReport), String> {
+        if cfg.persist.is_none() {
+            return Err("durability not configured (no snapshot dir)".into());
+        }
+        let (pool_cfg, stream_cfg) = cfg.split();
+        let pool = ShardPool::spawn(pool_cfg);
+        let router = pool.router();
+        let report = router.restore_pool()?;
+        let handle = match report.handles.iter().find(|h| h.id() == DEFAULT_STREAM) {
+            Some(h) => h.clone(),
+            None => router.open_stream(DEFAULT_STREAM, dim, stream_cfg)?,
+        };
+        Ok((Coordinator { router, handle, pool }, report))
+    }
+
+    /// Checkpoint the default stream at a consistent cut. Returns the
+    /// number of bytes written — see
+    /// [`StreamRouter::checkpoint_stream`].
+    pub fn checkpoint(&self) -> Result<u64, String> {
+        self.router.checkpoint_stream(&self.handle)
+    }
+
+    /// Checkpoint every live stream and rotate the WAL on full success
+    /// — see [`StreamRouter::checkpoint_all`].
+    pub fn checkpoint_all(&self) -> Result<usize, String> {
+        self.router.checkpoint_all()
     }
 
     /// Ingest one example (blocks under backpressure).

@@ -107,27 +107,47 @@
 //! immutable `Arc<Topology>` (writers rebuild + swap under the reshard
 //! lock; readers cache the `Arc` per thread, keyed by epoch), so the
 //! data-path verbs stop paying a `RwLock` read per command.
+//!
+//! **Durability.** With [`PoolConfig::persist`] set, every worker
+//! write-ahead logs well-formed ingest commands to its own
+//! [`super::wal`] file *before* applying them, and the pool cuts
+//! per-stream [`super::persist`] checkpoints on demand
+//! ([`StreamRouter::checkpoint_stream`] /
+//! [`StreamRouter::checkpoint_all`] — the shard queue doubles as the
+//! consistent-cut barrier, exactly like migration). After a crash,
+//! [`StreamRouter::restore_pool`] reloads the checkpoints (corrupt
+//! files are quarantined, not fatal), replays each stream's
+//! torn-tail-tolerant WAL suffix through the normal ingest path, and
+//! hands back live handles. Log-append failures degrade, never block:
+//! bounded retries, then the stream keeps serving from memory with its
+//! `wal_errors` counter ticking — durability is not allowed to take
+//! the write path down.
 
 use std::cell::RefCell;
 use std::collections::{HashMap, HashSet, VecDeque};
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex, RwLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::kernels::{median_heuristic, Kernel};
-use crate::kpca::{BatchRotation, IncrementalKpca, KpcaStats};
+use crate::kernels::{kernel_from_describe, median_heuristic, Kernel};
+use crate::kpca::{BatchRotation, IncrementalKpca, KpcaParts, KpcaStats};
 use crate::linalg::Mat;
 
 use super::drift::{DriftMonitor, DriftPoint};
 use super::metrics::{
     LatencyHistogram, Metrics, MetricsReport, PoolSnapshot, ShardOccupancy, StreamGauges,
 };
+use super::persist::{
+    self, CheckpointData, KpcaCheckpoint, PersistConfig, PersistedCounters,
+};
 use super::ring::HashRing;
 use super::router::RoutedEngine;
 use super::server::{BatchReply, EngineConfig, IngestReply, KernelConfig, Snapshot};
 use super::snapshot::{ProjectScratch, ProjectionSnapshot, SnapshotCell};
+use super::wal::{WalRecord, WalWriter};
 
 /// Per-stream configuration (what used to be the per-coordinator
 /// `Config`, minus the pool-level engine/queue knobs).
@@ -162,6 +182,14 @@ pub struct StreamConfig {
     /// basis). Serving deployments that only ever read a handful of
     /// components can cap the per-publish copy at `O(m·r)`.
     pub snapshot_r: usize,
+    /// Wall-clock snapshot publish deadline for the sequential ingest
+    /// path: if at least one accepted point is waiting and this much
+    /// time has passed since the last publish, the next accepted point
+    /// publishes regardless of [`StreamConfig::publish_every`]. Bounds
+    /// snapshot staleness on trickle streams (a stream accepting one
+    /// point a minute would otherwise sit `publish_every` points — i.e.
+    /// an hour — behind). `None` keeps the count-only cadence.
+    pub publish_after: Option<Duration>,
 }
 
 impl Default for StreamConfig {
@@ -176,6 +204,7 @@ impl Default for StreamConfig {
             batch_rotation: None,
             publish_every: 64,
             snapshot_r: 0,
+            publish_after: None,
         }
     }
 }
@@ -195,11 +224,22 @@ pub struct PoolConfig {
     /// within ~2× — pinned by the ring's property tests) at O(vnodes)
     /// memory per shard.
     pub vnodes: usize,
+    /// Durability: snapshot directory + fsync policy. `None` (the
+    /// default) runs the pool purely in memory — no WAL, and the
+    /// checkpoint/restore verbs error. See [`super::persist`] and
+    /// [`super::wal`] for the on-disk formats.
+    pub persist: Option<PersistConfig>,
 }
 
 impl Default for PoolConfig {
     fn default() -> Self {
-        PoolConfig { shards: 1, queue: 64, engine: EngineConfig::Native, vnodes: 128 }
+        PoolConfig {
+            shards: 1,
+            queue: 64,
+            engine: EngineConfig::Native,
+            vnodes: 128,
+            persist: None,
+        }
     }
 }
 
@@ -339,13 +379,33 @@ enum ShardCommand {
         to_shard: usize,
         reply: SyncSender<Result<(u32, u32), String>>,
     },
-    /// Re-home a migrated entry (sent by the source worker to the
-    /// target worker). The entry rides the channel — `StreamEntry` is
-    /// `Send` because the eigensystem is. On failure the entry comes
-    /// back so the source can reinstate it.
+    /// Re-home a migrated (or, during recovery, restored) entry. The
+    /// entry rides the channel — `StreamEntry` is `Send` because the
+    /// eigensystem is. On failure the entry comes back so the source
+    /// can reinstate it. `from_migration` keeps restore installs out of
+    /// the migration counters.
     Install {
         entry: Box<StreamEntry>,
+        from_migration: bool,
         reply: SyncSender<InstallReply>,
+    },
+    /// Write one stream's checkpoint to the pool's snapshot directory.
+    /// Slot-addressed, so the shard queue drains ahead of it — the
+    /// captured state reflects every previously enqueued command (the
+    /// same consistent-cut barrier migration uses). Replies with the
+    /// checkpoint's encoded byte length.
+    Checkpoint {
+        slot: u32,
+        gen: u32,
+        reply: SyncSender<Result<u64, String>>,
+    },
+    /// Checkpoint every live stream on this shard, then rotate the
+    /// shard's WAL (every logged suffix is captured, so the old log is
+    /// redundant). The WAL is only rotated when *all* checkpoints
+    /// succeeded — a stream whose checkpoint failed still needs its
+    /// suffix. Replies with the number of streams checkpointed.
+    CheckpointAll {
+        reply: SyncSender<Result<usize, String>>,
     },
     /// Live streams of this shard, as (id, slot, gen) — the rebalance
     /// work list.
@@ -371,9 +431,11 @@ fn cmd_addr(cmd: &ShardCommand) -> Option<(u32, u32)> {
         | ShardCommand::Snapshot { slot, gen, .. }
         | ShardCommand::Metrics { slot, gen, .. }
         | ShardCommand::Close { slot, gen, .. }
-        | ShardCommand::Migrate { slot, gen, .. } => Some((*slot, *gen)),
+        | ShardCommand::Migrate { slot, gen, .. }
+        | ShardCommand::Checkpoint { slot, gen, .. } => Some((*slot, *gen)),
         ShardCommand::Open { .. }
         | ShardCommand::Install { .. }
+        | ShardCommand::CheckpointAll { .. }
         | ShardCommand::ListStreams { .. }
         | ShardCommand::Rollup { .. }
         | ShardCommand::Shutdown => None,
@@ -404,6 +466,7 @@ fn readdress(cmd: ShardCommand, to: StreamAddr) -> ShardCommand {
         ShardCommand::Migrate { to_shard, reply, .. } => {
             ShardCommand::Migrate { slot, gen, to_shard, reply }
         }
+        ShardCommand::Checkpoint { reply, .. } => ShardCommand::Checkpoint { slot, gen, reply },
         other => other,
     }
 }
@@ -422,6 +485,11 @@ struct ShardRollup {
     forwarded: u64,
     snapshot_reads: u64,
     worker_reads: u64,
+    checkpoints: u64,
+    wal_appends: u64,
+    wal_bytes: u64,
+    wal_errors: u64,
+    restored: usize,
     ingest: LatencyHistogram,
     project: LatencyHistogram,
     engine_calls: (u64, u64),
@@ -452,6 +520,10 @@ struct ClosedTotals {
     /// Snapshot-path reads served by closed streams' cells (absorbed
     /// from the cell at close, since the cell lives outside `Metrics`).
     snapshot_reads: u64,
+    checkpoints: u64,
+    wal_appends: u64,
+    wal_bytes: u64,
+    wal_errors: u64,
     ingest: LatencyHistogram,
     project: LatencyHistogram,
 }
@@ -463,6 +535,10 @@ impl ClosedTotals {
         self.errors += m.errors;
         self.engine_gemms += m.engine_gemms;
         self.worker_reads += m.worker_reads;
+        self.checkpoints += m.checkpoints;
+        self.wal_appends += m.wal_appends;
+        self.wal_bytes += m.wal_bytes;
+        self.wal_errors += m.wal_errors;
         self.ingest.merge(&m.ingest_latency);
         self.project.merge(&m.project_latency);
     }
@@ -544,6 +620,17 @@ struct StreamEntry {
     /// Accepted points applied since the last snapshot publish — the
     /// staleness gauge surfaced as `points_since_publish`.
     since_publish: u64,
+    /// Next WAL sequence number to assign. Travels with the entry
+    /// across migrations, so a stream's records stay totally ordered
+    /// even when they span several shard logs; the checkpoint stores it
+    /// so recovery replays exactly the post-cut suffix.
+    ingest_seq: u64,
+    /// When the last snapshot was published — the reference point of
+    /// the [`StreamConfig::publish_after`] deadline.
+    last_publish: Instant,
+    /// Whether this entry was rebuilt by crash recovery (surfaced in
+    /// the stream's gauges; counted pool-wide as `recovered_streams`).
+    restored: bool,
 }
 
 impl StreamEntry {
@@ -568,6 +655,9 @@ impl StreamEntry {
             pending_error: None,
             cell,
             since_publish: 0,
+            ingest_seq: 0,
+            last_publish: Instant::now(),
+            restored: false,
         }
     }
 
@@ -642,7 +732,23 @@ impl StreamEntry {
             if let Some(snap) = ProjectionSnapshot::capture(st, self.cfg.snapshot_r) {
                 self.cell.publish(snap);
                 self.since_publish = 0;
+                self.last_publish = Instant::now();
             }
+        }
+    }
+
+    /// Whether the sequential-path auto-publish cadence is due: the
+    /// accepted-point counter ([`StreamConfig::publish_every`]) or the
+    /// wall-clock deadline ([`StreamConfig::publish_after`]), whichever
+    /// fires first. The deadline only fires with unpublished points
+    /// waiting — an idle stream republishes nothing.
+    fn publish_due(&self) -> bool {
+        if self.cfg.publish_every > 0 && self.since_publish >= self.cfg.publish_every as u64 {
+            return true;
+        }
+        match self.cfg.publish_after {
+            Some(d) => self.since_publish > 0 && self.last_publish.elapsed() >= d,
+            None => false,
         }
     }
 
@@ -667,9 +773,7 @@ impl StreamEntry {
                 self.refresh_gauges();
                 if accepted {
                     self.since_publish += 1;
-                    if self.cfg.publish_every > 0
-                        && self.since_publish >= self.cfg.publish_every as u64
-                    {
+                    if self.publish_due() {
                         self.publish_snapshot();
                     }
                 }
@@ -734,6 +838,58 @@ impl StreamEntry {
         Ok(reply)
     }
 
+    /// Write-ahead: frame and append an ingest command's points
+    /// *before* they are applied, so replaying the log through the
+    /// normal ingest path after a crash reproduces exactly the applied
+    /// prefix. Only commands that pass the shape check are logged —
+    /// malformed ones error identically live and on replay, except they
+    /// never reach the log. `single` mirrors the stricter length check
+    /// of the one-point path (a multiple-of-dim vector that is not
+    /// exactly one point must not be replayed as a batch).
+    ///
+    /// `scratch` is the worker's one reusable record: refilled in place
+    /// per append, so the steady-state logging path allocates nothing
+    /// once its buffers are warm. Append failures degrade, never block:
+    /// the stream stays live in memory and the failure lands in the
+    /// per-stream `wal_errors` counter.
+    fn wal_log_ingest(
+        &mut self,
+        wal: &mut Option<WalWriter>,
+        scratch: &mut WalRecord,
+        pts: &[f64],
+        single: bool,
+    ) {
+        let Some(w) = wal.as_mut() else { return };
+        let shape_ok = if single {
+            pts.len() == self.dim
+        } else {
+            self.dim > 0 && !pts.is_empty() && pts.len() % self.dim == 0
+        };
+        if !shape_ok {
+            return;
+        }
+        {
+            let WalRecord::Ingest { id, seq, dim, points } = &mut *scratch else {
+                unreachable!("worker scratch is always an Ingest record")
+            };
+            id.clear();
+            id.push_str(&self.id);
+            *seq = self.ingest_seq;
+            *dim = self.dim as u32;
+            points.clear();
+            points.extend_from_slice(pts);
+        }
+        // The sequence number advances whether or not the append lands:
+        // a degraded log gets gaps, never ambiguous reuse.
+        self.ingest_seq += 1;
+        let errors_before = w.errors();
+        if let Some(n) = w.append(scratch) {
+            self.metrics.wal_appends += 1;
+            self.metrics.wal_bytes += n;
+        }
+        self.metrics.wal_errors += w.errors() - errors_before;
+    }
+
     fn project(&self, x: &[f64], r: usize) -> Result<Vec<f64>, String> {
         match (&self.state, x.len() == self.dim) {
             (Some(st), true) => Ok(st.project(x, r)),
@@ -793,6 +949,8 @@ impl StreamEntry {
             snapshot_reads: self.cell.reads(),
             worker_reads: self.metrics.worker_reads,
             points_since_publish: self.since_publish,
+            checkpoints: self.metrics.checkpoints,
+            restored: self.restored,
         }
     }
 
@@ -809,6 +967,154 @@ impl StreamEntry {
 
     fn final_stats(self) -> KpcaStats {
         self.state.map(|s| s.stats).unwrap_or_default()
+    }
+
+    /// Serialize everything this stream needs to come back after a
+    /// crash. Runs between commands on the owning worker, so the cut is
+    /// consistent: every command enqueued ahead of the checkpoint has
+    /// fully applied (the queue-drain barrier migration uses).
+    fn to_checkpoint(&self) -> CheckpointData {
+        let state = self.state.as_ref().map(|st| {
+            let m = st.len();
+            let mut vecs = Vec::with_capacity(m * m);
+            for i in 0..m {
+                vecs.extend_from_slice(st.vecs.row(i));
+            }
+            let (s, k1) = st.centering_sums();
+            KpcaCheckpoint {
+                kernel_describe: st.kernel_ref().describe(),
+                mean_adjust: st.mean_adjust,
+                x: st.data_flat().to_vec(),
+                vals: st.vals.clone(),
+                vecs,
+                s,
+                k1: k1.to_vec(),
+                exclude_tol: st.exclude_tol,
+                naive_recenter_split: st.naive_recenter_split,
+                batch_rotation: st.batch_rotation,
+                stats: st.stats,
+                engine_gemms: st.engine_gemms(),
+            }
+        });
+        CheckpointData {
+            id: self.id.to_string(),
+            dim: self.dim,
+            cfg: self.cfg.clone(),
+            seeded: self.seeded,
+            seed_buf: self.seed_buf.clone(),
+            state,
+            drift_every: self.drift.every,
+            drift_accepted_since: self.drift.accepted_since(),
+            drift_history: self.drift.history().to_vec(),
+            counters: PersistedCounters {
+                accepted: self.metrics.accepted,
+                excluded: self.metrics.excluded,
+                errors: self.metrics.errors,
+                async_errors: self.metrics.async_errors,
+                worker_reads: self.metrics.worker_reads,
+                checkpoints: self.metrics.checkpoints,
+                wal_appends: self.metrics.wal_appends,
+                wal_bytes: self.metrics.wal_bytes,
+                wal_errors: self.metrics.wal_errors,
+            },
+            since_publish: self.since_publish,
+            ingest_seq: self.ingest_seq,
+        }
+    }
+
+    /// Write this stream's checkpoint (atomic temp + rename; see
+    /// [`super::persist::write_checkpoint`]). Counts into the stream's
+    /// `checkpoints` gauge on success, its `errors` counter on failure.
+    fn checkpoint_to(&mut self, dir: &Path) -> Result<u64, String> {
+        let data = self.to_checkpoint();
+        match persist::write_checkpoint(dir, &data) {
+            Ok(n) => {
+                self.metrics.checkpoints += 1;
+                Ok(n)
+            }
+            Err(e) => {
+                self.metrics.errors += 1;
+                Err(format!("checkpoint of '{}' failed: {e}", self.id))
+            }
+        }
+    }
+
+    /// Rebuild an entry from checkpointed parts (generation 0 — the
+    /// installing worker assigns the real slot and generation). The
+    /// kernel is reconstructed from its `describe()` string; an
+    /// unparseable or shape-inconsistent checkpoint is an `Err`, which
+    /// recovery reports without aborting the pool. Latency histograms
+    /// and snapshot epochs restart fresh — they are process-lifetime
+    /// observability, deliberately not persisted.
+    fn from_checkpoint(
+        data: CheckpointData,
+        cell: Arc<SnapshotCell>,
+    ) -> Result<Box<StreamEntry>, String> {
+        let state = match data.state {
+            None => None,
+            Some(ck) => {
+                let kernel = kernel_from_describe(&ck.kernel_describe)?;
+                let parts = KpcaParts {
+                    mean_adjust: ck.mean_adjust,
+                    dim: data.dim,
+                    x: ck.x,
+                    vals: ck.vals,
+                    vecs: ck.vecs,
+                    s: ck.s,
+                    k1: ck.k1,
+                    exclude_tol: ck.exclude_tol,
+                    naive_recenter_split: ck.naive_recenter_split,
+                    batch_rotation: ck.batch_rotation,
+                    stats: ck.stats,
+                    engine_gemms: ck.engine_gemms,
+                };
+                let mut st = IncrementalKpca::from_parts(kernel, parts)?;
+                if data.cfg.expected_m > 0 || data.cfg.expected_batch > 0 {
+                    st.reserve(data.cfg.expected_m.max(st.len()), data.cfg.expected_batch);
+                }
+                Some(st)
+            }
+        };
+        let mut metrics = Metrics::default();
+        let c = data.counters;
+        metrics.accepted = c.accepted;
+        metrics.excluded = c.excluded;
+        metrics.errors = c.errors;
+        metrics.async_errors = c.async_errors;
+        metrics.worker_reads = c.worker_reads;
+        metrics.checkpoints = c.checkpoints;
+        metrics.wal_appends = c.wal_appends;
+        metrics.wal_bytes = c.wal_bytes;
+        metrics.wal_errors = c.wal_errors;
+        let mut entry = Box::new(StreamEntry {
+            id: Arc::from(data.id.as_str()),
+            gen: 0,
+            cfg: data.cfg,
+            dim: data.dim,
+            seed_buf: data.seed_buf,
+            seeded: data.seeded,
+            state,
+            drift: DriftMonitor::from_parts(
+                data.drift_every,
+                data.drift_accepted_since,
+                data.drift_history,
+            ),
+            metrics,
+            pending_error: None,
+            cell,
+            since_publish: data.since_publish,
+            ingest_seq: data.ingest_seq,
+            last_publish: Instant::now(),
+            restored: true,
+        });
+        if entry.state.is_some() {
+            entry.refresh_gauges();
+            // The restored eigensystem is current state: publish it so
+            // snapshot readers serve immediately (which also zeroes the
+            // staleness gauge — correctly, the snapshot is fresh).
+            entry.publish_snapshot();
+        }
+        Ok(entry)
     }
 }
 
@@ -967,6 +1273,14 @@ impl SlotTable {
         })
     }
 
+    /// Mutable sweep over the live entries — the `CheckpointAll` walk.
+    fn live_mut(&mut self) -> impl Iterator<Item = &mut StreamEntry> {
+        self.slots.iter_mut().filter_map(|s| match s {
+            Slot::Live(e) => Some(e.as_mut()),
+            _ => None,
+        })
+    }
+
     /// Live streams as the rebalance work list.
     fn list(&self) -> Vec<(Arc<str>, u32, u32)> {
         self.slots
@@ -1097,7 +1411,7 @@ fn migrate_entry(
     };
     let entry = table.extract(slot, gen)?;
     let (rtx, rrx) = sync_channel(1);
-    let install = ShardCommand::Install { entry, reply: rtx };
+    let install = ShardCommand::Install { entry, from_migration: true, reply: rtx };
     if let Err(send_err) = tx.send(install) {
         // Target worker gone (pool shutting down): put the stream back.
         if let ShardCommand::Install { entry, .. } = send_err.0 {
@@ -1160,11 +1474,34 @@ fn shard_worker(
     engine_cfg: EngineConfig,
     rx: Receiver<ShardCommand>,
     topo: SharedTopology,
+    persist: Option<PersistConfig>,
 ) {
     let engine = build_engine(&engine_cfg);
     let mut table = SlotTable::default();
     let mut closed = ClosedTotals::default();
     let mut migration = MigrationStats::default();
+    // Durability: one write-ahead log per worker, opened (with torn-
+    // tail repair) before the first command. An unopenable log is a
+    // degraded start, not a dead shard — the pool keeps serving from
+    // memory, like a runtime append failure would leave it.
+    let mut wal: Option<WalWriter> = persist.as_ref().and_then(|p| {
+        if let Err(e) = std::fs::create_dir_all(&p.dir) {
+            eprintln!("shard {shard}: snapshot dir unavailable ({e}); running without a log");
+            return None;
+        }
+        match WalWriter::open(p.wal_path(shard), p.fsync) {
+            Ok(w) => Some(w),
+            Err(e) => {
+                eprintln!("shard {shard}: WAL unavailable ({e}); running without a log");
+                None
+            }
+        }
+    });
+    // The one reusable record the ingest arms refill in place — the
+    // zero-allocation half of the steady-state append path (the frame
+    // buffer inside `WalWriter` is the other half).
+    let mut wal_scratch =
+        WalRecord::Ingest { id: String::new(), seq: 0, dim: 0, points: Vec::new() };
     // Forwards waiting for room in their target's bounded queue. The
     // worker NEVER blocks sending to another worker: a full target is
     // retried between commands (`try_send` + this buffer), so a
@@ -1206,12 +1543,37 @@ fn shard_worker(
         }
         match cmd {
             ShardCommand::Open { stream, dim, cfg, cell, reply } => {
-                let _ = reply.send(table.open(stream, dim, cfg, cell));
+                let res = table.open(stream.clone(), dim, cfg.clone(), cell);
+                if let Ok(&(slot, gen)) = res.as_ref() {
+                    if let Some(w) = wal.as_mut() {
+                        // Opens are rare — allocating the record here
+                        // is fine; only the per-point path must stay
+                        // allocation-silent.
+                        let mut cfg_bytes = Vec::new();
+                        persist::encode_stream_config(&mut cfg_bytes, &cfg);
+                        let rec = WalRecord::Open {
+                            id: stream.to_string(),
+                            dim: dim as u32,
+                            cfg: cfg_bytes,
+                        };
+                        let errors_before = w.errors();
+                        let appended = w.append(&rec);
+                        if let Ok(entry) = table.get_mut(slot, gen) {
+                            if let Some(n) = appended {
+                                entry.metrics.wal_appends += 1;
+                                entry.metrics.wal_bytes += n;
+                            }
+                            entry.metrics.wal_errors += w.errors() - errors_before;
+                        }
+                    }
+                }
+                let _ = reply.send(res);
             }
             ShardCommand::Ingest { slot, gen, x, reply } => {
                 let res = match table.get_mut(slot, gen) {
                     Ok(entry) => {
                         let t0 = Instant::now();
+                        entry.wal_log_ingest(&mut wal, &mut wal_scratch, &x, true);
                         let r = entry.ingest(&x, &engine);
                         entry.metrics.ingest_latency.record(t0.elapsed());
                         r
@@ -1223,6 +1585,7 @@ fn shard_worker(
             ShardCommand::IngestAsync { slot, gen, x } => match table.get_mut(slot, gen) {
                 Ok(entry) => {
                     let t0 = Instant::now();
+                    entry.wal_log_ingest(&mut wal, &mut wal_scratch, &x, true);
                     if let Err(e) = entry.ingest(&x, &engine) {
                         entry.metrics.async_errors += 1;
                         if entry.pending_error.is_none() {
@@ -1237,6 +1600,11 @@ fn shard_worker(
                 let res = match table.get_mut(slot, gen) {
                     Ok(entry) => {
                         let t0 = Instant::now();
+                        // One record per batch command: replay applies
+                        // it through the same batched entry point, so
+                        // even a partially applied batch (Err after a
+                        // prefix) reproduces the identical prefix.
+                        entry.wal_log_ingest(&mut wal, &mut wal_scratch, &xs, false);
                         let r = entry.ingest_many(&xs, &engine);
                         // One latency sample per batch command — the
                         // amortization the batch exists for.
@@ -1296,6 +1664,17 @@ fn shard_worker(
             }
             ShardCommand::Close { slot, gen, reply } => {
                 let res = table.close(slot, gen).map(|entry| {
+                    // A closed stream must stay closed across a crash:
+                    // log the close and drop the checkpoint (both
+                    // best-effort — worst case recovery resurrects a
+                    // stream the caller meant to retire, never the
+                    // reverse kind of loss).
+                    if let Some(w) = wal.as_mut() {
+                        let _ = w.append(&WalRecord::Close { id: entry.id.to_string() });
+                    }
+                    if let Some(p) = persist.as_ref() {
+                        persist::remove_checkpoint(&p.dir, &entry.id);
+                    }
                     // Keep the stream's lifetime counters/latency in
                     // the shard totals — pool counters stay monotonic.
                     closed.absorb(&entry.metrics);
@@ -1313,11 +1692,55 @@ fn shard_worker(
                     migrate_entry(shard, &mut table, &topo, &mut migration, slot, gen, to_shard);
                 let _ = reply.send(res);
             }
-            ShardCommand::Install { entry, reply } => {
+            ShardCommand::Install { entry, from_migration, reply } => {
                 let res = table.install(entry);
-                if res.is_ok() {
+                if res.is_ok() && from_migration {
                     migration.migrated_in += 1;
                 }
+                let _ = reply.send(res);
+            }
+            ShardCommand::Checkpoint { slot, gen, reply } => {
+                let res = match (table.get_mut(slot, gen), persist.as_ref()) {
+                    (Ok(entry), Some(p)) => entry.checkpoint_to(&p.dir),
+                    (Ok(_), None) => {
+                        Err("durability not configured (no snapshot dir)".to_string())
+                    }
+                    (Err(e), _) => Err(e),
+                };
+                let _ = reply.send(res);
+            }
+            ShardCommand::CheckpointAll { reply } => {
+                let res = match persist.as_ref() {
+                    None => Err("durability not configured (no snapshot dir)".to_string()),
+                    Some(p) => {
+                        let mut count = 0usize;
+                        let mut first_err: Option<String> = None;
+                        for entry in table.live_mut() {
+                            match entry.checkpoint_to(&p.dir) {
+                                Ok(_) => count += 1,
+                                Err(e) => {
+                                    first_err.get_or_insert(e);
+                                }
+                            }
+                        }
+                        match first_err {
+                            None => {
+                                // Every live stream is captured — the
+                                // logged suffix is redundant. Rotation
+                                // also re-arms a degraded writer.
+                                if let Some(w) = wal.as_mut() {
+                                    if let Err(e) = w.rotate() {
+                                        eprintln!("shard {shard}: WAL rotation failed ({e})");
+                                    }
+                                }
+                                Ok(count)
+                            }
+                            Some(e) => {
+                                Err(format!("checkpointed {count} stream(s), then: {e}"))
+                            }
+                        }
+                    }
+                };
                 let _ = reply.send(res);
             }
             ShardCommand::ListStreams { reply } => {
@@ -1336,6 +1759,11 @@ fn shard_worker(
                     forwarded: migration.forwarded,
                     snapshot_reads: closed.snapshot_reads,
                     worker_reads: closed.worker_reads,
+                    checkpoints: closed.checkpoints,
+                    wal_appends: closed.wal_appends,
+                    wal_bytes: closed.wal_bytes,
+                    wal_errors: closed.wal_errors,
+                    restored: 0,
                     ingest: closed.ingest.clone(),
                     project: closed.project.clone(),
                     engine_calls: engine.counts(),
@@ -1349,6 +1777,11 @@ fn shard_worker(
                     rollup.ws_engine_gemms += entry.metrics.engine_gemms;
                     rollup.snapshot_reads += entry.cell.reads();
                     rollup.worker_reads += entry.metrics.worker_reads;
+                    rollup.checkpoints += entry.metrics.checkpoints;
+                    rollup.wal_appends += entry.metrics.wal_appends;
+                    rollup.wal_bytes += entry.metrics.wal_bytes;
+                    rollup.wal_errors += entry.metrics.wal_errors;
+                    rollup.restored += entry.restored as usize;
                     rollup.ingest.merge(&entry.metrics.ingest_latency);
                     rollup.project.merge(&entry.metrics.project_latency);
                     rollup.gauges.push(entry.gauges(shard));
@@ -1379,10 +1812,14 @@ pub struct StreamRouter {
     /// insert: chains stay one hop long no matter how often a stream
     /// moves.
     redirects: Arc<RwLock<HashMap<StreamAddr, StreamAddr>>>,
-    /// Lock-free fast path for [`StreamRouter::resolve`]: set when the
-    /// first migration commits, never cleared. Until then every
-    /// data-path verb skips the redirect read lock entirely — a pool
-    /// that never reshapes pays (almost) nothing for elasticity.
+    /// Lock-free fast path for [`StreamRouter::resolve`]: set while
+    /// the redirect table is non-empty. Every data-path verb skips the
+    /// redirect read lock while it is clear — a pool that never
+    /// reshapes pays (almost) nothing for elasticity, and one whose
+    /// redirected streams have all since closed gets the fast path
+    /// back (see [`StreamRouter::close_stream`]'s redirect GC). Only
+    /// ever flipped inside the redirect table's write critical
+    /// section, so the flag can never contradict the map it guards.
     redirected: Arc<AtomicBool>,
     /// Pool-wide open-stream ids. Worker name maps are per shard and
     /// used to be a sufficient duplicate-open check (placement was
@@ -1402,6 +1839,10 @@ pub struct StreamRouter {
     queue: usize,
     /// Engine config for workers spawned by `add_shard`.
     engine: EngineConfig,
+    /// Durability config, shared with every worker (each opens its own
+    /// WAL). `None` = in-memory pool; the checkpoint/restore verbs
+    /// error.
+    persist: Option<PersistConfig>,
 }
 
 impl StreamRouter {
@@ -1456,17 +1897,41 @@ impl StreamRouter {
 
     /// Record `old → new` after a migration, re-pointing any existing
     /// redirect that targeted `old` (so every chain stays one hop).
+    /// The fast-path flag is raised inside the write critical section:
+    /// a concurrent GC's re-arm can then never interleave between the
+    /// insert and the store and leave the flag down with a non-empty
+    /// table.
     fn redirect(&self, old: StreamAddr, new: StreamAddr) {
-        {
-            let mut map = self.redirects.write().unwrap_or_else(|e| e.into_inner());
-            for v in map.values_mut() {
-                if *v == old {
-                    *v = new;
-                }
+        let mut map = self.redirects.write().unwrap_or_else(|e| e.into_inner());
+        for v in map.values_mut() {
+            if *v == old {
+                *v = new;
             }
-            map.insert(old, new);
         }
+        map.insert(old, new);
         self.redirected.store(true, Ordering::Release);
+    }
+
+    /// Redirect GC: drop every entry that resolves to `dead` (a closed
+    /// stream's final address — any command through those entries now
+    /// errors identically with or without the hop, so they are pure
+    /// dead weight). When the table drains, the fast-path flag is
+    /// re-armed — [`StreamRouter::resolve`] skips the read lock again,
+    /// as if no migration had ever happened. Tombstones are untouched:
+    /// they are the correctness layer, this table only an optimization.
+    fn gc_redirects_to(&self, dead: StreamAddr) {
+        let mut map = self.redirects.write().unwrap_or_else(|e| e.into_inner());
+        map.retain(|_, v| *v != dead);
+        if map.is_empty() {
+            self.redirected.store(false, Ordering::Release);
+        }
+    }
+
+    /// Current redirect-table size (observability; drops back to zero
+    /// as migrated streams close — see the GC in
+    /// [`StreamRouter::close_stream`]).
+    pub fn redirect_entries(&self) -> usize {
+        self.redirects.read().unwrap_or_else(|e| e.into_inner()).len()
     }
 
     /// One rendezvous round-trip to shard `shard`: build the command
@@ -1827,6 +2292,10 @@ impl StreamRouter {
         // dropped the entry (a failed close — stale handle — must not
         // release someone else's reservation).
         self.names.write().unwrap_or_else(|e| e.into_inner()).remove(&h.id);
+        // Redirect entries pointing at the closed address are dead
+        // weight now — collect them (and re-arm the lock-free resolve
+        // fast path if the table drains).
+        self.gc_redirects_to(a);
         Ok(stats)
     }
 
@@ -1867,10 +2336,10 @@ impl StreamRouter {
         if let Some(rx) = rx {
             let engine_cfg = self.engine.clone();
             let topo = self.topo.clone();
-            self.joins
-                .lock()
-                .unwrap_or_else(|e| e.into_inner())
-                .push(std::thread::spawn(move || shard_worker(shard, engine_cfg, rx, topo)));
+            let persist = self.persist.clone();
+            self.joins.lock().unwrap_or_else(|e| e.into_inner()).push(std::thread::spawn(
+                move || shard_worker(shard, engine_cfg, rx, topo, persist),
+            ));
         }
         self.rebalance_locked()?;
         Ok(shard)
@@ -2025,6 +2494,11 @@ impl StreamRouter {
             snap.engine_calls.1 += rollup.engine_calls.1;
             snap.snapshot_reads += rollup.snapshot_reads;
             snap.worker_reads += rollup.worker_reads;
+            snap.checkpoints += rollup.checkpoints;
+            snap.wal_appends += rollup.wal_appends;
+            snap.wal_bytes += rollup.wal_bytes;
+            snap.wal_errors += rollup.wal_errors;
+            snap.recovered_streams += rollup.restored;
             ingest.merge(&rollup.ingest);
             project.merge(&rollup.project);
             snap.per_shard.push(ShardOccupancy {
@@ -2045,6 +2519,234 @@ impl StreamRouter {
         snap.per_stream.sort_by(|a, b| a.stream.cmp(&b.stream));
         Ok(snap)
     }
+
+    /// Checkpoint one stream to the pool's snapshot directory. The
+    /// command is slot-addressed, so the stream's shard queue drains
+    /// ahead of it — the captured state reflects every command sent
+    /// before this call (the same consistent-cut barrier migration
+    /// uses). Returns the checkpoint's encoded byte length. Errors if
+    /// the pool was spawned without [`PoolConfig::persist`].
+    pub fn checkpoint_stream(&self, h: &StreamHandle) -> Result<u64, String> {
+        let a = self.resolve(h);
+        self.rpc(a.shard, |reply| ShardCommand::Checkpoint { slot: a.slot, gen: a.gen, reply })?
+    }
+
+    /// Checkpoint every live stream on every worker (including retired
+    /// ones — migrated-off shards may still hold strays), rotating each
+    /// shard's WAL once all of its streams are captured. Returns the
+    /// number of streams checkpointed.
+    ///
+    /// Each *stream's* cut is consistent (its worker's queue drains to
+    /// the command); the pool-wide cut is per-stream, not a global
+    /// barrier — which is exactly what recovery needs, since restore is
+    /// per-stream too: checkpoint plus seq-filtered log replay.
+    pub fn checkpoint_all(&self) -> Result<usize, String> {
+        let mut total = 0usize;
+        for shard in 0..self.shards() {
+            total += self.rpc(shard, |reply| ShardCommand::CheckpointAll { reply })??;
+        }
+        Ok(total)
+    }
+
+    /// Rebuild the pool's streams from the snapshot directory: load
+    /// every readable checkpoint (corrupt ones are quarantined —
+    /// renamed `.corrupt` — not fatal), read every shard WAL
+    /// (torn tails tolerated: the log is truncated at the first bad
+    /// frame), then per stream install the checkpointed entry on its
+    /// ring shard and replay the WAL suffix (`seq ≥` the checkpoint's
+    /// cursor, deduplicated) through the normal ingest path. Streams
+    /// with an `Open` record but no checkpoint yet (crashed mid-seed)
+    /// are re-opened and replayed from scratch; streams whose log
+    /// records a close are skipped — close-then-reopen between
+    /// checkpoints resolves conservatively in favor of the close.
+    ///
+    /// Finishes with a [`StreamRouter::checkpoint_all`] (best-effort,
+    /// reported as `compacted`) so a second crash recovers from fresh
+    /// checkpoints instead of re-replaying.
+    ///
+    /// Call on an idle pool right after spawn; errors if durability is
+    /// not configured. Per-stream rebuild failures land in
+    /// [`RestoreReport::failed`] without aborting the pool.
+    pub fn restore_pool(&self) -> Result<RestoreReport, String> {
+        let Some(pcfg) = self.persist.clone() else {
+            return Err("durability not configured (no snapshot dir)".to_string());
+        };
+        // Serialize against topology changes: placement must not move
+        // under the install/replay sweep.
+        let _g = self.reshard.lock().unwrap_or_else(|e| e.into_inner());
+        let loaded = persist::load_checkpoints(&pcfg.dir).map_err(|e| e.to_string())?;
+        let wals = persist::load_wals(&pcfg.dir).map_err(|e| e.to_string())?;
+        let mut report = RestoreReport {
+            quarantined: loaded.quarantined,
+            torn_logs: wals.torn_logs,
+            ..Default::default()
+        };
+        let mut ckpts: HashMap<String, CheckpointData> = HashMap::new();
+        for data in loaded.checkpoints {
+            ckpts.insert(data.id.clone(), data);
+        }
+        // Group the logs per stream. Only the FIRST Open counts (a
+        // re-logged Open from an earlier recovery is a duplicate);
+        // any Close wins (see the conservative close-reopen rule).
+        let mut opens: HashMap<String, (u32, Vec<u8>)> = HashMap::new();
+        let mut ingests: HashMap<String, Vec<(u64, Vec<f64>)>> = HashMap::new();
+        let mut closed_ids: HashSet<String> = HashSet::new();
+        for rec in wals.records {
+            match rec {
+                WalRecord::Open { id, dim, cfg } => {
+                    opens.entry(id).or_insert((dim, cfg));
+                }
+                WalRecord::Ingest { id, seq, points, .. } => {
+                    ingests.entry(id).or_default().push((seq, points));
+                }
+                WalRecord::Close { id } => {
+                    closed_ids.insert(id);
+                }
+            }
+        }
+        let mut ids: Vec<String> = ckpts.keys().chain(opens.keys()).cloned().collect();
+        ids.sort();
+        ids.dedup();
+        for id in ids {
+            if closed_ids.contains(&id) {
+                report.skipped_closed += 1;
+                continue;
+            }
+            // Rebuild the entry: from its checkpoint when one exists,
+            // else a fresh stream from the logged open (mid-seed crash).
+            let (handle, replay_from) = if let Some(data) = ckpts.remove(&id) {
+                let next_seq = data.ingest_seq;
+                match self.install_restored(data) {
+                    Ok(h) => {
+                        report.restored += 1;
+                        (h, next_seq)
+                    }
+                    Err(e) => {
+                        report.failed.push(format!("{id}: {e}"));
+                        continue;
+                    }
+                }
+            } else {
+                let (dim, cfg_bytes) = opens.remove(&id).expect("id came from a map key");
+                let cfg = match persist::decode_stream_config_bytes(&cfg_bytes) {
+                    Ok(cfg) => cfg,
+                    Err(e) => {
+                        report.failed.push(format!("{id}: open record: {e}"));
+                        continue;
+                    }
+                };
+                // The normal open path: fresh entry, fresh Open record
+                // in the new log (harmless duplicate — first one wins).
+                match self.open_stream(&id, dim as usize, cfg) {
+                    Ok(h) => {
+                        report.from_wal_only += 1;
+                        (h, 0)
+                    }
+                    Err(e) => {
+                        report.failed.push(format!("{id}: {e}"));
+                        continue;
+                    }
+                }
+            };
+            // Replay the suffix in sequence order through the normal
+            // ingest path, dropping duplicate sequence numbers (a crash
+            // during a previous recovery's replay re-logs records).
+            if let Some(mut recs) = ingests.remove(&id) {
+                recs.sort_by_key(|r| r.0);
+                recs.dedup_by_key(|r| r.0);
+                let dim = match self.snapshot(&handle) {
+                    Ok(s) => s.dim,
+                    Err(_) => 0,
+                };
+                for (seq, points) in recs {
+                    if seq < replay_from {
+                        continue;
+                    }
+                    // One-point records go through the one-point path,
+                    // batch records through the batch path — replay
+                    // retraces the original command shapes.
+                    let res = if dim > 0 && points.len() == dim {
+                        self.ingest(&handle, points).map(|_| ())
+                    } else {
+                        self.ingest_many(&handle, points).map(|_| ())
+                    };
+                    match res {
+                        Ok(()) => report.replayed += 1,
+                        Err(_) => report.replay_errors += 1,
+                    }
+                }
+            }
+            report.handles.push(handle);
+        }
+        // Compact: capture the restored state and rotate every WAL, so
+        // a second crash recovers from the fresh checkpoints instead of
+        // re-replaying (and so replay-time re-logging is retired).
+        // (`checkpoint_all` takes no lock, so holding the reshard guard
+        // here is fine.)
+        report.compacted = self.checkpoint_all().is_ok();
+        report.handles.sort_by(|a, b| a.id.cmp(&b.id));
+        Ok(report)
+    }
+
+    /// Install one checkpointed entry on its ring shard: reserve the
+    /// pool-wide name, rebuild the entry, ship it via `Install` (not
+    /// counted as a migration), and resolve the handle.
+    fn install_restored(&self, data: CheckpointData) -> Result<StreamHandle, String> {
+        let id: Arc<str> = Arc::from(data.id.as_str());
+        {
+            let mut names = self.names.write().unwrap_or_else(|e| e.into_inner());
+            if !names.insert(id.clone()) {
+                return Err(format!("stream '{id}' already open"));
+            }
+        }
+        let shard = self.shard_of(&id);
+        let cell = Arc::new(SnapshotCell::new());
+        let installed = StreamEntry::from_checkpoint(data, cell.clone()).and_then(|entry| {
+            self.rpc(shard, |reply| ShardCommand::Install {
+                entry,
+                from_migration: false,
+                reply,
+            })?
+            .map_err(|(_, e)| e)
+        });
+        match installed {
+            Ok((slot, gen)) => Ok(StreamHandle { shard, slot, gen, id, cell }),
+            Err(e) => {
+                // Failed install: release the reservation.
+                self.names.write().unwrap_or_else(|p| p.into_inner()).remove(&id);
+                Err(e)
+            }
+        }
+    }
+}
+
+/// What a [`StreamRouter::restore_pool`] recovery pass found and did.
+#[derive(Debug, Default)]
+pub struct RestoreReport {
+    /// Streams rebuilt from a checkpoint file.
+    pub restored: usize,
+    /// Streams rebuilt from WAL `Open` records alone (crashed mid-seed,
+    /// before their first checkpoint).
+    pub from_wal_only: usize,
+    /// WAL ingest records replayed through the normal ingest path.
+    pub replayed: u64,
+    /// Replayed records that errored (counted, not fatal — e.g. a
+    /// record logged just before a rejected command).
+    pub replay_errors: u64,
+    /// Stream ids skipped because the log records their close.
+    pub skipped_closed: usize,
+    /// Checkpoint files quarantined (renamed `.corrupt`) as unreadable.
+    pub quarantined: Vec<PathBuf>,
+    /// Shard WALs whose tail was torn (tolerated: truncated at the
+    /// first bad frame).
+    pub torn_logs: usize,
+    /// Per-stream rebuild failures (`id: reason`) — reported, never
+    /// fatal to the pool.
+    pub failed: Vec<String>,
+    /// Whether the post-restore compaction checkpoint succeeded.
+    pub compacted: bool,
+    /// Handles of every recovered stream, sorted by id.
+    pub handles: Vec<StreamHandle>,
 }
 
 /// Owner of the shard worker threads. Dropping (or calling
@@ -2075,7 +2777,10 @@ impl ShardPool {
         for (shard, rx) in rxs.into_iter().enumerate() {
             let engine_cfg = cfg.engine.clone();
             let topo = topo.clone();
-            joins.push(std::thread::spawn(move || shard_worker(shard, engine_cfg, rx, topo)));
+            let persist = cfg.persist.clone();
+            joins.push(std::thread::spawn(move || {
+                shard_worker(shard, engine_cfg, rx, topo, persist)
+            }));
         }
         let router = StreamRouter {
             topo,
@@ -2086,6 +2791,7 @@ impl ShardPool {
             joins: Arc::new(Mutex::new(joins)),
             queue: cfg.queue.max(1),
             engine: cfg.engine,
+            persist: cfg.persist,
         };
         ShardPool { router }
     }
@@ -2362,6 +3068,85 @@ mod tests {
         assert!(ps.forwards >= 13, "stale verbs must be forwarded, got {}", ps.forwards);
         let g = ps.per_stream.iter().find(|g| g.stream == "fwd").unwrap();
         assert_eq!(g.shard, target, "gauges attribute the stream to its new home");
+        pool.shutdown();
+    }
+
+    #[test]
+    fn redirect_gc_rearms_fast_path_after_close() {
+        let ds = yeast_like(12, 26);
+        let pool = ShardPool::spawn(PoolConfig { shards: 2, ..Default::default() });
+        let router = pool.router();
+        let h = router.open_stream("gc", ds.dim(), small_cfg()).unwrap();
+        for i in 0..ds.n() {
+            router.ingest(&h, ds.x.row(i).to_vec()).unwrap();
+        }
+        assert!(!router.redirected.load(Ordering::Acquire));
+        assert_eq!(router.redirect_entries(), 0);
+        let target = (h.shard() + 1) % 2;
+        router.migrate_stream(&h, target).unwrap();
+        assert!(
+            router.redirected.load(Ordering::Acquire),
+            "migration must arm the redirect path"
+        );
+        assert_eq!(router.redirect_entries(), 1);
+        // The redirected handle still works before the close.
+        router.ingest(&h, ds.x.row(0).to_vec()).unwrap();
+        router.close_stream(&h).unwrap();
+        // GC: the closed stream's redirect entry is dead weight, and
+        // with the table drained the lock-free fast path re-arms.
+        assert_eq!(router.redirect_entries(), 0);
+        assert!(
+            !router.redirected.load(Ordering::Acquire),
+            "drained redirect table must re-arm the fast path"
+        );
+        // Re-arming is not one-way: a later migration raises the flag
+        // and redirects correctly again.
+        let h2 = router.open_stream("gc2", ds.dim(), small_cfg()).unwrap();
+        for i in 0..ds.n() {
+            router.ingest(&h2, ds.x.row(i).to_vec()).unwrap();
+        }
+        router.migrate_stream(&h2, (h2.shard() + 1) % 2).unwrap();
+        assert!(router.redirected.load(Ordering::Acquire));
+        assert_eq!(router.redirect_entries(), 1);
+        assert_eq!(router.snapshot(&h2).unwrap().m, ds.n());
+        pool.shutdown();
+    }
+
+    #[test]
+    fn publish_after_deadline_bounds_snapshot_staleness() {
+        let ds = yeast_like(8, 27);
+        let pool = ShardPool::spawn(PoolConfig::default());
+        let router = pool.router();
+        // Count cadence effectively off; a zero deadline means every
+        // accepted point with the deadline elapsed publishes — the
+        // deterministic way to observe the time-based path.
+        let deadline = StreamConfig {
+            publish_every: 1_000_000,
+            publish_after: Some(Duration::from_millis(0)),
+            ..small_cfg()
+        };
+        let count_only = StreamConfig { publish_every: 1_000_000, ..small_cfg() };
+        let hd = router.open_stream("deadline", ds.dim(), deadline).unwrap();
+        let hc = router.open_stream("count", ds.dim(), count_only).unwrap();
+        for i in 0..5 {
+            router.ingest(&hd, ds.x.row(i).to_vec()).unwrap();
+            router.ingest(&hc, ds.x.row(i).to_vec()).unwrap();
+        }
+        // Both published once at seed completion.
+        let ed = router.snapshot_epoch(&hd);
+        let ec = router.snapshot_epoch(&hc);
+        assert!(ed >= 1 && ec >= 1);
+        router.ingest(&hd, ds.x.row(5).to_vec()).unwrap();
+        router.ingest(&hc, ds.x.row(5).to_vec()).unwrap();
+        assert!(
+            router.snapshot_epoch(&hd) > ed,
+            "elapsed deadline must publish on the next accepted point"
+        );
+        assert_eq!(
+            router.snapshot_epoch(&hc),
+            ec,
+            "count-only stream is still waiting for its cadence"
+        );
         pool.shutdown();
     }
 

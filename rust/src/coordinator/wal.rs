@@ -1,0 +1,814 @@
+//! Write-ahead ingest log: the replay half of the durability story.
+//!
+//! Each shard worker owns one append-only log file (`wal-<shard>.log`).
+//! Every state-changing command that passes validation — stream open,
+//! accepted single/batched ingest, stream close — is framed and
+//! appended *before* it is applied, so after a crash the pool can be
+//! rebuilt as "latest checkpoint + replay of the WAL suffix" (see
+//! [`super::persist`] for checkpoints and
+//! [`super::shard::StreamRouter::restore_pool`] for the recovery
+//! ladder).
+//!
+//! Frame format (all integers little-endian):
+//!
+//! ```text
+//! file   := MAGIC(8) frame*
+//! frame  := len:u32  crc:u32  payload[len]      crc = CRC32(payload)
+//! ```
+//!
+//! The reader validates frames in order and stops at the first bad one
+//! (short header, impossible length, CRC mismatch): a torn tail — the
+//! expected artifact of crashing mid-append — costs only the torn
+//! record, never the file. [`WalWriter::open`] repairs the tail the
+//! same way (truncate to the valid prefix) before appending, so a
+//! recovered log never grows records *behind* a tear.
+//!
+//! Durability is tunable per deployment via [`FsyncPolicy`]: fsync
+//! every N appends, on a wall-clock interval, or never (leave it to the
+//! OS). Append failures never take the stream down: a bounded
+//! retry-with-backoff runs first, and only then does the writer drop to
+//! *degraded* mode — appends are skipped (the stream stays live
+//! in-memory, `wal_errors` visible in the pool snapshot) until the next
+//! checkpoint rotation re-arms the log.
+//!
+//! The append path is allocation-free in steady state: one reusable
+//! frame buffer, with its own realloc counter so the zero-allocation
+//! claim is testable rather than aspirational.
+
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+/// Leading bytes of every WAL file (name + format version).
+pub const WAL_MAGIC: &[u8; 8] = b"IKWAL001";
+
+// ---------------------------------------------------------------------
+// CRC32 (IEEE reflected polynomial), table built at compile time — no
+// external crates are available offline.
+// ---------------------------------------------------------------------
+
+const fn build_crc_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+const CRC_TABLE: [u32; 256] = build_crc_table();
+
+/// CRC32 (IEEE) of a byte slice.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+// ---------------------------------------------------------------------
+// Little-endian byte codec helpers, shared with the checkpoint codec in
+// `super::persist`.
+// ---------------------------------------------------------------------
+
+pub(crate) fn put_u8(buf: &mut Vec<u8>, v: u8) {
+    buf.push(v);
+}
+
+pub(crate) fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+pub(crate) fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+pub(crate) fn put_f64(buf: &mut Vec<u8>, v: f64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+/// `u32` length prefix + UTF-8 bytes.
+pub(crate) fn put_str(buf: &mut Vec<u8>, s: &str) {
+    put_u32(buf, s.len() as u32);
+    buf.extend_from_slice(s.as_bytes());
+}
+
+/// `u64` element count + raw little-endian doubles.
+pub(crate) fn put_f64s(buf: &mut Vec<u8>, xs: &[f64]) {
+    put_u64(buf, xs.len() as u64);
+    for &x in xs {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Bounded cursor over a decoded payload. Every `take_*` checks the
+/// remaining length and returns `Err` instead of panicking — the
+/// property the corruption corpus pins.
+pub(crate) struct Cur<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cur<'a> {
+    pub(crate) fn new(buf: &'a [u8]) -> Self {
+        Cur { buf, pos: 0 }
+    }
+
+    pub(crate) fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        if self.remaining() < n {
+            return Err(format!("short payload: need {n} bytes, have {}", self.remaining()));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub(crate) fn take_u8(&mut self) -> Result<u8, String> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub(crate) fn take_u32(&mut self) -> Result<u32, String> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub(crate) fn take_u64(&mut self) -> Result<u64, String> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub(crate) fn take_f64(&mut self) -> Result<f64, String> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub(crate) fn take_str(&mut self) -> Result<String, String> {
+        let n = self.take_u32()? as usize;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec()).map_err(|e| format!("bad utf8: {e}"))
+    }
+
+    pub(crate) fn take_bytes(&mut self) -> Result<Vec<u8>, String> {
+        let n = self.take_u32()? as usize;
+        Ok(self.take(n)?.to_vec())
+    }
+
+    pub(crate) fn take_f64s(&mut self) -> Result<Vec<f64>, String> {
+        let n = self.take_u64()? as usize;
+        // Guard before allocating: a corrupt count must not trigger an
+        // absurd reservation.
+        if self.remaining() < n.saturating_mul(8) {
+            return Err(format!("short f64 run: need {n} values, have {} bytes", self.remaining()));
+        }
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.take_f64()?);
+        }
+        Ok(out)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Records
+// ---------------------------------------------------------------------
+
+/// One logged event. `cfg` in `Open` is the opaque
+/// [`StreamConfig`](super::shard::StreamConfig) encoding produced by
+/// `super::persist` — the WAL layer frames bytes, it does not interpret
+/// stream configuration.
+#[derive(Clone, Debug, PartialEq)]
+pub enum WalRecord {
+    /// A stream was opened (before any checkpoint could exist) — lets
+    /// recovery rebuild streams that died mid-seed.
+    Open { id: String, dim: u32, cfg: Vec<u8> },
+    /// Accepted ingest command: one or more `dim`-dimensional points,
+    /// stamped with the stream's monotonic per-record sequence number
+    /// (travels with the entry across migrations, so replay order is
+    /// well defined even when a stream's records span shard logs).
+    Ingest { id: String, seq: u64, dim: u32, points: Vec<f64> },
+    /// The stream was closed — recovery must not resurrect it.
+    Close { id: String },
+}
+
+const KIND_OPEN: u8 = 1;
+const KIND_INGEST: u8 = 2;
+const KIND_CLOSE: u8 = 3;
+
+impl WalRecord {
+    pub fn stream_id(&self) -> &str {
+        match self {
+            WalRecord::Open { id, .. }
+            | WalRecord::Ingest { id, .. }
+            | WalRecord::Close { id } => id,
+        }
+    }
+
+    /// Encode the record payload (no frame header) into `buf`.
+    pub fn encode_into(&self, buf: &mut Vec<u8>) {
+        match self {
+            WalRecord::Open { id, dim, cfg } => {
+                put_u8(buf, KIND_OPEN);
+                put_str(buf, id);
+                put_u32(buf, *dim);
+                put_u32(buf, cfg.len() as u32);
+                buf.extend_from_slice(cfg);
+            }
+            WalRecord::Ingest { id, seq, dim, points } => {
+                put_u8(buf, KIND_INGEST);
+                put_str(buf, id);
+                put_u64(buf, *seq);
+                put_u32(buf, *dim);
+                put_f64s(buf, points);
+            }
+            WalRecord::Close { id } => {
+                put_u8(buf, KIND_CLOSE);
+                put_str(buf, id);
+            }
+        }
+    }
+
+    /// Decode a record payload. Never panics on malformed input.
+    pub fn decode(payload: &[u8]) -> Result<WalRecord, String> {
+        let mut c = Cur::new(payload);
+        let rec = match c.take_u8()? {
+            KIND_OPEN => WalRecord::Open {
+                id: c.take_str()?,
+                dim: c.take_u32()?,
+                cfg: c.take_bytes()?,
+            },
+            KIND_INGEST => WalRecord::Ingest {
+                id: c.take_str()?,
+                seq: c.take_u64()?,
+                dim: c.take_u32()?,
+                points: c.take_f64s()?,
+            },
+            KIND_CLOSE => WalRecord::Close { id: c.take_str()? },
+            k => return Err(format!("unknown WAL record kind {k}")),
+        };
+        if c.remaining() != 0 {
+            return Err(format!("{} trailing bytes after record", c.remaining()));
+        }
+        Ok(rec)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Fsync policy
+// ---------------------------------------------------------------------
+
+/// When the writer flushes appended frames to stable storage.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum FsyncPolicy {
+    /// Fsync after every `n` appends (`n = 1` is sync-every-append).
+    EveryN(u64),
+    /// Fsync when at least this much wall time has passed since the
+    /// last flush (checked on append — an idle log does not wake up).
+    Interval(Duration),
+    /// Never fsync explicitly; the page cache decides. One crash's
+    /// worth of tail may be lost, which recovery already tolerates.
+    #[default]
+    Off,
+}
+
+impl FsyncPolicy {
+    /// Parse the CLI form: `off`, `every=N`, or `interval_ms=M`.
+    pub fn parse(s: &str) -> Result<FsyncPolicy, String> {
+        if s == "off" {
+            return Ok(FsyncPolicy::Off);
+        }
+        if let Some(n) = s.strip_prefix("every=") {
+            let n: u64 = n.parse().map_err(|_| format!("bad fsync count '{n}'"))?;
+            if n == 0 {
+                return Err("fsync every=0 is meaningless; use 'off'".into());
+            }
+            return Ok(FsyncPolicy::EveryN(n));
+        }
+        if let Some(ms) = s.strip_prefix("interval_ms=") {
+            let ms: u64 = ms.parse().map_err(|_| format!("bad fsync interval '{ms}'"))?;
+            return Ok(FsyncPolicy::Interval(Duration::from_millis(ms)));
+        }
+        Err(format!("unknown fsync policy '{s}' (expected off | every=N | interval_ms=M)"))
+    }
+}
+
+// ---------------------------------------------------------------------
+// Writer
+// ---------------------------------------------------------------------
+
+/// Append attempts before the writer gives up and degrades.
+const APPEND_TRIES: u32 = 3;
+/// Backoff between retries (bounded — an ingest worker must not stall
+/// behind a dead disk for long).
+const RETRY_BACKOFF: [Duration; 2] = [Duration::from_millis(1), Duration::from_millis(5)];
+
+/// Appending half of the log. One per shard worker; not thread-safe by
+/// design (the owning worker is the only writer).
+#[derive(Debug)]
+pub struct WalWriter {
+    path: PathBuf,
+    file: Option<File>,
+    policy: FsyncPolicy,
+    /// Reusable frame buffer: `[len|crc|payload]` assembled in place.
+    frame: Vec<u8>,
+    reallocs: u64,
+    appends: u64,
+    bytes: u64,
+    errors: u64,
+    since_sync: u64,
+    last_sync: Instant,
+    degraded: bool,
+}
+
+impl WalWriter {
+    /// Open (or create) the log at `path`. An existing file is scanned
+    /// and truncated to its valid frame prefix first — appending after
+    /// a torn tail would hide every later record from the reader.
+    pub fn open(path: PathBuf, policy: FsyncPolicy) -> std::io::Result<WalWriter> {
+        let file = match OpenOptions::new().read(true).write(true).open(&path) {
+            Ok(mut f) => {
+                let mut bytes = Vec::new();
+                f.read_to_end(&mut bytes)?;
+                let valid = scan_valid_len(&bytes);
+                if valid < WAL_MAGIC.len() as u64 {
+                    // Missing/garbled header: start the file over.
+                    drop(f);
+                    Self::create_fresh(&path)?
+                } else {
+                    f.set_len(valid)?;
+                    f.seek(SeekFrom::End(0))?;
+                    f
+                }
+            }
+            Err(_) => Self::create_fresh(&path)?,
+        };
+        Ok(WalWriter {
+            path,
+            file: Some(file),
+            policy,
+            frame: Vec::new(),
+            reallocs: 0,
+            appends: 0,
+            bytes: 0,
+            errors: 0,
+            since_sync: 0,
+            last_sync: Instant::now(),
+            degraded: false,
+        })
+    }
+
+    fn create_fresh(path: &Path) -> std::io::Result<File> {
+        let mut f =
+            OpenOptions::new().read(true).write(true).create(true).truncate(true).open(path)?;
+        f.write_all(WAL_MAGIC)?;
+        Ok(f)
+    }
+
+    /// Append one record. Returns the framed byte count on success,
+    /// `None` when the record was not persisted (degraded mode, or all
+    /// retries failed — the caller's stream stays live in-memory
+    /// either way). The frame buffer is retained across calls; steady
+    /// state appends allocate nothing.
+    pub fn append(&mut self, rec: &WalRecord) -> Option<u64> {
+        if self.degraded {
+            return None;
+        }
+        let cap = self.frame.capacity();
+        self.frame.clear();
+        // Reserve the 8-byte frame header, encode the payload behind
+        // it, then patch len/crc — one buffer, one write syscall.
+        self.frame.extend_from_slice(&[0u8; 8]);
+        rec.encode_into(&mut self.frame);
+        let payload_len = (self.frame.len() - 8) as u32;
+        let crc = crc32(&self.frame[8..]);
+        self.frame[0..4].copy_from_slice(&payload_len.to_le_bytes());
+        self.frame[4..8].copy_from_slice(&crc.to_le_bytes());
+        if self.frame.capacity() > cap {
+            self.reallocs += 1;
+        }
+
+        for attempt in 0..APPEND_TRIES {
+            let ok = match self.file.as_mut() {
+                Some(f) => f.write_all(&self.frame).is_ok(),
+                None => false,
+            };
+            if ok {
+                self.appends += 1;
+                self.bytes += self.frame.len() as u64;
+                self.since_sync += 1;
+                self.maybe_sync();
+                return Some(self.frame.len() as u64);
+            }
+            self.errors += 1;
+            if (attempt as usize) < RETRY_BACKOFF.len() {
+                std::thread::sleep(RETRY_BACKOFF[attempt as usize]);
+            }
+        }
+        // Every retry failed: degrade. The stream keeps serving from
+        // memory; the log re-arms at the next checkpoint rotation.
+        self.degraded = true;
+        None
+    }
+
+    fn maybe_sync(&mut self) {
+        let due = match self.policy {
+            FsyncPolicy::EveryN(n) => self.since_sync >= n,
+            FsyncPolicy::Interval(d) => self.last_sync.elapsed() >= d,
+            FsyncPolicy::Off => false,
+        };
+        if due {
+            self.sync();
+        }
+    }
+
+    /// Force a flush to stable storage.
+    pub fn sync(&mut self) {
+        if let Some(f) = self.file.as_mut() {
+            if f.sync_data().is_err() {
+                self.errors += 1;
+            }
+        }
+        self.since_sync = 0;
+        self.last_sync = Instant::now();
+    }
+
+    /// Truncate the log back to the bare header — called right after a
+    /// whole-shard checkpoint makes the logged suffix redundant. Also
+    /// re-arms a degraded writer (the rotation is its recovery retry).
+    pub fn rotate(&mut self) -> std::io::Result<()> {
+        self.file = None;
+        let f = Self::create_fresh(&self.path)?;
+        self.file = Some(f);
+        self.since_sync = 0;
+        self.last_sync = Instant::now();
+        self.degraded = false;
+        self.sync();
+        Ok(())
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Successful appends since open.
+    pub fn appends(&self) -> u64 {
+        self.appends
+    }
+
+    /// Framed bytes written since open.
+    pub fn bytes(&self) -> u64 {
+        self.bytes
+    }
+
+    /// Failed write/sync attempts since open.
+    pub fn errors(&self) -> u64 {
+        self.errors
+    }
+
+    /// Frame-buffer growth events (zero in steady state).
+    pub fn reallocs(&self) -> u64 {
+        self.reallocs
+    }
+
+    /// Whether the writer has dropped to degraded (non-logging) mode.
+    pub fn degraded(&self) -> bool {
+        self.degraded
+    }
+}
+
+// ---------------------------------------------------------------------
+// Reader
+// ---------------------------------------------------------------------
+
+/// Outcome of scanning one WAL file.
+#[derive(Debug, Default)]
+pub struct WalReadResult {
+    /// Records decoded from the valid prefix, in append order.
+    pub records: Vec<WalRecord>,
+    /// True when the file ended in a torn or corrupt tail (everything
+    /// before the tear is still in `records`).
+    pub torn: bool,
+    /// Byte length of the valid prefix (header + whole good frames).
+    pub valid_len: u64,
+}
+
+/// Byte length of the valid prefix: the magic header plus every leading
+/// frame whose length fits and whose CRC matches.
+pub fn scan_valid_len(bytes: &[u8]) -> u64 {
+    if bytes.len() < WAL_MAGIC.len() || &bytes[..WAL_MAGIC.len()] != WAL_MAGIC {
+        return 0;
+    }
+    let mut pos = WAL_MAGIC.len();
+    loop {
+        if bytes.len() - pos < 8 {
+            return pos as u64;
+        }
+        let len = u32::from_le_bytes(bytes[pos..pos + 4].try_into().unwrap()) as usize;
+        let crc = u32::from_le_bytes(bytes[pos + 4..pos + 8].try_into().unwrap());
+        if bytes.len() - pos - 8 < len {
+            return pos as u64;
+        }
+        let payload = &bytes[pos + 8..pos + 8 + len];
+        if crc32(payload) != crc {
+            return pos as u64;
+        }
+        pos += 8 + len;
+    }
+}
+
+/// Read a WAL file, tolerating a torn tail. A missing file reads as
+/// empty (a shard that never logged anything has nothing to replay).
+pub fn read_wal(path: &Path) -> std::io::Result<WalReadResult> {
+    let bytes = match std::fs::read(path) {
+        Ok(b) => b,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+            return Ok(WalReadResult::default())
+        }
+        Err(e) => return Err(e),
+    };
+    Ok(decode_wal_bytes(&bytes))
+}
+
+/// Decode in-memory WAL bytes (the reader body, file-free for tests and
+/// the corruption corpus).
+pub fn decode_wal_bytes(bytes: &[u8]) -> WalReadResult {
+    let mut out = WalReadResult::default();
+    if bytes.len() < WAL_MAGIC.len() || &bytes[..WAL_MAGIC.len()] != WAL_MAGIC {
+        out.torn = !bytes.is_empty();
+        return out;
+    }
+    let mut pos = WAL_MAGIC.len();
+    loop {
+        if bytes.len() - pos < 8 {
+            out.torn |= bytes.len() - pos != 0;
+            break;
+        }
+        let len = u32::from_le_bytes(bytes[pos..pos + 4].try_into().unwrap()) as usize;
+        let crc = u32::from_le_bytes(bytes[pos + 4..pos + 8].try_into().unwrap());
+        if bytes.len() - pos - 8 < len {
+            out.torn = true;
+            break;
+        }
+        let payload = &bytes[pos + 8..pos + 8 + len];
+        if crc32(payload) != crc {
+            out.torn = true;
+            break;
+        }
+        match WalRecord::decode(payload) {
+            Ok(rec) => out.records.push(rec),
+            Err(_) => {
+                // Framed correctly but semantically bad (e.g. written
+                // by a future version): stop here, keep the prefix.
+                out.torn = true;
+                break;
+            }
+        }
+        pos += 8 + len;
+    }
+    out.valid_len = pos as u64;
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, default_cases, ensure};
+    use crate::util::rng::Rng;
+
+    fn temp_path(tag: &str) -> PathBuf {
+        static SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+        let n = SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        std::env::temp_dir().join(format!(
+            "inkpca_wal_{tag}_{}_{n}.log",
+            std::process::id()
+        ))
+    }
+
+    fn sample_records() -> Vec<WalRecord> {
+        vec![
+            WalRecord::Open { id: "s0".into(), dim: 3, cfg: vec![1, 2, 3, 4] },
+            WalRecord::Ingest { id: "s0".into(), seq: 1, dim: 3, points: vec![0.5, -1.25, 3.0] },
+            WalRecord::Ingest {
+                id: "s0".into(),
+                seq: 2,
+                dim: 3,
+                points: vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0],
+            },
+            WalRecord::Close { id: "s0".into() },
+        ]
+    }
+
+    fn random_record(rng: &mut Rng) -> WalRecord {
+        let id = format!("stream-{}", rng.below(1000));
+        match rng.below(3) {
+            0 => {
+                let cfg: Vec<u8> = (0..rng.below(64)).map(|_| rng.next_u64() as u8).collect();
+                WalRecord::Open { id, dim: rng.below(32) as u32 + 1, cfg }
+            }
+            1 => {
+                let dim = rng.below(8) + 1;
+                let n = rng.below(5) + 1;
+                let points: Vec<f64> = (0..dim * n).map(|_| rng.normal()).collect();
+                WalRecord::Ingest { id, seq: rng.next_u64(), dim: dim as u32, points }
+            }
+            _ => WalRecord::Close { id },
+        }
+    }
+
+    /// Encode records into full file bytes (header + frames).
+    fn encode_file(records: &[WalRecord]) -> Vec<u8> {
+        let mut bytes = WAL_MAGIC.to_vec();
+        for rec in records {
+            let mut payload = Vec::new();
+            rec.encode_into(&mut payload);
+            bytes.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+            bytes.extend_from_slice(&crc32(&payload).to_le_bytes());
+            bytes.extend_from_slice(&payload);
+        }
+        bytes
+    }
+
+    #[test]
+    fn crc32_known_vector() {
+        // The standard IEEE CRC32 check value.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn record_roundtrip() {
+        for rec in sample_records() {
+            let mut payload = Vec::new();
+            rec.encode_into(&mut payload);
+            assert_eq!(WalRecord::decode(&payload).unwrap(), rec);
+        }
+    }
+
+    #[test]
+    fn fsync_policy_parses() {
+        assert_eq!(FsyncPolicy::parse("off").unwrap(), FsyncPolicy::Off);
+        assert_eq!(FsyncPolicy::parse("every=8").unwrap(), FsyncPolicy::EveryN(8));
+        assert_eq!(
+            FsyncPolicy::parse("interval_ms=250").unwrap(),
+            FsyncPolicy::Interval(Duration::from_millis(250))
+        );
+        assert!(FsyncPolicy::parse("every=0").is_err());
+        assert!(FsyncPolicy::parse("sometimes").is_err());
+    }
+
+    #[test]
+    fn writer_reader_file_roundtrip() {
+        let path = temp_path("roundtrip");
+        let mut w = WalWriter::open(path.clone(), FsyncPolicy::EveryN(2)).unwrap();
+        let records = sample_records();
+        for rec in &records {
+            assert!(w.append(rec).is_some());
+        }
+        assert_eq!(w.appends(), records.len() as u64);
+        assert!(w.bytes() > 0);
+        assert_eq!(w.errors(), 0);
+        assert!(!w.degraded());
+        w.sync();
+        let read = read_wal(&path).unwrap();
+        assert!(!read.torn);
+        assert_eq!(read.records, records);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn steady_state_append_is_allocation_free() {
+        let path = temp_path("zeroalloc");
+        let mut w = WalWriter::open(path.clone(), FsyncPolicy::Off).unwrap();
+        let rec = WalRecord::Ingest { id: "s".into(), seq: 0, dim: 4, points: vec![1.0; 4] };
+        w.append(&rec).unwrap();
+        let warm = w.reallocs();
+        for seq in 1..200u64 {
+            let rec = WalRecord::Ingest { id: "s".into(), seq, dim: 4, points: vec![1.0; 4] };
+            w.append(&rec).unwrap();
+        }
+        assert_eq!(w.reallocs(), warm, "frame buffer must not grow after warm-up");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rotate_truncates_and_rearms() {
+        let path = temp_path("rotate");
+        let mut w = WalWriter::open(path.clone(), FsyncPolicy::Off).unwrap();
+        for rec in sample_records() {
+            w.append(&rec);
+        }
+        w.rotate().unwrap();
+        let read = read_wal(&path).unwrap();
+        assert!(read.records.is_empty());
+        assert!(!read.torn);
+        // Appends after rotation land in the fresh file.
+        w.append(&WalRecord::Close { id: "x".into() });
+        let read = read_wal(&path).unwrap();
+        assert_eq!(read.records.len(), 1);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn open_repairs_torn_tail_before_appending() {
+        let path = temp_path("repair");
+        let records = sample_records();
+        let mut bytes = encode_file(&records);
+        // Tear mid-way through the final frame.
+        let cut = bytes.len() - 3;
+        bytes.truncate(cut);
+        std::fs::write(&path, &bytes).unwrap();
+        let mut w = WalWriter::open(path.clone(), FsyncPolicy::Off).unwrap();
+        w.append(&WalRecord::Close { id: "post".into() }).unwrap();
+        w.sync();
+        let read = read_wal(&path).unwrap();
+        assert!(!read.torn, "tail must be repaired at open");
+        assert_eq!(read.records.len(), records.len()); // 3 survivors + 1 new
+        assert_eq!(read.records.last().unwrap(), &WalRecord::Close { id: "post".into() });
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn missing_file_reads_empty() {
+        let res = read_wal(Path::new("/nonexistent/inkpca/never.log")).unwrap();
+        assert!(res.records.is_empty());
+        assert!(!res.torn);
+    }
+
+    #[test]
+    fn torn_tail_keeps_prefix() {
+        let records = sample_records();
+        let bytes = encode_file(&records);
+        let res = decode_wal_bytes(&bytes[..bytes.len() - 1]);
+        assert!(res.torn);
+        assert_eq!(res.records.len(), records.len() - 1);
+        assert_eq!(res.records, records[..records.len() - 1]);
+    }
+
+    #[test]
+    fn prop_record_roundtrip() {
+        check("wal record roundtrip", default_cases(), |rng| {
+            let rec = random_record(rng);
+            let mut payload = Vec::new();
+            rec.encode_into(&mut payload);
+            let back = WalRecord::decode(&payload)?;
+            ensure(back == rec, || format!("roundtrip mismatch: {rec:?} vs {back:?}"))
+        });
+    }
+
+    #[test]
+    fn prop_bitflip_never_panics_and_keeps_only_valid_prefix() {
+        check("wal bit-flip corpus", default_cases(), |rng| {
+            let records: Vec<WalRecord> =
+                (0..rng.below(6) + 1).map(|_| random_record(rng)).collect();
+            let mut bytes = encode_file(&records);
+            let bit = rng.below(bytes.len() * 8);
+            bytes[bit / 8] ^= 1 << (bit % 8);
+            // Must not panic; every decoded record must be one we wrote
+            // (a single bit flip cannot pass CRC32, so the decoded list
+            // is a strict prefix of the original).
+            let res = decode_wal_bytes(&bytes);
+            ensure(res.records.len() < records.len() || res.records == records, || {
+                "bit flip produced a non-prefix decode".into()
+            })?;
+            ensure(
+                res.records.iter().zip(&records).all(|(a, b)| a == b),
+                || "decoded prefix diverged from original".into(),
+            )
+        });
+    }
+
+    #[test]
+    fn prop_truncation_never_panics() {
+        check("wal truncation corpus", default_cases(), |rng| {
+            let records: Vec<WalRecord> =
+                (0..rng.below(6) + 1).map(|_| random_record(rng)).collect();
+            let bytes = encode_file(&records);
+            let cut = rng.below(bytes.len() + 1);
+            let res = decode_wal_bytes(&bytes[..cut]);
+            ensure(res.records.len() <= records.len(), || "over-long decode".into())?;
+            ensure(
+                res.records.iter().zip(&records).all(|(a, b)| a == b),
+                || "truncated decode diverged from original prefix".into(),
+            )
+        });
+    }
+
+    #[test]
+    fn scan_valid_len_matches_decode() {
+        let records = sample_records();
+        let bytes = encode_file(&records);
+        assert_eq!(scan_valid_len(&bytes), bytes.len() as u64);
+        let cut = &bytes[..bytes.len() - 2];
+        assert_eq!(scan_valid_len(cut), decode_wal_bytes(cut).valid_len);
+        assert_eq!(scan_valid_len(b"garbage"), 0);
+    }
+}

@@ -76,7 +76,10 @@ impl Kernel for Rbf {
         "rbf"
     }
     fn describe(&self) -> String {
-        format!("rbf(sigma={:.4})", self.sigma)
+        // `{}` on f64 prints the shortest representation that parses
+        // back to the same bits — `describe` is the checkpoint codec's
+        // kernel serialization, so it must be exact, not pretty.
+        format!("rbf(sigma={})", self.sigma)
     }
     fn constant_diagonal(&self) -> bool {
         true
@@ -145,7 +148,7 @@ impl Kernel for Laplacian {
         "laplacian"
     }
     fn describe(&self) -> String {
-        format!("laplacian(sigma={:.4})", self.sigma)
+        format!("laplacian(sigma={})", self.sigma)
     }
     fn constant_diagonal(&self) -> bool {
         true
@@ -176,6 +179,64 @@ impl Kernel for Sigmoid {
     fn map_block(&self, raw: f64) -> f64 {
         (self.alpha * raw + self.beta).tanh()
     }
+}
+
+/// Rebuild a kernel from its [`Kernel::describe`] string — the inverse
+/// the checkpoint codec needs: a serialized stream stores only the
+/// describe line (which for an `RbfMedian` config already carries the
+/// *resolved* seed-time bandwidth), and recovery turns it back into a
+/// live kernel. Round-trip is exact because every parameterized
+/// `describe` prints floats with `{}` (shortest-exact `Display`).
+pub fn kernel_from_describe(desc: &str) -> Result<std::sync::Arc<dyn Kernel>, String> {
+    let (name, params) = split_describe(desc)?;
+    let get = |key: &str| -> Result<f64, String> {
+        params
+            .iter()
+            .find(|(k, _)| *k == key)
+            .ok_or_else(|| format!("kernel '{desc}': missing parameter '{key}'"))
+            .and_then(|(_, v)| {
+                v.parse::<f64>()
+                    .map_err(|_| format!("kernel '{desc}': bad value for '{key}'"))
+            })
+    };
+    match name {
+        "rbf" => Ok(std::sync::Arc::new(Rbf { sigma: get("sigma")? })),
+        "linear" => Ok(std::sync::Arc::new(Linear)),
+        "poly" => {
+            let d = get("d")?;
+            if d < 0.0 || d.fract() != 0.0 || d > u32::MAX as f64 {
+                return Err(format!("kernel '{desc}': degree must be a non-negative integer"));
+            }
+            Ok(std::sync::Arc::new(Polynomial { degree: d as u32, offset: get("c")? }))
+        }
+        "laplacian" => Ok(std::sync::Arc::new(Laplacian { sigma: get("sigma")? })),
+        "sigmoid" => Ok(std::sync::Arc::new(Sigmoid { alpha: get("a")?, beta: get("b")? })),
+        other => Err(format!("unknown kernel family '{other}' in '{desc}'")),
+    }
+}
+
+/// Split `name(k1=v1, k2=v2)` (or bare `name`) into the family label
+/// and its key/value parameters.
+fn split_describe(desc: &str) -> Result<(&str, Vec<(&str, &str)>), String> {
+    let Some(open) = desc.find('(') else {
+        return Ok((desc, Vec::new()));
+    };
+    let name = &desc[..open];
+    let body = desc[open + 1..]
+        .strip_suffix(')')
+        .ok_or_else(|| format!("kernel '{desc}': unterminated parameter list"))?;
+    let mut params = Vec::new();
+    for part in body.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let (k, v) = part
+            .split_once('=')
+            .ok_or_else(|| format!("kernel '{desc}': bad parameter '{part}'"))?;
+        params.push((k.trim(), v.trim()));
+    }
+    Ok((name, params))
 }
 
 /// Squared Euclidean distance.
@@ -657,5 +718,44 @@ mod tests {
         assert!(k.describe().contains("0.5"));
         assert_eq!(Linear.name(), "linear");
         assert_eq!(Linear.describe(), "linear");
+    }
+
+    #[test]
+    fn describe_roundtrip_is_bit_exact() {
+        // Awkward parameters that a fixed-precision format would
+        // truncate: the describe → parse cycle must recover the exact
+        // bits, or a restored stream would silently use a different
+        // kernel than the one it checkpointed.
+        let sigmas = [0.1 + 0.2, 1.0 / 3.0, 1e-17, 12345.678901234567, f64::MIN_POSITIVE];
+        for &sigma in &sigmas {
+            let k = Rbf { sigma };
+            let back = kernel_from_describe(&k.describe()).unwrap();
+            assert_eq!(back.name(), "rbf");
+            assert_eq!(back.describe(), k.describe(), "sigma {sigma:e}");
+            let (x, y) = ([0.3, -0.7], [0.1, 0.4]);
+            assert_eq!(back.eval(&x, &y).to_bits(), k.eval(&x, &y).to_bits());
+        }
+        let k = Laplacian { sigma: 2.0 / 7.0 };
+        let back = kernel_from_describe(&k.describe()).unwrap();
+        assert_eq!(back.describe(), k.describe());
+        let k = Polynomial { degree: 4, offset: 0.1 + 0.7 };
+        let back = kernel_from_describe(&k.describe()).unwrap();
+        assert_eq!(back.describe(), k.describe());
+        let k = Sigmoid { alpha: 1.0 / 9.0, beta: -0.25 };
+        let back = kernel_from_describe(&k.describe()).unwrap();
+        assert_eq!(back.describe(), k.describe());
+        let back = kernel_from_describe("linear").unwrap();
+        assert_eq!(back.describe(), "linear");
+    }
+
+    #[test]
+    fn kernel_from_describe_rejects_malformed() {
+        assert!(kernel_from_describe("rbf(sigma=").is_err());
+        assert!(kernel_from_describe("rbf()").is_err());
+        assert!(kernel_from_describe("rbf(sigma=abc)").is_err());
+        assert!(kernel_from_describe("warp(q=1)").is_err());
+        assert!(kernel_from_describe("poly(d=2.5, c=0)").is_err());
+        assert!(kernel_from_describe("poly(d=-1, c=0)").is_err());
+        assert!(kernel_from_describe("sigmoid(a=1)").is_err());
     }
 }

@@ -97,6 +97,33 @@ impl KpcaStats {
     }
 }
 
+/// Serialized essence of an [`IncrementalKpca`] state, as written and
+/// read by the coordinator's checkpoint codec: the retained examples,
+/// the eigensystem, the Algorithm 2 running sums, and the knobs/stats
+/// that must survive a restart. The kernel travels separately (as its
+/// `describe()` string — see [`crate::kernels::kernel_from_describe`]).
+#[derive(Clone, Debug)]
+pub struct KpcaParts {
+    pub mean_adjust: bool,
+    pub dim: usize,
+    /// Retained examples, flat row-major `m × dim`.
+    pub x: Vec<f64>,
+    /// Eigenvalues, ascending (`m` of them — defines `m`).
+    pub vals: Vec<f64>,
+    /// Eigenvector window, dense row-major `m × m`.
+    pub vecs: Vec<f64>,
+    /// `Σₘ = 𝟙ᵀKₘ𝟙`.
+    pub s: f64,
+    /// `Kₘ𝟙` row sums (`m` of them).
+    pub k1: Vec<f64>,
+    pub exclude_tol: f64,
+    pub naive_recenter_split: bool,
+    pub batch_rotation: Option<BatchRotation>,
+    pub stats: KpcaStats,
+    /// Lifetime engine back-rotation GEMM count (monotonic gauge).
+    pub engine_gemms: u64,
+}
+
 /// Result of a batched ingest ([`IncrementalKpca::push_batch_with`]):
 /// how the batch's points split between accepted and §5.1-excluded.
 /// Per-point flags are available from
@@ -287,6 +314,55 @@ impl<'k> IncrementalKpca<'k> {
             state.ws.reserve(m, m);
         }
         state.stats.accepted = m;
+        Ok(state)
+    }
+
+    /// Rebuild a state from checkpointed parts — the restore inverse of
+    /// the accessors the durability codec reads
+    /// ([`IncrementalKpca::data_flat`], `vals`, `vecs`,
+    /// [`IncrementalKpca::centering_sums`], `stats`). The parts are
+    /// taken at face value (they were produced by a live state and
+    /// framed under a CRC); only structural consistency is checked.
+    /// Scratch buffers start cold and re-warm on the first pushes.
+    pub fn from_parts(
+        kernel: Arc<dyn Kernel>,
+        parts: KpcaParts,
+    ) -> Result<IncrementalKpca<'static>, String> {
+        let m = parts.vals.len();
+        if parts.x.len() != m * parts.dim {
+            return Err(format!(
+                "restore: retained data is {} floats, want {m}×{}",
+                parts.x.len(),
+                parts.dim
+            ));
+        }
+        if parts.vecs.len() != m * m {
+            return Err(format!("restore: basis is {} floats, want {m}×{m}", parts.vecs.len()));
+        }
+        if parts.k1.len() != m {
+            return Err(format!("restore: row sums are {} floats, want {m}", parts.k1.len()));
+        }
+        let mut state = IncrementalKpca {
+            kernel: KernelHandle::Shared(kernel),
+            mean_adjust: parts.mean_adjust,
+            x: parts.x,
+            dim: parts.dim,
+            m,
+            vals: parts.vals,
+            vecs: EigenBasis::from_mat(Mat::from_vec(m, m, parts.vecs)),
+            s: parts.s,
+            k1: parts.k1,
+            exclude_tol: parts.exclude_tol,
+            naive_recenter_split: parts.naive_recenter_split,
+            batch_rotation: parts.batch_rotation,
+            stats: parts.stats,
+            ws: UpdateWorkspace::new(),
+            scratch: StepScratch::default(),
+        };
+        state.ws.reserve(m, m);
+        // The engine-GEMM gauge is monotonic across the stream's life;
+        // carry it over so pool counters survive a restart.
+        state.ws.engine_gemms = parts.engine_gemms;
         Ok(state)
     }
 
@@ -651,13 +727,6 @@ impl<'k> IncrementalKpca<'k> {
             s.batch_idx.reserve(b - s.batch_idx.len());
         }
         s.kb.reserve(m, b, self.dim);
-    }
-
-    /// The retained examples as a flat row-major slice (`m × dim`) —
-    /// the no-copy companion of [`IncrementalKpca::data`] for scoring
-    /// paths that feed [`kernel_column_into`] directly.
-    pub fn data_flat(&self) -> &[f64] {
-        &self.x
     }
 
     /// Algorithm 1: expansion + two rank-one updates (eq. 2). Reads the
@@ -1267,6 +1336,76 @@ mod tests {
         let mut forced = IncrementalKpca::from_batch(&kern, &seed, true).unwrap();
         forced.batch_rotation = Some(BatchRotation::Sequential);
         assert_eq!(forced.rotation_for(64), BatchRotation::Sequential);
+    }
+
+    #[test]
+    fn from_parts_roundtrip_continues_identically() {
+        // Serialize a mid-stream state through the accessor surface the
+        // checkpoint codec uses, rebuild via from_parts, and require
+        // the restored state to evolve bit-for-bit like the original.
+        let ds = yeast_like(24, 5);
+        let kern: Arc<dyn Kernel> = Arc::new(Rbf { sigma: 1.3 });
+        let seed = ds.x.submatrix(6, ds.dim());
+        let mut live = IncrementalKpca::from_batch_shared(kern.clone(), &seed, true).unwrap();
+        for i in 6..16 {
+            live.push(ds.x.row(i)).unwrap();
+        }
+        let m = live.len();
+        let (s, k1) = live.centering_sums();
+        let mut vecs = Vec::with_capacity(m * m);
+        for i in 0..m {
+            vecs.extend_from_slice(live.vecs.row(i));
+        }
+        let parts = KpcaParts {
+            mean_adjust: live.mean_adjust,
+            dim: live.dim(),
+            x: live.data_flat().to_vec(),
+            vals: live.vals.clone(),
+            vecs,
+            s,
+            k1: k1.to_vec(),
+            exclude_tol: live.exclude_tol,
+            naive_recenter_split: live.naive_recenter_split,
+            batch_rotation: live.batch_rotation,
+            stats: live.stats,
+            engine_gemms: live.engine_gemms(),
+        };
+        let mut back = IncrementalKpca::from_parts(kern, parts).unwrap();
+        assert_eq!(back.len(), live.len());
+        assert_eq!(back.engine_gemms(), live.engine_gemms());
+        for i in 16..24 {
+            live.push(ds.x.row(i)).unwrap();
+            back.push(ds.x.row(i)).unwrap();
+        }
+        assert_eq!(back.len(), live.len());
+        for (a, b) in live.vals.iter().zip(&back.vals) {
+            assert_eq!(a.to_bits(), b.to_bits(), "eigenvalues diverged after restore");
+        }
+        for i in 0..live.len() {
+            for (a, b) in live.vecs.row(i).iter().zip(back.vecs.row(i)) {
+                assert_eq!(a.to_bits(), b.to_bits(), "basis diverged after restore");
+            }
+        }
+    }
+
+    #[test]
+    fn from_parts_rejects_inconsistent_shapes() {
+        let kern: Arc<dyn Kernel> = Arc::new(Rbf { sigma: 1.0 });
+        let parts = KpcaParts {
+            mean_adjust: false,
+            dim: 2,
+            x: vec![0.0; 4],
+            vals: vec![1.0, 2.0],
+            vecs: vec![0.0; 3], // not 2×2
+            s: 0.0,
+            k1: vec![0.0; 2],
+            exclude_tol: 1e-12,
+            naive_recenter_split: false,
+            batch_rotation: None,
+            stats: KpcaStats::default(),
+            engine_gemms: 0,
+        };
+        assert!(IncrementalKpca::from_parts(kern, parts).is_err());
     }
 
     #[test]

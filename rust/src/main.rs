@@ -19,9 +19,19 @@
 //!                  `--publish-every <k>`  (snapshot publication cadence on
 //!                                  the sequential ingest path; reads are
 //!                                  served lock-free from published snapshots)
+//!                  `--publish-after-ms <t>`  (wall-clock staleness bound: the
+//!                                  next accept publishes once t ms have
+//!                                  passed since the last publication)
+//!                  `--snapshot-dir <dir>`  (durability: restore from the
+//!                                  directory's checkpoints + WAL on start,
+//!                                  write-ahead every accepted ingest, and
+//!                                  checkpoint on clean exit)
+//!                  `--fsync off|every=N|interval_ms=M`  (WAL fsync policy;
+//!                                  default off — see `FsyncPolicy`)
 
 use inkpca::coordinator::{
-    Config, Coordinator, EngineConfig, EnginePolicy, KernelConfig, ShardPool,
+    Config, Coordinator, EngineConfig, EnginePolicy, FsyncPolicy, KernelConfig, PersistConfig,
+    ShardPool,
 };
 use inkpca::data::{load, Dataset, SliceSource};
 use inkpca::experiments::{self, RunMode};
@@ -95,6 +105,16 @@ fn serve(args: &[String]) -> Result<(), String> {
         },
         _ => EngineConfig::Native,
     };
+    let persist = match flag_value(args, "--snapshot-dir") {
+        Some(dir) => {
+            let mut p = PersistConfig::new(dir);
+            if let Some(policy) = flag_value(args, "--fsync") {
+                p.fsync = FsyncPolicy::parse(&policy)?;
+            }
+            Some(p)
+        }
+        None => None,
+    };
     let cfg = Config {
         kernel: KernelConfig::RbfMedian,
         mean_adjust: !args.iter().any(|a| a == "--no-adjust"),
@@ -109,6 +129,10 @@ fn serve(args: &[String]) -> Result<(), String> {
         publish_every: flag_value(args, "--publish-every")
             .and_then(|v| v.parse().ok())
             .unwrap_or(64),
+        publish_after: flag_value(args, "--publish-after-ms")
+            .and_then(|v| v.parse().ok())
+            .map(std::time::Duration::from_millis),
+        persist,
     };
     let mut ds = load(&dataset, n, 42)?;
     ds.standardize();
@@ -127,7 +151,26 @@ fn serve(args: &[String]) -> Result<(), String> {
     }
     println!("serving {} points of {dataset} (dim {dim}, batch {batch})…", ds.n());
     let probe: Vec<f64> = ds.x.row(0).to_vec();
-    let coord = Coordinator::spawn(cfg, dim);
+    let durable = cfg.persist.is_some();
+    let coord = if durable {
+        let (coord, report) = Coordinator::restore(cfg, dim)?;
+        if report.restored + report.from_wal_only > 0 {
+            println!(
+                "restored {} stream(s) ({} WAL-only), replayed {} record(s), {} torn log(s), {} quarantined checkpoint(s)",
+                report.restored + report.from_wal_only,
+                report.from_wal_only,
+                report.replayed,
+                report.torn_logs,
+                report.quarantined.len()
+            );
+        }
+        for e in &report.failed {
+            eprintln!("restore: {e}");
+        }
+        coord
+    } else {
+        Coordinator::spawn(cfg, dim)
+    };
     let accepted = if batch > 1 {
         let reply = coord.ingest_all(ds.x.as_slice(), dim, batch)?;
         reply.seeded + reply.accepted
@@ -160,6 +203,10 @@ fn serve(args: &[String]) -> Result<(), String> {
         scores.len(),
         scores.iter().map(|v| (v * 1000.0).round() / 1000.0).collect::<Vec<_>>()
     );
+    if durable {
+        let n = coord.checkpoint_all()?;
+        println!("checkpointed {n} stream(s); WAL rotated");
+    }
     coord.shutdown();
     Ok(())
 }
@@ -311,6 +358,10 @@ fn serve_pool(
             g.worker_reads,
             g.points_since_publish
         );
+    }
+    if cfg.persist.is_some() {
+        let n = router.checkpoint_all()?;
+        println!("checkpointed {n} stream(s); WAL rotated");
     }
     pool.shutdown();
     Ok(())

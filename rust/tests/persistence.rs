@@ -1,0 +1,449 @@
+//! Durability integration tests: checkpoint/restore round-trips, WAL
+//! replay after simulated crashes, torn-tail and corrupt-checkpoint
+//! tolerance, close semantics across restarts, and the durability
+//! counters in the pool rollup.
+//!
+//! A "crash" here is a pool shutdown WITHOUT closing the streams: the
+//! write-ahead log already holds every accepted command (append happens
+//! before apply), so dropping the workers mid-stream loses exactly the
+//! state a real kill would lose. The exactness bar matches the
+//! migration suite: a restored stream must reproduce an uninterrupted
+//! single-threaded reference to ≤ 1e-10 — recovery replays history, it
+//! never approximates it.
+
+use std::path::PathBuf;
+
+use inkpca::coordinator::{
+    EngineConfig, KernelConfig, PersistConfig, PoolConfig, RoutedEngine, ShardPool,
+    StreamConfig, StreamHandle, StreamRouter,
+};
+use inkpca::data::synthetic::yeast_like;
+use inkpca::data::Dataset;
+use inkpca::kernels::Rbf;
+use inkpca::kpca::IncrementalKpca;
+
+const SEED_POINTS: usize = 6;
+const SIGMA: f64 = 1.5;
+
+fn temp_dir(tag: &str) -> PathBuf {
+    static SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+    let n = SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    let dir =
+        std::env::temp_dir().join(format!("inkpca_torture_{tag}_{}_{n}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn stream_cfg() -> StreamConfig {
+    StreamConfig {
+        kernel: KernelConfig::Rbf { sigma: SIGMA },
+        mean_adjust: true,
+        seed_points: SEED_POINTS,
+        ..StreamConfig::default()
+    }
+}
+
+fn durable_pool(dir: &PathBuf) -> (ShardPool, StreamRouter) {
+    let pool = ShardPool::spawn(PoolConfig {
+        shards: 2,
+        queue: 64,
+        engine: EngineConfig::Native,
+        persist: Some(PersistConfig::new(dir.clone())),
+        ..PoolConfig::default()
+    });
+    let router = pool.router();
+    (pool, router)
+}
+
+/// Uninterrupted reference: the same feed driven directly through the
+/// engine type the shard workers use.
+fn reference_run(ds: &Dataset, n: usize) -> IncrementalKpca<'static> {
+    let kernel: std::sync::Arc<dyn inkpca::kernels::Kernel> =
+        std::sync::Arc::new(Rbf { sigma: SIGMA });
+    let seed = ds.x.submatrix(SEED_POINTS, ds.dim());
+    let engine = RoutedEngine::native_only();
+    let mut inc = IncrementalKpca::from_batch_shared(kernel, &seed, true).unwrap();
+    for i in SEED_POINTS..n {
+        inc.push_with(ds.x.row(i), &engine).unwrap();
+    }
+    inc
+}
+
+fn assert_matches_reference(
+    router: &StreamRouter,
+    h: &StreamHandle,
+    ds: &Dataset,
+    reference: &IncrementalKpca<'static>,
+) {
+    let snap = router.snapshot(h).unwrap();
+    assert_eq!(snap.m, reference.len(), "{}", h.id());
+    let top_ref: Vec<f64> = reference.vals.iter().rev().take(10).copied().collect();
+    for (got, want) in snap.top_values.iter().zip(&top_ref) {
+        assert!(
+            (got - want).abs() <= 1e-10,
+            "{}: eigenvalue {got} vs reference {want}",
+            h.id()
+        );
+    }
+    // Projections exercise eigenvectors, retained data and centering
+    // sums together; compare magnitudes (eigenvector sign is
+    // arbitrary).
+    let probe = vec![0.25; ds.dim()];
+    let got = router.project(h, probe.clone(), 4).unwrap();
+    let want = reference.project(&probe, 4);
+    for (g, w) in got.iter().zip(&want) {
+        assert!(
+            (g.abs() - w.abs()).abs() <= 1e-10,
+            "{}: projection {g} vs reference {w}",
+            h.id()
+        );
+    }
+}
+
+fn feed(router: &StreamRouter, h: &StreamHandle, ds: &Dataset, range: std::ops::Range<usize>) {
+    for i in range {
+        router.ingest(h, ds.x.row(i).to_vec()).unwrap();
+    }
+}
+
+/// The torture matrix: kill the pool at a mid-seed, just-seeded and
+/// mid-feed cut (never checkpointed — the WAL alone must carry the
+/// stream), restore, finish the feed, and demand the uninterrupted
+/// reference. Then crash AGAIN after the full feed and restore once
+/// more: the second recovery replays a log that already contains
+/// replayed (re-logged) records, so it also proves replay idempotence
+/// under sequence-number dedup.
+#[test]
+fn crash_without_checkpoint_recovers_from_wal_alone() {
+    let mut ds = yeast_like(24, 1101);
+    ds.standardize();
+    let reference = reference_run(&ds, ds.n());
+    for cut in [2, SEED_POINTS + 1, 16] {
+        let dir = temp_dir("walonly");
+        let (pool, router) = durable_pool(&dir);
+        let h = router.open_stream("t", ds.dim(), stream_cfg()).unwrap();
+        feed(&router, &h, &ds, 0..cut);
+        drop(h);
+        pool.shutdown(); // crash: no close, no checkpoint
+
+        let (pool2, router2) = durable_pool(&dir);
+        let report = router2.restore_pool().unwrap();
+        assert_eq!(report.restored, 0, "cut {cut}: nothing was checkpointed");
+        assert_eq!(report.from_wal_only, 1, "cut {cut}");
+        assert_eq!(report.replayed, cut as u64, "cut {cut}");
+        assert_eq!(report.replay_errors, 0, "cut {cut}");
+        assert!(report.failed.is_empty(), "cut {cut}: {:?}", report.failed);
+        assert!(report.compacted, "cut {cut}: restore ends with a compaction checkpoint");
+        let h = report.handles[0].clone();
+        assert_eq!(h.id(), "t");
+        feed(&router2, &h, &ds, cut..ds.n());
+        assert_matches_reference(&router2, &h, &ds, &reference);
+        drop(h);
+        pool2.shutdown(); // crash again, now with a checkpoint + WAL suffix
+
+        let (pool3, router3) = durable_pool(&dir);
+        let report = router3.restore_pool().unwrap();
+        assert_eq!(report.restored, 1, "cut {cut}: compaction checkpoint found");
+        assert_eq!(report.from_wal_only, 0, "cut {cut}");
+        assert!(report.failed.is_empty(), "cut {cut}: {:?}", report.failed);
+        assert_matches_reference(&router3, &report.handles[0], &ds, &reference);
+        pool3.shutdown();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
+
+/// Checkpoint mid-feed, keep feeding, crash: restore must load the
+/// checkpoint and replay exactly the post-checkpoint WAL suffix.
+#[test]
+fn crash_after_checkpoint_replays_only_the_suffix() {
+    let mut ds = yeast_like(28, 1102);
+    ds.standardize();
+    let dir = temp_dir("suffix");
+    let (pool, router) = durable_pool(&dir);
+    let h = router.open_stream("s", ds.dim(), stream_cfg()).unwrap();
+    feed(&router, &h, &ds, 0..14);
+    let bytes = router.checkpoint_stream(&h).unwrap();
+    assert!(bytes > 0);
+    feed(&router, &h, &ds, 14..ds.n());
+    drop(h);
+    pool.shutdown(); // crash
+
+    let (pool2, router2) = durable_pool(&dir);
+    let report = router2.restore_pool().unwrap();
+    assert_eq!(report.restored, 1);
+    assert_eq!(report.from_wal_only, 0);
+    assert_eq!(
+        report.replayed,
+        (ds.n() - 14) as u64,
+        "only the post-checkpoint suffix replays"
+    );
+    assert_eq!(report.replay_errors, 0);
+    let reference = reference_run(&ds, ds.n());
+    assert_matches_reference(&router2, &report.handles[0], &ds, &reference);
+
+    // Restored counters continue, never reset: the checkpoint carried
+    // them and the replayed suffix re-accumulated on top.
+    let m = router2.metrics(&report.handles[0]).unwrap();
+    assert_eq!(m.accepted, (ds.n() - SEED_POINTS) as u64);
+    let snap = router2.pool_snapshot().unwrap();
+    assert_eq!(snap.recovered_streams, 1);
+    assert!(snap.checkpoints >= 1);
+    pool2.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Garbage appended to a WAL (a torn final write) must be truncated at
+/// open, not poison recovery; chopping bytes off the tail loses exactly
+/// the last record and nothing else.
+#[test]
+fn torn_wal_tail_is_truncated_not_fatal() {
+    let mut ds = yeast_like(20, 1103);
+    ds.standardize();
+    let dir = temp_dir("torn");
+    let (pool, router) = durable_pool(&dir);
+    let h = router.open_stream("torn", ds.dim(), stream_cfg()).unwrap();
+    feed(&router, &h, &ds, 0..ds.n());
+    drop(h);
+    pool.shutdown(); // crash
+
+    // Tear the tail of whichever shard WAL holds the stream: first add
+    // garbage (a frame that never finished writing its payload)…
+    let wal: Vec<PathBuf> = (0..2)
+        .map(|s| dir.join(format!("wal-{s}.log")))
+        .filter(|p| p.metadata().map(|m| m.len() > 8).unwrap_or(false))
+        .collect();
+    assert_eq!(wal.len(), 1, "one shard owns the stream's WAL");
+    let len = wal[0].metadata().unwrap().len();
+    {
+        use std::io::Write;
+        let mut f = std::fs::OpenOptions::new().append(true).open(&wal[0]).unwrap();
+        f.write_all(&[0x55; 11]).unwrap();
+    }
+    let (pool2, router2) = durable_pool(&dir);
+    let report = router2.restore_pool().unwrap();
+    // The repair happens at the earliest open: the respawned worker's
+    // `WalWriter::open` truncates the garbage before `restore_pool`
+    // reads the log, so the reader sees a clean file (`torn_logs`
+    // counts tears the *reader* had to skip — e.g. logs left by a
+    // larger former topology that no current worker owns).
+    assert_eq!(report.torn_logs, 0, "writer-side repair beat the reader to it");
+    assert_eq!(report.replayed, ds.n() as u64, "no valid record is lost to the tear");
+    let reference = reference_run(&ds, ds.n());
+    assert_matches_reference(&router2, &report.handles[0], &ds, &reference);
+    pool2.shutdown();
+
+    // …then rebuild the pre-compaction log shape by hand: truncate a
+    // fresh copy mid-frame and recover from it. The final record is
+    // gone; every earlier one survives.
+    let dir2 = temp_dir("torn2");
+    let (pool3, router3) = durable_pool(&dir2);
+    let h = router3.open_stream("torn", ds.dim(), stream_cfg()).unwrap();
+    feed(&router3, &h, &ds, 0..ds.n());
+    drop(h);
+    pool3.shutdown();
+    let wal2: Vec<PathBuf> = (0..2)
+        .map(|s| dir2.join(format!("wal-{s}.log")))
+        .filter(|p| p.metadata().map(|m| m.len() > 8).unwrap_or(false))
+        .collect();
+    let f = std::fs::OpenOptions::new().write(true).open(&wal2[0]).unwrap();
+    f.set_len(len - 3).unwrap();
+    drop(f);
+    let (pool4, router4) = durable_pool(&dir2);
+    let report = router4.restore_pool().unwrap();
+    assert_eq!(report.replayed, (ds.n() - 1) as u64, "exactly the torn record is lost");
+    let reference = reference_run(&ds, ds.n() - 1);
+    assert_matches_reference(&router4, &report.handles[0], &ds, &reference);
+    pool4.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::remove_dir_all(&dir2).ok();
+}
+
+/// A corrupt checkpoint is quarantined (renamed, never deleted) and the
+/// stream falls back to full WAL replay — the pool must come up serving
+/// with zero aborted restores.
+#[test]
+fn corrupt_checkpoint_quarantined_wal_rescues() {
+    let mut ds = yeast_like(22, 1104);
+    ds.standardize();
+    let dir = temp_dir("quarantine");
+    let (pool, router) = durable_pool(&dir);
+    let h = router.open_stream("q", ds.dim(), stream_cfg()).unwrap();
+    feed(&router, &h, &ds, 0..12);
+    // Single-stream checkpoint: does NOT rotate the WAL, so the full
+    // log remains as the fallback the corruption test needs.
+    router.checkpoint_stream(&h).unwrap();
+    feed(&router, &h, &ds, 12..ds.n());
+    drop(h);
+    pool.shutdown(); // crash
+
+    // Flip one payload byte in the only checkpoint file.
+    let ckpt: Vec<PathBuf> = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter_map(|e| Some(e.ok()?.path()))
+        .filter(|p| p.extension().map(|x| x == "ckpt").unwrap_or(false))
+        .collect();
+    assert_eq!(ckpt.len(), 1);
+    let mut bytes = std::fs::read(&ckpt[0]).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x80;
+    std::fs::write(&ckpt[0], &bytes).unwrap();
+
+    let (pool2, router2) = durable_pool(&dir);
+    let report = router2.restore_pool().unwrap();
+    assert_eq!(report.quarantined.len(), 1, "bad checkpoint set aside, not deleted");
+    assert!(report.quarantined[0].to_string_lossy().ends_with(".corrupt"));
+    assert!(report.quarantined[0].exists(), "quarantined bytes survive for forensics");
+    assert_eq!(report.restored, 0);
+    assert_eq!(report.from_wal_only, 1, "the WAL carries the stream instead");
+    assert_eq!(report.replayed, ds.n() as u64);
+    assert!(report.failed.is_empty(), "{:?}", report.failed);
+    let reference = reference_run(&ds, ds.n());
+    assert_matches_reference(&router2, &report.handles[0], &ds, &reference);
+    pool2.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Close is durable: a stream closed before the crash must NOT
+/// resurrect, and its id is free for a fresh open after restore.
+#[test]
+fn closed_streams_stay_closed_after_restore() {
+    let mut ds = yeast_like(18, 1105);
+    ds.standardize();
+    let dir = temp_dir("closed");
+    let (pool, router) = durable_pool(&dir);
+    let keep = router.open_stream("keep", ds.dim(), stream_cfg()).unwrap();
+    let gone = router.open_stream("gone", ds.dim(), stream_cfg()).unwrap();
+    feed(&router, &keep, &ds, 0..ds.n());
+    feed(&router, &gone, &ds, 0..ds.n());
+    // Per-stream checkpoint only: no WAL rotation, so "gone"'s Open and
+    // Close records are still in the log for restore to reconcile.
+    router.checkpoint_stream(&keep).unwrap();
+    let stats = router.close_stream(&gone).unwrap();
+    assert_eq!(stats.accepted, ds.n() as u64);
+    drop((keep, gone));
+    pool.shutdown(); // crash
+
+    let (pool2, router2) = durable_pool(&dir);
+    let report = router2.restore_pool().unwrap();
+    assert_eq!(report.skipped_closed, 1, "the closed stream is not resurrected");
+    assert_eq!(report.restored, 1);
+    assert_eq!(report.handles.len(), 1);
+    assert_eq!(report.handles[0].id(), "keep");
+    let reference = reference_run(&ds, ds.n());
+    assert_matches_reference(&router2, &report.handles[0], &ds, &reference);
+    // The closed id is free again and starts from scratch.
+    let fresh = router2.open_stream("gone", ds.dim(), stream_cfg()).unwrap();
+    assert_eq!(router2.snapshot(&fresh).unwrap().m, 0);
+    pool2.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Durability counters thread end to end: every accepted command is
+/// write-ahead logged, checkpoints are counted per stream and rolled
+/// up, and the WAL never errors on the happy path.
+#[test]
+fn durability_counters_roll_up() {
+    let mut ds = yeast_like(20, 1106);
+    ds.standardize();
+    let dir = temp_dir("counters");
+    let (pool, router) = durable_pool(&dir);
+    let h = router.open_stream("c", ds.dim(), stream_cfg()).unwrap();
+    feed(&router, &h, &ds, 0..ds.n());
+    // Batched ingest logs ONE record per command, not per point.
+    let tail: Vec<f64> =
+        (0..4).flat_map(|i| ds.x.row(i).iter().copied()).collect();
+    router.ingest_many(&h, tail).unwrap();
+    router.checkpoint_stream(&h).unwrap();
+    router.checkpoint_stream(&h).unwrap();
+
+    let snap = router.pool_snapshot().unwrap();
+    assert_eq!(
+        snap.wal_appends,
+        ds.n() as u64 + 2,
+        "1 open + n single ingests + 1 batch record"
+    );
+    assert!(snap.wal_bytes > 0);
+    assert_eq!(snap.wal_errors, 0);
+    assert_eq!(snap.checkpoints, 2);
+    assert_eq!(snap.recovered_streams, 0, "nothing restored in this life");
+    let m = router.metrics(&h).unwrap();
+    assert_eq!(m.checkpoints, 2);
+    assert_eq!(m.wal_appends, snap.wal_appends);
+    assert_eq!(m.wal_errors, 0);
+    pool.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Restoring from an empty (or absent) snapshot directory is a clean
+/// no-op fresh start, so restore-then-serve needs no first-boot branch.
+#[test]
+fn restore_from_empty_dir_is_fresh_start() {
+    let dir = temp_dir("fresh");
+    let (pool, router) = durable_pool(&dir);
+    let report = router.restore_pool().unwrap();
+    assert_eq!(report.restored + report.from_wal_only, 0);
+    assert_eq!(report.replayed, 0);
+    assert!(report.handles.is_empty());
+    // And the pool is fully usable afterwards.
+    let mut ds = yeast_like(10, 1107);
+    ds.standardize();
+    let h = router.open_stream("f", ds.dim(), stream_cfg()).unwrap();
+    feed(&router, &h, &ds, 0..ds.n());
+    assert_eq!(router.snapshot(&h).unwrap().m, ds.n());
+    pool.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+
+    // A pool with no persist config reports restore as unconfigured.
+    let pool = ShardPool::spawn(PoolConfig {
+        shards: 1,
+        queue: 8,
+        engine: EngineConfig::Native,
+        ..PoolConfig::default()
+    });
+    let router = pool.router();
+    assert!(router.restore_pool().is_err());
+    assert!(router.checkpoint_all().is_err());
+    pool.shutdown();
+}
+
+/// The single-stream `Coordinator` wrapper: restore-or-spawn, feed,
+/// checkpoint, crash, restore — the default stream comes back with its
+/// state and keeps serving.
+#[test]
+fn coordinator_restore_roundtrip() {
+    use inkpca::coordinator::{Config, Coordinator};
+    let mut ds = yeast_like(16, 1108);
+    ds.standardize();
+    let dir = temp_dir("coord");
+    let cfg = Config {
+        kernel: KernelConfig::Rbf { sigma: SIGMA },
+        seed_points: SEED_POINTS,
+        persist: Some(PersistConfig::new(dir.clone())),
+        ..Config::default()
+    };
+    // First boot: empty dir, restore falls through to a fresh stream.
+    let (coord, report) = Coordinator::restore(cfg.clone(), ds.dim()).unwrap();
+    assert_eq!(report.restored + report.from_wal_only, 0);
+    for i in 0..ds.n() {
+        coord.ingest(ds.x.row(i).to_vec()).unwrap();
+    }
+    assert_eq!(coord.checkpoint_all().unwrap(), 1);
+    drop(coord); // crash after checkpoint (shutdown() would close cleanly)
+
+    let (coord, report) = Coordinator::restore(cfg, ds.dim()).unwrap();
+    assert_eq!(report.restored, 1);
+    let snap = coord.snapshot().unwrap();
+    assert_eq!(snap.m, ds.n());
+    // The restored default stream is reference-exact…
+    let reference = reference_run(&ds, ds.n());
+    let probe = vec![0.25; ds.dim()];
+    let got = coord.project(probe.clone(), 4).unwrap();
+    for (g, w) in got.iter().zip(&reference.project(&probe, 4)) {
+        assert!((g.abs() - w.abs()).abs() <= 1e-10, "projection {g} vs reference {w}");
+    }
+    // …and keeps serving: more points land on the restored eigensystem.
+    coord.ingest(ds.x.row(0).to_vec()).unwrap();
+    assert_eq!(coord.snapshot().unwrap().m, ds.n() + 1);
+    coord.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
