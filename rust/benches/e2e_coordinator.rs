@@ -39,6 +39,7 @@ fn main() {
                 queue: 64,
                 seed_points: 20,
                 drift_every: 0,
+                ..Config::default()
             },
             dim,
         );
@@ -65,6 +66,7 @@ fn main() {
                     queue: 64,
                     seed_points: 20,
                     drift_every: 0,
+                    ..Config::default()
                 },
                 dim,
             );

@@ -53,6 +53,16 @@
 //! trajectory — core counts vary too much across CI hosts to hard-gate
 //! a speedup).
 //!
+//! Series 7 (`shards/bounded_{off,uniform,leverage}/1stream`): the
+//! bounded-memory stream isolated — one long batched feed, unbounded
+//! (`off`) vs capped at a fixed landmark budget with uniform or
+//! leverage-score eviction. The unbounded run's per-point cost grows
+//! with `m`; the capped runs hold `m` at the cap, so the series prices
+//! what an eviction costs against what a growing eigensystem costs.
+//! Outside the timed region the run asserts the bounded signature: `m`
+//! pinned at the cap, a positive eviction count, and resident bytes a
+//! fraction of the unbounded run's.
+//!
 //! Emits `BENCH_e2e_shards.json` for the perf trajectory and the CI
 //! regression gate.
 
@@ -61,7 +71,7 @@ use inkpca::coordinator::{
     StreamRouter,
 };
 use inkpca::data::{load, Dataset};
-use inkpca::kpca::BatchRotation;
+use inkpca::kpca::{BatchRotation, EvictionPolicy};
 use inkpca::util::bench::Bench;
 
 fn scaling_cfg() -> StreamConfig {
@@ -285,6 +295,24 @@ fn run_read_heavy(
     snap
 }
 
+/// Series-7 workload: one stream, one long batched feed, optionally
+/// capped. Returns the pool snapshot for the bounded-signature asserts.
+fn run_bounded(ds: &Dataset, max_landmarks: usize, eviction: EvictionPolicy) -> PoolSnapshot {
+    let (pool, router) = spawn_pool(1);
+    let cfg = StreamConfig {
+        max_landmarks,
+        eviction,
+        expected_m: if max_landmarks > 0 { max_landmarks + 1 } else { ds.n() },
+        expected_batch: 8,
+        ..batch_cfg()
+    };
+    let h = router.open_stream("bounded", ds.dim(), cfg).unwrap();
+    router.ingest_all(&h, ds.x.as_slice(), ds.dim(), 8).unwrap();
+    let snap = router.pool_snapshot().unwrap();
+    pool.shutdown();
+    snap
+}
+
 fn main() {
     let mut b = Bench::new();
     let fast = std::env::var("INKPCA_BENCH_FAST").is_ok();
@@ -442,6 +470,54 @@ fn main() {
         "snapshot read path degraded under reader concurrency: 1 reader {solo} ns, \
          best multi-reader {best} ns"
     );
+
+    // Series 7: bounded-memory streaming — fixed landmark budget vs
+    // unbounded growth on one long feed.
+    let n_bounded = if fast { 240 } else { 600 };
+    let cap = 48usize;
+    let mut bounded_ds = load("yeast", n_bounded, 700).unwrap();
+    bounded_ds.standardize();
+    for (label, max, ev) in [
+        ("off", 0usize, EvictionPolicy::Off),
+        ("uniform", cap, EvictionPolicy::Uniform),
+        ("leverage", cap, EvictionPolicy::LeverageScore),
+    ] {
+        b.case(&format!("shards/bounded_{label}/1stream"), || {
+            run_bounded(&bounded_ds, max, ev).accepted
+        });
+    }
+    // Bounded signature (outside the timed region): m pinned at the
+    // cap, evictions accounting for everything past it, and a resident
+    // footprint well under the unbounded run's.
+    let unbounded = run_bounded(&bounded_ds, 0, EvictionPolicy::Off);
+    for ev in [EvictionPolicy::Uniform, EvictionPolicy::LeverageScore] {
+        let snap = run_bounded(&bounded_ds, cap, ev);
+        let g = &snap.per_stream[0];
+        assert_eq!(g.m, cap, "{} run did not hold the cap", ev.name());
+        assert!(snap.evictions > 0, "{} run never evicted", ev.name());
+        assert_eq!(
+            snap.accepted,
+            unbounded.accepted,
+            "{} run accepted a different point count",
+            ev.name()
+        );
+        assert!(
+            snap.total_ws_bytes * 2 < unbounded.total_ws_bytes,
+            "{} bounded run resident bytes {} not well under unbounded {}",
+            ev.name(),
+            snap.total_ws_bytes,
+            unbounded.total_ws_bytes
+        );
+        println!(
+            "bounded {}: m={} evictions={} sufficiency_gap={:.3e} bytes={} (unbounded {})",
+            ev.name(),
+            g.m,
+            snap.evictions,
+            g.sufficiency_gap,
+            snap.total_ws_bytes,
+            unbounded.total_ws_bytes
+        );
+    }
 
     b.finish();
     if let Err(e) = b.write_json("BENCH_e2e_shards.json") {

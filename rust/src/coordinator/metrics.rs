@@ -117,6 +117,14 @@ pub struct Metrics {
     pub async_errors: u64,
     /// Rank-one updates performed by the stream's eigensystem.
     pub updates: u64,
+    /// Landmarks evicted by the bounded-memory down-date path (0 when
+    /// the stream runs unbounded).
+    pub evictions: u64,
+    /// Approximation-sufficiency gauge: the share of the retained
+    /// spectrum in the smallest positive eigenvalue, refreshed after
+    /// each ingest. Small values mean the landmark set is sufficient —
+    /// the signal the eviction policy keys off.
+    pub sufficiency_gap: f64,
     /// Bytes resident in the stream's hot-path buffers (update
     /// workspace + eigenvector storage + batched-ingest scratch);
     /// refreshed after each ingest.
@@ -160,6 +168,8 @@ impl Default for Metrics {
             errors: 0,
             async_errors: 0,
             updates: 0,
+            evictions: 0,
+            sufficiency_gap: 0.0,
             ws_bytes_resident: 0,
             ws_reallocs: 0,
             engine_gemms: 0,
@@ -194,6 +204,8 @@ impl Metrics {
             ingest_p99_us: self.ingest_latency.percentile_ns(0.99) / 1e3,
             ingest_mean_us: self.ingest_latency.mean_ns() / 1e3,
             project_mean_us: self.project_latency.mean_ns() / 1e3,
+            evictions: self.evictions,
+            sufficiency_gap: self.sufficiency_gap,
             ws_bytes_resident: self.ws_bytes_resident,
             ws_reallocs: self.ws_reallocs,
             reallocs_per_update: self.reallocs_per_update(),
@@ -226,6 +238,11 @@ pub struct MetricsReport {
     pub ingest_p99_us: f64,
     pub ingest_mean_us: f64,
     pub project_mean_us: f64,
+    /// Landmarks evicted by the bounded-memory down-date path.
+    pub evictions: u64,
+    /// Spectrum share of the smallest positive eigenvalue — the
+    /// landmark-sufficiency gauge (small = sufficient).
+    pub sufficiency_gap: f64,
     /// Hot-path buffer bytes resident (workspace + eigenbasis).
     pub ws_bytes_resident: u64,
     /// Hot-path buffer-growth events since stream start.
@@ -260,10 +277,12 @@ impl std::fmt::Display for MetricsReport {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "accepted={} excluded={} errors={} thru={:.1}/s ingest p50={:.0}µs p99={:.0}µs mean={:.0}µs ws={}B reallocs/update={:.4}",
+            "accepted={} excluded={} errors={} evictions={} suff_gap={:.3e} thru={:.1}/s ingest p50={:.0}µs p99={:.0}µs mean={:.0}µs ws={}B reallocs/update={:.4}",
             self.accepted,
             self.excluded,
             self.errors,
+            self.evictions,
+            self.sufficiency_gap,
             self.throughput_per_s,
             self.ingest_p50_us,
             self.ingest_p99_us,
@@ -293,6 +312,12 @@ pub struct StreamGauges {
     /// against `4 × accepted` (adjusted) / `2 × accepted` (unadjusted)
     /// to see the blocked rank-b amortization.
     pub engine_gemms: u64,
+    /// Landmarks evicted by the bounded-memory down-date path — moving
+    /// while `m` holds flat is the signature of a capped stream.
+    pub evictions: u64,
+    /// Spectrum share of the smallest positive eigenvalue — the
+    /// landmark-sufficiency gauge the eviction policy keys off.
+    pub sufficiency_gap: f64,
     /// Frobenius norm of the latest drift measurement, if any.
     pub drift_frobenius: Option<f64>,
     /// Publication epoch of the latest projection snapshot (0 = none
@@ -351,6 +376,10 @@ pub struct PoolSnapshot {
     pub accepted: u64,
     pub excluded: u64,
     pub errors: u64,
+    /// Landmarks evicted across the pool (lifetime — includes closed
+    /// streams). Grows while `total_ws_bytes` holds flat on
+    /// bounded-memory deployments.
+    pub evictions: u64,
     /// Hot-path bytes resident summed over every stream.
     pub total_ws_bytes: u64,
     /// Workspace-counted engine back-rotation GEMMs summed over every
@@ -402,7 +431,7 @@ impl std::fmt::Display for PoolSnapshot {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "pool: shards={}/{} streams={} migrations={} accepted={} excluded={} errors={} ws_total={}B ingest p50={:.0}µs p99={:.0}µs mean={:.0}µs (n={}) reads(snapshot,worker)=({},{}) engines(native,pjrt)={:?} wal(appends,bytes,errors)=({},{},{}) checkpoints={} recovered={}",
+            "pool: shards={}/{} streams={} migrations={} accepted={} excluded={} errors={} evictions={} ws_total={}B ingest p50={:.0}µs p99={:.0}µs mean={:.0}µs (n={}) reads(snapshot,worker)=({},{}) engines(native,pjrt)={:?} wal(appends,bytes,errors)=({},{},{}) checkpoints={} recovered={}",
             self.active_shards,
             self.shards,
             self.streams,
@@ -410,6 +439,7 @@ impl std::fmt::Display for PoolSnapshot {
             self.accepted,
             self.excluded,
             self.errors,
+            self.evictions,
             self.total_ws_bytes,
             self.ingest_p50_us,
             self.ingest_p99_us,

@@ -34,7 +34,7 @@ use std::io::Write;
 use std::path::{Path, PathBuf};
 use std::time::Duration;
 
-use crate::kpca::{BatchRotation, KpcaStats};
+use crate::kpca::{BatchRotation, EvictionPolicy, KpcaStats};
 use crate::linalg::Norms;
 
 use super::drift::DriftPoint;
@@ -47,7 +47,11 @@ use super::wal::{
 };
 
 /// Leading bytes of every checkpoint file (name + format version).
-pub const CKPT_MAGIC: &[u8; 8] = b"IKCKPT01";
+/// `02` added the bounded-memory fields: `max_landmarks` + eviction
+/// policy in the stream config and the eviction counter in the stats
+/// block. `01` files predate any release and are not migrated — they
+/// quarantine like any other unreadable file.
+pub const CKPT_MAGIC: &[u8; 8] = b"IKCKPT02";
 
 /// Where and how the pool persists: the snapshot directory (checkpoint
 /// files + per-shard WALs) and the WAL fsync policy.
@@ -187,6 +191,26 @@ fn take_rotation(c: &mut Cur<'_>) -> Result<Option<BatchRotation>, String> {
     })
 }
 
+fn put_eviction(buf: &mut Vec<u8>, e: EvictionPolicy) {
+    put_u8(
+        buf,
+        match e {
+            EvictionPolicy::Off => 0,
+            EvictionPolicy::Uniform => 1,
+            EvictionPolicy::LeverageScore => 2,
+        },
+    );
+}
+
+fn take_eviction(c: &mut Cur<'_>) -> Result<EvictionPolicy, String> {
+    Ok(match c.take_u8()? {
+        0 => EvictionPolicy::Off,
+        1 => EvictionPolicy::Uniform,
+        2 => EvictionPolicy::LeverageScore,
+        t => return Err(format!("unknown eviction tag {t}")),
+    })
+}
+
 /// Encode a [`StreamConfig`] — also the opaque `cfg` bytes of a WAL
 /// `Open` record, so mid-seed streams recover their full configuration
 /// from the log alone.
@@ -207,6 +231,8 @@ pub(crate) fn encode_stream_config(buf: &mut Vec<u8>, cfg: &StreamConfig) {
             put_u64(buf, d.as_nanos() as u64);
         }
     }
+    put_u64(buf, cfg.max_landmarks as u64);
+    put_eviction(buf, cfg.eviction);
 }
 
 pub(crate) fn decode_stream_config(c: &mut Cur<'_>) -> Result<StreamConfig, String> {
@@ -224,6 +250,8 @@ pub(crate) fn decode_stream_config(c: &mut Cur<'_>) -> Result<StreamConfig, Stri
             0 => None,
             _ => Some(Duration::from_nanos(c.take_u64()?)),
         },
+        max_landmarks: c.take_u64()? as usize,
+        eviction: take_eviction(c)?,
     })
 }
 
@@ -249,6 +277,7 @@ fn put_stats(buf: &mut Vec<u8>, s: &KpcaStats) {
     put_u64(buf, s.deflated as u64);
     put_u64(buf, s.rotations as u64);
     put_u64(buf, s.updates as u64);
+    put_u64(buf, s.evictions as u64);
 }
 
 fn take_stats(c: &mut Cur<'_>) -> Result<KpcaStats, String> {
@@ -258,6 +287,7 @@ fn take_stats(c: &mut Cur<'_>) -> Result<KpcaStats, String> {
         deflated: c.take_u64()? as usize,
         rotations: c.take_u64()? as usize,
         updates: c.take_u64()? as usize,
+        evictions: c.take_u64()? as usize,
     })
 }
 
@@ -576,6 +606,8 @@ mod tests {
             publish_every: 32,
             snapshot_r: 4,
             publish_after: Some(Duration::from_millis(250)),
+            max_landmarks: 96,
+            eviction: EvictionPolicy::LeverageScore,
         }
     }
 
@@ -603,6 +635,7 @@ mod tests {
                     deflated: 1,
                     rotations: 3,
                     updates: 80,
+                    evictions: 6,
                 },
                 engine_gemms: 44,
             }),
@@ -640,13 +673,16 @@ mod tests {
         ];
         for kernel in kernels {
             for publish_after in [None, Some(Duration::from_micros(1500))] {
-                for batch_rotation in
-                    [None, Some(BatchRotation::Fused), Some(BatchRotation::Sequential)]
-                {
+                for (batch_rotation, eviction) in [
+                    (None, EvictionPolicy::Off),
+                    (Some(BatchRotation::Fused), EvictionPolicy::Uniform),
+                    (Some(BatchRotation::Sequential), EvictionPolicy::LeverageScore),
+                ] {
                     let cfg = StreamConfig {
                         kernel: kernel.clone(),
                         batch_rotation,
                         publish_after,
+                        eviction,
                         ..sample_config()
                     };
                     let mut buf = Vec::new();

@@ -10,7 +10,7 @@
 use std::time::Duration;
 
 use crate::data::StreamSource;
-use crate::kpca::KpcaStats;
+use crate::kpca::{EvictionPolicy, KpcaStats};
 use crate::linalg::Norms;
 
 use super::drift::DriftPoint;
@@ -80,6 +80,12 @@ pub struct Config {
     /// Durability: snapshot directory + WAL fsync policy. `None` (the
     /// default) runs fully in-memory, exactly as before.
     pub persist: Option<PersistConfig>,
+    /// Landmark cap for bounded-memory streaming (0 = unbounded). See
+    /// [`StreamConfig::max_landmarks`].
+    pub max_landmarks: usize,
+    /// Eviction policy applied at the cap. See
+    /// [`StreamConfig::eviction`].
+    pub eviction: EvictionPolicy,
 }
 
 impl Default for Config {
@@ -94,6 +100,8 @@ impl Default for Config {
             publish_every: 64,
             publish_after: None,
             persist: None,
+            max_landmarks: 0,
+            eviction: EvictionPolicy::Off,
         }
     }
 }
@@ -117,6 +125,8 @@ impl Config {
                 drift_every: self.drift_every,
                 publish_every: self.publish_every,
                 publish_after: self.publish_after,
+                max_landmarks: self.max_landmarks,
+                eviction: self.eviction,
                 ..StreamConfig::default()
             },
         )

@@ -133,7 +133,7 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::kernels::{kernel_from_describe, median_heuristic, Kernel};
-use crate::kpca::{BatchRotation, IncrementalKpca, KpcaParts, KpcaStats};
+use crate::kpca::{BatchRotation, EvictionPolicy, IncrementalKpca, KpcaParts, KpcaStats};
 use crate::linalg::Mat;
 
 use super::drift::{DriftMonitor, DriftPoint};
@@ -190,6 +190,15 @@ pub struct StreamConfig {
     /// point a minute would otherwise sit `publish_every` points — i.e.
     /// an hour — behind). `None` keeps the count-only cadence.
     pub publish_after: Option<Duration>,
+    /// Landmark cap (0 = unbounded). Once the eigensystem reaches this
+    /// size, every accepted point triggers one eviction chosen by
+    /// `eviction`, so the stream's memory footprint stays fixed no
+    /// matter how long it runs. Seed points are protected from
+    /// eviction. See [`IncrementalKpca::set_bound`].
+    pub max_landmarks: usize,
+    /// Which landmark goes when the cap is hit. Ignored while
+    /// `max_landmarks` is 0.
+    pub eviction: EvictionPolicy,
 }
 
 impl Default for StreamConfig {
@@ -205,6 +214,8 @@ impl Default for StreamConfig {
             publish_every: 64,
             snapshot_r: 0,
             publish_after: None,
+            max_landmarks: 0,
+            eviction: EvictionPolicy::Off,
         }
     }
 }
@@ -478,6 +489,7 @@ struct ShardRollup {
     accepted: u64,
     excluded: u64,
     errors: u64,
+    evictions: u64,
     total_ws_bytes: u64,
     ws_engine_gemms: u64,
     migrated_in: u64,
@@ -513,6 +525,7 @@ struct ClosedTotals {
     accepted: u64,
     excluded: u64,
     errors: u64,
+    evictions: u64,
     orphans: u64,
     engine_gemms: u64,
     /// Worker-path projections served by streams closed since spawn.
@@ -533,6 +546,7 @@ impl ClosedTotals {
         self.accepted += m.accepted;
         self.excluded += m.excluded;
         self.errors += m.errors;
+        self.evictions += m.evictions;
         self.engine_gemms += m.engine_gemms;
         self.worker_reads += m.worker_reads;
         self.checkpoints += m.checkpoints;
@@ -692,6 +706,16 @@ impl StreamEntry {
                         self.cfg.expected_batch,
                     );
                 }
+                // Bounded-memory streams: cap the landmark set, protect
+                // the seed prefix. `m` transiently reaches cap+1 before
+                // the eviction lands, so reserve that extra row too.
+                if self.cfg.max_landmarks > 0 {
+                    st.set_bound(self.cfg.max_landmarks, self.cfg.eviction, self.seeded);
+                    st.reserve(
+                        (self.cfg.max_landmarks + 1).max(self.seeded),
+                        self.cfg.expected_batch,
+                    );
+                }
                 // The batch init allocated the full eigensystem +
                 // workspace — publish the residency gauges now, not
                 // only after the first post-seed push.
@@ -721,6 +745,8 @@ impl StreamEntry {
             (st.hot_path_bytes() + st.batch_bytes_resident()) as u64;
         self.metrics.ws_reallocs = st.hot_path_reallocs() + st.batch_reallocs();
         self.metrics.engine_gemms = st.engine_gemms();
+        self.metrics.evictions = st.stats.evictions as u64;
+        self.metrics.sufficiency_gap = st.sufficiency_gap();
     }
 
     /// Capture and publish a fresh projection snapshot (no-op while
@@ -761,6 +787,7 @@ impl StreamEntry {
             return self.seed_point(x);
         }
         let st = self.state.as_mut().unwrap();
+        let evictions_before = st.stats.evictions;
         match st.push_with(x, engine) {
             Ok(accepted) => {
                 if accepted {
@@ -770,10 +797,15 @@ impl StreamEntry {
                     self.metrics.excluded += 1;
                 }
                 let m = st.len();
+                let evicted = st.stats.evictions > evictions_before;
                 self.refresh_gauges();
                 if accepted {
                     self.since_publish += 1;
-                    if self.publish_due() {
+                    // An eviction rewrites the retained set in place —
+                    // published projections referencing the old set are
+                    // stale, so the epoch bumps immediately instead of
+                    // waiting out the publish cadence.
+                    if evicted || self.publish_due() {
                         self.publish_snapshot();
                     }
                 }
@@ -944,6 +976,8 @@ impl StreamEntry {
             ws_reallocs: self.metrics.ws_reallocs,
             reallocs_per_update: self.metrics.reallocs_per_update(),
             engine_gemms: self.metrics.engine_gemms,
+            evictions: self.metrics.evictions,
+            sufficiency_gap: self.metrics.sufficiency_gap,
             drift_frobenius: self.drift.latest().map(|d| d.norms.frobenius),
             snapshot_epoch: self.cell.epoch(),
             snapshot_reads: self.cell.reads(),
@@ -1071,6 +1105,17 @@ impl StreamEntry {
                 let mut st = IncrementalKpca::from_parts(kernel, parts)?;
                 if data.cfg.expected_m > 0 || data.cfg.expected_batch > 0 {
                     st.reserve(data.cfg.expected_m.max(st.len()), data.cfg.expected_batch);
+                }
+                // The bound is configuration, not serialized state:
+                // re-apply it from the checkpointed StreamConfig (the
+                // Uniform round-robin cursor rides in `stats.evictions`,
+                // which `from_parts` already restored).
+                if data.cfg.max_landmarks > 0 {
+                    st.set_bound(data.cfg.max_landmarks, data.cfg.eviction, data.seeded);
+                    st.reserve(
+                        (data.cfg.max_landmarks + 1).max(st.len()),
+                        data.cfg.expected_batch,
+                    );
                 }
                 Some(st)
             }
@@ -1752,6 +1797,7 @@ fn shard_worker(
                     accepted: closed.accepted,
                     excluded: closed.excluded,
                     errors: closed.errors + closed.orphans,
+                    evictions: closed.evictions,
                     total_ws_bytes: 0,
                     ws_engine_gemms: closed.engine_gemms,
                     migrated_in: migration.migrated_in,
@@ -1773,6 +1819,7 @@ fn shard_worker(
                     rollup.accepted += entry.metrics.accepted;
                     rollup.excluded += entry.metrics.excluded;
                     rollup.errors += entry.metrics.errors;
+                    rollup.evictions += entry.metrics.evictions;
                     rollup.total_ws_bytes += entry.metrics.ws_bytes_resident;
                     rollup.ws_engine_gemms += entry.metrics.engine_gemms;
                     rollup.snapshot_reads += entry.cell.reads();
@@ -2486,6 +2533,7 @@ impl StreamRouter {
             snap.accepted += rollup.accepted;
             snap.excluded += rollup.excluded;
             snap.errors += rollup.errors;
+            snap.evictions += rollup.evictions;
             snap.total_ws_bytes += rollup.total_ws_bytes;
             snap.ws_engine_gemms += rollup.ws_engine_gemms;
             snap.migrations += rollup.migrated_in;

@@ -32,8 +32,9 @@ use std::sync::Arc;
 use crate::kernels::{kernel_column_into, kernel_rows_into, Kernel, KernelBlockScratch};
 use crate::linalg::Mat;
 use crate::rankone::{
-    expand_eigensystem_ws, flush_rotation_ws, rank_one_update_fused_ws, rank_one_update_ws,
-    EigenBasis, NativeRotate, Rotate, UpdateStats, UpdateWorkspace,
+    effective_row_into, expand_eigensystem_ws, flush_rotation_ws, rank_one_update_fused_ws,
+    rank_one_update_ws, remove_eigenpair_ws, EigenBasis, NativeRotate, Rotate, UpdateStats,
+    UpdateWorkspace,
 };
 
 /// How a batched ingest applies its rank-one back-rotations.
@@ -50,6 +51,53 @@ pub enum BatchRotation {
     /// rank-one update — the pre-blocked behaviour, and what single
     /// point pushes always do).
     Sequential,
+}
+
+/// How a bounded-memory stream picks its eviction victim once
+/// [`IncrementalKpca::set_bound`] caps the retained set. Eviction is a
+/// *down-date*: two rank-one updates decouple the victim's eigenpair
+/// from the tracked matrix (the exact reverse of the eq. 2 expansion),
+/// then the pair and the victim's basis row are dropped — deferred into
+/// the pending blocked product when one is accumulating, so a mid-batch
+/// eviction costs no extra engine GEMM.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum EvictionPolicy {
+    /// Never evict — the bound is ignored and the stream grows
+    /// unboundedly (the pre-bounded behaviour).
+    #[default]
+    Off,
+    /// Deterministic round-robin over the unprotected landmarks:
+    /// victim = `protected + evictions mod (m − protected)`. No RNG, so
+    /// a WAL replay (which restores the eviction counter) reproduces
+    /// the exact victim sequence.
+    Uniform,
+    /// Evict the landmark with the smallest ridge leverage score
+    /// `ℓᵢ = Σ_c U[i,c]² λ_c/(λ_c + μ)`, `μ = trace⁺/m` — the point the
+    /// current eigensystem can best afford to lose (Nyström column
+    /// sampling literature). Requires flushing any pending rotation
+    /// before scoring.
+    LeverageScore,
+}
+
+impl EvictionPolicy {
+    /// Stable name for CLI flags and config display.
+    pub fn name(&self) -> &'static str {
+        match self {
+            EvictionPolicy::Off => "off",
+            EvictionPolicy::Uniform => "uniform",
+            EvictionPolicy::LeverageScore => "leverage",
+        }
+    }
+
+    /// Parse the [`EvictionPolicy::name`] form (CLI `--eviction`).
+    pub fn from_name(s: &str) -> Option<EvictionPolicy> {
+        match s {
+            "off" => Some(EvictionPolicy::Off),
+            "uniform" => Some(EvictionPolicy::Uniform),
+            "leverage" => Some(EvictionPolicy::LeverageScore),
+            _ => None,
+        }
+    }
 }
 
 /// How a state holds its kernel: borrowed from the caller (library use,
@@ -87,6 +135,11 @@ pub struct KpcaStats {
     pub rotations: usize,
     /// Rank-one updates performed (2 per step unadjusted, 4 adjusted).
     pub updates: usize,
+    /// Landmarks evicted by the bounded-memory down-date path. Also the
+    /// round-robin cursor of [`EvictionPolicy::Uniform`], which is why
+    /// it persists in checkpoints: a replayed stream re-picks the same
+    /// victims.
+    pub evictions: usize,
 }
 
 impl KpcaStats {
@@ -180,8 +233,18 @@ struct StepScratch {
     intra: Vec<f64>,
     /// … per-point accept flags of the last batch …
     mask: Vec<bool>,
-    /// … and the batch-local indices accepted so far.
-    batch_idx: Vec<usize>,
+    /// … and the provenance of each *currently retained* landmark
+    /// relative to the batch-start precomputation: `src < m₀` indexes a
+    /// `block` column, `src ≥ m₀` indexes batch point `src − m₀` in
+    /// `intra`. Seeded `0..m₀`, appended on accept, shifted on
+    /// mid-batch eviction — what keeps the precomputed kernel rows
+    /// addressable after the retained set mutates under the batch.
+    prov: Vec<usize>,
+    /// Effective basis row (read through any pending rotation) while
+    /// locating a down-date's decoupled eigenpair.
+    erow: Vec<f64>,
+    /// Ridge leverage scores for [`EvictionPolicy::LeverageScore`].
+    lev: Vec<f64>,
     /// Row-norm scratch for the blocked kernel evaluation.
     kb: KernelBlockScratch,
     /// Capacity-growth events across the batch scratch buffers (zero
@@ -226,6 +289,15 @@ pub struct IncrementalKpca<'k> {
     /// sequential.
     pub batch_rotation: Option<BatchRotation>,
     pub stats: KpcaStats,
+    /// Bounded-memory cap on the retained set (0 = unbounded). Enforced
+    /// after every accepted example by evicting one
+    /// [`EvictionPolicy`]-chosen landmark per excess point.
+    max_landmarks: usize,
+    /// Victim selection when the cap binds.
+    eviction: EvictionPolicy,
+    /// Leading landmarks never evicted (the seed prefix — what anchors
+    /// the Nyström subset a downstream consumer was built against).
+    protected: usize,
     /// Per-stream rank-one scratch, shared by all updates of a push.
     ws: UpdateWorkspace,
     /// Per-step vector scratch.
@@ -299,6 +371,9 @@ impl<'k> IncrementalKpca<'k> {
             naive_recenter_split: false,
             batch_rotation: None,
             stats: KpcaStats::default(),
+            max_landmarks: 0,
+            eviction: EvictionPolicy::Off,
+            protected: 0,
             ws: UpdateWorkspace::new(),
             scratch: StepScratch::default(),
         };
@@ -356,6 +431,12 @@ impl<'k> IncrementalKpca<'k> {
             naive_recenter_split: parts.naive_recenter_split,
             batch_rotation: parts.batch_rotation,
             stats: parts.stats,
+            // The bound is stream *configuration*, not state — restore
+            // callers re-apply it via set_bound (the coordinator does so
+            // from the checkpointed StreamConfig).
+            max_landmarks: 0,
+            eviction: EvictionPolicy::Off,
+            protected: 0,
             ws: UpdateWorkspace::new(),
             scratch: StepScratch::default(),
         };
@@ -437,6 +518,298 @@ impl<'k> IncrementalKpca<'k> {
         &self.ws
     }
 
+    /// Cap the retained set at `max_landmarks` points (0 = unbounded),
+    /// choosing eviction victims by `policy` and never evicting the
+    /// first `protected` landmarks (the seed prefix). Takes effect on
+    /// the next accepted example; an already-over-cap state sheds one
+    /// landmark per subsequent accept until it fits.
+    pub fn set_bound(&mut self, max_landmarks: usize, policy: EvictionPolicy, protected: usize) {
+        self.max_landmarks = max_landmarks;
+        self.eviction = policy;
+        self.protected = protected;
+    }
+
+    /// The bounded-memory configuration `(max_landmarks, policy,
+    /// protected)` last set by [`IncrementalKpca::set_bound`].
+    pub fn bound(&self) -> (usize, EvictionPolicy, usize) {
+        (self.max_landmarks, self.eviction, self.protected)
+    }
+
+    /// Landmarks evicted so far (shorthand for `stats.evictions`).
+    pub fn evictions(&self) -> usize {
+        self.stats.evictions
+    }
+
+    /// Sufficiency signal of the current landmark set: the share of the
+    /// retained spectrum carried by its *smallest* positive eigenvalue,
+    /// `λ⁺_min / Σλ⁺`. When this gap is small the weakest retained
+    /// direction contributes almost nothing — the landmark set is
+    /// sufficient and a bounded stream loses little by evicting. The
+    /// `n/m` Nyström rescaling cancels in the ratio, so the gauge reads
+    /// the same from an [`IncrementalKpca`] and the Nyström layer above
+    /// it. Returns 0 on an empty or fully collapsed spectrum.
+    pub fn sufficiency_gap(&self) -> f64 {
+        let mut total = 0.0;
+        let mut min_pos = f64::INFINITY;
+        for &l in &self.vals {
+            if l > 0.0 {
+                total += l;
+                if l < min_pos {
+                    min_pos = l;
+                }
+            }
+        }
+        if total > 0.0 && min_pos.is_finite() {
+            min_pos / total
+        } else {
+            0.0
+        }
+    }
+
+    /// Ridge leverage scores of the retained landmarks,
+    /// `ℓᵢ = Σ_c U[i,c]² λ⁺_c/(λ⁺_c + μ)` with ridge `μ = trace⁺/m`.
+    /// Flushes any pending rotation first (scores read the materialized
+    /// basis). By orthonormality `Σᵢ ℓᵢ = Σ_c λ⁺_c/(λ⁺_c + μ)` — the
+    /// effective rank of the tracked matrix at ridge `μ` (pinned by the
+    /// leverage property test).
+    pub fn leverage_scores(&mut self, engine: &dyn Rotate, out: &mut Vec<f64>) {
+        flush_rotation_ws(&mut self.vecs, engine, &mut self.ws);
+        self.leverage_scores_flushed(out);
+    }
+
+    /// [`IncrementalKpca::leverage_scores`] on an already-flushed basis.
+    fn leverage_scores_flushed(&self, out: &mut Vec<f64>) {
+        debug_assert!(!self.ws.pending_rotation(), "leverage scores on a stale basis");
+        let n = self.vals.len();
+        let trace_pos: f64 = self.vals.iter().map(|l| l.max(0.0)).sum();
+        out.clear();
+        if trace_pos <= 0.0 {
+            out.resize(self.m, 0.0);
+            return;
+        }
+        let mu = trace_pos / self.m as f64;
+        for i in 0..self.m {
+            let row = self.vecs.row(i);
+            let mut l = 0.0;
+            for c in 0..n {
+                let lam = self.vals[c].max(0.0);
+                l += row[c] * row[c] * lam / (lam + mu);
+            }
+            out.push(l);
+        }
+    }
+
+    /// Down-date: remove retained landmark `j` from the eigensystem —
+    /// the exact reverse of the eq. 2/3 expansion. Two rank-one updates
+    /// zero the victim's row/column in the tracked matrix, decoupling
+    /// its eigenpair onto the coordinate axis `e_j`; the pair and the
+    /// basis row are then dropped (through the pending blocked product
+    /// when one is accumulating — a mid-batch eviction defers like any
+    /// other update), the running sums shed the victim's kernel
+    /// column, and mean-adjusted streams re-center over the survivors
+    /// with the same norm-balanced symmetric pair as ingest.
+    ///
+    /// `O(m²)` per call (two rank-one updates + two re-centering ones
+    /// when adjusted) against `O(m³)` for a recompute; the eviction
+    /// oracle suite pins evict + re-add ≡ batch recompute to ≤ 1e-10.
+    pub fn remove_point(&mut self, j: usize, engine: &dyn Rotate) -> Result<(), String> {
+        let fused = self.ws.pending_rotation();
+        self.remove_point_inner(j, engine, fused)
+    }
+
+    fn remove_point_inner(
+        &mut self,
+        j: usize,
+        engine: &dyn Rotate,
+        fused: bool,
+    ) -> Result<(), String> {
+        assert!(j < self.m, "remove_point index out of range");
+        if self.mean_adjust && self.m < 3 {
+            return Err("mean-adjusted down-date needs ≥ 3 retained points".into());
+        }
+        let m = self.m;
+        let mf = m as f64;
+        // Kernel column of the victim against the whole retained set
+        // (its own diagonal included) — the row being zeroed out.
+        let mut a = std::mem::take(&mut self.scratch.a);
+        {
+            let xj = &self.x[j * self.dim..(j + 1) * self.dim];
+            kernel_column_into(self.kernel.get(), &self.x, self.dim, m, xj, &mut a);
+        }
+        let d = a[j];
+        // Row/column j of the *tracked* matrix: centered entries when
+        // mean-adjusted, raw kernel values otherwise.
+        let dt = if self.mean_adjust {
+            d - 2.0 * self.k1[j] / mf + self.s / (mf * mf)
+        } else {
+            d
+        };
+        // Decouple: K ← K − σ v₁v₁ᵀ + σ v₂v₂ᵀ with σ = 4/d̃ zeroes row
+        // and column j and pins the diagonal at d̃/4, leaving the exact
+        // eigenpair (d̃/4, e_j) — the reverse of the expansion identity.
+        // A (near-)zero tracked diagonal means the row is already ≈ 0
+        // (SPSD: |K'ᵢⱼ| ≤ √(K'ᵢᵢK'ⱼⱼ)) — skip the updates, the pair is
+        // as decoupled as the spectrum allows.
+        if dt.abs() > self.exclude_tol {
+            self.scratch.v1.clear();
+            for i in 0..m {
+                let e = if self.mean_adjust {
+                    a[i] - (self.k1[i] + self.k1[j]) / mf + self.s / (mf * mf)
+                } else {
+                    a[i]
+                };
+                self.scratch.v1.push(e);
+            }
+            self.scratch.v2.clear();
+            self.scratch.v2.extend_from_slice(&self.scratch.v1);
+            self.scratch.v1[j] = 0.5 * dt;
+            self.scratch.v2[j] = 0.25 * dt;
+            let sigma = 4.0 / dt;
+            let st = apply_rank_one(
+                &mut self.vals,
+                &mut self.vecs,
+                -sigma,
+                &self.scratch.v1,
+                engine,
+                &mut self.ws,
+                fused,
+            )?;
+            self.stats.absorb(st);
+            let st = apply_rank_one(
+                &mut self.vals,
+                &mut self.vecs,
+                sigma,
+                &self.scratch.v2,
+                engine,
+                &mut self.ws,
+                fused,
+            )?;
+            self.stats.absorb(st);
+        }
+        // Locate the decoupled pair: the eigenvector living on e_j is
+        // the effective-basis column with the dominant row-j entry
+        // (±1; all others are 0 to rounding). Read through the pending
+        // product — no flush required.
+        let mut erow = std::mem::take(&mut self.scratch.erow);
+        effective_row_into(&self.vecs, &self.ws, j, &mut erow);
+        let mut c = 0;
+        for (k, e) in erow.iter().enumerate() {
+            if e.abs() > erow[c].abs() {
+                c = k;
+            }
+        }
+        self.scratch.erow = erow;
+        // Drop the pair and the victim's basis row (deferred-aware).
+        remove_eigenpair_ws(&mut self.vals, &mut self.vecs, c, j, &mut self.ws);
+        // Shed the victim from the raw running sums and the data.
+        let mut asum_excl = 0.0;
+        for (i, ai) in a.iter().enumerate() {
+            if i != j {
+                asum_excl += ai;
+            }
+        }
+        let s_old = self.s;
+        self.s -= 2.0 * asum_excl + d;
+        for (i, k1i) in self.k1.iter_mut().enumerate() {
+            if i != j {
+                *k1i -= a[i];
+            }
+        }
+        self.k1.remove(j);
+        self.x.drain(j * self.dim..(j + 1) * self.dim);
+        self.m -= 1;
+        self.stats.evictions += 1;
+        // Mean-adjusted: the survivors' mean moved, so re-center the
+        // tracked matrix over m′ = m − 1 points: K″ = K′ + w𝟙ᵀ + 𝟙wᵀ
+        // with wᵢ = −K₁ᵢ/(m·m′) + aᵢ/m′ + ½c, c = Σ′/m′² − Σ/m² (K₁ the
+        // pre-removal row sums of the survivors) — applied as the same
+        // norm-balanced ±½(γ𝟙 ± w/γ) pair as ingest.
+        if self.mean_adjust {
+            let mpf = self.m as f64;
+            let cshift = self.s / (mpf * mpf) - s_old / (mf * mf);
+            self.scratch.u.clear();
+            for i in 0..self.m {
+                let o = if i < j { i } else { i + 1 };
+                let w = -(self.k1[i] + a[o]) / (mf * mpf) + a[o] / mpf;
+                self.scratch.u.push(w + 0.5 * cshift);
+            }
+            let wnorm = crate::linalg::norm2(&self.scratch.u);
+            if wnorm > 0.0 {
+                let gamma = if self.naive_recenter_split {
+                    1.0
+                } else {
+                    (wnorm / mpf.sqrt()).sqrt()
+                };
+                self.scratch.vp.clear();
+                self.scratch.vm.clear();
+                for &wi in &self.scratch.u {
+                    self.scratch.vp.push(gamma + wi / gamma);
+                    self.scratch.vm.push(gamma - wi / gamma);
+                }
+                let st = apply_rank_one(
+                    &mut self.vals,
+                    &mut self.vecs,
+                    0.5,
+                    &self.scratch.vp,
+                    engine,
+                    &mut self.ws,
+                    fused,
+                )?;
+                self.stats.absorb(st);
+                let st = apply_rank_one(
+                    &mut self.vals,
+                    &mut self.vecs,
+                    -0.5,
+                    &self.scratch.vm,
+                    engine,
+                    &mut self.ws,
+                    fused,
+                )?;
+                self.stats.absorb(st);
+            }
+        }
+        self.scratch.a = a;
+        Ok(())
+    }
+
+    /// One step of bound enforcement: when the cap binds (`max > 0`,
+    /// policy active, `m > max`) evict the policy's victim and return
+    /// its (pre-removal) position; `Ok(None)` when the state fits.
+    /// Callers loop until `None` — an over-cap restored state converges
+    /// one landmark per accept.
+    fn enforce_bound_step(
+        &mut self,
+        engine: &dyn Rotate,
+        fused: bool,
+    ) -> Result<Option<usize>, String> {
+        if self.max_landmarks == 0
+            || self.eviction == EvictionPolicy::Off
+            || self.m <= self.max_landmarks
+            || self.m <= self.protected
+        {
+            return Ok(None);
+        }
+        let free = self.m - self.protected;
+        let j = match self.eviction {
+            EvictionPolicy::Off => unreachable!("checked above"),
+            EvictionPolicy::Uniform => self.protected + self.stats.evictions % free,
+            EvictionPolicy::LeverageScore => {
+                let mut lev = std::mem::take(&mut self.scratch.lev);
+                self.leverage_scores(engine, &mut lev);
+                let mut j = self.protected;
+                for i in self.protected + 1..self.m {
+                    if lev[i] < lev[j] {
+                        j = i;
+                    }
+                }
+                self.scratch.lev = lev;
+                j
+            }
+        };
+        self.remove_point_inner(j, engine, fused)?;
+        Ok(Some(j))
+    }
+
     /// Ingest one example with the default native rotation engine.
     pub fn push(&mut self, xnew: &[f64]) -> Result<bool, String> {
         self.push_with(xnew, &NativeRotate)
@@ -456,11 +829,15 @@ impl<'k> IncrementalKpca<'k> {
         kernel_column_into(self.kernel.get(), &self.x, self.dim, self.m, xnew, &mut a);
         self.scratch.a = a;
         let knew = self.kernel.get().eval(xnew, xnew);
-        if self.mean_adjust {
-            self.push_adjusted(xnew, knew, engine, false)
+        let accepted = if self.mean_adjust {
+            self.push_adjusted(xnew, knew, engine, false)?
         } else {
-            self.push_unadjusted(xnew, knew, engine, false)
+            self.push_unadjusted(xnew, knew, engine, false)?
+        };
+        if accepted {
+            while self.enforce_bound_step(engine, false)?.is_some() {}
         }
+        Ok(accepted)
     }
 
     /// First point of a cold-started (unadjusted) stream: the 1×1
@@ -541,14 +918,19 @@ impl<'k> IncrementalKpca<'k> {
         assert_eq!(xs.len() % self.dim, 0, "batch length not a multiple of dim");
         let b = xs.len() / self.dim;
         let cap_mask = self.scratch.mask.capacity();
-        let cap_idx = self.scratch.batch_idx.capacity();
+        let cap_prov = self.scratch.prov.capacity();
         self.scratch.mask.clear();
-        self.scratch.batch_idx.clear();
+        self.scratch.prov.clear();
         if b == 0 {
             return Ok(BatchOutcome::default());
         }
         let fused = self.rotation_for(b) == BatchRotation::Fused;
         let m0 = self.m;
+        // Provenance of the retained set against the precomputed kernel
+        // blocks: batch-start landmarks map to `block` columns, points
+        // accepted during the batch to `intra` entries. Mid-batch
+        // evictions shift this in lockstep with the retained set.
+        self.scratch.prov.extend(0..m0);
         // Stage 1: blocked kernel rows — batch × retained, batch × batch.
         {
             let mut block = std::mem::take(&mut self.scratch.block);
@@ -575,9 +957,12 @@ impl<'k> IncrementalKpca<'k> {
                 let mut a = std::mem::take(&mut self.scratch.a);
                 let cap_a = a.capacity();
                 a.clear();
-                a.extend_from_slice(&self.scratch.block[i * m0..(i + 1) * m0]);
-                for &j in &self.scratch.batch_idx {
-                    a.push(self.scratch.intra[i * b + j]);
+                for &src in &self.scratch.prov {
+                    a.push(if src < m0 {
+                        self.scratch.block[i * m0 + src]
+                    } else {
+                        self.scratch.intra[i * b + (src - m0)]
+                    });
                 }
                 if a.capacity() > cap_a {
                     self.scratch.reallocs += 1;
@@ -594,8 +979,26 @@ impl<'k> IncrementalKpca<'k> {
                 Ok(accepted) => {
                     self.scratch.mask.push(accepted);
                     if accepted {
-                        self.scratch.batch_idx.push(i);
+                        self.scratch.prov.push(m0 + i);
                         outcome.accepted += 1;
+                        // Bound enforcement may evict mid-batch; keep
+                        // the provenance aligned with the retained set
+                        // (later columns read through the shift).
+                        loop {
+                            match self.enforce_bound_step(engine, fused) {
+                                Ok(Some(p)) => {
+                                    self.scratch.prov.remove(p);
+                                }
+                                Ok(None) => break,
+                                Err(e) => {
+                                    failure = Some(e);
+                                    break;
+                                }
+                            }
+                        }
+                        if failure.is_some() {
+                            break;
+                        }
                     } else {
                         outcome.excluded += 1;
                     }
@@ -613,7 +1016,7 @@ impl<'k> IncrementalKpca<'k> {
         if self.scratch.mask.capacity() > cap_mask {
             self.scratch.reallocs += 1;
         }
-        if self.scratch.batch_idx.capacity() > cap_idx {
+        if self.scratch.prov.capacity() > cap_prov {
             self.scratch.reallocs += 1;
         }
         match failure {
@@ -657,7 +1060,7 @@ impl<'k> IncrementalKpca<'k> {
         let f = std::mem::size_of::<f64>();
         f * (self.scratch.block.capacity() + self.scratch.intra.capacity())
             + std::mem::size_of::<bool>() * self.scratch.mask.capacity()
-            + std::mem::size_of::<usize>() * self.scratch.batch_idx.capacity()
+            + std::mem::size_of::<usize>() * self.scratch.prov.capacity()
             + self.scratch.kb.bytes_resident()
     }
 
@@ -708,7 +1111,7 @@ impl<'k> IncrementalKpca<'k> {
         let s = &mut self.scratch;
         for buf in [
             &mut s.a, &mut s.u, &mut s.vp, &mut s.vm, &mut s.k1_next, &mut s.v, &mut s.v1,
-            &mut s.v2,
+            &mut s.v2, &mut s.erow, &mut s.lev,
         ] {
             if buf.capacity() < m + 1 {
                 buf.reserve(m + 1 - buf.len());
@@ -723,8 +1126,9 @@ impl<'k> IncrementalKpca<'k> {
         if s.mask.capacity() < b {
             s.mask.reserve(b - s.mask.len());
         }
-        if s.batch_idx.capacity() < b {
-            s.batch_idx.reserve(b - s.batch_idx.len());
+        // Provenance spans the retained set plus the whole batch.
+        if s.prov.capacity() < m + b {
+            s.prov.reserve(m + b - s.prov.len());
         }
         s.kb.reserve(m, b, self.dim);
     }
@@ -1406,6 +1810,148 @@ mod tests {
             engine_gemms: 0,
         };
         assert!(IncrementalKpca::from_parts(kern, parts).is_err());
+    }
+
+    #[test]
+    fn remove_point_matches_batch_recompute() {
+        // Down-dating landmark j must leave exactly the eigensystem of
+        // the kernel matrix over the survivors — both algorithms.
+        for adjust in [false, true] {
+            let ds = yeast_like(14, 41);
+            let kern = Rbf { sigma: 1.2 };
+            let seed = ds.x.submatrix(5, ds.dim());
+            let mut inc = IncrementalKpca::from_batch(&kern, &seed, adjust).unwrap();
+            for i in 5..ds.n() {
+                inc.push(ds.x.row(i)).unwrap();
+            }
+            inc.remove_point(3, &NativeRotate).unwrap();
+            inc.remove_point(7, &NativeRotate).unwrap();
+            assert_eq!(inc.len(), 12);
+            assert_eq!(inc.evictions(), 2);
+            let drift = inc.reconstruct().max_abs_diff(&inc.batch_reference());
+            assert!(drift < 1e-8, "adjust={adjust} drift {drift}");
+            assert!(orthogonality_defect(&inc.vecs) < 1e-9);
+        }
+    }
+
+    #[test]
+    fn remove_then_readd_recovers_original_state() {
+        // Evict + re-add the same point: the eigensystem must match a
+        // fresh batch recompute of the full set (the oracle suite pins
+        // the same invariant across kernels at 1e-10).
+        let ds = yeast_like(12, 42);
+        let kern = Rbf { sigma: 1.0 };
+        let seed = ds.x.submatrix(4, ds.dim());
+        let mut inc = IncrementalKpca::from_batch(&kern, &seed, true).unwrap();
+        for i in 4..ds.n() {
+            inc.push(ds.x.row(i)).unwrap();
+        }
+        let victim = inc.row(6).to_vec();
+        inc.remove_point(6, &NativeRotate).unwrap();
+        assert!(inc.push(&victim).unwrap());
+        assert_eq!(inc.len(), 12);
+        let drift = inc.reconstruct().max_abs_diff(&inc.batch_reference());
+        assert!(drift < 1e-10, "drift {drift}");
+    }
+
+    #[test]
+    fn bounded_stream_enforces_cap_and_stays_exact() {
+        let ds = yeast_like(30, 43);
+        let kern = Rbf { sigma: 1.0 };
+        let seed = ds.x.submatrix(4, ds.dim());
+        let mut inc = IncrementalKpca::from_batch(&kern, &seed, true).unwrap();
+        inc.set_bound(10, EvictionPolicy::Uniform, 4);
+        for i in 4..ds.n() {
+            inc.push(ds.x.row(i)).unwrap();
+        }
+        assert_eq!(inc.len(), 10, "cap must hold");
+        assert_eq!(inc.evictions(), 30 - 10);
+        assert_eq!(inc.stats.accepted, 30);
+        // The seed prefix is never evicted.
+        for i in 0..4 {
+            for (a, b) in inc.row(i).iter().zip(ds.x.row(i)) {
+                assert_eq!(a, b, "protected landmark {i} was evicted");
+            }
+        }
+        // The tracked eigensystem is the batch answer over whatever
+        // survived — eviction is exact, not approximate.
+        let drift = inc.reconstruct().max_abs_diff(&inc.batch_reference());
+        assert!(drift < 1e-8, "drift {drift}");
+        assert!(inc.sufficiency_gap() >= 0.0);
+    }
+
+    #[test]
+    fn bounded_batched_matches_bounded_sequential() {
+        // Mid-batch eviction (through the provenance remap and the
+        // fused pending product) must pick the same victims and reach
+        // the same eigensystem as the single-push bounded stream.
+        let ds = yeast_like(28, 44);
+        let kern = Rbf { sigma: 1.1 };
+        let seed = ds.x.submatrix(5, ds.dim());
+        let mut seq = IncrementalKpca::from_batch(&kern, &seed, true).unwrap();
+        let mut bat = IncrementalKpca::from_batch(&kern, &seed, true).unwrap();
+        seq.set_bound(9, EvictionPolicy::Uniform, 3);
+        bat.set_bound(9, EvictionPolicy::Uniform, 3);
+        for i in 5..ds.n() {
+            seq.push(ds.x.row(i)).unwrap();
+        }
+        let dim = ds.dim();
+        let flat = ds.x.as_slice();
+        let mut i = 5;
+        while i < ds.n() {
+            let end = (i + 6).min(ds.n());
+            bat.push_batch(&flat[i * dim..end * dim]).unwrap();
+            i = end;
+        }
+        assert_eq!(seq.len(), 9);
+        assert_eq!(bat.len(), 9);
+        assert_eq!(seq.evictions(), bat.evictions());
+        assert_eq!(seq.data_flat(), bat.data_flat(), "victim sequences diverged");
+        let diff = bat.reconstruct().max_abs_diff(&seq.reconstruct());
+        assert!(diff < 1e-9, "bounded batched vs sequential diff {diff}");
+    }
+
+    #[test]
+    fn leverage_scores_sum_to_effective_rank() {
+        let ds = yeast_like(16, 45);
+        let kern = Rbf { sigma: 1.4 };
+        let seed = ds.x.submatrix(4, ds.dim());
+        let mut inc = IncrementalKpca::from_batch(&kern, &seed, true).unwrap();
+        for i in 4..ds.n() {
+            inc.push(ds.x.row(i)).unwrap();
+        }
+        let mut lev = Vec::new();
+        inc.leverage_scores(&NativeRotate, &mut lev);
+        assert_eq!(lev.len(), inc.len());
+        let trace_pos: f64 = inc.vals.iter().map(|l| l.max(0.0)).sum();
+        let mu = trace_pos / inc.len() as f64;
+        let erank: f64 =
+            inc.vals.iter().map(|&l| l.max(0.0)).map(|l| l / (l + mu)).sum();
+        let total: f64 = lev.iter().sum();
+        assert!((total - erank).abs() < 1e-8, "Σℓ {total} vs effective rank {erank}");
+        for &l in &lev {
+            assert!(l >= -1e-12, "leverage score {l} negative");
+        }
+    }
+
+    #[test]
+    fn leverage_eviction_respects_protected_prefix() {
+        let ds = yeast_like(24, 46);
+        let kern = Rbf { sigma: 1.0 };
+        let seed = ds.x.submatrix(6, ds.dim());
+        let mut inc = IncrementalKpca::from_batch(&kern, &seed, true).unwrap();
+        inc.set_bound(8, EvictionPolicy::LeverageScore, 6);
+        for i in 6..ds.n() {
+            inc.push(ds.x.row(i)).unwrap();
+        }
+        assert_eq!(inc.len(), 8);
+        for i in 0..6 {
+            for (a, b) in inc.row(i).iter().zip(ds.x.row(i)) {
+                assert_eq!(a, b, "protected landmark {i} was evicted");
+            }
+        }
+        let drift = inc.reconstruct().max_abs_diff(&inc.batch_reference());
+        assert!(drift < 1e-8, "drift {drift}");
     }
 
     #[test]

@@ -11,7 +11,9 @@ pub mod topk;
 
 pub use batch::BatchKpca;
 pub use centering::{center_column, center_gram};
-pub use incremental::{BatchOutcome, BatchRotation, IncrementalKpca, KpcaParts, KpcaStats};
+pub use incremental::{
+    BatchOutcome, BatchRotation, EvictionPolicy, IncrementalKpca, KpcaParts, KpcaStats,
+};
 pub use krr::IncrementalKrr;
 pub use projection::project_point;
 pub use topk::TopKKpca;

@@ -110,6 +110,18 @@ impl Mat {
         self.rows += 1;
     }
 
+    /// Remove row `i` in place (`O(rows · cols)` shift, no
+    /// reallocation — the inverse of [`Mat::push_row`], used by the
+    /// bounded-memory Nyström layer when a landmark is evicted).
+    pub fn remove_row(&mut self, i: usize) {
+        assert!(i < self.rows, "remove_row out of range");
+        if i + 1 < self.rows {
+            self.data.copy_within((i + 1) * self.cols.., i * self.cols);
+        }
+        self.data.truncate((self.rows - 1) * self.cols);
+        self.rows -= 1;
+    }
+
     /// Consume into the flat row-major backing vector.
     pub fn into_vec(self) -> Vec<f64> {
         self.data
@@ -323,6 +335,23 @@ mod tests {
                 assert_eq!(m[(i, j)], m[(j, i)]);
             }
         }
+    }
+
+    #[test]
+    fn remove_row_shifts_and_preserves() {
+        let mut m = Mat::from_fn(4, 3, |i, j| (i * 3 + j) as f64);
+        let cap = m.as_slice().len();
+        m.remove_row(1);
+        assert_eq!(m.rows(), 3);
+        assert_eq!(m.cols(), 3);
+        assert_eq!(m.row(0), &[0.0, 1.0, 2.0]);
+        assert_eq!(m.row(1), &[6.0, 7.0, 8.0]);
+        assert_eq!(m.row(2), &[9.0, 10.0, 11.0]);
+        assert_eq!(m.as_slice().len(), cap - 3);
+        // Removing the last row is a pure truncate.
+        m.remove_row(2);
+        assert_eq!(m.rows(), 2);
+        assert_eq!(m.row(1), &[6.0, 7.0, 8.0]);
     }
 
     #[test]

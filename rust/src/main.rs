@@ -28,6 +28,13 @@
 //!                                  checkpoint on clean exit)
 //!                  `--fsync off|every=N|interval_ms=M`  (WAL fsync policy;
 //!                                  default off — see `FsyncPolicy`)
+//!                  `--max-landmarks <m>`  (bounded memory: cap the retained
+//!                                  landmark set at m; every accept past the
+//!                                  cap evicts one landmark, so the stream
+//!                                  runs in fixed memory forever)
+//!                  `--eviction off|uniform|leverage`  (victim policy at the
+//!                                  cap; defaults to leverage when a cap is
+//!                                  set)
 
 use inkpca::coordinator::{
     Config, Coordinator, EngineConfig, EnginePolicy, FsyncPolicy, KernelConfig, PersistConfig,
@@ -35,6 +42,7 @@ use inkpca::coordinator::{
 };
 use inkpca::data::{load, Dataset, SliceSource};
 use inkpca::experiments::{self, RunMode};
+use inkpca::kpca::EvictionPolicy;
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -105,6 +113,16 @@ fn serve(args: &[String]) -> Result<(), String> {
         },
         _ => EngineConfig::Native,
     };
+    let max_landmarks: usize =
+        flag_value(args, "--max-landmarks").and_then(|v| v.parse().ok()).unwrap_or(0);
+    // A cap without an explicit policy evicts by leverage score; an
+    // explicit `--eviction off` turns the cap into a no-op on purpose.
+    let eviction = match flag_value(args, "--eviction") {
+        Some(name) => EvictionPolicy::from_name(&name)
+            .ok_or_else(|| format!("unknown eviction policy '{name}' (off|uniform|leverage)"))?,
+        None if max_landmarks > 0 => EvictionPolicy::LeverageScore,
+        None => EvictionPolicy::Off,
+    };
     let persist = match flag_value(args, "--snapshot-dir") {
         Some(dir) => {
             let mut p = PersistConfig::new(dir);
@@ -133,6 +151,8 @@ fn serve(args: &[String]) -> Result<(), String> {
             .and_then(|v| v.parse().ok())
             .map(std::time::Duration::from_millis),
         persist,
+        max_landmarks,
+        eviction,
     };
     let mut ds = load(&dataset, n, 42)?;
     ds.standardize();

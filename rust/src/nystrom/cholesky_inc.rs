@@ -14,6 +14,7 @@
 //! rebuild. Nothing re-layouts per added point.
 
 use crate::kernels::{kernel_column_into, kernel_rows_into, Kernel, KernelBlockScratch};
+use crate::kpca::EvictionPolicy;
 use crate::linalg::{transpose_into, Mat, Norms, PackedCholesky};
 
 /// Incrementally grown Cholesky-based Nyström approximation.
@@ -41,6 +42,12 @@ pub struct CholeskyNystrom<'k> {
     rows_buf: Vec<f64>,
     /// Row-norm scratch for the blocked kernel evaluation.
     kb: KernelBlockScratch,
+    /// Bounded-memory cap on the subset (0 = unbounded).
+    max_landmarks: usize,
+    eviction: EvictionPolicy,
+    protected: usize,
+    /// Landmarks evicted so far (also the round-robin cursor).
+    pub evicted: usize,
 }
 
 impl<'k> CholeskyNystrom<'k> {
@@ -59,7 +66,69 @@ impl<'k> CholeskyNystrom<'k> {
             batch_buf: Vec::new(),
             rows_buf: Vec::new(),
             kb: KernelBlockScratch::new(),
+            max_landmarks: 0,
+            eviction: EvictionPolicy::Off,
+            protected: 0,
+            evicted: 0,
         }
+    }
+
+    /// Cap the subset at `max_landmarks` points (0 = unbounded),
+    /// never evicting the first `protected` entries. A Cholesky factor
+    /// has no spectrum to score, so [`EvictionPolicy::LeverageScore`]
+    /// degrades to the round-robin [`EvictionPolicy::Uniform`] here —
+    /// this baseline exists for the ablation bench, and its honest
+    /// removal cost (a full `O(m³)` refactorization, see
+    /// [`CholeskyNystrom::remove_landmark`]) is part of what the bench
+    /// measures against the eigen path's `O(m²)` down-date.
+    pub fn set_bound(&mut self, max_landmarks: usize, policy: EvictionPolicy, protected: usize) {
+        self.max_landmarks = max_landmarks;
+        self.eviction = policy;
+        self.protected = protected;
+    }
+
+    /// Evict subset position `c`: drop the point from every view, then
+    /// rebuild the factor from scratch over the survivors — a bordered
+    /// Cholesky expansion has no `O(m²)` inverse for interior rows, so
+    /// removal is a full `O(m³)` refactorization (the eigen path's
+    /// rank-one down-date is the contribution this baseline contrasts).
+    pub fn remove_landmark(&mut self, c: usize) -> Result<(), String> {
+        assert!(c < self.m(), "landmark position out of range");
+        let dim = self.x.cols();
+        self.subset.remove(c);
+        self.sub_x.drain(c * dim..(c + 1) * dim);
+        self.kmn.remove_row(c);
+        self.chol = PackedCholesky::new();
+        let mut col = std::mem::take(&mut self.col_buf);
+        for i in 0..self.subset.len() {
+            let xi = &self.sub_x[i * dim..(i + 1) * dim];
+            kernel_column_into(self.kernel, &self.sub_x, dim, i, xi, &mut col);
+            let kself = self.kernel.eval(xi, xi) + self.jitter;
+            if self.chol.expand(&col, kself).is_err() {
+                self.col_buf = col;
+                return Err(format!(
+                    "refactorization after eviction lost positive definiteness at row {i}"
+                ));
+            }
+        }
+        self.col_buf = col;
+        self.evicted += 1;
+        Ok(())
+    }
+
+    /// One bound-enforcement step; callers loop until `None`.
+    fn enforce_bound_step(&mut self) -> Result<Option<usize>, String> {
+        if self.max_landmarks == 0
+            || self.eviction == EvictionPolicy::Off
+            || self.m() <= self.max_landmarks
+            || self.m() <= self.protected
+        {
+            return Ok(None);
+        }
+        let free = self.m() - self.protected;
+        let c = self.protected + self.evicted % free;
+        self.remove_landmark(c)?;
+        Ok(Some(c))
     }
 
     pub fn n(&self) -> usize {
@@ -110,6 +179,7 @@ impl<'k> CholeskyNystrom<'k> {
         self.col_buf = col;
         self.sub_x.extend_from_slice(xi);
         self.subset.push(idx);
+        while self.enforce_bound_step()?.is_some() {}
         Ok(true)
     }
 
@@ -165,6 +235,9 @@ impl<'k> CholeskyNystrom<'k> {
             self.rows_buf = rows;
         }
         self.batch_buf = acc;
+        // Enforce the bound after the cross-Gram appends so every view
+        // shrinks in lockstep.
+        while self.enforce_bound_step()?.is_some() {}
         Ok(b)
     }
 
@@ -267,6 +340,45 @@ mod tests {
         assert_eq!(chol.subset, vec![3, 4]);
         assert_eq!(chol.kmn.rows(), 2);
         assert_eq!(chol.factor().order(), 2);
+    }
+
+    #[test]
+    fn remove_landmark_refactorizes_exactly() {
+        // Eviction + refactorization must equal a fresh build over the
+        // surviving subset — bit-for-bit on the factor's approximation.
+        let ds = yeast_like(16, 8);
+        let kern = Rbf { sigma: 1.0 };
+        let mut chol = CholeskyNystrom::new(&kern, ds.x.clone());
+        for m in 0..7 {
+            assert!(chol.add_point(m).unwrap());
+        }
+        chol.remove_landmark(2).unwrap();
+        assert_eq!(chol.m(), 6);
+        assert_eq!(chol.subset, vec![0, 1, 3, 4, 5, 6]);
+        assert_eq!(chol.kmn.rows(), 6);
+        assert_eq!(chol.factor().order(), 6);
+        let mut fresh = CholeskyNystrom::new(&kern, ds.x.clone());
+        for &idx in &[0usize, 1, 3, 4, 5, 6] {
+            assert!(fresh.add_point(idx).unwrap());
+        }
+        let diff = chol.approx_gram().max_abs_diff(&fresh.approx_gram());
+        assert!(diff < 1e-12, "refactorized vs fresh diff {diff}");
+    }
+
+    #[test]
+    fn bounded_cholesky_subset_holds_cap() {
+        let ds = yeast_like(20, 9);
+        let kern = Rbf { sigma: 1.0 };
+        let mut chol = CholeskyNystrom::new(&kern, ds.x.clone());
+        chol.set_bound(5, EvictionPolicy::Uniform, 2);
+        for m in 0..12 {
+            assert!(chol.add_point(m).unwrap());
+        }
+        assert_eq!(chol.m(), 5, "cap must hold");
+        assert_eq!(chol.evicted, 12 - 5);
+        assert_eq!(&chol.subset[..2], &[0, 1], "protected prefix evicted");
+        assert_eq!(chol.kmn.rows(), 5);
+        assert_eq!(chol.factor().order(), 5);
     }
 
     #[test]

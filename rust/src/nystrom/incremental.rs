@@ -12,7 +12,7 @@ use crate::kernels::{kernel_column_into, kernel_rows_into, Kernel, KernelBlockSc
 use crate::linalg::{matmul_nt, matmul_tn_into, transpose_into, Mat, Norms};
 use crate::rankone::Rotate;
 
-use crate::kpca::IncrementalKpca;
+use crate::kpca::{EvictionPolicy, IncrementalKpca};
 
 /// Incrementally grown Nyström approximation over a fixed evaluation
 /// set of `n` points.
@@ -37,6 +37,17 @@ pub struct IncrementalNystrom<'k> {
     rows_buf: Vec<f64>,
     /// Row-norm scratch for the blocked kernel evaluation.
     kb: KernelBlockScratch,
+    /// Bounded-memory cap on the subset (0 = unbounded). The bound is
+    /// managed at *this* layer, not on the inner eigensystem — an inner
+    /// eviction would silently desync `kmn`/`subset` from the subset
+    /// Gram, so the inner bound stays off and
+    /// [`IncrementalNystrom::remove_landmark`] removes all three views
+    /// together.
+    max_landmarks: usize,
+    eviction: EvictionPolicy,
+    protected: usize,
+    /// Reusable leverage-score buffer for victim selection.
+    lev_buf: Vec<f64>,
 }
 
 impl<'k> IncrementalNystrom<'k> {
@@ -57,7 +68,83 @@ impl<'k> IncrementalNystrom<'k> {
             batch_buf: Vec::new(),
             rows_buf: Vec::new(),
             kb: KernelBlockScratch::new(),
+            max_landmarks: 0,
+            eviction: EvictionPolicy::Off,
+            protected: 0,
+            lev_buf: Vec::new(),
         })
+    }
+
+    /// Cap the subset at `max_landmarks` points (0 = unbounded),
+    /// evicting by `policy` and never evicting the first `protected`
+    /// subset entries. Enforced after every accepted add (batched adds
+    /// enforce once the whole batch has been absorbed).
+    pub fn set_bound(&mut self, max_landmarks: usize, policy: EvictionPolicy, protected: usize) {
+        self.max_landmarks = max_landmarks;
+        self.eviction = policy;
+        self.protected = protected;
+    }
+
+    /// Landmarks evicted so far.
+    pub fn evictions(&self) -> usize {
+        self.inc.evictions()
+    }
+
+    /// Sufficiency signal of the current subset — the share of the
+    /// retained spectrum in its smallest positive eigenvalue (see
+    /// [`IncrementalKpca::sufficiency_gap`]; the `n/m` Nyström rescale
+    /// cancels, so the subset eigensystem's gauge is the
+    /// approximation's too).
+    pub fn sufficiency_gap(&self) -> f64 {
+        self.inc.sufficiency_gap()
+    }
+
+    /// Evict subset position `c` (not an evaluation index): down-dates
+    /// the subset eigensystem ([`IncrementalKpca::remove_point`]),
+    /// drops the `K_{m,n}` row and the subset entry — the three views
+    /// stay in lockstep.
+    pub fn remove_landmark(&mut self, c: usize) -> Result<(), String> {
+        self.remove_landmark_with(c, &crate::rankone::NativeRotate)
+    }
+
+    /// [`IncrementalNystrom::remove_landmark`] with an explicit rotate
+    /// engine.
+    pub fn remove_landmark_with(&mut self, c: usize, engine: &dyn Rotate) -> Result<(), String> {
+        assert!(c < self.m(), "landmark position out of range");
+        self.inc.remove_point(c, engine)?;
+        self.kmn.remove_row(c);
+        self.subset.remove(c);
+        Ok(())
+    }
+
+    /// One bound-enforcement step (see [`IncrementalNystrom::set_bound`]).
+    fn enforce_bound_step(&mut self, engine: &dyn Rotate) -> Result<Option<usize>, String> {
+        if self.max_landmarks == 0
+            || self.eviction == EvictionPolicy::Off
+            || self.m() <= self.max_landmarks
+            || self.m() <= self.protected
+        {
+            return Ok(None);
+        }
+        let free = self.m() - self.protected;
+        let c = match self.eviction {
+            EvictionPolicy::Off => unreachable!("checked above"),
+            EvictionPolicy::Uniform => self.protected + self.inc.evictions() % free,
+            EvictionPolicy::LeverageScore => {
+                let mut lev = std::mem::take(&mut self.lev_buf);
+                self.inc.leverage_scores(engine, &mut lev);
+                let mut c = self.protected;
+                for i in self.protected + 1..self.m() {
+                    if lev[i] < lev[c] {
+                        c = i;
+                    }
+                }
+                self.lev_buf = lev;
+                c
+            }
+        };
+        self.remove_landmark_with(c, engine)?;
+        Ok(Some(c))
     }
 
     pub fn n(&self) -> usize {
@@ -101,6 +188,7 @@ impl<'k> IncrementalNystrom<'k> {
         self.kmn.push_row(&col);
         self.col_buf = col;
         self.subset.push(idx);
+        while self.enforce_bound_step(engine)?.is_some() {}
         Ok(true)
     }
 
@@ -191,6 +279,13 @@ impl<'k> IncrementalNystrom<'k> {
             }
             self.rows_buf = rows;
             self.batch_buf = acc;
+        }
+        // Enforce the bound once the cross-Gram rows are in lockstep
+        // with the eigensystem (the inner bound stays off, so mid-batch
+        // the subset may exceed the cap by up to the batch size; it
+        // converges here before the call returns).
+        if result.is_ok() {
+            while self.enforce_bound_step(engine)?.is_some() {}
         }
         result.map(|outcome| outcome.accepted)
     }
@@ -363,6 +458,62 @@ mod tests {
         for (nys, lam) in vals.iter().zip(inys.inc.vals.iter()) {
             assert!((nys - lam * 15.0 / 5.0).abs() < 1e-12);
         }
+    }
+
+    #[test]
+    fn remove_landmark_matches_fresh_subset() {
+        // Evicting a landmark must leave exactly the approximation a
+        // batch fit over the surviving subset would compute.
+        let ds = yeast_like(18, 21);
+        let kern = Rbf { sigma: 1.0 };
+        let mut inys = IncrementalNystrom::new(&kern, ds.x.clone()).unwrap();
+        for m in 0..8 {
+            assert!(inys.add_point(m).unwrap());
+        }
+        inys.remove_landmark(3).unwrap();
+        assert_eq!(inys.m(), 7);
+        assert_eq!(inys.subset, vec![0, 1, 2, 4, 5, 6, 7]);
+        assert_eq!(inys.kmn.rows(), 7);
+        let batch = BatchNystrom::fit(&kern, &ds.x, &inys.subset).unwrap();
+        let diff = inys.approx_gram().max_abs_diff(&batch.approx_gram());
+        assert!(diff < 1e-7, "evicted vs fresh subset diff {diff}");
+    }
+
+    #[test]
+    fn bounded_subset_holds_cap_and_stays_consistent() {
+        let ds = yeast_like(24, 22);
+        let kern = Rbf { sigma: 1.0 };
+        let mut inys = IncrementalNystrom::new(&kern, ds.x.clone()).unwrap();
+        inys.set_bound(6, crate::kpca::EvictionPolicy::Uniform, 2);
+        for m in 0..14 {
+            inys.add_point(m).unwrap();
+        }
+        assert_eq!(inys.m(), 6, "cap must hold");
+        assert_eq!(inys.evictions(), 14 - 6);
+        assert_eq!(inys.kmn.rows(), 6);
+        assert_eq!(inys.subset.len(), 6);
+        // The protected prefix survives every eviction.
+        assert_eq!(&inys.subset[..2], &[0, 1]);
+        assert!(inys.sufficiency_gap() >= 0.0);
+        // All three views agree with a fresh batch fit of the survivors.
+        let batch = BatchNystrom::fit(&kern, &ds.x, &inys.subset).unwrap();
+        let diff = inys.approx_gram().max_abs_diff(&batch.approx_gram());
+        assert!(diff < 1e-6, "bounded subset vs fresh fit diff {diff}");
+    }
+
+    #[test]
+    fn bounded_batched_adds_converge_to_cap() {
+        let ds = yeast_like(20, 23);
+        let kern = Rbf { sigma: 1.2 };
+        let mut inys = IncrementalNystrom::new(&kern, ds.x.clone()).unwrap();
+        inys.set_bound(5, crate::kpca::EvictionPolicy::LeverageScore, 0);
+        inys.add_points(&[0, 1, 2, 3]).unwrap();
+        inys.add_points(&[4, 5, 6, 7, 8, 9]).unwrap();
+        assert_eq!(inys.m(), 5);
+        assert_eq!(inys.kmn.rows(), 5);
+        let batch = BatchNystrom::fit(&kern, &ds.x, &inys.subset).unwrap();
+        let diff = inys.approx_gram().max_abs_diff(&batch.approx_gram());
+        assert!(diff < 1e-6, "diff {diff}");
     }
 
     #[test]

@@ -184,6 +184,31 @@ impl EigenBasis {
         self.cols -= 1;
     }
 
+    /// Drop row `i`, shifting later rows up in place (no reallocation;
+    /// the landmark-eviction down-date removes the evicted point's
+    /// coordinate from every eigenvector this way). Removing a basis
+    /// *row* commutes with any pending right-rotation `U·Q`, so this is
+    /// safe while a blocked-batch product is pending.
+    pub fn remove_row(&mut self, i: usize) {
+        assert!(i < self.rows, "remove_row out of range");
+        let s = self.stride.max(self.cols);
+        if i + 1 < self.rows {
+            self.data.copy_within((i + 1) * s..(self.rows - 1) * s + self.cols, i * s);
+        }
+        self.rows -= 1;
+    }
+
+    /// Shrink the column window to `new_cols` without moving data — the
+    /// commit step of a *rectangular* pending-rotation flush, where
+    /// `U (m × q_rows) · Q (q_rows × q_dim)` lands in a buffer laid out
+    /// at the old stride and only the leading `q_dim` columns are
+    /// meaningful. Slack columns go stale by design (see module docs);
+    /// [`EigenBasis::expand`] re-zeroes a lane before exposing it.
+    pub(crate) fn shrink_cols(&mut self, new_cols: usize) {
+        assert!(new_cols <= self.cols, "shrink_cols must not grow the window");
+        self.cols = new_cols;
+    }
+
     /// Max absolute difference to a dense matrix (test helper).
     pub fn max_abs_diff(&self, other: &Mat) -> f64 {
         assert_eq!((self.rows, self.cols), (other.rows(), other.cols()));
@@ -303,6 +328,53 @@ mod tests {
         assert_eq!(b[(0, 0)], 0.0);
         assert_eq!(b[(0, 1)], 2.0);
         assert_eq!(b[(2, 2)], 23.0);
+    }
+
+    #[test]
+    fn remove_row_shifts_up() {
+        let m = Mat::from_fn(4, 3, |i, j| (10 * i + j) as f64);
+        let mut b = EigenBasis::from_mat(m);
+        b.remove_row(1);
+        assert_eq!(b.rows(), 3);
+        assert_eq!(b[(0, 0)], 0.0);
+        assert_eq!(b[(1, 0)], 20.0);
+        assert_eq!(b[(2, 2)], 32.0);
+        // Removing the (new) last row needs no data motion.
+        b.remove_row(2);
+        assert_eq!(b.rows(), 2);
+        assert_eq!(b[(1, 1)], 21.0);
+    }
+
+    #[test]
+    fn remove_row_respects_stride_slack() {
+        // Grow past the initial capacity so stride > cols, then remove a
+        // row and check the window stays consistent.
+        let mut b = EigenBasis::new();
+        for _ in 0..5 {
+            b.expand();
+        }
+        for i in 0..5 {
+            for j in 0..5 {
+                b[(i, j)] = (10 * i + j) as f64;
+            }
+        }
+        b.remove_row(2);
+        assert_eq!(b.rows(), 4);
+        assert_eq!(b[(2, 0)], 30.0);
+        assert_eq!(b[(3, 4)], 44.0);
+        assert_eq!(b[(1, 1)], 11.0);
+    }
+
+    #[test]
+    fn shrink_cols_then_expand_re_zeroes() {
+        let mut b = EigenBasis::from_mat(Mat::from_fn(3, 3, |_, _| 5.0));
+        b.shrink_cols(2);
+        assert_eq!(b.cols(), 2);
+        b.expand();
+        assert_eq!(b.cols(), 3);
+        for i in 0..b.rows() {
+            assert_eq!(b[(i, 2)], 0.0, "stale column leaked at row {i}");
+        }
     }
 
     #[test]

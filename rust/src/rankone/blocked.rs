@@ -73,7 +73,15 @@ pub fn rank_one_update_fused_tol_ws(
     ws: &mut UpdateWorkspace,
 ) -> Result<UpdateStats, String> {
     let n = vals.len();
-    assert_eq!(vecs.cols(), n, "one eigenvector column per eigenvalue");
+    // While a product is pending the stale basis may be *wider* than
+    // the eigenvalue count (deferred removals drop columns from Q, not
+    // from U); the effective basis U·Q always has one column per value.
+    if ws.q_dim == 0 {
+        assert_eq!(vecs.cols(), n, "one eigenvector column per eigenvalue");
+    } else {
+        assert_eq!(ws.q_dim, n, "pending rotation order mismatch");
+        assert_eq!(ws.q_rows, vecs.cols(), "pending rotation rows must match the stale basis");
+    }
     assert_eq!(vecs.rows(), v.len(), "v must live in the row space of vecs");
     if n == 0 || sigma == 0.0 {
         return Ok(UpdateStats::default());
@@ -82,15 +90,17 @@ pub fn rank_one_update_fused_tol_ws(
         vals.windows(2).all(|w| w[0] <= w[1]),
         "eigenvalues must be ascending"
     );
-    debug_assert!(ws.q_dim == 0 || ws.q_dim == n, "pending rotation order mismatch");
 
     // z = Qᵀ(Uᵀv) — the perturbation projected into the *effective*
-    // basis U·Q; with nothing pending this is the ordinary Uᵀv.
-    ensure_f64(&mut ws.zq, n, &mut ws.reallocs);
+    // basis U·Q; with nothing pending this is the ordinary Uᵀv. After a
+    // deferred removal Q is rectangular (`q_rows × n`, `q_rows > n`),
+    // so the intermediate Uᵀv lives in the stale basis's column space.
+    let qr = vecs.cols();
+    ensure_f64(&mut ws.zq, qr, &mut ws.reallocs);
     crate::linalg::gemv_t_into(vecs.view(), v, &mut ws.zq);
     ensure_f64(&mut ws.z, n, &mut ws.reallocs);
     if ws.q_dim > 0 {
-        crate::linalg::gemv_t_into(MatView::new(&ws.q, n, n, n), &ws.zq, &mut ws.z);
+        crate::linalg::gemv_t_into(MatView::new(&ws.q, qr, n, n), &ws.zq, &mut ws.z);
     } else {
         ws.z.copy_from_slice(&ws.zq);
     }
@@ -112,17 +122,18 @@ pub fn rank_one_update_fused_tol_ws(
     super::stabilized_weights_into(vals, &ws.z, sigma, &ws.roots, &mut ws.zhat);
     super::assemble_w_into(&ws.zhat, vals, &ws.roots, &mut ws.w, &mut ws.col, &mut ws.reallocs)?;
 
-    // Fold: Q ← Q·W (native r×r product into the double buffer), or
-    // seed the product with W when nothing is pending yet.
+    // Fold: Q ← Q·W (native q_rows×n product into the double buffer),
+    // or seed the product with W when nothing is pending yet.
     if ws.q_dim == 0 {
         ensure_f64(&mut ws.q, n * n, &mut ws.reallocs);
         ws.q.copy_from_slice(&ws.w[..n * n]);
         ws.q_dim = n;
+        ws.q_rows = n;
     } else {
-        ensure_f64(&mut ws.q_next, n * n, &mut ws.reallocs);
-        let q_view = MatView::new(&ws.q, n, n, n);
+        ensure_f64(&mut ws.q_next, qr * n, &mut ws.reallocs);
+        let q_view = MatView::new(&ws.q, qr, n, n);
         let w_view = MatView::new(&ws.w, n, n, n);
-        let mut out = MatViewMut::new(&mut ws.q_next, n, n, n);
+        let mut out = MatViewMut::new(&mut ws.q_next, qr, n, n);
         crate::linalg::matmul_into_buf(q_view, w_view, &mut out, &mut ws.pack);
         std::mem::swap(&mut ws.q, &mut ws.q_next);
         ws.accum_gemms += 1;
@@ -140,6 +151,11 @@ pub fn rank_one_update_fused_tol_ws(
 /// into the workspace double buffer, committed by an `O(1)` swap.
 /// Returns `true` if a product was pending (and one engine GEMM was
 /// dispatched), `false` as a no-op. Idempotent; cheap when clean.
+///
+/// After deferred eigenpair removals the product is rectangular
+/// (`q_rows × q_dim`, `q_rows > q_dim`): the GEMM then also *shrinks*
+/// the basis window to `q_dim` columns — the columns the removals
+/// logically dropped never materialize.
 pub fn flush_rotation_ws(
     vecs: &mut EigenBasis,
     engine: &dyn Rotate,
@@ -149,18 +165,23 @@ pub fn flush_rotation_ws(
     if n == 0 {
         return false;
     }
-    debug_assert_eq!(vecs.cols(), n, "pending rotation order must match the basis");
+    let qr = ws.q_rows;
+    debug_assert_eq!(vecs.cols(), qr, "pending rotation rows must match the basis");
     let m = vecs.rows();
     let stride = vecs.stride();
     let out_len = vecs.data_len();
     ensure_f64(&mut ws.rotated, out_len, &mut ws.reallocs);
     {
-        let q_view = MatView::new(&ws.q, n, n, n);
+        let q_view = MatView::new(&ws.q, qr, n, n);
         let out_view = MatViewMut::new(&mut ws.rotated, m, n, stride);
         engine.rotate_into_buf(vecs.view(), q_view, out_view, &mut ws.pack);
     }
     vecs.swap_data(&mut ws.rotated);
+    if n < qr {
+        vecs.shrink_cols(n);
+    }
     ws.q_dim = 0;
+    ws.q_rows = 0;
     ws.engine_gemms += 1;
     ws.flushes += 1;
     true
@@ -173,28 +194,110 @@ pub fn flush_rotation_ws(
 /// permutation to `Q` and `vals` — `U` is left untouched.
 pub(super) fn expand_pending_rotation(vals: &mut [f64], ws: &mut UpdateWorkspace) {
     let n = ws.q_dim;
+    let qr = ws.q_rows;
     let n1 = n + 1;
+    let r1 = qr + 1;
     debug_assert_eq!(vals.len(), n1);
     // diag(Q, 1) re-layout into the double buffer (row stride changes
     // from n to n+1, so this cannot be done in place front-to-back).
-    ensure_f64(&mut ws.q_next, n1 * n1, &mut ws.reallocs);
-    for i in 0..n {
+    // The new basis column (identity row/column in `U`) couples only to
+    // the new product row, so the embed stays exact for rectangular Q.
+    ensure_f64(&mut ws.q_next, r1 * n1, &mut ws.reallocs);
+    for i in 0..qr {
         ws.q_next[i * n1..i * n1 + n].copy_from_slice(&ws.q[i * n..(i + 1) * n]);
         ws.q_next[i * n1 + n] = 0.0;
     }
-    ws.q_next[n * n1..n1 * n1].fill(0.0);
-    ws.q_next[n * n1 + n] = 1.0;
+    ws.q_next[qr * n1..r1 * n1].fill(0.0);
+    ws.q_next[qr * n1 + n] = 1.0;
     std::mem::swap(&mut ws.q, &mut ws.q_next);
     ws.q_dim = n1;
+    ws.q_rows = r1;
     // Restore ascending order: the new eigenvalue sits at the end; move
     // it (and Q's last column) to its sorted slot by a right-rotation.
     let new_val = vals[n];
     let p = vals[..n].partition_point(|&x| x <= new_val);
     if p < n {
         vals[p..].rotate_right(1);
-        for i in 0..n1 {
+        for i in 0..r1 {
             let row = &mut ws.q[i * n1..(i + 1) * n1];
             row[p..].rotate_right(1);
+        }
+    }
+}
+
+/// Drop column `c` of the pending product (the deferred form of
+/// [`EigenBasis::remove_col`]): re-layout `q_rows × q_dim` →
+/// `q_rows × (q_dim − 1)` through the double buffer. `Q` keeps its row
+/// count — the stale basis is untouched, so `U·Q` simply loses the
+/// removed eigenvector — and the rectangle collapses at the next
+/// [`flush_rotation_ws`].
+pub(super) fn remove_pending_col(ws: &mut UpdateWorkspace, c: usize) {
+    let n = ws.q_dim;
+    let qr = ws.q_rows;
+    debug_assert!(n > 0 && c < n, "remove_pending_col without a pending product");
+    let n1 = n - 1;
+    ensure_f64(&mut ws.q_next, qr * n1.max(1), &mut ws.reallocs);
+    for i in 0..qr {
+        let src = &ws.q[i * n..(i + 1) * n];
+        let dst = &mut ws.q_next[i * n1..(i + 1) * n1];
+        dst[..c].copy_from_slice(&src[..c]);
+        dst[c..].copy_from_slice(&src[c + 1..]);
+    }
+    std::mem::swap(&mut ws.q, &mut ws.q_next);
+    ws.q_dim = n1;
+}
+
+/// Remove eigenpair `c` (its eigenvalue and effective eigenvector
+/// column) and basis row `row` — the structural half of a rank-one
+/// *down-date*, run after the decoupling updates have isolated the
+/// eigenpair. Deferred-aware: while a blocked-batch product is pending
+/// the column is dropped from `Q` (no flush, no engine GEMM — row
+/// removal commutes with the right-rotation); otherwise it is dropped
+/// from the basis directly.
+pub fn remove_eigenpair_ws(
+    vals: &mut Vec<f64>,
+    vecs: &mut EigenBasis,
+    c: usize,
+    row: usize,
+    ws: &mut UpdateWorkspace,
+) {
+    assert!(c < vals.len(), "eigenpair index out of range");
+    if ws.q_dim > 0 {
+        debug_assert_eq!(ws.q_dim, vals.len());
+        remove_pending_col(ws, c);
+    } else {
+        vecs.remove_col(c);
+    }
+    vecs.remove_row(row);
+    vals.remove(c);
+}
+
+/// Row `i` of the *effective* basis — `U·Q` while a product is pending,
+/// `U` itself otherwise — written into `out` (resized to the eigenpair
+/// count). The down-date uses this to locate a decoupled eigenpair
+/// without forcing a flush; `O(q_rows · q_dim)` worst case.
+pub fn effective_row_into(
+    vecs: &EigenBasis,
+    ws: &UpdateWorkspace,
+    i: usize,
+    out: &mut Vec<f64>,
+) {
+    let u_row = vecs.row(i);
+    if ws.q_dim == 0 {
+        out.clear();
+        out.extend_from_slice(u_row);
+        return;
+    }
+    let (qr, n) = (ws.q_rows, ws.q_dim);
+    debug_assert_eq!(u_row.len(), qr);
+    out.clear();
+    out.resize(n, 0.0);
+    for (k, &u) in u_row.iter().enumerate() {
+        if u != 0.0 {
+            let qrow = &ws.q[k * n..(k + 1) * n];
+            for (o, &q) in out.iter_mut().zip(qrow) {
+                *o += u * q;
+            }
         }
     }
 }
@@ -442,6 +545,89 @@ mod tests {
         rank_one_update_ws(&mut vals, &mut basis, 0.6, &v2, &NativeRotate, &mut ws).unwrap();
         assert!(!ws.pending_rotation());
         assert!(orthogonality_defect(&basis) < 1e-10);
+    }
+
+    /// Removing an eigenpair while a product is pending (column dropped
+    /// from `Q`, row from `U`) must land on the same eigensystem as
+    /// flushing first and removing from the basis directly — including
+    /// a further fused update applied across the removal.
+    #[test]
+    fn deferred_removal_matches_flushed_removal() {
+        let n = 9;
+        let mut rng = Rng::new(67);
+        let a = rand_sym(n, &mut rng);
+        let eg = eigh(&a).unwrap();
+
+        let mut vals_d = eg.values.clone();
+        let mut basis_d = EigenBasis::from_mat(eg.vectors.clone());
+        let mut ws_d = UpdateWorkspace::new();
+        let mut vals_f = eg.values.clone();
+        let mut basis_f = EigenBasis::from_mat(eg.vectors.clone());
+        let mut ws_f = UpdateWorkspace::new();
+
+        // Two clean updates to build a pending product on both twins.
+        for _ in 0..2 {
+            let sigma = rng.range(0.3, 1.2);
+            let v: Vec<f64> = (0..n).map(|_| rng.range(-0.8, 0.8)).collect();
+            rank_one_update_fused_ws(&mut vals_d, &mut basis_d, sigma, &v, &NativeRotate, &mut ws_d)
+                .unwrap();
+            rank_one_update_fused_ws(&mut vals_f, &mut basis_f, sigma, &v, &NativeRotate, &mut ws_f)
+                .unwrap();
+        }
+        let (c, row) = (3, 5);
+        // Twin F: flush, then remove from the materialized basis.
+        assert!(flush_rotation_ws(&mut basis_f, &NativeRotate, &mut ws_f));
+        remove_eigenpair_ws(&mut vals_f, &mut basis_f, c, row, &mut ws_f);
+        // Twin D: remove while pending — Q goes rectangular.
+        remove_eigenpair_ws(&mut vals_d, &mut basis_d, c, row, &mut ws_d);
+        assert!(ws_d.pending_rotation(), "deferred removal must not flush");
+        assert_eq!(ws_d.q_rows, n, "product keeps its row count");
+        assert_eq!(ws_d.q_dim, n - 1, "product loses the removed column");
+
+        // One more update across the removal on both twins (same data),
+        // then materialize and compare.
+        let v: Vec<f64> = (0..n - 1).map(|_| rng.range(-0.6, 0.6)).collect();
+        rank_one_update_fused_ws(&mut vals_d, &mut basis_d, 0.7, &v, &NativeRotate, &mut ws_d)
+            .unwrap();
+        rank_one_update_fused_ws(&mut vals_f, &mut basis_f, 0.7, &v, &NativeRotate, &mut ws_f)
+            .unwrap();
+        flush_rotation_ws(&mut basis_d, &NativeRotate, &mut ws_d);
+        flush_rotation_ws(&mut basis_f, &NativeRotate, &mut ws_f);
+        assert_eq!(basis_d.rows(), n - 1);
+        assert_eq!(basis_d.cols(), n - 1);
+        for (a, b) in vals_d.iter().zip(&vals_f) {
+            assert!((a - b).abs() < 1e-10, "{a} vs {b}");
+        }
+        assert!(basis_d.max_abs_diff(&basis_f.to_mat()) < 1e-10);
+    }
+
+    /// `effective_row_into` reads through the pending product: it must
+    /// agree with the same row after a flush.
+    #[test]
+    fn effective_row_reads_through_pending_product() {
+        let n = 7;
+        let mut rng = Rng::new(71);
+        let a = rand_sym(n, &mut rng);
+        let eg = eigh(&a).unwrap();
+        let mut vals = eg.values.clone();
+        let mut basis = EigenBasis::from_mat(eg.vectors.clone());
+        let mut ws = UpdateWorkspace::new();
+        for _ in 0..3 {
+            let sigma = rng.range(0.3, 1.0);
+            let v: Vec<f64> = (0..n).map(|_| rng.range(-0.8, 0.8)).collect();
+            rank_one_update_fused_ws(&mut vals, &mut basis, sigma, &v, &NativeRotate, &mut ws)
+                .unwrap();
+        }
+        assert!(ws.pending_rotation());
+        let mut through = Vec::new();
+        effective_row_into(&basis, &ws, 4, &mut through);
+        flush_rotation_ws(&mut basis, &NativeRotate, &mut ws);
+        let mut direct = Vec::new();
+        effective_row_into(&basis, &ws, 4, &mut direct);
+        assert_eq!(through.len(), direct.len());
+        for (a, b) in through.iter().zip(&direct) {
+            assert!((a - b).abs() < 1e-12, "{a} vs {b}");
+        }
     }
 
     /// reserve() pre-sizes the blocked-path scratch too: a warm fused

@@ -34,13 +34,28 @@
 //! itself) flush and fall back to the sequential path, so blocked and
 //! sequential runs are numerically interchangeable. The
 //! [`UpdateWorkspace::engine_gemms`] counter exposes the amortization.
+//!
+//! **Down-dates.** The inverse operation — removing a point from the
+//! tracked eigensystem — is two rank-one updates that decouple the
+//! point's eigenpair, followed by [`remove_eigenpair_ws`], which drops
+//! the decoupled eigenvalue, its effective eigenvector column, and the
+//! point's basis row. Both halves are deferred-aware: the decoupling
+//! updates fuse into a pending product like any other clean update, and
+//! the column removal drops a column of `Q` instead of forcing a flush
+//! (the product goes rectangular, `q_rows × q_dim` with
+//! `q_rows > q_dim`, and collapses at the next [`flush_rotation_ws`]).
+//! This is what keeps landmark eviction off the engine-GEMM budget of
+//! the batch it lands in (see `kpca::IncrementalKpca::remove_point`).
 
 mod basis;
 mod blocked;
 mod workspace;
 
 pub use basis::EigenBasis;
-pub use blocked::{flush_rotation_ws, rank_one_update_fused_tol_ws, rank_one_update_fused_ws};
+pub use blocked::{
+    effective_row_into, flush_rotation_ws, rank_one_update_fused_tol_ws,
+    rank_one_update_fused_ws, remove_eigenpair_ws,
+};
 pub use workspace::UpdateWorkspace;
 
 pub(crate) use workspace::ensure_f64;

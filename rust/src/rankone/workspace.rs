@@ -48,15 +48,23 @@ pub struct UpdateWorkspace {
     /// Reusable secular roots.
     pub(crate) roots: Vec<SecularRoot>,
     /// Pending accumulated rotation `Q = Q₁·…·Q_j` of the blocked
-    /// rank-b path, row-major `q_dim × q_dim`. While `q_dim > 0` the
-    /// true eigenvectors are `U·Q`, not `U` — every read of the basis
-    /// must go through [`super::flush_rotation_ws`] first.
+    /// rank-b path, row-major `q_rows × q_dim` (square after pure
+    /// updates/expansions; one column narrower per deferred eigenpair
+    /// removal). While `q_dim > 0` the true eigenvectors are `U·Q`, not
+    /// `U` — every read of the basis must go through
+    /// [`super::flush_rotation_ws`] first.
     pub(crate) q: Vec<f64>,
     /// Double buffer for the `Q ← Q·W` accumulation GEMM and the
-    /// `diag(Q, 1)` re-layout at deferred expansions.
+    /// `diag(Q, 1)` / column-removal re-layouts.
     pub(crate) q_next: Vec<f64>,
-    /// Order of the pending rotation (0 = none pending).
+    /// Columns of the pending rotation (0 = none pending). Always equal
+    /// to the eigenvalue count while pending.
     pub(crate) q_dim: usize,
+    /// Rows of the pending rotation — the (stale) basis column count.
+    /// Equals `q_dim` until a deferred removal drops a `Q` column;
+    /// invariant `q_rows >= q_dim` and `q_rows == vecs.cols()` while
+    /// pending.
+    pub(crate) q_rows: usize,
     /// Scratch for `Uᵀv` before the `Qᵀ` re-projection (length n).
     pub(crate) zq: Vec<f64>,
     /// Buffer-growth events across all members (zero once warm).

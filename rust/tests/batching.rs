@@ -8,6 +8,9 @@
 //! sequential one ≤1e-10 everywhere (deflation fallbacks included)
 //! while dispatching strictly fewer engine back-rotation GEMMs.
 
+mod common;
+
+use common::oracle;
 use inkpca::coordinator::{
     EngineConfig, KernelConfig, PoolConfig, ShardPool, StreamConfig, StreamHandle, StreamRouter,
 };
@@ -43,8 +46,7 @@ fn drive_async(router: &StreamRouter, h: &StreamHandle, ds: &Dataset) {
 /// batched and async streams must match the sequential one ≤ 1e-10 on
 /// eigenvalues and projection magnitudes.
 fn assert_ingest_shapes_equivalent(kernel: KernelConfig, mean_adjust: bool, seed: u64) {
-    let mut ds = yeast_like(27, seed);
-    ds.standardize();
+    let ds = oracle::std_stream(27, seed);
     let pool = ShardPool::spawn(PoolConfig {
         shards: 2,
         queue: 16,
@@ -113,8 +115,7 @@ fn batched_equals_sequential_poly_adjusted() {
 /// the sequential run through the same points.
 #[test]
 fn deflation_heavy_batch_matches_sequential() {
-    let mut ds = yeast_like(12, 903);
-    ds.standardize();
+    let ds = oracle::std_stream(12, 903);
     let dim = ds.dim();
     // points 6.. with two mid-batch duplicates of earlier rows.
     let mut tail: Vec<f64> = Vec::new();
@@ -151,8 +152,7 @@ fn ragged_batches_match_sequential_across_kernels() {
     ];
     for (ki, kern) in kernels.iter().enumerate() {
         for &mean_adjust in &[false, true] {
-            let mut ds = yeast_like(22, 910 + ki as u64);
-            ds.standardize();
+            let ds = oracle::std_stream(22, 910 + ki as u64);
             let dim = ds.dim();
             let seed = ds.x.submatrix(5, dim);
             let flat = ds.x.as_slice();
@@ -189,8 +189,7 @@ fn assert_rotation_strategies_equivalent(
     seed: u64,
     expect_amortization: bool,
 ) {
-    let mut ds = yeast_like(29, seed);
-    ds.standardize();
+    let ds = oracle::std_stream(29, seed);
     let dim = ds.dim();
     let seed_mat = ds.x.submatrix(5, dim);
     let flat = ds.x.as_slice();
@@ -271,8 +270,7 @@ fn fused_rotation_matches_sequential_poly() {
 /// record the fallbacks it took.
 #[test]
 fn fused_deflation_heavy_batch_falls_back_and_matches() {
-    let mut ds = yeast_like(12, 936);
-    ds.standardize();
+    let ds = oracle::std_stream(12, 936);
     let dim = ds.dim();
     let mut tail: Vec<f64> = Vec::new();
     for i in 6..10 {
@@ -344,8 +342,7 @@ fn fused_batch_with_mid_batch_exclusion_matches() {
 /// pool's workspace-counted GEMM gauges show the amortization.
 #[test]
 fn router_fused_stream_matches_sequential_stream() {
-    let mut ds = yeast_like(30, 938);
-    ds.standardize();
+    let ds = oracle::std_stream(30, 938);
     let pool = ShardPool::spawn(PoolConfig {
         shards: 2,
         queue: 16,
@@ -417,8 +414,7 @@ fn router_fused_stream_matches_sequential_stream() {
 /// scratch (kernel blocks, row norms, assembly buffers).
 #[test]
 fn batched_steady_state_is_zero_realloc() {
-    let mut ds = yeast_like(46, 920);
-    ds.standardize();
+    let ds = oracle::std_stream(46, 920);
     let dim = ds.dim();
     let kern = Rbf { sigma: 1.1 };
     let seed = ds.x.submatrix(6, dim);

@@ -1,0 +1,6 @@
+//! Shared helpers for the integration suites. Each test crate pulls
+//! this in with `mod common;` — not every crate uses every helper, so
+//! dead-code lints are off for the module.
+#![allow(dead_code)]
+
+pub mod oracle;

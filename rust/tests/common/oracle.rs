@@ -1,0 +1,126 @@
+//! The oracle test layer: batch-recompute references and seeded stream
+//! generators shared by every integration suite.
+//!
+//! The incremental system's correctness story is always the same
+//! comparison — a stream of rank-one updates (and now down-dates)
+//! against the thing the paper defines it to equal: the *batch*
+//! eigendecomposition of the full centered Gram over exactly the
+//! retained points (and its Nyström counterpart over the landmark
+//! subset). This module holds that comparison once, instead of one
+//! slightly-different copy per test file.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use inkpca::coordinator::{RoutedEngine, StreamHandle, StreamRouter};
+use inkpca::data::synthetic::yeast_like;
+use inkpca::data::Dataset;
+use inkpca::kernels::{Kernel, Rbf};
+use inkpca::kpca::IncrementalKpca;
+use inkpca::linalg::Mat;
+use inkpca::nystrom::BatchNystrom;
+
+/// Unique scratch directory for durability tests (unique per process ×
+/// call, so parallel test binaries never collide).
+pub fn temp_dir(tag: &str) -> PathBuf {
+    static SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+    let n = SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    let dir =
+        std::env::temp_dir().join(format!("inkpca_test_{tag}_{}_{n}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Seeded deterministic stream: `n` standardized yeast-like points.
+/// Same seed → bit-identical dataset, on every platform.
+pub fn std_stream(n: usize, seed: u64) -> Dataset {
+    let mut ds = yeast_like(n, seed);
+    ds.standardize();
+    ds
+}
+
+/// Uninterrupted single-threaded reference: the first `n` points of
+/// `ds` driven directly through the same native engine type the shard
+/// workers use (RBF at `sigma`, mean-adjusted, `seed_points` batch
+/// initialization).
+pub fn reference_run(
+    ds: &Dataset,
+    n: usize,
+    sigma: f64,
+    seed_points: usize,
+) -> IncrementalKpca<'static> {
+    let kernel: Arc<dyn Kernel> = Arc::new(Rbf { sigma });
+    let seed = ds.x.submatrix(seed_points, ds.dim());
+    let engine = RoutedEngine::native_only();
+    let mut inc = IncrementalKpca::from_batch_shared(kernel, &seed, true).unwrap();
+    for i in seed_points..n {
+        inc.push_with(ds.x.row(i), &engine).unwrap();
+    }
+    inc
+}
+
+/// A routed stream must match the reference eigensystem ≤ 1e-10 on
+/// eigenvalues and projection magnitudes (eigenvector sign is
+/// arbitrary). Projections exercise eigenvectors, retained data and
+/// centering sums together.
+pub fn assert_matches_reference(
+    router: &StreamRouter,
+    h: &StreamHandle,
+    ds: &Dataset,
+    reference: &IncrementalKpca<'static>,
+) {
+    let snap = router.snapshot(h).unwrap();
+    assert_eq!(snap.m, reference.len(), "{}", h.id());
+    let top_ref: Vec<f64> = reference.vals.iter().rev().take(10).copied().collect();
+    for (got, want) in snap.top_values.iter().zip(&top_ref) {
+        assert!(
+            (got - want).abs() <= 1e-10,
+            "{}: eigenvalue {got} vs reference {want}",
+            h.id()
+        );
+    }
+    let probe = vec![0.25; ds.dim()];
+    let got = router.project(h, probe.clone(), 4).unwrap();
+    let want = reference.project(&probe, 4);
+    for (g, w) in got.iter().zip(&want) {
+        assert!(
+            (g.abs() - w.abs()).abs() <= 1e-10,
+            "{}: projection {g} vs reference {w}",
+            h.id()
+        );
+    }
+}
+
+/// The stream's own drift gauge against its batch-recomputed ground
+/// truth must be tiny — the paper's Figure 1 invariant.
+pub fn assert_drift_tiny(router: &StreamRouter, h: &StreamHandle) {
+    let drift = router.measure_drift(h).unwrap();
+    assert!(drift.norms.frobenius < 1e-7, "{}: drift {:?}", h.id(), drift.norms);
+}
+
+/// Full-Gram batch oracle: eigendecompose the (optionally centered)
+/// Gram of `rows` from scratch and return the reconstructed tracked
+/// matrix `U Λ Uᵀ`. This is the ground truth every incremental state
+/// over the same retained rows must reproduce — including one that got
+/// there through evictions and re-adds.
+pub fn kpca_oracle(kern: &dyn Kernel, rows: &Mat, mean_adjust: bool) -> Mat {
+    IncrementalKpca::from_batch(kern, rows, mean_adjust)
+        .expect("oracle batch build")
+        .reconstruct()
+}
+
+/// The same oracle applied to an incremental state's *own* retained
+/// rows: the max-abs gap between what the stream tracks and what a
+/// from-scratch batch recompute over exactly those rows yields.
+pub fn kpca_oracle_gap(kern: &dyn Kernel, inc: &IncrementalKpca<'_>) -> f64 {
+    let rows = Mat::from_vec(inc.len(), inc.dim(), inc.data_flat().to_vec());
+    inc.reconstruct().max_abs_diff(&kpca_oracle(kern, &rows, inc.mean_adjust))
+}
+
+/// Nyström batch oracle: the rank-m approximate Gram
+/// `K_nm K_mm⁻¹ K_mn` rebuilt from scratch over landmark `subset` —
+/// the reference an incremental Nyström state with the same subset
+/// must match.
+pub fn nystrom_oracle(kern: &dyn Kernel, x: &Mat, subset: &[usize]) -> Mat {
+    BatchNystrom::fit(kern, x, subset).expect("oracle Nyström fit").approx_gram()
+}

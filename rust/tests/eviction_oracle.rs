@@ -1,0 +1,281 @@
+//! Eviction oracle suite: the bounded-memory down-date path against the
+//! batch-recompute ground truth. A landmark eviction is two rank-one
+//! updates (the exact reverse of the eq. 2 expansion) plus a drop of the
+//! decoupled pair, so a state that evicts and re-adds must land on
+//! *exactly* the eigensystem a from-scratch build over its retained rows
+//! yields (≤ 1e-10) — across kernel families, both mean-adjust modes,
+//! mid-batch evictions, and evictions deferred into a fused pending Q.
+//! Plus the ridge-leverage property layer: scores are non-negative, sum
+//! to the effective rank, and the argmin victim never comes from the
+//! protected seed prefix.
+
+mod common;
+
+use common::oracle;
+use inkpca::data::Dataset;
+use inkpca::kernels::{Kernel, Linear, Polynomial, Rbf};
+use inkpca::kpca::{BatchRotation, EvictionPolicy, IncrementalKpca};
+use inkpca::rankone::NativeRotate;
+use inkpca::util::prop::{check, default_cases, ensure};
+use inkpca::util::Rng;
+
+fn kernels() -> Vec<Box<dyn Kernel>> {
+    vec![
+        Box::new(Rbf { sigma: 1.5 }),
+        Box::new(Linear),
+        Box::new(Polynomial { degree: 2, offset: 1.0 }),
+    ]
+}
+
+/// Seed an incremental state from the first `seed_n` rows of `ds`.
+fn seeded<'k>(
+    kern: &'k dyn Kernel,
+    ds: &Dataset,
+    seed_n: usize,
+    mean_adjust: bool,
+) -> IncrementalKpca<'k> {
+    let seed = ds.x.submatrix(seed_n, ds.dim());
+    IncrementalKpca::from_batch(kern, &seed, mean_adjust).unwrap()
+}
+
+/// The acceptance bar: evict + re-add ≡ full batch recompute over the
+/// retained rows, ≤ 1e-10, for every kernel family × adjust mode.
+/// Evictions hit the interior, the first unprotected slot and the last
+/// slot, so the row/eigenpair shifts are exercised at both ends.
+#[test]
+fn evict_and_readd_matches_batch_recompute_all_kernels() {
+    for kern in kernels() {
+        for mean_adjust in [false, true] {
+            let ds = oracle::std_stream(18, 4301);
+            let mut inc = seeded(kern.as_ref(), &ds, 8, mean_adjust);
+            for i in 8..14 {
+                inc.push(ds.x.row(i)).unwrap();
+            }
+            let m0 = inc.len();
+            // Evict: an interior row, then (post-shift) the first and
+            // the last retained row.
+            inc.remove_point(5, &NativeRotate).unwrap();
+            inc.remove_point(0, &NativeRotate).unwrap();
+            inc.remove_point(inc.len() - 1, &NativeRotate).unwrap();
+            assert_eq!(inc.evictions(), 3);
+            assert_eq!(inc.len(), m0 - 3);
+            // Re-add fresh points on the downdated state.
+            for i in 14..ds.n() {
+                inc.push(ds.x.row(i)).unwrap();
+            }
+            let gap = oracle::kpca_oracle_gap(kern.as_ref(), &inc);
+            assert!(
+                gap <= 1e-10,
+                "{} adjust={mean_adjust}: evict+re-add vs batch recompute gap {gap}",
+                kern.name()
+            );
+        }
+    }
+}
+
+/// A mean-adjusted down-date re-centers over the survivors, which needs
+/// m ≥ 3; below that the removal must refuse, not corrupt.
+#[test]
+fn mean_adjusted_removal_needs_three_points() {
+    let ds = oracle::std_stream(4, 4305);
+    let kern = Rbf { sigma: 1.5 };
+    let mut inc = seeded(&kern, &ds, 2, true);
+    assert!(inc.remove_point(0, &NativeRotate).is_err());
+    // Untouched: the failed removal left the state usable.
+    assert_eq!(inc.len(), 2);
+    inc.push(ds.x.row(2)).unwrap();
+    assert!(inc.remove_point(0, &NativeRotate).is_ok());
+    let gap = oracle::kpca_oracle_gap(&kern, &inc);
+    assert!(gap <= 1e-10, "post-refusal state drifted: {gap}");
+}
+
+/// Bounded sequential stream: the cap holds at fixed m, the protected
+/// seed prefix survives verbatim, the eviction counter advances once
+/// per over-cap accept, and the long-run state still tracks its batch
+/// ground truth (drift bar, ~30 evictions deep).
+#[test]
+fn bounded_stream_pins_cap_and_tracks_oracle() {
+    for policy in [EvictionPolicy::Uniform, EvictionPolicy::LeverageScore] {
+        for mean_adjust in [false, true] {
+            let ds = oracle::std_stream(40, 4302);
+            let kern = Rbf { sigma: 1.5 };
+            let (cap, protected) = (12, 6);
+            let mut inc = seeded(&kern, &ds, protected, mean_adjust);
+            inc.set_bound(cap, policy, protected);
+            let mut accepted = protected;
+            for i in protected..ds.n() {
+                if inc.push(ds.x.row(i)).unwrap() {
+                    accepted += 1;
+                }
+                assert!(inc.len() <= cap, "{policy:?}: cap breached at point {i}");
+            }
+            assert_eq!(inc.len(), cap, "{policy:?}: enough accepts to fill the cap");
+            assert_eq!(inc.evictions(), accepted - cap, "{policy:?}");
+            // The seed prefix is never a victim.
+            for i in 0..protected {
+                assert_eq!(inc.row(i), ds.x.row(i), "{policy:?}: protected row {i} evicted");
+            }
+            let gap = oracle::kpca_oracle_gap(&kern, &inc);
+            assert!(gap < 1e-7, "{policy:?} adjust={mean_adjust}: long-run gap {gap}");
+            let s = inc.sufficiency_gap();
+            assert!((0.0..=1.0).contains(&s), "{policy:?}: sufficiency gauge {s}");
+        }
+    }
+}
+
+/// Mid-batch evictions under the fused strategy: the down-date defers
+/// into the accumulating pending Q instead of forcing a flush, and the
+/// batched bounded run lands exactly (≤ 1e-10) on the sequential
+/// bounded run's eigensystem. Uniform policy — its victim sequence is a
+/// pure function of the eviction counter, so both runs evict the same
+/// rows. The batch size straddles several enforcement points, so every
+/// eviction after the first lands on a non-empty pending product.
+#[test]
+fn mid_batch_eviction_defers_into_pending_q() {
+    for mean_adjust in [false, true] {
+        let ds = oracle::std_stream(36, 4303);
+        let kern = Rbf { sigma: 1.2 };
+        let (cap, protected) = (10, 6);
+        let dim = ds.dim();
+        let flat = ds.x.as_slice();
+
+        let mut seq = seeded(&kern, &ds, protected, mean_adjust);
+        seq.set_bound(cap, EvictionPolicy::Uniform, protected);
+        for i in protected..ds.n() {
+            seq.push(ds.x.row(i)).unwrap();
+        }
+
+        let mut fus = seeded(&kern, &ds, protected, mean_adjust);
+        fus.set_bound(cap, EvictionPolicy::Uniform, protected);
+        fus.batch_rotation = Some(BatchRotation::Fused);
+        let mut i = protected;
+        while i < ds.n() {
+            let end = (i + 8).min(ds.n());
+            fus.push_batch(&flat[i * dim..end * dim]).unwrap();
+            assert!(
+                !fus.workspace().pending_rotation(),
+                "no pending rotation may survive a batch boundary"
+            );
+            i = end;
+        }
+
+        // The deferral actually happened: rotations folded, evictions
+        // landed, and strictly fewer engine GEMMs than eager rotation.
+        assert!(fus.workspace().fused_updates() > 0);
+        assert!(fus.evictions() > 0);
+        assert_eq!(fus.evictions(), seq.evictions(), "adjust={mean_adjust}");
+        assert!(
+            fus.engine_gemms() < seq.engine_gemms(),
+            "adjust={mean_adjust}: fused {} vs sequential {} engine GEMMs",
+            fus.engine_gemms(),
+            seq.engine_gemms()
+        );
+
+        assert_eq!(fus.len(), seq.len());
+        for (a, b) in fus.vals.iter().zip(&seq.vals) {
+            assert!(
+                (a - b).abs() <= 1e-10,
+                "adjust={mean_adjust}: eigenvalue {a} vs {b}"
+            );
+        }
+        let diff = fus.reconstruct().max_abs_diff(&seq.reconstruct());
+        assert!(diff <= 1e-10, "adjust={mean_adjust}: fused vs sequential diff {diff}");
+        let gap = oracle::kpca_oracle_gap(&kern, &fus);
+        assert!(gap < 1e-7, "adjust={mean_adjust}: batched bounded gap {gap}");
+    }
+}
+
+/// An eviction straddling a *live* pending Q: fold a fused batch whose
+/// bound enforcement fires while earlier updates of the same batch are
+/// still pending, then keep streaming single points. The downdated pair
+/// removal is read through the pending product (deferred column drop),
+/// so the continuation must stay exact.
+#[test]
+fn eviction_straddling_fused_pending_q_stays_exact() {
+    let ds = oracle::std_stream(30, 4304);
+    let kern = Rbf { sigma: 1.0 };
+    let (cap, protected) = (9, 5);
+    let dim = ds.dim();
+    let flat = ds.x.as_slice();
+    let mut inc = seeded(&kern, &ds, protected, false);
+    inc.set_bound(cap, EvictionPolicy::Uniform, protected);
+    inc.batch_rotation = Some(BatchRotation::Fused);
+    // One big batch: the first few accepts fill the cap with rotations
+    // pending, every later accept evicts against that pending product.
+    inc.push_batch(&flat[protected * dim..20 * dim]).unwrap();
+    assert!(inc.evictions() > 0);
+    // Continue sequentially on the flushed state.
+    for i in 20..ds.n() {
+        inc.push(ds.x.row(i)).unwrap();
+    }
+    let gap = oracle::kpca_oracle_gap(&kern, &inc);
+    assert!(gap <= 1e-7, "straddled eviction gap {gap}");
+}
+
+/// Ridge-leverage property layer (in-tree driver): over random kernels,
+/// sizes and streams — scores are non-negative, their sum is the
+/// effective rank `Σ_c λ⁺_c/(λ⁺_c + μ)` at ridge `μ = trace⁺/m` (an
+/// orthonormality identity), and the bounded argmin victim is never a
+/// protected row.
+#[test]
+fn prop_leverage_scores_sum_to_effective_rank() {
+    check("leverage-scores", default_cases().min(12), |rng| {
+        let n = 10 + rng.below(12);
+        let seed_n = 3 + rng.below(3);
+        let kern: Box<dyn Kernel> = match rng.below(3) {
+            0 => Box::new(Rbf { sigma: rng.range(0.5, 3.0) }),
+            1 => Box::new(Linear),
+            _ => Box::new(Polynomial { degree: 2, offset: rng.range(0.5, 2.0) }),
+        };
+        let adjust = rng.uniform() < 0.5;
+        let ds = oracle::std_stream(n, rng.next_u64());
+        let mut inc = seeded(kern.as_ref(), &ds, seed_n, adjust);
+        for i in seed_n..n {
+            inc.push(ds.x.row(i)).map_err(|e| e.to_string())?;
+        }
+        let mut lev = Vec::new();
+        inc.leverage_scores(&NativeRotate, &mut lev);
+        ensure(lev.len() == inc.len(), || "one score per landmark".to_string())?;
+        for (i, &l) in lev.iter().enumerate() {
+            ensure(l >= -1e-12, || format!("negative leverage {l} at {i}"))?;
+            ensure(l <= 1.0 + 1e-9, || format!("leverage {l} > 1 at {i}"))?;
+        }
+        let trace_pos: f64 = inc.vals.iter().map(|l| l.max(0.0)).sum();
+        if trace_pos > 0.0 {
+            let mu = trace_pos / inc.len() as f64;
+            let effective_rank: f64 =
+                inc.vals.iter().map(|&l| l.max(0.0) / (l.max(0.0) + mu)).sum();
+            let sum: f64 = lev.iter().sum();
+            ensure((sum - effective_rank).abs() <= 1e-8 * effective_rank.max(1.0), || {
+                format!("Σℓ = {sum} vs effective rank {effective_rank}")
+            })?;
+        }
+        Ok(())
+    });
+}
+
+/// The leverage policy's victim is always an unprotected row, for every
+/// protected-prefix size the bound allows — random streams, random
+/// caps.
+#[test]
+fn prop_leverage_eviction_never_hits_protected_prefix() {
+    check("protected-prefix", default_cases().min(10), |rng| {
+        let n = 16 + rng.below(12);
+        let protected = 3 + rng.below(4);
+        let cap = protected + 2 + rng.below(4);
+        let kern = Rbf { sigma: rng.range(0.8, 2.5) };
+        let ds = oracle::std_stream(n, rng.next_u64());
+        let mut inc = seeded(&kern, &ds, protected, rng.uniform() < 0.5);
+        inc.set_bound(cap, EvictionPolicy::LeverageScore, protected);
+        for i in protected..n {
+            inc.push(ds.x.row(i)).map_err(|e| e.to_string())?;
+            ensure(inc.len() <= cap, || format!("cap {cap} breached"))?;
+            for p in 0..protected {
+                ensure(inc.row(p) == ds.x.row(p), || {
+                    format!("protected row {p} evicted (cap {cap}, protected {protected})")
+                })?;
+            }
+        }
+        ensure(inc.evictions() > 0, || "stream never reached the cap".to_string())
+    });
+}

@@ -8,12 +8,11 @@
 //! eigensystem must match an unmigrated single-shard reference to
 //! ≤ 1e-10 — migration ships state, it never recomputes it.
 
-use inkpca::coordinator::{
-    EngineConfig, KernelConfig, PoolConfig, RoutedEngine, ShardPool, StreamConfig,
-};
-use inkpca::data::synthetic::yeast_like;
+mod common;
+
+use common::oracle;
+use inkpca::coordinator::{EngineConfig, KernelConfig, PoolConfig, ShardPool, StreamConfig};
 use inkpca::data::Dataset;
-use inkpca::kernels::Rbf;
 use inkpca::kpca::IncrementalKpca;
 
 const SEED_POINTS: usize = 6;
@@ -35,53 +34,25 @@ fn pool_cfg(shards: usize) -> PoolConfig {
 /// Reference: the same stream driven directly, single-threaded, through
 /// the identical engine type the shard workers use.
 fn reference_run(ds: &Dataset) -> IncrementalKpca<'static> {
-    let kernel: std::sync::Arc<dyn inkpca::kernels::Kernel> =
-        std::sync::Arc::new(Rbf { sigma: SIGMA });
-    let seed = ds.x.submatrix(SEED_POINTS, ds.dim());
-    let engine = RoutedEngine::native_only();
-    let mut inc = IncrementalKpca::from_batch_shared(kernel, &seed, true).unwrap();
-    for i in SEED_POINTS..ds.n() {
-        inc.push_with(ds.x.row(i), &engine).unwrap();
-    }
-    inc
+    oracle::reference_run(ds, ds.n(), SIGMA, SEED_POINTS)
 }
 
+/// The migration bar: exact eigensystem match AND tiny drift against
+/// the batch-recomputed ground truth — migration ships state, it never
+/// recomputes it.
 fn assert_matches_reference(
     router: &inkpca::coordinator::StreamRouter,
     h: &inkpca::coordinator::StreamHandle,
     ds: &Dataset,
     reference: &IncrementalKpca<'static>,
 ) {
-    let snap = router.snapshot(h).unwrap();
-    assert_eq!(snap.m, ds.n(), "{}", h.id());
-    let top_ref: Vec<f64> = reference.vals.iter().rev().take(10).copied().collect();
-    for (got, want) in snap.top_values.iter().zip(&top_ref) {
-        assert!(
-            (got - want).abs() <= 1e-10,
-            "{}: eigenvalue {got} vs reference {want}",
-            h.id()
-        );
-    }
-    // Projections exercise eigenvectors + centering sums; magnitudes,
-    // since eigenvector sign is arbitrary.
-    let probe = vec![0.25; ds.dim()];
-    let got = router.project(h, probe.clone(), 4).unwrap();
-    let want = reference.project(&probe, 4);
-    for (g, w) in got.iter().zip(&want) {
-        assert!(
-            (g.abs() - w.abs()).abs() <= 1e-10,
-            "{}: projection {g} vs reference {w}",
-            h.id()
-        );
-    }
-    let drift = router.measure_drift(h).unwrap();
-    assert!(drift.norms.frobenius < 1e-7, "{}: drift {:?}", h.id(), drift.norms);
+    oracle::assert_matches_reference(router, h, ds, reference);
+    oracle::assert_drift_tiny(router, h);
 }
 
 #[test]
 fn migrated_stream_matches_unmigrated_reference() {
-    let mut ds = yeast_like(32, 901);
-    ds.standardize();
+    let ds = oracle::std_stream(32, 901);
     let pool = ShardPool::spawn(pool_cfg(2));
     let router = pool.router();
     let h = router.open_stream("mig", ds.dim(), stream_cfg()).unwrap();
@@ -116,8 +87,7 @@ fn migrated_stream_matches_unmigrated_reference() {
 
 #[test]
 fn migration_mid_seeding_carries_the_seed_buffer() {
-    let mut ds = yeast_like(20, 902);
-    ds.standardize();
+    let ds = oracle::std_stream(20, 902);
     let pool = ShardPool::spawn(pool_cfg(2));
     let router = pool.router();
     let h = router.open_stream("migseed", ds.dim(), stream_cfg()).unwrap();
@@ -136,8 +106,7 @@ fn migration_mid_seeding_carries_the_seed_buffer() {
 
 #[test]
 fn queued_async_ingest_survives_migration() {
-    let mut ds = yeast_like(28, 903);
-    ds.standardize();
+    let ds = oracle::std_stream(28, 903);
     let pool = ShardPool::spawn(pool_cfg(2));
     let router = pool.router();
     let h = router.open_stream("amove", ds.dim(), stream_cfg()).unwrap();
@@ -172,8 +141,7 @@ fn queued_async_ingest_survives_migration() {
 
 #[test]
 fn generation_safety_outlives_migration_and_close() {
-    let mut ds = yeast_like(16, 904);
-    ds.standardize();
+    let ds = oracle::std_stream(16, 904);
     let pool = ShardPool::spawn(pool_cfg(2));
     let router = pool.router();
     let h = router.open_stream("gsafe", ds.dim(), stream_cfg()).unwrap();
@@ -202,8 +170,7 @@ fn generation_safety_outlives_migration_and_close() {
 
 #[test]
 fn stream_ids_stay_unique_across_migration() {
-    let mut ds = yeast_like(16, 907);
-    ds.standardize();
+    let ds = oracle::std_stream(16, 907);
     let pool = ShardPool::spawn(pool_cfg(2));
     let router = pool.router();
     let h = router.open_stream("uniq", ds.dim(), stream_cfg()).unwrap();
@@ -228,8 +195,7 @@ fn stream_ids_stay_unique_across_migration() {
 
 #[test]
 fn pool_counters_monotonic_across_moves() {
-    let mut ds = yeast_like(24, 905);
-    ds.standardize();
+    let ds = oracle::std_stream(24, 905);
     let pool = ShardPool::spawn(pool_cfg(2));
     let router = pool.router();
     let handles: Vec<_> = ["m0", "m1", "m2"]
@@ -282,8 +248,7 @@ fn pool_counters_monotonic_across_moves() {
 
 #[test]
 fn grow_and_shrink_rebalance_to_ring_placement() {
-    let mut ds = yeast_like(20, 906);
-    ds.standardize();
+    let ds = oracle::std_stream(20, 906);
     let pool = ShardPool::spawn(pool_cfg(2));
     let router = pool.router();
     let handles: Vec<_> = (0..6)

@@ -11,27 +11,23 @@
 //! single-threaded reference to ≤ 1e-10 — recovery replays history, it
 //! never approximates it.
 
+mod common;
+
 use std::path::PathBuf;
 
+use common::oracle;
 use inkpca::coordinator::{
-    EngineConfig, KernelConfig, PersistConfig, PoolConfig, RoutedEngine, ShardPool,
-    StreamConfig, StreamHandle, StreamRouter,
+    EngineConfig, KernelConfig, PersistConfig, PoolConfig, ShardPool, StreamConfig,
+    StreamHandle, StreamRouter,
 };
-use inkpca::data::synthetic::yeast_like;
 use inkpca::data::Dataset;
-use inkpca::kernels::Rbf;
 use inkpca::kpca::IncrementalKpca;
 
 const SEED_POINTS: usize = 6;
 const SIGMA: f64 = 1.5;
 
 fn temp_dir(tag: &str) -> PathBuf {
-    static SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
-    let n = SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-    let dir =
-        std::env::temp_dir().join(format!("inkpca_torture_{tag}_{}_{n}", std::process::id()));
-    std::fs::create_dir_all(&dir).unwrap();
-    dir
+    oracle::temp_dir(tag)
 }
 
 fn stream_cfg() -> StreamConfig {
@@ -58,15 +54,7 @@ fn durable_pool(dir: &PathBuf) -> (ShardPool, StreamRouter) {
 /// Uninterrupted reference: the same feed driven directly through the
 /// engine type the shard workers use.
 fn reference_run(ds: &Dataset, n: usize) -> IncrementalKpca<'static> {
-    let kernel: std::sync::Arc<dyn inkpca::kernels::Kernel> =
-        std::sync::Arc::new(Rbf { sigma: SIGMA });
-    let seed = ds.x.submatrix(SEED_POINTS, ds.dim());
-    let engine = RoutedEngine::native_only();
-    let mut inc = IncrementalKpca::from_batch_shared(kernel, &seed, true).unwrap();
-    for i in SEED_POINTS..n {
-        inc.push_with(ds.x.row(i), &engine).unwrap();
-    }
-    inc
+    oracle::reference_run(ds, n, SIGMA, SEED_POINTS)
 }
 
 fn assert_matches_reference(
@@ -75,29 +63,7 @@ fn assert_matches_reference(
     ds: &Dataset,
     reference: &IncrementalKpca<'static>,
 ) {
-    let snap = router.snapshot(h).unwrap();
-    assert_eq!(snap.m, reference.len(), "{}", h.id());
-    let top_ref: Vec<f64> = reference.vals.iter().rev().take(10).copied().collect();
-    for (got, want) in snap.top_values.iter().zip(&top_ref) {
-        assert!(
-            (got - want).abs() <= 1e-10,
-            "{}: eigenvalue {got} vs reference {want}",
-            h.id()
-        );
-    }
-    // Projections exercise eigenvectors, retained data and centering
-    // sums together; compare magnitudes (eigenvector sign is
-    // arbitrary).
-    let probe = vec![0.25; ds.dim()];
-    let got = router.project(h, probe.clone(), 4).unwrap();
-    let want = reference.project(&probe, 4);
-    for (g, w) in got.iter().zip(&want) {
-        assert!(
-            (g.abs() - w.abs()).abs() <= 1e-10,
-            "{}: projection {g} vs reference {w}",
-            h.id()
-        );
-    }
+    oracle::assert_matches_reference(router, h, ds, reference);
 }
 
 fn feed(router: &StreamRouter, h: &StreamHandle, ds: &Dataset, range: std::ops::Range<usize>) {
@@ -115,8 +81,7 @@ fn feed(router: &StreamRouter, h: &StreamHandle, ds: &Dataset, range: std::ops::
 /// under sequence-number dedup.
 #[test]
 fn crash_without_checkpoint_recovers_from_wal_alone() {
-    let mut ds = yeast_like(24, 1101);
-    ds.standardize();
+    let ds = oracle::std_stream(24, 1101);
     let reference = reference_run(&ds, ds.n());
     for cut in [2, SEED_POINTS + 1, 16] {
         let dir = temp_dir("walonly");
@@ -156,8 +121,7 @@ fn crash_without_checkpoint_recovers_from_wal_alone() {
 /// checkpoint and replay exactly the post-checkpoint WAL suffix.
 #[test]
 fn crash_after_checkpoint_replays_only_the_suffix() {
-    let mut ds = yeast_like(28, 1102);
-    ds.standardize();
+    let ds = oracle::std_stream(28, 1102);
     let dir = temp_dir("suffix");
     let (pool, router) = durable_pool(&dir);
     let h = router.open_stream("s", ds.dim(), stream_cfg()).unwrap();
@@ -197,8 +161,7 @@ fn crash_after_checkpoint_replays_only_the_suffix() {
 /// the last record and nothing else.
 #[test]
 fn torn_wal_tail_is_truncated_not_fatal() {
-    let mut ds = yeast_like(20, 1103);
-    ds.standardize();
+    let ds = oracle::std_stream(20, 1103);
     let dir = temp_dir("torn");
     let (pool, router) = durable_pool(&dir);
     let h = router.open_stream("torn", ds.dim(), stream_cfg()).unwrap();
@@ -263,8 +226,7 @@ fn torn_wal_tail_is_truncated_not_fatal() {
 /// with zero aborted restores.
 #[test]
 fn corrupt_checkpoint_quarantined_wal_rescues() {
-    let mut ds = yeast_like(22, 1104);
-    ds.standardize();
+    let ds = oracle::std_stream(22, 1104);
     let dir = temp_dir("quarantine");
     let (pool, router) = durable_pool(&dir);
     let h = router.open_stream("q", ds.dim(), stream_cfg()).unwrap();
@@ -307,8 +269,7 @@ fn corrupt_checkpoint_quarantined_wal_rescues() {
 /// resurrect, and its id is free for a fresh open after restore.
 #[test]
 fn closed_streams_stay_closed_after_restore() {
-    let mut ds = yeast_like(18, 1105);
-    ds.standardize();
+    let ds = oracle::std_stream(18, 1105);
     let dir = temp_dir("closed");
     let (pool, router) = durable_pool(&dir);
     let keep = router.open_stream("keep", ds.dim(), stream_cfg()).unwrap();
@@ -343,8 +304,7 @@ fn closed_streams_stay_closed_after_restore() {
 /// up, and the WAL never errors on the happy path.
 #[test]
 fn durability_counters_roll_up() {
-    let mut ds = yeast_like(20, 1106);
-    ds.standardize();
+    let ds = oracle::std_stream(20, 1106);
     let dir = temp_dir("counters");
     let (pool, router) = durable_pool(&dir);
     let h = router.open_stream("c", ds.dim(), stream_cfg()).unwrap();
@@ -385,8 +345,7 @@ fn restore_from_empty_dir_is_fresh_start() {
     assert_eq!(report.replayed, 0);
     assert!(report.handles.is_empty());
     // And the pool is fully usable afterwards.
-    let mut ds = yeast_like(10, 1107);
-    ds.standardize();
+    let ds = oracle::std_stream(10, 1107);
     let h = router.open_stream("f", ds.dim(), stream_cfg()).unwrap();
     feed(&router, &h, &ds, 0..ds.n());
     assert_eq!(router.snapshot(&h).unwrap().m, ds.n());
@@ -412,8 +371,7 @@ fn restore_from_empty_dir_is_fresh_start() {
 #[test]
 fn coordinator_restore_roundtrip() {
     use inkpca::coordinator::{Config, Coordinator};
-    let mut ds = yeast_like(16, 1108);
-    ds.standardize();
+    let ds = oracle::std_stream(16, 1108);
     let dir = temp_dir("coord");
     let cfg = Config {
         kernel: KernelConfig::Rbf { sigma: SIGMA },

@@ -4,12 +4,12 @@
 //! steady-state allocation gauge, and clean close/shutdown semantics —
 //! all through the resolved [`StreamHandle`] front-end.
 
-use inkpca::coordinator::{
-    EngineConfig, KernelConfig, PoolConfig, RoutedEngine, ShardPool, StreamConfig,
-};
+mod common;
+
+use common::oracle;
+use inkpca::coordinator::{EngineConfig, KernelConfig, PoolConfig, ShardPool, StreamConfig};
 use inkpca::data::synthetic::yeast_like;
 use inkpca::data::Dataset;
-use inkpca::kernels::Rbf;
 use inkpca::kpca::IncrementalKpca;
 
 fn stream_cfg(sigma: f64, seed_points: usize) -> StreamConfig {
@@ -28,15 +28,7 @@ fn pool_cfg(shards: usize) -> PoolConfig {
 /// Reference: the same stream driven directly, single-threaded, through
 /// the identical engine type the shard workers use.
 fn reference_run(ds: &Dataset, sigma: f64, seed_points: usize) -> IncrementalKpca<'static> {
-    let kernel: std::sync::Arc<dyn inkpca::kernels::Kernel> =
-        std::sync::Arc::new(Rbf { sigma });
-    let seed = ds.x.submatrix(seed_points, ds.dim());
-    let engine = RoutedEngine::native_only();
-    let mut inc = IncrementalKpca::from_batch_shared(kernel, &seed, true).unwrap();
-    for i in seed_points..ds.n() {
-        inc.push_with(ds.x.row(i), &engine).unwrap();
-    }
-    inc
+    oracle::reference_run(ds, ds.n(), sigma, seed_points)
 }
 
 #[test]
@@ -46,8 +38,7 @@ fn concurrent_streams_across_shards_stay_isolated() {
     const SEED_POINTS: usize = 6;
     let datasets: Vec<Dataset> = (0..STREAMS)
         .map(|s| {
-            let mut ds = yeast_like(N, 700 + s as u64);
-            ds.standardize();
+            let ds = oracle::std_stream(N, 700 + s as u64);
             ds
         })
         .collect();
@@ -116,10 +107,8 @@ fn concurrent_streams_across_shards_stay_isolated() {
 
 #[test]
 fn per_stream_metrics_attribution_and_allocation_gauge() {
-    let mut big = yeast_like(40, 801);
-    big.standardize();
-    let mut small = yeast_like(18, 802);
-    small.standardize();
+    let big = oracle::std_stream(40, 801);
+    let small = oracle::std_stream(18, 802);
 
     let pool = ShardPool::spawn(pool_cfg(2));
     let router = pool.router();
@@ -228,8 +217,7 @@ fn concurrent_producers_on_one_stream_keep_m_consistent() {
     // Multiple producers feeding the SAME stream (each holding a clone
     // of its handle) serialize through its pinned shard: every reply
     // carries a consistent, growing m.
-    let mut ds = yeast_like(48, 805);
-    ds.standardize();
+    let ds = oracle::std_stream(48, 805);
     let pool = ShardPool::spawn(pool_cfg(2));
     let router = pool.router();
     let h = router.open_stream("shared", ds.dim(), stream_cfg(2.0, 4)).unwrap();
@@ -256,8 +244,7 @@ fn concurrent_producers_on_one_stream_keep_m_consistent() {
 fn mixed_batch_and_async_producers_stay_isolated() {
     // One stream fed by ingest_many batches, one by fire-and-forget,
     // concurrently on the same pool: both end at the reference state.
-    let mut ds = yeast_like(32, 806);
-    ds.standardize();
+    let ds = oracle::std_stream(32, 806);
     let pool = ShardPool::spawn(pool_cfg(2));
     let router = pool.router();
     let hb = router.open_stream("batched", ds.dim(), stream_cfg(1.5, 6)).unwrap();

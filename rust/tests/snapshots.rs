@@ -6,8 +6,11 @@
 //! with monotonically non-decreasing epochs — while the stream migrates
 //! and the pool reshards underneath the readers.
 
+mod common;
+
 use std::sync::atomic::{AtomicBool, Ordering};
 
+use common::oracle;
 use inkpca::coordinator::{
     EngineConfig, KernelConfig, PoolConfig, ProjectScratch, ShardPool, StreamConfig,
 };
@@ -32,8 +35,7 @@ fn snapshot_projection_matches_worker_after_sync() {
     // `sync` returns sees exactly the worker's state: same basis, same
     // centering sums, same signs — compare directly, no |abs| slack.
     for mean_adjust in [false, true] {
-        let mut ds = yeast_like(30, 901);
-        ds.standardize();
+        let ds = oracle::std_stream(30, 901);
         let pool = ShardPool::spawn(pool_cfg(2));
         let router = pool.router();
         let cfg = StreamConfig { mean_adjust, ..stream_cfg(1.5, 6) };
@@ -73,8 +75,7 @@ fn snapshot_reads_never_touch_the_worker() {
     // The ISSUE acceptance signature: snapshot-path projections must
     // not enqueue a shard command — `worker_reads` stays flat while
     // `snapshot_reads` grows.
-    let mut ds = yeast_like(24, 902);
-    ds.standardize();
+    let ds = oracle::std_stream(24, 902);
     let pool = ShardPool::spawn(pool_cfg(2));
     let router = pool.router();
     let h = router.open_stream("reads", ds.dim(), stream_cfg(1.5, 6)).unwrap();
@@ -121,8 +122,7 @@ fn snapshot_reads_never_touch_the_worker() {
 
 #[test]
 fn steady_state_snapshot_reads_are_zero_realloc() {
-    let mut ds = yeast_like(28, 903);
-    ds.standardize();
+    let ds = oracle::std_stream(28, 903);
     let pool = ShardPool::spawn(pool_cfg(1));
     let router = pool.router();
     let h = router.open_stream("warm", ds.dim(), stream_cfg(1.2, 6)).unwrap();
@@ -189,8 +189,7 @@ fn concurrent_readers_survive_migration_and_reshard() {
     // in. Invariants: once the first snapshot is published, every read
     // succeeds, and the epoch observed by each reader never decreases
     // (the cell travels with the entry across migrations).
-    let mut ds = yeast_like(60, 905);
-    ds.standardize();
+    let ds = oracle::std_stream(60, 905);
     let dim = ds.dim();
     let pool = ShardPool::spawn(pool_cfg(2));
     let router = pool.router();

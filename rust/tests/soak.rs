@@ -1,0 +1,98 @@
+//! Long-stream soak: a bounded stream at fixed m must be genuinely
+//! bounded — 10⁵ points through a capped landmark set with ZERO
+//! hot-path reallocations and flat resident bytes once warm, while the
+//! eigensystem keeps tracking its batch ground truth. `#[ignore]`d: run
+//! in release via `cargo test --release --test soak -- --ignored`
+//! (CI's soak job does).
+
+mod common;
+
+use common::oracle;
+use inkpca::kernels::Rbf;
+use inkpca::kpca::{EvictionPolicy, IncrementalKpca};
+
+#[test]
+#[ignore = "long-stream soak: ~10⁵ points, run in release with --ignored"]
+fn bounded_stream_soak_zero_realloc_flat_memory() {
+    const N: usize = 100_000;
+    const CAP: usize = 64;
+    const PROTECTED: usize = 8;
+    const BATCH: usize = 32;
+    const WARM: usize = 2_048; // past the cap, policy + scratch all hot
+
+    let ds = oracle::std_stream(N, 7001);
+    let dim = ds.dim();
+    let flat = ds.x.as_slice();
+    let kern = Rbf { sigma: 2.0 };
+    let seed = ds.x.submatrix(PROTECTED, dim);
+    let mut inc = IncrementalKpca::from_batch(&kern, &seed, true).unwrap();
+    // The production default for a capped stream: leverage-score
+    // victims. m transiently reaches CAP+1 before each eviction lands,
+    // so the fixed-size reservation is one row wider than the cap.
+    inc.set_bound(CAP, EvictionPolicy::LeverageScore, PROTECTED);
+    inc.reserve(CAP + 1, BATCH);
+
+    // Warm-up: fill to the cap and push well past it so every buffer —
+    // workspace, basis, batch scratch, leverage scratch — has seen its
+    // steady-state shape.
+    let mut i = PROTECTED;
+    while i < WARM {
+        let end = (i + BATCH).min(WARM);
+        inc.push_batch(&flat[i * dim..end * dim]).unwrap();
+        i = end;
+    }
+    assert_eq!(inc.len(), CAP, "warm-up must fill the cap");
+    assert!(inc.evictions() > 0, "warm-up must already be evicting");
+
+    let ws_reallocs0 = inc.hot_path_reallocs();
+    let batch_reallocs0 = inc.batch_reallocs();
+    let bytes0 = inc.hot_path_bytes();
+    let evictions0 = inc.evictions();
+
+    // The soak: ~98k more points at fixed m. Every accepted point
+    // evicts exactly one landmark; nothing may grow.
+    let mut accepted = 0usize;
+    while i < N {
+        let end = (i + BATCH).min(N);
+        let out = inc.push_batch(&flat[i * dim..end * dim]).unwrap();
+        accepted += out.accepted;
+        assert!(inc.len() <= CAP, "cap breached at point {i}");
+        i = end;
+    }
+
+    assert_eq!(inc.len(), CAP);
+    assert_eq!(
+        inc.hot_path_reallocs(),
+        ws_reallocs0,
+        "workspace/basis reallocated during the soak"
+    );
+    assert_eq!(
+        inc.batch_reallocs(),
+        batch_reallocs0,
+        "batch scratch reallocated during the soak"
+    );
+    assert_eq!(
+        inc.hot_path_bytes(),
+        bytes0,
+        "resident hot-path bytes must stay flat at fixed m"
+    );
+    assert_eq!(
+        inc.evictions(),
+        evictions0 + accepted,
+        "one eviction per over-cap accept"
+    );
+
+    // Protected seed prefix survived 10⁵ points of churn.
+    for p in 0..PROTECTED {
+        assert_eq!(inc.row(p), ds.x.row(p), "protected row {p} evicted");
+    }
+
+    // The eigensystem still tracks a from-scratch batch recompute over
+    // the surviving landmarks. The bar is a loose backstop — ~10⁵
+    // down-dates accumulate rounding — but it rules out systematic
+    // divergence (tracked values are O(1) for RBF).
+    let gap = oracle::kpca_oracle_gap(&kern, &inc);
+    assert!(gap < 1e-3, "soak drifted from batch ground truth: {gap}");
+    let s = inc.sufficiency_gap();
+    assert!((0.0..=1.0).contains(&s), "sufficiency gauge {s}");
+}
