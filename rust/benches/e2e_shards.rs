@@ -63,12 +63,23 @@
 //! pinned at the cap, a positive eviction count, and resident bytes a
 //! fraction of the unbounded run's.
 //!
+//! Series 8 (`shards/tier_{exact,rff,shadow}/mM`): the engine-tier
+//! ladder — one stream of M points driven through the paper-exact
+//! eigensystem, the fixed-memory RFF + frequent-directions sketch, and
+//! the shadow pairing of both, at two stream lengths. The exact
+//! engine's per-point cost grows with the retained landmark count m;
+//! the sketch's is O(D·r) regardless — the run asserts the sketched
+//! per-point median stays flat across the size ladder, which is the
+//! tier's acceptance signature. The shadow rows price running both
+//! engines side by side, and the run asserts their divergence gauge
+//! actually populated.
+//!
 //! Emits `BENCH_e2e_shards.json` for the perf trajectory and the CI
 //! regression gate.
 
 use inkpca::coordinator::{
     EngineConfig, KernelConfig, PoolConfig, PoolSnapshot, ProjectScratch, ShardPool, StreamConfig,
-    StreamRouter,
+    StreamRouter, StreamTier,
 };
 use inkpca::data::{load, Dataset};
 use inkpca::kpca::{BatchRotation, EvictionPolicy};
@@ -313,6 +324,24 @@ fn run_bounded(ds: &Dataset, max_landmarks: usize, eviction: EvictionPolicy) -> 
     snap
 }
 
+/// Series-8 workload: one stream, one long batched feed, served by the
+/// given engine tier. Returns the pool snapshot for the tier-signature
+/// asserts.
+fn run_tier(ds: &Dataset, tier: StreamTier) -> PoolSnapshot {
+    let (pool, router) = spawn_pool(1);
+    let cfg = StreamConfig {
+        tier,
+        expected_m: ds.n(),
+        expected_batch: 8,
+        ..batch_cfg()
+    };
+    let h = router.open_stream("tiered", ds.dim(), cfg).unwrap();
+    router.ingest_all(&h, ds.x.as_slice(), ds.dim(), 8).unwrap();
+    let snap = router.pool_snapshot().unwrap();
+    pool.shutdown();
+    snap
+}
+
 fn main() {
     let mut b = Bench::new();
     let fast = std::env::var("INKPCA_BENCH_FAST").is_ok();
@@ -518,6 +547,49 @@ fn main() {
             unbounded.total_ws_bytes
         );
     }
+
+    // Series 8: the engine-tier ladder at two stream lengths. The
+    // exact rows grow superlinearly with the feed (every point enlarges
+    // the eigensystem it updates); the rff rows are the flat-memory
+    // sketch whose per-point cost must NOT grow with m; shadow runs
+    // both engines on every point.
+    let tier_sizes: [usize; 2] = if fast { [128, 512] } else { [512, 2048] };
+    let rff_tier = StreamTier::Rff { features: 256, sketch_r: 16 };
+    let mut rff_per_point: Vec<f64> = Vec::new();
+    for &n in &tier_sizes {
+        let mut tier_ds = load("yeast", n, 800).unwrap();
+        tier_ds.standardize();
+        for (label, tier) in [
+            ("exact", StreamTier::Exact),
+            ("rff", rff_tier),
+            ("shadow", StreamTier::Shadow { sample: 8 }),
+        ] {
+            let stats = b.case(&format!("shards/tier_{label}/m{n}"), || {
+                run_tier(&tier_ds, tier).accepted
+            });
+            if label == "rff" {
+                rff_per_point.push(stats.median_ns / n as f64);
+            }
+        }
+        // Tier signatures (outside the timed region): the sketch
+        // accepts every post-seed point (no rank-deficiency
+        // exclusion), and the shadow run's probes populated the
+        // pool-wide divergence gauge.
+        let snap = run_tier(&tier_ds, rff_tier);
+        assert_eq!(snap.accepted, (n - 4) as u64, "rff run at m={n} dropped points");
+        let snap = run_tier(&tier_ds, StreamTier::Shadow { sample: 8 });
+        assert!(snap.max_divergence.is_some(), "shadow run at m={n} never probed");
+    }
+    println!(
+        "tier ladder: rff per-point median {:.0} ns at m={} vs {:.0} ns at m={}",
+        rff_per_point[0], tier_sizes[0], rff_per_point[1], tier_sizes[1]
+    );
+    // Generous 3x headroom: the cost model is exactly flat, the bound
+    // only absorbs scheduler/allocator noise on small medians.
+    assert!(
+        rff_per_point[1] <= rff_per_point[0] * 3.0,
+        "rff per-point cost must stay flat in m: {rff_per_point:?} across {tier_sizes:?}"
+    );
 
     b.finish();
     if let Err(e) = b.write_json("BENCH_e2e_shards.json") {

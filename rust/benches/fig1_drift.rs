@@ -1,11 +1,14 @@
 //! Fig. 1 bench — the drift-experiment inner loops: per-step
-//! incremental update at growing sizes on both datasets, and the cost
-//! of one drift measurement (reconstruct + batch reference + norms).
+//! incremental update at growing sizes on both datasets, the cost of
+//! one drift measurement (reconstruct + batch reference + norms), and
+//! the sketched tier's per-step cost at the same sizes — the exact
+//! step grows with m, the RFF + frequent-directions step does not.
 
 use inkpca::data::load;
 use inkpca::kernels::{median_heuristic, Rbf};
 use inkpca::kpca::IncrementalKpca;
 use inkpca::linalg::sym_norms;
+use inkpca::rff::RffKpca;
 use inkpca::util::bench::Bench;
 
 fn main() {
@@ -22,6 +25,18 @@ fn main() {
             b.case(&format!("fig1/step/{name}/m{m}"), || {
                 let mut inc = base.clone();
                 inc.push(&next).unwrap()
+            });
+            // The sketched counterpart of the same step: absorb one
+            // point into a sketch warmed with the same m-point prefix.
+            // The sketch's memory is fixed, so pushing in place (no
+            // per-sample clone) measures exactly the steady-state cost
+            // — flat across this m ladder by construction.
+            let mut rff = RffKpca::new(ds.dim(), 256, 16, sigma, 42, true).unwrap();
+            for i in 0..m {
+                rff.push(ds.x.row(i)).unwrap();
+            }
+            b.case(&format!("fig1/step_rff/{name}/m{m}"), || {
+                rff.push(&next).unwrap()
             });
             b.case(&format!("fig1/drift_measure/{name}/m{m}"), || {
                 let diff = base.reconstruct().sub(&base.batch_reference());

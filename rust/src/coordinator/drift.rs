@@ -19,6 +19,21 @@ pub struct DriftPoint {
     pub orthogonality: f64,
 }
 
+/// One Fig.-1-style measurement of an exact eigensystem: reconstruct
+/// `UΛUᵀ`, recompute the batch reference kernel, difference norms +
+/// the §5.1 orthogonality defect. Free function so the engine seam
+/// ([`super::engine::StreamState::measure_drift`]) can measure without
+/// holding a monitor — the monitor's cadence bookkeeping stays with
+/// the stream entry.
+pub fn measure_point(state: &IncrementalKpca<'_>) -> DriftPoint {
+    let diff = state.reconstruct().sub(&state.batch_reference());
+    DriftPoint {
+        m: state.len(),
+        norms: sym_norms(&diff),
+        orthogonality: crate::linalg::orthogonality_defect(&state.vecs),
+    }
+}
+
 /// Periodic drift monitor.
 #[derive(Debug)]
 pub struct DriftMonitor {
@@ -66,14 +81,33 @@ impl DriftMonitor {
         Some(self.measure(state))
     }
 
+    /// Notify of `n` accepted examples without measuring; returns
+    /// whether a measurement is due (and resets the cadence phase when
+    /// it is). The engine-seam path: the caller measures through
+    /// [`super::engine::StreamState::measure_drift`] — which may fail
+    /// on tiers with nothing to reconstruct — and feeds the point back
+    /// via [`DriftMonitor::record`].
+    pub fn note(&mut self, n: usize) -> bool {
+        if self.every == 0 || n == 0 {
+            return false;
+        }
+        self.accepted_since += n;
+        if self.accepted_since < self.every {
+            return false;
+        }
+        self.accepted_since = 0;
+        true
+    }
+
+    /// Append a measurement produced outside the monitor (the
+    /// engine-seam and eviction-audit paths).
+    pub fn record(&mut self, point: DriftPoint) {
+        self.history.push(point);
+    }
+
     /// Unconditional measurement.
     pub fn measure(&mut self, state: &IncrementalKpca<'_>) -> DriftPoint {
-        let diff = state.reconstruct().sub(&state.batch_reference());
-        let point = DriftPoint {
-            m: state.len(),
-            norms: sym_norms(&diff),
-            orthogonality: crate::linalg::orthogonality_defect(&state.vecs),
-        };
+        let point = measure_point(state);
         self.history.push(point);
         point
     }

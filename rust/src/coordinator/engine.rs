@@ -1,0 +1,819 @@
+//! The stream-engine seam: every per-stream verb the shard worker
+//! calls, behind one object-safe trait.
+//!
+//! [`super::shard::StreamEntry`] owns a `Box<dyn StreamState + Send>`
+//! instead of a concrete [`IncrementalKpca`]; which implementation
+//! goes in the box is chosen by [`StreamTier`] on the stream's
+//! [`super::shard::StreamConfig`]:
+//!
+//! | tier     | engine                          | memory | per-point |
+//! |----------|---------------------------------|--------|-----------|
+//! | `Exact`  | [`ExactState`] — paper eq. 2 rank-one eigenupdates | O(m²) | O(m·r) |
+//! | `Rff`    | [`RffState`] — RFF + frequent-directions sketch ([`crate::rff`]) | O(D·r) | O(D·r) |
+//! | `Shadow` | [`ShadowState`] — both engines on the same points | sum | sum |
+//!
+//! All tiers speak the same verbs — seed-from-batch, `push_batch_with`,
+//! project, [`StreamState::capture`] into a [`ProjectionSnapshot`]
+//! (so the lock-free `project_snapshot`/`project_many` read path works
+//! unchanged), checkpoint [`StreamState::to_parts`] /
+//! [`state_from_parts`], stats/gauges, reserve — while exact-only
+//! verbs degrade gracefully: the sketch has no landmark set to bound
+//! ([`StreamState::set_bound`] defaults to a no-op) and no Gram matrix
+//! to drift-audit ([`StreamState::measure_drift`] errors cleanly).
+//!
+//! **Divergence contract.** The `Shadow` tier is the accuracy dial:
+//! every `sample`-th absorbed point is projected through *both*
+//! engines and the per-component gap — `min(|a−b|, |a+b|)`, sign-blind
+//! because eigenvectors are — is folded into a max-since-publish
+//! gauge. [`StreamState::divergence`] exposes it, the worker rolls it
+//! through `Metrics` → `StreamGauges` → `PoolSnapshot`, and every
+//! snapshot publish resets the window
+//! ([`StreamState::reset_divergence`]). `Exact` and `Rff` report
+//! `None` — the gauge is only meaningful when two engines disagree.
+
+use std::sync::Arc;
+
+use super::drift::{measure_point, DriftPoint};
+use super::ring::fnv1a;
+use super::shard::StreamConfig;
+use super::snapshot::{ExactSnapshotParts, ProjectionSnapshot};
+use crate::kernels::{kernel_from_describe, Kernel};
+use crate::kpca::{BatchOutcome, EvictionPolicy, IncrementalKpca, KpcaParts, KpcaStats};
+use crate::linalg::Mat;
+use crate::rankone::Rotate;
+use crate::rff::{RffKpca, RffParts};
+
+/// Default feature count for `rff`/`shadow` when the config doesn't
+/// pick one.
+pub const DEFAULT_RFF_FEATURES: usize = 256;
+/// Default sketch rank.
+pub const DEFAULT_SKETCH_R: usize = 16;
+/// Default shadow probe cadence (every N-th absorbed point).
+pub const DEFAULT_SHADOW_SAMPLE: usize = 8;
+/// Components compared per shadow probe.
+const SHADOW_PROBE_R: usize = 4;
+
+/// Which engine a stream runs. Carried on
+/// [`super::shard::StreamConfig`], persisted in `IKCKPT03`
+/// checkpoints (`IKCKPT02` files predate tiers and restore as
+/// `Exact`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StreamTier {
+    /// The paper's exact incremental eigensystem.
+    Exact,
+    /// Random-Fourier-features + frequent-directions sketch: fixed
+    /// memory, per-update cost independent of m. RBF kernels only.
+    Rff { features: usize, sketch_r: usize },
+    /// Run both engines on the same points; serve from the exact one
+    /// and report the max projection divergence every `sample`-th
+    /// point.
+    Shadow { sample: usize },
+}
+
+impl Default for StreamTier {
+    fn default() -> Self {
+        StreamTier::Exact
+    }
+}
+
+impl StreamTier {
+    pub fn name(&self) -> &'static str {
+        match self {
+            StreamTier::Exact => "exact",
+            StreamTier::Rff { .. } => "rff",
+            StreamTier::Shadow { .. } => "shadow",
+        }
+    }
+
+    /// Parse a CLI spec: `exact` | `rff[:features[:sketch_r]]` |
+    /// `shadow[:sample]`.
+    pub fn parse(s: &str) -> Result<StreamTier, String> {
+        let mut it = s.split(':');
+        let head = it.next().unwrap_or("");
+        let tier = match head {
+            "exact" => {
+                if it.next().is_some() {
+                    return Err(format!("tier spec `{s}`: exact takes no parameters"));
+                }
+                StreamTier::Exact
+            }
+            "rff" => {
+                let features = match it.next() {
+                    None => DEFAULT_RFF_FEATURES,
+                    Some(v) => v
+                        .parse::<usize>()
+                        .map_err(|_| format!("tier spec `{s}`: bad feature count `{v}`"))?,
+                };
+                let sketch_r = match it.next() {
+                    None => DEFAULT_SKETCH_R.min(features / 2).max(1),
+                    Some(v) => v
+                        .parse::<usize>()
+                        .map_err(|_| format!("tier spec `{s}`: bad sketch rank `{v}`"))?,
+                };
+                if it.next().is_some() {
+                    return Err(format!("tier spec `{s}`: too many parameters"));
+                }
+                StreamTier::Rff { features, sketch_r }
+            }
+            "shadow" => {
+                let sample = match it.next() {
+                    None => DEFAULT_SHADOW_SAMPLE,
+                    Some(v) => v
+                        .parse::<usize>()
+                        .map_err(|_| format!("tier spec `{s}`: bad sample cadence `{v}`"))?,
+                };
+                if it.next().is_some() {
+                    return Err(format!("tier spec `{s}`: too many parameters"));
+                }
+                StreamTier::Shadow { sample }
+            }
+            other => {
+                return Err(format!(
+                    "unknown tier `{other}` (want exact, rff[:D[:r]] or shadow[:sample])"
+                ))
+            }
+        };
+        Ok(tier)
+    }
+}
+
+/// Serialized engine state, tier-tagged — what the `IKCKPT03` codec
+/// frames and [`state_from_parts`] revives. The kernel rides as its
+/// `describe()` string (same contract as the v02 codec).
+#[derive(Clone, Debug)]
+pub enum TierParts {
+    Exact {
+        kernel: String,
+        parts: KpcaParts,
+    },
+    Rff(RffParts),
+    Shadow {
+        kernel: String,
+        exact: KpcaParts,
+        rff: RffParts,
+        sample: usize,
+    },
+}
+
+/// Every verb the shard worker calls on a stream's engine. Object-safe
+/// and `Send` (the boxed engine migrates between worker threads
+/// through `Migrate`/`Install`).
+///
+/// Mutability note: gauges (`stats`, `top_values`, `sufficiency_gap`,
+/// `divergence`, byte/realloc counters) take `&self` and may serve a
+/// cached view; the verbs that advance or materialize state (`push_*`,
+/// `project`, `capture`, `measure_drift`) take `&mut self`.
+pub trait StreamState: Send {
+    /// The tier this engine implements (drives checkpoint tagging and
+    /// the `Snapshot` display).
+    fn tier(&self) -> StreamTier;
+    fn tier_name(&self) -> &'static str {
+        self.tier().name()
+    }
+
+    /// Resident size: landmarks for the exact tier, absorbed points
+    /// for the sketch (which holds directions, not rows).
+    fn len(&self) -> usize;
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    fn dim(&self) -> usize;
+    fn kernel_name(&self) -> &'static str;
+    fn stats(&self) -> KpcaStats;
+    /// Top eigenvalue estimates, descending. May serve the last
+    /// materialized spectrum.
+    fn top_values(&self, k: usize) -> Vec<f64>;
+    fn sufficiency_gap(&self) -> f64;
+    fn bytes_resident(&self) -> usize;
+    fn reallocs(&self) -> u64;
+    fn engine_gemms(&self) -> u64;
+
+    /// Absorb one point. `Ok(false)` = excluded (near rank-deficient).
+    fn push_with(&mut self, x: &[f64], engine: &dyn Rotate) -> Result<bool, String>;
+    /// Absorb a flat row-major batch.
+    fn push_batch_with(&mut self, xs: &[f64], engine: &dyn Rotate)
+        -> Result<BatchOutcome, String>;
+    /// Per-point accept/exclude mask of the last `push_batch_with`.
+    fn last_batch_mask(&self) -> &[bool];
+
+    /// Worker-path projection of one query onto the top `r` components.
+    fn project(&mut self, y: &[f64], r: usize) -> Result<Vec<f64>, String>;
+    /// Capture an immutable snapshot for the lock-free read path.
+    /// `None` while the engine has nothing to serve.
+    fn capture(&mut self, r_limit: usize) -> Option<ProjectionSnapshot>;
+    /// Gram-reconstruction drift measurement; errors on tiers without
+    /// a Gram matrix to reconstruct.
+    fn measure_drift(&mut self) -> Result<DriftPoint, String>;
+
+    /// Pre-size internal buffers for an expected landmark count /
+    /// batch size.
+    fn reserve(&mut self, m: usize, b: usize);
+    /// Cap the landmark set (exact tier); the sketch is inherently
+    /// bounded, so the default is a no-op.
+    fn set_bound(&mut self, _max_landmarks: usize, _policy: EvictionPolicy, _protected: usize) {}
+
+    /// Max projection divergence since the last snapshot publish —
+    /// `Some` only on the shadow tier.
+    fn divergence(&self) -> Option<f64> {
+        None
+    }
+    /// Reset the divergence window (called at every snapshot publish).
+    fn reset_divergence(&mut self) {}
+
+    /// Serialize for the checkpoint codec.
+    fn to_parts(&self) -> TierParts;
+}
+
+/// Capture an exact eigensystem into a [`ProjectionSnapshot`]: top-`r`
+/// basis reordered descending, eigenvalues, the projected centering
+/// sums `uᵀK𝟙`/`uᵀ𝟙`, retained data and the shared kernel. `None`
+/// until the kernel is shareable (streams built `from_batch_shared`
+/// always are).
+pub fn capture_exact(
+    state: &IncrementalKpca<'_>,
+    r_limit: usize,
+) -> Option<ProjectionSnapshot> {
+    let kernel = state.kernel_arc()?;
+    let m = state.len();
+    let dim = state.dim();
+    let n = state.vals.len();
+    let r = if r_limit == 0 { n } else { r_limit.min(n) };
+    let view = state.vecs.view();
+    let mut vals = Vec::with_capacity(r);
+    let mut basis = vec![0.0; m * r];
+    for c in 0..r {
+        // Live eigenpairs are ascending; the snapshot stores the top
+        // component first so `r_eff` at query time is a prefix.
+        let idx = n - 1 - c;
+        vals.push(state.vals[idx]);
+        for j in 0..m {
+            basis[j * r + c] = view[(j, idx)];
+        }
+    }
+    let (s, k1) = state.centering_sums();
+    let (mut uk1, mut u1) = (Vec::new(), Vec::new());
+    if state.mean_adjust {
+        uk1 = vec![0.0; r];
+        u1 = vec![0.0; r];
+        for j in 0..m {
+            let row = &basis[j * r..(j + 1) * r];
+            let k1j = k1[j];
+            for c in 0..r {
+                uk1[c] += row[c] * k1j;
+                u1[c] += row[c];
+            }
+        }
+    }
+    Some(ProjectionSnapshot::from_exact(ExactSnapshotParts {
+        m,
+        dim,
+        mean_adjust: state.mean_adjust,
+        r,
+        vals,
+        basis,
+        uk1,
+        u1,
+        s,
+        x: state.data_flat().to_vec(),
+        kernel,
+    }))
+}
+
+/// The exact tier: a thin newtype over the paper's incremental
+/// eigensystem. Every trait verb forwards 1:1, so the exact tier's
+/// behavior is pinned byte-identical to the pre-trait worker by the
+/// existing suites.
+pub struct ExactState {
+    st: IncrementalKpca<'static>,
+}
+
+impl ExactState {
+    pub fn seed(
+        kernel: Arc<dyn Kernel>,
+        seed: &Mat,
+        mean_adjust: bool,
+        batch_rotation: Option<crate::kpca::BatchRotation>,
+    ) -> Result<ExactState, String> {
+        let mut st = IncrementalKpca::from_batch_shared(kernel, seed, mean_adjust)?;
+        st.batch_rotation = batch_rotation;
+        Ok(ExactState { st })
+    }
+
+    pub fn from_parts(
+        kernel: Arc<dyn Kernel>,
+        parts: KpcaParts,
+    ) -> Result<ExactState, String> {
+        Ok(ExactState { st: IncrementalKpca::from_parts(kernel, parts)? })
+    }
+
+    fn parts(&self) -> (String, KpcaParts) {
+        let st = &self.st;
+        let m = st.len();
+        let mut vecs = Vec::with_capacity(m * m);
+        for i in 0..m {
+            vecs.extend_from_slice(st.vecs.row(i));
+        }
+        let (s, k1) = st.centering_sums();
+        (
+            st.kernel_ref().describe(),
+            KpcaParts {
+                mean_adjust: st.mean_adjust,
+                dim: st.dim(),
+                x: st.data_flat().to_vec(),
+                vals: st.vals.clone(),
+                vecs,
+                s,
+                k1: k1.to_vec(),
+                exclude_tol: st.exclude_tol,
+                naive_recenter_split: st.naive_recenter_split,
+                batch_rotation: st.batch_rotation,
+                stats: st.stats,
+                engine_gemms: st.engine_gemms(),
+            },
+        )
+    }
+}
+
+impl StreamState for ExactState {
+    fn tier(&self) -> StreamTier {
+        StreamTier::Exact
+    }
+
+    fn len(&self) -> usize {
+        self.st.len()
+    }
+
+    fn dim(&self) -> usize {
+        self.st.dim()
+    }
+
+    fn kernel_name(&self) -> &'static str {
+        self.st.kernel_ref().name()
+    }
+
+    fn stats(&self) -> KpcaStats {
+        self.st.stats
+    }
+
+    fn top_values(&self, k: usize) -> Vec<f64> {
+        self.st.vals.iter().rev().take(k).copied().collect()
+    }
+
+    fn sufficiency_gap(&self) -> f64 {
+        self.st.sufficiency_gap()
+    }
+
+    fn bytes_resident(&self) -> usize {
+        self.st.hot_path_bytes() + self.st.batch_bytes_resident()
+    }
+
+    fn reallocs(&self) -> u64 {
+        self.st.hot_path_reallocs() + self.st.batch_reallocs()
+    }
+
+    fn engine_gemms(&self) -> u64 {
+        self.st.engine_gemms()
+    }
+
+    fn push_with(&mut self, x: &[f64], engine: &dyn Rotate) -> Result<bool, String> {
+        self.st.push_with(x, engine)
+    }
+
+    fn push_batch_with(
+        &mut self,
+        xs: &[f64],
+        engine: &dyn Rotate,
+    ) -> Result<BatchOutcome, String> {
+        self.st.push_batch_with(xs, engine)
+    }
+
+    fn last_batch_mask(&self) -> &[bool] {
+        self.st.last_batch_mask()
+    }
+
+    fn project(&mut self, y: &[f64], r: usize) -> Result<Vec<f64>, String> {
+        Ok(self.st.project(y, r))
+    }
+
+    fn capture(&mut self, r_limit: usize) -> Option<ProjectionSnapshot> {
+        capture_exact(&self.st, r_limit)
+    }
+
+    fn measure_drift(&mut self) -> Result<DriftPoint, String> {
+        Ok(measure_point(&self.st))
+    }
+
+    fn reserve(&mut self, m: usize, b: usize) {
+        self.st.reserve(m, b);
+    }
+
+    fn set_bound(&mut self, max_landmarks: usize, policy: EvictionPolicy, protected: usize) {
+        self.st.set_bound(max_landmarks, policy, protected);
+    }
+
+    fn to_parts(&self) -> TierParts {
+        let (kernel, parts) = self.parts();
+        TierParts::Exact { kernel, parts }
+    }
+}
+
+/// The sketched tier: fixed memory, O(D·r) per point, RBF kernels
+/// only. Serves projections through the frequent-directions basis; has
+/// no landmark set to bound or Gram matrix to drift-audit.
+pub struct RffState {
+    st: RffKpca,
+    tier: StreamTier,
+}
+
+impl RffState {
+    pub fn new(mut st: RffKpca) -> RffState {
+        // Materialize the spectrum once so `&self` gauges read real
+        // values before the first capture.
+        st.refresh_basis();
+        let tier = StreamTier::Rff { features: st.map().features(), sketch_r: st.sketch_r() };
+        RffState { st, tier }
+    }
+}
+
+impl StreamState for RffState {
+    fn tier(&self) -> StreamTier {
+        self.tier
+    }
+
+    fn len(&self) -> usize {
+        self.st.len()
+    }
+
+    fn dim(&self) -> usize {
+        self.st.dim()
+    }
+
+    fn kernel_name(&self) -> &'static str {
+        "rbf"
+    }
+
+    fn stats(&self) -> KpcaStats {
+        self.st.stats()
+    }
+
+    fn top_values(&self, k: usize) -> Vec<f64> {
+        // Cached spectrum (refreshed at every capture/project) — a
+        // `&self` gauge must not pay the eigensolve.
+        let vals = self.st.cached_values();
+        vals[..k.min(vals.len())].to_vec()
+    }
+
+    fn sufficiency_gap(&self) -> f64 {
+        let mut total = 0.0;
+        let mut min_pos = f64::INFINITY;
+        for &l in self.st.cached_values() {
+            if l > 0.0 {
+                total += l;
+                if l < min_pos {
+                    min_pos = l;
+                }
+            }
+        }
+        if total > 0.0 && min_pos.is_finite() {
+            min_pos / total
+        } else {
+            0.0
+        }
+    }
+
+    fn bytes_resident(&self) -> usize {
+        self.st.bytes_resident()
+    }
+
+    fn reallocs(&self) -> u64 {
+        0
+    }
+
+    fn engine_gemms(&self) -> u64 {
+        0
+    }
+
+    fn push_with(&mut self, x: &[f64], _engine: &dyn Rotate) -> Result<bool, String> {
+        self.st.push(x)
+    }
+
+    fn push_batch_with(
+        &mut self,
+        xs: &[f64],
+        _engine: &dyn Rotate,
+    ) -> Result<BatchOutcome, String> {
+        self.st.push_batch(xs)
+    }
+
+    fn last_batch_mask(&self) -> &[bool] {
+        self.st.last_batch_mask()
+    }
+
+    fn project(&mut self, y: &[f64], r: usize) -> Result<Vec<f64>, String> {
+        Ok(self.st.project(y, r))
+    }
+
+    fn capture(&mut self, r_limit: usize) -> Option<ProjectionSnapshot> {
+        let m = self.st.len();
+        let dim = self.st.dim();
+        let mean_adjust = self.st.mean_adjust();
+        let (map, mu, basis, vals) = self.st.snapshot_parts(r_limit)?;
+        Some(ProjectionSnapshot::from_rff(map, mu, basis, vals, m, dim, mean_adjust))
+    }
+
+    fn measure_drift(&mut self) -> Result<DriftPoint, String> {
+        Err("drift measurement needs the exact tier (the sketch keeps no Gram matrix)".into())
+    }
+
+    fn reserve(&mut self, _m: usize, _b: usize) {
+        // Sketch buffers are fixed-size from construction.
+    }
+
+    fn to_parts(&self) -> TierParts {
+        TierParts::Rff(self.st.to_parts())
+    }
+}
+
+/// The accuracy dial: exact + sketch side by side on the same points.
+/// All serving verbs (project, capture, stats, bound, drift) come from
+/// the exact engine; the sketch runs behind it and every `sample`-th
+/// point is projected through both, folding the sign-blind
+/// per-component gap into a max-since-publish divergence gauge.
+pub struct ShadowState {
+    exact: ExactState,
+    rff: RffKpca,
+    sample: usize,
+    seen: u64,
+    divergence: f64,
+    probed: bool,
+}
+
+impl ShadowState {
+    pub fn new(exact: ExactState, mut rff: RffKpca, sample: usize) -> ShadowState {
+        rff.refresh_basis();
+        ShadowState { exact, rff, sample, seen: 0, divergence: 0.0, probed: false }
+    }
+
+    /// Feed the sketch and probe on cadence. The exact engine must
+    /// already have absorbed the point.
+    fn shadow_point(&mut self, x: &[f64]) -> Result<(), String> {
+        self.rff.push(x)?;
+        self.seen += 1;
+        if self.sample > 0 && self.seen % self.sample as u64 == 0 {
+            self.probe(x)?;
+        }
+        Ok(())
+    }
+
+    fn probe(&mut self, x: &[f64]) -> Result<(), String> {
+        let a = self.exact.project(x, SHADOW_PROBE_R)?;
+        let b = self.rff.project(x, SHADOW_PROBE_R);
+        let mut gap: f64 = 0.0;
+        for c in 0..a.len().min(b.len()) {
+            // Eigenvectors are sign-ambiguous between two independent
+            // eigensolves; compare up to sign per component.
+            gap = gap.max((a[c] - b[c]).abs().min((a[c] + b[c]).abs()));
+        }
+        self.divergence = self.divergence.max(gap);
+        self.probed = true;
+        Ok(())
+    }
+}
+
+impl StreamState for ShadowState {
+    fn tier(&self) -> StreamTier {
+        StreamTier::Shadow { sample: self.sample }
+    }
+
+    fn len(&self) -> usize {
+        self.exact.len()
+    }
+
+    fn dim(&self) -> usize {
+        self.exact.dim()
+    }
+
+    fn kernel_name(&self) -> &'static str {
+        self.exact.kernel_name()
+    }
+
+    fn stats(&self) -> KpcaStats {
+        self.exact.stats()
+    }
+
+    fn top_values(&self, k: usize) -> Vec<f64> {
+        self.exact.top_values(k)
+    }
+
+    fn sufficiency_gap(&self) -> f64 {
+        self.exact.sufficiency_gap()
+    }
+
+    fn bytes_resident(&self) -> usize {
+        self.exact.bytes_resident() + self.rff.bytes_resident()
+    }
+
+    fn reallocs(&self) -> u64 {
+        self.exact.reallocs()
+    }
+
+    fn engine_gemms(&self) -> u64 {
+        self.exact.engine_gemms()
+    }
+
+    fn push_with(&mut self, x: &[f64], engine: &dyn Rotate) -> Result<bool, String> {
+        let accepted = self.exact.push_with(x, engine)?;
+        self.shadow_point(x)?;
+        Ok(accepted)
+    }
+
+    fn push_batch_with(
+        &mut self,
+        xs: &[f64],
+        engine: &dyn Rotate,
+    ) -> Result<BatchOutcome, String> {
+        let outcome = self.exact.push_batch_with(xs, engine)?;
+        let dim = self.exact.dim();
+        for p in 0..xs.len() / dim {
+            self.shadow_point(&xs[p * dim..(p + 1) * dim])?;
+        }
+        Ok(outcome)
+    }
+
+    fn last_batch_mask(&self) -> &[bool] {
+        self.exact.last_batch_mask()
+    }
+
+    fn project(&mut self, y: &[f64], r: usize) -> Result<Vec<f64>, String> {
+        self.exact.project(y, r)
+    }
+
+    fn capture(&mut self, r_limit: usize) -> Option<ProjectionSnapshot> {
+        self.exact.capture(r_limit)
+    }
+
+    fn measure_drift(&mut self) -> Result<DriftPoint, String> {
+        self.exact.measure_drift()
+    }
+
+    fn reserve(&mut self, m: usize, b: usize) {
+        self.exact.reserve(m, b);
+    }
+
+    fn set_bound(&mut self, max_landmarks: usize, policy: EvictionPolicy, protected: usize) {
+        self.exact.set_bound(max_landmarks, policy, protected);
+    }
+
+    fn divergence(&self) -> Option<f64> {
+        self.probed.then_some(self.divergence)
+    }
+
+    fn reset_divergence(&mut self) {
+        self.divergence = 0.0;
+    }
+
+    fn to_parts(&self) -> TierParts {
+        let (kernel, exact) = self.exact.parts();
+        TierParts::Shadow {
+            kernel,
+            exact,
+            rff: self.rff.to_parts(),
+            sample: self.sample,
+        }
+    }
+}
+
+/// Extract σ from an RBF kernel's `describe()` string
+/// (`rbf(sigma=…)`) — the sketched tiers need the spectral measure,
+/// and by seed time `rbf_median` has already resolved to a concrete
+/// σ.
+fn rbf_sigma(kernel: &dyn Kernel) -> Result<f64, String> {
+    let desc = kernel.describe();
+    let inner = desc
+        .strip_prefix("rbf(sigma=")
+        .and_then(|rest| rest.strip_suffix(')'))
+        .ok_or_else(|| {
+            format!("the rff/shadow tiers require an RBF kernel, got `{desc}`")
+        })?;
+    inner
+        .parse::<f64>()
+        .map_err(|_| format!("unparseable sigma in kernel describe `{desc}`"))
+}
+
+/// The RFF map's seed: a deterministic function of the stream id, so
+/// re-opening (or restoring) a stream regenerates the same map.
+fn rff_map_seed(id: &str) -> u64 {
+    fnv1a(id)
+}
+
+fn seed_rff(
+    cfg: &StreamConfig,
+    kernel: &dyn Kernel,
+    seed: &Mat,
+    id: &str,
+    features: usize,
+    sketch_r: usize,
+) -> Result<RffKpca, String> {
+    let sigma = rbf_sigma(kernel)?;
+    let mut st = RffKpca::new(
+        seed.cols(),
+        features,
+        sketch_r,
+        sigma,
+        rff_map_seed(id),
+        cfg.mean_adjust,
+    )?;
+    for i in 0..seed.rows() {
+        st.push(seed.row(i))?;
+    }
+    Ok(st)
+}
+
+/// Build a freshly seeded engine for `cfg.tier`. The exact arm is the
+/// code the entry ran before the seam (kernel shared, batch-rotation
+/// policy applied); the sketched arms derive their feature map from
+/// the resolved RBF σ and the stream id.
+pub fn seed_state(
+    cfg: &StreamConfig,
+    kernel: Arc<dyn Kernel>,
+    seed: &Mat,
+    id: &str,
+) -> Result<Box<dyn StreamState>, String> {
+    match cfg.tier {
+        StreamTier::Exact => Ok(Box::new(ExactState::seed(
+            kernel,
+            seed,
+            cfg.mean_adjust,
+            cfg.batch_rotation,
+        )?)),
+        StreamTier::Rff { features, sketch_r } => {
+            let st = seed_rff(cfg, kernel.as_ref(), seed, id, features, sketch_r)?;
+            Ok(Box::new(RffState::new(st)))
+        }
+        StreamTier::Shadow { sample } => {
+            let rff = seed_rff(
+                cfg,
+                kernel.as_ref(),
+                seed,
+                id,
+                DEFAULT_RFF_FEATURES,
+                DEFAULT_SKETCH_R,
+            )?;
+            let exact = ExactState::seed(kernel, seed, cfg.mean_adjust, cfg.batch_rotation)?;
+            Ok(Box::new(ShadowState::new(exact, rff, sample)))
+        }
+    }
+}
+
+/// Revive an engine from checkpoint parts (the codec's inverse of
+/// [`StreamState::to_parts`]). The caller re-applies stream
+/// configuration — reserve and bound — through the trait afterwards.
+pub fn state_from_parts(parts: TierParts) -> Result<Box<dyn StreamState>, String> {
+    match parts {
+        TierParts::Exact { kernel, parts } => {
+            let kernel = kernel_from_describe(&kernel)?;
+            Ok(Box::new(ExactState::from_parts(kernel, parts)?))
+        }
+        TierParts::Rff(p) => Ok(Box::new(RffState::new(RffKpca::from_parts(p)?))),
+        TierParts::Shadow { kernel, exact, rff, sample } => {
+            let kernel = kernel_from_describe(&kernel)?;
+            let exact = ExactState::from_parts(kernel, exact)?;
+            let rff = RffKpca::from_parts(rff)?;
+            Ok(Box::new(ShadowState::new(exact, rff, sample)))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tier_specs_parse_and_name() {
+        assert_eq!(StreamTier::parse("exact").unwrap(), StreamTier::Exact);
+        assert_eq!(
+            StreamTier::parse("rff").unwrap(),
+            StreamTier::Rff { features: DEFAULT_RFF_FEATURES, sketch_r: DEFAULT_SKETCH_R }
+        );
+        assert_eq!(
+            StreamTier::parse("rff:128:8").unwrap(),
+            StreamTier::Rff { features: 128, sketch_r: 8 }
+        );
+        assert_eq!(
+            StreamTier::parse("shadow:5").unwrap(),
+            StreamTier::Shadow { sample: 5 }
+        );
+        assert_eq!(StreamTier::parse("shadow").unwrap().name(), "shadow");
+        assert!(StreamTier::parse("nope").is_err());
+        assert!(StreamTier::parse("rff:x").is_err());
+        assert!(StreamTier::parse("exact:3").is_err());
+        assert!(StreamTier::parse("rff:128:8:9").is_err());
+    }
+
+    #[test]
+    fn rbf_sigma_parses_describe_and_rejects_others() {
+        use crate::kernels::{Linear, Rbf};
+        assert_eq!(rbf_sigma(&Rbf { sigma: 1.5 }).unwrap(), 1.5);
+        assert!(rbf_sigma(&Linear).is_err());
+    }
+}

@@ -125,6 +125,11 @@ pub struct Metrics {
     /// each ingest. Small values mean the landmark set is sufficient —
     /// the signal the eviction policy keys off.
     pub sufficiency_gap: f64,
+    /// Max projection divergence between the exact and sketched engine
+    /// since the last snapshot publish — `Some` only on shadow-tier
+    /// streams (see `coordinator::engine`); refreshed after each
+    /// ingest.
+    pub divergence: Option<f64>,
     /// Bytes resident in the stream's hot-path buffers (update
     /// workspace + eigenvector storage + batched-ingest scratch);
     /// refreshed after each ingest.
@@ -170,6 +175,7 @@ impl Default for Metrics {
             updates: 0,
             evictions: 0,
             sufficiency_gap: 0.0,
+            divergence: None,
             ws_bytes_resident: 0,
             ws_reallocs: 0,
             engine_gemms: 0,
@@ -206,6 +212,7 @@ impl Metrics {
             project_mean_us: self.project_latency.mean_ns() / 1e3,
             evictions: self.evictions,
             sufficiency_gap: self.sufficiency_gap,
+            divergence: self.divergence,
             ws_bytes_resident: self.ws_bytes_resident,
             ws_reallocs: self.ws_reallocs,
             reallocs_per_update: self.reallocs_per_update(),
@@ -243,6 +250,9 @@ pub struct MetricsReport {
     /// Spectrum share of the smallest positive eigenvalue — the
     /// landmark-sufficiency gauge (small = sufficient).
     pub sufficiency_gap: f64,
+    /// Max exact-vs-sketch projection divergence since the last
+    /// snapshot publish (shadow-tier streams only).
+    pub divergence: Option<f64>,
     /// Hot-path buffer bytes resident (workspace + eigenbasis).
     pub ws_bytes_resident: u64,
     /// Hot-path buffer-growth events since stream start.
@@ -318,6 +328,9 @@ pub struct StreamGauges {
     /// Spectrum share of the smallest positive eigenvalue — the
     /// landmark-sufficiency gauge the eviction policy keys off.
     pub sufficiency_gap: f64,
+    /// Max exact-vs-sketch projection divergence since the last
+    /// snapshot publish — `Some` only on shadow-tier streams.
+    pub divergence: Option<f64>,
     /// Frobenius norm of the latest drift measurement, if any.
     pub drift_frobenius: Option<f64>,
     /// Publication epoch of the latest projection snapshot (0 = none
@@ -420,6 +433,10 @@ pub struct PoolSnapshot {
     pub wal_errors: u64,
     /// Currently open streams that were rebuilt by crash recovery.
     pub recovered_streams: usize,
+    /// Max shadow-tier projection divergence across the pool's open
+    /// streams (current publish window) — `None` when no stream runs
+    /// the shadow tier. One bad sketch anywhere surfaces here.
+    pub max_divergence: Option<f64>,
     /// Per-stream gauges, sorted by stream id.
     pub per_stream: Vec<StreamGauges>,
     /// Per-shard occupancy, one row per worker (retired workers are
@@ -453,7 +470,11 @@ impl std::fmt::Display for PoolSnapshot {
             self.wal_errors,
             self.checkpoints,
             self.recovered_streams
-        )
+        )?;
+        if let Some(d) = self.max_divergence {
+            write!(f, " max_divergence={d:.3e}")?;
+        }
+        Ok(())
     }
 }
 
@@ -526,6 +547,10 @@ mod tests {
         assert!(line.contains("shards=2/3"));
         assert!(line.contains("streams=4"));
         assert!(line.contains("migrations=5"));
+        // Divergence only shows when a shadow-tier stream reported it.
+        assert!(!line.contains("max_divergence"));
+        let snap = PoolSnapshot { max_divergence: Some(1.5e-3), ..snap };
+        assert!(format!("{snap}").contains("max_divergence=1.500e-3"));
     }
 
     #[test]

@@ -26,6 +26,11 @@
 //! [`SnapshotCell`], and [`StreamRouter::project_snapshot`] /
 //! [`StreamRouter::project_many`] serve projections from it without
 //! enqueueing a single shard command.
+//! [`engine`] is the stream-engine seam: every per-stream verb behind
+//! the object-safe [`StreamState`] trait, with the engine chosen per
+//! stream by [`StreamTier`] — the paper-exact eigensystem, the
+//! fixed-memory RFF + frequent-directions sketch ([`crate::rff`]), or
+//! a shadow pairing of both that reports projection divergence.
 //! [`wal`] and [`persist`] are the durability layer: per-shard
 //! CRC-framed write-ahead ingest logs plus per-stream checkpoints cut
 //! at the same queue-drain barrier migration uses —
@@ -35,6 +40,7 @@
 //! WAL suffix replayed through the normal ingest path).
 
 pub mod drift;
+pub mod engine;
 pub mod metrics;
 pub mod persist;
 pub mod ring;
@@ -45,6 +51,7 @@ pub mod snapshot;
 pub mod wal;
 
 pub use drift::{DriftMonitor, DriftPoint};
+pub use engine::{StreamState, StreamTier, TierParts};
 pub use metrics::{
     LatencyHistogram, Metrics, MetricsReport, PoolSnapshot, ShardOccupancy, StreamGauges,
 };

@@ -3,9 +3,11 @@
 //!
 //! A checkpoint file captures everything a stream entry needs to
 //! come back after a crash: the stream configuration, the seed buffer
-//! (for streams that died mid-seed), the serialized eigensystem
-//! essence ([`crate::kpca::KpcaParts`] plus the kernel's `describe()`
-//! string — see [`crate::kernels::kernel_from_describe`]), the drift
+//! (for streams that died mid-seed), the serialized *engine* state —
+//! tier-tagged [`TierParts`]: the exact eigensystem essence
+//! ([`crate::kpca::KpcaParts`] plus the kernel's `describe()` string —
+//! see [`crate::kernels::kernel_from_describe`]), the RFF sketch
+//! ([`crate::rff::RffParts`]), or both for the shadow tier — the drift
 //! monitor, the persistent counters, and the stream's WAL sequence
 //! cursor (`ingest_seq`) so recovery replays exactly the logged suffix
 //! the checkpoint does not already contain.
@@ -34,10 +36,12 @@ use std::io::Write;
 use std::path::{Path, PathBuf};
 use std::time::Duration;
 
-use crate::kpca::{BatchRotation, EvictionPolicy, KpcaStats};
+use crate::kpca::{BatchRotation, EvictionPolicy, KpcaParts, KpcaStats};
 use crate::linalg::Norms;
+use crate::rff::RffParts;
 
 use super::drift::DriftPoint;
+use super::engine::{StreamTier, TierParts};
 use super::ring::fnv1a;
 use super::server::KernelConfig;
 use super::shard::StreamConfig;
@@ -47,11 +51,15 @@ use super::wal::{
 };
 
 /// Leading bytes of every checkpoint file (name + format version).
-/// `02` added the bounded-memory fields: `max_landmarks` + eviction
-/// policy in the stream config and the eviction counter in the stats
-/// block. `01` files predate any release and are not migrated — they
-/// quarantine like any other unreadable file.
-pub const CKPT_MAGIC: &[u8; 8] = b"IKCKPT02";
+/// `03` added the engine-tier tag: the stream config carries its
+/// [`StreamTier`] and the state block is tier-tagged [`TierParts`].
+/// `02` (bounded-memory fields) files are still decoded — their state
+/// block restores as the `Exact` tier, which is the only engine that
+/// existed when they were written. `01` files predate any release and
+/// are not migrated — they quarantine like any other unreadable file.
+pub const CKPT_MAGIC: &[u8; 8] = b"IKCKPT03";
+/// Previous format version, decoded read-only (see [`CKPT_MAGIC`]).
+pub const CKPT_MAGIC_V2: &[u8; 8] = b"IKCKPT02";
 
 /// Where and how the pool persists: the snapshot directory (checkpoint
 /// files + per-shard WALs) and the WAL fsync policy.
@@ -73,26 +81,6 @@ impl PersistConfig {
     pub(crate) fn wal_path(&self, shard: usize) -> PathBuf {
         self.dir.join(format!("wal-{shard}.log"))
     }
-}
-
-/// Serialized eigensystem state: [`crate::kpca::KpcaParts`] plus the
-/// kernel's exact `describe()` string (RBF-median streams persist the
-/// *resolved* sigma, so recovery never re-runs the heuristic on
-/// different data).
-#[derive(Clone, Debug)]
-pub(crate) struct KpcaCheckpoint {
-    pub(crate) kernel_describe: String,
-    pub(crate) mean_adjust: bool,
-    pub(crate) x: Vec<f64>,
-    pub(crate) vals: Vec<f64>,
-    pub(crate) vecs: Vec<f64>,
-    pub(crate) s: f64,
-    pub(crate) k1: Vec<f64>,
-    pub(crate) exclude_tol: f64,
-    pub(crate) naive_recenter_split: bool,
-    pub(crate) batch_rotation: Option<BatchRotation>,
-    pub(crate) stats: KpcaStats,
-    pub(crate) engine_gemms: u64,
 }
 
 /// Counters that survive a restart (everything in
@@ -119,7 +107,11 @@ pub(crate) struct CheckpointData {
     pub(crate) cfg: StreamConfig,
     pub(crate) seeded: usize,
     pub(crate) seed_buf: Vec<f64>,
-    pub(crate) state: Option<KpcaCheckpoint>,
+    /// Tier-tagged engine state — `None` for streams that died
+    /// mid-seed. Kernels ride as their exact `describe()` string
+    /// (RBF-median streams persist the *resolved* sigma, so recovery
+    /// never re-runs the heuristic on different data).
+    pub(crate) state: Option<TierParts>,
     pub(crate) drift_every: usize,
     pub(crate) drift_accepted_since: usize,
     pub(crate) drift_history: Vec<DriftPoint>,
@@ -211,6 +203,33 @@ fn take_eviction(c: &mut Cur<'_>) -> Result<EvictionPolicy, String> {
     })
 }
 
+fn put_tier(buf: &mut Vec<u8>, t: StreamTier) {
+    match t {
+        StreamTier::Exact => put_u8(buf, 0),
+        StreamTier::Rff { features, sketch_r } => {
+            put_u8(buf, 1);
+            put_u64(buf, features as u64);
+            put_u64(buf, sketch_r as u64);
+        }
+        StreamTier::Shadow { sample } => {
+            put_u8(buf, 2);
+            put_u64(buf, sample as u64);
+        }
+    }
+}
+
+fn take_tier(c: &mut Cur<'_>) -> Result<StreamTier, String> {
+    Ok(match c.take_u8()? {
+        0 => StreamTier::Exact,
+        1 => StreamTier::Rff {
+            features: c.take_u64()? as usize,
+            sketch_r: c.take_u64()? as usize,
+        },
+        2 => StreamTier::Shadow { sample: c.take_u64()? as usize },
+        t => return Err(format!("unknown tier tag {t}")),
+    })
+}
+
 /// Encode a [`StreamConfig`] — also the opaque `cfg` bytes of a WAL
 /// `Open` record, so mid-seed streams recover their full configuration
 /// from the log alone.
@@ -233,9 +252,15 @@ pub(crate) fn encode_stream_config(buf: &mut Vec<u8>, cfg: &StreamConfig) {
     }
     put_u64(buf, cfg.max_landmarks as u64);
     put_eviction(buf, cfg.eviction);
+    // The tier rides at the end of the config block, so pre-tier
+    // encodings (v02 checkpoints, old WAL `Open` blobs) are a strict
+    // prefix of the current one.
+    put_tier(buf, cfg.tier);
 }
 
-pub(crate) fn decode_stream_config(c: &mut Cur<'_>) -> Result<StreamConfig, String> {
+/// Decode the pre-tier (v02) prefix of a stream config; the tier
+/// defaults to `Exact` — the only engine that existed then.
+fn decode_stream_config_base(c: &mut Cur<'_>) -> Result<StreamConfig, String> {
     Ok(StreamConfig {
         kernel: take_kernel_config(c)?,
         mean_adjust: c.take_u8()? != 0,
@@ -252,17 +277,31 @@ pub(crate) fn decode_stream_config(c: &mut Cur<'_>) -> Result<StreamConfig, Stri
         },
         max_landmarks: c.take_u64()? as usize,
         eviction: take_eviction(c)?,
+        tier: StreamTier::Exact,
     })
 }
 
+pub(crate) fn decode_stream_config(c: &mut Cur<'_>) -> Result<StreamConfig, String> {
+    let mut cfg = decode_stream_config_base(c)?;
+    cfg.tier = take_tier(c)?;
+    Ok(cfg)
+}
+
 /// Decode a standalone config blob — the `cfg` bytes of a WAL `Open`
-/// record. Trailing bytes are rejected like everywhere else in the
-/// codec (a longer blob is a different format, not this one).
+/// record. A blob that ends right after the eviction policy is a
+/// pre-tier record (logged before the engine seam) and restores as the
+/// `Exact` tier; otherwise the tier tail must parse and the blob must
+/// end exactly there — trailing bytes are rejected like everywhere
+/// else in the codec (a longer blob is a different format, not this
+/// one).
 pub(crate) fn decode_stream_config_bytes(bytes: &[u8]) -> Result<StreamConfig, String> {
     let mut c = Cur::new(bytes);
-    let cfg = decode_stream_config(&mut c)?;
+    let mut cfg = decode_stream_config_base(&mut c)?;
     if c.remaining() != 0 {
-        return Err(format!("{} trailing bytes after stream config", c.remaining()));
+        cfg.tier = take_tier(&mut c)?;
+        if c.remaining() != 0 {
+            return Err(format!("{} trailing bytes after stream config", c.remaining()));
+        }
     }
     Ok(cfg)
 }
@@ -291,6 +330,102 @@ fn take_stats(c: &mut Cur<'_>) -> Result<KpcaStats, String> {
     })
 }
 
+// State-block tier tags. `STATE_EXACT`'s body is byte-identical to the
+// v02 state block (minus its 0/1 presence byte), so the v2 decode
+// branch reuses `take_kpca_parts` unchanged.
+const STATE_NONE: u8 = 0;
+const STATE_EXACT: u8 = 1;
+const STATE_RFF: u8 = 2;
+const STATE_SHADOW: u8 = 3;
+
+fn put_kpca_parts(buf: &mut Vec<u8>, kernel: &str, p: &KpcaParts) {
+    put_str(buf, kernel);
+    put_u8(buf, p.mean_adjust as u8);
+    put_f64s(buf, &p.x);
+    put_f64s(buf, &p.vals);
+    put_f64s(buf, &p.vecs);
+    put_f64(buf, p.s);
+    put_f64s(buf, &p.k1);
+    put_f64(buf, p.exclude_tol);
+    put_u8(buf, p.naive_recenter_split as u8);
+    put_rotation(buf, p.batch_rotation);
+    put_stats(buf, &p.stats);
+    put_u64(buf, p.engine_gemms);
+}
+
+/// `dim` is not on the wire inside the state block — it rides once at
+/// the top of the payload and is injected here.
+fn take_kpca_parts(c: &mut Cur<'_>, dim: usize) -> Result<(String, KpcaParts), String> {
+    let kernel = c.take_str()?;
+    let mean_adjust = c.take_u8()? != 0;
+    let x = c.take_f64s()?;
+    let vals = c.take_f64s()?;
+    let vecs = c.take_f64s()?;
+    let s = c.take_f64()?;
+    let k1 = c.take_f64s()?;
+    let exclude_tol = c.take_f64()?;
+    let naive_recenter_split = c.take_u8()? != 0;
+    let batch_rotation = take_rotation(c)?;
+    let stats = take_stats(c)?;
+    let engine_gemms = c.take_u64()?;
+    Ok((
+        kernel,
+        KpcaParts {
+            mean_adjust,
+            dim,
+            x,
+            vals,
+            vecs,
+            s,
+            k1,
+            exclude_tol,
+            naive_recenter_split,
+            batch_rotation,
+            stats,
+            engine_gemms,
+        },
+    ))
+}
+
+fn put_rff_parts(buf: &mut Vec<u8>, p: &RffParts) {
+    put_u64(buf, p.seed);
+    put_f64(buf, p.sigma);
+    put_u64(buf, p.features as u64);
+    put_u64(buf, p.sketch_r as u64);
+    put_u8(buf, p.mean_adjust as u8);
+    put_u64(buf, p.count);
+    put_f64s(buf, &p.mu);
+    put_u64(buf, p.brows as u64);
+    put_f64s(buf, &p.b);
+    put_stats(buf, &p.stats);
+}
+
+fn take_rff_parts(c: &mut Cur<'_>, dim: usize) -> Result<RffParts, String> {
+    let seed = c.take_u64()?;
+    let sigma = c.take_f64()?;
+    let features = c.take_u64()? as usize;
+    let sketch_r = c.take_u64()? as usize;
+    let mean_adjust = c.take_u8()? != 0;
+    let count = c.take_u64()?;
+    let mu = c.take_f64s()?;
+    let brows = c.take_u64()? as usize;
+    let b = c.take_f64s()?;
+    let stats = take_stats(c)?;
+    Ok(RffParts {
+        seed,
+        sigma,
+        dim,
+        features,
+        sketch_r,
+        mean_adjust,
+        count,
+        mu,
+        b,
+        brows,
+        stats,
+    })
+}
+
 fn encode_payload(buf: &mut Vec<u8>, d: &CheckpointData) {
     put_str(buf, &d.id);
     put_u64(buf, d.dim as u64);
@@ -298,21 +433,20 @@ fn encode_payload(buf: &mut Vec<u8>, d: &CheckpointData) {
     put_u64(buf, d.seeded as u64);
     put_f64s(buf, &d.seed_buf);
     match &d.state {
-        None => put_u8(buf, 0),
-        Some(st) => {
-            put_u8(buf, 1);
-            put_str(buf, &st.kernel_describe);
-            put_u8(buf, st.mean_adjust as u8);
-            put_f64s(buf, &st.x);
-            put_f64s(buf, &st.vals);
-            put_f64s(buf, &st.vecs);
-            put_f64(buf, st.s);
-            put_f64s(buf, &st.k1);
-            put_f64(buf, st.exclude_tol);
-            put_u8(buf, st.naive_recenter_split as u8);
-            put_rotation(buf, st.batch_rotation);
-            put_stats(buf, &st.stats);
-            put_u64(buf, st.engine_gemms);
+        None => put_u8(buf, STATE_NONE),
+        Some(TierParts::Exact { kernel, parts }) => {
+            put_u8(buf, STATE_EXACT);
+            put_kpca_parts(buf, kernel, parts);
+        }
+        Some(TierParts::Rff(p)) => {
+            put_u8(buf, STATE_RFF);
+            put_rff_parts(buf, p);
+        }
+        Some(TierParts::Shadow { kernel, exact, rff, sample }) => {
+            put_u8(buf, STATE_SHADOW);
+            put_kpca_parts(buf, kernel, exact);
+            put_rff_parts(buf, rff);
+            put_u64(buf, *sample as u64);
         }
     }
     put_u64(buf, d.drift_every as u64);
@@ -343,29 +477,35 @@ fn encode_payload(buf: &mut Vec<u8>, d: &CheckpointData) {
     put_u64(buf, d.ingest_seq);
 }
 
-fn decode_payload(payload: &[u8]) -> Result<CheckpointData, String> {
+/// Decode a checkpoint payload. `v2` selects the `IKCKPT02`
+/// compatibility branch: no tier in the config block, and the state
+/// block is a 0/1-tagged exact eigensystem — restored as the `Exact`
+/// tier, the only engine that existed when those files were written.
+fn decode_payload(payload: &[u8], v2: bool) -> Result<CheckpointData, String> {
     let mut c = Cur::new(payload);
     let id = c.take_str()?;
     let dim = c.take_u64()? as usize;
-    let cfg = decode_stream_config(&mut c)?;
+    let cfg = if v2 {
+        decode_stream_config_base(&mut c)?
+    } else {
+        decode_stream_config(&mut c)?
+    };
     let seeded = c.take_u64()? as usize;
     let seed_buf = c.take_f64s()?;
-    let state = match c.take_u8()? {
-        0 => None,
-        _ => Some(KpcaCheckpoint {
-            kernel_describe: c.take_str()?,
-            mean_adjust: c.take_u8()? != 0,
-            x: c.take_f64s()?,
-            vals: c.take_f64s()?,
-            vecs: c.take_f64s()?,
-            s: c.take_f64()?,
-            k1: c.take_f64s()?,
-            exclude_tol: c.take_f64()?,
-            naive_recenter_split: c.take_u8()? != 0,
-            batch_rotation: take_rotation(&mut c)?,
-            stats: take_stats(&mut c)?,
-            engine_gemms: c.take_u64()?,
-        }),
+    let state = match (v2, c.take_u8()?) {
+        (_, STATE_NONE) => None,
+        (true, _) | (false, STATE_EXACT) => {
+            let (kernel, parts) = take_kpca_parts(&mut c, dim)?;
+            Some(TierParts::Exact { kernel, parts })
+        }
+        (false, STATE_RFF) => Some(TierParts::Rff(take_rff_parts(&mut c, dim)?)),
+        (false, STATE_SHADOW) => {
+            let (kernel, exact) = take_kpca_parts(&mut c, dim)?;
+            let rff = take_rff_parts(&mut c, dim)?;
+            let sample = c.take_u64()? as usize;
+            Some(TierParts::Shadow { kernel, exact, rff, sample })
+        }
+        (false, t) => return Err(format!("unknown state tag {t}")),
     };
     let drift_every = c.take_u64()? as usize;
     let drift_accepted_since = c.take_u64()? as usize;
@@ -428,10 +568,16 @@ pub(crate) fn encode_checkpoint(d: &CheckpointData) -> Vec<u8> {
     bytes
 }
 
-/// Decode checkpoint file bytes. Never panics on malformed input —
-/// every failure is an `Err` the loader turns into a quarantine.
+/// Decode checkpoint file bytes (current `IKCKPT03` or the previous
+/// `IKCKPT02`). Never panics on malformed input — every failure is an
+/// `Err` the loader turns into a quarantine.
 pub(crate) fn decode_checkpoint(bytes: &[u8]) -> Result<CheckpointData, String> {
-    if bytes.len() < CKPT_MAGIC.len() + 8 || &bytes[..CKPT_MAGIC.len()] != CKPT_MAGIC {
+    if bytes.len() < CKPT_MAGIC.len() + 8 {
+        return Err("bad checkpoint magic".into());
+    }
+    let magic = &bytes[..CKPT_MAGIC.len()];
+    let v2 = magic == CKPT_MAGIC_V2;
+    if !v2 && magic != CKPT_MAGIC {
         return Err("bad checkpoint magic".into());
     }
     let p = CKPT_MAGIC.len();
@@ -446,7 +592,7 @@ pub(crate) fn decode_checkpoint(bytes: &[u8]) -> Result<CheckpointData, String> 
     if crc32(payload) != crc {
         return Err("checkpoint CRC mismatch".into());
     }
-    decode_payload(payload)
+    decode_payload(payload, v2)
 }
 
 // ---------------------------------------------------------------------
@@ -608,19 +754,16 @@ mod tests {
             publish_after: Some(Duration::from_millis(250)),
             max_landmarks: 96,
             eviction: EvictionPolicy::LeverageScore,
+            tier: StreamTier::Rff { features: 64, sketch_r: 8 },
         }
     }
 
-    fn sample_checkpoint(id: &str) -> CheckpointData {
-        CheckpointData {
-            id: id.to_string(),
-            dim: 3,
-            cfg: sample_config(),
-            seeded: 4,
-            seed_buf: vec![0.5; 12],
-            state: Some(KpcaCheckpoint {
-                kernel_describe: "rbf(sigma=0.30000000000000004)".into(),
+    fn sample_kpca_parts() -> (String, KpcaParts) {
+        (
+            "rbf(sigma=0.30000000000000004)".to_string(),
+            KpcaParts {
                 mean_adjust: true,
+                dim: 3,
                 x: (0..12).map(|i| i as f64 * 0.125).collect(),
                 vals: vec![0.1, 0.7, 1.0 / 3.0, 2.5],
                 vecs: (0..16).map(|i| (i as f64).sin()).collect(),
@@ -638,7 +781,35 @@ mod tests {
                     evictions: 6,
                 },
                 engine_gemms: 44,
-            }),
+            },
+        )
+    }
+
+    fn sample_rff_parts() -> RffParts {
+        RffParts {
+            seed: 0xDEAD_BEEF,
+            sigma: 0.75,
+            dim: 3,
+            features: 64,
+            sketch_r: 8,
+            mean_adjust: true,
+            count: 40,
+            mu: (0..64).map(|i| (i as f64).cos() * 0.01).collect(),
+            b: (0..5 * 64).map(|i| (i as f64 * 0.37).sin()).collect(),
+            brows: 5,
+            stats: KpcaStats { accepted: 40, updates: 40, deflated: 2, ..KpcaStats::default() },
+        }
+    }
+
+    fn sample_checkpoint(id: &str) -> CheckpointData {
+        let (kernel, parts) = sample_kpca_parts();
+        CheckpointData {
+            id: id.to_string(),
+            dim: 3,
+            cfg: sample_config(),
+            seeded: 4,
+            seed_buf: vec![0.5; 12],
+            state: Some(TierParts::Exact { kernel, parts }),
             drift_every: 5,
             drift_accepted_since: 2,
             drift_history: vec![DriftPoint {
@@ -671,18 +842,27 @@ mod tests {
             KernelConfig::Polynomial { degree: 2, offset: 1.0 },
             KernelConfig::Laplacian { sigma: 1.0 / 3.0 },
         ];
+        let tiers = [
+            StreamTier::Exact,
+            StreamTier::Rff { features: 256, sketch_r: 16 },
+            StreamTier::Shadow { sample: 8 },
+        ];
         for kernel in kernels {
             for publish_after in [None, Some(Duration::from_micros(1500))] {
-                for (batch_rotation, eviction) in [
+                for ((batch_rotation, eviction), tier) in [
                     (None, EvictionPolicy::Off),
                     (Some(BatchRotation::Fused), EvictionPolicy::Uniform),
                     (Some(BatchRotation::Sequential), EvictionPolicy::LeverageScore),
-                ] {
+                ]
+                .into_iter()
+                .zip(tiers)
+                {
                     let cfg = StreamConfig {
                         kernel: kernel.clone(),
                         batch_rotation,
                         publish_after,
                         eviction,
+                        tier,
                         ..sample_config()
                     };
                     let mut buf = Vec::new();
@@ -707,6 +887,131 @@ mod tests {
         let d2 = CheckpointData { state: None, ..sample_checkpoint("mid-seed") };
         let back2 = decode_checkpoint(&encode_checkpoint(&d2)).unwrap();
         assert_eq!(format!("{d2:?}"), format!("{back2:?}"));
+    }
+
+    #[test]
+    fn rff_and_shadow_states_roundtrip() {
+        let mut d = sample_checkpoint("rff-stream");
+        d.state = Some(TierParts::Rff(sample_rff_parts()));
+        let back = decode_checkpoint(&encode_checkpoint(&d)).unwrap();
+        assert_eq!(format!("{d:?}"), format!("{back:?}"));
+
+        let (kernel, exact) = sample_kpca_parts();
+        d.cfg.tier = StreamTier::Shadow { sample: 5 };
+        d.state =
+            Some(TierParts::Shadow { kernel, exact, rff: sample_rff_parts(), sample: 5 });
+        let back = decode_checkpoint(&encode_checkpoint(&d)).unwrap();
+        assert_eq!(format!("{d:?}"), format!("{back:?}"));
+    }
+
+    /// Encode the pre-tier `IKCKPT02` layout byte-for-byte — the
+    /// compatibility pin: files written by the previous release must
+    /// keep decoding, with the engine restored as the `Exact` tier.
+    fn encode_checkpoint_v2(d: &CheckpointData) -> Vec<u8> {
+        let mut payload = Vec::new();
+        put_str(&mut payload, &d.id);
+        put_u64(&mut payload, d.dim as u64);
+        // v02 stream config: everything up to (and including) the
+        // eviction policy; no tier byte.
+        put_kernel_config(&mut payload, &d.cfg.kernel);
+        put_u8(&mut payload, d.cfg.mean_adjust as u8);
+        put_u64(&mut payload, d.cfg.seed_points as u64);
+        put_u64(&mut payload, d.cfg.drift_every as u64);
+        put_u64(&mut payload, d.cfg.expected_m as u64);
+        put_u64(&mut payload, d.cfg.expected_batch as u64);
+        put_rotation(&mut payload, d.cfg.batch_rotation);
+        put_u64(&mut payload, d.cfg.publish_every as u64);
+        put_u64(&mut payload, d.cfg.snapshot_r as u64);
+        match d.cfg.publish_after {
+            None => put_u8(&mut payload, 0),
+            Some(dur) => {
+                put_u8(&mut payload, 1);
+                put_u64(&mut payload, dur.as_nanos() as u64);
+            }
+        }
+        put_u64(&mut payload, d.cfg.max_landmarks as u64);
+        put_eviction(&mut payload, d.cfg.eviction);
+        put_u64(&mut payload, d.seeded as u64);
+        put_f64s(&mut payload, &d.seed_buf);
+        match &d.state {
+            None => put_u8(&mut payload, 0),
+            Some(TierParts::Exact { kernel, parts }) => {
+                put_u8(&mut payload, 1);
+                put_kpca_parts(&mut payload, kernel, parts);
+            }
+            other => panic!("v02 had no tier {other:?}"),
+        }
+        put_u64(&mut payload, d.drift_every as u64);
+        put_u64(&mut payload, d.drift_accepted_since as u64);
+        put_u64(&mut payload, d.drift_history.len() as u64);
+        for p in &d.drift_history {
+            put_u64(&mut payload, p.m as u64);
+            put_f64(&mut payload, p.norms.frobenius);
+            put_f64(&mut payload, p.norms.spectral);
+            put_f64(&mut payload, p.norms.trace);
+            put_f64(&mut payload, p.orthogonality);
+        }
+        let c = &d.counters;
+        for v in [
+            c.accepted,
+            c.excluded,
+            c.errors,
+            c.async_errors,
+            c.worker_reads,
+            c.checkpoints,
+            c.wal_appends,
+            c.wal_bytes,
+            c.wal_errors,
+        ] {
+            put_u64(&mut payload, v);
+        }
+        put_u64(&mut payload, d.since_publish);
+        put_u64(&mut payload, d.ingest_seq);
+        let mut bytes = CKPT_MAGIC_V2.to_vec();
+        bytes.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        bytes.extend_from_slice(&crc32(&payload).to_le_bytes());
+        bytes.extend_from_slice(&payload);
+        bytes
+    }
+
+    #[test]
+    fn v2_checkpoint_decodes_with_exact_tier() {
+        let mut d = sample_checkpoint("legacy");
+        d.cfg.tier = StreamTier::Exact; // v02 knew no other engine
+        let bytes = encode_checkpoint_v2(&d);
+        let back = decode_checkpoint(&bytes).unwrap();
+        // Everything round-trips; the tier comes back `Exact`.
+        assert_eq!(format!("{d:?}"), format!("{back:?}"));
+        assert_eq!(back.cfg.tier, StreamTier::Exact);
+        assert!(matches!(back.state, Some(TierParts::Exact { .. })));
+        // Corrupting a v2 frame still quarantines cleanly.
+        let mut bad = bytes.clone();
+        let last = bad.len() - 1;
+        bad[last] ^= 0xFF;
+        assert!(decode_checkpoint(&bad).is_err());
+    }
+
+    #[test]
+    fn pre_tier_config_blob_decodes_as_exact() {
+        // A WAL `Open` record logged before the engine seam: the blob
+        // ends at the eviction policy. Strip the tier tail off a fresh
+        // encoding (Exact's tag is exactly one byte) to reproduce it.
+        let cfg = StreamConfig { tier: StreamTier::Exact, ..sample_config() };
+        let mut blob = Vec::new();
+        encode_stream_config(&mut blob, &cfg);
+        blob.pop(); // drop the tier byte -> pre-tier layout
+        let back = decode_stream_config_bytes(&blob).unwrap();
+        assert_eq!(format!("{cfg:?}"), format!("{back:?}"));
+        // Current blobs (tier included) still round-trip, including
+        // parameterized tiers.
+        let cfg = sample_config();
+        let mut blob = Vec::new();
+        encode_stream_config(&mut blob, &cfg);
+        let back = decode_stream_config_bytes(&blob).unwrap();
+        assert_eq!(format!("{cfg:?}"), format!("{back:?}"));
+        // Trailing garbage after the tier is still rejected.
+        blob.push(7);
+        assert!(decode_stream_config_bytes(&blob).is_err());
     }
 
     #[test]

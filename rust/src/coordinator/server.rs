@@ -14,6 +14,7 @@ use crate::kpca::{EvictionPolicy, KpcaStats};
 use crate::linalg::Norms;
 
 use super::drift::DriftPoint;
+use super::engine::StreamTier;
 use super::metrics::MetricsReport;
 use super::persist::PersistConfig;
 use super::router::EnginePolicy;
@@ -86,6 +87,9 @@ pub struct Config {
     /// Eviction policy applied at the cap. See
     /// [`StreamConfig::eviction`].
     pub eviction: EvictionPolicy,
+    /// Which stream engine serves the default stream. See
+    /// [`StreamConfig::tier`].
+    pub tier: StreamTier,
 }
 
 impl Default for Config {
@@ -102,6 +106,7 @@ impl Default for Config {
             persist: None,
             max_landmarks: 0,
             eviction: EvictionPolicy::Off,
+            tier: StreamTier::Exact,
         }
     }
 }
@@ -127,6 +132,7 @@ impl Config {
                 publish_after: self.publish_after,
                 max_landmarks: self.max_landmarks,
                 eviction: self.eviction,
+                tier: self.tier,
                 ..StreamConfig::default()
             },
         )
@@ -165,6 +171,8 @@ pub struct Snapshot {
     pub dim: usize,
     /// Kernel family label (static — no allocation on this path).
     pub kernel: &'static str,
+    /// Engine tier serving the stream (`"exact"`/`"rff"`/`"shadow"`).
+    pub tier: &'static str,
     pub top_values: Vec<f64>,
     pub stats: KpcaStats,
     pub drift: Option<DriftPoint>,
@@ -418,6 +426,7 @@ mod tests {
         let snap = coord.snapshot().unwrap();
         assert_eq!(snap.m, 30);
         assert_eq!(snap.kernel, "rbf");
+        assert_eq!(snap.tier, "exact");
         let report = coord.metrics().unwrap();
         assert_eq!(report.accepted as usize, 30 - 6);
         assert_eq!(report.async_errors, 0);

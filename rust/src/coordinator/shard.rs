@@ -17,9 +17,10 @@
 //! only the streams whose ring arc moved (≈ `1/(k+1)` of them on a
 //! grow) instead of restarting the pool.
 //!
-//! **Live migration.** `IncrementalKpca<'static>` is `Send`, so a
-//! stream's whole entry (eigensystem + workspace + drift monitor +
-//! metrics) can be handed between workers without recomputation. A
+//! **Live migration.** The boxed [`StreamState`] engine is `Send`
+//! (whatever its tier), so a stream's whole entry (engine + drift
+//! monitor + metrics) can be handed between workers without
+//! recomputation. A
 //! migration is driven by the *source* worker (command `Migrate`):
 //! because commands serialize through the shard queue, every ingest
 //! enqueued before the migration drains first — the queue itself is
@@ -69,7 +70,8 @@
 //! [`StreamRouter::ingest_many`] (one command and one reply per batch —
 //! the per-point channel round-trip amortizes across the batch, the
 //! worker computes the batch's kernel rows as one blocked GEMM via
-//! [`IncrementalKpca::push_batch_with`], and the batch's rank-one
+//! [`crate::kpca::IncrementalKpca::push_batch_with`] on the exact
+//! tier, and the batch's rank-one
 //! back-rotations fold into a single fused engine GEMM — the blocked
 //! rank-b update, whose per-stream `engine_gemms` gauge the pool
 //! snapshot rolls up). Streams opened with
@@ -82,7 +84,8 @@
 //! inside the worker thread) exists *per shard*, not per stream: the
 //! engine is stateless apart from its dispatch counters, so all streams
 //! of a shard share it. Per-stream state owns its kernel through an
-//! `Arc` handed to [`IncrementalKpca::from_batch_shared`] — closing a
+//! `Arc` handed to [`crate::kpca::IncrementalKpca::from_batch_shared`]
+//! — closing a
 //! stream frees its kernel, and migrating one moves the `Arc` with it.
 //!
 //! **Metrics aggregation.** Each stream entry keeps its own
@@ -132,17 +135,16 @@ use std::sync::{Arc, Mutex, RwLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::kernels::{kernel_from_describe, median_heuristic, Kernel};
-use crate::kpca::{BatchRotation, EvictionPolicy, IncrementalKpca, KpcaParts, KpcaStats};
+use crate::kernels::{median_heuristic, Kernel};
+use crate::kpca::{BatchRotation, EvictionPolicy, KpcaStats};
 use crate::linalg::Mat;
 
 use super::drift::{DriftMonitor, DriftPoint};
+use super::engine::{self, StreamState, StreamTier, TierParts};
 use super::metrics::{
     LatencyHistogram, Metrics, MetricsReport, PoolSnapshot, ShardOccupancy, StreamGauges,
 };
-use super::persist::{
-    self, CheckpointData, KpcaCheckpoint, PersistConfig, PersistedCounters,
-};
+use super::persist::{self, CheckpointData, PersistConfig, PersistedCounters};
 use super::ring::HashRing;
 use super::router::RoutedEngine;
 use super::server::{BatchReply, EngineConfig, IngestReply, KernelConfig, Snapshot};
@@ -161,7 +163,7 @@ pub struct StreamConfig {
     pub drift_every: usize,
     /// Expected steady-state eigensystem size. When > 0 (or
     /// `expected_batch` > 0) the worker calls
-    /// [`IncrementalKpca::reserve`] the moment the stream's eigensystem
+    /// [`crate::kpca::IncrementalKpca::reserve`] the moment the stream's eigensystem
     /// is built — every hot-path buffer is pre-sized once, instead of
     /// growing across the first batches.
     pub expected_m: usize,
@@ -194,11 +196,15 @@ pub struct StreamConfig {
     /// size, every accepted point triggers one eviction chosen by
     /// `eviction`, so the stream's memory footprint stays fixed no
     /// matter how long it runs. Seed points are protected from
-    /// eviction. See [`IncrementalKpca::set_bound`].
+    /// eviction. See [`crate::kpca::IncrementalKpca::set_bound`].
     pub max_landmarks: usize,
     /// Which landmark goes when the cap is hit. Ignored while
     /// `max_landmarks` is 0.
     pub eviction: EvictionPolicy,
+    /// Which engine runs this stream (see [`super::engine`]): the
+    /// paper-exact eigensystem, the fixed-memory RFF sketch, or a
+    /// shadow pairing of both that reports projection divergence.
+    pub tier: StreamTier,
 }
 
 impl Default for StreamConfig {
@@ -216,6 +222,7 @@ impl Default for StreamConfig {
             publish_after: None,
             max_landmarks: 0,
             eviction: EvictionPolicy::Off,
+            tier: StreamTier::Exact,
         }
     }
 }
@@ -620,7 +627,11 @@ struct StreamEntry {
     dim: usize,
     seed_buf: Vec<f64>,
     seeded: usize,
-    state: Option<IncrementalKpca<'static>>,
+    /// The stream's engine behind the tier seam — chosen by
+    /// [`StreamConfig::tier`] at seed completion (see
+    /// [`super::engine::seed_state`]). Boxed and `Send`, so migration
+    /// ships it like any other field.
+    state: Option<Box<dyn StreamState>>,
     drift: DriftMonitor,
     metrics: Metrics,
     /// First error deferred by fire-and-forget ingest, surfaced (and
@@ -645,6 +656,13 @@ struct StreamEntry {
     /// Whether this entry was rebuilt by crash recovery (surfaced in
     /// the stream's gauges; counted pool-wide as `recovered_streams`).
     restored: bool,
+    /// Evictions since the last eviction-triggered drift audit. When a
+    /// bounded stream evicts, every `drift_every` evictions force a
+    /// spot measurement into the live monitor — a misbehaving eviction
+    /// policy is caught in production gauges, not only by the oracle
+    /// test suite. Transient cadence state, deliberately not
+    /// checkpointed.
+    evictions_since_audit: u64,
 }
 
 impl StreamEntry {
@@ -672,6 +690,7 @@ impl StreamEntry {
             ingest_seq: 0,
             last_publish: Instant::now(),
             restored: false,
+            evictions_since_audit: 0,
         }
     }
 
@@ -693,9 +712,8 @@ impl StreamEntry {
         }
         let seed = Mat::from_vec(self.seeded, self.dim, self.seed_buf.clone());
         let kernel = build_kernel(&self.cfg.kernel, &seed);
-        match IncrementalKpca::from_batch_shared(kernel, &seed, self.cfg.mean_adjust) {
+        match engine::seed_state(&self.cfg, kernel, &seed, &self.id) {
             Ok(mut st) => {
-                st.batch_rotation = self.cfg.batch_rotation;
                 // Warm the entry per the open-time expectations: one
                 // reserve here replaces incremental growth across the
                 // stream's first batches (ROADMAP "per-stream reserve
@@ -709,6 +727,7 @@ impl StreamEntry {
                 // Bounded-memory streams: cap the landmark set, protect
                 // the seed prefix. `m` transiently reaches cap+1 before
                 // the eviction lands, so reserve that extra row too.
+                // (No-op on tiers without a landmark set.)
                 if self.cfg.max_landmarks > 0 {
                     st.set_bound(self.cfg.max_landmarks, self.cfg.eviction, self.seeded);
                     st.reserve(
@@ -740,13 +759,13 @@ impl StreamEntry {
     /// to the pool rollup too.
     fn refresh_gauges(&mut self) {
         let st = self.state.as_ref().expect("gauges need an initialized stream");
-        self.metrics.updates = st.stats.updates as u64;
-        self.metrics.ws_bytes_resident =
-            (st.hot_path_bytes() + st.batch_bytes_resident()) as u64;
-        self.metrics.ws_reallocs = st.hot_path_reallocs() + st.batch_reallocs();
+        self.metrics.updates = st.stats().updates as u64;
+        self.metrics.ws_bytes_resident = st.bytes_resident() as u64;
+        self.metrics.ws_reallocs = st.reallocs();
         self.metrics.engine_gemms = st.engine_gemms();
-        self.metrics.evictions = st.stats.evictions as u64;
+        self.metrics.evictions = st.stats().evictions as u64;
         self.metrics.sufficiency_gap = st.sufficiency_gap();
+        self.metrics.divergence = st.divergence();
     }
 
     /// Capture and publish a fresh projection snapshot (no-op while
@@ -754,11 +773,14 @@ impl StreamEntry {
     /// [`StreamConfig::publish_every`] accepted points, the end of
     /// every batch command, and `sync` — the read-your-writes point.
     fn publish_snapshot(&mut self) {
-        if let Some(st) = &self.state {
-            if let Some(snap) = ProjectionSnapshot::capture(st, self.cfg.snapshot_r) {
+        if let Some(st) = &mut self.state {
+            if let Some(snap) = st.capture(self.cfg.snapshot_r) {
                 self.cell.publish(snap);
                 self.since_publish = 0;
                 self.last_publish = Instant::now();
+                // Divergence is measured per publish window: readers of
+                // the fresh snapshot start a fresh max.
+                st.reset_divergence();
             }
         }
     }
@@ -778,6 +800,31 @@ impl StreamEntry {
         }
     }
 
+    /// Eviction-triggered spot audit: bounded streams rewrite their
+    /// retained set in place, so every [`StreamConfig::drift_every`]
+    /// *evictions* (not accepted points) force one drift measurement
+    /// into the live monitor — down-date bugs surface at the next pool
+    /// snapshot instead of waiting out the accept cadence. The counter
+    /// is transient (deliberately not checkpointed): an audit cadence,
+    /// not replayable state.
+    fn spot_audit(&mut self, evictions: u64) {
+        if self.cfg.drift_every == 0 {
+            return;
+        }
+        self.evictions_since_audit += evictions;
+        if self.evictions_since_audit < self.cfg.drift_every as u64 {
+            return;
+        }
+        self.evictions_since_audit = 0;
+        if let Some(st) = &mut self.state {
+            // Tiers without a Gram matrix decline; the cadence still
+            // reset — the audit is best-effort per window.
+            if let Ok(p) = st.measure_drift() {
+                self.drift.record(p);
+            }
+        }
+    }
+
     fn ingest(&mut self, x: &[f64], engine: &RoutedEngine) -> Result<IngestReply, String> {
         if x.len() != self.dim {
             self.metrics.errors += 1;
@@ -787,17 +834,27 @@ impl StreamEntry {
             return self.seed_point(x);
         }
         let st = self.state.as_mut().unwrap();
-        let evictions_before = st.stats.evictions;
+        let evictions_before = st.stats().evictions;
         match st.push_with(x, engine) {
             Ok(accepted) => {
                 if accepted {
                     self.metrics.accepted += 1;
-                    self.drift.on_accept(st);
+                    if self.drift.note(1) {
+                        // Tiers without a Gram matrix (rff) decline the
+                        // measurement; the cadence phase still advanced.
+                        if let Ok(p) = st.measure_drift() {
+                            self.drift.record(p);
+                        }
+                    }
                 } else {
                     self.metrics.excluded += 1;
                 }
                 let m = st.len();
-                let evicted = st.stats.evictions > evictions_before;
+                let evictions_after = st.stats().evictions;
+                let evicted = evictions_after > evictions_before;
+                if evicted {
+                    self.spot_audit((evictions_after - evictions_before) as u64);
+                }
                 self.refresh_gauges();
                 if accepted {
                     self.since_publish += 1;
@@ -841,6 +898,7 @@ impl StreamEntry {
         }
         if off < b {
             let st = self.state.as_mut().unwrap();
+            let evictions_before = st.stats().evictions;
             let result = st.push_batch_with(&xs[off * self.dim..], engine);
             // The accepted prefix stays applied even on `Err` (the mask
             // covers exactly the processed points) — counters, drift
@@ -850,7 +908,15 @@ impl StreamEntry {
             let excluded = st.last_batch_mask().len() - accepted;
             self.metrics.accepted += accepted as u64;
             self.metrics.excluded += excluded as u64;
-            self.drift.on_accept_many(accepted, st);
+            if self.drift.note(accepted) {
+                if let Ok(p) = st.measure_drift() {
+                    self.drift.record(p);
+                }
+            }
+            let evictions_after = st.stats().evictions;
+            if evictions_after > evictions_before {
+                self.spot_audit((evictions_after - evictions_before) as u64);
+            }
             self.refresh_gauges();
             // Batch flush = publish point, even for a partial batch:
             // the applied prefix is real state and readers may see it.
@@ -922,24 +988,29 @@ impl StreamEntry {
         self.metrics.wal_errors += w.errors() - errors_before;
     }
 
-    fn project(&self, x: &[f64], r: usize) -> Result<Vec<f64>, String> {
-        match (&self.state, x.len() == self.dim) {
-            (Some(st), true) => Ok(st.project(x, r)),
+    fn project(&mut self, x: &[f64], r: usize) -> Result<Vec<f64>, String> {
+        let dim = self.dim;
+        match (&mut self.state, x.len() == dim) {
+            (Some(st), true) => st.project(x, r),
             (Some(_), false) => Err("dimension mismatch".to_string()),
             (None, _) => Err("not initialized (still seeding)".to_string()),
         }
     }
 
     fn measure_drift(&mut self) -> Result<DriftPoint, String> {
-        match &self.state {
-            Some(st) => Ok(self.drift.measure(st)),
+        match &mut self.state {
+            Some(st) => {
+                let p = st.measure_drift()?;
+                self.drift.record(p);
+                Ok(p)
+            }
             None => Err("not initialized".to_string()),
         }
     }
 
     fn kernel_name(&self) -> &'static str {
         match &self.state {
-            Some(st) => st.kernel_ref().name(),
+            Some(st) => st.kernel_name(),
             None => self.cfg.kernel.name(),
         }
     }
@@ -949,9 +1020,10 @@ impl StreamEntry {
             Some(st) => Snapshot {
                 m: st.len(),
                 dim: self.dim,
-                kernel: self.kernel_name(),
-                top_values: st.vals.iter().rev().take(10).copied().collect(),
-                stats: st.stats,
+                kernel: st.kernel_name(),
+                tier: st.tier_name(),
+                top_values: st.top_values(10),
+                stats: st.stats(),
                 drift: self.drift.latest().copied(),
                 engine_calls,
             },
@@ -959,6 +1031,7 @@ impl StreamEntry {
                 m: self.seeded,
                 dim: self.dim,
                 kernel: self.kernel_name(),
+                tier: self.cfg.tier.name(),
                 top_values: Vec::new(),
                 stats: KpcaStats::default(),
                 drift: None,
@@ -978,6 +1051,7 @@ impl StreamEntry {
             engine_gemms: self.metrics.engine_gemms,
             evictions: self.metrics.evictions,
             sufficiency_gap: self.metrics.sufficiency_gap,
+            divergence: self.metrics.divergence,
             drift_frobenius: self.drift.latest().map(|d| d.norms.frobenius),
             snapshot_epoch: self.cell.epoch(),
             snapshot_reads: self.cell.reads(),
@@ -1000,7 +1074,7 @@ impl StreamEntry {
     }
 
     fn final_stats(self) -> KpcaStats {
-        self.state.map(|s| s.stats).unwrap_or_default()
+        self.state.map(|s| s.stats()).unwrap_or_default()
     }
 
     /// Serialize everything this stream needs to come back after a
@@ -1008,28 +1082,7 @@ impl StreamEntry {
     /// consistent: every command enqueued ahead of the checkpoint has
     /// fully applied (the queue-drain barrier migration uses).
     fn to_checkpoint(&self) -> CheckpointData {
-        let state = self.state.as_ref().map(|st| {
-            let m = st.len();
-            let mut vecs = Vec::with_capacity(m * m);
-            for i in 0..m {
-                vecs.extend_from_slice(st.vecs.row(i));
-            }
-            let (s, k1) = st.centering_sums();
-            KpcaCheckpoint {
-                kernel_describe: st.kernel_ref().describe(),
-                mean_adjust: st.mean_adjust,
-                x: st.data_flat().to_vec(),
-                vals: st.vals.clone(),
-                vecs,
-                s,
-                k1: k1.to_vec(),
-                exclude_tol: st.exclude_tol,
-                naive_recenter_split: st.naive_recenter_split,
-                batch_rotation: st.batch_rotation,
-                stats: st.stats,
-                engine_gemms: st.engine_gemms(),
-            }
-        });
+        let state = self.state.as_ref().map(|st| st.to_parts());
         CheckpointData {
             id: self.id.to_string(),
             dim: self.dim,
@@ -1086,30 +1139,16 @@ impl StreamEntry {
     ) -> Result<Box<StreamEntry>, String> {
         let state = match data.state {
             None => None,
-            Some(ck) => {
-                let kernel = kernel_from_describe(&ck.kernel_describe)?;
-                let parts = KpcaParts {
-                    mean_adjust: ck.mean_adjust,
-                    dim: data.dim,
-                    x: ck.x,
-                    vals: ck.vals,
-                    vecs: ck.vecs,
-                    s: ck.s,
-                    k1: ck.k1,
-                    exclude_tol: ck.exclude_tol,
-                    naive_recenter_split: ck.naive_recenter_split,
-                    batch_rotation: ck.batch_rotation,
-                    stats: ck.stats,
-                    engine_gemms: ck.engine_gemms,
-                };
-                let mut st = IncrementalKpca::from_parts(kernel, parts)?;
+            Some(parts) => {
+                let mut st = engine::state_from_parts(parts)?;
                 if data.cfg.expected_m > 0 || data.cfg.expected_batch > 0 {
                     st.reserve(data.cfg.expected_m.max(st.len()), data.cfg.expected_batch);
                 }
                 // The bound is configuration, not serialized state:
                 // re-apply it from the checkpointed StreamConfig (the
                 // Uniform round-robin cursor rides in `stats.evictions`,
-                // which `from_parts` already restored).
+                // which `from_parts` already restored). No-op on tiers
+                // without a landmark set.
                 if data.cfg.max_landmarks > 0 {
                     st.set_bound(data.cfg.max_landmarks, data.cfg.eviction, data.seeded);
                     st.reserve(
@@ -1151,6 +1190,7 @@ impl StreamEntry {
             ingest_seq: data.ingest_seq,
             last_publish: Instant::now(),
             restored: true,
+            evictions_since_audit: 0,
         });
         if entry.state.is_some() {
             entry.refresh_gauges();
@@ -2559,6 +2599,13 @@ impl StreamRouter {
             });
             snap.per_stream.extend(rollup.gauges);
         }
+        // Shadow-tier divergence rolls up as a pool-wide max: one bad
+        // sketch anywhere is what the gauge exists to surface.
+        snap.max_divergence = snap
+            .per_stream
+            .iter()
+            .filter_map(|g| g.divergence)
+            .fold(None, |acc: Option<f64>, d| Some(acc.map_or(d, |a| a.max(d))));
         snap.ingest_p50_us = ingest.percentile_ns(0.50) / 1e3;
         snap.ingest_p99_us = ingest.percentile_ns(0.99) / 1e3;
         snap.ingest_mean_us = ingest.mean_ns() / 1e3;

@@ -4,14 +4,23 @@
 //! worker's FIFO — reads serialized against ingests, so read throughput
 //! scaled with *shard count*, not cores. This module decouples them:
 //! the worker periodically captures an immutable [`ProjectionSnapshot`]
-//! of the stream's eigensystem (top-r basis copy, eigenvalues, the
-//! cached centering sums of the O(m·r) projection, retained landmark
-//! data, shared kernel handle) and publishes it through a
+//! of the stream's engine and publishes it through a
 //! [`SnapshotCell`] — a hand-rolled arc-swap: an `AtomicU64` epoch next
 //! to a rarely-written `RwLock<Arc<ProjectionSnapshot>>`. Readers that
 //! keep a [`ProjectScratch`] cache the `Arc` keyed by (cell, epoch), so
 //! the steady-state read is one atomic epoch load + an `Arc` clone —
 //! no lock, no queue, no worker involvement at all.
+//!
+//! Since the engine-tier seam ([`super::engine`]) a snapshot is
+//! tier-shaped: the **exact** kind carries the top-r basis copy,
+//! eigenvalues, cached centering sums and retained landmark data (the
+//! O(m·r) kernel-space projection); the **rff** kind carries the
+//! (cheaply cloned) random-feature map, the running feature mean and
+//! the sketch basis (the O(D·r) feature-space projection). Both kinds
+//! serve the same `project`/`project_many_into` surface, so the router
+//! read path is tier-blind. Construction goes through
+//! [`super::engine::StreamState::capture`] — this module knows no
+//! concrete engine type.
 //!
 //! # Freshness contract
 //!
@@ -29,106 +38,144 @@
 //! # Batched projection
 //!
 //! [`ProjectionSnapshot::project_many_into`] scores `b` queries in one
-//! pass: the b×m kernel block via [`crate::kernels::kernel_rows_into`]
-//! (one GEMM + entry map for dot-product/distance kernels), then ONE
-//! (b×m)·(m×r) GEMM against the captured basis. Mean-adjusted centering
-//! folds into a per-entry correction using the captured per-component
-//! sums `uᵀK𝟙` and `uᵀ𝟙` — algebraically identical to the worker path
-//! (`k_y − K𝟙/m − mean(k_y)·𝟙 + Σ/m²·𝟙` dotted with `u`), without ever
-//! materializing a centered column.
+//! pass. Exact kind: the b×m kernel block via
+//! [`crate::kernels::kernel_rows_into`] (one GEMM + entry map for
+//! dot-product/distance kernels), then ONE (b×m)·(m×r) GEMM against the
+//! captured basis; mean-adjusted centering folds into a per-entry
+//! correction using the captured per-component sums `uᵀK𝟙` and `uᵀ𝟙` —
+//! algebraically identical to the worker path without ever
+//! materializing a centered column. Rff kind: the b×D feature block
+//! (one `Y·Ωᵀ` GEMM + cosine map), mean-centered, then ONE (b×D)·(D×r)
+//! GEMM against the sketch basis — no 1/√λ rescaling (see
+//! [`crate::rff`] for the Gram/covariance bridge).
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
 
 use crate::kernels::{kernel_rows_into, Kernel, KernelBlockScratch};
-use crate::kpca::IncrementalKpca;
 use crate::linalg::{matmul_into_buf, MatView, MatViewMut};
 use crate::rankone::ensure_f64;
+use crate::rff::RffMap;
+
+/// Tier-specific payload of a snapshot. Private: readers only see the
+/// uniform projection surface.
+enum SnapKind {
+    Exact {
+        /// Basis copy, `m × r` row-major: `basis[j·r + c]` is component
+        /// `c`'s weight on retained example `j` (columns reordered so
+        /// the top component is column 0, unlike the ascending live
+        /// basis).
+        basis: Vec<f64>,
+        /// Per-component `uᵀ(K𝟙)` over the captured row sums (empty
+        /// when unadjusted).
+        uk1: Vec<f64>,
+        /// Per-component `uᵀ𝟙` (empty when unadjusted).
+        u1: Vec<f64>,
+        /// `Σₘ = 𝟙ᵀKₘ𝟙` at capture.
+        s: f64,
+        /// Retained landmark data, `m × dim` row-major.
+        x: Vec<f64>,
+        kernel: Arc<dyn Kernel>,
+    },
+    Rff {
+        /// The seeded feature map (ω/b tables behind `Arc`s — cloning
+        /// into the snapshot is O(1)).
+        map: RffMap,
+        /// Running feature mean at capture (`features` long; zeros
+        /// when unadjusted).
+        mu: Vec<f64>,
+        /// Sketch basis copy, `features × r` row-major (columns = unit
+        /// right singular vectors, top first).
+        basis: Vec<f64>,
+    },
+}
+
+/// Everything [`super::engine::capture_exact`] hands over to build an
+/// exact-kind snapshot. Crate-internal: the capture loop lives at the
+/// engine seam, the memory layout lives here.
+pub(crate) struct ExactSnapshotParts {
+    pub m: usize,
+    pub dim: usize,
+    pub mean_adjust: bool,
+    pub r: usize,
+    /// Eigenvalues, DESCENDING, length `r`.
+    pub vals: Vec<f64>,
+    /// `m × r` row-major basis, top component first.
+    pub basis: Vec<f64>,
+    pub uk1: Vec<f64>,
+    pub u1: Vec<f64>,
+    pub s: f64,
+    pub x: Vec<f64>,
+    pub kernel: Arc<dyn Kernel>,
+}
 
 /// Immutable point-in-time copy of everything a projection needs,
 /// published by the owning shard worker, shared read-only by any number
-/// of reader threads. `m`, the basis and the centering sums are
-/// mutually consistent — they were captured atomically (the worker owns
-/// the eigensystem exclusively between commands).
+/// of reader threads. The captured fields are mutually consistent —
+/// they were captured atomically (the worker owns the engine
+/// exclusively between commands).
 pub struct ProjectionSnapshot {
     /// Publication counter (1-based; assigned by [`SnapshotCell`]).
     epoch: u64,
-    /// Points in the eigensystem at capture.
+    /// Points in the engine at capture (landmarks for the exact tier,
+    /// absorbed points for the sketch).
     m: usize,
     dim: usize,
     mean_adjust: bool,
-    /// Components captured (`min(snapshot_r, m)`; full basis when the
-    /// config leaves `snapshot_r` at 0).
+    /// Components captured (`min(snapshot_r, available)`; everything
+    /// available when the config leaves `snapshot_r` at 0).
     r: usize,
-    /// Eigenvalues, DESCENDING (index 0 = top component), length `r`.
+    /// Eigenvalue estimates, DESCENDING (index 0 = top component),
+    /// length `r`.
     vals: Vec<f64>,
-    /// Basis copy, `m × r` row-major: `basis[j·r + c]` is component
-    /// `c`'s weight on retained example `j` (columns reordered so the
-    /// top component is column 0, unlike the ascending live basis).
-    basis: Vec<f64>,
-    /// Per-component `uᵀ(K𝟙)` over the captured row sums (empty when
-    /// unadjusted).
-    uk1: Vec<f64>,
-    /// Per-component `uᵀ𝟙` (empty when unadjusted).
-    u1: Vec<f64>,
-    /// `Σₘ = 𝟙ᵀKₘ𝟙` at capture.
-    s: f64,
-    /// Retained landmark data, `m × dim` row-major.
-    x: Vec<f64>,
-    kernel: Arc<dyn Kernel>,
+    kind: SnapKind,
 }
 
 impl ProjectionSnapshot {
-    /// Capture the current eigensystem (`r_limit` top components; 0 =
-    /// all). Returns `None` for a borrowed-kernel state — coordinator
-    /// streams always own their kernel through an `Arc`, so the worker
-    /// never sees that.
-    pub fn capture(state: &IncrementalKpca<'_>, r_limit: usize) -> Option<ProjectionSnapshot> {
-        let kernel = state.kernel_arc()?;
-        let m = state.len();
-        let dim = state.dim();
-        let n = state.vals.len();
-        let r = if r_limit == 0 { n } else { r_limit.min(n) };
-        let view = state.vecs.view();
-        let mut vals = Vec::with_capacity(r);
-        let mut basis = vec![0.0; m * r];
-        for c in 0..r {
-            // Live eigenpairs are ascending; the snapshot stores the
-            // top component first so `r_eff` at query time is a prefix.
-            let idx = n - 1 - c;
-            vals.push(state.vals[idx]);
-            for j in 0..m {
-                basis[j * r + c] = view[(j, idx)];
-            }
-        }
-        let (s, k1) = state.centering_sums();
-        let (mut uk1, mut u1) = (Vec::new(), Vec::new());
-        if state.mean_adjust {
-            uk1 = vec![0.0; r];
-            u1 = vec![0.0; r];
-            for j in 0..m {
-                let row = &basis[j * r..(j + 1) * r];
-                let k1j = k1[j];
-                for c in 0..r {
-                    uk1[c] += row[c] * k1j;
-                    u1[c] += row[c];
-                }
-            }
-        }
-        Some(ProjectionSnapshot {
+    /// Assemble an exact-kind snapshot (see
+    /// [`super::engine::capture_exact`] for the capture loop).
+    pub(crate) fn from_exact(p: ExactSnapshotParts) -> ProjectionSnapshot {
+        ProjectionSnapshot {
             epoch: 0, // assigned by SnapshotCell::publish
+            m: p.m,
+            dim: p.dim,
+            mean_adjust: p.mean_adjust,
+            r: p.r,
+            vals: p.vals,
+            kind: SnapKind::Exact {
+                basis: p.basis,
+                uk1: p.uk1,
+                u1: p.u1,
+                s: p.s,
+                x: p.x,
+                kernel: p.kernel,
+            },
+        }
+    }
+
+    /// Assemble an rff-kind snapshot from the sketch's
+    /// [`crate::rff::RffKpca::snapshot_parts`]: `basis` is
+    /// `features × r` row-major with `r = vals.len()`.
+    pub(crate) fn from_rff(
+        map: RffMap,
+        mu: Vec<f64>,
+        basis: Vec<f64>,
+        vals: Vec<f64>,
+        m: usize,
+        dim: usize,
+        mean_adjust: bool,
+    ) -> ProjectionSnapshot {
+        let r = vals.len();
+        debug_assert_eq!(basis.len(), map.features() * r);
+        ProjectionSnapshot {
+            epoch: 0,
             m,
             dim,
-            mean_adjust: state.mean_adjust,
+            mean_adjust,
             r,
             vals,
-            basis,
-            uk1,
-            u1,
-            s,
-            x: state.data_flat().to_vec(),
-            kernel,
-        })
+            kind: SnapKind::Rff { map, mu, basis },
+        }
     }
 
     /// Publication epoch (1-based, monotonic per stream).
@@ -136,7 +183,7 @@ impl ProjectionSnapshot {
         self.epoch
     }
 
-    /// Eigensystem size at capture.
+    /// Engine size at capture.
     pub fn m(&self) -> usize {
         self.m
     }
@@ -150,10 +197,25 @@ impl ProjectionSnapshot {
         self.r
     }
 
+    /// Which tier captured this snapshot (`"exact"` or `"rff"`; a
+    /// shadow stream serves exact-kind snapshots).
+    pub fn tier_name(&self) -> &'static str {
+        match &self.kind {
+            SnapKind::Exact { .. } => "exact",
+            SnapKind::Rff { .. } => "rff",
+        }
+    }
+
     /// Bytes resident in the snapshot's owned buffers.
     pub fn bytes_resident(&self) -> usize {
-        std::mem::size_of::<f64>()
-            * (self.vals.len() + self.basis.len() + self.uk1.len() + self.u1.len() + self.x.len())
+        let f64s = self.vals.len()
+            + match &self.kind {
+                SnapKind::Exact { basis, uk1, u1, x, .. } => {
+                    basis.len() + uk1.len() + u1.len() + x.len()
+                }
+                SnapKind::Rff { mu, basis, .. } => mu.len() + basis.len(),
+            };
+        std::mem::size_of::<f64>() * f64s
     }
 
     /// Score `b` queries (`ys` is `b × dim` row-major) on the top
@@ -161,10 +223,11 @@ impl ProjectionSnapshot {
     /// row-major), reusing `scratch` so the warm path never allocates.
     /// Returns the number of query rows scored.
     ///
-    /// Scores match the worker-side [`IncrementalKpca::project`] to
-    /// ≤1e-12: same centering, same `λ ≤ 1e-12 → 0` guard, only the
+    /// Exact-kind scores match the worker-side projection to ≤1e-12:
+    /// same centering, same `λ ≤ 1e-12 → 0` guard, only the
     /// floating-point summation order differs (blocked GEMM vs scalar
-    /// loop).
+    /// loop). Rff-kind scores likewise match the sketch engine's
+    /// worker-path projection.
     pub fn project_many_into(
         &self,
         ys: &[f64],
@@ -185,50 +248,84 @@ impl ProjectionSnapshot {
         if b == 0 || r_eff == 0 {
             return Ok(b);
         }
-        // b×m kernel block (blocked GEMM form for dot-product/distance
-        // kernels, scalar fallback otherwise).
-        kernel_rows_into(
-            self.kernel.as_ref(),
-            &self.x,
-            self.dim,
-            self.m,
-            ys,
-            b,
-            &mut scratch.block,
-            &mut scratch.kernel,
-        );
-        // One GEMM against the leading r_eff basis columns (stride r
-        // exposes the prefix without a copy).
-        let block = MatView::of_rows(&scratch.block, b, self.m);
-        let basis = MatView::new(&self.basis, self.m, r_eff, self.r);
-        let mut out_view = MatViewMut::new(out, b, r_eff, r_eff);
-        matmul_into_buf(block, basis, &mut out_view, &mut scratch.pack);
-        // Fold centering + 1/√λ scaling into one per-entry pass. The
-        // centered column is k_y + (Σ/m² − mean(k_y))·𝟙 − K𝟙/m, so its
-        // dot with u is the raw GEMM entry plus the captured
-        // per-component corrections.
-        let mf = self.m as f64;
-        let total_mean = if self.mean_adjust { self.s / (mf * mf) } else { 0.0 };
-        for i in 0..b {
-            let adjust = if self.mean_adjust {
-                let row = &scratch.block[i * self.m..(i + 1) * self.m];
-                let ky_mean = row.iter().sum::<f64>() / mf;
-                total_mean - ky_mean
-            } else {
-                0.0
-            };
-            let o = &mut out[i * r_eff..(i + 1) * r_eff];
-            for c in 0..r_eff {
-                let lam = self.vals[c];
-                if lam <= 1e-12 {
-                    o[c] = 0.0;
-                    continue;
+        match &self.kind {
+            SnapKind::Exact { basis, uk1, u1, s, x, kernel } => {
+                // b×m kernel block (blocked GEMM form for
+                // dot-product/distance kernels, scalar fallback
+                // otherwise).
+                kernel_rows_into(
+                    kernel.as_ref(),
+                    x,
+                    self.dim,
+                    self.m,
+                    ys,
+                    b,
+                    &mut scratch.block,
+                    &mut scratch.kernel,
+                );
+                // One GEMM against the leading r_eff basis columns
+                // (stride r exposes the prefix without a copy).
+                let block = MatView::of_rows(&scratch.block, b, self.m);
+                let basis_v = MatView::new(basis, self.m, r_eff, self.r);
+                let mut out_view = MatViewMut::new(out, b, r_eff, r_eff);
+                matmul_into_buf(block, basis_v, &mut out_view, &mut scratch.pack);
+                // Fold centering + 1/√λ scaling into one per-entry
+                // pass. The centered column is
+                // k_y + (Σ/m² − mean(k_y))·𝟙 − K𝟙/m, so its dot with u
+                // is the raw GEMM entry plus the captured
+                // per-component corrections.
+                let mf = self.m as f64;
+                let total_mean = if self.mean_adjust { s / (mf * mf) } else { 0.0 };
+                for i in 0..b {
+                    let adjust = if self.mean_adjust {
+                        let row = &scratch.block[i * self.m..(i + 1) * self.m];
+                        let ky_mean = row.iter().sum::<f64>() / mf;
+                        total_mean - ky_mean
+                    } else {
+                        0.0
+                    };
+                    let o = &mut out[i * r_eff..(i + 1) * r_eff];
+                    for c in 0..r_eff {
+                        let lam = self.vals[c];
+                        if lam <= 1e-12 {
+                            o[c] = 0.0;
+                            continue;
+                        }
+                        let mut dot = o[c];
+                        if self.mean_adjust {
+                            dot += adjust * u1[c] - uk1[c] / mf;
+                        }
+                        o[c] = dot / lam.sqrt();
+                    }
                 }
-                let mut dot = o[c];
+            }
+            SnapKind::Rff { map, mu, basis } => {
+                // b×D feature block: one Y·Ωᵀ GEMM + the cosine map.
+                map.map_block_into(ys, b, &mut scratch.feat, &mut scratch.pack);
+                let d = map.features();
                 if self.mean_adjust {
-                    dot += adjust * self.u1[c] - self.uk1[c] / mf;
+                    for i in 0..b {
+                        let row = &mut scratch.feat[i * d..(i + 1) * d];
+                        for (v, m) in row.iter_mut().zip(mu) {
+                            *v -= m;
+                        }
+                    }
                 }
-                o[c] = dot / lam.sqrt();
+                // One GEMM against the sketch basis; scores are
+                // vₖᵀ(z(y)−μ) directly — no 1/√λ (see crate::rff).
+                let block = MatView::of_rows(&scratch.feat, b, d);
+                let basis_v = MatView::new(basis, d, r_eff, self.r);
+                let mut out_view = MatViewMut::new(out, b, r_eff, r_eff);
+                matmul_into_buf(block, basis_v, &mut out_view, &mut scratch.pack);
+                // Collapsed components read as 0, same guard as exact.
+                for i in 0..b {
+                    let o = &mut out[i * r_eff..(i + 1) * r_eff];
+                    for c in 0..r_eff {
+                        if self.vals[c] <= 1e-12 {
+                            o[c] = 0.0;
+                        }
+                    }
+                }
             }
         }
         Ok(b)
@@ -405,11 +502,13 @@ pub struct ProjectScratch {
     cached_epoch: u64,
     cached_cell: Option<Arc<SnapshotCell>>,
     cached: Option<Arc<ProjectionSnapshot>>,
-    /// b×m kernel block.
+    /// b×m kernel block (exact-kind snapshots).
     block: Vec<f64>,
+    /// b×D feature block (rff-kind snapshots).
+    feat: Vec<f64>,
     /// Row-norm scratch of the blocked kernel evaluation.
     kernel: KernelBlockScratch,
-    /// Packing panels of the `block · basis` projection GEMM.
+    /// Packing panels of the projection GEMMs.
     pack: crate::linalg::PackBuffers,
     /// Growth events on the caller-owned `out` buffer.
     out_reallocs: u64,
@@ -445,7 +544,7 @@ impl ProjectScratch {
     /// Bytes resident in the scratch buffers (cached snapshot excluded
     /// — it is shared, not per-reader).
     pub fn bytes_resident(&self) -> usize {
-        std::mem::size_of::<f64>() * self.block.capacity()
+        std::mem::size_of::<f64>() * (self.block.capacity() + self.feat.capacity())
             + self.kernel.bytes_resident()
             + self.pack.bytes_resident()
     }
@@ -459,9 +558,12 @@ impl ProjectScratch {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::engine::capture_exact;
     use crate::data::synthetic::yeast_like;
     use crate::kernels::{Linear, Polynomial, Rbf};
+    use crate::kpca::IncrementalKpca;
     use crate::linalg::Mat;
+    use crate::rff::RffKpca;
 
     fn streamed_state(
         kernel: Arc<dyn Kernel>,
@@ -489,9 +591,10 @@ mod tests {
             for adjust in [true, false] {
                 let (st, x) = streamed_state(kernel.clone(), 20, 8, adjust);
                 let cell = Arc::new(SnapshotCell::new());
-                cell.publish(ProjectionSnapshot::capture(&st, 0).unwrap());
+                cell.publish(capture_exact(&st, 0).unwrap());
                 let snap = cell.load().unwrap();
                 assert_eq!(snap.m(), st.len());
+                assert_eq!(snap.tier_name(), "exact");
                 for probe_row in [0usize, 5, 19] {
                     let y = x.row(probe_row);
                     let want = st.project(y, 6);
@@ -513,11 +616,10 @@ mod tests {
     fn batched_projection_matches_per_point() {
         let kernel: Arc<dyn Kernel> = Arc::new(Rbf { sigma: 1.1 });
         let (st, x) = streamed_state(kernel, 18, 6, true);
-        let snap_raw = ProjectionSnapshot::capture(&st, 0).unwrap();
+        let snap_raw = capture_exact(&st, 0).unwrap();
         let cell = Arc::new(SnapshotCell::new());
         cell.publish(snap_raw);
         let snap = cell.load().unwrap();
-        let dim = st.dim();
         let b = 7;
         let ys: Vec<f64> =
             (0..b).flat_map(|i| x.row(i).iter().copied().collect::<Vec<_>>()).collect();
@@ -540,11 +642,48 @@ mod tests {
     }
 
     #[test]
+    fn rff_snapshot_matches_engine_projection() {
+        // The sketched tier's snapshot must serve the same scores as
+        // its worker-path projection — the rff analogue of
+        // `snapshot_matches_worker_projection`.
+        let ds = yeast_like(60, 7);
+        let dim = ds.dim();
+        let mut st = RffKpca::new(dim, 64, 6, 1.5, 99, true).unwrap();
+        for i in 0..60 {
+            st.push(ds.x.row(i)).unwrap();
+        }
+        let (map, mu, basis, vals) = st.snapshot_parts(0).unwrap();
+        let snap = ProjectionSnapshot::from_rff(map, mu, basis, vals, st.len(), dim, true);
+        assert_eq!(snap.tier_name(), "rff");
+        assert_eq!(snap.m(), 60);
+        let cell = Arc::new(SnapshotCell::new());
+        cell.publish(snap);
+        let snap = cell.load().unwrap();
+        let mut scratch = ProjectScratch::new();
+        let mut out = Vec::new();
+        let b = 5;
+        let ys: Vec<f64> =
+            (0..b).flat_map(|i| ds.x.row(i).iter().copied().collect::<Vec<_>>()).collect();
+        snap.project_many_into(&ys, 4, &mut scratch, &mut out).unwrap();
+        for i in 0..b {
+            let want = st.project(ds.x.row(i), 4);
+            for c in 0..want.len() {
+                assert!(
+                    (out[i * 4 + c] - want[c]).abs() < 1e-12,
+                    "row {i} comp {c}: snapshot {} vs engine {}",
+                    out[i * 4 + c],
+                    want[c]
+                );
+            }
+        }
+    }
+
+    #[test]
     fn top_r_capture_is_a_prefix_of_full_capture() {
         let kernel: Arc<dyn Kernel> = Arc::new(Rbf { sigma: 1.0 });
         let (st, x) = streamed_state(kernel, 16, 6, true);
-        let full = ProjectionSnapshot::capture(&st, 0).unwrap();
-        let top3 = ProjectionSnapshot::capture(&st, 3).unwrap();
+        let full = capture_exact(&st, 0).unwrap();
+        let top3 = capture_exact(&st, 3).unwrap();
         assert_eq!(top3.components(), 3);
         let y = x.row(2);
         let a = full.project(y, 3).unwrap();
@@ -560,7 +699,7 @@ mod tests {
         let kernel: Arc<dyn Kernel> = Arc::new(Rbf { sigma: 1.2 });
         let (st, x) = streamed_state(kernel, 20, 8, true);
         let cell = Arc::new(SnapshotCell::new());
-        cell.publish(ProjectionSnapshot::capture(&st, 0).unwrap());
+        cell.publish(capture_exact(&st, 0).unwrap());
         let mut scratch = ProjectScratch::new();
         let mut out = Vec::new();
         let ys: Vec<f64> =
@@ -583,8 +722,8 @@ mod tests {
         let cell = Arc::new(SnapshotCell::new());
         assert_eq!(cell.epoch(), 0);
         assert!(cell.load().is_err(), "unpublished cell must error, not panic");
-        assert_eq!(cell.publish(ProjectionSnapshot::capture(&st, 0).unwrap()), 1);
-        assert_eq!(cell.publish(ProjectionSnapshot::capture(&st, 0).unwrap()), 2);
+        assert_eq!(cell.publish(capture_exact(&st, 0).unwrap()), 1);
+        assert_eq!(cell.publish(capture_exact(&st, 0).unwrap()), 2);
         assert_eq!(cell.epoch(), 2);
         let mut scratch = ProjectScratch::new();
         let before = cell.reads();
@@ -610,8 +749,8 @@ mod tests {
         let (st_b, _) = streamed_state(kernel, 16, 6, false);
         let cell_a = Arc::new(SnapshotCell::new());
         let cell_b = Arc::new(SnapshotCell::new());
-        cell_a.publish(ProjectionSnapshot::capture(&st_a, 0).unwrap());
-        cell_b.publish(ProjectionSnapshot::capture(&st_b, 0).unwrap());
+        cell_a.publish(capture_exact(&st_a, 0).unwrap());
+        cell_b.publish(capture_exact(&st_b, 0).unwrap());
         assert_eq!(cell_a.epoch(), cell_b.epoch());
         let mut scratch = ProjectScratch::new();
         assert_eq!(cell_a.load_cached(&mut scratch).unwrap().m(), 12);
@@ -623,7 +762,7 @@ mod tests {
     fn malformed_queries_error_without_panicking() {
         let kernel: Arc<dyn Kernel> = Arc::new(Rbf { sigma: 1.0 });
         let (st, _) = streamed_state(kernel, 12, 6, true);
-        let snap_raw = ProjectionSnapshot::capture(&st, 0).unwrap();
+        let snap_raw = capture_exact(&st, 0).unwrap();
         let cell = Arc::new(SnapshotCell::new());
         cell.publish(snap_raw);
         let snap = cell.load().unwrap();

@@ -74,10 +74,19 @@ pub enum EvictionPolicy {
     /// Evict the landmark with the smallest ridge leverage score
     /// `ℓᵢ = Σ_c U[i,c]² λ_c/(λ_c + μ)`, `μ = trace⁺/m` — the point the
     /// current eigensystem can best afford to lose (Nyström column
-    /// sampling literature). Requires flushing any pending rotation
-    /// before scoring.
+    /// sampling literature). The full `O(m²)` rescore is batched to
+    /// every [`LEV_REFRESH_EVERY`]th eviction; in between, cached
+    /// scores are maintained incrementally (see
+    /// [`IncrementalKpca::leverage_score_row`]).
     LeverageScore,
 }
+
+/// Full-rescore cadence of [`EvictionPolicy::LeverageScore`]: the
+/// `O(m²)` score vector is recomputed every this-many evictions (keyed
+/// off the persisted eviction counter — WAL replay from a checkpoint
+/// lands on the same refresh schedule). Between refreshes a victim
+/// costs one `O(m·n)` row score for the newly accepted landmark.
+pub const LEV_REFRESH_EVERY: usize = 8;
 
 impl EvictionPolicy {
     /// Stable name for CLI flags and config display.
@@ -577,6 +586,33 @@ impl<'k> IncrementalKpca<'k> {
         self.leverage_scores_flushed(out);
     }
 
+    /// Ridge leverage score of the single retained landmark `i` — the
+    /// same `ℓᵢ = Σ_c U[i,c]² λ⁺_c/(λ⁺_c + μ)` as
+    /// [`IncrementalKpca::leverage_scores`], but `O(m·n)` for one row
+    /// and read *through* any pending blocked rotation (no flush). The
+    /// eviction path appends the newly accepted landmark's score with
+    /// this between full rescores.
+    pub fn leverage_score_row(&mut self, i: usize) -> f64 {
+        assert!(i < self.m, "leverage_score_row index out of range");
+        let mut erow = std::mem::take(&mut self.scratch.erow);
+        effective_row_into(&self.vecs, &self.ws, i, &mut erow);
+        let trace_pos: f64 = self.vals.iter().map(|l| l.max(0.0)).sum();
+        let score = if trace_pos <= 0.0 {
+            0.0
+        } else {
+            let mu = trace_pos / self.m as f64;
+            erow.iter()
+                .zip(&self.vals)
+                .map(|(e, &lam)| {
+                    let lam = lam.max(0.0);
+                    e * e * lam / (lam + mu)
+                })
+                .sum()
+        };
+        self.scratch.erow = erow;
+        score
+    }
+
     /// [`IncrementalKpca::leverage_scores`] on an already-flushed basis.
     fn leverage_scores_flushed(&self, out: &mut Vec<f64>) {
         debug_assert!(!self.ws.pending_rotation(), "leverage scores on a stale basis");
@@ -777,6 +813,15 @@ impl<'k> IncrementalKpca<'k> {
     /// its (pre-removal) position; `Ok(None)` when the state fits.
     /// Callers loop until `None` — an over-cap restored state converges
     /// one landmark per accept.
+    ///
+    /// Leverage scoring is batched: the full `O(m²)` rescore runs only
+    /// every [`LEV_REFRESH_EVERY`] evictions (keyed off the persisted
+    /// eviction counter, so WAL replay hits the same refresh points);
+    /// between refreshes the cached scores survive — victims are
+    /// removed from the cache in lockstep — and only the newly accepted
+    /// landmark's `O(m·n)` row score is appended. Scores between
+    /// refreshes are therefore up to [`LEV_REFRESH_EVERY`] down-dates
+    /// stale; the eviction oracle suite bounds the resulting drift.
     fn enforce_bound_step(
         &mut self,
         engine: &dyn Rotate,
@@ -795,13 +840,23 @@ impl<'k> IncrementalKpca<'k> {
             EvictionPolicy::Uniform => self.protected + self.stats.evictions % free,
             EvictionPolicy::LeverageScore => {
                 let mut lev = std::mem::take(&mut self.scratch.lev);
-                self.leverage_scores(engine, &mut lev);
+                // The cache is valid when it covers exactly the
+                // pre-accept landmark set (one short of m); anything
+                // else — cold start, restored state, multi-step
+                // convergence — forces a full rescore.
+                if self.stats.evictions % LEV_REFRESH_EVERY == 0 || lev.len() + 1 != self.m {
+                    self.leverage_scores(engine, &mut lev);
+                } else {
+                    lev.push(self.leverage_score_row(self.m - 1));
+                }
                 let mut j = self.protected;
                 for i in self.protected + 1..self.m {
                     if lev[i] < lev[j] {
                         j = i;
                     }
                 }
+                // Keep the cache in lockstep with the survivors.
+                lev.remove(j);
                 self.scratch.lev = lev;
                 j
             }

@@ -13,6 +13,7 @@ pub use batch::BatchKpca;
 pub use centering::{center_column, center_gram};
 pub use incremental::{
     BatchOutcome, BatchRotation, EvictionPolicy, IncrementalKpca, KpcaParts, KpcaStats,
+    LEV_REFRESH_EVERY,
 };
 pub use krr::IncrementalKrr;
 pub use projection::project_point;

@@ -161,6 +161,7 @@ pub mod kpca;
 pub mod linalg;
 pub mod nystrom;
 pub mod rankone;
+pub mod rff;
 pub mod runtime;
 pub mod secular;
 pub mod util;

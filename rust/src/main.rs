@@ -35,10 +35,15 @@
 //!                  `--eviction off|uniform|leverage`  (victim policy at the
 //!                                  cap; defaults to leverage when a cap is
 //!                                  set)
+//!                  `--tier exact|rff[:features[:sketch_r]]|shadow[:sample]`
+//!                                  (stream engine: the paper-exact
+//!                                  eigensystem, the fixed-memory RFF +
+//!                                  frequent-directions sketch, or both in
+//!                                  shadow with a live divergence gauge)
 
 use inkpca::coordinator::{
     Config, Coordinator, EngineConfig, EnginePolicy, FsyncPolicy, KernelConfig, PersistConfig,
-    ShardPool,
+    ShardPool, StreamTier,
 };
 use inkpca::data::{load, Dataset, SliceSource};
 use inkpca::experiments::{self, RunMode};
@@ -133,6 +138,10 @@ fn serve(args: &[String]) -> Result<(), String> {
         }
         None => None,
     };
+    let tier = match flag_value(args, "--tier") {
+        Some(spec) => StreamTier::parse(&spec)?,
+        None => StreamTier::Exact,
+    };
     let cfg = Config {
         kernel: KernelConfig::RbfMedian,
         mean_adjust: !args.iter().any(|a| a == "--no-adjust"),
@@ -153,6 +162,7 @@ fn serve(args: &[String]) -> Result<(), String> {
         persist,
         max_landmarks,
         eviction,
+        tier,
     };
     let mut ds = load(&dataset, n, 42)?;
     ds.standardize();

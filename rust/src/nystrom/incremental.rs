@@ -118,6 +118,12 @@ impl<'k> IncrementalNystrom<'k> {
     }
 
     /// One bound-enforcement step (see [`IncrementalNystrom::set_bound`]).
+    ///
+    /// Leverage rescoring follows the same batched cadence as the KPCA
+    /// layer ([`crate::kpca::LEV_REFRESH_EVERY`]): the full `O(m²)`
+    /// score vector refreshes every k-th eviction; between refreshes
+    /// the cache sheds victims in lockstep with `kmn`/`subset` and only
+    /// the newly added landmark's row score is computed.
     fn enforce_bound_step(&mut self, engine: &dyn Rotate) -> Result<Option<usize>, String> {
         if self.max_landmarks == 0
             || self.eviction == EvictionPolicy::Off
@@ -132,13 +138,20 @@ impl<'k> IncrementalNystrom<'k> {
             EvictionPolicy::Uniform => self.protected + self.inc.evictions() % free,
             EvictionPolicy::LeverageScore => {
                 let mut lev = std::mem::take(&mut self.lev_buf);
-                self.inc.leverage_scores(engine, &mut lev);
+                if self.inc.evictions() % crate::kpca::LEV_REFRESH_EVERY == 0
+                    || lev.len() + 1 != self.m()
+                {
+                    self.inc.leverage_scores(engine, &mut lev);
+                } else {
+                    lev.push(self.inc.leverage_score_row(self.m() - 1));
+                }
                 let mut c = self.protected;
                 for i in self.protected + 1..self.m() {
                     if lev[i] < lev[c] {
                         c = i;
                     }
                 }
+                lev.remove(c);
                 self.lev_buf = lev;
                 c
             }
@@ -514,6 +527,33 @@ mod tests {
         let batch = BatchNystrom::fit(&kern, &ds.x, &inys.subset).unwrap();
         let diff = inys.approx_gram().max_abs_diff(&batch.approx_gram());
         assert!(diff < 1e-6, "diff {diff}");
+    }
+
+    /// Enough leverage evictions to straddle several full-rescore
+    /// refresh points (`LEV_REFRESH_EVERY`): the cached-score fast path
+    /// keeps `kmn`/`subset`/eigensystem in lockstep and the bounded
+    /// subset still reproduces a fresh batch fit of the survivors.
+    #[test]
+    fn leverage_cache_cadence_keeps_views_lockstep() {
+        let ds = yeast_like(40, 24);
+        let kern = Rbf { sigma: 1.2 };
+        let mut inys = IncrementalNystrom::new(&kern, ds.x.clone()).unwrap();
+        inys.set_bound(8, crate::kpca::EvictionPolicy::LeverageScore, 3);
+        for m in 0..ds.n() {
+            inys.add_point(m).unwrap();
+            assert_eq!(inys.kmn.rows(), inys.subset.len(), "views desynced at {m}");
+            assert_eq!(inys.inc.len(), inys.subset.len(), "eigensystem desynced at {m}");
+        }
+        assert_eq!(inys.m(), 8);
+        assert!(
+            inys.evictions() > 3 * crate::kpca::LEV_REFRESH_EVERY,
+            "run too short to exercise the cadence: {} evictions",
+            inys.evictions()
+        );
+        assert_eq!(&inys.subset[..3], &[0, 1, 2], "protected prefix evicted");
+        let batch = BatchNystrom::fit(&kern, &ds.x, &inys.subset).unwrap();
+        let diff = inys.approx_gram().max_abs_diff(&batch.approx_gram());
+        assert!(diff < 1e-6, "bounded subset vs fresh fit diff {diff}");
     }
 
     #[test]

@@ -1,0 +1,803 @@
+//! Random Fourier features + frequent directions: the sketched KPCA
+//! tier (Ghashami, Perry & Phillips, *Streaming Kernel PCA*,
+//! 1512.05059).
+//!
+//! The exact engine ([`crate::kpca::IncrementalKpca`]) pays O(m·r) per
+//! update and O(m²) memory in the landmark count m. This module tracks
+//! the same top-r kernel principal subspace in **fixed** memory with
+//! per-update cost independent of m, in two moves:
+//!
+//! 1. **Random Fourier features** ([`RffMap`]): for the RBF kernel
+//!    `k(x, y) = exp(−‖x−y‖²/σ)` (the repo's parameterization — spectral
+//!    measure `ω ~ N(0, (2/σ)·I)`), the explicit D-dimensional map
+//!    `z_i(x) = √(2/D)·cos(ωᵢᵀx + bᵢ)` satisfies
+//!    `E[z(x)ᵀz(y)] = k(x, y)`. Kernel PCA on the stream becomes
+//!    *linear* PCA on the feature stream `z(x₁), z(x₂), …`. The map is
+//!    seeded ([`crate::util::Rng`]), so a checkpoint only persists the
+//!    seed — restore regenerates bit-identical `ω`/`b`.
+//! 2. **Frequent directions** ([`RffKpca`]): a 2r×D sketch `B` absorbs
+//!    feature rows one at a time; when full, one 2r×2r eigensolve
+//!    shrinks every retained direction by the (r+1)-th energy δ and
+//!    keeps the top r rows. `BᵀB ⪯ ZᵀZ ⪯ BᵀB + δₜₒₜ·I` — the classic
+//!    FD guarantee, inherited for the kernel Gram through the feature
+//!    map. Per-point cost is O(D·dim + D·r) amortized; the eigensolve
+//!    is O(r³ + r²·D) once every r points.
+//!
+//! Eigenvalue bridge: the Gram matrix `ZZᵀ` (what the exact engine
+//! diagonalizes) and the covariance `ZᵀZ` (what the sketch tracks)
+//! share nonzero eigenvalues, so the sketch's σ²ₖ estimate the exact
+//! tier's λₖ directly and [`RffKpca::project`] needs **no** 1/√λ
+//! rescaling: the exact score `uₖᵀk_y/√λₖ` corresponds to `vₖᵀz(y)`
+//! with `vₖ` the unit right singular vector.
+//!
+//! Mean adjustment is streamed: each arriving feature vector is
+//! centered against the running mean *before* it enters the sketch
+//! (`μ ← μ + z_c/n` afterwards). This is the standard streaming
+//! approximation — early points are centered against a younger mean —
+//! and is covered by the documented sketch tolerance in
+//! `tests/tiers.rs`.
+
+use std::f64::consts::PI;
+use std::sync::Arc;
+
+use crate::kpca::{BatchOutcome, KpcaStats};
+use crate::linalg::{eigh, matmul_nt_into_buf, Mat, MatView, MatViewMut, PackBuffers};
+use crate::util::Rng;
+
+/// Floor under which a sketch singular value is treated as zero.
+const VAL_FLOOR: f64 = 1e-12;
+
+/// A seeded random Fourier feature map for the RBF kernel
+/// `exp(−‖x−y‖²/σ)`.
+///
+/// Cheap to clone (the `ω`/`b` tables are behind `Arc`s) so a
+/// published [`crate::coordinator::ProjectionSnapshot`] can carry the
+/// map without copying `D·dim` doubles per publish.
+#[derive(Clone)]
+pub struct RffMap {
+    dim: usize,
+    features: usize,
+    sigma: f64,
+    seed: u64,
+    /// Frequencies, `features × dim` row-major.
+    omega: Arc<Vec<f64>>,
+    /// Phases, one per feature.
+    phases: Arc<Vec<f64>>,
+    /// `√(2/D)` amplitude.
+    scale: f64,
+}
+
+impl RffMap {
+    /// Draw the map for `exp(−‖x−y‖²/σ)`. Deterministic in `seed`:
+    /// all `features·dim` frequencies are drawn first, then the
+    /// `features` phases — the generation order is part of the
+    /// checkpoint contract (restore regenerates the same map from the
+    /// persisted seed).
+    pub fn new(dim: usize, features: usize, sigma: f64, seed: u64) -> Result<RffMap, String> {
+        if dim == 0 {
+            return Err("rff map needs dim >= 1".into());
+        }
+        if features == 0 {
+            return Err("rff map needs features >= 1".into());
+        }
+        if !(sigma.is_finite() && sigma > 0.0) {
+            return Err(format!("rff map needs a positive finite sigma, got {sigma}"));
+        }
+        let mut rng = Rng::new(seed);
+        let w = (2.0 / sigma).sqrt();
+        let mut omega = Vec::with_capacity(features * dim);
+        for _ in 0..features * dim {
+            omega.push(rng.normal() * w);
+        }
+        let mut phases = Vec::with_capacity(features);
+        for _ in 0..features {
+            phases.push(rng.range(0.0, 2.0 * PI));
+        }
+        let scale = (2.0 / features as f64).sqrt();
+        Ok(RffMap {
+            dim,
+            features,
+            sigma,
+            seed,
+            omega: Arc::new(omega),
+            phases: Arc::new(phases),
+            scale,
+        })
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn features(&self) -> usize {
+        self.features
+    }
+
+    pub fn sigma(&self) -> f64 {
+        self.sigma
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Map one point: `z[i] = √(2/D)·cos(ωᵢᵀx + bᵢ)`. `z` must hold
+    /// exactly `features` slots.
+    pub fn map_into(&self, x: &[f64], z: &mut [f64]) {
+        assert_eq!(x.len(), self.dim, "rff map: point dim mismatch");
+        assert_eq!(z.len(), self.features, "rff map: output len mismatch");
+        for (i, zi) in z.iter_mut().enumerate() {
+            let row = &self.omega[i * self.dim..(i + 1) * self.dim];
+            let mut acc = self.phases[i];
+            for (w, v) in row.iter().zip(x) {
+                acc += w * v;
+            }
+            *zi = self.scale * acc.cos();
+        }
+    }
+
+    /// Map a block of `b` points (flat row-major `b × dim`) into
+    /// `out` (`b × features` row-major): one `Y·Ωᵀ` GEMM through the
+    /// packed kernel, then the cosine transform in place.
+    pub fn map_block_into(
+        &self,
+        ys: &[f64],
+        b: usize,
+        out: &mut Vec<f64>,
+        pack: &mut PackBuffers,
+    ) {
+        assert_eq!(ys.len(), b * self.dim, "rff map: block shape mismatch");
+        out.clear();
+        out.resize(b * self.features, 0.0);
+        {
+            let yv = MatView::of_rows(ys, b, self.dim);
+            let ov = MatView::of_rows(&self.omega, self.features, self.dim);
+            let mut outv = MatViewMut::new(out, b, self.features, self.features);
+            matmul_nt_into_buf(yv, ov, &mut outv, pack);
+        }
+        for r in 0..b {
+            let row = &mut out[r * self.features..(r + 1) * self.features];
+            for (v, ph) in row.iter_mut().zip(self.phases.iter()) {
+                *v = self.scale * (*v + ph).cos();
+            }
+        }
+    }
+
+    /// Bytes resident in the frequency/phase tables.
+    pub fn bytes_resident(&self) -> usize {
+        (self.omega.capacity() + self.phases.capacity()) * std::mem::size_of::<f64>()
+    }
+}
+
+/// Everything an [`RffKpca`] needs to come back after a crash. The
+/// `ω`/`b` tables are *not* persisted — they regenerate from `seed`.
+#[derive(Clone, Debug)]
+pub struct RffParts {
+    pub seed: u64,
+    pub sigma: f64,
+    pub dim: usize,
+    pub features: usize,
+    pub sketch_r: usize,
+    pub mean_adjust: bool,
+    /// Points absorbed (seed included).
+    pub count: u64,
+    /// Running feature mean (`features`, all zeros when unadjusted).
+    pub mu: Vec<f64>,
+    /// Occupied sketch rows, flat row-major `brows × features`.
+    pub b: Vec<f64>,
+    pub brows: usize,
+    pub stats: KpcaStats,
+}
+
+/// The sketched engine: a frequent-directions sketch over the RFF
+/// feature stream. Fixed memory (`2r × D` sketch + `D`-dim mean),
+/// O(D·dim + D·r) amortized per point — independent of how many points
+/// the stream has absorbed.
+pub struct RffKpca {
+    map: RffMap,
+    sketch_r: usize,
+    /// Sketch row capacity, `2·sketch_r`.
+    ell: usize,
+    mean_adjust: bool,
+    count: u64,
+    mu: Vec<f64>,
+    /// Sketch rows, flat row-major `ell × features`; `brows` occupied.
+    b: Vec<f64>,
+    brows: usize,
+    /// Cached spectrum/basis of the current sketch (lazy; see
+    /// [`RffKpca::refresh_basis`]). `vals` descending σ², `basis`
+    /// `features × basis_k` row-major (columns = unit right singular
+    /// vectors).
+    vals: Vec<f64>,
+    basis: Vec<f64>,
+    basis_k: usize,
+    dirty: bool,
+    stats: KpcaStats,
+    shrinks: u64,
+    mask: Vec<bool>,
+    /// Feature-vector scratch.
+    z: Vec<f64>,
+    /// Shrink scratch (`sketch_r × features`).
+    newb: Vec<f64>,
+    pack: PackBuffers,
+}
+
+impl RffKpca {
+    pub fn new(
+        dim: usize,
+        features: usize,
+        sketch_r: usize,
+        sigma: f64,
+        seed: u64,
+        mean_adjust: bool,
+    ) -> Result<RffKpca, String> {
+        if sketch_r == 0 {
+            return Err("rff tier needs sketch_r >= 1".into());
+        }
+        if features < 2 * sketch_r {
+            return Err(format!(
+                "rff tier needs features >= 2*sketch_r (got D={features}, r={sketch_r})"
+            ));
+        }
+        let map = RffMap::new(dim, features, sigma, seed)?;
+        let ell = 2 * sketch_r;
+        Ok(RffKpca {
+            map,
+            sketch_r,
+            ell,
+            mean_adjust,
+            count: 0,
+            mu: vec![0.0; features],
+            b: vec![0.0; ell * features],
+            brows: 0,
+            vals: Vec::new(),
+            basis: Vec::new(),
+            basis_k: 0,
+            dirty: true,
+            stats: KpcaStats::default(),
+            shrinks: 0,
+            mask: Vec::new(),
+            z: vec![0.0; features],
+            newb: Vec::new(),
+            pack: PackBuffers::new(),
+        })
+    }
+
+    /// Rebuild from checkpoint parts; the feature map regenerates from
+    /// the persisted seed.
+    pub fn from_parts(p: RffParts) -> Result<RffKpca, String> {
+        let mut st = RffKpca::new(p.dim, p.features, p.sketch_r, p.sigma, p.seed, p.mean_adjust)?;
+        if p.mu.len() != p.features {
+            return Err("rff parts: mean length mismatch".into());
+        }
+        if p.brows > st.ell || p.b.len() != p.brows * p.features {
+            return Err("rff parts: sketch shape mismatch".into());
+        }
+        st.mu.copy_from_slice(&p.mu);
+        st.b[..p.b.len()].copy_from_slice(&p.b);
+        st.brows = p.brows;
+        st.count = p.count;
+        st.stats = p.stats;
+        st.dirty = true;
+        Ok(st)
+    }
+
+    pub fn to_parts(&self) -> RffParts {
+        RffParts {
+            seed: self.map.seed(),
+            sigma: self.map.sigma(),
+            dim: self.map.dim(),
+            features: self.map.features(),
+            sketch_r: self.sketch_r,
+            mean_adjust: self.mean_adjust,
+            count: self.count,
+            mu: self.mu.clone(),
+            b: self.b[..self.brows * self.map.features()].to_vec(),
+            brows: self.brows,
+            stats: self.stats,
+        }
+    }
+
+    pub fn map(&self) -> &RffMap {
+        &self.map
+    }
+
+    pub fn dim(&self) -> usize {
+        self.map.dim()
+    }
+
+    pub fn sketch_r(&self) -> usize {
+        self.sketch_r
+    }
+
+    pub fn mean_adjust(&self) -> bool {
+        self.mean_adjust
+    }
+
+    /// Points absorbed. The sketch holds *directions*, not landmarks —
+    /// unlike the exact tier this is not a resident-row count.
+    pub fn len(&self) -> usize {
+        usize::try_from(self.count).unwrap_or(usize::MAX)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    pub fn stats(&self) -> KpcaStats {
+        self.stats
+    }
+
+    /// Sketch shrink cycles performed (one per 2r absorbed rows).
+    pub fn shrinks(&self) -> u64 {
+        self.shrinks
+    }
+
+    pub fn last_batch_mask(&self) -> &[bool] {
+        &self.mask
+    }
+
+    /// Absorb one point: map to feature space, center against the
+    /// running mean, append to the sketch, shrink when full. Every
+    /// point is accepted — the sketch has no rank-deficiency exclusion.
+    pub fn push(&mut self, x: &[f64]) -> Result<bool, String> {
+        if x.len() != self.map.dim() {
+            return Err(format!(
+                "rff push: expected dim {}, got {}",
+                self.map.dim(),
+                x.len()
+            ));
+        }
+        let features = self.map.features();
+        let mut z = std::mem::take(&mut self.z);
+        self.map.map_into(x, &mut z);
+        self.count += 1;
+        if self.mean_adjust {
+            let n = self.count as f64;
+            for (zi, mi) in z.iter_mut().zip(self.mu.iter_mut()) {
+                *zi -= *mi;
+                *mi += *zi / n;
+            }
+        }
+        self.b[self.brows * features..(self.brows + 1) * features].copy_from_slice(&z);
+        self.brows += 1;
+        self.z = z;
+        self.dirty = true;
+        self.stats.accepted += 1;
+        self.stats.updates += 1;
+        if self.brows == self.ell {
+            self.shrink()?;
+        }
+        Ok(true)
+    }
+
+    /// Absorb a flat row-major batch. The per-batch mask mirrors the
+    /// exact tier's ([`crate::kpca::IncrementalKpca::last_batch_mask`]);
+    /// here it is all-true because the sketch excludes nothing.
+    pub fn push_batch(&mut self, xs: &[f64]) -> Result<BatchOutcome, String> {
+        let dim = self.map.dim();
+        if dim == 0 || xs.len() % dim != 0 {
+            return Err("rff push_batch: flat batch not a multiple of dim".into());
+        }
+        let b = xs.len() / dim;
+        self.mask.clear();
+        for p in 0..b {
+            self.push(&xs[p * dim..(p + 1) * dim])?;
+            self.mask.push(true);
+        }
+        Ok(BatchOutcome { accepted: b, excluded: 0 })
+    }
+
+    /// Frequent-directions shrink: eigendecompose the small Gram
+    /// `G = BBᵀ` (2r × 2r), subtract the (r+1)-th energy δ from every
+    /// direction, keep the top r re-scaled rows `√((σ²ₖ−δ)/σ²ₖ)·uₖᵀB`.
+    fn shrink(&mut self) -> Result<(), String> {
+        let features = self.map.features();
+        let n = self.brows;
+        let mut g = Mat::zeros(n, n);
+        {
+            let bv = MatView::of_rows(&self.b[..n * features], n, features);
+            let mut gv = g.view_mut();
+            matmul_nt_into_buf(bv, bv, &mut gv, &mut self.pack);
+        }
+        let eg = eigh(&g)?;
+        // Ascending values: the (r+1)-th largest energy sits at
+        // `n - 1 - sketch_r`.
+        let delta = eg.values[n - 1 - self.sketch_r].max(0.0);
+        self.newb.clear();
+        self.newb.resize(self.sketch_r * features, 0.0);
+        for t in 0..self.sketch_r {
+            let idx = n - 1 - t;
+            let lam = eg.values[idx];
+            if lam <= VAL_FLOOR {
+                continue;
+            }
+            let w = ((lam - delta).max(0.0) / lam).sqrt();
+            if w == 0.0 {
+                continue;
+            }
+            let dst = &mut self.newb[t * features..(t + 1) * features];
+            for j in 0..n {
+                let c = eg.vectors.row(j)[idx];
+                if c != 0.0 {
+                    let src = &self.b[j * features..(j + 1) * features];
+                    for (d, s) in dst.iter_mut().zip(src) {
+                        *d += c * s;
+                    }
+                }
+            }
+            for d in dst.iter_mut() {
+                *d *= w;
+            }
+        }
+        self.b[..self.sketch_r * features].copy_from_slice(&self.newb);
+        self.brows = self.sketch_r;
+        self.shrinks += 1;
+        self.stats.deflated += 1;
+        self.dirty = true;
+        Ok(())
+    }
+
+    /// Recompute the cached spectrum + projection basis from the
+    /// current sketch rows (one 2r×2r eigensolve + an O(r·D) scatter).
+    /// Lazy: gauges and pushes never pay for it, only capture /
+    /// project / `top_values` do, and only when the sketch changed.
+    /// Returns the number of usable components.
+    pub fn refresh_basis(&mut self) -> usize {
+        if !self.dirty {
+            return self.basis_k;
+        }
+        let features = self.map.features();
+        let n = self.brows;
+        if n == 0 {
+            self.vals.clear();
+            self.basis.clear();
+            self.basis_k = 0;
+            self.dirty = false;
+            return 0;
+        }
+        let mut g = Mat::zeros(n, n);
+        {
+            let bv = MatView::of_rows(&self.b[..n * features], n, features);
+            let mut gv = g.view_mut();
+            matmul_nt_into_buf(bv, bv, &mut gv, &mut self.pack);
+        }
+        let eg = match eigh(&g) {
+            Ok(e) => e,
+            Err(_) => {
+                // A non-converging 2r×2r eigensolve leaves the previous
+                // basis in place rather than poisoning the read path.
+                self.dirty = false;
+                return self.basis_k;
+            }
+        };
+        let k = self.sketch_r.min(n);
+        self.vals.clear();
+        self.basis.clear();
+        self.basis.resize(features * k, 0.0);
+        let mut col = vec![0.0; features];
+        for t in 0..k {
+            let idx = n - 1 - t;
+            let lam = eg.values[idx].max(0.0);
+            self.vals.push(lam);
+            if lam <= VAL_FLOOR {
+                continue;
+            }
+            let inv = 1.0 / lam.sqrt();
+            col.iter_mut().for_each(|c| *c = 0.0);
+            for j in 0..n {
+                let c = eg.vectors.row(j)[idx];
+                if c != 0.0 {
+                    let src = &self.b[j * features..(j + 1) * features];
+                    for (d, s) in col.iter_mut().zip(src) {
+                        *d += c * s;
+                    }
+                }
+            }
+            for (f, v) in col.iter().enumerate() {
+                self.basis[f * k + t] = v * inv;
+            }
+        }
+        self.basis_k = k;
+        self.dirty = false;
+        k
+    }
+
+    /// The last materialized spectrum, descending (possibly stale —
+    /// refreshed by capture / project / [`RffKpca::top_values`]).
+    pub fn cached_values(&self) -> &[f64] {
+        &self.vals
+    }
+
+    /// Top-`k` sketch eigenvalue estimates, descending (σ²ₖ of the
+    /// sketch ≈ the exact tier's λₖ; see the module docs).
+    pub fn top_values(&mut self, k: usize) -> Vec<f64> {
+        let avail = self.refresh_basis();
+        self.vals[..k.min(avail)].to_vec()
+    }
+
+    /// `λ⁺_min / Σλ⁺` over the sketch spectrum — same monitor contract
+    /// as [`crate::kpca::IncrementalKpca::sufficiency_gap`].
+    pub fn sufficiency_gap(&mut self) -> f64 {
+        self.refresh_basis();
+        let mut total = 0.0;
+        let mut min_pos = f64::INFINITY;
+        for &l in &self.vals {
+            if l > 0.0 {
+                total += l;
+                if l < min_pos {
+                    min_pos = l;
+                }
+            }
+        }
+        if total > 0.0 && min_pos.is_finite() {
+            min_pos / total
+        } else {
+            0.0
+        }
+    }
+
+    /// Project one point onto the top `r` sketched components:
+    /// `scoreₖ = vₖᵀ(z(y) − μ)`. No 1/√λ rescaling — see the module
+    /// docs for the Gram/covariance bridge.
+    pub fn project(&mut self, y: &[f64], r: usize) -> Vec<f64> {
+        assert_eq!(y.len(), self.map.dim(), "rff project: dim mismatch");
+        let avail = self.refresh_basis();
+        let r_eff = r.min(avail);
+        let mut z = std::mem::take(&mut self.z);
+        self.map.map_into(y, &mut z);
+        if self.mean_adjust {
+            for (zi, mi) in z.iter_mut().zip(self.mu.iter()) {
+                *zi -= *mi;
+            }
+        }
+        let k = self.basis_k;
+        let mut out = vec![0.0; r_eff];
+        for (c, o) in out.iter_mut().enumerate() {
+            if self.vals[c] <= VAL_FLOOR {
+                continue;
+            }
+            let mut acc = 0.0;
+            for (f, zi) in z.iter().enumerate() {
+                acc += zi * self.basis[f * k + c];
+            }
+            *o = acc;
+        }
+        self.z = z;
+        out
+    }
+
+    /// Snapshot pieces for the lock-free read path: the (cheaply
+    /// cloned) feature map, the mean, and a copied `features × r`
+    /// prefix of the basis with its descending values. `None` until
+    /// the sketch has at least one usable component.
+    pub fn snapshot_parts(
+        &mut self,
+        r_limit: usize,
+    ) -> Option<(RffMap, Vec<f64>, Vec<f64>, Vec<f64>)> {
+        let avail = self.refresh_basis();
+        if avail == 0 {
+            return None;
+        }
+        let r = if r_limit == 0 { avail } else { r_limit.min(avail) };
+        let features = self.map.features();
+        let k = self.basis_k;
+        let mut basis = vec![0.0; features * r];
+        for f in 0..features {
+            basis[f * r..(f + 1) * r].copy_from_slice(&self.basis[f * k..f * k + r]);
+        }
+        Some((
+            self.map.clone(),
+            self.mu.clone(),
+            basis,
+            self.vals[..r].to_vec(),
+        ))
+    }
+
+    /// Bytes resident across the sketch, mean, cached basis, feature
+    /// map and scratch.
+    pub fn bytes_resident(&self) -> usize {
+        let f64s = self.b.capacity()
+            + self.mu.capacity()
+            + self.vals.capacity()
+            + self.basis.capacity()
+            + self.z.capacity()
+            + self.newb.capacity();
+        f64s * std::mem::size_of::<f64>() + self.map.bytes_resident() + self.pack.bytes_resident()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::Rbf;
+    use crate::kernels::Kernel;
+
+    fn stream(n: usize, dim: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        let mut xs = Vec::with_capacity(n * dim);
+        for i in 0..n {
+            for d in 0..dim {
+                // Two clusters plus noise — correlated coordinates so
+                // the top subspace is meaningful.
+                let base = if i % 2 == 0 { 1.0 } else { -1.0 };
+                xs.push(base * (1.0 + d as f64 * 0.3) + 0.25 * rng.normal());
+            }
+        }
+        xs
+    }
+
+    #[test]
+    fn map_is_deterministic_in_seed_and_approximates_the_kernel() {
+        let dim = 4;
+        let sigma = 2.0;
+        let a = RffMap::new(dim, 4096, sigma, 42).unwrap();
+        let b = RffMap::new(dim, 4096, sigma, 42).unwrap();
+        let x = [0.3, -0.7, 1.1, 0.2];
+        let y = [-0.4, 0.5, 0.9, -1.0];
+        let mut za = vec![0.0; 4096];
+        let mut zb = vec![0.0; 4096];
+        a.map_into(&x, &mut za);
+        b.map_into(&x, &mut zb);
+        assert_eq!(za, zb, "same seed must give a bit-identical map");
+
+        let mut zy = vec![0.0; 4096];
+        a.map_into(&y, &mut zy);
+        let approx: f64 = za.iter().zip(&zy).map(|(p, q)| p * q).sum();
+        let exact = Rbf { sigma }.eval(&x, &y);
+        assert!(
+            (approx - exact).abs() < 0.05,
+            "RFF inner product {approx} should approximate k(x,y)={exact}"
+        );
+    }
+
+    #[test]
+    fn block_map_matches_pointwise_map() {
+        let dim = 3;
+        let map = RffMap::new(dim, 64, 1.5, 7).unwrap();
+        let xs = stream(9, dim, 3);
+        let mut block = Vec::new();
+        let mut pack = PackBuffers::new();
+        map.map_block_into(&xs, 9, &mut block, &mut pack);
+        let mut z = vec![0.0; 64];
+        for p in 0..9 {
+            map.map_into(&xs[p * dim..(p + 1) * dim], &mut z);
+            for (i, zi) in z.iter().enumerate() {
+                assert!(
+                    (block[p * 64 + i] - zi).abs() < 1e-12,
+                    "block map row {p} feature {i} diverged"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sketch_memory_is_fixed_and_values_are_sorted() {
+        let dim = 3;
+        let mut st = RffKpca::new(dim, 64, 8, 1.5, 11, true).unwrap();
+        let xs = stream(400, dim, 5);
+        let before = st.bytes_resident();
+        for p in 0..400 {
+            st.push(&xs[p * dim..(p + 1) * dim]).unwrap();
+        }
+        assert_eq!(st.len(), 400);
+        assert!(st.shrinks() > 0, "400 points through a 16-row sketch must shrink");
+        assert_eq!(
+            st.bytes_resident(),
+            before,
+            "sketch memory must not grow with the stream"
+        );
+        let vals = st.top_values(8);
+        assert!(!vals.is_empty());
+        for w in vals.windows(2) {
+            assert!(w[0] >= w[1], "values must be descending: {vals:?}");
+        }
+        assert!(vals[0] > 0.0);
+    }
+
+    #[test]
+    fn projection_tracks_batch_pca_on_the_feature_stream() {
+        // Oracle: exact PCA of the centered feature matrix Z. The FD
+        // sketch must reproduce the top principal score up to sign
+        // within the FD error bound (generous tolerance — this pins
+        // "tracks the subspace", not bit-equality).
+        let dim = 3;
+        let features = 128;
+        let n = 240;
+        let xs = stream(n, dim, 9);
+        let mut st = RffKpca::new(dim, features, 6, 1.5, 21, true).unwrap();
+        st.push_batch(&xs).unwrap();
+
+        // Batch oracle in feature space, same map, exact mean.
+        let map = st.map().clone();
+        let mut z = vec![0.0; features];
+        let mut zmat = Vec::with_capacity(n * features);
+        for p in 0..n {
+            map.map_into(&xs[p * dim..(p + 1) * dim], &mut z);
+            zmat.extend_from_slice(&z);
+        }
+        let mut mean = vec![0.0; features];
+        for p in 0..n {
+            for f in 0..features {
+                mean[f] += zmat[p * features + f];
+            }
+        }
+        for m in mean.iter_mut() {
+            *m /= n as f64;
+        }
+        for p in 0..n {
+            for f in 0..features {
+                zmat[p * features + f] -= mean[f];
+            }
+        }
+        // Covariance ZᵀZ top eigenvector via the n×n Gram trick would
+        // be O(n³); the sketch dimension is small enough to eigensolve
+        // the D×D covariance directly here (test-only cost).
+        let mut cov = Mat::zeros(features, features);
+        for p in 0..n {
+            cov.syr(1.0, &zmat[p * features..(p + 1) * features]);
+        }
+        cov.symmetrize();
+        let eg = eigh(&cov).unwrap();
+        let top = features - 1;
+        let y = &xs[0..dim];
+        map.map_into(y, &mut z);
+        let mut zc = z.clone();
+        for (zi, mi) in zc.iter_mut().zip(&mean) {
+            *zi -= *mi;
+        }
+        let mut oracle = 0.0;
+        for f in 0..features {
+            oracle += zc[f] * eg.vectors.row(f)[top];
+        }
+
+        let got = st.project(y, 1);
+        assert_eq!(got.len(), 1);
+        let d = (got[0].abs() - oracle.abs()).abs();
+        let scale = oracle.abs().max(1e-6);
+        assert!(
+            d / scale < 0.35,
+            "sketched top score {} vs batch feature-PCA oracle {} (rel diff {})",
+            got[0],
+            oracle,
+            d / scale
+        );
+    }
+
+    #[test]
+    fn parts_roundtrip_is_exact() {
+        let dim = 3;
+        let xs = stream(120, dim, 13);
+        let mut st = RffKpca::new(dim, 64, 6, 1.5, 17, true).unwrap();
+        st.push_batch(&xs).unwrap();
+        let parts = st.to_parts();
+        let mut back = RffKpca::from_parts(parts).unwrap();
+        assert_eq!(back.len(), st.len());
+        let y = &xs[0..dim];
+        let a = st.project(y, 4);
+        let b = back.project(y, 4);
+        assert_eq!(a.len(), b.len());
+        for (p, q) in a.iter().zip(&b) {
+            assert!(
+                (p - q).abs() < 1e-12,
+                "restored sketch must project identically: {a:?} vs {b:?}"
+            );
+        }
+        // And the restored engine keeps absorbing.
+        let more = stream(40, dim, 14);
+        back.push_batch(&more).unwrap();
+        assert_eq!(back.len(), 160);
+    }
+
+    #[test]
+    fn malformed_inputs_error_cleanly() {
+        assert!(RffKpca::new(3, 8, 8, 1.5, 1, true).is_err(), "D < 2r must be rejected");
+        assert!(RffKpca::new(3, 64, 0, 1.5, 1, true).is_err());
+        assert!(RffMap::new(3, 64, -1.0, 1).is_err());
+        assert!(RffMap::new(0, 64, 1.0, 1).is_err());
+        let mut st = RffKpca::new(3, 64, 6, 1.5, 1, true).unwrap();
+        assert!(st.push(&[1.0, 2.0]).is_err(), "wrong dim must error");
+        assert!(st.push_batch(&[1.0, 2.0]).is_err(), "ragged batch must error");
+        assert_eq!(st.len(), 0);
+    }
+}

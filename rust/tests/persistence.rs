@@ -365,6 +365,68 @@ fn restore_from_empty_dir_is_fresh_start() {
     pool.shutdown();
 }
 
+/// Format-compatibility pin: an `IKCKPT02` checkpoint (the previous
+/// on-disk format, written before the engine-tier seam existed) must
+/// restore as the `Exact` tier with full fidelity. A fresh `IKCKPT03`
+/// file of an exact-tier stream differs from the v02 layout by exactly
+/// the magic and the one-byte tier tag at the end of the config block
+/// (the `Exact` state block is byte-identical), so the test rewrites a
+/// real checkpoint into the legacy layout on disk, deletes the WALs so
+/// the file alone must carry the stream, and restores from it.
+#[test]
+fn v02_checkpoint_restores_as_exact_tier() {
+    let ds = oracle::std_stream(20, 1109);
+    let dir = temp_dir("v02");
+    let (pool, router) = durable_pool(&dir);
+    let h = router.open_stream("legacy", ds.dim(), stream_cfg()).unwrap();
+    feed(&router, &h, &ds, 0..ds.n());
+    router.checkpoint_stream(&h).unwrap();
+    drop(h);
+    pool.shutdown(); // crash after checkpoint
+
+    let ckpt: Vec<PathBuf> = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter_map(|e| Some(e.ok()?.path()))
+        .filter(|p| p.extension().map(|x| x == "ckpt").unwrap_or(false))
+        .collect();
+    assert_eq!(ckpt.len(), 1);
+    let bytes = std::fs::read(&ckpt[0]).unwrap();
+    assert_eq!(&bytes[..8], b"IKCKPT03");
+    // Payload offset of the config tier tag for this test's stream:
+    // str("legacy") + dim:u64 + RBF kernel (tag+sigma) + mean_adjust +
+    // 4 cadence/capacity u64s + rotation + publish_every + snapshot_r +
+    // publish_after(None) + max_landmarks + eviction
+    // = (4+6) + 8 + 9 + 1 + 32 + 1 + 8 + 8 + 1 + 8 + 1 = 87.
+    let payload = &bytes[16..];
+    let off = 87;
+    assert_eq!(payload[off], 0, "exact tier tag where the layout says");
+    let mut v2_payload = payload.to_vec();
+    v2_payload.remove(off);
+    let mut v2 = b"IKCKPT02".to_vec();
+    v2.extend_from_slice(&(v2_payload.len() as u32).to_le_bytes());
+    v2.extend_from_slice(&inkpca::coordinator::wal::crc32(&v2_payload).to_le_bytes());
+    v2.extend_from_slice(&v2_payload);
+    std::fs::write(&ckpt[0], &v2).unwrap();
+    for s in 0..2 {
+        std::fs::remove_file(dir.join(format!("wal-{s}.log"))).ok();
+    }
+
+    let (pool2, router2) = durable_pool(&dir);
+    let report = router2.restore_pool().unwrap();
+    assert!(report.quarantined.is_empty(), "v02 must decode, not quarantine");
+    assert_eq!(report.restored, 1);
+    assert_eq!(report.replayed, 0, "no WAL left — the v02 file alone carried it");
+    let h = report.handles[0].clone();
+    assert_eq!(router2.snapshot(&h).unwrap().tier, "exact");
+    let reference = reference_run(&ds, ds.n());
+    assert_matches_reference(&router2, &h, &ds, &reference);
+    // And the restored stream keeps serving.
+    feed(&router2, &h, &ds, 0..2);
+    assert_eq!(router2.snapshot(&h).unwrap().m, ds.n() + 2);
+    pool2.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
 /// The single-stream `Coordinator` wrapper: restore-or-spawn, feed,
 /// checkpoint, crash, restore — the default stream comes back with its
 /// state and keeps serving.

@@ -1,0 +1,398 @@
+//! Engine-tier integration tests: the `StreamTier` seam end to end.
+//!
+//! Four contracts, each through the public router verbs only:
+//!
+//! 1. **Determinism** — an `rff` stream is a pure function of
+//!    (stream id, config, feed order): a locally driven
+//!    [`inkpca::rff::RffKpca`] with the same FNV-seeded map must
+//!    reproduce the routed stream's projections to ~1e-9, including
+//!    across checkpoint/restore and live migration (both ship state,
+//!    they never recompute it).
+//! 2. **Sketch quality** — the routed `rff` stream tracks the
+//!    batch-recompute oracle (exact PCA of the full feature matrix on
+//!    the same seeded map) within the frequent-directions guarantee:
+//!    `λₖ(BᵀB) ≤ λₖ(ZᵀZ)` and `λ₁(BᵀB) ≥ λ₁(ZᵀZ) − ‖Z‖²F/r`
+//!    exactly, and top-subspace projection energy within the
+//!    documented [`SKETCH_REL_TOL`].
+//! 3. **Shadow gauge** — the shadow tier's projection-divergence gauge
+//!    populates on probe cadence, grows monotonically within a publish
+//!    window, resets at the publish point (`sync`), and rolls up as
+//!    the pool-wide `max_divergence`.
+//! 4. **Tier plumbing** — `Snapshot::tier` reports the serving engine
+//!    everywhere (live, restored, migrated), and the sketched tiers
+//!    reject non-RBF kernels with a clean error instead of seeding.
+
+mod common;
+
+use std::path::PathBuf;
+
+use common::oracle;
+use inkpca::coordinator::ring::fnv1a;
+use inkpca::coordinator::{
+    EngineConfig, KernelConfig, PersistConfig, PoolConfig, ShardPool, StreamConfig,
+    StreamHandle, StreamRouter, StreamTier,
+};
+use inkpca::data::Dataset;
+use inkpca::linalg::{eigh, Mat};
+use inkpca::rff::{RffKpca, RffMap};
+
+const SEED_POINTS: usize = 6;
+const SIGMA: f64 = 1.5;
+const FEATURES: usize = 64;
+const SKETCH_R: usize = 16;
+
+/// The documented sketch tolerance: relative error allowed between the
+/// routed sketch's top-subspace projection energy and the batch
+/// feature-PCA oracle's. Generous — the bound covers RFF map variance
+/// plus the frequent-directions shrink, and the test pins "tracks the
+/// subspace", not bit-equality (that's what the determinism tests
+/// are for).
+const SKETCH_REL_TOL: f64 = 0.5;
+
+fn tier_cfg(tier: StreamTier, mean_adjust: bool, sigma: f64) -> StreamConfig {
+    StreamConfig {
+        kernel: KernelConfig::Rbf { sigma },
+        mean_adjust,
+        seed_points: SEED_POINTS,
+        // Keep auto-publish off the feed cadence so the divergence
+        // window under test is controlled purely by explicit `sync`.
+        publish_every: 100_000,
+        tier,
+        ..StreamConfig::default()
+    }
+}
+
+fn pool_cfg(shards: usize) -> PoolConfig {
+    PoolConfig { shards, queue: 64, engine: EngineConfig::Native, ..PoolConfig::default() }
+}
+
+fn durable_pool(dir: &PathBuf) -> (ShardPool, StreamRouter) {
+    let pool = ShardPool::spawn(PoolConfig {
+        persist: Some(PersistConfig::new(dir.clone())),
+        ..pool_cfg(2)
+    });
+    let router = pool.router();
+    (pool, router)
+}
+
+fn feed(router: &StreamRouter, h: &StreamHandle, ds: &Dataset, range: std::ops::Range<usize>) {
+    for i in range {
+        router.ingest(h, ds.x.row(i).to_vec()).unwrap();
+    }
+}
+
+/// The routed stream's uninterrupted local twin: the same seeded map
+/// (the engine derives the map seed as `fnv1a(stream id)`), the same
+/// feed order, driven directly.
+fn rff_replica(id: &str, ds: &Dataset, n: usize, mean_adjust: bool, sigma: f64) -> RffKpca {
+    let mut st =
+        RffKpca::new(ds.dim(), FEATURES, SKETCH_R, sigma, fnv1a(id), mean_adjust).unwrap();
+    for i in 0..n {
+        st.push(ds.x.row(i)).unwrap();
+    }
+    st
+}
+
+/// Routed projections must match the replica's to ~1e-9: same map,
+/// same sketch arithmetic, same order — the router adds routing, not
+/// recomputation.
+fn assert_matches_replica(
+    router: &StreamRouter,
+    h: &StreamHandle,
+    ds: &Dataset,
+    replica: &mut RffKpca,
+) {
+    let probes: Vec<Vec<f64>> =
+        (0..4).map(|i| ds.x.row(i).to_vec()).chain([vec![0.25; ds.dim()]]).collect();
+    for y in probes {
+        let got = router.project(h, y.clone(), 8).unwrap();
+        let want = replica.project(&y, 8);
+        assert_eq!(got.len(), want.len(), "{}", h.id());
+        for (g, w) in got.iter().zip(&want) {
+            assert!(
+                (g - w).abs() <= 1e-9,
+                "{}: routed rff score {g} vs replica {w}",
+                h.id()
+            );
+        }
+    }
+}
+
+#[test]
+fn rff_tier_matches_its_seeded_replica_exactly() {
+    let ds = oracle::std_stream(40, 1201);
+    let pool = ShardPool::spawn(pool_cfg(1));
+    let router = pool.router();
+    let tier = StreamTier::Rff { features: FEATURES, sketch_r: SKETCH_R };
+    let h = router.open_stream("rffdet", ds.dim(), tier_cfg(tier, true, SIGMA)).unwrap();
+    feed(&router, &h, &ds, 0..ds.n());
+
+    let snap = router.snapshot(&h).unwrap();
+    assert_eq!(snap.tier, "rff");
+    assert_eq!(snap.kernel, "rbf");
+    assert_eq!(snap.m, ds.n(), "the sketch counts absorbed points, seed included");
+
+    let mut replica = rff_replica("rffdet", &ds, ds.n(), true, SIGMA);
+    assert_matches_replica(&router, &h, &ds, &mut replica);
+
+    // No Gram matrix → no drift audit: the verb errors cleanly instead
+    // of lying with a zero.
+    let err = router.measure_drift(&h).unwrap_err();
+    assert!(err.contains("exact tier"), "unexpected drift error: {err}");
+    pool.shutdown();
+}
+
+#[test]
+fn rff_tier_tracks_the_batch_feature_pca_oracle() {
+    // σ at the median-heuristic scale (E‖x−y‖² ≈ 2·dim on standardized
+    // data) so the kernel has real structure — a near-identity Gram
+    // would make any sketch comparison vacuous.
+    let ds = oracle::std_stream(160, 1202);
+    let sigma = 2.0 * ds.dim() as f64;
+    let pool = ShardPool::spawn(pool_cfg(1));
+    let router = pool.router();
+    let tier = StreamTier::Rff { features: FEATURES, sketch_r: SKETCH_R };
+    // mean_adjust off: the frequent-directions guarantee then applies
+    // verbatim to the raw feature rows (streamed centering would
+    // perturb the oracle by the mean-drift term).
+    let h = router.open_stream("rffq", ds.dim(), tier_cfg(tier, false, sigma)).unwrap();
+    feed(&router, &h, &ds, 0..ds.n());
+    // Publish so the `&self` spectrum gauge behind `snapshot()` is
+    // current (it refreshes at capture/project, not per push).
+    router.sync(&h).unwrap();
+
+    // Batch-recompute oracle: exact PCA of the full n×D feature matrix
+    // under the SAME seeded map the engine derived from the stream id.
+    let map = RffMap::new(ds.dim(), FEATURES, sigma, fnv1a("rffq")).unwrap();
+    let mut z = vec![0.0; FEATURES];
+    let mut fro2 = 0.0;
+    let mut cov = Mat::zeros(FEATURES, FEATURES);
+    let mut zrows = Vec::with_capacity(ds.n() * FEATURES);
+    for i in 0..ds.n() {
+        map.map_into(ds.x.row(i), &mut z);
+        fro2 += z.iter().map(|v| v * v).sum::<f64>();
+        cov.syr(1.0, &z);
+        zrows.extend_from_slice(&z);
+    }
+    cov.symmetrize();
+    let eg = eigh(&cov).unwrap();
+    let lambda = |k: usize| eg.values[FEATURES - 1 - k].max(0.0);
+
+    // The frequent-directions guarantee, verbatim: the sketch never
+    // overshoots any oracle eigenvalue, and undershoots the top one by
+    // at most ‖Z‖²F / sketch_r.
+    let snap = router.snapshot(&h).unwrap();
+    assert!(snap.top_values.len() >= 4, "sketch spectrum too short: {:?}", snap.top_values);
+    for k in 0..4 {
+        assert!(
+            snap.top_values[k] <= lambda(k) + 1e-6 * (1.0 + lambda(k)),
+            "sketch λ{k}={} overshoots oracle {}",
+            snap.top_values[k],
+            lambda(k)
+        );
+    }
+    assert!(
+        snap.top_values[0] >= lambda(0) - fro2 / SKETCH_R as f64 - 1e-6 * (1.0 + lambda(0)),
+        "sketch λ0={} below the FD floor (oracle {}, ‖Z‖²F/r {})",
+        snap.top_values[0],
+        lambda(0),
+        fro2 / SKETCH_R as f64
+    );
+    assert!(lambda(0) > 0.0, "degenerate oracle spectrum");
+
+    // Projection energy over the top-4 subspace, aggregated across
+    // in-distribution probes, within the documented sketch tolerance.
+    let mut e_oracle = 0.0;
+    let mut e_sketch = 0.0;
+    for i in 0..16 {
+        let zrow = &zrows[i * FEATURES..(i + 1) * FEATURES];
+        for k in 0..4 {
+            let idx = FEATURES - 1 - k;
+            let mut s = 0.0;
+            for f in 0..FEATURES {
+                s += zrow[f] * eg.vectors.row(f)[idx];
+            }
+            e_oracle += s * s;
+        }
+        let scores = router.project(&h, ds.x.row(i).to_vec(), 4).unwrap();
+        e_sketch += scores.iter().map(|s| s * s).sum::<f64>();
+    }
+    assert!(e_oracle > 0.0);
+    let rel = (e_sketch - e_oracle).abs() / e_oracle;
+    assert!(
+        rel < SKETCH_REL_TOL,
+        "top-subspace energy: sketch {e_sketch} vs batch oracle {e_oracle} (rel {rel})"
+    );
+    pool.shutdown();
+}
+
+#[test]
+fn shadow_divergence_gauge_populates_and_resets_on_publish() {
+    let ds = oracle::std_stream(SEED_POINTS + 12, 1203);
+    let pool = ShardPool::spawn(pool_cfg(1));
+    let router = pool.router();
+    let tier = StreamTier::Shadow { sample: 2 };
+    let h = router.open_stream("sh", ds.dim(), tier_cfg(tier, true, SIGMA)).unwrap();
+    // An exact control stream on the same pool: its gauge must stay
+    // `None` so the pool max attributes to the shadow stream alone.
+    let hx = router
+        .open_stream("ex", ds.dim(), tier_cfg(StreamTier::Exact, true, SIGMA))
+        .unwrap();
+    feed(&router, &hx, &ds, 0..ds.n());
+
+    let gauge = |router: &StreamRouter, id: &str| -> Option<f64> {
+        let snap = router.pool_snapshot().unwrap();
+        snap.per_stream.iter().find(|g| g.stream == id).unwrap().divergence
+    };
+
+    // Probes land every 2nd post-seed point: after 4 points the gauge
+    // holds the max gap of two probes …
+    feed(&router, &h, &ds, 0..SEED_POINTS + 4);
+    let d_mid = gauge(&router, "sh").expect("shadow stream must report divergence");
+    assert!(d_mid > 0.0, "independent engines cannot agree exactly");
+    // … and can only grow until the window closes.
+    feed(&router, &h, &ds, SEED_POINTS + 4..SEED_POINTS + 8);
+    let d_end = gauge(&router, "sh").expect("gauge stays populated");
+    assert!(d_end >= d_mid, "divergence is a monotone max within a window: {d_end} < {d_mid}");
+    assert_eq!(gauge(&router, "ex"), None, "the exact tier has no divergence gauge");
+    let snap = router.pool_snapshot().unwrap();
+    assert_eq!(
+        snap.max_divergence,
+        Some(d_end),
+        "pool rollup takes the max over shadow streams"
+    );
+
+    // `sync` publishes → the window resets. The next non-probe point
+    // refreshes the gauge to the fresh (empty) max.
+    router.sync(&h).unwrap();
+    feed(&router, &h, &ds, SEED_POINTS + 8..SEED_POINTS + 9);
+    assert_eq!(
+        gauge(&router, "sh"),
+        Some(0.0),
+        "publish must reset the divergence window"
+    );
+    // The next probe repopulates it.
+    feed(&router, &h, &ds, SEED_POINTS + 9..SEED_POINTS + 10);
+    let d2 = gauge(&router, "sh").expect("gauge repopulates after reset");
+    assert!(d2 > 0.0);
+
+    // Shadow serves from the exact engine: the eigensystem matches the
+    // uninterrupted exact reference to the usual 1e-10 bar.
+    let snap = router.snapshot(&h).unwrap();
+    assert_eq!(snap.tier, "shadow");
+    let reference = oracle::reference_run(&ds, SEED_POINTS + 10, SIGMA, SEED_POINTS);
+    oracle::assert_matches_reference(&router, &h, &ds, &reference);
+    pool.shutdown();
+}
+
+#[test]
+fn tiers_roundtrip_through_checkpoint_and_restore() {
+    let ds = oracle::std_stream(36, 1204);
+    let dir = oracle::temp_dir("tiers");
+    let (pool, router) = durable_pool(&dir);
+    let rff_tier = StreamTier::Rff { features: FEATURES, sketch_r: SKETCH_R };
+    let hr = router.open_stream("r", ds.dim(), tier_cfg(rff_tier, true, SIGMA)).unwrap();
+    let hs = router
+        .open_stream("s", ds.dim(), tier_cfg(StreamTier::Shadow { sample: 2 }, true, SIGMA))
+        .unwrap();
+    feed(&router, &hr, &ds, 0..24);
+    feed(&router, &hs, &ds, 0..24);
+    assert!(router.checkpoint_stream(&hr).unwrap() > 0);
+    assert!(router.checkpoint_stream(&hs).unwrap() > 0);
+    feed(&router, &hr, &ds, 24..ds.n());
+    feed(&router, &hs, &ds, 24..ds.n());
+    drop((hr, hs));
+    pool.shutdown(); // crash: no close, checkpoints + WAL suffix on disk
+
+    let (pool2, router2) = durable_pool(&dir);
+    let report = router2.restore_pool().unwrap();
+    assert_eq!(report.restored, 2, "both tiered checkpoints load");
+    assert!(report.failed.is_empty(), "{:?}", report.failed);
+    assert_eq!(report.replayed, 24, "12 post-checkpoint points per stream replay");
+    let by_id = |id: &str| report.handles.iter().find(|h| h.id() == id).unwrap().clone();
+    let hr = by_id("r");
+    let hs = by_id("s");
+
+    // The tier survived the codec round-trip …
+    assert_eq!(router2.snapshot(&hr).unwrap().tier, "rff");
+    assert_eq!(router2.snapshot(&hs).unwrap().tier, "shadow");
+    // … and so did the state, exactly: checkpoint + WAL replay lands on
+    // the same sketch an uninterrupted run produces.
+    let mut replica = rff_replica("r", &ds, ds.n(), true, SIGMA);
+    assert_matches_replica(&router2, &hr, &ds, &mut replica);
+    let reference = oracle::reference_run(&ds, ds.n(), SIGMA, SEED_POINTS);
+    oracle::assert_matches_reference(&router2, &hs, &ds, &reference);
+
+    // Restored streams keep serving and absorbing.
+    feed(&router2, &hr, &ds, 0..2);
+    feed(&router2, &hs, &ds, 0..2);
+    assert_eq!(router2.snapshot(&hr).unwrap().m, ds.n() + 2);
+    assert_eq!(router2.snapshot(&hs).unwrap().m, ds.n() + 2);
+    // The shadow probe cadence restarts post-restore and repopulates
+    // the gauge (2 fresh points → one probe at the new sample=2 mark).
+    let snap = router2.pool_snapshot().unwrap();
+    let g = snap.per_stream.iter().find(|g| g.stream == "s").unwrap();
+    assert!(g.divergence.is_some(), "restored shadow stream probes again");
+    pool2.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn tiers_survive_live_migration() {
+    let ds = oracle::std_stream(32, 1205);
+    let pool = ShardPool::spawn(pool_cfg(2));
+    let router = pool.router();
+    let rff_tier = StreamTier::Rff { features: FEATURES, sketch_r: SKETCH_R };
+    let hr = router.open_stream("mr", ds.dim(), tier_cfg(rff_tier, true, SIGMA)).unwrap();
+    let hs = router
+        .open_stream("ms", ds.dim(), tier_cfg(StreamTier::Shadow { sample: 2 }, true, SIGMA))
+        .unwrap();
+
+    feed(&router, &hr, &ds, 0..ds.n() / 2);
+    feed(&router, &hs, &ds, 0..ds.n() / 2);
+    router.migrate_stream(&hr, (hr.shard() + 1) % 2).unwrap();
+    router.migrate_stream(&hs, (hs.shard() + 1) % 2).unwrap();
+    feed(&router, &hr, &ds, ds.n() / 2..ds.n());
+    feed(&router, &hs, &ds, ds.n() / 2..ds.n());
+
+    // Migration ships the boxed engine wholesale: tier intact, state
+    // bit-identical to the unmigrated twin.
+    assert_eq!(router.snapshot(&hr).unwrap().tier, "rff");
+    assert_eq!(router.snapshot(&hs).unwrap().tier, "shadow");
+    let mut replica = rff_replica("mr", &ds, ds.n(), true, SIGMA);
+    assert_matches_replica(&router, &hr, &ds, &mut replica);
+    let reference = oracle::reference_run(&ds, ds.n(), SIGMA, SEED_POINTS);
+    oracle::assert_matches_reference(&router, &hs, &ds, &reference);
+
+    let snap = router.pool_snapshot().unwrap();
+    assert_eq!(snap.migrations, 2);
+    assert!(
+        snap.max_divergence.is_some(),
+        "the migrated shadow stream still reports divergence"
+    );
+    pool.shutdown();
+}
+
+#[test]
+fn sketched_tiers_require_an_rbf_kernel() {
+    let ds = oracle::std_stream(4, 1206);
+    let pool = ShardPool::spawn(pool_cfg(1));
+    let router = pool.router();
+    let cfg = StreamConfig {
+        kernel: KernelConfig::Linear,
+        mean_adjust: false,
+        seed_points: 2,
+        tier: StreamTier::Rff { features: FEATURES, sketch_r: SKETCH_R },
+        ..StreamConfig::default()
+    };
+    let h = router.open_stream("lin", ds.dim(), cfg).unwrap();
+    // Seeding buffers fine; the seed-completing point must surface the
+    // tier/kernel mismatch instead of wedging the stream silently.
+    router.ingest(&h, ds.x.row(0).to_vec()).unwrap();
+    let err = router.ingest(&h, ds.x.row(1).to_vec()).unwrap_err();
+    assert!(
+        err.contains("require an RBF kernel"),
+        "unexpected seed error: {err}"
+    );
+    pool.shutdown();
+}
